@@ -1,0 +1,77 @@
+//! Privacy-accounting walkthrough: the RDP machinery of paper Sec 2
+//! as a standalone tour — no artifacts needed.
+//!
+//!   cargo run --release --example accountant_tour
+
+use fastclip::privacy::{
+    calibrate_sigma, epsilon_for, max_steps, sgm_rdp_step, RdpAccountant,
+};
+
+fn main() {
+    println!("=== 1. Per-step RDP of the subsampled Gaussian mechanism ===");
+    println!("(q = sampling rate, sigma = noise multiplier)\n");
+    println!("  alpha | eps(q=0.01,s=1.1) | eps(q=0.05,s=1.1) | eps(q=0.01,s=0.7)");
+    for alpha in [2u32, 4, 8, 16, 32, 64] {
+        println!(
+            "  {:>5} | {:>17.6} | {:>17.6} | {:>17.6}",
+            alpha,
+            sgm_rdp_step(0.01, 1.1, alpha),
+            sgm_rdp_step(0.05, 1.1, alpha),
+            sgm_rdp_step(0.01, 0.7, alpha)
+        );
+    }
+
+    println!("\n=== 2. Composition over an MNIST-scale run ===");
+    println!("(n=60000, batch=600 -> q=0.01; sigma=1.1, delta=1e-5)\n");
+    let mut acc = RdpAccountant::new();
+    println!("  epoch | steps | epsilon | best alpha");
+    for epoch in 1..=15u64 {
+        acc.steps(0.01, 1.1, 100);
+        if epoch % 3 == 0 || epoch == 1 {
+            let (eps, order) = acc.epsilon(1e-5);
+            println!(
+                "  {:>5} | {:>5} | {:>7.3} | {:>10}",
+                epoch,
+                acc.steps,
+                eps,
+                order
+            );
+        }
+    }
+
+    println!("\n=== 3. Calibration: budget -> noise ===\n");
+    for (eps, steps) in [(1.0, 1000u64), (2.0, 1000), (4.0, 1000), (2.0, 10000)]
+    {
+        match calibrate_sigma(0.01, steps, eps, 1e-5) {
+            Some(sigma) => println!(
+                "  eps<={:<4} over {:>5} steps  =>  sigma = {:.3}  (spends {:.4})",
+                eps,
+                steps,
+                sigma,
+                epsilon_for(0.01, sigma, steps, 1e-5)
+            ),
+            None => println!("  eps<={eps} over {steps} steps: infeasible"),
+        }
+    }
+
+    println!("\n=== 4. Budget exhaustion: how long can we train? ===\n");
+    for sigma in [0.8, 1.1, 1.5, 2.0] {
+        let t = max_steps(0.01, sigma, 2.0, 1e-5);
+        println!(
+            "  sigma={:.1}: {:>6} steps fit in (2.0, 1e-5)-DP  ({} epochs at q=0.01)",
+            sigma,
+            t,
+            t / 100
+        );
+    }
+
+    println!("\n=== 5. The privacy/utility dial (1000 steps, q=0.01) ===\n");
+    println!("  sigma | epsilon(delta=1e-5)");
+    for sigma in [0.6, 0.8, 1.0, 1.2, 1.5, 2.0, 3.0, 5.0] {
+        println!(
+            "  {:>5.1} | {:.3}",
+            sigma,
+            epsilon_for(0.01, sigma, 1000, 1e-5)
+        );
+    }
+}

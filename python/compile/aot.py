@@ -1,0 +1,283 @@
+"""AOT compiler: lower every (config x method) step function to HLO
+text + write artifacts/manifest.json for the Rust coordinator.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Incremental: each artifact records a hash of (compiler sources, config
+identity); unchanged entries are skipped. Parallel: configs are lowered
+in a process pool (tracing is single-threaded CPU work).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+        [--configs name1,name2] [--jobs N] [--force]
+"""
+
+import argparse
+import hashlib
+import json
+import multiprocessing as mp
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import baselines, clipping
+from .configs import REGISTRY
+from .kernels import KernelBackend
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, _DTYPES[dtype])
+
+
+def make_step_fn(cfg, method):
+    """Build the flat-argument step function for one (config, method).
+
+    Argument order: params..., X, y [, c]. All outputs are flattened:
+    grads..., then scalars/vectors per the manifest's `outputs` field.
+    """
+    model = cfg.build_model()
+    n = len(model.param_specs())
+
+    if method == "fwd":
+        def step(*args):
+            params, x, y = list(args[:n]), args[n], args[n + 1]
+            loss, correct = model.eval_metrics(params, x, y)
+            return (loss, correct)
+        extra_args, outputs = [], ["loss", "correct"]
+
+    elif method == "nonprivate":
+        def step(*args):
+            params, x, y = list(args[:n]), args[n], args[n + 1]
+            grads, loss = baselines.nonprivate_step(model, params, x, y)
+            return tuple(grads) + (loss,)
+        extra_args, outputs = [], ["grads", "loss"]
+
+    elif method in (
+        "reweight", "reweight_pallas", "reweight_gram", "reweight_direct"
+    ):
+        kb = {
+            "reweight": KernelBackend("jnp"),
+            "reweight_pallas": KernelBackend("pallas"),
+            "reweight_gram": KernelBackend("jnp", recurrent_mode="gram"),
+            "reweight_direct": KernelBackend("jnp"),
+        }[method]
+        step_fn = (
+            clipping.reweight_direct_step
+            if method == "reweight_direct"
+            else clipping.reweight_step
+        )
+
+        def step(*args):
+            params, x, y, c = list(args[:n]), args[n], args[n + 1], args[n + 2]
+            grads, loss, norms = step_fn(model, params, x, y, c, kb)
+            return tuple(grads) + (loss, norms)
+        extra_args, outputs = ["clip"], ["grads", "loss", "norms"]
+
+    elif method == "multiloss":
+        def step(*args):
+            params, x, y, c = list(args[:n]), args[n], args[n + 1], args[n + 2]
+            grads, loss, norms = baselines.multiloss_step(
+                model, params, x, y, c)
+            return tuple(grads) + (loss, norms)
+        extra_args, outputs = ["clip"], ["grads", "loss", "norms"]
+
+    elif method == "naive1":
+        def step(*args):
+            params, x, y = list(args[:n]), args[n], args[n + 1]
+            grads, loss, norm = baselines.naive1_step(model, params, x, y)
+            return tuple(grads) + (loss, norm)
+        extra_args, outputs = [], ["grads", "loss", "norm"]
+
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    return step, extra_args, outputs
+
+
+def arg_specs(cfg, method, extra_args):
+    model = cfg.build_model()
+    specs = [_spec(s.shape, "f32") for s in model.param_specs()]
+    specs.append(_spec(cfg.input_shape, cfg.input_dtype))
+    specs.append(_spec((cfg.batch,), "i32"))
+    for name in extra_args:
+        assert name == "clip"
+        specs.append(_spec((), "f32"))
+    return specs
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so
+    the Rust side always unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(cfg_name, method, out_dir):
+    """Lower one artifact; returns its manifest entry."""
+    cfg = REGISTRY[cfg_name]
+    step, extra_args, outputs = make_step_fn(cfg, method)
+    specs = arg_specs(cfg, method, extra_args)
+    lowered = jax.jit(step).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{cfg_name}.{method}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return {
+        "file": fname,
+        "extra_args": extra_args,
+        "outputs": outputs,
+        "hlo_bytes": len(text),
+    }
+
+
+def _source_hash():
+    """Hash of the compiler package sources — artifact invalidation key."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    for root, _dirs, files in os.walk(pkg):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def _worker(task):
+    cfg_name, method, out_dir = task
+    try:
+        entry = lower_one(cfg_name, method, out_dir)
+        return (cfg_name, method, entry, None)
+    except Exception as e:  # surface, don't hang the pool
+        return (cfg_name, method, None, f"{type(e).__name__}: {e}")
+
+
+def activation_elems_per_example(cfg):
+    """Total pre-activation (tap) elements per example — the activation
+    footprint the memory model (rust coordinator/memory.rs) uses for
+    the paper's Sec 6.7 experiment."""
+    from .layers import Tape
+
+    model = cfg.build_model()
+    tape = Tape(Tape.SHAPE)
+    params = [_spec(s.shape, "f32") for s in model.param_specs()]
+    x = _spec(cfg.input_shape, cfg.input_dtype)
+    y = _spec((cfg.batch,), "i32")
+    jax.eval_shape(
+        lambda p, xx, yy: model.loss_sum(p, xx, yy, tape), params, x, y
+    )
+    total = 0
+    for _key, shape, _dtype in tape.tap_specs:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total // cfg.batch
+
+
+def config_manifest_entry(cfg):
+    model = cfg.build_model()
+    return {
+        "act_elems_per_example": activation_elems_per_example(cfg),
+        "model": cfg.model,
+        "model_kw": cfg.model_kw,
+        "dataset": cfg.dataset,
+        "batch": cfg.batch,
+        "tags": list(cfg.tags),
+        "n_classes": cfg.n_classes,
+        "input": {"shape": list(cfg.input_shape), "dtype": cfg.input_dtype},
+        "label": {"shape": [cfg.batch], "dtype": "i32"},
+        "params": [
+            {"name": s.name, "shape": list(s.shape)}
+            for s in model.param_specs()
+        ],
+        "artifacts": {},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated subset of config names")
+    ap.add_argument("--jobs", type=int, default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    src_hash = _source_hash()
+
+    names = (
+        [n.strip() for n in args.configs.split(",") if n.strip()]
+        if args.configs else sorted(REGISTRY)
+    )
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    old = {}
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as f:
+            old = json.load(f)
+
+    manifest = {"version": 1, "source_hash": src_hash, "configs": {}}
+    tasks = []
+    reused = 0
+    for name in names:
+        cfg = REGISTRY[name]
+        entry = config_manifest_entry(cfg)
+        manifest["configs"][name] = entry
+        for method in cfg.methods:
+            prev = old.get("configs", {}).get(name, {})
+            prev_art = prev.get("artifacts", {}).get(method)
+            fname = f"{name}.{method}.hlo.txt"
+            if (
+                not args.force
+                and old.get("source_hash") == src_hash
+                and prev_art
+                and os.path.exists(os.path.join(out_dir, fname))
+            ):
+                entry["artifacts"][method] = prev_art
+                reused += 1
+            else:
+                tasks.append((name, method, out_dir))
+
+    print(f"[aot] {len(tasks)} artifacts to lower "
+          f"({reused} up-to-date), jobs={args.jobs}", flush=True)
+
+    failures = []
+    if tasks:
+        if args.jobs > 1:
+            ctx = mp.get_context("spawn")
+            with ctx.Pool(args.jobs) as pool:
+                results = pool.map(_worker, tasks)
+        else:
+            results = [_worker(t) for t in tasks]
+        for cfg_name, method, entry, err in results:
+            if err:
+                failures.append((cfg_name, method, err))
+                print(f"[aot] FAIL {cfg_name}.{method}: {err}", flush=True)
+            else:
+                manifest["configs"][cfg_name]["artifacts"][method] = entry
+                print(f"[aot] ok   {cfg_name}.{method} "
+                      f"({entry['hlo_bytes'] // 1024} KiB)", flush=True)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest: {manifest_path} "
+          f"({len(manifest['configs'])} configs)")
+    if failures:
+        print(f"[aot] {len(failures)} FAILURES")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Baseline gradient-clipping strategies from the paper's evaluation
+(Sec 6.1): Non-private, nxBP, and multiLoss.
+
+All DP strategies produce the *same* clipped summed gradient as
+ReweightGP (the accuracy comparison is "irrelevant" per Sec 6.1) —
+only the computational structure differs, which is what the benchmark
+harness measures.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def nonprivate_step(model, params, x, y):
+    """Standard mini-batch SGD gradient (Sec 3.1).
+
+    Returns (grads..., mean loss).
+    """
+    def mean_loss(p):
+        per_ex = model.loss_per_example(p, x, y)
+        return jnp.mean(per_ex), jnp.mean(per_ex)
+
+    grads, loss = jax.grad(mean_loss, has_aux=True)(params)
+    return grads, loss
+
+
+def multiloss_step(model, params, x, y, c):
+    """The multiLoss baseline (Sec 3.3 / 6.1): ask the
+    auto-differentiator for all per-example gradients at once
+    (vmap(grad) — the JAX analogue of torch.autograd.grad on a loss
+    vector), materialize them, clip, and average.
+
+    Returns (grads..., mean loss, per-example grad norms).
+    """
+    def loss_one(p, xi, yi):
+        return model.loss_per_example(p, xi[None], jnp.atleast_1d(yi))[0]
+
+    per_ex_grads = jax.vmap(
+        lambda xi, yi: jax.grad(loss_one)(params, xi, yi)
+    )(x, y)  # list of [tau, *param_shape] — materialized!
+
+    sq = jnp.zeros(x.shape[0], jnp.float32)
+    for g in jax.tree_util.tree_leaves(per_ex_grads):
+        sq = sq + jnp.sum(g.reshape(g.shape[0], -1) ** 2, axis=-1)
+    norms = jnp.sqrt(jnp.maximum(sq, 1e-24))
+    nu = jnp.minimum(1.0, c / norms)
+
+    tau = x.shape[0]
+    grads = [
+        jnp.einsum("t,t...->...", nu, g) / tau
+        for g in per_ex_grads
+    ]
+    loss = jnp.mean(model.loss_per_example(params, x, y))
+    return grads, loss, norms
+
+
+def naive1_step(model, params, x, y):
+    """One iteration of the nxBP inner loop (Sec 3.3): the gradient of
+    a SINGLE example, unclipped, plus its norm. The Rust coordinator
+    loops this executable over the minibatch, clips each result, and
+    accumulates — reproducing TF-Privacy's naive strategy faithfully
+    (backprop runs once per example).
+
+    x: [1, ...], y: [1]. Returns (grads..., loss, norm).
+    """
+    def loss_one(p):
+        l = model.loss_per_example(p, x, y)[0]
+        return l, l
+
+    grads, loss = jax.grad(loss_one, has_aux=True)(params)
+    sq = sum(jnp.sum(g * g) for g in grads)
+    norm = jnp.sqrt(jnp.maximum(sq, 1e-24))
+    return grads, loss, norm

@@ -1,0 +1,292 @@
+"""ReweightGP — the paper's contribution (Sec 5, Alg 1).
+
+Per-example gradient *clipping* without per-example gradient
+*materialization*:
+
+  1. First backward pass: differentiate the summed loss w.r.t. the
+     pre-activation taps (exactly dL/dZ per layer). Combine each dZ
+     with the recorded layer input using the layer-type rule
+     (Secs 5.1-5.6) to get every example's squared gradient norm.
+  2. Weights nu_i = min(1, c / ||grad_i||)  (Eq 2).
+  3. Second backward pass over the reweighted mean loss
+     1/tau sum_i nu_i l_i  (Eq 3) — an ordinary batched backward whose
+     gradient equals 1/tau sum_i clip_c(grad_i) exactly.
+
+The returned gradient is ready for the Gaussian mechanism: the Rust
+coordinator adds N(0, sigma^2 c^2 / tau^2) noise and feeds DP-Adam.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import KernelBackend
+from .layers import Tape
+
+
+def _rule_linear(kb, dzs, aux):
+    """Sec 5.1 (Goodfellow): ||dz (x) x||^2 = ||dz||^2 ||x||^2."""
+    (dz,) = dzs
+    sq = kb.outer_sq_norm(dz, aux["x"])
+    if aux["bias"]:
+        sq = sq + kb.row_sq_norm(dz)
+    return sq
+
+
+def _rule_linear_seq(kb, dzs, aux):
+    """Sec 5.6 / position-wise shared weights: the per-example gradient
+    is the sequence-summed outer product sum_s dz_s (x) x_s."""
+    (dz,) = dzs  # [tau, s, m]
+    sq = kb.seq_sq_norm(dz, aux["x"])
+    if aux["bias"]:
+        sq = sq + kb.row_sq_norm(jnp.sum(dz, axis=1))
+    return sq
+
+
+def _rule_conv(kb, dzs, aux):
+    """Sec 5.2 / Alg 3: im2col + batched GEMM."""
+    (dz,) = dzs  # [tau, c_out, oh, ow]
+    sq = kb.conv_sq_norm(dz, aux["x"], aux["kh"], aux["kw"], aux["stride"])
+    if aux["bias"]:
+        # grad_b per example = sum over spatial positions of dz
+        sq = sq + kb.row_sq_norm(jnp.sum(dz, axis=(2, 3)))
+    return sq
+
+
+def _rule_layernorm(kb, dzs, aux):
+    """Sec 5.5 / Alg 5: grad_gamma = dH (.) hbar, grad_beta = dH
+    (summed over any sequence axes)."""
+    (dh,) = dzs
+    hbar = aux["hbar"]
+    if dh.ndim == 2:
+        g_gamma = dh * hbar
+        g_beta = dh
+    else:  # [tau, s, k] -> sum over s
+        g_gamma = jnp.einsum("tsk,tsk->tk", dh, hbar)
+        g_beta = jnp.sum(dh, axis=1)
+    return kb.row_sq_norm(g_gamma) + kb.row_sq_norm(g_beta)
+
+
+def _rule_recurrent(kb, dzs, aux):
+    """Secs 5.3/5.4 (Eq 12): grad_W = sum_t dz_t (x) h_{t-1},
+    grad_V = sum_t dz_t (x) x_t, grad_b = sum_t dz_t."""
+    dz = jnp.stack(dzs, axis=1)  # [tau, T, m]
+    sq = kb.seq_sq_norm(dz, aux["h"]) + kb.seq_sq_norm(dz, aux["x"])
+    if aux["bias"]:
+        sq = sq + kb.row_sq_norm(jnp.sum(dz, axis=1))
+    return sq
+
+
+_RULES = {
+    "linear": _rule_linear,
+    "linear_seq": _rule_linear_seq,
+    "conv": _rule_conv,
+    "layernorm": _rule_layernorm,
+    "recurrent": _rule_recurrent,
+}
+
+
+def per_example_sq_norms(model, params, x, y, kb=None):
+    """||grad_theta l(y_i, M(x_i))||^2 for every example in the batch,
+    computed from (dL/dZ, layer inputs) only — no per-example gradient
+    is ever materialized (except tile-local inside kernels).
+    """
+    kb = kb or KernelBackend()
+
+    # Pass 1 (shape): discover tap keys/shapes without computing.
+    shape_tape = Tape(Tape.SHAPE)
+    jax.eval_shape(lambda p: model.loss_sum(p, x, y, shape_tape), params)
+
+    taps = {
+        key: jnp.zeros(shape, dtype)
+        for key, shape, dtype in shape_tape.tap_specs
+    }
+
+    # Pass 2 (grad): dL/dZ for every tap. Summed (not mean) loss makes
+    # row i of each dZ equal d l_i / d z_i directly.
+    grad_tape = Tape(Tape.GRAD, taps)
+
+    def tapped_loss(taps):
+        grad_tape.records.clear()
+        grad_tape._used.clear()
+        grad_tape.taps = taps
+        loss = model.loss_sum(params, x, y, grad_tape)
+        return loss, list(grad_tape.records)
+
+    dz_by_key, records = jax.grad(tapped_loss, has_aux=True)(taps)
+
+    sq = jnp.zeros(x.shape[0], jnp.float32)
+    for kind, aux, tap_keys in records:
+        dzs = [dz_by_key[k] for k in tap_keys]
+        sq = sq + _RULES[kind](kb, dzs, aux)
+    return sq
+
+
+def clip_weights(sq_norms, c):
+    """nu_i = min(1, c / ||grad_i||)  (Eq 2)."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 1e-24))
+    return jnp.minimum(1.0, c / norms), norms
+
+
+def reweight_step(model, params, x, y, c, kb=None):
+    """One ReweightGP step (Alg 1 lines 4-14, noise excluded).
+
+    Returns (grads..., mean unweighted loss, per-example grad norms).
+    grads = 1/tau sum_i clip_c(grad l_i) — exactly per-example clipping.
+    """
+    sq = per_example_sq_norms(model, params, x, y, kb)
+    nu, norms = clip_weights(sq, c)
+    nu = jax.lax.stop_gradient(nu)
+    tau = x.shape[0]
+
+    def weighted_loss(p):
+        per_ex = model.loss_per_example(p, x, y)
+        return jnp.sum(nu * per_ex) / tau, jnp.mean(per_ex)
+
+    grads, loss = jax.grad(weighted_loss, has_aux=True)(params)
+    return grads, loss, norms
+
+
+# ---------------------------------------------------------------------
+# reweight_direct — our §Perf extension beyond the paper: ONE backward
+# pass total. The same (dL/dZ, layer input) pairs that give the norms
+# also determine every weight gradient (that is the content of the
+# paper's Sec 5 derivations), so after computing nu we assemble the
+# *weighted* gradient per layer directly:
+#
+#   linear:      dW = X^T (nu . dZ)            db = sum_i nu_i dz_i
+#   linear_seq:  dW = sum_s X_s^T (nu . dZ_s)  (attention, FFN)
+#   conv:        dW = sum_i nu_i dZ_i P_i      (im2col, Alg 3 aggregated)
+#   recurrent:   dW = sum_t H_t^T (nu . dZ_t), dV likewise over X_t
+#   layernorm:   dgamma = sum_i nu_i dH_i . hbar_i,  dbeta = sum nu dH
+#
+# instead of re-running forward+backward over the reweighted loss
+# (Alg 1 line 14). Exactness is tested against reweight_step.
+# ---------------------------------------------------------------------
+
+def _grad_linear(nu, dzs, aux):
+    (dz,) = dzs
+    wdz = nu[:, None] * dz
+    out = {"w": jnp.einsum("tn,tm->nm", aux["x"], wdz)}
+    if aux["bias"]:
+        out["b"] = jnp.sum(wdz, axis=0)
+    return out
+
+
+def _grad_linear_seq(nu, dzs, aux):
+    (dz,) = dzs
+    wdz = nu[:, None, None] * dz
+    out = {"w": jnp.einsum("tsn,tsm->nm", aux["x"], wdz)}
+    if aux["bias"]:
+        out["b"] = jnp.sum(wdz, axis=(0, 1))
+    return out
+
+
+def _grad_conv(nu, dzs, aux):
+    from .kernels import im2col_bmm
+
+    (dz,) = dzs  # [tau, c_out, oh, ow]
+    tau, c_out = dz.shape[0], dz.shape[1]
+    c_in = aux["x"].shape[1]
+    p = im2col_bmm.im2col(aux["x"], aux["kh"], aux["kw"], aux["stride"])
+    dzr = (nu[:, None, None] * dz.reshape(tau, c_out, -1))
+    g = jnp.einsum("tol,tlk->ok", dzr, p)
+    out = {"w": g.reshape(c_out, c_in, aux["kh"], aux["kw"])}
+    if aux["bias"]:
+        out["b"] = jnp.einsum("t,tohw->o", nu, dz)
+    return out
+
+
+def _grad_layernorm(nu, dzs, aux):
+    (dh,) = dzs
+    hbar = aux["hbar"]
+    if dh.ndim == 2:
+        wdh = nu[:, None] * dh
+        return {
+            "gamma": jnp.sum(wdh * hbar, axis=0),
+            "beta": jnp.sum(wdh, axis=0),
+        }
+    wdh = nu[:, None, None] * dh
+    return {
+        "gamma": jnp.einsum("tsk,tsk->k", wdh, hbar),
+        "beta": jnp.sum(wdh, axis=(0, 1)),
+    }
+
+
+def _grad_recurrent(nu, dzs, aux):
+    dz = jnp.stack(dzs, axis=1)  # [tau, T, m]
+    wdz = nu[:, None, None] * dz
+    return {
+        "w": jnp.einsum("tTn,tTm->nm", aux["h"], wdz),
+        "v": jnp.einsum("tTn,tTm->nm", aux["x"], wdz),
+        "b": jnp.sum(wdz, axis=(0, 1)),
+    }
+
+
+_GRAD_RULES = {
+    "linear": _grad_linear,
+    "linear_seq": _grad_linear_seq,
+    "conv": _grad_conv,
+    "layernorm": _grad_layernorm,
+    "recurrent": _grad_recurrent,
+}
+
+_PARAM_SUFFIXES = {
+    "linear": {"w": ".w", "b": ".b"},
+    "linear_seq": {"w": ".w", "b": ".b"},
+    "conv": {"w": ".w", "b": ".b"},
+    "layernorm": {"gamma": ".gamma", "beta": ".beta"},
+    "recurrent": {"w": ".w", "v": ".v", "b": ".b"},
+}
+
+
+def reweight_direct_step(model, params, x, y, c, kb=None):
+    """ReweightGP with the second backward pass eliminated: norms AND
+    the weighted gradient are both assembled from one tapped backward.
+
+    Same contract as reweight_step; tested to produce identical
+    gradients.
+    """
+    kb = kb or KernelBackend()
+    tau = x.shape[0]
+
+    shape_tape = Tape(Tape.SHAPE)
+    jax.eval_shape(lambda p: model.loss_sum(p, x, y, shape_tape), params)
+    taps = {
+        key: jnp.zeros(shape, dtype)
+        for key, shape, dtype in shape_tape.tap_specs
+    }
+    grad_tape = Tape(Tape.GRAD, taps)
+
+    def tapped_loss(taps):
+        grad_tape.records.clear()
+        grad_tape._used.clear()
+        grad_tape.taps = taps
+        loss = model.loss_sum(params, x, y, grad_tape)
+        return loss, (list(grad_tape.records), loss / tau)
+
+    dz_by_key, (records, mean_loss) = jax.grad(tapped_loss, has_aux=True)(taps)
+
+    # pass 1 products: per-example squared norms
+    sq = jnp.zeros(tau, jnp.float32)
+    for kind, aux, tap_keys in records:
+        dzs = [dz_by_key[k] for k in tap_keys]
+        sq = sq + _RULES[kind](kb, dzs, aux)
+    nu, norms = clip_weights(sq, c)
+    nu = jax.lax.stop_gradient(nu) / tau  # fold the 1/tau average in
+
+    # pass 2 replaced: weighted gradients from the same intermediates
+    grad_by_name = {}
+    for kind, aux, tap_keys in records:
+        dzs = [dz_by_key[k] for k in tap_keys]
+        layer_grads = _GRAD_RULES[kind](nu, dzs, aux)
+        for part, g in layer_grads.items():
+            name = aux["name"] + _PARAM_SUFFIXES[kind][part]
+            # a layer applied twice (weight sharing) accumulates
+            grad_by_name[name] = grad_by_name.get(name, 0.0) + g
+
+    names = model.param_names()
+    missing = [n for n in names if n not in grad_by_name]
+    if missing:
+        raise ValueError(f"no direct-gradient rule produced {missing}")
+    grads = [grad_by_name[n] for n in names]
+    return grads, mean_loss, norms

@@ -1,0 +1,179 @@
+"""Experiment configuration registry — the single source of truth for
+which (model x dataset x batch x method) artifacts exist.
+
+Every entry maps 1:1 to entries in artifacts/manifest.json, which the
+Rust coordinator and bench harness consume. The registry is organized
+around the paper's evaluation section (DESIGN.md §4 index).
+
+Methods:
+  fwd             eval pass: (params, X, y) -> (loss, correct)
+  nonprivate      (params, X, y)            -> (grads..., loss)
+  reweight        (params, X, y, c)         -> (grads..., loss, norms)   [the paper]
+  reweight_pallas same, Pallas kernel backend
+  reweight_gram   same, Gram-matrix recurrent norms (our extension)
+  multiloss       (params, X, y, c)         -> (grads..., loss, norms)   [baseline]
+  naive1          batch=1: (params, x, y)   -> (grads..., loss, norm)    [nxBP body]
+"""
+
+DATASETS = {
+    # name: (input shape sans batch, dtype, n_classes)
+    "mnist": ((1, 28, 28), "f32", 10),
+    "fmnist": ((1, 28, 28), "f32", 10),
+    "cifar10": ((3, 32, 32), "f32", 10),
+    "imdb": ((64,), "i32", 2),  # token ids, seq len 64
+    "lsun16": ((3, 16, 16), "f32", 10),
+    "lsun32": ((3, 32, 32), "f32", 10),
+    "lsun48": ((3, 48, 48), "f32", 10),
+    "lsun64": ((3, 64, 64), "f32", 10),
+}
+
+BASE_METHODS = ["fwd", "nonprivate", "reweight", "multiloss"]
+
+
+class Config:
+    def __init__(self, name, model, model_kw, dataset, batch, methods,
+                 tags=()):
+        self.name = name
+        self.model = model
+        self.model_kw = dict(model_kw)
+        self.dataset = dataset
+        self.batch = batch
+        self.methods = list(methods)
+        self.tags = tuple(tags)
+        if dataset not in DATASETS:
+            raise ValueError(f"unknown dataset {dataset!r}")
+
+    @property
+    def input_shape(self):
+        return (self.batch,) + DATASETS[self.dataset][0]
+
+    @property
+    def input_dtype(self):
+        return DATASETS[self.dataset][1]
+
+    @property
+    def n_classes(self):
+        return DATASETS[self.dataset][2]
+
+    def build_model(self):
+        from .models import build_model
+
+        return build_model(self.model, **self.model_kw)
+
+
+def _mlp_kw(dataset, depth):
+    in_dim = 1
+    for d in DATASETS[dataset][0]:
+        in_dim *= d
+    return {"in_dim": in_dim, "depth": depth,
+            "n_classes": DATASETS[dataset][2]}
+
+
+def build_registry():
+    """All experiment configs, keyed by name."""
+    cfgs = []
+
+    # ---- Fig 5: five architectures, B=32 ---------------------------
+    cfgs.append(Config(
+        "mlp2_mnist_b32", "mlp", _mlp_kw("mnist", 2), "mnist", 32,
+        BASE_METHODS + ["reweight_pallas", "reweight_direct"],
+        tags=("fig5", "fig6")))
+    cfgs.append(Config(
+        "cnn_mnist_b32", "cnn", {"c_in": 1, "img": 28}, "mnist", 32,
+        BASE_METHODS + ["reweight_pallas", "reweight_direct"],
+        tags=("fig5", "fig6", "e2e")))
+    cfgs.append(Config(
+        "rnn_mnist_b32", "rnn", {"n_in": 28}, "mnist", 32,
+        BASE_METHODS + ["reweight_gram", "reweight_direct"],
+        tags=("fig5", "fig6")))
+    cfgs.append(Config(
+        "lstm_mnist_b32", "lstm", {"n_in": 28}, "mnist", 32,
+        BASE_METHODS + ["reweight_gram", "reweight_direct"], tags=("fig5",)))
+    cfgs.append(Config(
+        "transformer_imdb_b32", "transformer", {}, "imdb", 32,
+        BASE_METHODS + ["reweight_pallas", "reweight_gram", "reweight_direct"],
+        tags=("fig5", "e2e")))
+
+    # ---- Fig 6: batch-size sweep, MLP/CNN/RNN on MNIST -------------
+    for batch in (16, 64, 128):
+        cfgs.append(Config(
+            f"mlp2_mnist_b{batch}", "mlp", _mlp_kw("mnist", 2), "mnist",
+            batch, BASE_METHODS, tags=("fig6",)))
+        cfgs.append(Config(
+            f"cnn_mnist_b{batch}", "cnn", {"c_in": 1, "img": 28}, "mnist",
+            batch, BASE_METHODS, tags=("fig6",)))
+        cfgs.append(Config(
+            f"rnn_mnist_b{batch}", "rnn", {"n_in": 28}, "mnist",
+            batch, BASE_METHODS, tags=("fig6",)))
+    # ---- Fig 7: MLP depth sweep, B=128, MNIST(/FMNIST) + CIFAR10 ---
+    for depth in (2, 4, 6, 8):
+        name = f"mlp{depth}_mnist_b128"
+        if depth == 2:
+            # mlp2_mnist_b128 already added for fig6; just tag it
+            pass
+        else:
+            cfgs.append(Config(
+                name, "mlp", _mlp_kw("mnist", depth), "mnist", 128,
+                BASE_METHODS, tags=("fig7",)))
+        cfgs.append(Config(
+            f"mlp{depth}_cifar10_b128", "mlp", _mlp_kw("cifar10", depth),
+            "cifar10", 128, BASE_METHODS, tags=("fig7",)))
+
+    # ---- Fig 8: deep conv nets on LSUN-like images, small batch ----
+    for img in (32, 64):
+        cfgs.append(Config(
+            f"resnet_mini_lsun{img}_b8", "resnet_mini",
+            {"c_in": 3, "img": img}, f"lsun{img}", 8,
+            BASE_METHODS, tags=("fig8",)))
+        cfgs.append(Config(
+            f"vgg_mini_lsun{img}_b8", "vgg_mini",
+            {"c_in": 3, "img": img}, f"lsun{img}", 8,
+            BASE_METHODS, tags=("fig8",)))
+
+    # ---- Fig 9: image-size sweep for ResNetMini, B=16 --------------
+    for img in (16, 32, 48, 64):
+        cfgs.append(Config(
+            f"resnet_mini_lsun{img}_b16", "resnet_mini",
+            {"c_in": 3, "img": img}, f"lsun{img}", 16,
+            BASE_METHODS, tags=("fig9",)))
+
+    # ---- naive1 (nxBP body): one batch-1 artifact per distinct
+    #      (model, dataset shape) — shared across batch sizes --------
+    seen = set()
+    naive = []
+    for cfg in cfgs:
+        key = (cfg.model, tuple(sorted(cfg.model_kw.items())), cfg.dataset)
+        if key in seen or not cfg.methods:
+            continue
+        seen.add(key)
+        naive.append(Config(
+            _naive_name(cfg), cfg.model, cfg.model_kw, cfg.dataset, 1,
+            ["naive1"], tags=("naive",)))
+    cfgs.extend(naive)
+
+    cfgs = [c for c in cfgs if c.methods]
+    # retag mlp2_mnist_b128 for fig7
+    reg = {}
+    for c in cfgs:
+        if c.name in reg:
+            raise ValueError(f"duplicate config {c.name}")
+        reg[c.name] = c
+    reg["mlp2_mnist_b128"].tags = reg["mlp2_mnist_b128"].tags + ("fig7",)
+    # reweight_direct (one-backward extension, §Perf) at the headline
+    # batch size for the ablation bench
+    reg["mlp2_mnist_b128"].methods.append("reweight_direct")
+    reg["cnn_mnist_b128"].methods.append("reweight_direct")
+    return reg
+
+
+def _naive_name(cfg):
+    base = cfg.name.rsplit("_b", 1)[0]
+    return f"{base}_b1"
+
+
+def naive_config_name(config_name):
+    """Name of the batch-1 naive1 config backing a batched config."""
+    return f"{config_name.rsplit('_b', 1)[0]}_b1"
+
+
+REGISTRY = build_registry()

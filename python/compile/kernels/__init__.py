@@ -1,0 +1,75 @@
+"""L1: Pallas kernels for the paper's compute hot-spot — per-example
+gradient (norm) computation — plus a backend dispatcher.
+
+Backends:
+  "jnp"    — the pure-jnp reference implementations (ref.py). XLA fuses
+             these well on CPU; default for benchmark artifacts.
+  "pallas" — the Pallas kernels (interpret=True on CPU; same source
+             compiles for TPU). Exercised by the *_pallas artifact
+             variants, the kernel ablation bench, and the test suite.
+"""
+
+import jax.numpy as jnp
+
+from . import bmm_outer, gram_norm, im2col_bmm, ref, sq_norm
+
+VALID_BACKENDS = ("jnp", "pallas")
+
+
+class KernelBackend:
+    """Dispatch the per-example-gradient primitives to a backend.
+
+    `recurrent_mode` picks how sequence-shared weight norms are
+    computed: "materialize" (paper Alg 4: build G_i then norm) or
+    "gram" (our Gram-matrix extension, norm without materializing).
+    """
+
+    def __init__(self, backend="jnp", recurrent_mode="materialize", interpret=True):
+        if backend not in VALID_BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        if recurrent_mode not in ("materialize", "gram"):
+            raise ValueError(f"unknown recurrent_mode {recurrent_mode!r}")
+        self.backend = backend
+        self.recurrent_mode = recurrent_mode
+        self.interpret = interpret
+
+    @property
+    def use_pallas(self):
+        return self.backend == "pallas"
+
+    def outer_sq_norm(self, dz, x):
+        """FC layer per-example grad norm^2 (Sec 5.1)."""
+        if self.use_pallas:
+            return sq_norm.outer_sq_norm(dz, x, interpret=self.interpret)
+        return ref.outer_sq_norm(dz, x)
+
+    def row_sq_norm(self, x):
+        """Per-example squared norm of a [tau, n] matrix (bias grads,
+        LayerNorm beta, ...)."""
+        if self.use_pallas:
+            return sq_norm.sq_norm(x, interpret=self.interpret)
+        return ref.sq_norm(x)
+
+    def conv_sq_norm(self, dz, x, kh, kw, stride=1):
+        """Conv layer per-example grad norm^2 (Sec 5.2 / Alg 3)."""
+        return im2col_bmm.conv_sq_norm(
+            dz, x, kh, kw, stride,
+            use_pallas=self.use_pallas, interpret=self.interpret,
+        )
+
+    def seq_sq_norm(self, dz, x):
+        """Sequence-shared weight per-example grad norm^2
+        (Sec 5.3/5.4/5.6: recurrent, LSTM, attention projections).
+
+        dz: [tau, s, m], x: [tau, s, n] -> [tau]
+        """
+        if self.recurrent_mode == "gram":
+            if self.use_pallas:
+                return gram_norm.gram_norm(dz, x, interpret=self.interpret)
+            return ref.gram_norm(dz, x)
+        # paper-faithful: materialize G_i = sum_s dz (x) x, then norm
+        if self.use_pallas:
+            dzt = dz.transpose(0, 2, 1)  # [tau, m, s]
+            return bmm_outer.bmm_sq_norm(dzt, x, interpret=self.interpret)
+        g = ref.seq_outer_sum(dz, x)
+        return jnp.sum(g * g, axis=(1, 2))

@@ -1,0 +1,98 @@
+"""Pallas kernel: paper Algorithm 2 — per-example fully-connected
+gradients as one batched outer product, plus the general batched
+matmul (torch.bmm analogue) used by Algorithm 3.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over examples; each
+program computes one example's [m, n] gradient on the MXU as a
+[m, 1] x [1, n] (resp. [m, k] x [k, n]) matmul with both operands
+resident in VMEM. For the paper's layer sizes (m, n <= 784x256) a whole
+per-example gradient is ~0.8 MB — far under the ~16 MB VMEM budget — so
+full-layer blocks with double-buffered HBM streaming of the next
+example's (dz, x) are the right schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bmm_outer_kernel(dz_ref, x_ref, o_ref):
+    # dz_ref: [1, m], x_ref: [1, n] -> o_ref: [1, m, n]
+    dz = dz_ref[0, :]
+    x = x_ref[0, :]
+    o_ref[0, :, :] = dz[:, None] * x[None, :]
+
+
+def bmm_outer(dz, x, *, interpret=True):
+    """Per-example FC gradients (Alg 2). dz: [tau, m], x: [tau, n]
+    -> [tau, m, n]."""
+    tau, m = dz.shape
+    _, n = x.shape
+    return pl.pallas_call(
+        _bmm_outer_kernel,
+        grid=(tau,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tau, m, n), dz.dtype),
+        interpret=interpret,
+    )(dz, x)
+
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    # a_ref: [1, m, k], b_ref: [1, k, n] -> o_ref: [1, m, n]
+    a = a_ref[0, :, :]
+    b = b_ref[0, :, :]
+    o_ref[0, :, :] = jnp.dot(a, b, preferred_element_type=o_ref.dtype)
+
+
+def bmm(a, b, *, interpret=True):
+    """Batched matmul (Alg 3 workhorse). a: [tau, m, k], b: [tau, k, n]
+    -> [tau, m, n]."""
+    tau, m, k = a.shape
+    _, _, n = b.shape
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=(tau,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tau, m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def _bmm_sq_norm_kernel(a_ref, b_ref, o_ref):
+    # Fused Alg 3 + norm: compute one example's gradient tile and reduce
+    # it to its squared Frobenius norm without writing the gradient out.
+    a = a_ref[0, :, :]
+    b = b_ref[0, :, :]
+    g = jnp.dot(a, b, preferred_element_type=a.dtype)
+    o_ref[...] = jnp.sum(g * g)[None]
+
+
+def bmm_sq_norm(a, b, *, interpret=True):
+    """Fused per-example gradient + squared norm: ||a_i @ b_i||_F^2.
+
+    This is the ReweightGP hot path for conv layers — the gradient tile
+    lives only in VMEM; only the scalar norm goes back to HBM.
+
+    a: [tau, m, k], b: [tau, k, n] -> [tau]
+    """
+    tau, m, k = a.shape
+    _, _, n = b.shape
+    return pl.pallas_call(
+        _bmm_sq_norm_kernel,
+        grid=(tau,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tau,), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,51 @@
+"""Pallas kernel: Gram-matrix per-example gradient norms for
+sequence-shared weights (recurrent layers, attention projections,
+position-wise FFN) — our extension beyond the paper (DESIGN.md §6).
+
+The paper (Alg 4) materializes G_i = sum_t dz_t (x) x_t per example and
+then takes its norm: cost O(s*m*n) compute and O(m*n) memory per
+example. For the *norm only* (which is all ReweightGP needs for the
+first backward pass),
+
+    ||sum_s dz_s (x) x_s||_F^2 = <dZ dZ^T, X X^T>_F
+
+needs two s x s Gram matrices: O(s^2 (m+n)) compute, O(s^2) memory.
+With s = 28 time steps and m*n = 128*128 this is ~7x less compute and
+~20x less VMEM — and both Grams are MXU matmuls.
+
+TPU mapping: grid over examples; one program holds dZ_i [s, m] and
+X_i [s, n] in VMEM, runs two [s,m]x[m,s]-shaped MXU matmuls, and a VPU
+elementwise-product reduction.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_norm_kernel(dz_ref, x_ref, o_ref):
+    dz = dz_ref[0, :, :]  # [s, m]
+    x = x_ref[0, :, :]  # [s, n]
+    a = jnp.dot(dz, dz.T, preferred_element_type=dz.dtype)  # [s, s]
+    b = jnp.dot(x, x.T, preferred_element_type=x.dtype)  # [s, s]
+    o_ref[...] = jnp.sum(a * b)[None]
+
+
+def gram_norm(dz, x, *, interpret=True):
+    """||sum_s dz_{i,s} (x) x_{i,s}||_F^2 per example.
+
+    dz: [tau, s, m], x: [tau, s, n] -> [tau]
+    """
+    tau, s, m = dz.shape
+    _, _, n = x.shape
+    return pl.pallas_call(
+        _gram_norm_kernel,
+        grid=(tau,),
+        in_specs=[
+            pl.BlockSpec((1, s, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tau,), dz.dtype),
+        interpret=interpret,
+    )(dz, x)

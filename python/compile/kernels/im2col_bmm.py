@@ -1,0 +1,78 @@
+"""Paper Algorithm 3: per-example convolution gradients via im2col +
+batched matmul.
+
+The paper converts the "convolve dL/dZ with the input image" form of
+the conv gradient (Sec 5.2, Eq 8) into a single GEMM by flattening the
+input into its im2col patch matrix — one bmm per minibatch instead of a
+per-example loop, which is exactly what keeps the GPU (here: MXU) busy.
+
+  P  = im2col(X)                       [tau, L, K]   L=(dH+1)(dW+1), K=k*k*c_in
+  dZ = reshape(dL/dZ)                  [tau, c_out, L]
+  G  = bmm(dZ, P)                      [tau, c_out, K] -> [tau, c_out, c_in, k, k]
+
+The im2col itself is expressed with lax.conv_general_dilated_patches
+(pure data movement — XLA lowers it to gathers/reshapes; on TPU the
+Pallas bmm kernel would instead generate patches per-tile in VMEM, see
+DESIGN.md §Hardware-Adaptation). The bmm is the Pallas kernel from
+bmm_outer.py when the pallas backend is selected.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import bmm_outer
+
+
+def im2col(x, kh, kw, stride=1):
+    """Patch matrix of an NCHW image batch.
+
+    x: [tau, c_in, H, W] -> [tau, L, K] with K = c_in*kh*kw and
+    L = out_h*out_w, matching the weight layout [c_out, c_in, kh, kw]
+    flattened to [c_out, K].
+    """
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    # patches: [tau, K, out_h, out_w] with K ordered as (c_in, kh, kw) —
+    # the same ordering as flattening W[c_out, c_in, kh, kw].
+    tau, K = patches.shape[0], patches.shape[1]
+    return jnp.transpose(patches.reshape(tau, K, -1), (0, 2, 1))
+
+
+def conv_grads(dz, x, kh, kw, stride=1, *, use_pallas=False, interpret=True):
+    """Materialized per-example conv gradients (Alg 3).
+
+    dz: [tau, c_out, out_h, out_w] gradient w.r.t. pre-activation
+    x:  [tau, c_in, H, W] layer input
+    -> [tau, c_out, c_in, kh, kw]
+    """
+    tau, c_out = dz.shape[0], dz.shape[1]
+    c_in = x.shape[1]
+    p = im2col(x, kh, kw, stride)  # [tau, L, K]
+    dzr = dz.reshape(tau, c_out, -1)  # [tau, c_out, L]
+    if use_pallas:
+        g = bmm_outer.bmm(dzr, p, interpret=interpret)
+    else:
+        g = jnp.einsum("tol,tlk->tok", dzr, p)
+    return g.reshape(tau, c_out, c_in, kh, kw)
+
+
+def conv_sq_norm(dz, x, kh, kw, stride=1, *, use_pallas=False, interpret=True):
+    """Per-example squared gradient norm of a conv layer's kernel.
+
+    Same as ||conv_grads(...)||_F^2 per example, but the pallas backend
+    fuses the GEMM with the norm reduction so the [c_out, K] gradient
+    tile never leaves VMEM.
+    """
+    tau, c_out = dz.shape[0], dz.shape[1]
+    p = im2col(x, kh, kw, stride)  # [tau, L, K]
+    dzr = dz.reshape(tau, c_out, -1)  # [tau, c_out, L]
+    if use_pallas:
+        return bmm_outer.bmm_sq_norm(dzr, p, interpret=interpret)
+    g = jnp.einsum("tol,tlk->tok", dzr, p)
+    return jnp.sum(g * g, axis=(1, 2))

@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a mathematically identical jnp
+implementation here. These are
+
+  1. the correctness oracle for pytest/hypothesis (kernel vs ref), and
+  2. the "jnp backend" used by default in the AOT benchmark artifacts
+     (XLA fuses these well on CPU; the Pallas path is the TPU story and
+     is exercised by the `*_pallas` artifact variants and the kernel
+     ablation bench).
+
+Shapes follow the paper's notation: tau = minibatch size, m = layer
+output width, n = layer input width, s/T = sequence length / time steps.
+"""
+
+import jax.numpy as jnp
+
+
+def sq_norm(x):
+    """Per-example squared L2 norm.
+
+    x: [tau, n]  ->  [tau]
+    """
+    return jnp.sum(x * x, axis=-1)
+
+
+def outer_sq_norm(dz, x):
+    """Goodfellow's fully-connected identity (paper Sec 5.1):
+
+        || dL/dz_i (x) x_i ||_F^2  =  ||dL/dz_i||^2 * ||x_i||^2
+
+    dz: [tau, m], x: [tau, n]  ->  [tau]
+    """
+    return sq_norm(dz) * sq_norm(x)
+
+
+def bmm_outer(dz, x):
+    """Per-example gradient of a fully-connected layer (paper Alg 2):
+    batched outer product.
+
+    dz: [tau, m], x: [tau, n]  ->  [tau, m, n]
+    """
+    return jnp.einsum("tm,tn->tmn", dz, x)
+
+
+def bmm(a, b):
+    """Batched matrix-matrix multiplication (torch.bmm analogue), the
+    workhorse of paper Alg 3 (conv per-example grads on im2col patches)
+    and of materialized sequence-summed outer products.
+
+    a: [tau, m, k], b: [tau, k, n]  ->  [tau, m, n]
+    """
+    return jnp.einsum("tmk,tkn->tmn", a, b)
+
+
+def seq_outer_sum(dz, x):
+    """Materialized per-example gradient of a weight shared across a
+    sequence/time dimension (recurrent layers Sec 5.3/5.4, attention
+    projections Sec 5.6, position-wise FFN):
+
+        G_i = sum_s dz_{i,s} (x) x_{i,s}
+
+    dz: [tau, s, m], x: [tau, s, n]  ->  [tau, m, n]
+    """
+    return jnp.einsum("tsm,tsn->tmn", dz, x)
+
+
+def gram_norm(dz, x):
+    """Squared norm of the sequence-summed outer product WITHOUT
+    materializing it (our Gram-matrix extension; see DESIGN.md §6):
+
+        ||sum_s dz_s (x) x_s||_F^2
+            = sum_{s,s'} (dz_s . dz_{s'}) (x_s . x_{s'})
+            = <dZ dZ^T, X X^T>_F
+
+    Cost tau*s^2*(m+n) instead of tau*s*m*n + tau*m*n; wins when
+    s^2 << m*n.
+
+    dz: [tau, s, m], x: [tau, s, n]  ->  [tau]
+    """
+    a = jnp.einsum("tsm,tum->tsu", dz, dz)
+    b = jnp.einsum("tsn,tun->tsu", x, x)
+    return jnp.einsum("tsu,tsu->t", a, b)

@@ -1,0 +1,79 @@
+"""Pallas kernel: per-example squared L2 norms (+ the fused
+fully-connected variant of paper Sec 5.1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is a row reduction.
+The grid walks row blocks; each program loads a [bt, n] tile of the
+input into VMEM, squares it on the VPU, and reduces along the feature
+axis. The fused `outer_sq_norm` variant multiplies the two row
+reductions without ever forming the [m, n] outer product — the whole
+point of Goodfellow's identity.
+
+Runs under interpret=True here (CPU PJRT cannot execute Mosaic
+custom-calls); the same code path compiles for real TPUs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sq_norm_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.sum(x * x, axis=-1)
+
+
+def sq_norm(x, *, block_rows=None, interpret=True):
+    """Per-example squared norm. x: [tau, n] -> [tau]."""
+    tau, n = x.shape
+    bt = _pick_block(tau, block_rows)
+    return pl.pallas_call(
+        _sq_norm_kernel,
+        grid=(tau // bt,),
+        in_specs=[pl.BlockSpec((bt, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tau,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _outer_sq_norm_kernel(dz_ref, x_ref, o_ref):
+    dz = dz_ref[...]
+    x = x_ref[...]
+    o_ref[...] = jnp.sum(dz * dz, axis=-1) * jnp.sum(x * x, axis=-1)
+
+
+def outer_sq_norm(dz, x, *, block_rows=None, interpret=True):
+    """Fused FC per-example gradient norm (Sec 5.1):
+    ||dz_i||^2 * ||x_i||^2 without materializing dz_i (x) x_i.
+
+    dz: [tau, m], x: [tau, n] -> [tau]
+    """
+    tau, m = dz.shape
+    _, n = x.shape
+    bt = _pick_block(tau, block_rows)
+    return pl.pallas_call(
+        _outer_sq_norm_kernel,
+        grid=(tau // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, m), lambda i: (i, 0)),
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tau,), dz.dtype),
+        interpret=interpret,
+    )(dz, x)
+
+
+def _pick_block(tau, block_rows):
+    """Largest divisor of tau not exceeding the requested block size.
+
+    Row blocks keep the VMEM tile bounded while letting one grid step
+    cover several examples; tau in this codebase is small (<=128) so the
+    search is trivial.
+    """
+    if block_rows is None:
+        block_rows = min(tau, 32)
+    bt = min(block_rows, tau)
+    while tau % bt != 0:
+        bt -= 1
+    return bt

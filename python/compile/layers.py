@@ -1,0 +1,411 @@
+"""L2 layer framework with pre-activation taps.
+
+The paper's ReweightGP needs two things from the forward/backward pass
+(Sec 5, Alg 1):
+
+  Γ — each layer's pre-activation Z, so that dL/dZ can be requested
+      from the auto-differentiator, and
+  Λ — each layer's input X.
+
+PyTorch exposes these via autograd hooks. JAX has no hooks, so we use
+an equivalent-by-linearity trick (DESIGN.md §5): every pre-activation
+is *tapped* with an additive zero input, `z + tap`, and the per-example
+gradient machinery differentiates the summed loss w.r.t. the taps —
+which is exactly dL/dZ. Layer inputs are recorded on a tape alongside
+the tap keys they pair with.
+
+A `Tape` runs in one of three modes:
+  shape — first pass, records tap shapes only (via jax.eval_shape);
+  grad  — taps are consumed from a dict and layer inputs are recorded;
+  off   — plain forward (taps are identity, nothing is recorded), used
+          for the second (reweighted) backward pass and for eval.
+
+Record kinds consumed by clipping.py:
+  linear     (dz [t,m];      x [t,n])             Sec 5.1 / Alg 2
+  linear_seq (dz [t,s,m];    x [t,s,n])           Sec 5.3/5.4/5.6
+  conv       (dz [t,co,oh,ow]; x [t,ci,H,W], kh, kw, stride) Sec 5.2 / Alg 3
+  layernorm  (dh [t,(s,)k];  hbar same shape)     Sec 5.5 / Alg 5
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class Tape:
+    """Collects pre-activation taps and per-layer records."""
+
+    SHAPE, GRAD, OFF = "shape", "grad", "off"
+
+    def __init__(self, mode=OFF, taps=None):
+        assert mode in (self.SHAPE, self.GRAD, self.OFF)
+        self.mode = mode
+        self.tap_specs = []  # [(key, shape, dtype)] in tap order (shape mode)
+        self.taps = taps or {}  # key -> zero array (grad mode)
+        self.records = []  # [(kind, aux_dict, tap_keys)]
+        self._used = set()
+
+    @classmethod
+    def off(cls):
+        return cls(cls.OFF)
+
+    def tap(self, z, key):
+        """Register pre-activation `z` under `key`; in grad mode adds
+        the zero tap so d(loss)/d(tap) == dL/dZ."""
+        if self.mode == self.SHAPE:
+            self.tap_specs.append((key, z.shape, z.dtype))
+            return z
+        if self.mode == self.GRAD:
+            if key in self._used:
+                raise ValueError(f"duplicate tap key {key!r}")
+            self._used.add(key)
+            return z + self.taps[key]
+        return z
+
+    def record(self, kind, aux, tap_keys):
+        if self.mode == self.GRAD:
+            self.records.append((kind, aux, tap_keys))
+
+    @property
+    def active(self):
+        return self.mode != self.OFF
+
+
+class ParamSpec:
+    """Name + shape + initializer of one parameter tensor."""
+
+    def __init__(self, name, shape, init):
+        self.name = name
+        self.shape = tuple(shape)
+        self.init = init  # fn(key, shape) -> array
+
+    def __repr__(self):
+        return f"ParamSpec({self.name}, {self.shape})"
+
+
+def glorot(key, shape):
+    """Glorot/Xavier uniform — fan sizes from the trailing two dims
+    (or all-but-first for conv kernels)."""
+    if len(shape) == 2:
+        fan_in, fan_out = shape[0], shape[1]
+    elif len(shape) == 4:  # [c_out, c_in, kh, kw]
+        rf = shape[2] * shape[3]
+        fan_in, fan_out = shape[1] * rf, shape[0] * rf
+    else:
+        fan_in = fan_out = int(math.sqrt(max(1, math.prod(shape))))
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def zeros_init(_key, shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def ones_init(_key, shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+class Layer:
+    """Base class: parameters + tape-aware application."""
+
+    def __init__(self, name):
+        self.name = name
+
+    def param_specs(self):
+        return []
+
+    def __call__(self, p, x, tape):
+        raise NotImplementedError
+
+
+class Linear(Layer):
+    """Fully-connected layer, z = x W + b (paper Sec 5.1).
+
+    Accepts [tau, n] input or [tau, s, n] sequence input (position-wise
+    application — attention projections and transformer FFN, Sec 5.6).
+    """
+
+    def __init__(self, name, n_in, n_out, bias=True):
+        super().__init__(name)
+        self.n_in, self.n_out, self.bias = n_in, n_out, bias
+
+    def param_specs(self):
+        specs = [ParamSpec(f"{self.name}.w", (self.n_in, self.n_out), glorot)]
+        if self.bias:
+            specs.append(ParamSpec(f"{self.name}.b", (self.n_out,), zeros_init))
+        return specs
+
+    def __call__(self, p, x, tape):
+        z = x @ p[f"{self.name}.w"]
+        if self.bias:
+            z = z + p[f"{self.name}.b"]
+        key = f"{self.name}.z"
+        z = tape.tap(z, key)
+        kind = "linear" if x.ndim == 2 else "linear_seq"
+        tape.record(kind, {"x": x, "bias": self.bias, "name": self.name}, [key])
+        return z
+
+
+class Conv2d(Layer):
+    """2D convolution, NCHW, square kernel (paper Sec 5.2 / Alg 3).
+
+    `padding` pixels of zero padding are applied explicitly so the
+    per-example-gradient rule sees the padded input (im2col over the
+    padded image is exactly the paper's P matrix).
+    """
+
+    def __init__(self, name, c_in, c_out, kernel, stride=1, padding=0, bias=True):
+        super().__init__(name)
+        self.c_in, self.c_out = c_in, c_out
+        self.kernel, self.stride, self.padding = kernel, stride, padding
+        self.bias = bias
+
+    def param_specs(self):
+        k = self.kernel
+        specs = [ParamSpec(f"{self.name}.w", (self.c_out, self.c_in, k, k), glorot)]
+        if self.bias:
+            specs.append(ParamSpec(f"{self.name}.b", (self.c_out,), zeros_init))
+        return specs
+
+    def __call__(self, p, x, tape):
+        if self.padding:
+            pad = self.padding
+            x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        w = p[f"{self.name}.w"]
+        z = lax.conv_general_dilated(
+            x, w,
+            window_strides=(self.stride, self.stride),
+            padding="VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        if self.bias:
+            z = z + p[f"{self.name}.b"][None, :, None, None]
+        key = f"{self.name}.z"
+        z = tape.tap(z, key)
+        tape.record(
+            "conv",
+            {"x": x, "kh": self.kernel, "kw": self.kernel,
+             "stride": self.stride, "bias": self.bias, "name": self.name},
+            [key],
+        )
+        return z
+
+
+class LayerNorm(Layer):
+    """Layer normalization over the trailing feature axis (Sec 5.5).
+
+    Output h = gamma * hbar + beta is treated as the pre-activation;
+    the rule combines dL/dh with the recorded normalized input hbar.
+    """
+
+    def __init__(self, name, dim, eps=1e-5):
+        super().__init__(name)
+        self.dim, self.eps = dim, eps
+
+    def param_specs(self):
+        return [
+            ParamSpec(f"{self.name}.gamma", (self.dim,), ones_init),
+            ParamSpec(f"{self.name}.beta", (self.dim,), zeros_init),
+        ]
+
+    def __call__(self, p, x, tape):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+        hbar = (x - mu) / jnp.sqrt(var + self.eps)
+        h = p[f"{self.name}.gamma"] * hbar + p[f"{self.name}.beta"]
+        key = f"{self.name}.h"
+        h = tape.tap(h, key)
+        tape.record("layernorm", {"hbar": hbar, "name": self.name}, [key])
+        return h
+
+
+class RNN(Layer):
+    """Vanilla recurrent layer, unrolled (paper Sec 5.3 / Alg 4).
+
+        z_t = h_{t-1} W + x_t V + b,   h_t = phi(z_t)
+
+    Returns the final hidden state. One tap per time step; the record
+    stacks hidden states / inputs along a time axis for the
+    sequence-summed outer-product rule (Eq 12).
+    """
+
+    def __init__(self, name, n_in, n_hidden, activation=jnp.tanh):
+        super().__init__(name)
+        self.n_in, self.n_hidden = n_in, n_hidden
+        self.activation = activation
+
+    def param_specs(self):
+        return [
+            ParamSpec(f"{self.name}.w", (self.n_hidden, self.n_hidden), glorot),
+            ParamSpec(f"{self.name}.v", (self.n_in, self.n_hidden), glorot),
+            ParamSpec(f"{self.name}.b", (self.n_hidden,), zeros_init),
+        ]
+
+    def __call__(self, p, x, tape):
+        # x: [tau, T, n_in]
+        tau, T, _ = x.shape
+        w, v, b = p[f"{self.name}.w"], p[f"{self.name}.v"], p[f"{self.name}.b"]
+        h = jnp.zeros((tau, self.n_hidden), x.dtype)
+        hs, keys = [], []
+        for t in range(T):
+            hs.append(h)
+            z = h @ w + x[:, t, :] @ v + b
+            key = f"{self.name}.z{t}"
+            z = tape.tap(z, key)
+            keys.append(key)
+            h = self.activation(z)
+        tape.record(
+            "recurrent",
+            {"h": jnp.stack(hs, axis=1), "x": x, "bias": True,
+             "name": self.name},
+            keys,
+        )
+        return h
+
+
+class LSTM(Layer):
+    """LSTM with gate weights stacked as W in R^{m x 4m} (Sec 5.4):
+    per-example gradients follow the recurrent rule on the stacked
+    pre-activation z_t in R^{4m}.
+
+    Gate order: [f, i, g, o] (paper order).
+    """
+
+    def __init__(self, name, n_in, n_hidden):
+        super().__init__(name)
+        self.n_in, self.n_hidden = n_in, n_hidden
+
+    def param_specs(self):
+        m = self.n_hidden
+        return [
+            ParamSpec(f"{self.name}.w", (m, 4 * m), glorot),
+            ParamSpec(f"{self.name}.v", (self.n_in, 4 * m), glorot),
+            ParamSpec(f"{self.name}.b", (4 * m,), zeros_init),
+        ]
+
+    def __call__(self, p, x, tape):
+        tau, T, _ = x.shape
+        m = self.n_hidden
+        w, v, b = p[f"{self.name}.w"], p[f"{self.name}.v"], p[f"{self.name}.b"]
+        h = jnp.zeros((tau, m), x.dtype)
+        c = jnp.zeros((tau, m), x.dtype)
+        hs, keys = [], []
+        for t in range(T):
+            hs.append(h)
+            z = h @ w + x[:, t, :] @ v + b  # [tau, 4m]
+            key = f"{self.name}.z{t}"
+            z = tape.tap(z, key)
+            keys.append(key)
+            f = jax.nn.sigmoid(z[:, 0 * m:1 * m])
+            i = jax.nn.sigmoid(z[:, 1 * m:2 * m])
+            g = jnp.tanh(z[:, 2 * m:3 * m])
+            o = jax.nn.sigmoid(z[:, 3 * m:4 * m])
+            c = f * c + i * g
+            h = o * jnp.tanh(c)
+        tape.record(
+            "recurrent",
+            {"h": jnp.stack(hs, axis=1), "x": x, "bias": True,
+             "name": self.name},
+            keys,
+        )
+        return h
+
+
+class Embedding(Layer):
+    """Frozen embedding lookup (GloVe substitute — see DESIGN.md §5).
+
+    The paper uses pretrained, non-trained embeddings for the
+    Transformer/IMDB experiment, so this layer has no trainable
+    parameters: the table is a deterministic constant derived from the
+    layer name.
+    """
+
+    def __init__(self, name, vocab, dim):
+        super().__init__(name)
+        self.vocab, self.dim = vocab, dim
+        seed = abs(hash(name)) % (2 ** 31)
+        self.table = glorot(jax.random.PRNGKey(seed), (vocab, dim))
+
+    def __call__(self, p, x, tape):
+        # x: [tau, s] int32 token ids -> [tau, s, dim]
+        return self.table[x]
+
+
+class MultiHeadAttention(Layer):
+    """Multi-head self-attention (paper Sec 5.6, Fig 4).
+
+    The four projection weights W^Q, W^K, W^V, W^O are position-wise
+    linear layers; their per-example gradients are the sequence-summed
+    outer products the paper derives ((dL/dQ)^T Q etc.), which is the
+    `linear_seq` record emitted by the Linear sublayers.
+    """
+
+    def __init__(self, name, d_model, n_heads):
+        super().__init__(name)
+        assert d_model % n_heads == 0
+        self.d_model, self.n_heads = d_model, n_heads
+        self.d_k = d_model // n_heads
+        self.wq = Linear(f"{name}.wq", d_model, d_model, bias=False)
+        self.wk = Linear(f"{name}.wk", d_model, d_model, bias=False)
+        self.wv = Linear(f"{name}.wv", d_model, d_model, bias=False)
+        self.wo = Linear(f"{name}.wo", d_model, d_model, bias=False)
+
+    def param_specs(self):
+        return (
+            self.wq.param_specs() + self.wk.param_specs()
+            + self.wv.param_specs() + self.wo.param_specs()
+        )
+
+    def __call__(self, p, x, tape):
+        # x: [tau, s, d_model]
+        tau, s, d = x.shape
+        h, dk = self.n_heads, self.d_k
+        q = self.wq(p, x, tape)
+        k = self.wk(p, x, tape)
+        v = self.wv(p, x, tape)
+
+        def split(a):  # [tau, s, d] -> [tau, h, s, dk]
+            return a.reshape(tau, s, h, dk).transpose(0, 2, 1, 3)
+
+        qh, kh, vh = split(q), split(k), split(v)
+        att = jnp.einsum("thsd,thud->thsu", qh, kh) / math.sqrt(dk)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("thsu,thud->thsd", att, vh)
+        out = out.transpose(0, 2, 1, 3).reshape(tau, s, d)
+        return self.wo(p, out, tape)
+
+
+def positional_encoding(s, d):
+    """Sinusoidal positional encoding [s, d] (Vaswani et al.)."""
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def max_pool_2x2(x):
+    """2x2 max pooling with stride 2, NCHW (parameterless — Sec 5.7)."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def avg_pool_global(x):
+    """Global average pooling NCHW -> [tau, c]."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def cross_entropy_per_example(logits, y):
+    """Per-example cross-entropy loss. logits [tau, C], y [tau] int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+
+
+def accuracy_count(logits, y):
+    """Number of correct predictions (f32 scalar for a uniform ABI)."""
+    return jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))

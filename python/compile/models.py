@@ -1,0 +1,270 @@
+"""The paper's five benchmark architectures (Sec 6.1.1) plus the deep
+conv nets of Secs 6.5/6.6 in reduced form (DESIGN.md §5 substitutions).
+
+Every model is a `Model`: an ordered set of parameter specs plus a
+tape-aware forward. `loss_per_example` is the quantity the paper clips;
+everything in clipping.py / baselines.py is generic over Model.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+class Model:
+    """A named architecture: parameter specs + tape-aware forward."""
+
+    def __init__(self, name):
+        self.name = name
+        self._layers = []
+
+    def add(self, layer):
+        self._layers.append(layer)
+        return layer
+
+    # -- parameters -------------------------------------------------
+    def param_specs(self):
+        specs = []
+        for layer in self._layers:
+            specs.extend(layer.param_specs())
+        return specs
+
+    def param_names(self):
+        return [s.name for s in self.param_specs()]
+
+    def init_params(self, seed=0):
+        """Deterministic init; returns params as a flat list (the HLO
+        argument order recorded in the manifest)."""
+        key = jax.random.PRNGKey(seed)
+        out = []
+        for spec in self.param_specs():
+            key, sub = jax.random.split(key)
+            out.append(spec.init(sub, spec.shape))
+        return out
+
+    def params_dict(self, params_list):
+        names = self.param_names()
+        assert len(names) == len(params_list), (
+            f"{self.name}: expected {len(names)} params, got {len(params_list)}"
+        )
+        return dict(zip(names, params_list))
+
+    # -- forward / loss ---------------------------------------------
+    def forward(self, p, x, tape):
+        raise NotImplementedError
+
+    def loss_per_example(self, params_list, x, y, tape=None):
+        tape = tape or L.Tape.off()
+        logits = self.forward(self.params_dict(params_list), x, tape)
+        return L.cross_entropy_per_example(logits, y)
+
+    def loss_sum(self, params_list, x, y, tape=None):
+        return jnp.sum(self.loss_per_example(params_list, x, y, tape))
+
+    def loss_mean(self, params_list, x, y):
+        return jnp.mean(self.loss_per_example(params_list, x, y))
+
+    def eval_metrics(self, params_list, x, y):
+        """(mean loss, correct count) — the `fwd` artifact."""
+        logits = self.forward(self.params_dict(params_list), x, L.Tape.off())
+        loss = jnp.mean(L.cross_entropy_per_example(logits, y))
+        return loss, L.accuracy_count(logits, y)
+
+
+class MLP(Model):
+    """Paper Sec 6.1.1: two hidden layers (128, 256), sigmoid.
+
+    Depth variants for Fig 7 alternate 128/256 hidden units.
+    """
+
+    def __init__(self, in_dim, n_classes=10, hidden=None, depth=2):
+        super().__init__(f"mlp{depth}")
+        if hidden is None:
+            hidden = [128 if i % 2 == 0 else 256 for i in range(depth)]
+        dims = [in_dim] + hidden + [n_classes]
+        self.fcs = [
+            self.add(L.Linear(f"fc{i}", dims[i], dims[i + 1]))
+            for i in range(len(dims) - 1)
+        ]
+
+    def forward(self, p, x, tape):
+        x = x.reshape(x.shape[0], -1)
+        for fc in self.fcs[:-1]:
+            x = jax.nn.sigmoid(fc(p, x, tape))
+        return self.fcs[-1](p, x, tape)
+
+
+class CNN(Model):
+    """Paper Sec 6.1.1: conv(20@5x5) -> 2x2 maxpool -> conv(50@5x5)
+    -> 2x2 maxpool -> fc(128) -> fc(classes). No zero padding."""
+
+    def __init__(self, c_in=1, img=28, n_classes=10):
+        super().__init__("cnn")
+        self.conv1 = self.add(L.Conv2d("conv1", c_in, 20, 5))
+        self.conv2 = self.add(L.Conv2d("conv2", 20, 50, 5))
+        s = (img - 4) // 2  # after conv1 + pool
+        s = (s - 4) // 2  # after conv2 + pool
+        self.flat = 50 * s * s
+        self.fc1 = self.add(L.Linear("fc1", self.flat, 128))
+        self.fc2 = self.add(L.Linear("fc2", 128, n_classes))
+
+    def forward(self, p, x, tape):
+        x = jax.nn.relu(self.conv1(p, x, tape))
+        x = L.max_pool_2x2(x)
+        x = jax.nn.relu(self.conv2(p, x, tape))
+        x = L.max_pool_2x2(x)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(self.fc1(p, x, tape))
+        return self.fc2(p, x, tape)
+
+
+class RNNModel(Model):
+    """Paper Sec 6.1.1: one vanilla recurrent layer (128, tanh) + fc.
+    Images are consumed row-by-row as a length-H sequence."""
+
+    def __init__(self, n_in=28, n_hidden=128, n_classes=10):
+        super().__init__("rnn")
+        self.rnn = self.add(L.RNN("rnn", n_in, n_hidden))
+        self.fc = self.add(L.Linear("fc", n_hidden, n_classes))
+
+    def forward(self, p, x, tape):
+        if x.ndim == 4:  # [tau, 1, H, W] image -> row sequence
+            x = x[:, 0, :, :]
+        h = self.rnn(p, x, tape)
+        return self.fc(p, h, tape)
+
+
+class LSTMModel(Model):
+    """Paper Sec 6.1.1: one LSTM layer (128) + fc."""
+
+    def __init__(self, n_in=28, n_hidden=128, n_classes=10):
+        super().__init__("lstm")
+        self.lstm = self.add(L.LSTM("lstm", n_in, n_hidden))
+        self.fc = self.add(L.Linear("fc", n_hidden, n_classes))
+
+    def forward(self, p, x, tape):
+        if x.ndim == 4:
+            x = x[:, 0, :, :]
+        h = self.lstm(p, x, tape)
+        return self.fc(p, h, tape)
+
+
+class Transformer(Model):
+    """Paper Sec 6.1.1 / Fig 4: frozen embedding + positional encoding
+    + one encoder block (MHA -> add&norm -> FFN -> add&norm) + fc.
+
+    Embeddings are frozen (the paper uses pretrained GloVe), so they
+    carry no per-example gradients — matching the paper's setup.
+    """
+
+    def __init__(self, vocab=5000, seq=64, d_model=64, n_heads=2,
+                 d_ff=128, n_classes=2):
+        super().__init__("transformer")
+        self.seq, self.d_model = seq, d_model
+        self.embed = self.add(L.Embedding("embed", vocab, d_model))
+        self.pe = L.positional_encoding(seq, d_model)
+        self.mha = self.add(L.MultiHeadAttention("mha", d_model, n_heads))
+        self.ln1 = self.add(L.LayerNorm("ln1", d_model))
+        self.ff1 = self.add(L.Linear("ff1", d_model, d_ff))
+        self.ff2 = self.add(L.Linear("ff2", d_ff, d_model))
+        self.ln2 = self.add(L.LayerNorm("ln2", d_model))
+        self.fc = self.add(L.Linear("fc", d_model, n_classes))
+
+    def forward(self, p, x, tape):
+        # x: [tau, seq] int32 token ids
+        h = self.embed(p, x, tape) + self.pe
+        a = self.mha(p, h, tape)
+        h = self.ln1(p, h + a, tape)
+        f = self.ff2(p, jax.nn.relu(self.ff1(p, h, tape)), tape)
+        h = self.ln2(p, h + f, tape)
+        h = jnp.mean(h, axis=1)  # mean-pool over sequence
+        return self.fc(p, h, tape)
+
+
+class _FrozenNorm:
+    """Frozen batch-norm stand-in (paper Sec 6.5 freezes BN params:
+    they have no per-example gradients). A parameterless affine with
+    fixed scale/shift constants."""
+
+    def __init__(self, scale=1.0, shift=0.0):
+        self.scale, self.shift = scale, shift
+
+    def __call__(self, x):
+        return self.scale * x + self.shift
+
+
+class ResNetMini(Model):
+    """Reduced ResNet (Figs 8, 9): stem conv + two residual blocks with
+    a 2x2-pool transition, frozen norms, global average pool, fc head.
+    Preserves the layer mix (conv stacks, skip adds, frozen norm) whose
+    per-layer cost the paper studies vs image size."""
+
+    def __init__(self, c_in=3, img=32, width=8, n_classes=10):
+        super().__init__("resnet_mini")
+        w = width
+        self.norm = _FrozenNorm()
+        self.stem = self.add(L.Conv2d("stem", c_in, w, 3, padding=1))
+        self.b1a = self.add(L.Conv2d("b1a", w, w, 3, padding=1))
+        self.b1b = self.add(L.Conv2d("b1b", w, w, 3, padding=1))
+        self.trans = self.add(L.Conv2d("trans", w, 2 * w, 3, padding=1))
+        self.b2a = self.add(L.Conv2d("b2a", 2 * w, 2 * w, 3, padding=1))
+        self.b2b = self.add(L.Conv2d("b2b", 2 * w, 2 * w, 3, padding=1))
+        self.fc = self.add(L.Linear("fc", 2 * w, n_classes))
+
+    def forward(self, p, x, tape):
+        x = jax.nn.relu(self.norm(self.stem(p, x, tape)))
+        r = x
+        x = jax.nn.relu(self.norm(self.b1a(p, x, tape)))
+        x = self.norm(self.b1b(p, x, tape))
+        x = jax.nn.relu(x + r)  # skip connection (Sec 5.7)
+        x = L.max_pool_2x2(x)
+        x = jax.nn.relu(self.norm(self.trans(p, x, tape)))
+        r = x
+        x = jax.nn.relu(self.norm(self.b2a(p, x, tape)))
+        x = self.norm(self.b2b(p, x, tape))
+        x = jax.nn.relu(x + r)
+        x = L.avg_pool_global(x)
+        return self.fc(p, x, tape)
+
+
+class VGGMini(Model):
+    """Reduced VGG (Fig 8): two conv-conv-pool stages + fc head."""
+
+    def __init__(self, c_in=3, img=32, width=8, n_classes=10):
+        super().__init__("vgg_mini")
+        w = width
+        self.c1 = self.add(L.Conv2d("c1", c_in, w, 3, padding=1))
+        self.c2 = self.add(L.Conv2d("c2", w, w, 3, padding=1))
+        self.c3 = self.add(L.Conv2d("c3", w, 2 * w, 3, padding=1))
+        self.c4 = self.add(L.Conv2d("c4", 2 * w, 2 * w, 3, padding=1))
+        self.flat = 2 * w * (img // 4) * (img // 4)
+        self.fc1 = self.add(L.Linear("fc1", self.flat, 64))
+        self.fc2 = self.add(L.Linear("fc2", 64, n_classes))
+
+    def forward(self, p, x, tape):
+        x = jax.nn.relu(self.c1(p, x, tape))
+        x = jax.nn.relu(self.c2(p, x, tape))
+        x = L.max_pool_2x2(x)
+        x = jax.nn.relu(self.c3(p, x, tape))
+        x = jax.nn.relu(self.c4(p, x, tape))
+        x = L.max_pool_2x2(x)
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(self.fc1(p, x, tape))
+        return self.fc2(p, x, tape)
+
+
+def build_model(kind, **kw):
+    """Model factory used by aot.py, tests, and the config registry."""
+    builders = {
+        "mlp": lambda: MLP(**kw),
+        "cnn": lambda: CNN(**kw),
+        "rnn": lambda: RNNModel(**kw),
+        "lstm": lambda: LSTMModel(**kw),
+        "transformer": lambda: Transformer(**kw),
+        "resnet_mini": lambda: ResNetMini(**kw),
+        "vgg_mini": lambda: VGGMini(**kw),
+    }
+    if kind not in builders:
+        raise ValueError(f"unknown model kind {kind!r}")
+    return builders[kind]()

@@ -1,0 +1,108 @@
+"""AOT pipeline: step functions lower to valid HLO text with the arg/
+output counts the Rust runtime expects, and the manifest is coherent
+with the config registry."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.configs import DATASETS, REGISTRY, naive_config_name
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_registry_is_coherent():
+    for name, cfg in REGISTRY.items():
+        assert cfg.name == name
+        assert cfg.dataset in DATASETS
+        assert cfg.batch >= 1
+        assert len(set(cfg.methods)) == len(cfg.methods)
+        if "naive1" in cfg.methods:
+            assert cfg.batch == 1, f"{name}: naive1 must be batch-1"
+
+
+def test_every_batched_config_has_a_naive_sibling():
+    for name, cfg in REGISTRY.items():
+        if cfg.batch > 1 and cfg.methods:
+            sibling = naive_config_name(name)
+            assert sibling in REGISTRY, f"{name} -> {sibling} missing"
+            assert REGISTRY[sibling].model == cfg.model
+            assert REGISTRY[sibling].model_kw == cfg.model_kw
+
+
+def test_experiment_tags_cover_all_figures():
+    tags = set()
+    for cfg in REGISTRY.values():
+        tags.update(cfg.tags)
+    for fig in ("fig5", "fig6", "fig7", "fig8", "fig9"):
+        assert fig in tags, f"no configs tagged {fig}"
+
+
+@pytest.mark.parametrize("method", ["fwd", "nonprivate", "reweight", "multiloss"])
+def test_lowering_small_config(tmp_path, method):
+    """Lower the smallest config end-to-end and check the HLO text
+    parses structurally (ENTRY, parameters, a tuple root)."""
+    cfg = REGISTRY["mlp2_mnist_b16"]
+    step, extra, outputs = aot.make_step_fn(cfg, method)
+    specs = aot.arg_specs(cfg, method, extra)
+    n_model_params = len(cfg.build_model().param_specs())
+    assert len(specs) == n_model_params + 2 + len(extra)
+    lowered = jax.jit(step).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+    # every model param + X + y (+ clip) appears as a parameter
+    assert f"parameter({len(specs) - 1})" in text
+
+
+def test_naive1_signature():
+    cfg = REGISTRY["mlp2_mnist_b1"]
+    step, extra, outputs = aot.make_step_fn(cfg, "naive1")
+    assert extra == []
+    assert outputs == ["grads", "loss", "norm"]
+    assert cfg.input_shape[0] == 1
+
+
+def test_unknown_method_rejected():
+    cfg = REGISTRY["mlp2_mnist_b16"]
+    with pytest.raises(ValueError):
+        aot.make_step_fn(cfg, "magic")
+
+
+def test_activation_elems_positive():
+    for name in ("mlp2_mnist_b32", "cnn_mnist_b32", "transformer_imdb_b32"):
+        cfg = REGISTRY[name]
+        a = aot.activation_elems_per_example(cfg)
+        assert a > 0, name
+    # CNN activations dominated by first conv feature map (20x24x24)
+    assert aot.activation_elems_per_example(REGISTRY["cnn_mnist_b32"]) > 10_000
+
+
+MANIFEST = os.path.join(
+    os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built"
+)
+def test_built_manifest_matches_registry():
+    with open(MANIFEST) as f:
+        manifest = json.load(f)
+    cfgs = manifest["configs"]
+    assert set(cfgs) == set(REGISTRY)
+    for name, entry in cfgs.items():
+        reg = REGISTRY[name]
+        assert entry["batch"] == reg.batch
+        assert set(entry["artifacts"]) == set(reg.methods), name
+        for art in entry["artifacts"].values():
+            path = os.path.join(os.path.dirname(MANIFEST), art["file"])
+            assert os.path.exists(path), art["file"]
+        # param shapes match a freshly built model
+        model = reg.build_model()
+        want = [(s.name, list(s.shape)) for s in model.param_specs()]
+        got = [(p["name"], p["shape"]) for p in entry["params"]]
+        assert got == want, f"{name} param mismatch"

@@ -1,0 +1,192 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes and dtypes. This is the CORE kernel
+correctness signal (DESIGN.md §8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    KernelBackend, bmm_outer, gram_norm, im2col_bmm, ref, sq_norm,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Each hypothesis example traces + interprets a fresh Pallas call, so
+# example counts are kept modest to bound suite runtime.
+SETTINGS = dict(max_examples=8, deadline=None)
+
+dims = st.integers(min_value=1, max_value=24)
+taus = st.integers(min_value=1, max_value=12)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+dtypes = st.sampled_from([jnp.float32])
+
+
+def rand(key, shape, dtype, scale=2.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+@given(tau=taus, n=dims, seed=seeds, dtype=dtypes)
+@settings(**SETTINGS)
+def test_sq_norm_matches_ref(tau, n, seed, dtype):
+    (k,) = keys(seed, 1)
+    x = rand(k, (tau, n), dtype)
+    got = sq_norm.sq_norm(x)
+    np.testing.assert_allclose(got, ref.sq_norm(x), rtol=1e-5, atol=1e-5)
+
+
+@given(tau=taus, m=dims, n=dims, seed=seeds, dtype=dtypes)
+@settings(**SETTINGS)
+def test_outer_sq_norm_matches_ref(tau, m, n, seed, dtype):
+    k1, k2 = keys(seed, 2)
+    dz, x = rand(k1, (tau, m), dtype), rand(k2, (tau, n), dtype)
+    got = sq_norm.outer_sq_norm(dz, x)
+    np.testing.assert_allclose(
+        got, ref.outer_sq_norm(dz, x), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(tau=taus, m=dims, n=dims, seed=seeds)
+@settings(**SETTINGS)
+def test_bmm_outer_matches_ref(tau, m, n, seed):
+    k1, k2 = keys(seed, 2)
+    dz, x = rand(k1, (tau, m), jnp.float32), rand(k2, (tau, n), jnp.float32)
+    got = bmm_outer.bmm_outer(dz, x)
+    np.testing.assert_allclose(
+        got, ref.bmm_outer(dz, x), rtol=1e-5, atol=1e-5
+    )
+
+
+@given(tau=taus, m=dims, k=dims, n=dims, seed=seeds)
+@settings(**SETTINGS)
+def test_bmm_matches_ref(tau, m, k, n, seed):
+    k1, k2 = keys(seed, 2)
+    a = rand(k1, (tau, m, k), jnp.float32, 1.0)
+    b = rand(k2, (tau, k, n), jnp.float32, 1.0)
+    got = bmm_outer.bmm(a, b)
+    np.testing.assert_allclose(got, ref.bmm(a, b), rtol=1e-4, atol=1e-4)
+
+
+@given(tau=taus, m=dims, k=dims, n=dims, seed=seeds)
+@settings(**SETTINGS)
+def test_bmm_sq_norm_fused_matches_unfused(tau, m, k, n, seed):
+    k1, k2 = keys(seed, 2)
+    a = rand(k1, (tau, m, k), jnp.float32, 1.0)
+    b = rand(k2, (tau, k, n), jnp.float32, 1.0)
+    got = bmm_outer.bmm_sq_norm(a, b)
+    want = jnp.sum(ref.bmm(a, b) ** 2, axis=(1, 2))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@given(tau=taus, s=st.integers(1, 10), m=dims, n=dims, seed=seeds)
+@settings(**SETTINGS)
+def test_gram_norm_matches_materialized(tau, s, m, n, seed):
+    k1, k2 = keys(seed, 2)
+    dz = rand(k1, (tau, s, m), jnp.float32, 1.0)
+    x = rand(k2, (tau, s, n), jnp.float32, 1.0)
+    got = gram_norm.gram_norm(dz, x)
+    want = jnp.sum(ref.seq_outer_sum(dz, x) ** 2, axis=(1, 2))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    # and the jnp gram path agrees too
+    np.testing.assert_allclose(
+        ref.gram_norm(dz, x), want, rtol=1e-3, atol=1e-3
+    )
+
+
+@given(
+    tau=st.integers(1, 4),
+    c_in=st.integers(1, 3),
+    c_out=st.integers(1, 4),
+    img=st.integers(5, 12),
+    kern=st.integers(1, 5),
+    seed=seeds,
+)
+@settings(max_examples=8, deadline=None)
+def test_conv_grads_match_autodiff(tau, c_in, c_out, img, kern, seed):
+    """Alg 3 against jax.grad ground truth: the im2col+bmm per-example
+    conv gradient must equal the real gradient of a conv layer."""
+    if kern > img:
+        kern = img
+    k1, k2, k3 = keys(seed, 3)
+    x = rand(k1, (tau, c_in, img, img), jnp.float32, 1.0)
+    w = rand(k2, (c_out, c_in, kern, kern), jnp.float32, 0.5)
+    cotangent = rand(k3, (tau, c_out, img - kern + 1, img - kern + 1),
+                     jnp.float32, 1.0)
+
+    def conv_one(w, xi):
+        return jax.lax.conv_general_dilated(
+            xi[None], w, (1, 1), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+
+    # ground truth: per-example VJP w.r.t. w with the given cotangent
+    want = []
+    for i in range(tau):
+        _, vjp = jax.vjp(lambda wi: conv_one(wi, x[i]), w)
+        want.append(vjp(cotangent[i])[0])
+    want = jnp.stack(want)
+
+    got = im2col_bmm.conv_grads(cotangent, x, kern, kern)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    # fused norm agrees
+    got_n = im2col_bmm.conv_sq_norm(cotangent, x, kern, kern)
+    want_n = jnp.sum(want ** 2, axis=(1, 2, 3, 4))
+    np.testing.assert_allclose(got_n, want_n, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 3])
+def test_conv_grads_strided(stride):
+    """Strided convolution support (used by no current model config but
+    part of the public kernel API)."""
+    k1, k2, k3 = keys(42, 3)
+    tau, c_in, c_out, img, kern = 2, 2, 3, 9, 3
+    out = (img - kern) // stride + 1
+    x = rand(k1, (tau, c_in, img, img), jnp.float32, 1.0)
+    w = rand(k2, (c_out, c_in, kern, kern), jnp.float32, 0.5)
+    cot = rand(k3, (tau, c_out, out, out), jnp.float32, 1.0)
+
+    def conv_one(w, xi):
+        return jax.lax.conv_general_dilated(
+            xi[None], w, (stride, stride), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+
+    want = []
+    for i in range(tau):
+        _, vjp = jax.vjp(lambda wi: conv_one(wi, x[i]), w)
+        want.append(vjp(cot[i])[0])
+    want = jnp.stack(want)
+    got = im2col_bmm.conv_grads(cot, x, kern, kern, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("block_rows", [None, 1, 3, 32])
+def test_sq_norm_block_shapes(block_rows):
+    """Block-size sweep: the grid decomposition must not change the
+    result (this is the L1 tuning knob)."""
+    x = rand(jax.random.PRNGKey(0), (12, 33), jnp.float32)
+    got = sq_norm.sq_norm(x, block_rows=block_rows)
+    np.testing.assert_allclose(got, ref.sq_norm(x), rtol=1e-5, atol=1e-5)
+
+
+def test_backend_dispatcher_validation():
+    with pytest.raises(ValueError):
+        KernelBackend("cuda")
+    with pytest.raises(ValueError):
+        KernelBackend("jnp", recurrent_mode="nope")
+    kb = KernelBackend("pallas", recurrent_mode="gram")
+    assert kb.use_pallas
+
+
+def test_kernels_are_jittable():
+    """Kernels must lower inside jit (the AOT requirement)."""
+    x = rand(jax.random.PRNGKey(1), (4, 8), jnp.float32)
+    dz = rand(jax.random.PRNGKey(2), (4, 6), jnp.float32)
+    f = jax.jit(lambda a, b: sq_norm.outer_sq_norm(a, b))
+    np.testing.assert_allclose(
+        f(dz, x), ref.outer_sq_norm(dz, x), rtol=1e-5, atol=1e-5
+    )

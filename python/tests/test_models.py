@@ -1,0 +1,146 @@
+"""Model-level sanity: shapes, parameter counts, tape behaviour, and
+short-horizon trainability of each architecture."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import baselines, models
+from compile.layers import Tape
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_mlp_matches_paper_architecture():
+    """Sec 6.1.1: two hidden layers of 128 and 256 units."""
+    m = models.MLP(784)
+    shapes = {s.name: s.shape for s in m.param_specs()}
+    assert shapes["fc0.w"] == (784, 128)
+    assert shapes["fc1.w"] == (128, 256)
+    assert shapes["fc2.w"] == (256, 10)
+
+
+def test_cnn_matches_paper_architecture():
+    """Sec 6.1.1: 20 kernels 5x5, then 50 kernels 5x5, fc 128."""
+    m = models.CNN()
+    shapes = {s.name: s.shape for s in m.param_specs()}
+    assert shapes["conv1.w"] == (20, 1, 5, 5)
+    assert shapes["conv2.w"] == (50, 20, 5, 5)
+    assert shapes["fc1.w"] == (800, 128)  # 50 * 4 * 4 after two pools
+
+
+def test_mlp_depth_variants():
+    for depth in (2, 4, 6, 8):
+        m = models.MLP(784, depth=depth)
+        n_fc = sum(1 for s in m.param_specs() if s.name.endswith(".w"))
+        assert n_fc == depth + 1  # hidden layers + output
+
+
+@pytest.mark.parametrize(
+    "build,x_shape,int_input",
+    [
+        (lambda: models.MLP(784), (3, 784), False),
+        (lambda: models.CNN(), (3, 1, 28, 28), False),
+        (lambda: models.RNNModel(), (3, 28, 28), False),
+        (lambda: models.LSTMModel(), (3, 28, 28), False),
+        (lambda: models.Transformer(), (3, 64), True),
+        (lambda: models.ResNetMini(), (3, 3, 32, 32), False),
+        (lambda: models.VGGMini(), (3, 3, 32, 32), False),
+    ],
+)
+def test_forward_shapes_and_loss(build, x_shape, int_input):
+    m = build()
+    params = m.init_params(0)
+    key = jax.random.PRNGKey(0)
+    x = (
+        jax.random.randint(key, x_shape, 0, 5000)
+        if int_input
+        else jax.random.normal(key, x_shape)
+    )
+    y = jnp.zeros((x_shape[0],), jnp.int32)
+    per_ex = m.loss_per_example(params, x, y)
+    assert per_ex.shape == (x_shape[0],)
+    assert bool(jnp.all(jnp.isfinite(per_ex)))
+    loss, correct = m.eval_metrics(params, x, y)
+    assert jnp.isfinite(loss)
+    assert 0 <= float(correct) <= x_shape[0]
+
+
+def test_init_is_deterministic():
+    a = models.CNN().init_params(7)
+    b = models.CNN().init_params(7)
+    c = models.CNN().init_params(8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, z) for x, z in zip(a, c))
+
+
+def test_tape_modes():
+    m = models.MLP(16, hidden=[8])
+    params = m.init_params(0)
+    x = jnp.ones((2, 16))
+    y = jnp.zeros((2,), jnp.int32)
+    # shape mode collects one tap per linear layer
+    tape = Tape(Tape.SHAPE)
+    jax.eval_shape(lambda p: m.loss_sum(p, x, y, tape), params)
+    assert len(tape.tap_specs) == 2  # fc0, fc1 (output layer)
+    keys = [k for k, _, _ in tape.tap_specs]
+    assert keys == ["fc0.z", "fc1.z"]
+    # off mode records nothing
+    off = Tape.off()
+    m.loss_sum(params, x, y, off)
+    assert off.records == [] and off.tap_specs == []
+    # grad mode consumes taps and records layer inputs
+    taps = {k: jnp.zeros(s, d) for k, s, d in tape.tap_specs}
+    grad_tape = Tape(Tape.GRAD, taps)
+    m.loss_sum(params, x, y, grad_tape)
+    assert [r[0] for r in grad_tape.records] == ["linear", "linear"]
+
+
+def test_duplicate_tap_key_rejected():
+    tape = Tape(Tape.GRAD, {"k": jnp.zeros((1,))})
+    tape.tap(jnp.zeros((1,)), "k")
+    with pytest.raises(ValueError):
+        tape.tap(jnp.zeros((1,)), "k")
+
+
+def test_models_train_to_lower_loss():
+    """A few plain-SGD steps reduce loss on a fixed batch for every
+    small architecture (catches dead gradients / wiring bugs)."""
+    for build, x_shape, int_input in [
+        (lambda: models.MLP(64, hidden=[32]), (8, 64), False),
+        (lambda: models.CNN(c_in=1, img=12), (8, 1, 12, 12), False),
+        (lambda: models.RNNModel(n_in=8, n_hidden=16), (8, 6, 8), False),
+    ]:
+        m = build()
+        params = m.init_params(0)
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, x_shape)
+        y = jax.random.randint(key, (x_shape[0],), 0, 10)
+        first = float(m.loss_mean(params, x, y))
+        for _ in range(30):
+            grads, _ = baselines.nonprivate_step(m, params, x, y)
+            params = [p - 0.5 * g for p, g in zip(params, grads)]
+        last = float(m.loss_mean(params, x, y))
+        assert last < first - 0.05, f"{m.name}: {first} -> {last}"
+
+
+def test_build_model_factory():
+    assert models.build_model("mlp", in_dim=10).name == "mlp2"
+    assert models.build_model("cnn").name == "cnn"
+    with pytest.raises(ValueError):
+        models.build_model("gpt5")
+
+
+def test_transformer_embedding_frozen():
+    """Embeddings carry no trainable parameters (paper: pretrained
+    GloVe, frozen)."""
+    m = models.Transformer()
+    names = [s.name for s in m.param_specs()]
+    assert not any("embed" in n for n in names)
+    # but attention + layernorm + ffn + head are all trainable
+    assert any("mha.wq" in n for n in names)
+    assert any("ln1.gamma" in n for n in names)
+    assert any("ff1.w" in n for n in names)
+    assert any(n.startswith("fc.") for n in names)

@@ -1,0 +1,70 @@
+//! Ablation (§Perf L2): reweight (the paper's two backward passes,
+//! Alg 1) vs reweight_direct (our extension: the weighted gradient is
+//! assembled from the SAME tapped intermediates that produced the
+//! norms — one backward pass total).
+//!
+//! Expected: direct wins by up to ~1.5-2x on models where the backward
+//! pass dominates (MLP, CNN); both remain exactly
+//! gradient-equivalent (tested in test_clipping.py).
+
+use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::{BenchOpts, Suite};
+use fastclip::coordinator::ClipMethod;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("ablation_direct");
+
+    let configs = [
+        "mlp2_mnist_b32",
+        "mlp2_mnist_b128",
+        "cnn_mnist_b32",
+        "cnn_mnist_b128",
+        "rnn_mnist_b32",
+        "lstm_mnist_b32",
+        "transformer_imdb_b32",
+    ];
+    let mut rows = Vec::new();
+    for config in configs {
+        let cfg = engine.manifest.config(config)?;
+        if !cfg.artifacts.contains_key("reweight_direct") {
+            eprintln!("  (skip {config}: no reweight_direct artifact)");
+            continue;
+        }
+        for (label, method) in [
+            ("2-backward (paper)", ClipMethod::Reweight),
+            ("1-backward (direct)", ClipMethod::ReweightDirect),
+            ("nonprivate floor", ClipMethod::NonPrivate),
+        ] {
+            let mut runner = StepRunner::new(&engine, config, method)?;
+            let name = format!("{config}/{label}");
+            let r = suite.bench(&name, BenchOpts::default(), || runner.step());
+            rows.push((config, label, r.summary.mean));
+        }
+    }
+
+    println!("\n| config | paper ms | direct ms | direct speedup | dp overhead vs nonprivate |");
+    println!("|---|---:|---:|---:|---:|");
+    for config in configs {
+        let get = |l: &str| {
+            rows.iter()
+                .find(|(c, lab, _)| *c == config && *lab == l)
+                .map(|(_, _, t)| *t * 1e3)
+        };
+        if let (Some(p), Some(d), Some(n)) = (
+            get("2-backward (paper)"),
+            get("1-backward (direct)"),
+            get("nonprivate floor"),
+        ) {
+            println!(
+                "| {} | {:.2} | {:.2} | {:.2}x | {:.2}x |",
+                config,
+                p,
+                d,
+                p / d,
+                d / n
+            );
+        }
+    }
+    suite.finish()
+}

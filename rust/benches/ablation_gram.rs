@@ -1,0 +1,50 @@
+//! Ablation: recurrent/sequence per-example gradient norms —
+//! materialized (paper Alg 4: build G_i = sum_t dz_t (x) h_t, then
+//! norm) vs our Gram-matrix extension (norm via <dZ dZ^T, H H^T>
+//! without materializing G_i).
+//!
+//! The Gram trick wins when T^2 << m*n (DESIGN.md §6): for the paper's
+//! RNN (T=28, m=n=128) it does ~7x less work per layer; for short
+//! sequences with wide layers the gap widens further.
+
+use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::{BenchOpts, Suite};
+use fastclip::coordinator::ClipMethod;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("ablation_gram");
+
+    let configs = ["rnn_mnist_b32", "lstm_mnist_b32", "transformer_imdb_b32"];
+    let mut rows = Vec::new();
+    for config in configs {
+        for (label, method) in [
+            ("materialize", ClipMethod::Reweight),
+            ("gram", ClipMethod::ReweightGram),
+        ] {
+            let mut runner = StepRunner::new(&engine, config, method)?;
+            let name = format!("{config}/{label}");
+            let r = suite.bench(&name, BenchOpts::default(), || runner.step());
+            rows.push((config, label, r.summary.mean));
+        }
+    }
+
+    println!("\n| config | materialize ms | gram ms | gram speedup |");
+    println!("|---|---:|---:|---:|");
+    for config in configs {
+        let get = |l: &str| {
+            rows.iter()
+                .find(|(c, lab, _)| *c == config && *lab == l)
+                .map(|(_, _, t)| *t * 1e3)
+                .unwrap()
+        };
+        println!(
+            "| {} | {:.2} | {:.2} | {:.2}x |",
+            config,
+            get("materialize"),
+            get("gram"),
+            get("materialize") / get("gram")
+        );
+    }
+    suite.finish()
+}

@@ -1,0 +1,52 @@
+//! Ablation: kernel backend for the ReweightGP norm computation —
+//! pure-jnp (XLA-fused, the CPU production path) vs Pallas kernels
+//! under interpret=True (the TPU-authored path).
+//!
+//! On CPU the interpret-mode Pallas path pays an emulation tax (the
+//! grid becomes an XLA while-loop); the ablation quantifies it and
+//! proves both backends produce the same training step (equivalence is
+//! separately asserted in the test suites). On a real TPU the Pallas
+//! path is the one that reaches the MXU — see DESIGN.md
+//! §Hardware-Adaptation for the static VMEM/MXU analysis.
+
+use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::{BenchOpts, Suite};
+use fastclip::coordinator::ClipMethod;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("ablation_kernels");
+
+    let configs = ["mlp2_mnist_b32", "cnn_mnist_b32", "transformer_imdb_b32"];
+    let mut rows = Vec::new();
+    for config in configs {
+        for (label, method) in [
+            ("jnp", ClipMethod::Reweight),
+            ("pallas", ClipMethod::ReweightPallas),
+        ] {
+            let mut runner = StepRunner::new(&engine, config, method)?;
+            let name = format!("{config}/{label}");
+            let r = suite.bench(&name, BenchOpts::default(), || runner.step());
+            rows.push((config, label, r.summary.mean));
+        }
+    }
+
+    println!("\n| config | jnp ms | pallas(interpret) ms | interpret tax |");
+    println!("|---|---:|---:|---:|");
+    for config in configs {
+        let get = |l: &str| {
+            rows.iter()
+                .find(|(c, lab, _)| *c == config && *lab == l)
+                .map(|(_, _, t)| *t * 1e3)
+                .unwrap()
+        };
+        println!(
+            "| {} | {:.2} | {:.2} | {:.2}x |",
+            config,
+            get("jnp"),
+            get("pallas"),
+            get("pallas") / get("jnp")
+        );
+    }
+    suite.finish()
+}

@@ -1,0 +1,61 @@
+//! Figure 5: per-epoch training time across the five architectures
+//! (MLP/CNN/RNN/LSTM on MNIST; Transformer on IMDB), batch 32, for
+//! Non-private / nxBP / multiLoss / ReweightGP.
+//!
+//! The paper reports seconds per epoch on a 1080 Ti; we report per-step
+//! means on XLA-CPU plus the per-epoch extrapolation at the paper's
+//! dataset sizes. The *shape* to reproduce: ReweightGP within a small
+//! factor of Non-private; nxBP one-to-two orders of magnitude slower.
+
+use fastclip::bench::driver::{bench_engine, figure_methods, per_epoch_seconds, StepRunner};
+use fastclip::bench::{BenchOpts, Suite};
+use fastclip::coordinator::ClipMethod;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("fig5_architectures");
+
+    // (config, paper dataset size for the per-epoch extrapolation)
+    let configs = [
+        ("mlp2_mnist_b32", 60_000),
+        ("cnn_mnist_b32", 60_000),
+        ("rnn_mnist_b32", 60_000),
+        ("lstm_mnist_b32", 60_000),
+        ("transformer_imdb_b32", 25_000),
+    ];
+
+    let mut rows = Vec::new();
+    for (config, n) in configs {
+        for method in figure_methods() {
+            let mut runner = StepRunner::new(&engine, config, method)?;
+            let opts = if method == ClipMethod::NxBp {
+                BenchOpts::heavy()
+            } else {
+                BenchOpts::default()
+            };
+            let name = format!("{config}/{}", method.name());
+            let r = suite.bench(&name, opts, || runner.step());
+            rows.push((config, n, method, r.summary.mean));
+        }
+    }
+
+    // per-epoch extrapolation + speedups (the paper's headline format)
+    println!("\n| architecture | method | step ms | est. epoch s | speedup vs nxBP |");
+    println!("|---|---|---:|---:|---:|");
+    for (config, n, method, mean) in &rows {
+        let nxbp = rows
+            .iter()
+            .find(|(c, _, m, _)| c == config && *m == ClipMethod::NxBp)
+            .map(|(_, _, _, t)| *t)
+            .unwrap();
+        println!(
+            "| {} | {} | {:.3} | {:.1} | {:.1}x |",
+            config,
+            method.name(),
+            mean * 1e3,
+            per_epoch_seconds(*mean, *n, 32),
+            nxbp / mean
+        );
+    }
+    suite.finish()
+}

@@ -1,0 +1,75 @@
+//! Figure 6: per-epoch training time vs batch size {16,32,64,128} for
+//! MLP / CNN / RNN on MNIST.
+//!
+//! Shape to reproduce (paper Sec 6.3): Non-private and ReweightGP
+//! per-epoch time *decreases* with batch size (more parallelism);
+//! nxBP stays flat (backprop runs once per example regardless).
+
+use fastclip::bench::driver::{bench_engine, figure_methods, per_epoch_seconds, StepRunner};
+use fastclip::bench::{BenchOpts, Suite};
+use fastclip::coordinator::ClipMethod;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("fig6_batch_size");
+    let n_dataset = 60_000;
+
+    let mut rows = Vec::new();
+    for model in ["mlp2", "cnn", "rnn"] {
+        for batch in [16usize, 32, 64, 128] {
+            let config = format!("{model}_mnist_b{batch}");
+            for method in figure_methods() {
+                // nxBP cost is batch-size independent per *example*;
+                // time it once per model at b=16 and reuse (paper: it
+                // loops the same batch-1 backward).
+                if method == ClipMethod::NxBp && batch != 16 {
+                    continue;
+                }
+                let opts = if method == ClipMethod::NxBp {
+                    BenchOpts::heavy()
+                } else {
+                    BenchOpts::default()
+                };
+                let mut runner = StepRunner::new(&engine, &config, method)?;
+                let name = format!("{config}/{}", method.name());
+                let r = suite.bench(&name, opts, || runner.step());
+                rows.push((model, batch, method, r.summary.mean));
+            }
+        }
+    }
+
+    println!("\n| model | batch | method | est. epoch s |");
+    println!("|---|---:|---|---:|");
+    for model in ["mlp2", "cnn", "rnn"] {
+        // nxBP per-example time from the b=16 measurement
+        let nx_per_example = rows
+            .iter()
+            .find(|(m, _, meth, _)| *m == model && *meth == ClipMethod::NxBp)
+            .map(|(_, b, _, t)| t / *b as f64)
+            .unwrap();
+        for batch in [16usize, 32, 64, 128] {
+            for method in figure_methods() {
+                let epoch_s = if method == ClipMethod::NxBp {
+                    nx_per_example * n_dataset as f64
+                } else {
+                    let t = rows
+                        .iter()
+                        .find(|(m, b, meth, _)| {
+                            *m == model && *b == batch && *meth == method
+                        })
+                        .map(|(_, _, _, t)| *t)
+                        .unwrap();
+                    per_epoch_seconds(t, n_dataset, batch)
+                };
+                println!(
+                    "| {} | {} | {} | {:.1} |",
+                    model,
+                    batch,
+                    method.name(),
+                    epoch_s
+                );
+            }
+        }
+    }
+    suite.finish()
+}

@@ -1,0 +1,83 @@
+//! Figure 7: per-epoch time vs number of hidden layers {2,4,6,8} for
+//! MLPs on MNIST, FMNIST, CIFAR10 at batch 128 — the experiment behind
+//! the paper's headline "54x-94x speedup over naive per-example
+//! clipping at batch 128".
+//!
+//! FMNIST shares MNIST's shapes, so it runs the MNIST-shaped artifact
+//! on FMNIST data (timing is shape-determined; DESIGN.md §5).
+
+use fastclip::bench::driver::{bench_engine, per_epoch_seconds, StepRunner};
+use fastclip::bench::{speedup, BenchOpts, Suite};
+use fastclip::coordinator::ClipMethod;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("fig7_depth");
+    let methods = [
+        ClipMethod::NonPrivate,
+        ClipMethod::Reweight,
+        ClipMethod::MultiLoss,
+        ClipMethod::NxBp,
+    ];
+
+    // (dataset label, artifact dataset, n for epoch extrapolation)
+    let datasets = [
+        ("mnist", "mnist", 60_000usize),
+        ("fmnist", "mnist", 60_000),
+        ("cifar10", "cifar10", 50_000),
+    ];
+
+    let mut rows = Vec::new();
+    for (label, artifact_ds, n) in datasets {
+        for depth in [2usize, 4, 6, 8] {
+            let config = format!("mlp{depth}_{artifact_ds}_b128");
+            for method in methods {
+                let opts = if method == ClipMethod::NxBp {
+                    BenchOpts::heavy()
+                } else {
+                    BenchOpts::default()
+                };
+                let mut runner = StepRunner::with_dataset(
+                    &engine,
+                    &config,
+                    method,
+                    Some(label),
+                )?;
+                let name = format!("mlp{depth}_{label}_b128/{}", method.name());
+                let r = suite.bench(&name, opts, || runner.step());
+                rows.push((label, depth, method, n, r.summary.mean));
+            }
+        }
+    }
+
+    println!("\n| dataset | depth | reweight epoch s | nxbp epoch s | speedup |");
+    println!("|---|---:|---:|---:|---:|");
+    let mut best: f64 = 0.0;
+    for (label, _, n) in datasets {
+        for depth in [2usize, 4, 6, 8] {
+            let get = |m: ClipMethod| {
+                rows.iter()
+                    .find(|(l, d, meth, _, _)| {
+                        *l == label && *d == depth && *meth == m
+                    })
+                    .map(|(_, _, _, _, t)| *t)
+                    .unwrap()
+            };
+            let rw = get(ClipMethod::Reweight);
+            let nx = get(ClipMethod::NxBp);
+            let s = speedup(nx, rw);
+            best = best.max(s);
+            println!(
+                "| {} | {} | {:.1} | {:.1} | {:.1}x |",
+                label,
+                depth,
+                per_epoch_seconds(rw, n, 128),
+                per_epoch_seconds(nx, n, 128),
+                s
+            );
+        }
+    }
+    println!("\nheadline: max ReweightGP speedup over nxBP at batch 128 = {best:.1}x");
+    println!("(paper reports 54x-94x on a 1080 Ti; shape, not absolute, is the target)");
+    suite.finish()
+}

@@ -1,0 +1,71 @@
+//! Figure 8: deep conv nets (ResNetMini / VGGMini stand-ins for
+//! ResNet18/101, VGG11/16 — DESIGN.md §5) on LSUN-like images at two
+//! sizes, small batch.
+//!
+//! Shape to reproduce: ReweightGP beats nxBP and multiLoss everywhere;
+//! the advantage shrinks as image size grows; multiLoss hits the
+//! memory wall first (reported via the analytic model — CPU doesn't
+//! OOM — as the paper's "missing bar").
+
+use fastclip::bench::driver::{bench_engine, figure_methods, StepRunner};
+use fastclip::bench::{speedup, BenchOpts, Suite};
+use fastclip::coordinator::{memory, ClipMethod};
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("fig8_deep_nets");
+
+    let configs = [
+        "resnet_mini_lsun32_b8",
+        "resnet_mini_lsun64_b8",
+        "vgg_mini_lsun32_b8",
+        "vgg_mini_lsun64_b8",
+    ];
+
+    let mut rows = Vec::new();
+    for config in configs {
+        for method in figure_methods() {
+            let opts = if method == ClipMethod::NxBp {
+                BenchOpts::heavy()
+            } else {
+                BenchOpts::default()
+            };
+            let mut runner = StepRunner::new(&engine, config, method)?;
+            let name = format!("{config}/{}", method.name());
+            let r = suite.bench(&name, opts, || runner.step());
+            rows.push((config, method, r.summary.mean));
+        }
+    }
+
+    println!("\n| net | reweight ms | multiloss ms | nxbp ms | rw speedup vs nxbp |");
+    println!("|---|---:|---:|---:|---:|");
+    for config in configs {
+        let get = |m: ClipMethod| {
+            rows.iter()
+                .find(|(c, meth, _)| *c == config && *meth == m)
+                .map(|(_, _, t)| *t * 1e3)
+                .unwrap()
+        };
+        println!(
+            "| {} | {:.2} | {:.2} | {:.2} | {:.1}x |",
+            config,
+            get(ClipMethod::Reweight),
+            get(ClipMethod::MultiLoss),
+            get(ClipMethod::NxBp),
+            speedup(get(ClipMethod::NxBp), get(ClipMethod::Reweight)),
+        );
+    }
+
+    // the paper's missing multiLoss bars: analytic memory wall at a
+    // GPU-sized budget for a paper-scale network footprint
+    println!("\nmemory wall (analytic, 11 GiB budget, ResNet101-scale footprint):");
+    let fp = memory::Footprint { p: 44_000_000, a: 60_000_000, i: 3 * 256 * 256 };
+    for m in ["nonprivate", "reweight", "multiloss", "nxbp"] {
+        println!(
+            "  {:<11} max batch = {}",
+            m,
+            memory::max_batch(m, fp, 11 << 30)
+        );
+    }
+    suite.finish()
+}

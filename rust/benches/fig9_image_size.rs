@@ -1,0 +1,71 @@
+//! Figure 9: processing time vs image resolution for the ResNet
+//! stand-in at batch 16 (paper: ResNet18, 32px -> 256px; here
+//! 16px -> 64px, same quadratic activation growth).
+//!
+//! Shape to reproduce: ReweightGP's advantage over nxBP *decreases*
+//! with image size — the extra per-layer norm work scales with the
+//! (quadratically growing) activation maps.
+
+use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::{speedup, BenchOpts, Suite};
+use fastclip::coordinator::ClipMethod;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("fig9_image_size");
+
+    let methods = [
+        ClipMethod::NonPrivate,
+        ClipMethod::Reweight,
+        ClipMethod::MultiLoss,
+        ClipMethod::NxBp,
+    ];
+
+    let mut rows = Vec::new();
+    for img in [16usize, 32, 48, 64] {
+        let config = format!("resnet_mini_lsun{img}_b16");
+        for method in methods {
+            let opts = if method == ClipMethod::NxBp {
+                BenchOpts::heavy()
+            } else {
+                BenchOpts::default()
+            };
+            let mut runner = StepRunner::new(&engine, &config, method)?;
+            let name = format!("{img}px/{}", method.name());
+            let r = suite.bench(&name, opts, || runner.step());
+            rows.push((img, method, r.summary.mean));
+        }
+    }
+
+    println!("\n| image | nonprivate ms | reweight ms | nxbp ms | rw/np overhead | rw speedup vs nxbp |");
+    println!("|---|---:|---:|---:|---:|---:|");
+    let mut speedups = Vec::new();
+    for img in [16usize, 32, 48, 64] {
+        let get = |m: ClipMethod| {
+            rows.iter()
+                .find(|(i, meth, _)| *i == img && *meth == m)
+                .map(|(_, _, t)| *t * 1e3)
+                .unwrap()
+        };
+        let s = speedup(get(ClipMethod::NxBp), get(ClipMethod::Reweight));
+        speedups.push((img, s));
+        println!(
+            "| {}px | {:.2} | {:.2} | {:.2} | {:.2}x | {:.1}x |",
+            img,
+            get(ClipMethod::NonPrivate),
+            get(ClipMethod::Reweight),
+            get(ClipMethod::NxBp),
+            get(ClipMethod::Reweight) / get(ClipMethod::NonPrivate),
+            s
+        );
+    }
+    println!(
+        "\nadvantage trend (paper: decreasing with resolution): {}",
+        speedups
+            .iter()
+            .map(|(i, s)| format!("{i}px={s:.1}x"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    suite.finish()
+}

@@ -1,0 +1,99 @@
+//! Sec 6.7 (memory): "largest batch before OOM" via the analytic
+//! model + real measured peak-RSS deltas around actual runs.
+//!
+//! Paper reference points (ResNet101 @ 256px, 11 GiB): non-private
+//! fails at 48, ReweightGP at 36 (~25% overhead), multiLoss at 18;
+//! nxBP is batch-size-insensitive. ReweightGP on ResNet18 @ 32px ran
+//! at batch 500.
+
+use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::Suite;
+use fastclip::coordinator::{memory, ClipMethod};
+use fastclip::util;
+
+fn main() -> anyhow::Result<()> {
+    let engine = bench_engine();
+    let mut suite = Suite::new("tab_memory");
+
+    // ---- 1. analytic model at paper scale ---------------------------
+    println!("## analytic max-batch (11 GiB budget)\n");
+    println!("| footprint | nonprivate | reweight | multiloss | nxbp |");
+    println!("|---|---:|---:|---:|---:|");
+    let scenarios = [
+        ("resnet101 @256px (paper)", memory::Footprint {
+            p: 44_000_000,
+            a: 60_000_000,
+            i: 3 * 256 * 256,
+        }),
+        ("resnet18 @32px (paper lower end)", memory::Footprint {
+            p: 11_000_000,
+            a: 1_500_000,
+            i: 3 * 32 * 32,
+        }),
+    ];
+    for (label, fp) in scenarios {
+        let mb = |m: &str| memory::max_batch(m, fp, 11 << 30);
+        println!(
+            "| {} | {} | {} | {} | {} |",
+            label,
+            mb("nonprivate"),
+            mb("reweight"),
+            mb("multiloss"),
+            mb("nxbp")
+        );
+    }
+
+    // ---- 2. model applied to our actual configs ---------------------
+    println!("\n## analytic max-batch for repo configs (2 GiB budget)\n");
+    println!("| config | nonprivate | reweight | multiloss | nxbp |");
+    println!("|---|---:|---:|---:|---:|");
+    for name in [
+        "resnet_mini_lsun64_b8",
+        "vgg_mini_lsun64_b8",
+        "cnn_mnist_b32",
+        "mlp2_mnist_b32",
+    ] {
+        let cfg = engine.manifest.config(name)?;
+        let fp = memory::Footprint::of(cfg, cfg.act_elems_per_example as u64);
+        let mb = |m: &str| memory::max_batch(m, fp, 2 << 30);
+        println!(
+            "| {} | {} | {} | {} | {} |",
+            name,
+            mb("nonprivate"),
+            mb("reweight"),
+            mb("multiloss"),
+            mb("nxbp")
+        );
+    }
+
+    // ---- 3. measured peak RSS deltas around real runs ---------------
+    println!("\n## measured peak-RSS growth while running each method\n");
+    let config = "resnet_mini_lsun64_b8";
+    println!("(config {config}; RSS is cumulative — methods run in increasing-footprint order)\n");
+    for method in [
+        ClipMethod::NxBp,
+        ClipMethod::NonPrivate,
+        ClipMethod::Reweight,
+        ClipMethod::MultiLoss,
+    ] {
+        let before = util::peak_rss_bytes().unwrap_or(0);
+        let mut runner = StepRunner::new(&engine, config, method)?;
+        for _ in 0..3 {
+            runner.step();
+        }
+        let after = util::peak_rss_bytes().unwrap_or(0);
+        let delta = after.saturating_sub(before);
+        println!(
+            "  {:<11} peak RSS {} (+{})",
+            method.name(),
+            util::fmt_bytes(after),
+            util::fmt_bytes(delta)
+        );
+        suite.record(
+            &format!("{config}/{}/rss_delta", method.name()),
+            delta as f64 / 1e6, // store MB in the ms field; noted
+            vec![("unit".into(), "MB (not ms)".into())],
+        );
+    }
+    suite.finish()
+}

@@ -1,0 +1,100 @@
+//! Shared driver for the per-figure bench targets: wraps one
+//! (config, method) pair into a reusable "time one training step"
+//! closure with staged data and warm executables.
+
+use crate::coordinator::{stage_batch, ClipMethod, GradComputer};
+use crate::data;
+use crate::runtime::{
+    artifacts_dir, init_params_glorot, BatchStage, Engine, ParamStore,
+};
+use anyhow::Result;
+
+/// Everything needed to repeatedly execute one step of one method.
+pub struct StepRunner {
+    computer: GradComputer,
+    params: ParamStore,
+    stage: BatchStage,
+    clip: f32,
+    pub batch: usize,
+}
+
+impl StepRunner {
+    pub fn new(engine: &Engine, config: &str, method: ClipMethod) -> Result<StepRunner> {
+        StepRunner::with_dataset(engine, config, method, None)
+    }
+
+    /// `dataset_override` runs the same artifact on a different (shape-
+    /// compatible) dataset — e.g. the MNIST-shaped MLP on FMNIST data
+    /// for Fig 7 (timing is shape-determined; data comes along for
+    /// honesty).
+    pub fn with_dataset(
+        engine: &Engine,
+        config: &str,
+        method: ClipMethod,
+        dataset_override: Option<&str>,
+    ) -> Result<StepRunner> {
+        let cfg = engine.manifest.config(config)?.clone();
+        let dataset = dataset_override.unwrap_or(&cfg.dataset);
+        let ds = data::load_dataset(dataset, cfg.batch.max(256), 3)?;
+        anyhow::ensure!(
+            ds.example_len() * cfg.batch == cfg.input_elems(),
+            "dataset {dataset} shape does not match config {config}"
+        );
+        let mut stage = BatchStage::for_config(&cfg);
+        let batch: Vec<usize> = (0..cfg.batch).collect();
+        stage_batch(&ds, &batch, &mut stage);
+        let params =
+            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 5)))?;
+        let computer = GradComputer::new(engine, config, method)?;
+        Ok(StepRunner {
+            computer,
+            params,
+            stage,
+            clip: 1.0,
+            batch: cfg.batch,
+        })
+    }
+
+    /// One full gradient computation (what the figures time).
+    pub fn step(&mut self) {
+        let out = self
+            .computer
+            .compute(&mut self.params, &self.stage, self.clip)
+            .expect("bench step failed");
+        std::hint::black_box(out.loss);
+    }
+}
+
+/// Shared engine for bench targets.
+pub fn bench_engine() -> Engine {
+    Engine::from_dir(&artifacts_dir()).expect(
+        "artifacts not found — run `make artifacts` before `cargo bench`",
+    )
+}
+
+/// Extrapolate a per-step time to the paper's per-epoch metric.
+pub fn per_epoch_seconds(step_mean_s: f64, dataset_n: usize, tau: usize) -> f64 {
+    step_mean_s * (dataset_n as f64 / tau as f64)
+}
+
+/// The four strategies every figure compares.
+pub fn figure_methods() -> [ClipMethod; 4] {
+    [
+        ClipMethod::NonPrivate,
+        ClipMethod::Reweight,
+        ClipMethod::MultiLoss,
+        ClipMethod::NxBp,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_extrapolation() {
+        // 10ms steps, 60000 examples, batch 32 => 1875 steps => 18.75 s
+        let s = per_epoch_seconds(0.010, 60_000, 32);
+        assert!((s - 18.75).abs() < 1e-9);
+    }
+}

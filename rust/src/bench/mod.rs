@@ -1,0 +1,228 @@
+//! benchkit — the measurement harness behind every `cargo bench`
+//! target (the offline crate set has no criterion; this is the
+//! replacement, tuned for whole-step measurements rather than
+//! nanosecond microbenches).
+//!
+//! Usage pattern in a bench target:
+//!
+//! ```ignore
+//! let mut suite = Suite::new("fig5_architectures");
+//! suite.bench("mlp2/reweight", opts, || { ... one step ... });
+//! suite.finish(); // prints the table + writes bench_out/<name>.json
+//! ```
+
+pub mod driver;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// stop once this much measurement time has accumulated
+    pub target_seconds: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_seconds: 2.0,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Scale for expensive cases (nxBP on big models): fewer, longer
+    /// iterations.
+    pub fn heavy() -> BenchOpts {
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 30,
+            target_seconds: 3.0,
+        }
+    }
+
+    /// Honour FASTCLIP_BENCH_FAST=1 (CI smoke mode).
+    pub fn from_env(self) -> BenchOpts {
+        if std::env::var("FASTCLIP_BENCH_FAST").as_deref() == Ok("1") {
+            BenchOpts {
+                warmup_iters: 1,
+                min_iters: 2,
+                max_iters: 3,
+                target_seconds: 0.2,
+            }
+        } else {
+            self
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+    /// free-form key=value annotations carried into the report
+    pub notes: Vec<(String, String)>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+}
+
+/// A named collection of benchmark measurements producing one table.
+pub struct Suite {
+    pub name: String,
+    pub results: Vec<BenchResult>,
+    started: Instant,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Suite {
+        eprintln!("## bench suite: {name}");
+        Suite { name: name.to_string(), results: Vec::new(), started: Instant::now() }
+    }
+
+    /// Measure `f` (one invocation = one iteration).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, opts: BenchOpts, mut f: F) -> &BenchResult {
+        let opts = opts.from_env();
+        for _ in 0..opts.warmup_iters {
+            f();
+        }
+        let mut times = Vec::new();
+        let t0 = Instant::now();
+        while times.len() < opts.max_iters
+            && (times.len() < opts.min_iters
+                || t0.elapsed().as_secs_f64() < opts.target_seconds)
+        {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&times);
+        eprintln!(
+            "  {:<44} {:>10.3} ms/iter  (p50 {:.3}, p95 {:.3}, n={})",
+            name,
+            summary.mean * 1e3,
+            summary.p50 * 1e3,
+            summary.p95 * 1e3,
+            times.len()
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            summary,
+            notes: Vec::new(),
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Record a precomputed measurement (e.g. derived quantities such
+    /// as per-epoch extrapolations or memory-model outputs).
+    pub fn record(&mut self, name: &str, value_ms: f64, notes: Vec<(String, String)>) {
+        eprintln!("  {:<44} {:>10.3} ms (derived)", name, value_ms);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 0,
+            summary: Summary::of(&[value_ms / 1e3]),
+            notes,
+        });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Print a markdown table and persist JSON under bench_out/.
+    pub fn finish(self) -> anyhow::Result<()> {
+        println!("\n### {} ({:.1}s total)\n", self.name, self.started.elapsed().as_secs_f64());
+        println!("| case | mean ms | p50 ms | p95 ms | iters |");
+        println!("|---|---:|---:|---:|---:|");
+        for r in &self.results {
+            println!(
+                "| {} | {:.3} | {:.3} | {:.3} | {} |",
+                r.name,
+                r.summary.mean * 1e3,
+                r.summary.p50 * 1e3,
+                r.summary.p95 * 1e3,
+                r.iters
+            );
+        }
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str().into());
+            o.set("mean_ms", (r.summary.mean * 1e3).into());
+            o.set("p50_ms", (r.summary.p50 * 1e3).into());
+            o.set("p95_ms", (r.summary.p95 * 1e3).into());
+            o.set("iters", r.iters.into());
+            for (k, v) in &r.notes {
+                o.set(k, v.as_str().into());
+            }
+            arr.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("suite", self.name.as_str().into());
+        root.set("results", Json::Arr(arr));
+        let path = std::path::PathBuf::from("bench_out")
+            .join(format!("{}.json", self.name));
+        crate::util::write_file(&path, &root.to_string_pretty())?;
+        eprintln!("(json: {})", path.display());
+        Ok(())
+    }
+}
+
+/// Speedup helper: a / b with guard.
+pub fn speedup(slow_ms: f64, fast_ms: f64) -> f64 {
+    if fast_ms <= 0.0 {
+        f64::NAN
+    } else {
+        slow_ms / fast_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_respects_iteration_bounds() {
+        let mut s = Suite::new("test_suite");
+        let mut count = 0usize;
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 5,
+            target_seconds: 0.0,
+        };
+        let r = s.bench("noop", opts, || {
+            count += 1;
+        });
+        assert!(r.iters >= 3 && r.iters <= 5);
+        assert_eq!(count, r.iters + 1); // + warmup
+    }
+
+    #[test]
+    fn speedup_math() {
+        assert!((speedup(100.0, 10.0) - 10.0).abs() < 1e-12);
+        assert!(speedup(1.0, 0.0).is_nan());
+    }
+
+    #[test]
+    fn suite_lookup() {
+        let mut s = Suite::new("lookup");
+        s.record("a", 5.0, vec![]);
+        assert!(s.get("a").is_some());
+        assert!(s.get("b").is_none());
+        assert!((s.get("a").unwrap().mean_ms() - 5.0).abs() < 1e-9);
+    }
+}

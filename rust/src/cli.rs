@@ -1,0 +1,126 @@
+//! Declarative-ish CLI flag parsing (no `clap` offline): subcommand +
+//! `--key value` / `--flag` arguments with typed accessors.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first non-flag token is the subcommand;
+    /// `--key value` pairs and bare `--switch`es follow.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let key = key.to_string();
+                // value if next token exists and is not a flag
+                let is_switch = match it.peek() {
+                    None => true,
+                    Some(next) => next.starts_with("--"),
+                };
+                if is_switch {
+                    out.flags.insert(key, "true".to_string());
+                } else {
+                    out.flags.insert(key, it.next().unwrap());
+                }
+            } else if out.subcommand.is_empty() {
+                out.subcommand = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.str_opt(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --config mlp2_mnist_b32 --steps 100 --poisson --lr 0.001");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.str_opt("config"), Some("mlp2_mnist_b32"));
+        assert_eq!(a.u64_or("steps", 0).unwrap(), 100);
+        assert!(a.bool("poisson"));
+        assert!(!a.bool("missing"));
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_at_end_and_before_flag() {
+        let a = parse("bench --fast --config x");
+        assert!(a.bool("fast"));
+        assert_eq!(a.str_opt("config"), Some("x"));
+        let b = parse("bench --config x --fast");
+        assert!(b.bool("fast"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("train");
+        assert_eq!(a.f64_or("clip", 1.0).unwrap(), 1.0);
+        assert!(a.require("config").is_err());
+        let bad = parse("train --steps abc");
+        assert!(bad.u64_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("inspect cfg1 cfg2");
+        assert_eq!(a.positional, vec!["cfg1", "cfg2"]);
+    }
+}

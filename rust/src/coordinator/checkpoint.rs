@@ -1,0 +1,153 @@
+//! Checkpointing: parameters as raw little-endian f32 (`.bin`) plus a
+//! JSON sidecar with run metadata (step, accountant state inputs,
+//! optimizer name). Resumable and Python-free.
+
+use crate::runtime::{ConfigSpec, ParamStore};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct CheckpointMeta {
+    pub config: String,
+    pub method: String,
+    pub step: u64,
+    pub sampling_rate: f64,
+    pub sigma: f64,
+    pub clip: f64,
+    pub seed: u64,
+}
+
+pub fn save(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    params: &ParamStore,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut bin = std::fs::File::create(dir.join("params.bin"))?;
+    let mut total = 0usize;
+    for v in &params.host {
+        // safe: f32 slices serialize as raw LE bytes on all our targets
+        let bytes: Vec<u8> = v.iter().flat_map(|f| f.to_le_bytes()).collect();
+        bin.write_all(&bytes)?;
+        total += v.len();
+    }
+    let mut j = Json::obj();
+    j.set("config", meta.config.as_str().into());
+    j.set("method", meta.method.as_str().into());
+    j.set("step", (meta.step as usize).into());
+    j.set("sampling_rate", meta.sampling_rate.into());
+    j.set("sigma", meta.sigma.into());
+    j.set("clip", meta.clip.into());
+    j.set("seed", (meta.seed as usize).into());
+    j.set("param_elems", total.into());
+    crate::util::write_file(&dir.join("meta.json"), &j.to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load(dir: &Path, cfg: &ConfigSpec) -> Result<(CheckpointMeta, Vec<f32>)> {
+    let meta_text = crate::util::read_file(&dir.join("meta.json"))?;
+    let j = Json::parse(&meta_text).context("parsing checkpoint meta")?;
+    let meta = CheckpointMeta {
+        config: j.get("config").as_str().unwrap_or("").to_string(),
+        method: j.get("method").as_str().unwrap_or("").to_string(),
+        step: j.get("step").as_usize().unwrap_or(0) as u64,
+        sampling_rate: j.get("sampling_rate").as_f64().unwrap_or(0.0),
+        sigma: j.get("sigma").as_f64().unwrap_or(0.0),
+        clip: j.get("clip").as_f64().unwrap_or(1.0),
+        seed: j.get("seed").as_usize().unwrap_or(0) as u64,
+    };
+    if meta.config != cfg.name {
+        bail!(
+            "checkpoint is for config {:?}, expected {:?}",
+            meta.config,
+            cfg.name
+        );
+    }
+    let mut f = std::fs::File::open(dir.join("params.bin"))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if bytes.len() != cfg.param_elems() * 4 {
+        bail!(
+            "params.bin has {} bytes, expected {}",
+            bytes.len(),
+            cfg.param_elems() * 4
+        );
+    }
+    let flat: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((meta, flat))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    fn cfg() -> ConfigSpec {
+        ConfigSpec {
+            name: "ckpt_test".into(),
+            model: "mlp".into(),
+            dataset: "mnist".into(),
+            batch: 2,
+            n_classes: 10,
+            tags: vec![],
+            input_shape: vec![2, 4],
+            input_dtype: "f32".into(),
+            act_elems_per_example: 0,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![4, 3] },
+                ParamSpec { name: "b".into(), shape: vec![3] },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = cfg();
+        let init: Vec<f32> = (0..15).map(|i| i as f32 * 0.5).collect();
+        let ps = ParamStore::new(&c, Some(&init)).unwrap();
+        let meta = CheckpointMeta {
+            config: "ckpt_test".into(),
+            method: "reweight".into(),
+            step: 42,
+            sampling_rate: 0.01,
+            sigma: 1.1,
+            clip: 1.0,
+            seed: 7,
+        };
+        let dir = std::env::temp_dir().join("fastclip_ckpt_test");
+        save(&dir, &meta, &ps).unwrap();
+        let (m2, flat) = load(&dir, &c).unwrap();
+        assert_eq!(m2.step, 42);
+        assert_eq!(m2.method, "reweight");
+        assert!((m2.sigma - 1.1).abs() < 1e-12);
+        assert_eq!(flat, init);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_config_rejected() {
+        let c = cfg();
+        let ps = ParamStore::new(&c, None).unwrap();
+        let meta = CheckpointMeta {
+            config: "ckpt_test".into(),
+            method: "reweight".into(),
+            step: 1,
+            sampling_rate: 0.0,
+            sigma: 0.0,
+            clip: 1.0,
+            seed: 0,
+        };
+        let dir = std::env::temp_dir().join("fastclip_ckpt_test2");
+        save(&dir, &meta, &ps).unwrap();
+        let mut other = cfg();
+        other.name = "different".into();
+        assert!(load(&dir, &other).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

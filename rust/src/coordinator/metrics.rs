@@ -1,0 +1,192 @@
+//! Training metrics: per-step wall-time breakdown and run-level
+//! aggregates, exportable as JSON.
+
+use crate::util::json::Json;
+use crate::util::stats::{Ema, Summary};
+use std::time::Instant;
+
+/// Phases of one training step (the --profile breakdown).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Gather,
+    Execute,
+    Noise,
+    Update,
+}
+
+const PHASES: [Phase; 4] = [Phase::Gather, Phase::Execute, Phase::Noise, Phase::Update];
+
+impl Phase {
+    fn idx(self) -> usize {
+        match self {
+            Phase::Gather => 0,
+            Phase::Execute => 1,
+            Phase::Noise => 2,
+            Phase::Update => 3,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Phase::Gather => "gather",
+            Phase::Execute => "execute",
+            Phase::Noise => "noise",
+            Phase::Update => "update",
+        }
+    }
+}
+
+/// Collects per-step timings and loss.
+pub struct Metrics {
+    pub step_times: Vec<f64>,
+    phase_totals: [f64; 4],
+    pub loss_ema: Ema,
+    pub losses: Vec<f32>,
+    pub eval_points: Vec<(u64, f32, f32)>, // (step, eval loss, accuracy)
+    run_start: Instant,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            step_times: Vec::new(),
+            phase_totals: [0.0; 4],
+            loss_ema: Ema::new(0.05),
+            losses: Vec::new(),
+            eval_points: Vec::new(),
+            run_start: Instant::now(),
+        }
+    }
+
+    pub fn record_step(&mut self, total_s: f64, loss: f32) {
+        self.step_times.push(total_s);
+        self.losses.push(loss);
+        self.loss_ema.update(loss as f64);
+    }
+
+    pub fn record_phase(&mut self, phase: Phase, secs: f64) {
+        self.phase_totals[phase.idx()] += secs;
+    }
+
+    pub fn record_eval(&mut self, step: u64, loss: f32, acc: f32) {
+        self.eval_points.push((step, loss, acc));
+    }
+
+    pub fn steps(&self) -> usize {
+        self.step_times.len()
+    }
+
+    pub fn wall_seconds(&self) -> f64 {
+        self.run_start.elapsed().as_secs_f64()
+    }
+
+    pub fn step_summary(&self) -> Option<Summary> {
+        if self.step_times.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.step_times))
+        }
+    }
+
+    /// Phase breakdown as (name, total seconds, share).
+    pub fn phase_breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total: f64 = self.phase_totals.iter().sum();
+        PHASES
+            .iter()
+            .map(|&p| {
+                let t = self.phase_totals[p.idx()];
+                (p.name(), t, if total > 0.0 { t / total } else { 0.0 })
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("steps", self.steps().into());
+        o.set("wall_seconds", self.wall_seconds().into());
+        if let Some(s) = self.step_summary() {
+            let mut t = Json::obj();
+            t.set("mean_ms", (s.mean * 1e3).into());
+            t.set("p50_ms", (s.p50 * 1e3).into());
+            t.set("p95_ms", (s.p95 * 1e3).into());
+            o.set("step_time", t);
+        }
+        let mut phases = Json::obj();
+        for (name, total, share) in self.phase_breakdown() {
+            let mut p = Json::obj();
+            p.set("seconds", total.into());
+            p.set("share", share.into());
+            phases.set(name, p);
+        }
+        o.set("phases", phases);
+        if let Some(l) = self.loss_ema.get() {
+            o.set("loss_ema", l.into());
+        }
+        o.set(
+            "eval",
+            Json::Arr(
+                self.eval_points
+                    .iter()
+                    .map(|&(s, l, a)| {
+                        Json::from_pairs(vec![
+                            ("step", (s as usize).into()),
+                            ("loss", (l as f64).into()),
+                            ("acc", (a as f64).into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII-ish phase timer.
+pub struct PhaseTimer {
+    start: Instant,
+}
+
+impl PhaseTimer {
+    pub fn start() -> PhaseTimer {
+        PhaseTimer { start: Instant::now() }
+    }
+
+    pub fn stop(self, metrics: &mut Metrics, phase: Phase) -> f64 {
+        let s = self.start.elapsed().as_secs_f64();
+        metrics.record_phase(phase, s);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_shares_sum_to_one() {
+        let mut m = Metrics::new();
+        m.record_phase(Phase::Gather, 1.0);
+        m.record_phase(Phase::Execute, 3.0);
+        let shares: f64 = m.phase_breakdown().iter().map(|(_, _, s)| s).sum();
+        assert!((shares - 1.0).abs() < 1e-12);
+        assert!((m.phase_breakdown()[1].2 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_export_contains_fields() {
+        let mut m = Metrics::new();
+        m.record_step(0.010, 2.3);
+        m.record_step(0.012, 2.1);
+        m.record_eval(1, 2.0, 0.5);
+        let j = m.to_json();
+        assert_eq!(j.get("steps").as_usize(), Some(2));
+        assert!(j.get("step_time").get("mean_ms").as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("eval").as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the DP-SGD training orchestrator around the AOT
+//! compute artifacts — method dispatch (the four clipping strategies),
+//! the training loop (paper Alg 1), metrics, checkpoints, and the
+//! memory model for the Sec 6.7 experiment.
+
+pub mod checkpoint;
+pub mod memory;
+pub mod methods;
+pub mod metrics;
+pub mod trainer;
+
+pub use methods::{ClipMethod, GradComputer};
+pub use metrics::{Metrics, Phase, PhaseTimer};
+pub use trainer::{stage_batch, train, TrainOptions, TrainReport};

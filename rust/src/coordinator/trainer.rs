@@ -1,0 +1,316 @@
+//! The DP training loop — paper Algorithm 1 end to end.
+//!
+//! Per step: sample a minibatch (shuffle-partition or Poisson), stage
+//! it, run the selected gradient-clipping method's executable(s), add
+//! calibrated Gaussian noise (the mechanism of Lemma 2), update with
+//! DP-Adam/SGD, and charge the RDP accountant. Python never runs here.
+
+use super::methods::{ClipMethod, GradComputer};
+use super::metrics::{Metrics, Phase, PhaseTimer};
+use crate::data::{self, Dataset, Features, PoissonSampler, ShuffleBatcher};
+use crate::optim;
+use crate::privacy::{calibrate_sigma, noise_stddev_for_mean, RdpAccountant};
+use crate::runtime::{
+    init_params_glorot, run_step, BatchStage, Engine, ParamStore,
+};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub config: String,
+    pub method: ClipMethod,
+    pub steps: u64,
+    /// synthetic dataset size (sampling rate q = batch / n)
+    pub dataset_n: usize,
+    pub lr: f64,
+    pub clip: f64,
+    /// noise multiplier; ignored when target_eps is set (calibrated)
+    pub sigma: f64,
+    pub target_eps: Option<f64>,
+    pub delta: f64,
+    pub optimizer: String,
+    pub seed: u64,
+    /// 0 = no eval
+    pub eval_every: u64,
+    pub log_every: u64,
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Poisson subsampling (the regime the RDP analysis assumes)
+    /// instead of shuffle-partition
+    pub poisson: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            config: "mlp2_mnist_b32".into(),
+            method: ClipMethod::Reweight,
+            steps: 100,
+            dataset_n: 2048,
+            lr: 1e-3,
+            clip: 1.0,
+            sigma: 1.1,
+            target_eps: None,
+            delta: 1e-5,
+            optimizer: "adam".into(),
+            seed: 0,
+            eval_every: 0,
+            log_every: 20,
+            checkpoint_dir: None,
+            poisson: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TrainReport {
+    pub config: String,
+    pub method: ClipMethod,
+    pub steps: u64,
+    pub final_loss_ema: f64,
+    pub losses: Vec<f32>,
+    pub eval_points: Vec<(u64, f32, f32)>,
+    pub epsilon: Option<(f64, u32)>,
+    pub sigma: f64,
+    pub sampling_rate: f64,
+    pub wall_seconds: f64,
+    pub mean_step_ms: f64,
+    pub metrics_json: crate::util::json::Json,
+    pub peak_rss_bytes: Option<u64>,
+}
+
+enum Sampler {
+    Shuffle(ShuffleBatcher),
+    Poisson(PoissonSampler),
+}
+
+impl Sampler {
+    fn next_batch(&mut self) -> Vec<usize> {
+        match self {
+            Sampler::Shuffle(b) => b.next_batch(),
+            Sampler::Poisson(p) => p.next_batch(),
+        }
+    }
+}
+
+pub fn train(engine: &Engine, opts: &TrainOptions) -> Result<TrainReport> {
+    let cfg = engine.manifest.config(&opts.config)?.clone();
+    let tau = cfg.batch;
+    anyhow::ensure!(
+        opts.dataset_n >= tau,
+        "dataset_n {} < batch {}",
+        opts.dataset_n,
+        tau
+    );
+    let q = tau as f64 / opts.dataset_n as f64;
+
+    // --- noise calibration (Alg 1, line 1) --------------------------
+    let sigma = match opts.target_eps {
+        Some(eps) if opts.method.is_private() => {
+            let s = calibrate_sigma(q, opts.steps, eps, opts.delta)
+                .context("target epsilon infeasible at sigma<=200")?;
+            crate::log_info!(
+                "calibrated sigma={:.3} for eps<={} delta={} over {} steps (q={:.4})",
+                s, eps, opts.delta, opts.steps, q
+            );
+            s
+        }
+        _ => opts.sigma,
+    };
+
+    // --- data --------------------------------------------------------
+    let ds = data::load_dataset(&cfg.dataset, opts.dataset_n, opts.seed)?;
+    let eval_ds = if opts.eval_every > 0 {
+        Some(data::load_dataset(&cfg.dataset, tau * 4, opts.seed + 1)?)
+    } else {
+        None
+    };
+
+    // --- executables / params / optimizer ----------------------------
+    let mut computer = GradComputer::new(engine, &opts.config, opts.method)?;
+    let fwd_exe = if opts.eval_every > 0 {
+        Some(engine.load(&cfg, "fwd")?)
+    } else {
+        None
+    };
+    let mut params = ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, opts.seed)))?;
+    let mut opt = optim::by_name(&opts.optimizer, opts.lr)?;
+    let mut accountant = RdpAccountant::new();
+    let mut sampler = if opts.poisson {
+        Sampler::Poisson(PoissonSampler::new(opts.dataset_n, tau, opts.seed))
+    } else {
+        Sampler::Shuffle(ShuffleBatcher::new(opts.dataset_n, tau, opts.seed))
+    };
+
+    let mut stage = BatchStage::for_config(&cfg);
+    let mut metrics = Metrics::new();
+    let noise_std = noise_stddev_for_mean(sigma, opts.clip, tau);
+
+    crate::log_info!(
+        "train {} method={} steps={} tau={} q={:.4} sigma={:.3} clip={} opt={}",
+        cfg.name, opts.method.name(), opts.steps, tau, q, sigma, opts.clip, opts.optimizer
+    );
+
+    // --- the loop (Alg 1, lines 2-16) --------------------------------
+    for step in 0..opts.steps {
+        let t_step = Instant::now();
+
+        let t = PhaseTimer::start();
+        let batch = sampler.next_batch();
+        stage_batch(&ds, &batch, &mut stage);
+        t.stop(&mut metrics, Phase::Gather);
+
+        let t = PhaseTimer::start();
+        let out = computer.compute(&mut params, &stage, opts.clip as f32)?;
+        t.stop(&mut metrics, Phase::Execute);
+
+        let mut grads = out.grads;
+        if opts.method.is_private() {
+            let t = PhaseTimer::start();
+            // §Perf L3 iteration 3: parallel chunked polar-method noise
+            // (was: sequential Box-Muller at 68% of step time).
+            crate::rng::add_noise_parallel(
+                &mut grads,
+                noise_std,
+                opts.seed,
+                step,
+            );
+            accountant.step(q, sigma);
+            t.stop(&mut metrics, Phase::Noise);
+        }
+
+        let t = PhaseTimer::start();
+        opt.step(&mut params.host, &grads);
+        params.mark_dirty();
+        t.stop(&mut metrics, Phase::Update);
+
+        metrics.record_step(t_step.elapsed().as_secs_f64(), out.loss);
+
+        if opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
+            let eps_str = if opts.method.is_private() {
+                let (e, a) = accountant.epsilon(opts.delta);
+                format!(" eps={:.3}(a={})", e, a)
+            } else {
+                String::new()
+            };
+            crate::log_info!(
+                "step {:>5} loss={:.4} ema={:.4}{}",
+                step + 1,
+                out.loss,
+                metrics.loss_ema.get().unwrap_or(0.0),
+                eps_str
+            );
+        }
+
+        if let (Some(fwd), Some(eds)) = (&fwd_exe, &eval_ds) {
+            if (step + 1) % opts.eval_every == 0 {
+                let (l, a) = evaluate(fwd, &mut params, eds, &cfg.input_dtype, tau)?;
+                metrics.record_eval(step + 1, l, a);
+                crate::log_info!(
+                    "eval  step {:>5} loss={:.4} acc={:.3}",
+                    step + 1,
+                    l,
+                    a
+                );
+            }
+        }
+    }
+
+    // --- checkpoint ----------------------------------------------------
+    if let Some(dir) = &opts.checkpoint_dir {
+        super::checkpoint::save(
+            dir,
+            &super::checkpoint::CheckpointMeta {
+                config: cfg.name.clone(),
+                method: opts.method.name().into(),
+                step: opts.steps,
+                sampling_rate: q,
+                sigma,
+                clip: opts.clip,
+                seed: opts.seed,
+            },
+            &params,
+        )?;
+        crate::log_info!("checkpoint written to {}", dir.display());
+    }
+
+    let epsilon = if opts.method.is_private() {
+        Some(accountant.epsilon(opts.delta))
+    } else {
+        None
+    };
+    let mean_step_ms = metrics
+        .step_summary()
+        .map(|s| s.mean * 1e3)
+        .unwrap_or(0.0);
+    Ok(TrainReport {
+        config: cfg.name,
+        method: opts.method,
+        steps: opts.steps,
+        final_loss_ema: metrics.loss_ema.get().unwrap_or(f64::NAN),
+        losses: metrics.losses.clone(),
+        eval_points: metrics.eval_points.clone(),
+        epsilon,
+        sigma,
+        sampling_rate: q,
+        wall_seconds: metrics.wall_seconds(),
+        mean_step_ms,
+        metrics_json: metrics.to_json(),
+        peak_rss_bytes: crate::util::peak_rss_bytes(),
+    })
+}
+
+/// Stage a batch of examples into the upload buffers.
+pub fn stage_batch(ds: &Dataset, batch: &[usize], stage: &mut BatchStage) {
+    match ds.features {
+        Features::F32(_) => {
+            data::gather_batch_f32(ds, batch, &mut stage.feat_f32, &mut stage.labels)
+        }
+        Features::I32(_) => {
+            data::gather_batch_i32(ds, batch, &mut stage.feat_i32, &mut stage.labels)
+        }
+    }
+}
+
+/// Run the fwd artifact over the eval set; returns (mean loss, accuracy).
+fn evaluate(
+    fwd: &crate::runtime::StepExe,
+    params: &mut ParamStore,
+    eval_ds: &Dataset,
+    input_dtype: &str,
+    tau: usize,
+) -> Result<(f32, f32)> {
+    let n_batches = eval_ds.n / tau;
+    let mut stage = BatchStage {
+        feat_f32: if input_dtype == "f32" {
+            vec![0.0; tau * eval_ds.example_len()]
+        } else {
+            Vec::new()
+        },
+        feat_i32: if input_dtype == "f32" {
+            Vec::new()
+        } else {
+            vec![0; tau * eval_ds.example_len()]
+        },
+        labels: vec![0; tau],
+        input_dims: {
+            let mut d = vec![tau as i64];
+            d.extend(eval_ds.shape.iter().map(|&x| x as i64));
+            d
+        },
+        is_f32: input_dtype == "f32",
+    };
+    let (mut loss_sum, mut correct_sum) = (0.0f32, 0.0f32);
+    for b in 0..n_batches {
+        let batch: Vec<usize> = (b * tau..(b + 1) * tau).collect();
+        stage_batch(eval_ds, &batch, &mut stage);
+        let out = run_step(fwd, params, &stage, None)?;
+        loss_sum += out.loss;
+        correct_sum += out.correct.unwrap_or(0.0);
+    }
+    Ok((
+        loss_sum / n_batches as f32,
+        correct_sum / (n_batches * tau) as f32,
+    ))
+}

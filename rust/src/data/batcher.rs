@@ -1,0 +1,182 @@
+//! Minibatch construction.
+//!
+//! Two sampling regimes:
+//!  * `ShuffleBatcher` — the paper's Sec 6.1 procedure: shuffle each
+//!    epoch, partition into non-overlapping chunks of size tau.
+//!  * `PoissonSampler` — per-record inclusion with probability q, the
+//!    regime the RDP subsampled-Gaussian analysis assumes. AOT
+//!    artifacts have a fixed batch dimension, so Poisson draws are
+//!    resized to tau (pad by resampling / truncate uniformly) — the
+//!    standard fixed-batch compromise, documented in DESIGN.md.
+
+use crate::rng::{shuffle, streams, ChaCha20};
+
+/// A batch: indices into the dataset.
+pub type Batch = Vec<usize>;
+
+/// Epoch-shuffling sequential batcher (paper Sec 6.1).
+pub struct ShuffleBatcher {
+    n: usize,
+    tau: usize,
+    rng: ChaCha20,
+    order: Vec<usize>,
+    cursor: usize,
+    pub epoch: u64,
+}
+
+impl ShuffleBatcher {
+    pub fn new(n: usize, tau: usize, seed: u64) -> Self {
+        assert!(tau > 0 && tau <= n, "batch {tau} vs dataset {n}");
+        let mut b = ShuffleBatcher {
+            n,
+            tau,
+            rng: ChaCha20::seeded(seed, streams::SHUFFLE),
+            order: (0..n).collect(),
+            cursor: 0,
+            epoch: 0,
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        shuffle(&mut self.rng, &mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Number of full batches per epoch (trailing partial chunk is
+    /// dropped — fixed AOT batch shape).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.tau
+    }
+
+    /// Next batch of exactly tau indices; reshuffles between epochs.
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.tau > self.n {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let b = self.order[self.cursor..self.cursor + self.tau].to_vec();
+        self.cursor += self.tau;
+        b
+    }
+}
+
+/// Poisson subsampler: include each record independently w.p. q, then
+/// resize to exactly `tau` for the fixed-shape executable.
+pub struct PoissonSampler {
+    n: usize,
+    q: f64,
+    tau: usize,
+    rng: ChaCha20,
+}
+
+impl PoissonSampler {
+    pub fn new(n: usize, tau: usize, seed: u64) -> Self {
+        assert!(tau > 0 && tau <= n);
+        PoissonSampler {
+            n,
+            q: tau as f64 / n as f64,
+            tau,
+            rng: ChaCha20::seeded(seed, streams::SAMPLER),
+        }
+    }
+
+    pub fn sampling_rate(&self) -> f64 {
+        self.q
+    }
+
+    /// One Poisson draw, resized to tau.
+    pub fn next_batch(&mut self) -> Batch {
+        let mut picked: Vec<usize> =
+            (0..self.n).filter(|_| self.rng.next_f64() < self.q).collect();
+        // resize to the fixed executable batch size
+        while picked.len() < self.tau {
+            picked.push(self.rng.next_bounded(self.n as u64) as usize);
+        }
+        if picked.len() > self.tau {
+            shuffle(&mut self.rng, &mut picked);
+            picked.truncate(self.tau);
+        }
+        picked
+    }
+
+    /// Raw Poisson draw (variable size) — used by tests to check the
+    /// inclusion probability.
+    pub fn raw_draw(&mut self) -> Batch {
+        (0..self.n).filter(|_| self.rng.next_f64() < self.q).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn epoch_covers_every_index_once() {
+        let mut b = ShuffleBatcher::new(100, 10, 1);
+        let mut seen = Vec::new();
+        for _ in 0..b.batches_per_epoch() {
+            seen.extend(b.next_batch());
+        }
+        let set: HashSet<_> = seen.iter().copied().collect();
+        assert_eq!(seen.len(), 100);
+        assert_eq!(set.len(), 100);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut b = ShuffleBatcher::new(64, 8, 2);
+        let e1: Vec<Batch> = (0..8).map(|_| b.next_batch()).collect();
+        let e2: Vec<Batch> = (0..8).map(|_| b.next_batch()).collect();
+        assert_eq!(b.epoch, 1);
+        assert_ne!(e1, e2);
+    }
+
+    #[test]
+    fn partial_tail_dropped() {
+        let mut b = ShuffleBatcher::new(25, 10, 3);
+        assert_eq!(b.batches_per_epoch(), 2);
+        b.next_batch();
+        b.next_batch();
+        assert_eq!(b.epoch, 0);
+        b.next_batch(); // rolls into epoch 1
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn batch_always_tau_and_in_range() {
+        let mut b = ShuffleBatcher::new(50, 7, 4);
+        let mut p = PoissonSampler::new(50, 7, 4);
+        for _ in 0..30 {
+            for batch in [b.next_batch(), p.next_batch()] {
+                assert_eq!(batch.len(), 7);
+                assert!(batch.iter().all(|&i| i < 50));
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_inclusion_probability() {
+        let mut p = PoissonSampler::new(1000, 100, 5); // q = 0.1
+        let mut counts = vec![0usize; 1000];
+        let draws = 400;
+        for _ in 0..draws {
+            for i in p.raw_draw() {
+                counts[i] += 1;
+            }
+        }
+        let mean = counts.iter().sum::<usize>() as f64 / 1000.0 / draws as f64;
+        assert!((mean - 0.1).abs() < 0.01, "inclusion rate {}", mean);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ShuffleBatcher::new(30, 5, 9);
+        let mut b = ShuffleBatcher::new(30, 5, 9);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+}

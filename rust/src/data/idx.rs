@@ -1,0 +1,185 @@
+//! IDX file format (the MNIST distribution format): reader + writer.
+//!
+//! If real MNIST/FMNIST `.idx` files are present (FASTCLIP_DATA_DIR),
+//! the coordinator trains on them instead of the synthetic stand-ins;
+//! the writer exists so the round-trip is testable hermetically.
+//!
+//! Format: big-endian magic [0, 0, dtype, ndims], then ndims u32 dims,
+//! then row-major payload. dtype 0x08 = u8 (the only one MNIST uses).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IdxArray {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl IdxArray {
+    pub fn len(&self) -> usize {
+        self.dims.first().copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn example_len(&self) -> usize {
+        self.dims.iter().skip(1).product()
+    }
+}
+
+pub fn read_idx(path: &Path) -> Result<IdxArray> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    parse_idx(&buf).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse_idx(buf: &[u8]) -> Result<IdxArray> {
+    if buf.len() < 4 {
+        bail!("truncated idx header");
+    }
+    if buf[0] != 0 || buf[1] != 0 {
+        bail!("bad idx magic prefix {:02x}{:02x}", buf[0], buf[1]);
+    }
+    let dtype = buf[2];
+    if dtype != 0x08 {
+        bail!("unsupported idx dtype 0x{dtype:02x} (only u8 supported)");
+    }
+    let ndims = buf[3] as usize;
+    if ndims == 0 || ndims > 4 {
+        bail!("unreasonable idx ndims {ndims}");
+    }
+    let header = 4 + 4 * ndims;
+    if buf.len() < header {
+        bail!("truncated idx dims");
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    for i in 0..ndims {
+        let off = 4 + 4 * i;
+        let d = u32::from_be_bytes(buf[off..off + 4].try_into().unwrap());
+        dims.push(d as usize);
+    }
+    let total: usize = dims.iter().product();
+    if buf.len() != header + total {
+        bail!(
+            "idx payload size mismatch: have {}, expect {}",
+            buf.len() - header,
+            total
+        );
+    }
+    Ok(IdxArray { dims, data: buf[header..].to_vec() })
+}
+
+pub fn write_idx(path: &Path, arr: &IdxArray) -> Result<()> {
+    let total: usize = arr.dims.iter().product();
+    if total != arr.data.len() {
+        bail!("dims/data mismatch");
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&[0, 0, 0x08, arr.dims.len() as u8])?;
+    for &d in &arr.dims {
+        f.write_all(&(d as u32).to_be_bytes())?;
+    }
+    f.write_all(&arr.data)?;
+    Ok(())
+}
+
+/// Load an images+labels IDX pair into a Dataset (pixels scaled to
+/// [0,1], channel dim inserted).
+pub fn load_idx_dataset(
+    name: &str,
+    images: &Path,
+    labels: &Path,
+    n_classes: usize,
+) -> Result<super::synth::Dataset> {
+    let imgs = read_idx(images)?;
+    let lbls = read_idx(labels)?;
+    if imgs.dims.len() != 3 {
+        bail!("expected [n, h, w] images, got {:?}", imgs.dims);
+    }
+    if lbls.dims.len() != 1 || lbls.len() != imgs.len() {
+        bail!("label count {} != image count {}", lbls.len(), imgs.len());
+    }
+    let (h, w) = (imgs.dims[1], imgs.dims[2]);
+    let features: Vec<f32> = imgs.data.iter().map(|&b| b as f32 / 255.0).collect();
+    let labels: Vec<i32> = lbls.data.iter().map(|&b| b as i32).collect();
+    if let Some(&bad) = labels.iter().find(|&&l| l as usize >= n_classes) {
+        bail!("label {bad} out of range (n_classes={n_classes})");
+    }
+    Ok(super::synth::Dataset {
+        name: name.to_string(),
+        n: imgs.len(),
+        shape: vec![1, h, w],
+        n_classes,
+        features: super::synth::Features::F32(features),
+        labels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fastclip_idx_{}", name))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let arr = IdxArray {
+            dims: vec![3, 4, 5],
+            data: (0..60).collect(),
+        };
+        let p = tmp("rt.idx");
+        write_idx(&p, &arr).unwrap();
+        let back = read_idx(&p).unwrap();
+        assert_eq!(back, arr);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(parse_idx(&[]).is_err());
+        assert!(parse_idx(&[1, 0, 8, 1, 0, 0, 0, 0]).is_err()); // bad magic
+        assert!(parse_idx(&[0, 0, 0x0D, 1, 0, 0, 0, 0]).is_err()); // f32 dtype
+        // payload shorter than dims claim
+        let mut buf = vec![0, 0, 8, 1, 0, 0, 0, 10];
+        buf.extend([0u8; 5]);
+        assert!(parse_idx(&buf).is_err());
+    }
+
+    #[test]
+    fn dataset_from_idx_pair() {
+        let imgs = IdxArray {
+            dims: vec![6, 4, 4],
+            data: (0..96).map(|i| (i * 2) as u8).collect(),
+        };
+        let lbls = IdxArray { dims: vec![6], data: vec![0, 1, 2, 0, 1, 2] };
+        let pi = tmp("imgs.idx");
+        let pl = tmp("lbls.idx");
+        write_idx(&pi, &imgs).unwrap();
+        write_idx(&pl, &lbls).unwrap();
+        let ds = load_idx_dataset("mini", &pi, &pl, 3).unwrap();
+        assert_eq!(ds.n, 6);
+        assert_eq!(ds.shape, vec![1, 4, 4]);
+        match &ds.features {
+            super::super::synth::Features::F32(v) => {
+                assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+                assert!((v[1] - 2.0 / 255.0).abs() < 1e-6);
+            }
+            _ => panic!(),
+        }
+        // label out of range is rejected
+        assert!(load_idx_dataset("mini", &pi, &pl, 2).is_err());
+        std::fs::remove_file(&pi).ok();
+        std::fs::remove_file(&pl).ok();
+    }
+}

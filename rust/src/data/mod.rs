@@ -1,0 +1,109 @@
+//! Data pipeline substrate: synthetic dataset generators, the IDX
+//! (MNIST) file format, shuffling batchers, and Poisson subsampling.
+
+pub mod batcher;
+pub mod idx;
+pub mod synth;
+
+pub use batcher::{Batch, PoissonSampler, ShuffleBatcher};
+pub use synth::{by_name, Dataset, Features};
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Resolve a dataset: real IDX files if FASTCLIP_DATA_DIR has them,
+/// synthetic otherwise.
+pub fn load_dataset(name: &str, n: usize, seed: u64) -> Result<Dataset> {
+    if let Ok(dir) = std::env::var("FASTCLIP_DATA_DIR") {
+        let dir = PathBuf::from(dir);
+        let (imgs, lbls) = match name {
+            "mnist" => ("train-images-idx3-ubyte", "train-labels-idx1-ubyte"),
+            "fmnist" => (
+                "fmnist-train-images-idx3-ubyte",
+                "fmnist-train-labels-idx1-ubyte",
+            ),
+            _ => ("", ""),
+        };
+        if !imgs.is_empty() {
+            let pi = dir.join(imgs);
+            let pl = dir.join(lbls);
+            if pi.exists() && pl.exists() {
+                crate::log_info!("loading real {name} from {}", dir.display());
+                let mut ds = idx::load_idx_dataset(name, &pi, &pl, 10)?;
+                if ds.n > n {
+                    truncate(&mut ds, n);
+                }
+                return Ok(ds);
+            }
+        }
+    }
+    synth::by_name(name, n, seed)
+}
+
+fn truncate(ds: &mut Dataset, n: usize) {
+    let d = ds.example_len();
+    match &mut ds.features {
+        Features::F32(v) => v.truncate(n * d),
+        Features::I32(v) => v.truncate(n * d),
+    }
+    ds.labels.truncate(n);
+    ds.n = n;
+}
+
+/// Gather a batch of examples into flat feature/label buffers
+/// (the staging step before upload to the PJRT device).
+pub fn gather_batch_f32(
+    ds: &Dataset,
+    batch: &[usize],
+    feat_out: &mut [f32],
+    label_out: &mut [i32],
+) {
+    let d = ds.example_len();
+    assert_eq!(feat_out.len(), batch.len() * d);
+    assert_eq!(label_out.len(), batch.len());
+    for (row, &i) in batch.iter().enumerate() {
+        ds.copy_f32(i, &mut feat_out[row * d..(row + 1) * d]);
+        label_out[row] = ds.labels[i];
+    }
+}
+
+pub fn gather_batch_i32(
+    ds: &Dataset,
+    batch: &[usize],
+    feat_out: &mut [i32],
+    label_out: &mut [i32],
+) {
+    let d = ds.example_len();
+    assert_eq!(feat_out.len(), batch.len() * d);
+    assert_eq!(label_out.len(), batch.len());
+    for (row, &i) in batch.iter().enumerate() {
+        ds.copy_i32(i, &mut feat_out[row * d..(row + 1) * d]);
+        label_out[row] = ds.labels[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_places_rows() {
+        let ds = synth::synth_images("t", 10, &[1, 2, 2], 2, 1);
+        let batch = vec![3, 7, 1];
+        let mut feats = vec![0f32; 3 * 4];
+        let mut labels = vec![0i32; 3];
+        gather_batch_f32(&ds, &batch, &mut feats, &mut labels);
+        let mut row = vec![0f32; 4];
+        ds.copy_f32(7, &mut row);
+        assert_eq!(&feats[4..8], &row[..]);
+        assert_eq!(labels[1], ds.labels[7]);
+    }
+
+    #[test]
+    fn load_dataset_synth_fallback() {
+        std::env::remove_var("FASTCLIP_DATA_DIR");
+        let ds = load_dataset("mnist", 32, 0).unwrap();
+        assert_eq!(ds.n, 32);
+        assert_eq!(ds.shape, vec![1, 28, 28]);
+    }
+}

@@ -1,0 +1,282 @@
+//! Synthetic dataset generators — stand-ins for MNIST / FMNIST /
+//! CIFAR10 / LSUN / IMDB (DESIGN.md §5 substitutions).
+//!
+//! Images: each class has a fixed random template; a sample is
+//! `0.8*template + 0.45*noise`, clamped to [0,1] — the same shape,
+//! range, and class structure as the real datasets, and linearly
+//! separable enough that training loss visibly decreases (which is all
+//! the paper's timing/e2e experiments need from the data).
+//!
+//! Text: each sentiment class has a set of indicative tokens; a
+//! sequence mixes class tokens with common filler. Labels are the
+//! majority class.
+
+use crate::rng::{streams, ChaCha20, Gaussian};
+
+/// Feature storage — f32 images or i32 token ids.
+#[derive(Debug, Clone)]
+pub enum Features {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Features {
+    pub fn len(&self) -> usize {
+        match self {
+            Features::F32(v) => v.len(),
+            Features::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An in-memory dataset of `n` examples with per-example feature shape
+/// `shape` (no batch dim) and integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub shape: Vec<usize>,
+    pub n_classes: usize,
+    pub features: Features,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn example_len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Copy example `i`'s features into `dst` (f32 datasets).
+    pub fn copy_f32(&self, i: usize, dst: &mut [f32]) {
+        let d = self.example_len();
+        match &self.features {
+            Features::F32(v) => dst.copy_from_slice(&v[i * d..(i + 1) * d]),
+            Features::I32(_) => panic!("i32 dataset accessed as f32"),
+        }
+    }
+
+    pub fn copy_i32(&self, i: usize, dst: &mut [i32]) {
+        let d = self.example_len();
+        match &self.features {
+            Features::I32(v) => dst.copy_from_slice(&v[i * d..(i + 1) * d]),
+            Features::F32(_) => panic!("f32 dataset accessed as i32"),
+        }
+    }
+}
+
+/// Template-plus-noise image dataset.
+pub fn synth_images(
+    name: &str,
+    n: usize,
+    shape: &[usize],
+    n_classes: usize,
+    seed: u64,
+) -> Dataset {
+    let d: usize = shape.iter().product();
+    let mut gauss = Gaussian::seeded(seed, streams::DATA);
+    let mut rng = ChaCha20::seeded(seed ^ 0xDA7A, streams::DATA);
+
+    // Class templates depend on the dataset *name* only — never the
+    // sample seed — so train and eval splits (different seeds) share
+    // the same class structure and generalization is measurable.
+    let mut tpl_rng = ChaCha20::seeded(name_hash(name), streams::DATA);
+    let mut templates = vec![0f32; n_classes * d];
+    for t in templates.iter_mut() {
+        *t = tpl_rng.next_f32();
+    }
+
+    let mut features = vec![0f32; n * d];
+    let mut labels = vec![0i32; n];
+    for i in 0..n {
+        let class = (i % n_classes) as i32;
+        labels[i] = class;
+        let tpl = &templates[class as usize * d..(class as usize + 1) * d];
+        let dst = &mut features[i * d..(i + 1) * d];
+        for (o, &t) in dst.iter_mut().zip(tpl) {
+            let noisy = 0.8 * t + 0.45 * gauss.sample() as f32;
+            *o = noisy.clamp(0.0, 1.0);
+        }
+    }
+    // deterministic interleave so labels are not ordered by class
+    let mut order: Vec<usize> = (0..n).collect();
+    crate::rng::shuffle(&mut rng, &mut order);
+    let mut f2 = vec![0f32; n * d];
+    let mut l2 = vec![0i32; n];
+    for (dst, &src) in order.iter().enumerate() {
+        f2[dst * d..(dst + 1) * d].copy_from_slice(&features[src * d..(src + 1) * d]);
+        l2[dst] = labels[src];
+    }
+
+    Dataset {
+        name: name.to_string(),
+        n,
+        shape: shape.to_vec(),
+        n_classes,
+        features: Features::F32(f2),
+        labels: l2,
+    }
+}
+
+/// Stable 64-bit FNV-1a hash of the dataset name (template identity).
+fn name_hash(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Token-majority sentiment dataset (IMDB substitute).
+///
+/// Vocabulary layout: [0, filler) common tokens; then `class_tokens`
+/// indicative tokens per class.
+pub fn synth_tokens(
+    name: &str,
+    n: usize,
+    seq: usize,
+    vocab: usize,
+    n_classes: usize,
+    seed: u64,
+) -> Dataset {
+    assert!(vocab > 64 + n_classes * 32);
+    let filler = vocab - n_classes * 32;
+    let mut rng = ChaCha20::seeded(seed, streams::DATA);
+    let mut features = vec![0i32; n * seq];
+    let mut labels = vec![0i32; n];
+    for i in 0..n {
+        let class = rng.next_bounded(n_classes as u64) as usize;
+        labels[i] = class as i32;
+        let class_base = filler + class * 32;
+        for t in 0..seq {
+            let indicative = rng.next_f64() < 0.35;
+            features[i * seq + t] = if indicative {
+                (class_base as u64 + rng.next_bounded(32)) as i32
+            } else {
+                rng.next_bounded(filler as u64) as i32
+            };
+        }
+    }
+    Dataset {
+        name: name.to_string(),
+        n,
+        shape: vec![seq],
+        n_classes,
+        features: Features::I32(features),
+        labels,
+    }
+}
+
+/// Build the synthetic stand-in for a named dataset at a given size.
+/// Shapes must match the manifest's `DATASETS` table (configs.py).
+pub fn by_name(name: &str, n: usize, seed: u64) -> anyhow::Result<Dataset> {
+    let ds = match name {
+        "mnist" => synth_images("mnist", n, &[1, 28, 28], 10, seed ^ 0x01),
+        "fmnist" => synth_images("fmnist", n, &[1, 28, 28], 10, seed ^ 0x02),
+        "cifar10" => synth_images("cifar10", n, &[3, 32, 32], 10, seed ^ 0x03),
+        "imdb" => synth_tokens("imdb", n, 64, 5000, 2, seed ^ 0x04),
+        "lsun16" => synth_images("lsun16", n, &[3, 16, 16], 10, seed ^ 0x05),
+        "lsun32" => synth_images("lsun32", n, &[3, 32, 32], 10, seed ^ 0x06),
+        "lsun48" => synth_images("lsun48", n, &[3, 48, 48], 10, seed ^ 0x07),
+        "lsun64" => synth_images("lsun64", n, &[3, 64, 64], 10, seed ^ 0x08),
+        other => anyhow::bail!("unknown dataset {other:?}"),
+    };
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_dataset_shape_and_range() {
+        let ds = synth_images("t", 64, &[1, 8, 8], 10, 1);
+        assert_eq!(ds.n, 64);
+        assert_eq!(ds.example_len(), 64);
+        match &ds.features {
+            Features::F32(v) => {
+                assert_eq!(v.len(), 64 * 64);
+                assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            }
+            _ => panic!(),
+        }
+        assert!(ds.labels.iter().all(|&l| (0..10).contains(&l)));
+        // every class present
+        for c in 0..10 {
+            assert!(ds.labels.contains(&c));
+        }
+    }
+
+    #[test]
+    fn images_deterministic_and_seed_sensitive() {
+        let a = synth_images("t", 16, &[1, 4, 4], 4, 7);
+        let b = synth_images("t", 16, &[1, 4, 4], 4, 7);
+        let c = synth_images("t", 16, &[1, 4, 4], 4, 8);
+        match (&a.features, &b.features, &c.features) {
+            (Features::F32(x), Features::F32(y), Features::F32(z)) => {
+                assert_eq!(x, y);
+                assert_ne!(x, z);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn same_class_examples_correlate() {
+        // template structure: two same-class examples are closer than
+        // two different-class examples, on average
+        let ds = synth_images("t", 200, &[1, 6, 6], 4, 3);
+        let d = ds.example_len();
+        let feat = match &ds.features {
+            Features::F32(v) => v,
+            _ => panic!(),
+        };
+        let dist = |i: usize, j: usize| -> f32 {
+            (0..d)
+                .map(|k| (feat[i * d + k] - feat[j * d + k]).powi(2))
+                .sum()
+        };
+        let (mut same, mut diff, mut ns, mut nd) = (0f32, 0f32, 0, 0);
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                if ds.labels[i] == ds.labels[j] {
+                    same += dist(i, j);
+                    ns += 1;
+                } else {
+                    diff += dist(i, j);
+                    nd += 1;
+                }
+            }
+        }
+        assert!(same / (ns as f32) < diff / (nd as f32));
+    }
+
+    #[test]
+    fn token_dataset_valid_ids() {
+        let ds = synth_tokens("imdb", 100, 64, 5000, 2, 9);
+        match &ds.features {
+            Features::I32(v) => {
+                assert_eq!(v.len(), 100 * 64);
+                assert!(v.iter().all(|&t| (0..5000).contains(&t)));
+            }
+            _ => panic!(),
+        }
+        assert!(ds.labels.contains(&0) && ds.labels.contains(&1));
+    }
+
+    #[test]
+    fn by_name_covers_manifest_datasets() {
+        for name in [
+            "mnist", "fmnist", "cifar10", "imdb", "lsun16", "lsun32",
+            "lsun48", "lsun64",
+        ] {
+            let ds = by_name(name, 8, 0).unwrap();
+            assert_eq!(ds.n, 8);
+        }
+        assert!(by_name("nope", 8, 0).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! fastclip — differentially private deep learning with fast
+//! per-example gradient clipping (Lee & Kifer, 2020).
+//!
+//! Three-layer architecture (DESIGN.md):
+//!   L1/L2 (build time, Python): Pallas kernels + JAX step functions,
+//!     AOT-lowered to HLO text artifacts.
+//!   L3 (this crate): the coordinator — data pipeline, gradient-method
+//!     dispatch, RDP accounting, DP noise, optimizers, benchmarking —
+//!     executing the artifacts via the PJRT C API. No Python at runtime.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod optim;
+pub mod privacy;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,264 @@
+//! fastclip CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train       run DP training on one config (paper Alg 1)
+//!   bench-step  time one (config, method) step
+//!   accountant  RDP accounting / sigma calibration queries
+//!   memory      Sec 6.7 memory model table for a config
+//!   inspect     list manifest configs and artifacts
+
+use anyhow::{Context, Result};
+use fastclip::cli::Args;
+use fastclip::coordinator::{memory, train, ClipMethod, GradComputer, TrainOptions};
+use fastclip::privacy;
+use fastclip::runtime::{artifacts_dir, BatchStage, Engine, ParamStore};
+use fastclip::util::json::Json;
+use fastclip::{log_info, util};
+
+fn main() {
+    fastclip::util::logging::level_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "bench-step" => cmd_bench_step(&args),
+        "accountant" => cmd_accountant(&args),
+        "memory" => cmd_memory(&args),
+        "inspect" => cmd_inspect(&args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        r#"fastclip — DP deep learning with fast per-example gradient clipping
+
+USAGE: fastclip <subcommand> [flags]
+
+  train       --config NAME [--method reweight|nxbp|multiloss|nonprivate|
+              reweight_pallas|reweight_gram] [--steps N] [--n DATASET_SIZE]
+              [--lr F] [--clip F] [--sigma F | --target-eps F] [--delta F]
+              [--optimizer adam|sgd] [--seed N] [--eval-every N]
+              [--poisson] [--checkpoint DIR] [--json]
+  bench-step  --config NAME --method M [--iters N]
+  accountant  --q F --sigma F --steps N [--delta F]
+              | --calibrate --q F --steps N --eps F [--delta F]
+  memory      --config NAME [--budget-gib F]
+  inspect     [--config NAME] [--tag TAG]
+
+Artifacts are read from $FASTCLIP_ARTIFACTS (default ./artifacts);
+build them with `make artifacts`."#
+    );
+}
+
+fn engine() -> Result<Engine> {
+    let dir = artifacts_dir();
+    Engine::from_dir(&dir)
+        .with_context(|| format!("loading artifacts from {} (run `make artifacts`?)", dir.display()))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let opts = TrainOptions {
+        config: args.require("config")?.to_string(),
+        method: ClipMethod::parse(&args.str_or("method", "reweight"))?,
+        steps: args.u64_or("steps", 100)?,
+        dataset_n: args.usize_or("n", 2048)?,
+        lr: args.f64_or("lr", 1e-3)?,
+        clip: args.f64_or("clip", 1.0)?,
+        sigma: args.f64_or("sigma", 1.1)?,
+        target_eps: args.str_opt("target-eps").map(|v| v.parse()).transpose()?,
+        delta: args.f64_or("delta", 1e-5)?,
+        optimizer: args.str_or("optimizer", "adam"),
+        seed: args.u64_or("seed", 0)?,
+        eval_every: args.u64_or("eval-every", 0)?,
+        log_every: args.u64_or("log-every", 20)?,
+        checkpoint_dir: args.str_opt("checkpoint").map(Into::into),
+        poisson: args.bool("poisson"),
+    };
+    let engine = engine()?;
+    let report = train(&engine, &opts)?;
+    if args.bool("json") {
+        let mut j = report.metrics_json.clone();
+        j.set("config", report.config.as_str().into());
+        j.set("method", report.method.name().into());
+        if let Some((eps, order)) = report.epsilon {
+            j.set("epsilon", eps.into());
+            j.set("rdp_order", (order as usize).into());
+        }
+        println!("{}", j.to_string_pretty());
+    } else {
+        println!(
+            "done: {} steps, loss(ema)={:.4}, mean step {:.2} ms, wall {:.1}s",
+            report.steps, report.final_loss_ema, report.mean_step_ms, report.wall_seconds
+        );
+        if let Some((eps, order)) = report.epsilon {
+            println!(
+                "privacy: ({:.3}, {:.0e})-DP via RDP order {}",
+                eps,
+                report.sigma.max(0.0).min(f64::MAX) * 0.0 + opts_delta(args)?,
+                order
+            );
+        }
+        if let Some(rss) = report.peak_rss_bytes {
+            println!("peak RSS: {}", util::fmt_bytes(rss));
+        }
+        if args.bool("profile") {
+            println!("\nstep phase breakdown:");
+            let phases = report.metrics_json.get("phases");
+            for name in ["gather", "execute", "noise", "update"] {
+                let p = phases.get(name);
+                println!(
+                    "  {:<8} {:>8.1} ms total  {:>5.1}%",
+                    name,
+                    p.get("seconds").as_f64().unwrap_or(0.0) * 1e3,
+                    p.get("share").as_f64().unwrap_or(0.0) * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn opts_delta(args: &Args) -> Result<f64> {
+    args.f64_or("delta", 1e-5)
+}
+
+fn cmd_bench_step(args: &Args) -> Result<()> {
+    let config = args.require("config")?.to_string();
+    let method = ClipMethod::parse(&args.str_or("method", "reweight"))?;
+    let iters = args.usize_or("iters", 10)?;
+    let engine = engine()?;
+    let cfg = engine.manifest.config(&config)?.clone();
+    let mut computer = GradComputer::new(&engine, &config, method)?;
+    let ds = fastclip::data::load_dataset(&cfg.dataset, cfg.batch.max(256), 0)?;
+    let mut stage = BatchStage::for_config(&cfg);
+    let batch: Vec<usize> = (0..cfg.batch).collect();
+    fastclip::coordinator::stage_batch(&ds, &batch, &mut stage);
+    let mut params = ParamStore::new(
+        &cfg,
+        Some(&fastclip::runtime::init_params_glorot(&cfg, 0)),
+    )?;
+    // warmup (includes compile)
+    computer.compute(&mut params, &stage, 1.0)?;
+    log_info!("compile took {:.0} ms", computer.compile_ms());
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        computer.compute(&mut params, &stage, 1.0)?;
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let s = fastclip::util::stats::Summary::of(&times);
+    println!(
+        "{config} {}: mean {:.3} ms, p50 {:.3} ms, p95 {:.3} ms over {iters} iters",
+        method.name(),
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p95 * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_accountant(args: &Args) -> Result<()> {
+    let q = args.f64_or("q", 0.01)?;
+    let delta = args.f64_or("delta", 1e-5)?;
+    let steps = args.u64_or("steps", 1000)?;
+    if args.bool("calibrate") {
+        let eps = args.f64_or("eps", 2.0)?;
+        match privacy::calibrate_sigma(q, steps, eps, delta) {
+            Some(sigma) => println!(
+                "sigma = {:.4} achieves ({}, {:.0e})-DP over {} steps at q={}",
+                sigma, eps, delta, steps, q
+            ),
+            None => println!("infeasible: even sigma=200 exceeds eps={eps}"),
+        }
+    } else {
+        let sigma = args.f64_or("sigma", 1.1)?;
+        let eps = privacy::epsilon_for(q, sigma, steps, delta);
+        println!(
+            "({:.4}, {:.0e})-DP after {} steps at q={}, sigma={}",
+            eps, delta, steps, q, sigma
+        );
+    }
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let config = args.require("config")?.to_string();
+    let budget_gib = args.f64_or("budget-gib", 11.0)?; // 1080 Ti
+    let engine = engine()?;
+    let cfg = engine.manifest.config(&config)?;
+    let fp = memory::Footprint::of(cfg, cfg.act_elems_per_example as u64);
+    let budget = (budget_gib * (1u64 << 30) as f64) as u64;
+    println!(
+        "memory model for {config} (P={} params, A={} act/ex, budget {:.1} GiB):",
+        fp.p, fp.a, budget_gib
+    );
+    println!("| method | bytes @tau={} | max batch |", cfg.batch);
+    println!("|---|---:|---:|");
+    for m in ["nonprivate", "reweight", "multiloss", "nxbp"] {
+        println!(
+            "| {} | {} | {} |",
+            m,
+            util::fmt_bytes(memory::step_bytes(m, fp, cfg.batch as u64)),
+            memory::max_batch(m, fp, budget)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let engine = engine()?;
+    if let Some(name) = args.str_opt("config") {
+        let cfg = engine.manifest.config(name)?;
+        let mut j = Json::obj();
+        j.set("name", cfg.name.as_str().into());
+        j.set("model", cfg.model.as_str().into());
+        j.set("dataset", cfg.dataset.as_str().into());
+        j.set("batch", cfg.batch.into());
+        j.set("param_tensors", cfg.params.len().into());
+        j.set("param_elems", cfg.param_elems().into());
+        j.set("act_elems_per_example", cfg.act_elems_per_example.into());
+        j.set(
+            "artifacts",
+            Json::Arr(
+                cfg.artifacts.keys().map(|k| k.as_str().into()).collect(),
+            ),
+        );
+        println!("{}", j.to_string_pretty());
+    } else {
+        let tag = args.str_opt("tag");
+        println!("| config | model | dataset | batch | params | artifacts |");
+        println!("|---|---|---|---:|---:|---|");
+        for cfg in engine.manifest.configs.values() {
+            if let Some(t) = tag {
+                if !cfg.has_tag(t) {
+                    continue;
+                }
+            }
+            println!(
+                "| {} | {} | {} | {} | {} | {} |",
+                cfg.name,
+                cfg.model,
+                cfg.dataset,
+                cfg.batch,
+                cfg.param_elems(),
+                cfg.artifacts.keys().cloned().collect::<Vec<_>>().join(",")
+            );
+        }
+    }
+    Ok(())
+}

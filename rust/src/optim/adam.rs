@@ -1,0 +1,121 @@
+//! Adam (Kingma & Ba) with the paper's experimental defaults
+//! (Sec 6.1): lr 0.001, beta1 0.9, beta2 0.999. The "DP" in DP-Adam
+//! lives upstream: the gradient fed here already carries the clipped
+//! average plus Gaussian noise.
+
+use super::Optimizer;
+
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Adam {
+        Adam::with_betas(lr, 0.9, 0.999, 1e-8)
+    }
+
+    pub fn with_betas(lr: f64, beta1: f64, beta2: f64, eps: f64) -> Adam {
+        assert!(lr > 0.0 && (0.0..1.0).contains(&beta1) && (0.0..1.0).contains(&beta2));
+        Adam { lr, beta1, beta2, eps, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    fn ensure_state(&mut self, params: &[Vec<f32>]) {
+        if self.m.len() != params.len() {
+            self.m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+            self.v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        assert_eq!(params.len(), grads.len());
+        self.ensure_state(params);
+        self.t += 1;
+        let (b1, b2) = (self.beta1 as f32, self.beta2 as f32);
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        // fold bias correction into the step size
+        let alpha = (self.lr * bc2.sqrt() / bc1) as f32;
+        let eps = self.eps as f32;
+        for k in 0..params.len() {
+            let (p, g) = (&mut params[k], &grads[k]);
+            let (m, v) = (&mut self.m[k], &mut self.v[k]);
+            assert_eq!(p.len(), g.len());
+            for i in 0..p.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                p[i] -= alpha * m[i] / (v[i].sqrt() + eps);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_matches_paper_formula() {
+        // With m=v=0: m1 = (1-b1) g, v1 = (1-b2) g^2;
+        // mhat = g, vhat = g^2; update = lr * g / (|g| + eps) ~ lr*sign(g)
+        let mut p = vec![vec![1.0f32]];
+        let g = vec![vec![0.5f32]];
+        let mut opt = Adam::new(0.001);
+        opt.step(&mut p, &g);
+        assert!((p[0][0] - (1.0 - 0.001)).abs() < 1e-5, "{}", p[0][0]);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut p = vec![vec![-4.0f32]];
+        let mut opt = Adam::new(0.05);
+        for _ in 0..2000 {
+            let g = vec![vec![2.0 * (p[0][0] - 3.0)]];
+            opt.step(&mut p, &g);
+        }
+        assert!((p[0][0] - 3.0).abs() < 1e-2, "{}", p[0][0]);
+    }
+
+    #[test]
+    fn state_tracks_multiple_tensors() {
+        let mut p = vec![vec![0.0f32; 3], vec![0.0f32; 2]];
+        let g = vec![vec![1.0f32; 3], vec![-1.0f32; 2]];
+        let mut opt = Adam::new(0.1);
+        for _ in 0..10 {
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].iter().all(|&x| x < 0.0));
+        assert!(p[1].iter().all(|&x| x > 0.0));
+        assert_eq!(opt.step_count(), 10);
+    }
+
+    #[test]
+    fn finite_under_noisy_gradients() {
+        // DP setting: heavy noise must not produce NaN/Inf
+        use crate::rng::Gaussian;
+        let mut gauss = Gaussian::seeded(1, 0);
+        let mut p = vec![vec![0.0f32; 16]];
+        let mut opt = Adam::new(0.001);
+        for _ in 0..500 {
+            let mut g = vec![vec![0.0f32; 16]];
+            gauss.add_noise_f32(&mut g[0], 10.0);
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].iter().all(|x| x.is_finite()));
+    }
+}

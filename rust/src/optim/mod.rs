@@ -1,0 +1,44 @@
+//! Optimizers over the coordinator's host parameter representation
+//! (one f32 vector per parameter tensor).
+//!
+//! The DP pipeline is: method produces the clipped averaged gradient
+//! -> coordinator adds Gaussian noise (rng::Gaussian) -> optimizer
+//! consumes the noisy gradient. Noise is *not* the optimizer's job
+//! (postprocessing immunity, paper Sec 2.2, means anything after the
+//! noisy gradient is privacy-free).
+
+pub mod adam;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use sgd::Sgd;
+
+/// A first-order optimizer over per-tensor parameter vectors.
+pub trait Optimizer {
+    /// In-place update with (possibly noisy) gradients, one slice per
+    /// parameter tensor, same order/lengths as `params`.
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Construct by name (CLI / config files).
+pub fn by_name(name: &str, lr: f64) -> anyhow::Result<Box<dyn Optimizer>> {
+    match name {
+        "sgd" => Ok(Box::new(Sgd::new(lr))),
+        "adam" => Ok(Box::new(Adam::new(lr))),
+        other => anyhow::bail!("unknown optimizer {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory() {
+        assert_eq!(by_name("sgd", 0.1).unwrap().name(), "sgd");
+        assert_eq!(by_name("adam", 0.1).unwrap().name(), "adam");
+        assert!(by_name("adamw", 0.1).is_err());
+    }
+}

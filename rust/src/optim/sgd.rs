@@ -1,0 +1,57 @@
+//! Vanilla SGD: theta <- theta - eta * g  (paper Sec 3.1 update rule).
+
+use super::Optimizer;
+
+pub struct Sgd {
+    pub lr: f64,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Sgd {
+        assert!(lr > 0.0);
+        Sgd { lr }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        assert_eq!(params.len(), grads.len());
+        let lr = self.lr as f32;
+        for (p, g) in params.iter_mut().zip(grads) {
+            assert_eq!(p.len(), g.len());
+            for (pi, gi) in p.iter_mut().zip(g) {
+                *pi -= lr * gi;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_step() {
+        let mut p = vec![vec![1.0f32, 2.0], vec![3.0]];
+        let g = vec![vec![0.5f32, -1.0], vec![2.0]];
+        Sgd::new(0.1).step(&mut p, &g);
+        assert_eq!(p[0], vec![0.95, 2.1]);
+        assert!((p[1][0] - 2.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(x) = (x-3)^2, grad = 2(x-3)
+        let mut p = vec![vec![0.0f32]];
+        let mut opt = Sgd::new(0.1);
+        for _ in 0..200 {
+            let g = vec![vec![2.0 * (p[0][0] - 3.0)]];
+            opt.step(&mut p, &g);
+        }
+        assert!((p[0][0] - 3.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,124 @@
+//! Noise calibration: find the smallest noise multiplier sigma that
+//! keeps T steps of DP-SGD within a target (eps, delta) — Alg 1 line 1
+//! ("Use Moment Accountant to determine noise variance").
+
+use super::rdp::RdpAccountant;
+
+/// Epsilon spent by T subsampled-Gaussian steps at (q, sigma).
+pub fn epsilon_for(q: f64, sigma: f64, steps: u64, delta: f64) -> f64 {
+    let mut acc = RdpAccountant::new();
+    acc.steps(q, sigma, steps);
+    acc.epsilon(delta).0
+}
+
+/// Smallest sigma (within `tol`) such that T steps cost at most
+/// `target_eps` at `delta`. Returns None if even sigma = `hi` is not
+/// enough (caller should reduce steps or q).
+pub fn calibrate_sigma(
+    q: f64,
+    steps: u64,
+    target_eps: f64,
+    delta: f64,
+) -> Option<f64> {
+    calibrate_sigma_in(q, steps, target_eps, delta, 0.3, 200.0, 1e-4)
+}
+
+pub fn calibrate_sigma_in(
+    q: f64,
+    steps: u64,
+    target_eps: f64,
+    delta: f64,
+    lo: f64,
+    hi: f64,
+    tol: f64,
+) -> Option<f64> {
+    assert!(lo > 0.0 && hi > lo);
+    if epsilon_for(q, hi, steps, delta) > target_eps {
+        return None; // infeasible even at max noise
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    if epsilon_for(q, lo, steps, delta) <= target_eps {
+        return Some(lo); // already feasible at min noise
+    }
+    // eps is monotone decreasing in sigma => bisect
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if epsilon_for(q, mid, steps, delta) <= target_eps {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// How many steps fit within (target_eps, delta) at fixed (q, sigma)?
+/// (Useful for "train until the budget is spent" schedules.)
+pub fn max_steps(q: f64, sigma: f64, target_eps: f64, delta: f64) -> u64 {
+    // exponential probe then bisect; eps is monotone in steps
+    if epsilon_for(q, sigma, 1, delta) > target_eps {
+        return 0;
+    }
+    let mut hi = 1u64;
+    while epsilon_for(q, sigma, hi, delta) <= target_eps {
+        hi = hi.saturating_mul(2);
+        if hi > 1 << 32 {
+            return hi; // effectively unbounded for our runs
+        }
+    }
+    let mut lo = hi / 2;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if epsilon_for(q, sigma, mid, delta) <= target_eps {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_sigma_hits_target() {
+        let (q, steps, eps, delta) = (0.01, 1000, 2.0, 1e-5);
+        let sigma = calibrate_sigma(q, steps, eps, delta).unwrap();
+        let got = epsilon_for(q, sigma, steps, delta);
+        assert!(got <= eps + 1e-6, "eps {} > target {}", got, eps);
+        // and it is tight: slightly less noise would blow the budget
+        let spent = epsilon_for(q, sigma - 5e-3, steps, delta);
+        assert!(spent > eps, "calibration not tight: {} <= {}", spent, eps);
+    }
+
+    #[test]
+    fn more_budget_needs_less_noise() {
+        let s1 = calibrate_sigma(0.01, 1000, 1.0, 1e-5).unwrap();
+        let s4 = calibrate_sigma(0.01, 1000, 4.0, 1e-5).unwrap();
+        assert!(s4 < s1, "sigma({})={} vs sigma({})={}", 4.0, s4, 1.0, s1);
+    }
+
+    #[test]
+    fn more_steps_need_more_noise() {
+        let s100 = calibrate_sigma(0.01, 100, 2.0, 1e-5).unwrap();
+        let s10k = calibrate_sigma(0.01, 10_000, 2.0, 1e-5).unwrap();
+        assert!(s10k > s100);
+    }
+
+    #[test]
+    fn max_steps_inverse_of_epsilon() {
+        let (q, sigma, eps, delta) = (0.01, 1.5, 2.0, 1e-5);
+        let t = max_steps(q, sigma, eps, delta);
+        assert!(t > 0);
+        assert!(epsilon_for(q, sigma, t, delta) <= eps);
+        assert!(epsilon_for(q, sigma, t + 1, delta) > eps);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        // eps=0.0001 with q=0.5 and 1e6 steps cannot be met by sigma<=200
+        assert!(calibrate_sigma(0.5, 1_000_000, 1e-4, 1e-5).is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! Differential privacy substrate: RDP accounting (the paper's Moment
+//! Accountant, Sec 2.2) and noise calibration.
+//!
+//! The coordinator's DP methods (reweight / multiloss / nxbp) all add
+//! noise `N(0, (sigma * c / tau)^2)` to the *averaged* clipped gradient
+//! — equivalent to `N(0, (sigma * c)^2)` on the clipped sum whose L2
+//! sensitivity is c (Definition 4) — and charge the accountant one
+//! subsampled-Gaussian step per iteration.
+
+pub mod calibrate;
+pub mod rdp;
+
+pub use calibrate::{calibrate_sigma, epsilon_for, max_steps};
+pub use rdp::{sgm_rdp_step, RdpAccountant};
+
+/// Noise standard deviation to add to the gradient *average* for one
+/// step: the clipped-sum query has sensitivity `clip`, the mechanism
+/// adds sigma*clip noise to the sum, and dividing by tau scales it.
+pub fn noise_stddev_for_mean(sigma: f64, clip: f64, tau: usize) -> f64 {
+    sigma * clip / tau as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_scale_matches_mechanism() {
+        // sigma=1.1, c=1.0, tau=32: noise on the mean is sigma*c/32
+        let s = noise_stddev_for_mean(1.1, 1.0, 32);
+        assert!((s - 1.1 / 32.0).abs() < 1e-12);
+    }
+}

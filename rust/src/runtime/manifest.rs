@@ -1,0 +1,256 @@
+//! artifacts/manifest.json loader — the contract between the Python
+//! compile path (aot.py) and the Rust request path.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub method: String,
+    pub file: String,
+    /// extra scalar args after (params, X, y): currently just "clip"
+    pub extra_args: Vec<String>,
+    /// named output groups: "grads" then e.g. "loss", "norms"
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigSpec {
+    pub name: String,
+    pub model: String,
+    pub dataset: String,
+    pub batch: usize,
+    pub n_classes: usize,
+    pub tags: Vec<String>,
+    pub input_shape: Vec<usize>,
+    pub input_dtype: String, // "f32" | "i32"
+    /// pre-activation (tap) elements per example — memory model input
+    pub act_elems_per_example: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ConfigSpec {
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn artifact(&self, method: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(method).with_context(|| {
+            format!(
+                "config {} has no `{}` artifact (has: {:?})",
+                self.name,
+                method,
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn has_tag(&self, tag: &str) -> bool {
+        self.tags.iter().any(|t| t == tag)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = crate::util::read_file(&path)?;
+        let root = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(dir, &root)
+    }
+
+    pub fn from_json(dir: &Path, root: &Json) -> Result<Manifest> {
+        let mut configs = BTreeMap::new();
+        let cfgs = root
+            .get("configs")
+            .as_obj()
+            .context("manifest missing `configs`")?;
+        for (name, c) in cfgs {
+            let mut params = Vec::new();
+            for p in c.get("params").as_arr().unwrap_or(&[]) {
+                params.push(ParamSpec {
+                    name: p.get("name").as_str().unwrap_or("?").to_string(),
+                    shape: usizes(p.get("shape"))?,
+                });
+            }
+            let mut artifacts = BTreeMap::new();
+            if let Some(arts) = c.get("artifacts").as_obj() {
+                for (method, a) in arts {
+                    artifacts.insert(
+                        method.clone(),
+                        ArtifactSpec {
+                            method: method.clone(),
+                            file: a
+                                .get("file")
+                                .as_str()
+                                .context("artifact missing file")?
+                                .to_string(),
+                            extra_args: strings(a.get("extra_args")),
+                            outputs: strings(a.get("outputs")),
+                        },
+                    );
+                }
+            }
+            let spec = ConfigSpec {
+                name: name.clone(),
+                model: c.get("model").as_str().unwrap_or("?").to_string(),
+                dataset: c.get("dataset").as_str().unwrap_or("?").to_string(),
+                batch: c.get("batch").as_usize().context("missing batch")?,
+                n_classes: c.get("n_classes").as_usize().unwrap_or(0),
+                tags: strings(c.get("tags")),
+                input_shape: usizes(c.get("input").get("shape"))?,
+                input_dtype: c
+                    .get("input")
+                    .get("dtype")
+                    .as_str()
+                    .unwrap_or("f32")
+                    .to_string(),
+                act_elems_per_example: c
+                    .get("act_elems_per_example")
+                    .as_usize()
+                    .unwrap_or(0),
+                params,
+                artifacts,
+            };
+            configs.insert(name.clone(), spec);
+        }
+        if configs.is_empty() {
+            bail!("manifest has no configs — run `make artifacts`");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigSpec> {
+        self.configs.get(name).with_context(|| {
+            format!(
+                "unknown config {:?}; available: {:?}",
+                name,
+                self.configs.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Configs carrying an experiment tag (e.g. "fig5"), sorted by name.
+    pub fn by_tag(&self, tag: &str) -> Vec<&ConfigSpec> {
+        self.configs.values().filter(|c| c.has_tag(tag)).collect()
+    }
+
+    /// The batch-1 naive (nxBP body) config for a batched config.
+    pub fn naive_config(&self, name: &str) -> Result<&ConfigSpec> {
+        let base = name.rsplit_once("_b").map(|(b, _)| b).unwrap_or(name);
+        self.config(&format!("{base}_b1"))
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+fn usizes(j: &Json) -> Result<Vec<usize>> {
+    let arr = j.as_arr().context("expected array")?;
+    arr.iter()
+        .map(|v| v.as_usize().context("expected number"))
+        .collect()
+}
+
+fn strings(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+              "version": 1,
+              "configs": {
+                "mlp2_mnist_b32": {
+                  "model": "mlp", "dataset": "mnist", "batch": 32,
+                  "n_classes": 10, "tags": ["fig5"],
+                  "input": {"shape": [32,1,28,28], "dtype": "f32"},
+                  "label": {"shape": [32], "dtype": "i32"},
+                  "params": [
+                    {"name": "fc0.w", "shape": [784,128]},
+                    {"name": "fc0.b", "shape": [128]}
+                  ],
+                  "artifacts": {
+                    "reweight": {"file": "m.reweight.hlo.txt",
+                                  "extra_args": ["clip"],
+                                  "outputs": ["grads","loss","norms"]}
+                  }
+                },
+                "mlp2_mnist_b1": {
+                  "model": "mlp", "dataset": "mnist", "batch": 1,
+                  "n_classes": 10, "tags": ["naive"],
+                  "input": {"shape": [1,1,28,28], "dtype": "f32"},
+                  "label": {"shape": [1], "dtype": "i32"},
+                  "params": [], "artifacts": {}
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample()).unwrap();
+        let c = m.config("mlp2_mnist_b32").unwrap();
+        assert_eq!(c.batch, 32);
+        assert_eq!(c.params.len(), 2);
+        assert_eq!(c.param_elems(), 784 * 128 + 128);
+        assert_eq!(c.input_elems(), 32 * 784);
+        let a = c.artifact("reweight").unwrap();
+        assert_eq!(a.extra_args, vec!["clip"]);
+        assert!(c.artifact("nope").is_err());
+        assert!(c.has_tag("fig5"));
+        assert_eq!(m.by_tag("fig5").len(), 1);
+    }
+
+    #[test]
+    fn naive_lookup() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample()).unwrap();
+        let n = m.naive_config("mlp2_mnist_b32").unwrap();
+        assert_eq!(n.batch, 1);
+    }
+
+    #[test]
+    fn missing_configs_rejected() {
+        let j = Json::parse(r#"{"configs": {}}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+}

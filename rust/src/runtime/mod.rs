@@ -1,0 +1,20 @@
+//! Runtime layer: loads AOT artifacts (HLO text) and executes them on
+//! the PJRT CPU client. See DESIGN.md §7 for the ABI.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{
+    init_params_glorot, run_step, BatchStage, Engine, ParamStore, StepExe,
+    StepOut,
+};
+pub use manifest::{ArtifactSpec, ConfigSpec, Manifest, ParamSpec};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: $FASTCLIP_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("FASTCLIP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,119 @@
+//! testkit::prop — a tiny property-testing harness (no `proptest` in
+//! the offline crate set): seeded random case generation + invariant
+//! checks with counterexample reporting.
+//!
+//! ```ignore
+//! prop::check(100, |g| {
+//!     let n = g.usize_in(1..500);
+//!     let tau = g.usize_in(1..=n);
+//!     ... assert invariant, or return Err(msg) ...
+//! });
+//! ```
+
+pub mod prop {
+    use crate::rng::ChaCha20;
+
+    /// Per-case generator handle.
+    pub struct Gen {
+        rng: ChaCha20,
+        pub case: usize,
+    }
+
+    impl Gen {
+        pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+            assert!(range.end > range.start);
+            range.start
+                + self.rng.next_bounded((range.end - range.start) as u64) as usize
+        }
+
+        pub fn usize_incl(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+            let (lo, hi) = (*range.start(), *range.end());
+            lo + self.rng.next_bounded((hi - lo + 1) as u64) as usize
+        }
+
+        pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+            lo + self.rng.next_f64() * (hi - lo)
+        }
+
+        pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+            (0..n)
+                .map(|_| lo + self.rng.next_f32() * (hi - lo))
+                .collect()
+        }
+
+        pub fn bool(&mut self) -> bool {
+            self.rng.next_u32() & 1 == 1
+        }
+
+        pub fn u64(&mut self) -> u64 {
+            self.rng.next_u64()
+        }
+
+        pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+            &xs[self.usize_in(0..xs.len())]
+        }
+    }
+
+    /// Run `cases` random cases of `f`; panics with the failing case
+    /// index + seed on the first counterexample so it can be replayed.
+    pub fn check<F>(cases: usize, mut f: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        let seed = std::env::var("FASTCLIP_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xF457C11Fu64);
+        for case in 0..cases {
+            let mut g = Gen {
+                rng: ChaCha20::seeded(seed, case as u64),
+                case,
+            };
+            if let Err(msg) = f(&mut g) {
+                panic!(
+                    "property failed at case {case} (seed {seed}, replay with FASTCLIP_PROP_SEED={seed}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+
+    #[test]
+    fn generators_respect_ranges() {
+        prop::check(200, |g| {
+            let a = g.usize_in(3..10);
+            if !(3..10).contains(&a) {
+                return Err(format!("usize_in out of range: {a}"));
+            }
+            let b = g.usize_incl(5..=5);
+            if b != 5 {
+                return Err(format!("usize_incl degenerate: {b}"));
+            }
+            let x = g.f64_in(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&x) {
+                return Err(format!("f64_in out of range: {x}"));
+            }
+            let v = g.f32_vec(4, 0.0, 2.0);
+            if v.len() != 4 || v.iter().any(|&y| !(0.0..2.0).contains(&y)) {
+                return Err(format!("f32_vec bad: {v:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failures_are_reported() {
+        prop::check(10, |g| {
+            if g.case == 7 {
+                Err("intentional".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

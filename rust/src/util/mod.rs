@@ -1,0 +1,81 @@
+//! General-purpose substrates: JSON, logging, statistics.
+
+pub mod json;
+pub mod logging;
+pub mod stats;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Read a whole file into a string with a path-carrying error.
+pub fn read_file(path: &Path) -> Result<String> {
+    std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))
+}
+
+/// Write a string to a file, creating parent dirs.
+pub fn write_file(path: &Path, contents: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("mkdir -p {}", parent.display()))?;
+    }
+    std::fs::write(path, contents)
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Peak resident set size of this process in bytes (VmHWM from
+/// /proc/self/status) — used by the memory experiment (§6.7).
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", n, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn peak_rss_available_on_linux() {
+        let rss = peak_rss_bytes();
+        assert!(rss.is_some());
+        assert!(rss.unwrap() > 1024 * 1024); // a process uses >1MiB
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("fastclip_util_test");
+        let path = dir.join("sub/file.txt");
+        write_file(&path, "hello").unwrap();
+        assert_eq!(read_file(&path).unwrap(), "hello");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,209 @@
+//! Property tests (testkit::prop, the offline proptest substitute) on
+//! coordinator invariants: routing/batching/state management must hold
+//! for arbitrary shapes and seeds, not just the benchmark configs.
+
+use fastclip::data::{PoissonSampler, ShuffleBatcher};
+use fastclip::optim::{Adam, Optimizer, Sgd};
+use fastclip::privacy::{calibrate_sigma, epsilon_for, RdpAccountant};
+use fastclip::rng::{ChaCha20, Gaussian};
+use fastclip::testkit::prop;
+use std::collections::HashSet;
+
+/// Every epoch of the shuffle batcher is an exact partition of the
+/// dataset (each index exactly once across full batches).
+#[test]
+fn prop_shuffle_batcher_partitions_epoch() {
+    prop::check(60, |g| {
+        let n = g.usize_in(8..400);
+        let tau = g.usize_incl(1..=n);
+        let mut b = ShuffleBatcher::new(n, tau, g.u64());
+        let mut seen = HashSet::new();
+        for _ in 0..b.batches_per_epoch() {
+            for i in b.next_batch() {
+                if i >= n {
+                    return Err(format!("index {i} out of range {n}"));
+                }
+                if !seen.insert(i) {
+                    return Err(format!("index {i} repeated within epoch"));
+                }
+            }
+        }
+        let expect = (n / tau) * tau;
+        if seen.len() != expect {
+            return Err(format!("covered {} of {expect}", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Poisson batches always match the executable's fixed batch shape and
+/// stay in range.
+#[test]
+fn prop_poisson_batches_fixed_shape() {
+    prop::check(60, |g| {
+        let n = g.usize_in(8..500);
+        let tau = g.usize_incl(1..=n);
+        let mut p = PoissonSampler::new(n, tau, g.u64());
+        for _ in 0..5 {
+            let b = p.next_batch();
+            if b.len() != tau {
+                return Err(format!("batch len {} != {tau}", b.len()));
+            }
+            if b.iter().any(|&i| i >= n) {
+                return Err("index out of range".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Clip factor nu = min(1, c/norm): the reweighted norm never exceeds
+/// c and direction is preserved (sign of every coordinate unchanged).
+#[test]
+fn prop_clip_factor_bounds() {
+    prop::check(200, |g| {
+        let n = g.usize_in(1..64);
+        let v = g.f32_vec(n, -5.0, 5.0);
+        let c = g.f64_in(0.01, 3.0) as f32;
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nu = if norm > c { c / norm } else { 1.0 };
+        let clipped: Vec<f32> = v.iter().map(|x| nu * x).collect();
+        let cnorm = clipped.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if cnorm > c * 1.0001 && norm > c {
+            return Err(format!("clipped norm {cnorm} > c {c}"));
+        }
+        if norm <= c && (cnorm - norm).abs() > 1e-6 {
+            return Err("clip modified an in-bounds vector".into());
+        }
+        for (a, b) in v.iter().zip(&clipped) {
+            if a.signum() != b.signum() && *a != 0.0 && *b != 0.0 {
+                return Err("clip flipped a sign".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Accountant monotonicity in all three knobs, for arbitrary settings.
+#[test]
+fn prop_accountant_monotone() {
+    prop::check(80, |g| {
+        let q = g.f64_in(0.001, 0.5);
+        let sigma = g.f64_in(0.5, 5.0);
+        let steps = g.usize_in(1..2000) as u64;
+        let delta = 1e-5;
+        let base = epsilon_for(q, sigma, steps, delta);
+        if !(base.is_finite() && base >= 0.0) {
+            return Err(format!("eps not finite: {base}"));
+        }
+        if epsilon_for(q, sigma, steps + 100, delta) < base {
+            return Err("eps decreased with more steps".into());
+        }
+        if epsilon_for(q, sigma * 1.5, steps, delta) > base {
+            return Err("eps increased with more noise".into());
+        }
+        if epsilon_for((q * 1.5).min(1.0), sigma, steps, delta) < base {
+            return Err("eps decreased with more sampling".into());
+        }
+        Ok(())
+    });
+}
+
+/// Calibration post-condition: returned sigma meets the budget.
+#[test]
+fn prop_calibration_meets_budget() {
+    prop::check(25, |g| {
+        let q = g.f64_in(0.001, 0.2);
+        let steps = g.usize_in(10..3000) as u64;
+        let eps = g.f64_in(0.3, 8.0);
+        let delta = 1e-5;
+        match calibrate_sigma(q, steps, eps, delta) {
+            None => Ok(()), // infeasible is a legal answer
+            Some(sigma) => {
+                let spent = epsilon_for(q, sigma, steps, delta);
+                if spent > eps + 1e-6 {
+                    Err(format!("sigma {sigma} spends {spent} > {eps}"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    });
+}
+
+/// Composition order never matters (Lemma 3 is a sum).
+#[test]
+fn prop_composition_commutes() {
+    prop::check(40, |g| {
+        let steps: Vec<(f64, f64)> = (0..g.usize_in(2..6))
+            .map(|_| (g.f64_in(0.001, 0.3), g.f64_in(0.6, 3.0)))
+            .collect();
+        let mut fwd = RdpAccountant::new();
+        for &(q, s) in &steps {
+            fwd.step(q, s);
+        }
+        let mut rev = RdpAccountant::new();
+        for &(q, s) in steps.iter().rev() {
+            rev.step(q, s);
+        }
+        let (a, _) = fwd.epsilon(1e-5);
+        let (b, _) = rev.epsilon(1e-5);
+        if (a - b).abs() > 1e-9 {
+            return Err(format!("composition not commutative: {a} vs {b}"));
+        }
+        Ok(())
+    });
+}
+
+/// Optimizer state invariants: finite params under arbitrary bounded
+/// gradients, zero gradient is a fixed point for SGD.
+#[test]
+fn prop_optimizers_stay_finite() {
+    prop::check(40, |g| {
+        let n_tensors = g.usize_in(1..4);
+        let sizes: Vec<usize> = (0..n_tensors).map(|_| g.usize_in(1..64)).collect();
+        let mut params: Vec<Vec<f32>> =
+            sizes.iter().map(|&n| g.f32_vec(n, -1.0, 1.0)).collect();
+        let mut adam = Adam::new(g.f64_in(1e-4, 1e-1));
+        let mut sgd = Sgd::new(g.f64_in(1e-4, 1e-1));
+        let mut noise = Gaussian::new(ChaCha20::seeded(g.u64(), 0));
+        for _ in 0..20 {
+            let mut grads: Vec<Vec<f32>> =
+                sizes.iter().map(|&n| vec![0.0f32; n]).collect();
+            for gr in grads.iter_mut() {
+                noise.add_noise_f32(gr, 2.0);
+            }
+            adam.step(&mut params, &grads);
+        }
+        if params.iter().flatten().any(|x| !x.is_finite()) {
+            return Err("adam produced non-finite params".into());
+        }
+        let snapshot = params.clone();
+        let zero: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        sgd.step(&mut params, &zero);
+        if params != snapshot {
+            return Err("sgd moved on zero gradient".into());
+        }
+        Ok(())
+    });
+}
+
+/// Gaussian noise scale: empirical stddev tracks sigma across
+/// magnitudes (the mechanism calibration depends on this).
+#[test]
+fn prop_noise_scale_tracks_sigma() {
+    prop::check(15, |g| {
+        let sigma = g.f64_in(0.05, 10.0);
+        let mut gauss = Gaussian::new(ChaCha20::seeded(g.u64(), 1));
+        let mut buf = vec![0f32; 4000];
+        gauss.add_noise_f32(&mut buf, sigma);
+        let mean = buf.iter().sum::<f32>() as f64 / buf.len() as f64;
+        let var = buf.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+            / buf.len() as f64;
+        let rel = (var.sqrt() - sigma).abs() / sigma;
+        if rel > 0.12 {
+            return Err(format!("stddev {} vs sigma {sigma}", var.sqrt()));
+        }
+        Ok(())
+    });
+}

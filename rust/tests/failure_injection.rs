@@ -1,0 +1,155 @@
+//! Failure-injection tests: the coordinator must fail loudly and
+//! legibly on corrupt inputs — silent misconfiguration in a DP system
+//! is a privacy bug, not just a reliability bug.
+
+use fastclip::coordinator::{train, ClipMethod, TrainOptions};
+use fastclip::runtime::{artifacts_dir, Engine, Manifest, ParamStore};
+use fastclip::util::json::Json;
+use std::path::Path;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("fastclip_fail_{name}"));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let d = tmp_dir("nomanifest");
+    let err = match Engine::from_dir(&d) {
+        Ok(_) => panic!("engine built without a manifest"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest.json"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn empty_manifest_rejected() {
+    let d = tmp_dir("empty");
+    std::fs::write(d.join("manifest.json"), r#"{"configs": {}}"#).unwrap();
+    let err = match Engine::from_dir(&d) {
+        Ok(_) => panic!("engine built from empty manifest"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let d = tmp_dir("corrupt");
+    std::fs::write(d.join("manifest.json"), "{not json").unwrap();
+    assert!(Engine::from_dir(&d).is_err());
+}
+
+#[test]
+fn missing_artifact_file_fails_at_load() {
+    // manifest points at an hlo file that does not exist
+    let d = tmp_dir("missingfile");
+    let manifest = r#"{
+      "configs": {
+        "ghost_b2": {
+          "model": "mlp", "dataset": "mnist", "batch": 2, "n_classes": 10,
+          "tags": [], "input": {"shape": [2, 784], "dtype": "f32"},
+          "label": {"shape": [2], "dtype": "i32"},
+          "params": [{"name": "w", "shape": [784, 10]}],
+          "artifacts": {"nonprivate": {"file": "ghost.hlo.txt",
+                          "extra_args": [], "outputs": ["grads", "loss"]}}
+        }
+      }
+    }"#;
+    std::fs::write(d.join("manifest.json"), manifest).unwrap();
+    let engine = Engine::from_dir(&d).unwrap();
+    let cfg = engine.manifest.config("ghost_b2").unwrap();
+    let err = match engine.load(cfg, "nonprivate") {
+        Ok(_) => panic!("load of missing artifact succeeded"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("ghost.hlo.txt"));
+}
+
+#[test]
+fn garbage_hlo_text_fails_at_compile() {
+    let d = tmp_dir("badhlo");
+    let manifest = r#"{
+      "configs": {
+        "bad_b2": {
+          "model": "mlp", "dataset": "mnist", "batch": 2, "n_classes": 10,
+          "tags": [], "input": {"shape": [2, 784], "dtype": "f32"},
+          "label": {"shape": [2], "dtype": "i32"},
+          "params": [],
+          "artifacts": {"nonprivate": {"file": "bad.hlo.txt",
+                          "extra_args": [], "outputs": ["grads", "loss"]}}
+        }
+      }
+    }"#;
+    std::fs::write(d.join("manifest.json"), manifest).unwrap();
+    std::fs::write(d.join("bad.hlo.txt"), "ENTRY garbage { this is not hlo }")
+        .unwrap();
+    let engine = Engine::from_dir(&d).unwrap();
+    let cfg = engine.manifest.config("bad_b2").unwrap();
+    assert!(engine.load(cfg, "nonprivate").is_err());
+}
+
+#[test]
+fn unknown_config_and_method_errors_name_the_problem() {
+    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
+    let err = engine.manifest.config("no_such_config").unwrap_err();
+    assert!(format!("{err:#}").contains("no_such_config"));
+    let cfg = engine.manifest.config("mlp2_mnist_b32").unwrap();
+    let err = cfg.artifact("no_such_method").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no_such_method") && msg.contains("mlp2_mnist_b32"));
+}
+
+#[test]
+fn train_rejects_dataset_smaller_than_batch() {
+    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::NonPrivate,
+        steps: 1,
+        dataset_n: 8, // < batch 32
+        log_every: 0,
+        ..Default::default()
+    };
+    assert!(train(&engine, &opts).is_err());
+}
+
+#[test]
+fn param_store_rejects_wrong_init_length() {
+    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
+    let cfg = engine.manifest.config("mlp2_mnist_b32").unwrap();
+    let too_short = vec![0.0f32; cfg.param_elems() - 1];
+    assert!(ParamStore::new(cfg, Some(&too_short)).is_err());
+}
+
+#[test]
+fn manifest_reload_roundtrip() {
+    // the shipped manifest parses, and re-serializing the parsed view
+    // of one config keeps the fields we depend on
+    let m = Manifest::load(Path::new(&artifacts_dir())).unwrap();
+    let cfg = m.config("cnn_mnist_b32").unwrap();
+    assert_eq!(cfg.batch, 32);
+    assert!(cfg.act_elems_per_example > 10_000); // conv feature maps
+    let mut j = Json::obj();
+    j.set("batch", cfg.batch.into());
+    assert_eq!(Json::parse(&j.to_string()).unwrap().get("batch").as_usize(), Some(32));
+}
+
+#[test]
+fn infeasible_privacy_target_is_an_error_not_a_silent_fallback() {
+    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 100_000,
+        dataset_n: 64, // q = 0.5: brutal
+        target_eps: Some(0.01),
+        log_every: 0,
+        ..Default::default()
+    };
+    let err = train(&engine, &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("infeasible"));
+}

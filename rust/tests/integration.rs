@@ -1,0 +1,280 @@
+//! Integration tests over real AOT artifacts: the paper's central
+//! correctness claim (all clipping strategies produce identical
+//! gradients), end-to-end training behaviour, and checkpointing.
+//!
+//! Requires `make artifacts` to have run (CI: these are repo-relative).
+
+use fastclip::coordinator::{
+    stage_batch, train, ClipMethod, GradComputer, TrainOptions,
+};
+use fastclip::data;
+use fastclip::runtime::{
+    artifacts_dir, init_params_glorot, BatchStage, Engine, ParamStore,
+};
+use std::sync::OnceLock;
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        Engine::from_dir(&artifacts_dir()).expect(
+            "artifacts not found — run `make artifacts` before `cargo test`",
+        )
+    })
+}
+
+/// Max relative difference between two gradient sets.
+fn max_rel_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    let mut worst = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.len(), y.len());
+        for (&u, &v) in x.iter().zip(y) {
+            let denom = u.abs().max(v.abs()).max(1e-3);
+            worst = worst.max((u - v).abs() / denom);
+        }
+    }
+    worst
+}
+
+fn run_method(config: &str, method: ClipMethod, clip: f32) -> fastclip::runtime::StepOut {
+    let eng = engine();
+    let cfg = eng.manifest.config(config).unwrap().clone();
+    let ds = data::load_dataset(&cfg.dataset, 256, 7).unwrap();
+    let mut stage = BatchStage::for_config(&cfg);
+    let batch: Vec<usize> = (0..cfg.batch).collect();
+    stage_batch(&ds, &batch, &mut stage);
+    let mut params =
+        ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 11))).unwrap();
+    let mut computer = GradComputer::new(eng, config, method).unwrap();
+    computer.compute(&mut params, &stage, clip).unwrap()
+}
+
+/// The paper's equivalence claim (Sec 5): ReweightGP == multiLoss ==
+/// nxBP gradients, bitwise up to float reassociation.
+#[test]
+fn all_private_methods_agree_mlp() {
+    let clip = 0.5; // low threshold so clipping is active
+    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, clip);
+    let ml = run_method("mlp2_mnist_b32", ClipMethod::MultiLoss, clip);
+    let nx = run_method("mlp2_mnist_b32", ClipMethod::NxBp, clip);
+    assert!(max_rel_diff(&rw.grads, &ml.grads) < 2e-3, "reweight vs multiloss");
+    assert!(max_rel_diff(&rw.grads, &nx.grads) < 2e-3, "reweight vs nxbp");
+    // per-example norms agree too
+    let (nr, nm) = (rw.norms.unwrap(), ml.norms.unwrap());
+    for (a, b) in nr.iter().zip(&nm) {
+        assert!((a - b).abs() / b.max(1e-3) < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn all_private_methods_agree_cnn() {
+    let clip = 0.5;
+    let rw = run_method("cnn_mnist_b32", ClipMethod::Reweight, clip);
+    let ml = run_method("cnn_mnist_b32", ClipMethod::MultiLoss, clip);
+    let nx = run_method("cnn_mnist_b32", ClipMethod::NxBp, clip);
+    assert!(max_rel_diff(&rw.grads, &ml.grads) < 2e-3);
+    assert!(max_rel_diff(&rw.grads, &nx.grads) < 2e-3);
+}
+
+#[test]
+fn pallas_backend_matches_jnp() {
+    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, 0.5);
+    let pl = run_method("mlp2_mnist_b32", ClipMethod::ReweightPallas, 0.5);
+    assert!(max_rel_diff(&rw.grads, &pl.grads) < 1e-3);
+}
+
+#[test]
+fn direct_extension_matches_two_backward() {
+    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, 0.5);
+    let dr = run_method("mlp2_mnist_b32", ClipMethod::ReweightDirect, 0.5);
+    assert!(max_rel_diff(&rw.grads, &dr.grads) < 1e-3);
+    let cw = run_method("cnn_mnist_b32", ClipMethod::Reweight, 0.5);
+    let cd = run_method("cnn_mnist_b32", ClipMethod::ReweightDirect, 0.5);
+    assert!(max_rel_diff(&cw.grads, &cd.grads) < 1e-3);
+}
+
+#[test]
+fn gram_extension_matches_materialized_rnn() {
+    let rw = run_method("rnn_mnist_b32", ClipMethod::Reweight, 0.5);
+    let gr = run_method("rnn_mnist_b32", ClipMethod::ReweightGram, 0.5);
+    assert!(max_rel_diff(&rw.grads, &gr.grads) < 1e-3);
+}
+
+#[test]
+fn transformer_methods_agree() {
+    let rw = run_method("transformer_imdb_b32", ClipMethod::Reweight, 0.5);
+    let ml = run_method("transformer_imdb_b32", ClipMethod::MultiLoss, 0.5);
+    assert!(max_rel_diff(&rw.grads, &ml.grads) < 2e-3);
+}
+
+/// Clipped gradient norm never exceeds c (the mechanism's sensitivity
+/// bound, Definition 4 — this is what the privacy proof rests on).
+#[test]
+fn clipped_gradient_norm_bounded() {
+    let clip = 0.25f32;
+    let out = run_method("mlp2_mnist_b32", ClipMethod::Reweight, clip);
+    let tau = 32.0f32;
+    // ||1/tau sum_i clip(g_i)|| <= 1/tau * tau * c = c
+    let total_sq: f32 = out
+        .grads
+        .iter()
+        .flat_map(|g| g.iter())
+        .map(|&x| x * x)
+        .sum();
+    assert!(
+        total_sq.sqrt() <= clip * 1.01,
+        "averaged clipped grad norm {} > clip {}",
+        total_sq.sqrt(),
+        clip
+    );
+    // and with per-example norms >= clip, each contribution is exactly c
+    let norms = out.norms.unwrap();
+    assert!(norms.iter().all(|&n| n > 0.0));
+    let _ = tau;
+}
+
+/// Unclipped (nonprivate) differs from clipped when clipping is active.
+#[test]
+fn clipping_changes_gradient() {
+    let non = run_method("mlp2_mnist_b32", ClipMethod::NonPrivate, 1.0);
+    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, 0.05);
+    assert!(max_rel_diff(&non.grads, &rw.grads) > 0.05);
+}
+
+/// Loss decreases over a short nonprivate run (training actually
+/// optimizes) and stays finite under DP noise.
+#[test]
+fn training_loss_decreases() {
+    let eng = engine();
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::NonPrivate,
+        steps: 60,
+        dataset_n: 512,
+        lr: 2e-3,
+        log_every: 0,
+        seed: 1,
+        ..Default::default()
+    };
+    let report = train(eng, &opts).unwrap();
+    let first: f32 = report.losses[..10].iter().sum::<f32>() / 10.0;
+    let last: f32 = report.losses[50..].iter().sum::<f32>() / 10.0;
+    assert!(
+        last < first - 0.1,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn dp_training_stays_finite_and_accounts() {
+    let eng = engine();
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 30,
+        dataset_n: 512,
+        sigma: 1.1,
+        log_every: 0,
+        seed: 2,
+        ..Default::default()
+    };
+    let report = train(eng, &opts).unwrap();
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let (eps, order) = report.epsilon.unwrap();
+    assert!(eps > 0.0 && eps < 50.0, "eps {eps}");
+    assert!(order >= 2);
+}
+
+/// Same seed => identical run; different seed => different noise.
+#[test]
+fn training_is_deterministic_per_seed() {
+    let eng = engine();
+    let mk = |seed| TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 10,
+        dataset_n: 256,
+        log_every: 0,
+        seed,
+        ..Default::default()
+    };
+    let a = train(eng, &mk(5)).unwrap();
+    let b = train(eng, &mk(5)).unwrap();
+    let c = train(eng, &mk(6)).unwrap();
+    assert_eq!(a.losses, b.losses);
+    assert_ne!(a.losses, c.losses);
+}
+
+/// Target-epsilon calibration path: requested budget is respected.
+#[test]
+fn target_epsilon_calibration() {
+    let eng = engine();
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 25,
+        dataset_n: 512,
+        target_eps: Some(1.5),
+        delta: 1e-5,
+        log_every: 0,
+        ..Default::default()
+    };
+    let report = train(eng, &opts).unwrap();
+    let (eps, _) = report.epsilon.unwrap();
+    assert!(eps <= 1.5 + 1e-6, "spent {eps} > budget 1.5");
+    assert!(report.sigma > 0.3);
+}
+
+/// Checkpoint round-trip through the trainer.
+#[test]
+fn checkpoint_roundtrip() {
+    let eng = engine();
+    let dir = std::env::temp_dir().join("fastclip_it_ckpt");
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 5,
+        dataset_n: 256,
+        log_every: 0,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    train(eng, &opts).unwrap();
+    let cfg = eng.manifest.config("mlp2_mnist_b32").unwrap();
+    let (meta, flat) =
+        fastclip::coordinator::checkpoint::load(&dir, cfg).unwrap();
+    assert_eq!(meta.step, 5);
+    assert_eq!(flat.len(), cfg.param_elems());
+    assert!(flat.iter().all(|x| x.is_finite()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Poisson-sampling mode runs and matches the fixed batch ABI.
+#[test]
+fn poisson_sampling_mode() {
+    let eng = engine();
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 8,
+        dataset_n: 512,
+        poisson: true,
+        log_every: 0,
+        ..Default::default()
+    };
+    let report = train(eng, &opts).unwrap();
+    assert_eq!(report.losses.len(), 8);
+}
+
+/// Every fig5 config's fwd + reweight artifacts load and execute.
+#[test]
+fn all_fig5_configs_execute() {
+    let eng = engine();
+    for cfg in eng.manifest.by_tag("fig5") {
+        let out = run_method(&cfg.name, ClipMethod::Reweight, 1.0);
+        assert!(out.loss.is_finite(), "{} loss", cfg.name);
+        assert_eq!(out.grads.len(), cfg.params.len(), "{}", cfg.name);
+        for (g, p) in out.grads.iter().zip(&cfg.params) {
+            assert_eq!(g.len(), p.elems(), "{}.{}", cfg.name, p.name);
+        }
+    }
+}
