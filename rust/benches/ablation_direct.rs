@@ -7,12 +7,13 @@
 //! pass dominates (MLP, CNN); both remain exactly
 //! gradient-equivalent (tested in test_clipping.py).
 
-use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::driver::{bench_backend, StepRunner};
 use fastclip::bench::{BenchOpts, Suite};
 use fastclip::coordinator::ClipMethod;
+use fastclip::runtime::Backend;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("ablation_direct");
 
     let configs = [
@@ -26,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     ];
     let mut rows = Vec::new();
     for config in configs {
-        let cfg = engine.manifest.config(config)?;
+        let cfg = engine.manifest().config(config)?;
         if !cfg.artifacts.contains_key("reweight_direct") {
             eprintln!("  (skip {config}: no reweight_direct artifact)");
             continue;

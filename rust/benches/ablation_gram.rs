@@ -7,12 +7,12 @@
 //! RNN (T=28, m=n=128) it does ~7x less work per layer; for short
 //! sequences with wide layers the gap widens further.
 
-use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::driver::{bench_backend, StepRunner};
 use fastclip::bench::{BenchOpts, Suite};
 use fastclip::coordinator::ClipMethod;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("ablation_gram");
 
     let configs = ["rnn_mnist_b32", "lstm_mnist_b32", "transformer_imdb_b32"];

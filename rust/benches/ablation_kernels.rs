@@ -9,12 +9,12 @@
 //! path is the one that reaches the MXU — see DESIGN.md
 //! §Hardware-Adaptation for the static VMEM/MXU analysis.
 
-use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::driver::{bench_backend, StepRunner};
 use fastclip::bench::{BenchOpts, Suite};
 use fastclip::coordinator::ClipMethod;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("ablation_kernels");
 
     let configs = ["mlp2_mnist_b32", "cnn_mnist_b32", "transformer_imdb_b32"];

@@ -7,12 +7,12 @@
 //! dataset sizes. The *shape* to reproduce: ReweightGP within a small
 //! factor of Non-private; nxBP one-to-two orders of magnitude slower.
 
-use fastclip::bench::driver::{bench_engine, figure_methods, per_epoch_seconds, StepRunner};
+use fastclip::bench::driver::{bench_backend, figure_methods, per_epoch_seconds, StepRunner};
 use fastclip::bench::{BenchOpts, Suite};
 use fastclip::coordinator::ClipMethod;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("fig5_architectures");
 
     // (config, paper dataset size for the per-epoch extrapolation)

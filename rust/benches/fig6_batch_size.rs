@@ -5,12 +5,12 @@
 //! per-epoch time *decreases* with batch size (more parallelism);
 //! nxBP stays flat (backprop runs once per example regardless).
 
-use fastclip::bench::driver::{bench_engine, figure_methods, per_epoch_seconds, StepRunner};
+use fastclip::bench::driver::{bench_backend, figure_methods, per_epoch_seconds, StepRunner};
 use fastclip::bench::{BenchOpts, Suite};
 use fastclip::coordinator::ClipMethod;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("fig6_batch_size");
     let n_dataset = 60_000;
 

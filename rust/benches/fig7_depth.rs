@@ -6,12 +6,12 @@
 //! FMNIST shares MNIST's shapes, so it runs the MNIST-shaped artifact
 //! on FMNIST data (timing is shape-determined; DESIGN.md §5).
 
-use fastclip::bench::driver::{bench_engine, per_epoch_seconds, StepRunner};
+use fastclip::bench::driver::{bench_backend, per_epoch_seconds, StepRunner};
 use fastclip::bench::{speedup, BenchOpts, Suite};
 use fastclip::coordinator::ClipMethod;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("fig7_depth");
     let methods = [
         ClipMethod::NonPrivate,

@@ -7,12 +7,12 @@
 //! memory wall first (reported via the analytic model — CPU doesn't
 //! OOM — as the paper's "missing bar").
 
-use fastclip::bench::driver::{bench_engine, figure_methods, StepRunner};
+use fastclip::bench::driver::{bench_backend, figure_methods, StepRunner};
 use fastclip::bench::{speedup, BenchOpts, Suite};
 use fastclip::coordinator::{memory, ClipMethod};
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("fig8_deep_nets");
 
     let configs = [

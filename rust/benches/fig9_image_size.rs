@@ -6,12 +6,12 @@
 //! with image size — the extra per-layer norm work scales with the
 //! (quadratically growing) activation maps.
 
-use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::driver::{bench_backend, StepRunner};
 use fastclip::bench::{speedup, BenchOpts, Suite};
 use fastclip::coordinator::ClipMethod;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("fig9_image_size");
 
     let methods = [

@@ -6,13 +6,14 @@
 //! nxBP is batch-size-insensitive. ReweightGP on ResNet18 @ 32px ran
 //! at batch 500.
 
-use fastclip::bench::driver::{bench_engine, StepRunner};
+use fastclip::bench::driver::{bench_backend, StepRunner};
 use fastclip::bench::Suite;
 use fastclip::coordinator::{memory, ClipMethod};
+use fastclip::runtime::Backend;
 use fastclip::util;
 
 fn main() -> anyhow::Result<()> {
-    let engine = bench_engine();
+    let engine = bench_backend();
     let mut suite = Suite::new("tab_memory");
 
     // ---- 1. analytic model at paper scale ---------------------------
@@ -53,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         "cnn_mnist_b32",
         "mlp2_mnist_b32",
     ] {
-        let cfg = engine.manifest.config(name)?;
+        let cfg = engine.manifest().config(name)?;
         let fp = memory::Footprint::of(cfg, cfg.act_elems_per_example as u64);
         let mb = |m: &str| memory::max_batch(m, fp, 2 << 30);
         println!(

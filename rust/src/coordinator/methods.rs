@@ -3,18 +3,21 @@
 //! and bench harness.
 //!
 //! All private methods return identical gradients (tested in
-//! rust/tests/equivalence.rs); only the computational structure —
+//! rust/tests/integration.rs); only the computational structure —
 //! and therefore the wall clock — differs:
 //!
 //!   NonPrivate — one batched backward, no clipping (lower bound).
 //!   Reweight   — the paper: norms from taps, reweighted second
-//!                backward, all inside one fused HLO executable.
+//!                backward, all inside one step executable.
 //!   MultiLoss  — materialized per-example gradients (vmap of grad).
 //!   NxBp       — TF-Privacy-style loop: one backward per example on a
-//!                batch-1 executable; Rust clips and accumulates.
+//!                batch-1 step; Rust clips and accumulates.
+//!
+//! Everything here goes through the `Backend`/`StepFn` traits, so the
+//! same dispatch drives the native and PJRT implementations.
 
 use crate::runtime::{
-    run_step, BatchStage, ConfigSpec, Engine, ParamStore, StepExe, StepOut,
+    Backend, BatchStage, ConfigSpec, ParamStore, StepFn, StepOut,
 };
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -95,7 +98,7 @@ impl ClipMethod {
 pub struct GradComputer {
     pub method: ClipMethod,
     pub cfg: ConfigSpec,
-    exe: Arc<StepExe>,
+    exe: Arc<dyn StepFn>,
     /// NxBp only: the batch-1 config + staging buffer
     naive: Option<NaiveLoop>,
 }
@@ -108,15 +111,19 @@ struct NaiveLoop {
 }
 
 impl GradComputer {
-    pub fn new(engine: &Engine, config: &str, method: ClipMethod) -> Result<GradComputer> {
-        let cfg = engine.manifest.config(config)?.clone();
+    pub fn new(
+        backend: &dyn Backend,
+        config: &str,
+        method: ClipMethod,
+    ) -> Result<GradComputer> {
+        let cfg = backend.manifest().config(config)?.clone();
         let (exe, naive) = if method == ClipMethod::NxBp {
-            let ncfg = engine
-                .manifest
+            let ncfg = backend
+                .manifest()
                 .naive_config(config)
                 .context("nxbp needs the batch-1 naive1 artifact")?
                 .clone();
-            let exe = engine.load(&ncfg, "naive1")?;
+            let exe = backend.load(&ncfg, "naive1")?;
             let stage = BatchStage::for_config(&ncfg);
             let acc = ncfg
                 .params
@@ -125,7 +132,7 @@ impl GradComputer {
                 .collect();
             (exe, Some(NaiveLoop { cfg: ncfg, stage, acc }))
         } else {
-            (engine.load(&cfg, method.artifact())?, None)
+            (backend.load(&cfg, method.artifact())?, None)
         };
         Ok(GradComputer { method, cfg, exe, naive })
     }
@@ -141,14 +148,12 @@ impl GradComputer {
         clip: f32,
     ) -> Result<StepOut> {
         match self.method {
-            ClipMethod::NonPrivate => run_step(&self.exe, params, stage, None),
+            ClipMethod::NonPrivate => self.exe.run(params, stage, None),
             ClipMethod::Reweight
             | ClipMethod::ReweightPallas
             | ClipMethod::ReweightGram
             | ClipMethod::ReweightDirect
-            | ClipMethod::MultiLoss => {
-                run_step(&self.exe, params, stage, Some(clip))
-            }
+            | ClipMethod::MultiLoss => self.exe.run(params, stage, Some(clip)),
             ClipMethod::NxBp => self.nxbp_loop(params, stage, clip),
         }
     }
@@ -166,6 +171,23 @@ impl GradComputer {
         let naive = self.naive.as_mut().expect("nxbp state");
         let tau = self.cfg.batch;
         let d = naive.cfg.input_elems(); // per-example elems (batch 1)
+        // The loop below slices example i out of the staged buffers; a
+        // partially staged batch would silently replay stale tail rows
+        // (or panic), so validate the full batch is really there.
+        let staged = if naive.stage.is_f32 {
+            stage.feat_f32.len()
+        } else {
+            stage.feat_i32.len()
+        };
+        anyhow::ensure!(
+            staged == tau * d && stage.labels.len() == tau,
+            "nxbp: staged batch holds {staged} feature elems / {} labels, \
+             but config {} needs {} / {tau} — stage the full batch before \
+             calling compute",
+            stage.labels.len(),
+            self.cfg.name,
+            tau * d
+        );
         for a in naive.acc.iter_mut() {
             a.iter_mut().for_each(|x| *x = 0.0);
         }
@@ -180,7 +202,7 @@ impl GradComputer {
                     .copy_from_slice(&stage.feat_i32[i * d..(i + 1) * d]);
             }
             naive.stage.labels[0] = stage.labels[i];
-            let out = run_step(&self.exe, params, &naive.stage, None)?;
+            let out = self.exe.run(params, &naive.stage, None)?;
             let norm = out.norms.as_ref().map(|n| n[0]).unwrap_or(0.0);
             let nu = if norm > clip { clip / norm } else { 1.0 };
             for (acc, g) in naive.acc.iter_mut().zip(&out.grads) {
@@ -206,7 +228,7 @@ impl GradComputer {
     }
 
     pub fn compile_ms(&self) -> f64 {
-        self.exe.compile_ms
+        self.exe.compile_ms()
     }
 }
 
@@ -228,5 +250,29 @@ mod tests {
         assert!(ClipMethod::Reweight.is_private());
         assert!(ClipMethod::NxBp.is_private());
         assert_eq!(ClipMethod::NxBp.artifact(), "naive1");
+    }
+
+    /// The partial-batch hazard: a stage holding fewer examples than
+    /// the config batch must be a clear error, not stale-data reuse.
+    #[test]
+    fn nxbp_rejects_partial_batch() {
+        use crate::runtime::NativeBackend;
+        let backend = NativeBackend::new();
+        let cfg = backend
+            .manifest()
+            .config("mlp2_mnist_b32")
+            .unwrap()
+            .clone();
+        let mut computer =
+            GradComputer::new(&backend, "mlp2_mnist_b32", ClipMethod::NxBp)
+                .unwrap();
+        let mut params = ParamStore::new(&cfg, None).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        stage.feat_f32.truncate(784 * 30); // 30 of 32 examples staged
+        let err = computer
+            .compute(&mut params, &stage, 1.0)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("nxbp") && msg.contains("stage"), "{msg}");
     }
 }

@@ -11,7 +11,7 @@ use crate::data::{self, Dataset, Features, PoissonSampler, ShuffleBatcher};
 use crate::optim;
 use crate::privacy::{calibrate_sigma, noise_stddev_for_mean, RdpAccountant};
 use crate::runtime::{
-    init_params_glorot, run_step, BatchStage, Engine, ParamStore,
+    init_params_glorot, Backend, BatchStage, ParamStore, StepFn,
 };
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -94,8 +94,8 @@ impl Sampler {
     }
 }
 
-pub fn train(engine: &Engine, opts: &TrainOptions) -> Result<TrainReport> {
-    let cfg = engine.manifest.config(&opts.config)?.clone();
+pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> {
+    let cfg = backend.manifest().config(&opts.config)?.clone();
     let tau = cfg.batch;
     anyhow::ensure!(
         opts.dataset_n >= tau,
@@ -128,9 +128,9 @@ pub fn train(engine: &Engine, opts: &TrainOptions) -> Result<TrainReport> {
     };
 
     // --- executables / params / optimizer ----------------------------
-    let mut computer = GradComputer::new(engine, &opts.config, opts.method)?;
+    let mut computer = GradComputer::new(backend, &opts.config, opts.method)?;
     let fwd_exe = if opts.eval_every > 0 {
-        Some(engine.load(&cfg, "fwd")?)
+        Some(backend.load(&cfg, "fwd")?)
     } else {
         None
     };
@@ -205,7 +205,8 @@ pub fn train(engine: &Engine, opts: &TrainOptions) -> Result<TrainReport> {
 
         if let (Some(fwd), Some(eds)) = (&fwd_exe, &eval_ds) {
             if (step + 1) % opts.eval_every == 0 {
-                let (l, a) = evaluate(fwd, &mut params, eds, &cfg.input_dtype, tau)?;
+                let (l, a) =
+                    evaluate(fwd.as_ref(), &mut params, eds, &cfg.input_dtype, tau)?;
                 metrics.record_eval(step + 1, l, a);
                 crate::log_info!(
                     "eval  step {:>5} loss={:.4} acc={:.3}",
@@ -273,9 +274,9 @@ pub fn stage_batch(ds: &Dataset, batch: &[usize], stage: &mut BatchStage) {
     }
 }
 
-/// Run the fwd artifact over the eval set; returns (mean loss, accuracy).
+/// Run the fwd step over the eval set; returns (mean loss, accuracy).
 fn evaluate(
-    fwd: &crate::runtime::StepExe,
+    fwd: &dyn StepFn,
     params: &mut ParamStore,
     eval_ds: &Dataset,
     input_dtype: &str,
@@ -305,7 +306,7 @@ fn evaluate(
     for b in 0..n_batches {
         let batch: Vec<usize> = (b * tau..(b + 1) * tau).collect();
         stage_batch(eval_ds, &batch, &mut stage);
-        let out = run_step(fwd, params, &stage, None)?;
+        let out = fwd.run(params, &stage, None)?;
         loss_sum += out.loss;
         correct_sum += out.correct.unwrap_or(0.0);
     }

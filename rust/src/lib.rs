@@ -1,12 +1,27 @@
 //! fastclip — differentially private deep learning with fast
 //! per-example gradient clipping (Lee & Kifer, 2020).
 //!
-//! Three-layer architecture (DESIGN.md):
-//!   L1/L2 (build time, Python): Pallas kernels + JAX step functions,
-//!     AOT-lowered to HLO text artifacts.
-//!   L3 (this crate): the coordinator — data pipeline, gradient-method
-//!     dispatch, RDP accounting, DP noise, optimizers, benchmarking —
-//!     executing the artifacts via the PJRT C API. No Python at runtime.
+//! Architecture: a coordinator (data pipeline, gradient-method
+//! dispatch, RDP accounting, DP noise, optimizers, benchmarking)
+//! driving pluggable execution backends through `runtime::Backend`:
+//!
+//!   - `runtime::native::NativeBackend` (default, always on): pure-Rust
+//!     forward/backward for the MLP config family, rayon-parallel over
+//!     examples, bitwise deterministic. Tier-1 (`cargo build --release
+//!     && cargo test -q`) runs entirely on this backend — no Python,
+//!     no artifacts, no xla.
+//!
+//!   - `runtime::engine::Engine` (cargo feature `pjrt`): executes AOT
+//!     HLO-text artifacts via the PJRT C API. The artifacts come from
+//!     the Python build path (python/compile: Pallas kernels + JAX step
+//!     functions, AOT-lowered; `make artifacts`) and cover the full
+//!     model zoo (CNN/RNN/LSTM/transformer and the reweight_pallas /
+//!     reweight_gram / reweight_direct kernel variants).
+//!
+//! Both backends implement the same step contract, so the paper's
+//! central equivalence claim (reweight == multiloss == nxbp clipped
+//! gradients) is tested hermetically on native and, when artifacts are
+//! present, cross-checked against the compiled path.
 
 pub mod bench;
 pub mod cli;

@@ -6,12 +6,16 @@
 //!   accountant  RDP accounting / sigma calibration queries
 //!   memory      Sec 6.7 memory model table for a config
 //!   inspect     list manifest configs and artifacts
+//!
+//! Every compute subcommand takes `--backend native|pjrt|auto`
+//! (default auto: PJRT when compiled in and artifacts exist, native
+//! otherwise).
 
 use anyhow::{Context, Result};
 use fastclip::cli::Args;
 use fastclip::coordinator::{memory, train, ClipMethod, GradComputer, TrainOptions};
 use fastclip::privacy;
-use fastclip::runtime::{artifacts_dir, BatchStage, Engine, ParamStore};
+use fastclip::runtime::{backend_by_name, Backend, BatchStage, ParamStore};
 use fastclip::util::json::Json;
 use fastclip::{log_info, util};
 
@@ -60,15 +64,23 @@ USAGE: fastclip <subcommand> [flags]
   memory      --config NAME [--budget-gib F]
   inspect     [--config NAME] [--tag TAG]
 
-Artifacts are read from $FASTCLIP_ARTIFACTS (default ./artifacts);
-build them with `make artifacts`."#
+All compute subcommands accept --backend native|pjrt|auto (default
+auto). The native backend runs the built-in MLP config family in pure
+Rust — no Python, no artifacts. The pjrt backend (requires building
+with --features pjrt) executes AOT HLO artifacts from
+$FASTCLIP_ARTIFACTS (default ./artifacts; build with `make artifacts`)."#
     );
 }
 
-fn engine() -> Result<Engine> {
-    let dir = artifacts_dir();
-    Engine::from_dir(&dir)
-        .with_context(|| format!("loading artifacts from {} (run `make artifacts`?)", dir.display()))
+fn backend(args: &Args) -> Result<Box<dyn Backend>> {
+    let b = backend_by_name(args.str_opt("backend")).with_context(|| {
+        format!(
+            "selecting backend {:?}",
+            args.str_or("backend", "auto")
+        )
+    })?;
+    log_info!("backend: {}", b.name());
+    Ok(b)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -89,8 +101,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_dir: args.str_opt("checkpoint").map(Into::into),
         poisson: args.bool("poisson"),
     };
-    let engine = engine()?;
-    let report = train(&engine, &opts)?;
+    let backend = backend(args)?;
+    let report = train(backend.as_ref(), &opts)?;
     if args.bool("json") {
         let mut j = report.metrics_json.clone();
         j.set("config", report.config.as_str().into());
@@ -109,7 +121,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             println!(
                 "privacy: ({:.3}, {:.0e})-DP via RDP order {}",
                 eps,
-                report.sigma.max(0.0).min(f64::MAX) * 0.0 + opts_delta(args)?,
+                opts_delta(args)?,
                 order
             );
         }
@@ -141,9 +153,9 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     let config = args.require("config")?.to_string();
     let method = ClipMethod::parse(&args.str_or("method", "reweight"))?;
     let iters = args.usize_or("iters", 10)?;
-    let engine = engine()?;
-    let cfg = engine.manifest.config(&config)?.clone();
-    let mut computer = GradComputer::new(&engine, &config, method)?;
+    let backend = backend(args)?;
+    let cfg = backend.manifest().config(&config)?.clone();
+    let mut computer = GradComputer::new(backend.as_ref(), &config, method)?;
     let ds = fastclip::data::load_dataset(&cfg.dataset, cfg.batch.max(256), 0)?;
     let mut stage = BatchStage::for_config(&cfg);
     let batch: Vec<usize> = (0..cfg.batch).collect();
@@ -199,8 +211,8 @@ fn cmd_accountant(args: &Args) -> Result<()> {
 fn cmd_memory(args: &Args) -> Result<()> {
     let config = args.require("config")?.to_string();
     let budget_gib = args.f64_or("budget-gib", 11.0)?; // 1080 Ti
-    let engine = engine()?;
-    let cfg = engine.manifest.config(&config)?;
+    let backend = backend(args)?;
+    let cfg = backend.manifest().config(&config)?;
     let fp = memory::Footprint::of(cfg, cfg.act_elems_per_example as u64);
     let budget = (budget_gib * (1u64 << 30) as f64) as u64;
     println!(
@@ -221,11 +233,12 @@ fn cmd_memory(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
-    let engine = engine()?;
+    let backend = backend(args)?;
     if let Some(name) = args.str_opt("config") {
-        let cfg = engine.manifest.config(name)?;
+        let cfg = backend.manifest().config(name)?;
         let mut j = Json::obj();
         j.set("name", cfg.name.as_str().into());
+        j.set("backend", backend.name().into());
         j.set("model", cfg.model.as_str().into());
         j.set("dataset", cfg.dataset.as_str().into());
         j.set("batch", cfg.batch.into());
@@ -243,7 +256,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         let tag = args.str_opt("tag");
         println!("| config | model | dataset | batch | params | artifacts |");
         println!("|---|---|---|---:|---:|---|");
-        for cfg in engine.manifest.configs.values() {
+        for cfg in backend.manifest().configs.values() {
             if let Some(t) = tag {
                 if !cfg.has_tag(t) {
                     continue;

@@ -1,0 +1,68 @@
+//! The execution-backend seam: "compile a (config, method) step and
+//! execute it", abstracted over *how* the math runs.
+//!
+//! Two implementations ship today:
+//!   - `runtime::native::NativeBackend` — pure-Rust forward/backward
+//!     for the MLP config family, always available, hermetic (the
+//!     default; what tier-1 CI exercises).
+//!   - `runtime::engine::Engine` (feature `pjrt`) — compiles AOT HLO
+//!     artifacts produced by the Python build path and executes them
+//!     via the PJRT C API.
+//!
+//! The coordinator (`GradComputer`, the trainer, the bench driver, the
+//! CLI) is written against these traits only, so adding a backend —
+//! GPU PJRT, a sharded multi-host runner, a fused-kernel path — never
+//! touches the training loop again.
+
+use super::manifest::{ConfigSpec, Manifest};
+use super::store::{BatchStage, ParamStore, StepOut};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A compiled/ready step for one (config, method) pair.
+///
+/// Semantics by method (the artifact contract, DESIGN.md §7):
+///   - `nonprivate`: grads = batch-mean gradient, loss = mean loss.
+///   - `reweight` / `multiloss`: grads = 1/tau * sum_i nu_i * g_i with
+///     nu_i = min(1, clip/||g_i||); norms = unclipped per-example
+///     norms; requires `clip`.
+///   - `naive1` (batch-1): grads = the single example's unclipped
+///     gradient; norms = [||g_0||]. The nxBP loop clips/averages in
+///     the coordinator.
+///   - `fwd`: loss = mean loss, correct = correct-prediction count,
+///     no grads.
+pub trait StepFn: Send + Sync {
+    /// Artifact method name this step implements (e.g. "reweight").
+    fn method(&self) -> &str;
+
+    /// Compile/lowering time, if any (0.0 for interpreted backends).
+    fn compile_ms(&self) -> f64 {
+        0.0
+    }
+
+    /// Execute one step: params + staged batch (+ clip threshold for
+    /// the private batched methods). Steps never mutate the store;
+    /// backends that cache device uploads key on
+    /// `ParamStore::{id, version}`.
+    fn run(
+        &self,
+        params: &ParamStore,
+        stage: &BatchStage,
+        clip: Option<f32>,
+    ) -> Result<StepOut>;
+}
+
+/// An execution backend: a manifest of runnable configs plus the
+/// ability to produce a `StepFn` for any (config, method) the manifest
+/// declares.
+pub trait Backend: Send + Sync {
+    /// Short identifier for logs/reports ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The configs this backend can run.
+    fn manifest(&self) -> &Manifest;
+
+    /// Compile (or fetch from cache) the step for a config's method.
+    /// `method` is the artifact method name (see `ClipMethod::artifact`).
+    fn load(&self, cfg: &ConfigSpec, method: &str) -> Result<Arc<dyn StepFn>>;
+}

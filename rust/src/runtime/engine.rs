@@ -1,13 +1,17 @@
-//! PJRT execution engine: compile HLO-text artifacts on the CPU
-//! client, cache executables, and marshal batches/params in and
-//! gradients out.
+//! PJRT execution engine (feature `pjrt`): compile HLO-text artifacts
+//! on the CPU client, cache executables, and marshal batches/params in
+//! and gradients out. This is the artifact-backed `Backend`
+//! implementation; the hermetic reference implementation lives in
+//! `runtime::native`.
 //!
 //! Adapted from the /opt/xla-example/load_hlo reference: HLO *text* is
 //! the interchange format (the 0.5.1 xla_extension rejects jax>=0.5
 //! serialized protos), and every artifact returns one tuple
 //! (lowered with return_tuple=True).
 
+use super::backend::{Backend, StepFn};
 use super::manifest::{ArtifactSpec, ConfigSpec, Manifest};
+use super::store::{BatchStage, ParamStore, StepOut};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -20,19 +24,13 @@ pub struct StepExe {
     pub outputs: Vec<String>,
     pub method: String,
     pub compile_ms: f64,
-}
-
-/// Structured results of one step execution.
-#[derive(Debug, Clone)]
-pub struct StepOut {
-    /// per-parameter gradients (host f32), same order as the manifest
-    pub grads: Vec<Vec<f32>>,
-    pub loss: f32,
-    /// per-example gradient norms (reweight/multiloss) or the single
-    /// example's norm (naive1)
-    pub norms: Option<Vec<f32>>,
-    /// correct-prediction count (fwd artifact only)
-    pub correct: Option<f32>,
+    /// parameter literals cached by (ParamStore id, version): the nxBP
+    /// loop calls run() once per example on unchanged params, and
+    /// rebuilding literals each call would deep-copy every parameter
+    /// tensor through the C API per example (§Perf L3 iteration 1).
+    /// Arc so the lock is released before execution (PJRT executes
+    /// concurrently; the literals are immutable once built).
+    lit_cache: Mutex<Option<(u64, u64, Arc<Vec<xla::Literal>>)>>,
 }
 
 /// Engine: one PJRT CPU client + an executable cache keyed by artifact
@@ -69,24 +67,6 @@ impl Engine {
         Engine::new(Manifest::load(dir)?)
     }
 
-    /// Compile (or fetch from cache) the executable for a config's
-    /// method.
-    pub fn load(&self, cfg: &ConfigSpec, method: &str) -> Result<Arc<StepExe>> {
-        let art = cfg.artifact(method)?;
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(exe) = cache.get(&art.file) {
-                return Ok(exe.clone());
-            }
-        }
-        let exe = Arc::new(self.compile_artifact(cfg, art)?);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(art.file.clone(), exe.clone());
-        Ok(exe)
-    }
-
     fn compile_artifact(
         &self,
         cfg: &ConfigSpec,
@@ -111,6 +91,7 @@ impl Engine {
             outputs: art.outputs.clone(),
             method: art.method.clone(),
             compile_ms,
+            lit_cache: Mutex::new(None),
         })
     }
 
@@ -120,137 +101,109 @@ impl Engine {
     }
 }
 
-/// Host-side batch staging buffers, reused across steps to keep
-/// allocation out of the hot loop.
-pub struct BatchStage {
-    pub feat_f32: Vec<f32>,
-    pub feat_i32: Vec<i32>,
-    pub labels: Vec<i32>,
-    pub input_dims: Vec<i64>,
-    pub is_f32: bool,
-}
-
-impl BatchStage {
-    pub fn for_config(cfg: &ConfigSpec) -> BatchStage {
-        let elems = cfg.input_elems();
-        let is_f32 = cfg.input_dtype == "f32";
-        BatchStage {
-            feat_f32: if is_f32 { vec![0.0; elems] } else { Vec::new() },
-            feat_i32: if is_f32 { Vec::new() } else { vec![0; elems] },
-            labels: vec![0; cfg.batch],
-            input_dims: cfg.input_shape.iter().map(|&d| d as i64).collect(),
-            is_f32,
-        }
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
     }
 
-    fn input_literal(&self) -> Result<xla::Literal> {
-        let lit = if self.is_f32 {
-            xla::Literal::vec1(&self.feat_f32)
-        } else {
-            xla::Literal::vec1(&self.feat_i32)
-        };
-        Ok(lit.reshape(&self.input_dims)?)
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
     }
 
-    fn label_literal(&self) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(&self.labels)
-            .reshape(&[self.labels.len() as i64])?)
-    }
-}
-
-/// Parameter store: host copies + prebuilt literals (rebuilt after
-/// each optimizer update).
-pub struct ParamStore {
-    pub host: Vec<Vec<f32>>,
-    pub dims: Vec<Vec<i64>>,
-    literals: Vec<xla::Literal>,
-    dirty: bool,
-}
-
-impl ParamStore {
-    /// Initialize from the flat f32 concatenation `init` (e.g. from a
-    /// checkpoint or the `init` artifact of the Python side).
-    pub fn new(cfg: &ConfigSpec, init: Option<&[f32]>) -> Result<ParamStore> {
-        let mut host = Vec::with_capacity(cfg.params.len());
-        let mut dims = Vec::with_capacity(cfg.params.len());
-        let mut off = 0usize;
-        for p in &cfg.params {
-            let n = p.elems();
-            let v = match init {
-                Some(flat) => {
-                    if flat.len() < off + n {
-                        bail!("init vector too short for {}", p.name);
-                    }
-                    flat[off..off + n].to_vec()
-                }
-                None => vec![0.0; n],
-            };
-            off += n;
-            host.push(v);
-            dims.push(p.shape.iter().map(|&d| d as i64).collect());
-        }
-        if let Some(flat) = init {
-            if flat.len() != off {
-                bail!("init vector length {} != param elems {}", flat.len(), off);
+    /// Compile (or fetch from cache) the executable for a config's
+    /// method.
+    fn load(&self, cfg: &ConfigSpec, method: &str) -> Result<Arc<dyn StepFn>> {
+        let art = cfg.artifact(method)?;
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&art.file) {
+                return Ok(exe.clone());
             }
         }
-        let mut ps = ParamStore { host, dims, literals: Vec::new(), dirty: true };
-        ps.rebuild_literals()?;
-        Ok(ps)
-    }
-
-    pub fn rebuild_literals(&mut self) -> Result<()> {
-        self.literals.clear();
-        for (v, d) in self.host.iter().zip(&self.dims) {
-            self.literals.push(xla::Literal::vec1(v).reshape(d)?);
-        }
-        self.dirty = false;
-        Ok(())
-    }
-
-    pub fn mark_dirty(&mut self) {
-        self.dirty = true;
-    }
-
-    pub fn literals(&mut self) -> Result<&[xla::Literal]> {
-        if self.dirty {
-            self.rebuild_literals()?;
-        }
-        Ok(&self.literals)
-    }
-
-    pub fn total_elems(&self) -> usize {
-        self.host.iter().map(|v| v.len()).sum()
+        let exe = Arc::new(self.compile_artifact(cfg, art)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(art.file.clone(), exe.clone());
+        Ok(exe)
     }
 }
 
-/// Execute one step: params + staged batch (+ optional clip scalar).
-///
-/// Parameters are passed by reference into PJRT (`Borrow<Literal>`)
-/// rather than cloned — `Literal::clone` is a deep copy through the C
-/// API, and the nxBP loop would otherwise deep-copy every parameter
-/// tensor once per *example* (§Perf L3 iteration 1).
-pub fn run_step(
-    exe: &StepExe,
-    params: &mut ParamStore,
-    stage: &BatchStage,
-    clip: Option<f32>,
-) -> Result<StepOut> {
-    let mut owned: Vec<xla::Literal> = Vec::with_capacity(3);
-    owned.push(stage.input_literal()?);
-    owned.push(stage.label_literal()?);
-    if let Some(c) = clip {
-        owned.push(xla::Literal::scalar(c));
+fn input_literal(stage: &BatchStage) -> Result<xla::Literal> {
+    let lit = if stage.is_f32 {
+        xla::Literal::vec1(&stage.feat_f32)
+    } else {
+        xla::Literal::vec1(&stage.feat_i32)
+    };
+    Ok(lit.reshape(&stage.input_dims)?)
+}
+
+fn label_literal(stage: &BatchStage) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&stage.labels)
+        .reshape(&[stage.labels.len() as i64])?)
+}
+
+impl StepFn for StepExe {
+    fn method(&self) -> &str {
+        &self.method
     }
-    let param_lits = params.literals()?;
-    let mut args: Vec<&xla::Literal> =
-        Vec::with_capacity(param_lits.len() + owned.len());
-    args.extend(param_lits.iter());
-    args.extend(owned.iter());
-    let result = exe.exe.execute::<&xla::Literal>(&args)?;
-    let tuple = result[0][0].to_literal_sync()?;
-    let parts = tuple.to_tuple()?;
-    decode_outputs(exe, parts)
+
+    fn compile_ms(&self) -> f64 {
+        self.compile_ms
+    }
+
+    /// Execute one step: params + staged batch (+ optional clip
+    /// scalar).
+    ///
+    /// Parameters are passed by reference into PJRT (`Borrow<Literal>`)
+    /// and their literals are cached across calls keyed on the store's
+    /// `(id, version)` — `Literal` construction is a deep copy through
+    /// the C API, and the nxBP loop would otherwise pay it once per
+    /// *example* (§Perf L3 iteration 1).
+    fn run(
+        &self,
+        params: &ParamStore,
+        stage: &BatchStage,
+        clip: Option<f32>,
+    ) -> Result<StepOut> {
+        let mut owned: Vec<xla::Literal> = Vec::with_capacity(3);
+        owned.push(input_literal(stage)?);
+        owned.push(label_literal(stage)?);
+        if let Some(c) = clip {
+            owned.push(xla::Literal::scalar(c));
+        }
+        let key = (params.id(), params.version());
+        // scope the lock to the cache lookup/refresh — PJRT execution
+        // is internally synchronized and must not be serialized here
+        let param_lits: Arc<Vec<xla::Literal>> = {
+            let mut cache = self.lit_cache.lock().unwrap();
+            match &*cache {
+                Some((id, ver, lits)) if (*id, *ver) == key => lits.clone(),
+                _ => {
+                    let fresh: Arc<Vec<xla::Literal>> = Arc::new(
+                        params
+                            .host
+                            .iter()
+                            .zip(&params.dims)
+                            .map(|(v, d)| {
+                                Ok(xla::Literal::vec1(v).reshape(d)?)
+                            })
+                            .collect::<Result<_>>()?,
+                    );
+                    *cache = Some((key.0, key.1, fresh.clone()));
+                    fresh
+                }
+            }
+        };
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(param_lits.len() + owned.len());
+        args.extend(param_lits.iter());
+        args.extend(owned.iter());
+        let result = self.exe.execute::<&xla::Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        decode_outputs(self, parts)
+    }
 }
 
 fn decode_outputs(exe: &StepExe, parts: Vec<xla::Literal>) -> Result<StepOut> {
@@ -283,95 +236,4 @@ fn decode_outputs(exe: &StepExe, parts: Vec<xla::Literal>) -> Result<StepOut> {
         }
     }
     Ok(out)
-}
-
-/// Deterministic parameter initialization on the Rust side (Glorot
-/// uniform, mirroring layers.py) so training runs do not depend on
-/// Python at runtime.
-pub fn init_params_glorot(cfg: &ConfigSpec, seed: u64) -> Vec<f32> {
-    use crate::rng::{streams, ChaCha20};
-    let mut rng = ChaCha20::seeded(seed, streams::INIT);
-    let mut flat = Vec::with_capacity(cfg.param_elems());
-    for p in &cfg.params {
-        let (fan_in, fan_out) = match p.shape.len() {
-            2 => (p.shape[0], p.shape[1]),
-            4 => {
-                let rf = p.shape[2] * p.shape[3];
-                (p.shape[1] * rf, p.shape[0] * rf)
-            }
-            _ => (p.elems().max(1), 1),
-        };
-        let is_bias = p.shape.len() == 1;
-        let limit = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
-        for _ in 0..p.elems() {
-            if is_bias {
-                flat.push(0.0);
-            } else {
-                flat.push((rng.next_f32() * 2.0 - 1.0) * limit);
-            }
-        }
-    }
-    flat
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::runtime::manifest::ParamSpec;
-
-    fn dummy_cfg() -> ConfigSpec {
-        ConfigSpec {
-            name: "t".into(),
-            model: "mlp".into(),
-            dataset: "mnist".into(),
-            batch: 4,
-            n_classes: 10,
-            tags: vec![],
-            input_shape: vec![4, 3],
-            input_dtype: "f32".into(),
-            act_elems_per_example: 0,
-            params: vec![
-                ParamSpec { name: "w".into(), shape: vec![3, 2] },
-                ParamSpec { name: "b".into(), shape: vec![2] },
-            ],
-            artifacts: Default::default(),
-        }
-    }
-
-    #[test]
-    fn param_store_layout() {
-        let cfg = dummy_cfg();
-        let init: Vec<f32> = (0..8).map(|i| i as f32).collect();
-        let ps = ParamStore::new(&cfg, Some(&init)).unwrap();
-        assert_eq!(ps.host.len(), 2);
-        assert_eq!(ps.host[0], vec![0., 1., 2., 3., 4., 5.]);
-        assert_eq!(ps.host[1], vec![6., 7.]);
-        assert_eq!(ps.total_elems(), 8);
-        // wrong length rejected
-        assert!(ParamStore::new(&cfg, Some(&init[..7])).is_err());
-    }
-
-    #[test]
-    fn glorot_init_bounds_and_bias_zero() {
-        let cfg = dummy_cfg();
-        let flat = init_params_glorot(&cfg, 3);
-        assert_eq!(flat.len(), 8);
-        let limit = (6.0f64 / 5.0).sqrt() as f32;
-        assert!(flat[..6].iter().all(|&v| v.abs() <= limit));
-        assert!(flat[..6].iter().any(|&v| v != 0.0));
-        assert_eq!(&flat[6..], &[0.0, 0.0]);
-        // deterministic
-        assert_eq!(flat, init_params_glorot(&cfg, 3));
-        assert_ne!(flat, init_params_glorot(&cfg, 4));
-    }
-
-    #[test]
-    fn stage_shapes() {
-        let cfg = dummy_cfg();
-        let stage = BatchStage::for_config(&cfg);
-        assert!(stage.is_f32);
-        assert_eq!(stage.feat_f32.len(), 12);
-        assert_eq!(stage.labels.len(), 4);
-        assert_eq!(stage.input_dims, vec![4, 3]);
-    }
 }

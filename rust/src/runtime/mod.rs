@@ -1,15 +1,23 @@
-//! Runtime layer: loads AOT artifacts (HLO text) and executes them on
-//! the PJRT CPU client. See DESIGN.md §7 for the ABI.
+//! Runtime layer: the `Backend` abstraction over step execution, the
+//! pure-Rust `NativeBackend` (always available, hermetic), and — behind
+//! the `pjrt` feature — the PJRT engine that loads AOT artifacts (HLO
+//! text) and executes them on the PJRT CPU client (DESIGN.md §7).
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
+pub mod store;
 
-pub use engine::{
-    init_params_glorot, run_step, BatchStage, Engine, ParamStore, StepExe,
-    StepOut,
-};
+pub use backend::{Backend, StepFn};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, StepExe};
 pub use manifest::{ArtifactSpec, ConfigSpec, Manifest, ParamSpec};
+pub use native::NativeBackend;
+pub use store::{init_params_glorot, BatchStage, ParamStore, StepOut};
 
+use anyhow::Result;
 use std::path::PathBuf;
 
 /// Default artifacts directory: $FASTCLIP_ARTIFACTS or ./artifacts.
@@ -17,4 +25,80 @@ pub fn artifacts_dir() -> PathBuf {
     std::env::var("FASTCLIP_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Whether an artifacts manifest is present on disk (needed by the
+/// PJRT backend; the native backend never touches the filesystem).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").is_file()
+}
+
+/// Whether the PJRT engine was compiled into this binary.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+/// Pick the best available backend: PJRT when it is compiled in *and*
+/// artifacts are present, the hermetic native backend otherwise.
+pub fn default_backend() -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if artifacts_available() {
+            return Ok(Box::new(Engine::from_dir(&artifacts_dir())?));
+        }
+        crate::log_info!(
+            "no artifacts at {} — falling back to the native backend",
+            artifacts_dir().display()
+        );
+    }
+    Ok(Box::new(NativeBackend::new()))
+}
+
+/// Backend by CLI name: "native", "pjrt", or "auto"/None for
+/// `default_backend`.
+pub fn backend_by_name(name: Option<&str>) -> Result<Box<dyn Backend>> {
+    match name {
+        None | Some("auto") => default_backend(),
+        Some("native") => Ok(Box::new(NativeBackend::new())),
+        Some("pjrt") => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(Engine::from_dir(&artifacts_dir())?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                anyhow::bail!(
+                    "this binary was built without the `pjrt` feature; \
+                     rebuild with `cargo build --features pjrt` (requires the \
+                     vendored xla crate) or use --backend native"
+                )
+            }
+        }
+        Some(other) => {
+            anyhow::bail!("unknown backend {other:?} (native|pjrt|auto)")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_always_resolves() {
+        // hermetic guarantee: with no artifacts and default features,
+        // something runnable comes back
+        let b = default_backend().unwrap();
+        assert!(!b.manifest().configs.is_empty());
+    }
+
+    #[test]
+    fn backend_by_name_native_and_errors() {
+        assert_eq!(backend_by_name(Some("native")).unwrap().name(), "native");
+        assert!(backend_by_name(Some("bogus")).is_err());
+        if !pjrt_enabled() {
+            let err = backend_by_name(Some("pjrt")).unwrap_err();
+            assert!(format!("{err:#}").contains("pjrt"));
+        }
+    }
 }

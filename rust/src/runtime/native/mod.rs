@@ -1,0 +1,475 @@
+//! NativeBackend — a pure-Rust execution backend for the manifest's
+//! MLP config family (linear + bias + ReLU + softmax-CE). Always
+//! available, no Python, no artifacts, no xla: this is what makes
+//! tier-1 (`cargo build --release && cargo test -q`) hermetic, and it
+//! is the reference implementation the PJRT artifacts are checked
+//! against when both are present.
+//!
+//! All four clip methods are implemented with the *structure* the
+//! paper compares (Sec 6.1):
+//!   - `nonprivate`: one batched backward, no clipping.
+//!   - `reweight`:   per-example norms via the activation/delta tap
+//!                   trick, then a nu-reweighted gradient assembly —
+//!                   per-example gradients are never materialized.
+//!   - `multiloss`:  materialized per-example gradients, clipped and
+//!                   summed (the vmap-of-grad structure).
+//!   - `naive1`:     the batch-1 body of the nxBP loop.
+//!
+//! Examples are processed in fixed-size chunks in parallel (rayon);
+//! chunk boundaries and the merge order are deterministic, so results
+//! are bitwise reproducible regardless of thread scheduling.
+
+pub mod mlp;
+
+use super::backend::{Backend, StepFn};
+use super::manifest::{ArtifactSpec, ConfigSpec, Manifest, ParamSpec};
+use super::store::{BatchStage, ParamStore, StepOut};
+use anyhow::{bail, ensure, Context, Result};
+use self::mlp::{MlpSpec, Scratch};
+use rayon::prelude::*;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Examples per parallel work unit. Fixed (not derived from the thread
+/// count) so the floating-point merge order — and therefore every
+/// gradient bit — is independent of the machine's parallelism.
+const CHUNK_EXAMPLES: usize = 8;
+
+/// Hidden width of the built-in MLP config family.
+const HIDDEN: usize = 128;
+
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl NativeBackend {
+    /// Backend over the built-in MLP config family (mlp{2,4,6,8} x
+    /// {mnist,fmnist,cifar10} x batch {1,16,32,64,128}).
+    pub fn new() -> NativeBackend {
+        NativeBackend { manifest: builtin_manifest() }
+    }
+
+    /// Backend over a caller-supplied manifest (tests, custom configs).
+    pub fn with_manifest(manifest: Manifest) -> NativeBackend {
+        NativeBackend { manifest }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, cfg: &ConfigSpec, method: &str) -> Result<Arc<dyn StepFn>> {
+        // route through the manifest so unsupported methods fail with
+        // the same "config X has no `m` artifact" error as PJRT
+        let art = cfg.artifact(method)?;
+        let kind = Kind::parse(&art.method).with_context(|| {
+            format!("native backend cannot execute artifact {}", art.file)
+        })?;
+        let spec = MlpSpec::from_config(cfg)?;
+        Ok(Arc::new(NativeStep {
+            spec,
+            kind,
+            method: art.method.clone(),
+            config: cfg.name.clone(),
+        }))
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    NonPrivate,
+    Reweight,
+    MultiLoss,
+    Naive1,
+    Fwd,
+}
+
+impl Kind {
+    fn parse(method: &str) -> Result<Kind> {
+        Ok(match method {
+            "nonprivate" => Kind::NonPrivate,
+            "reweight" => Kind::Reweight,
+            "multiloss" => Kind::MultiLoss,
+            "naive1" => Kind::Naive1,
+            "fwd" => Kind::Fwd,
+            other => bail!("no native kernel for method {other:?}"),
+        })
+    }
+}
+
+struct NativeStep {
+    spec: MlpSpec,
+    kind: Kind,
+    method: String,
+    config: String,
+}
+
+/// Per-chunk partial results, merged sequentially in chunk order.
+struct Partial {
+    grads: Vec<Vec<f32>>,
+    loss_sum: f64,
+    norms: Vec<f32>,
+    correct: usize,
+}
+
+impl StepFn for NativeStep {
+    fn method(&self) -> &str {
+        &self.method
+    }
+
+    fn run(
+        &self,
+        params: &ParamStore,
+        stage: &BatchStage,
+        clip: Option<f32>,
+    ) -> Result<StepOut> {
+        let spec = &self.spec;
+        ensure!(
+            stage.is_f32,
+            "{}: native mlp expects f32 features",
+            self.config
+        );
+        let b = stage.labels.len();
+        let d = spec.d_in;
+        ensure!(b > 0, "{}: empty staged batch", self.config);
+        ensure!(
+            stage.feat_f32.len() == b * d,
+            "{}: staged features hold {} elems, need {} ({} examples x {})",
+            self.config,
+            stage.feat_f32.len(),
+            b * d,
+            b,
+            d
+        );
+        ensure!(
+            params.host.len() == 2 * spec.n_layers(),
+            "{}: param store has {} tensors, spec needs {}",
+            self.config,
+            params.host.len(),
+            2 * spec.n_layers()
+        );
+        for (l, &(din, dout)) in spec.layers.iter().enumerate() {
+            ensure!(
+                params.host[2 * l].len() == din * dout
+                    && params.host[2 * l + 1].len() == dout,
+                "{}: layer {l} param shapes do not match the config",
+                self.config
+            );
+        }
+        let clip = match self.kind {
+            Kind::Reweight | Kind::MultiLoss => Some(
+                clip.with_context(|| {
+                    format!("{}: {} requires a clip threshold", self.config, self.method)
+                })?,
+            ),
+            _ => None,
+        };
+
+        let host = &params.host;
+        let feats = &stage.feat_f32;
+        let labels = &stage.labels;
+        let n_chunks = b / CHUNK_EXAMPLES + usize::from(b % CHUNK_EXAMPLES != 0);
+        let kind = self.kind;
+        let config = self.config.as_str();
+
+        let partials: Vec<Partial> = (0..n_chunks)
+            .into_par_iter()
+            .map(|ci| -> Result<Partial> {
+                let lo = ci * CHUNK_EXAMPLES;
+                let hi = (lo + CHUNK_EXAMPLES).min(b);
+                let mut scratch = Scratch::for_spec(spec);
+                let mut p = Partial {
+                    grads: if kind == Kind::Fwd {
+                        Vec::new()
+                    } else {
+                        spec.zero_grads()
+                    },
+                    loss_sum: 0.0,
+                    norms: Vec::with_capacity(hi - lo),
+                    correct: 0,
+                };
+                // multiLoss materializes one example gradient at a time
+                let mut mat = if kind == Kind::MultiLoss {
+                    spec.zero_grads()
+                } else {
+                    Vec::new()
+                };
+                for i in lo..hi {
+                    let x = &feats[i * d..(i + 1) * d];
+                    let y = labels[i];
+                    ensure!(
+                        y >= 0 && (y as usize) < spec.n_classes,
+                        "{config}: label {y} at row {i} outside 0..{}",
+                        spec.n_classes
+                    );
+                    let (loss, hit) = mlp::forward(spec, host, x, y, &mut scratch);
+                    p.loss_sum += loss as f64;
+                    match kind {
+                        Kind::Fwd => p.correct += usize::from(hit),
+                        Kind::NonPrivate => {
+                            mlp::backward(spec, host, x, y, &mut scratch);
+                            mlp::accumulate_weighted(spec, x, &scratch, 1.0, &mut p.grads);
+                        }
+                        Kind::Reweight | Kind::Naive1 => {
+                            let sq = mlp::backward(spec, host, x, y, &mut scratch);
+                            let norm = sq.sqrt() as f32;
+                            let nu = match clip {
+                                Some(c) if norm > c => c / norm,
+                                _ => 1.0,
+                            };
+                            mlp::accumulate_weighted(spec, x, &scratch, nu, &mut p.grads);
+                            p.norms.push(norm);
+                        }
+                        Kind::MultiLoss => {
+                            mlp::backward(spec, host, x, y, &mut scratch);
+                            let sq = mlp::materialize_grad(spec, x, &scratch, &mut mat);
+                            let norm = sq.sqrt() as f32;
+                            let c = clip.unwrap();
+                            let nu = if norm > c { c / norm } else { 1.0 };
+                            for (acc, g) in p.grads.iter_mut().zip(&mat) {
+                                for (a, &gv) in acc.iter_mut().zip(g) {
+                                    *a += nu * gv;
+                                }
+                            }
+                            p.norms.push(norm);
+                        }
+                    }
+                }
+                Ok(p)
+            })
+            .collect::<Result<Vec<Partial>>>()?;
+
+        // deterministic sequential merge in chunk order
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut norms: Vec<f32> = Vec::with_capacity(b);
+        let mut grads = if kind == Kind::Fwd {
+            Vec::new()
+        } else {
+            spec.zero_grads()
+        };
+        for p in partials {
+            loss_sum += p.loss_sum;
+            correct += p.correct;
+            norms.extend(p.norms);
+            for (acc, pg) in grads.iter_mut().zip(&p.grads) {
+                for (a, &v) in acc.iter_mut().zip(pg) {
+                    *a += v;
+                }
+            }
+        }
+        let inv = 1.0 / b as f32;
+        for g in grads.iter_mut() {
+            for v in g.iter_mut() {
+                *v *= inv;
+            }
+        }
+        Ok(StepOut {
+            grads,
+            loss: (loss_sum / b as f64) as f32,
+            norms: match kind {
+                Kind::Reweight | Kind::MultiLoss | Kind::Naive1 => Some(norms),
+                _ => None,
+            },
+            correct: if kind == Kind::Fwd {
+                Some(correct as f32)
+            } else {
+                None
+            },
+        })
+    }
+}
+
+fn artifact(method: &str, config: &str) -> (String, ArtifactSpec) {
+    let (extra, outputs): (&[&str], &[&str]) = match method {
+        "nonprivate" => (&[], &["grads", "loss"]),
+        "reweight" | "multiloss" => (&["clip"], &["grads", "loss", "norms"]),
+        "naive1" => (&[], &["grads", "loss", "norm"]),
+        "fwd" => (&[], &["loss", "correct"]),
+        _ => (&[], &[]),
+    };
+    (
+        method.to_string(),
+        ArtifactSpec {
+            method: method.to_string(),
+            file: format!("native:{config}.{method}"),
+            extra_args: extra.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        },
+    )
+}
+
+fn mlp_config(
+    dataset: &str,
+    img_shape: &[usize],
+    n_classes: usize,
+    depth: usize,
+    batch: usize,
+) -> ConfigSpec {
+    let name = format!("mlp{depth}_{dataset}_b{batch}");
+    let d_in: usize = img_shape.iter().product();
+    let mut params = Vec::with_capacity(depth * 2);
+    let mut prev = d_in;
+    for l in 0..depth {
+        let out = if l == depth - 1 { n_classes } else { HIDDEN };
+        params.push(ParamSpec { name: format!("fc{l}.w"), shape: vec![prev, out] });
+        params.push(ParamSpec { name: format!("fc{l}.b"), shape: vec![out] });
+        prev = out;
+    }
+    let mut tags: Vec<String> = Vec::new();
+    if batch == 1 {
+        tags.push("naive".into());
+    }
+    if depth == 2 && batch == 32 && (dataset == "mnist" || dataset == "fmnist") {
+        tags.push("fig5".into());
+    }
+    if batch == 128 {
+        tags.push("fig7".into());
+    }
+    let mut artifacts = BTreeMap::new();
+    for m in ["nonprivate", "reweight", "multiloss", "fwd"] {
+        let (k, v) = artifact(m, &name);
+        artifacts.insert(k, v);
+    }
+    if batch == 1 {
+        let (k, v) = artifact("naive1", &name);
+        artifacts.insert(k, v);
+    }
+    let mut input_shape = vec![batch];
+    input_shape.extend_from_slice(img_shape);
+    ConfigSpec {
+        name,
+        model: "mlp".into(),
+        dataset: dataset.into(),
+        batch,
+        n_classes,
+        tags,
+        input_shape,
+        input_dtype: "f32".into(),
+        act_elems_per_example: (depth - 1) * HIDDEN + n_classes,
+        params,
+        artifacts,
+    }
+}
+
+/// The built-in config family the native backend can always run.
+fn builtin_manifest() -> Manifest {
+    let mut configs = BTreeMap::new();
+    let datasets: [(&str, &[usize], usize); 3] = [
+        ("mnist", &[1, 28, 28], 10),
+        ("fmnist", &[1, 28, 28], 10),
+        ("cifar10", &[3, 32, 32], 10),
+    ];
+    for (dataset, shape, n_classes) in datasets {
+        for depth in [2usize, 4, 6, 8] {
+            for batch in [1usize, 16, 32, 64, 128] {
+                let cfg = mlp_config(dataset, shape, n_classes, depth, batch);
+                configs.insert(cfg.name.clone(), cfg);
+            }
+        }
+    }
+    Manifest { dir: PathBuf::from("builtin:native"), configs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::store::init_params_glorot;
+
+    #[test]
+    fn builtin_manifest_is_consistent() {
+        let b = NativeBackend::new();
+        let m = b.manifest();
+        let cfg = m.config("mlp2_mnist_b32").unwrap();
+        assert_eq!(cfg.batch, 32);
+        assert_eq!(cfg.params[0].shape, vec![784, HIDDEN]);
+        assert!(cfg.artifacts.contains_key("reweight"));
+        // every batched config has a naive1-capable b1 sibling
+        for name in m.configs.keys().filter(|n| !n.ends_with("_b1")) {
+            let n1 = m.naive_config(name).unwrap();
+            assert!(n1.artifacts.contains_key("naive1"), "{name}");
+        }
+        // every config parses into an MlpSpec
+        for cfg in m.configs.values() {
+            MlpSpec::from_config(cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn unsupported_method_is_a_manifest_error() {
+        let b = NativeBackend::new();
+        let cfg = b.manifest().config("mlp2_mnist_b32").unwrap();
+        let err = b.load(cfg, "reweight_pallas").unwrap_err();
+        assert!(format!("{err:#}").contains("reweight_pallas"));
+    }
+
+    #[test]
+    fn fwd_counts_and_losses_are_sane() {
+        let b = NativeBackend::new();
+        let cfg = b.manifest().config("mlp2_mnist_b32").unwrap().clone();
+        let step = b.load(&cfg, "fwd").unwrap();
+        let mut params =
+            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 0))).unwrap();
+        let ds = crate::data::load_dataset("mnist", 64, 0).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        let batch: Vec<usize> = (0..32).collect();
+        crate::data::gather_batch_f32(
+            &ds,
+            &batch,
+            &mut stage.feat_f32,
+            &mut stage.labels,
+        );
+        let out = step.run(&mut params, &stage, None).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        let correct = out.correct.unwrap();
+        assert!((0.0..=32.0).contains(&correct));
+        assert!(out.grads.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_is_rejected() {
+        let b = NativeBackend::new();
+        let cfg = b.manifest().config("mlp2_mnist_b32").unwrap().clone();
+        let step = b.load(&cfg, "nonprivate").unwrap();
+        let mut params = ParamStore::new(&cfg, None).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        stage.feat_f32.truncate(784 * 31); // one example short
+        let err = step.run(&mut params, &stage, None).unwrap_err();
+        assert!(format!("{err:#}").contains("staged features"));
+    }
+
+    #[test]
+    fn results_are_deterministic_across_runs() {
+        let b = NativeBackend::new();
+        let cfg = b.manifest().config("mlp2_mnist_b32").unwrap().clone();
+        let step = b.load(&cfg, "reweight").unwrap();
+        let ds = crate::data::load_dataset("mnist", 64, 3).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        let batch: Vec<usize> = (0..32).collect();
+        crate::data::gather_batch_f32(
+            &ds,
+            &batch,
+            &mut stage.feat_f32,
+            &mut stage.labels,
+        );
+        let mut params =
+            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 1))).unwrap();
+        let a = step.run(&mut params, &stage, Some(0.7)).unwrap();
+        let b2 = step.run(&mut params, &stage, Some(0.7)).unwrap();
+        assert_eq!(a.grads, b2.grads); // bitwise: fixed chunking + ordered merge
+        assert_eq!(a.norms, b2.norms);
+    }
+}

@@ -1,9 +1,13 @@
 //! Failure-injection tests: the coordinator must fail loudly and
 //! legibly on corrupt inputs — silent misconfiguration in a DP system
 //! is a privacy bug, not just a reliability bug.
+//!
+//! Manifest/coordinator failures are tested hermetically (no backend
+//! needed, or the native backend). Compile-path failures need the PJRT
+//! engine and skip with a message when it is unavailable.
 
 use fastclip::coordinator::{train, ClipMethod, TrainOptions};
-use fastclip::runtime::{artifacts_dir, Engine, Manifest, ParamStore};
+use fastclip::runtime::{Backend, Manifest, NativeBackend, ParamStore};
 use fastclip::util::json::Json;
 use std::path::Path;
 
@@ -14,11 +18,20 @@ fn tmp_dir(name: &str) -> std::path::PathBuf {
     d
 }
 
+// referenced only from the cfg(not(feature = "pjrt")) test bodies
+#[allow(dead_code)]
+fn skip_no_pjrt(test: &str) {
+    eprintln!(
+        "SKIP {test}: needs the PJRT backend (build with --features pjrt \
+         and set FASTCLIP_ARTIFACTS to a `make artifacts` output dir)"
+    );
+}
+
 #[test]
 fn missing_manifest_is_a_clear_error() {
     let d = tmp_dir("nomanifest");
-    let err = match Engine::from_dir(&d) {
-        Ok(_) => panic!("engine built without a manifest"),
+    let err = match Manifest::load(&d) {
+        Ok(_) => panic!("manifest loaded from an empty dir"),
         Err(e) => e,
     };
     let msg = format!("{err:#}");
@@ -29,8 +42,8 @@ fn missing_manifest_is_a_clear_error() {
 fn empty_manifest_rejected() {
     let d = tmp_dir("empty");
     std::fs::write(d.join("manifest.json"), r#"{"configs": {}}"#).unwrap();
-    let err = match Engine::from_dir(&d) {
-        Ok(_) => panic!("engine built from empty manifest"),
+    let err = match Manifest::load(&d) {
+        Ok(_) => panic!("empty manifest accepted"),
         Err(e) => e,
     };
     assert!(format!("{err:#}").contains("make artifacts"));
@@ -40,72 +53,89 @@ fn empty_manifest_rejected() {
 fn corrupt_manifest_json_rejected() {
     let d = tmp_dir("corrupt");
     std::fs::write(d.join("manifest.json"), "{not json").unwrap();
-    assert!(Engine::from_dir(&d).is_err());
+    assert!(Manifest::load(&d).is_err());
 }
 
 #[test]
 fn missing_artifact_file_fails_at_load() {
     // manifest points at an hlo file that does not exist
-    let d = tmp_dir("missingfile");
-    let manifest = r#"{
-      "configs": {
-        "ghost_b2": {
-          "model": "mlp", "dataset": "mnist", "batch": 2, "n_classes": 10,
-          "tags": [], "input": {"shape": [2, 784], "dtype": "f32"},
-          "label": {"shape": [2], "dtype": "i32"},
-          "params": [{"name": "w", "shape": [784, 10]}],
-          "artifacts": {"nonprivate": {"file": "ghost.hlo.txt",
-                          "extra_args": [], "outputs": ["grads", "loss"]}}
-        }
-      }
-    }"#;
-    std::fs::write(d.join("manifest.json"), manifest).unwrap();
-    let engine = Engine::from_dir(&d).unwrap();
-    let cfg = engine.manifest.config("ghost_b2").unwrap();
-    let err = match engine.load(cfg, "nonprivate") {
-        Ok(_) => panic!("load of missing artifact succeeded"),
-        Err(e) => e,
-    };
-    assert!(format!("{err:#}").contains("ghost.hlo.txt"));
+    #[cfg(feature = "pjrt")]
+    {
+        use fastclip::runtime::Engine;
+        let d = tmp_dir("missingfile");
+        let manifest = r#"{
+          "configs": {
+            "ghost_b2": {
+              "model": "mlp", "dataset": "mnist", "batch": 2, "n_classes": 10,
+              "tags": [], "input": {"shape": [2, 784], "dtype": "f32"},
+              "label": {"shape": [2], "dtype": "i32"},
+              "params": [{"name": "w", "shape": [784, 10]}],
+              "artifacts": {"nonprivate": {"file": "ghost.hlo.txt",
+                              "extra_args": [], "outputs": ["grads", "loss"]}}
+            }
+          }
+        }"#;
+        std::fs::write(d.join("manifest.json"), manifest).unwrap();
+        let engine = Engine::from_dir(&d).unwrap();
+        let cfg = engine.manifest().config("ghost_b2").unwrap();
+        let err = match engine.load(cfg, "nonprivate") {
+            Ok(_) => panic!("load of missing artifact succeeded"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("ghost.hlo.txt"));
+        return;
+    }
+    #[cfg(not(feature = "pjrt"))]
+    skip_no_pjrt("missing_artifact_file_fails_at_load");
 }
 
 #[test]
 fn garbage_hlo_text_fails_at_compile() {
-    let d = tmp_dir("badhlo");
-    let manifest = r#"{
-      "configs": {
-        "bad_b2": {
-          "model": "mlp", "dataset": "mnist", "batch": 2, "n_classes": 10,
-          "tags": [], "input": {"shape": [2, 784], "dtype": "f32"},
-          "label": {"shape": [2], "dtype": "i32"},
-          "params": [],
-          "artifacts": {"nonprivate": {"file": "bad.hlo.txt",
-                          "extra_args": [], "outputs": ["grads", "loss"]}}
-        }
-      }
-    }"#;
-    std::fs::write(d.join("manifest.json"), manifest).unwrap();
-    std::fs::write(d.join("bad.hlo.txt"), "ENTRY garbage { this is not hlo }")
-        .unwrap();
-    let engine = Engine::from_dir(&d).unwrap();
-    let cfg = engine.manifest.config("bad_b2").unwrap();
-    assert!(engine.load(cfg, "nonprivate").is_err());
+    #[cfg(feature = "pjrt")]
+    {
+        use fastclip::runtime::Engine;
+        let d = tmp_dir("badhlo");
+        let manifest = r#"{
+          "configs": {
+            "bad_b2": {
+              "model": "mlp", "dataset": "mnist", "batch": 2, "n_classes": 10,
+              "tags": [], "input": {"shape": [2, 784], "dtype": "f32"},
+              "label": {"shape": [2], "dtype": "i32"},
+              "params": [],
+              "artifacts": {"nonprivate": {"file": "bad.hlo.txt",
+                              "extra_args": [], "outputs": ["grads", "loss"]}}
+            }
+          }
+        }"#;
+        std::fs::write(d.join("manifest.json"), manifest).unwrap();
+        std::fs::write(d.join("bad.hlo.txt"), "ENTRY garbage { this is not hlo }")
+            .unwrap();
+        let engine = Engine::from_dir(&d).unwrap();
+        let cfg = engine.manifest().config("bad_b2").unwrap();
+        assert!(engine.load(cfg, "nonprivate").is_err());
+        return;
+    }
+    #[cfg(not(feature = "pjrt"))]
+    skip_no_pjrt("garbage_hlo_text_fails_at_compile");
 }
 
 #[test]
 fn unknown_config_and_method_errors_name_the_problem() {
-    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
-    let err = engine.manifest.config("no_such_config").unwrap_err();
+    let backend = NativeBackend::new();
+    let err = backend.manifest().config("no_such_config").unwrap_err();
     assert!(format!("{err:#}").contains("no_such_config"));
-    let cfg = engine.manifest.config("mlp2_mnist_b32").unwrap();
+    let cfg = backend.manifest().config("mlp2_mnist_b32").unwrap();
     let err = cfg.artifact("no_such_method").unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("no_such_method") && msg.contains("mlp2_mnist_b32"));
+    // backend.load routes through the same manifest error
+    let err = backend.load(cfg, "reweight_gram").unwrap_err();
+    assert!(format!("{err:#}").contains("reweight_gram"));
 }
 
 #[test]
 fn train_rejects_dataset_smaller_than_batch() {
-    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
+    let backend = NativeBackend::new();
     let opts = TrainOptions {
         config: "mlp2_mnist_b32".into(),
         method: ClipMethod::NonPrivate,
@@ -114,33 +144,48 @@ fn train_rejects_dataset_smaller_than_batch() {
         log_every: 0,
         ..Default::default()
     };
-    assert!(train(&engine, &opts).is_err());
+    assert!(train(&backend, &opts).is_err());
 }
 
 #[test]
 fn param_store_rejects_wrong_init_length() {
-    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
-    let cfg = engine.manifest.config("mlp2_mnist_b32").unwrap();
+    let backend = NativeBackend::new();
+    let cfg = backend.manifest().config("mlp2_mnist_b32").unwrap();
     let too_short = vec![0.0f32; cfg.param_elems() - 1];
     assert!(ParamStore::new(cfg, Some(&too_short)).is_err());
 }
 
 #[test]
-fn manifest_reload_roundtrip() {
-    // the shipped manifest parses, and re-serializing the parsed view
-    // of one config keeps the fields we depend on
-    let m = Manifest::load(Path::new(&artifacts_dir())).unwrap();
-    let cfg = m.config("cnn_mnist_b32").unwrap();
+fn manifest_roundtrip_preserves_fields() {
+    // the native manifest's view of a config survives a JSON round
+    // trip of the fields the coordinator depends on
+    let backend = NativeBackend::new();
+    let cfg = backend.manifest().config("mlp4_cifar10_b32").unwrap();
     assert_eq!(cfg.batch, 32);
-    assert!(cfg.act_elems_per_example > 10_000); // conv feature maps
+    assert!(cfg.act_elems_per_example > 0);
     let mut j = Json::obj();
     j.set("batch", cfg.batch.into());
-    assert_eq!(Json::parse(&j.to_string()).unwrap().get("batch").as_usize(), Some(32));
+    assert_eq!(
+        Json::parse(&j.to_string()).unwrap().get("batch").as_usize(),
+        Some(32)
+    );
+    // and the on-disk artifacts manifest, when present, still parses
+    let dir = fastclip::runtime::artifacts_dir();
+    if dir.join("manifest.json").is_file() {
+        let m = Manifest::load(Path::new(&dir)).unwrap();
+        assert!(!m.configs.is_empty());
+    } else {
+        eprintln!(
+            "note: no artifacts manifest at {} — checked the native \
+             manifest only",
+            dir.display()
+        );
+    }
 }
 
 #[test]
 fn infeasible_privacy_target_is_an_error_not_a_silent_fallback() {
-    let engine = Engine::from_dir(&artifacts_dir()).unwrap();
+    let backend = NativeBackend::new();
     let opts = TrainOptions {
         config: "mlp2_mnist_b32".into(),
         method: ClipMethod::Reweight,
@@ -150,6 +195,6 @@ fn infeasible_privacy_target_is_an_error_not_a_silent_fallback() {
         log_every: 0,
         ..Default::default()
     };
-    let err = train(&engine, &opts).unwrap_err();
+    let err = train(&backend, &opts).unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"));
 }

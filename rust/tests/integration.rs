@@ -1,25 +1,62 @@
-//! Integration tests over real AOT artifacts: the paper's central
-//! correctness claim (all clipping strategies produce identical
-//! gradients), end-to-end training behaviour, and checkpointing.
+//! Integration tests for the paper's central correctness claim (all
+//! clipping strategies produce identical clipped gradients),
+//! end-to-end training behaviour, and checkpointing.
 //!
-//! Requires `make artifacts` to have run (CI: these are repo-relative).
+//! Everything in this file runs hermetically on the pure-Rust
+//! `NativeBackend` — no Python, no artifacts, no xla. Tests that need
+//! the compiled model zoo (CNN/RNN/transformer, the pallas/gram/direct
+//! kernel variants) run only when the crate is built with
+//! `--features pjrt` *and* $FASTCLIP_ARTIFACTS points at a manifest;
+//! otherwise they skip with an explanatory message instead of failing.
 
 use fastclip::coordinator::{
     stage_batch, train, ClipMethod, GradComputer, TrainOptions,
 };
 use fastclip::data;
 use fastclip::runtime::{
-    artifacts_dir, init_params_glorot, BatchStage, Engine, ParamStore,
+    init_params_glorot, Backend, BatchStage, NativeBackend, ParamStore,
 };
 use std::sync::OnceLock;
 
-fn engine() -> &'static Engine {
-    static ENGINE: OnceLock<Engine> = OnceLock::new();
-    ENGINE.get_or_init(|| {
-        Engine::from_dir(&artifacts_dir()).expect(
-            "artifacts not found — run `make artifacts` before `cargo test`",
-        )
+/// The hermetic backend every test can rely on.
+fn native() -> &'static NativeBackend {
+    static B: OnceLock<NativeBackend> = OnceLock::new();
+    B.get_or_init(NativeBackend::new)
+}
+
+/// The artifact-backed backend, when this build can provide one.
+#[cfg(feature = "pjrt")]
+fn pjrt() -> Option<&'static dyn Backend> {
+    use fastclip::runtime::{artifacts_dir, Engine};
+    static E: OnceLock<Option<Engine>> = OnceLock::new();
+    E.get_or_init(|| {
+        if !fastclip::runtime::artifacts_available() {
+            return None; // absent artifacts => legitimate skip
+        }
+        // artifacts are *present*: failing to load them is a real
+        // failure, not a skip — surface it instead of masking the
+        // cross-check coverage
+        Some(Engine::from_dir(&artifacts_dir()).expect(
+            "FASTCLIP_ARTIFACTS manifest exists but the PJRT engine \
+             failed to load it",
+        ))
     })
+    .as_ref()
+    .map(|e| e as &dyn Backend)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt() -> Option<&'static dyn Backend> {
+    None
+}
+
+/// Skip notice for artifact-dependent tests (satellite: skip, don't
+/// panic, when the pjrt backend is unavailable).
+fn skip_no_pjrt(test: &str) {
+    eprintln!(
+        "SKIP {test}: needs the PJRT backend (build with --features pjrt \
+         and set FASTCLIP_ARTIFACTS to a `make artifacts` output dir)"
+    );
 }
 
 /// Max relative difference between two gradient sets.
@@ -35,29 +72,37 @@ fn max_rel_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
     worst
 }
 
-fn run_method(config: &str, method: ClipMethod, clip: f32) -> fastclip::runtime::StepOut {
-    let eng = engine();
-    let cfg = eng.manifest.config(config).unwrap().clone();
+fn run_method(
+    backend: &dyn Backend,
+    config: &str,
+    method: ClipMethod,
+    clip: f32,
+) -> fastclip::runtime::StepOut {
+    let cfg = backend.manifest().config(config).unwrap().clone();
     let ds = data::load_dataset(&cfg.dataset, 256, 7).unwrap();
     let mut stage = BatchStage::for_config(&cfg);
     let batch: Vec<usize> = (0..cfg.batch).collect();
     stage_batch(&ds, &batch, &mut stage);
     let mut params =
         ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 11))).unwrap();
-    let mut computer = GradComputer::new(eng, config, method).unwrap();
+    let mut computer = GradComputer::new(backend, config, method).unwrap();
     computer.compute(&mut params, &stage, clip).unwrap()
 }
 
-/// The paper's equivalence claim (Sec 5): ReweightGP == multiLoss ==
-/// nxBP gradients, bitwise up to float reassociation.
-#[test]
-fn all_private_methods_agree_mlp() {
+/// The paper's equivalence claim (Sec 5) on one backend: Reweight ==
+/// multiLoss == nxBP gradients, up to float reassociation. `tol` is
+/// backend-specific: the deterministic native backend holds 1e-4;
+/// compiled HLO keeps the seed's 2e-3 (XLA fusion reassociates more).
+fn assert_equivalence(backend: &dyn Backend, config: &str, tol: f32) {
     let clip = 0.5; // low threshold so clipping is active
-    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, clip);
-    let ml = run_method("mlp2_mnist_b32", ClipMethod::MultiLoss, clip);
-    let nx = run_method("mlp2_mnist_b32", ClipMethod::NxBp, clip);
-    assert!(max_rel_diff(&rw.grads, &ml.grads) < 2e-3, "reweight vs multiloss");
-    assert!(max_rel_diff(&rw.grads, &nx.grads) < 2e-3, "reweight vs nxbp");
+    let rw = run_method(backend, config, ClipMethod::Reweight, clip);
+    let ml = run_method(backend, config, ClipMethod::MultiLoss, clip);
+    let nx = run_method(backend, config, ClipMethod::NxBp, clip);
+    assert!(
+        max_rel_diff(&rw.grads, &ml.grads) < tol,
+        "reweight vs multiloss"
+    );
+    assert!(max_rel_diff(&rw.grads, &nx.grads) < tol, "reweight vs nxbp");
     // per-example norms agree too
     let (nr, nm) = (rw.norms.unwrap(), ml.norms.unwrap());
     for (a, b) in nr.iter().zip(&nm) {
@@ -66,43 +111,81 @@ fn all_private_methods_agree_mlp() {
 }
 
 #[test]
+fn all_private_methods_agree_mlp() {
+    assert_equivalence(native(), "mlp2_mnist_b32", 1e-4);
+}
+
+#[test]
+fn all_private_methods_agree_deep_mlp() {
+    assert_equivalence(native(), "mlp4_mnist_b16", 1e-4);
+}
+
+#[test]
+fn all_private_methods_agree_mlp_pjrt() {
+    match pjrt() {
+        Some(b) => assert_equivalence(b, "mlp2_mnist_b32", 2e-3),
+        None => skip_no_pjrt("all_private_methods_agree_mlp_pjrt"),
+    }
+}
+
+#[test]
 fn all_private_methods_agree_cnn() {
+    let Some(b) = pjrt() else {
+        skip_no_pjrt("all_private_methods_agree_cnn");
+        return;
+    };
     let clip = 0.5;
-    let rw = run_method("cnn_mnist_b32", ClipMethod::Reweight, clip);
-    let ml = run_method("cnn_mnist_b32", ClipMethod::MultiLoss, clip);
-    let nx = run_method("cnn_mnist_b32", ClipMethod::NxBp, clip);
+    let rw = run_method(b, "cnn_mnist_b32", ClipMethod::Reweight, clip);
+    let ml = run_method(b, "cnn_mnist_b32", ClipMethod::MultiLoss, clip);
+    let nx = run_method(b, "cnn_mnist_b32", ClipMethod::NxBp, clip);
     assert!(max_rel_diff(&rw.grads, &ml.grads) < 2e-3);
     assert!(max_rel_diff(&rw.grads, &nx.grads) < 2e-3);
 }
 
 #[test]
 fn pallas_backend_matches_jnp() {
-    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, 0.5);
-    let pl = run_method("mlp2_mnist_b32", ClipMethod::ReweightPallas, 0.5);
+    let Some(b) = pjrt() else {
+        skip_no_pjrt("pallas_backend_matches_jnp");
+        return;
+    };
+    let rw = run_method(b, "mlp2_mnist_b32", ClipMethod::Reweight, 0.5);
+    let pl = run_method(b, "mlp2_mnist_b32", ClipMethod::ReweightPallas, 0.5);
     assert!(max_rel_diff(&rw.grads, &pl.grads) < 1e-3);
 }
 
 #[test]
 fn direct_extension_matches_two_backward() {
-    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, 0.5);
-    let dr = run_method("mlp2_mnist_b32", ClipMethod::ReweightDirect, 0.5);
+    let Some(b) = pjrt() else {
+        skip_no_pjrt("direct_extension_matches_two_backward");
+        return;
+    };
+    let rw = run_method(b, "mlp2_mnist_b32", ClipMethod::Reweight, 0.5);
+    let dr = run_method(b, "mlp2_mnist_b32", ClipMethod::ReweightDirect, 0.5);
     assert!(max_rel_diff(&rw.grads, &dr.grads) < 1e-3);
-    let cw = run_method("cnn_mnist_b32", ClipMethod::Reweight, 0.5);
-    let cd = run_method("cnn_mnist_b32", ClipMethod::ReweightDirect, 0.5);
+    let cw = run_method(b, "cnn_mnist_b32", ClipMethod::Reweight, 0.5);
+    let cd = run_method(b, "cnn_mnist_b32", ClipMethod::ReweightDirect, 0.5);
     assert!(max_rel_diff(&cw.grads, &cd.grads) < 1e-3);
 }
 
 #[test]
 fn gram_extension_matches_materialized_rnn() {
-    let rw = run_method("rnn_mnist_b32", ClipMethod::Reweight, 0.5);
-    let gr = run_method("rnn_mnist_b32", ClipMethod::ReweightGram, 0.5);
+    let Some(b) = pjrt() else {
+        skip_no_pjrt("gram_extension_matches_materialized_rnn");
+        return;
+    };
+    let rw = run_method(b, "rnn_mnist_b32", ClipMethod::Reweight, 0.5);
+    let gr = run_method(b, "rnn_mnist_b32", ClipMethod::ReweightGram, 0.5);
     assert!(max_rel_diff(&rw.grads, &gr.grads) < 1e-3);
 }
 
 #[test]
 fn transformer_methods_agree() {
-    let rw = run_method("transformer_imdb_b32", ClipMethod::Reweight, 0.5);
-    let ml = run_method("transformer_imdb_b32", ClipMethod::MultiLoss, 0.5);
+    let Some(b) = pjrt() else {
+        skip_no_pjrt("transformer_methods_agree");
+        return;
+    };
+    let rw = run_method(b, "transformer_imdb_b32", ClipMethod::Reweight, 0.5);
+    let ml = run_method(b, "transformer_imdb_b32", ClipMethod::MultiLoss, 0.5);
     assert!(max_rel_diff(&rw.grads, &ml.grads) < 2e-3);
 }
 
@@ -111,8 +194,7 @@ fn transformer_methods_agree() {
 #[test]
 fn clipped_gradient_norm_bounded() {
     let clip = 0.25f32;
-    let out = run_method("mlp2_mnist_b32", ClipMethod::Reweight, clip);
-    let tau = 32.0f32;
+    let out = run_method(native(), "mlp2_mnist_b32", ClipMethod::Reweight, clip);
     // ||1/tau sum_i clip(g_i)|| <= 1/tau * tau * c = c
     let total_sq: f32 = out
         .grads
@@ -126,17 +208,15 @@ fn clipped_gradient_norm_bounded() {
         total_sq.sqrt(),
         clip
     );
-    // and with per-example norms >= clip, each contribution is exactly c
     let norms = out.norms.unwrap();
     assert!(norms.iter().all(|&n| n > 0.0));
-    let _ = tau;
 }
 
 /// Unclipped (nonprivate) differs from clipped when clipping is active.
 #[test]
 fn clipping_changes_gradient() {
-    let non = run_method("mlp2_mnist_b32", ClipMethod::NonPrivate, 1.0);
-    let rw = run_method("mlp2_mnist_b32", ClipMethod::Reweight, 0.05);
+    let non = run_method(native(), "mlp2_mnist_b32", ClipMethod::NonPrivate, 1.0);
+    let rw = run_method(native(), "mlp2_mnist_b32", ClipMethod::Reweight, 0.05);
     assert!(max_rel_diff(&non.grads, &rw.grads) > 0.05);
 }
 
@@ -144,7 +224,6 @@ fn clipping_changes_gradient() {
 /// optimizes) and stays finite under DP noise.
 #[test]
 fn training_loss_decreases() {
-    let eng = engine();
     let opts = TrainOptions {
         config: "mlp2_mnist_b32".into(),
         method: ClipMethod::NonPrivate,
@@ -155,7 +234,7 @@ fn training_loss_decreases() {
         seed: 1,
         ..Default::default()
     };
-    let report = train(eng, &opts).unwrap();
+    let report = train(native(), &opts).unwrap();
     let first: f32 = report.losses[..10].iter().sum::<f32>() / 10.0;
     let last: f32 = report.losses[50..].iter().sum::<f32>() / 10.0;
     assert!(
@@ -166,7 +245,6 @@ fn training_loss_decreases() {
 
 #[test]
 fn dp_training_stays_finite_and_accounts() {
-    let eng = engine();
     let opts = TrainOptions {
         config: "mlp2_mnist_b32".into(),
         method: ClipMethod::Reweight,
@@ -177,7 +255,7 @@ fn dp_training_stays_finite_and_accounts() {
         seed: 2,
         ..Default::default()
     };
-    let report = train(eng, &opts).unwrap();
+    let report = train(native(), &opts).unwrap();
     assert!(report.losses.iter().all(|l| l.is_finite()));
     let (eps, order) = report.epsilon.unwrap();
     assert!(eps > 0.0 && eps < 50.0, "eps {eps}");
@@ -187,7 +265,6 @@ fn dp_training_stays_finite_and_accounts() {
 /// Same seed => identical run; different seed => different noise.
 #[test]
 fn training_is_deterministic_per_seed() {
-    let eng = engine();
     let mk = |seed| TrainOptions {
         config: "mlp2_mnist_b32".into(),
         method: ClipMethod::Reweight,
@@ -197,9 +274,9 @@ fn training_is_deterministic_per_seed() {
         seed,
         ..Default::default()
     };
-    let a = train(eng, &mk(5)).unwrap();
-    let b = train(eng, &mk(5)).unwrap();
-    let c = train(eng, &mk(6)).unwrap();
+    let a = train(native(), &mk(5)).unwrap();
+    let b = train(native(), &mk(5)).unwrap();
+    let c = train(native(), &mk(6)).unwrap();
     assert_eq!(a.losses, b.losses);
     assert_ne!(a.losses, c.losses);
 }
@@ -207,7 +284,6 @@ fn training_is_deterministic_per_seed() {
 /// Target-epsilon calibration path: requested budget is respected.
 #[test]
 fn target_epsilon_calibration() {
-    let eng = engine();
     let opts = TrainOptions {
         config: "mlp2_mnist_b32".into(),
         method: ClipMethod::Reweight,
@@ -218,7 +294,7 @@ fn target_epsilon_calibration() {
         log_every: 0,
         ..Default::default()
     };
-    let report = train(eng, &opts).unwrap();
+    let report = train(native(), &opts).unwrap();
     let (eps, _) = report.epsilon.unwrap();
     assert!(eps <= 1.5 + 1e-6, "spent {eps} > budget 1.5");
     assert!(report.sigma > 0.3);
@@ -227,7 +303,6 @@ fn target_epsilon_calibration() {
 /// Checkpoint round-trip through the trainer.
 #[test]
 fn checkpoint_roundtrip() {
-    let eng = engine();
     let dir = std::env::temp_dir().join("fastclip_it_ckpt");
     let opts = TrainOptions {
         config: "mlp2_mnist_b32".into(),
@@ -238,8 +313,8 @@ fn checkpoint_roundtrip() {
         checkpoint_dir: Some(dir.clone()),
         ..Default::default()
     };
-    train(eng, &opts).unwrap();
-    let cfg = eng.manifest.config("mlp2_mnist_b32").unwrap();
+    train(native(), &opts).unwrap();
+    let cfg = native().manifest().config("mlp2_mnist_b32").unwrap();
     let (meta, flat) =
         fastclip::coordinator::checkpoint::load(&dir, cfg).unwrap();
     assert_eq!(meta.step, 5);
@@ -251,7 +326,6 @@ fn checkpoint_roundtrip() {
 /// Poisson-sampling mode runs and matches the fixed batch ABI.
 #[test]
 fn poisson_sampling_mode() {
-    let eng = engine();
     let opts = TrainOptions {
         config: "mlp2_mnist_b32".into(),
         method: ClipMethod::Reweight,
@@ -261,20 +335,51 @@ fn poisson_sampling_mode() {
         log_every: 0,
         ..Default::default()
     };
-    let report = train(eng, &opts).unwrap();
+    let report = train(native(), &opts).unwrap();
     assert_eq!(report.losses.len(), 8);
 }
 
-/// Every fig5 config's fwd + reweight artifacts load and execute.
+/// Eval path: the fwd step runs during training and reports accuracy.
 #[test]
-fn all_fig5_configs_execute() {
-    let eng = engine();
-    for cfg in eng.manifest.by_tag("fig5") {
-        let out = run_method(&cfg.name, ClipMethod::Reweight, 1.0);
+fn eval_during_training_reports_accuracy() {
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::NonPrivate,
+        steps: 10,
+        dataset_n: 256,
+        eval_every: 5,
+        log_every: 0,
+        ..Default::default()
+    };
+    let report = train(native(), &opts).unwrap();
+    assert_eq!(report.eval_points.len(), 2);
+    for &(_, l, a) in &report.eval_points {
+        assert!(l.is_finite());
+        assert!((0.0..=1.0).contains(&a));
+    }
+}
+
+/// Every fig5 config's reweight step loads and executes.
+fn assert_fig5_sweep(backend: &dyn Backend) {
+    for cfg in backend.manifest().by_tag("fig5") {
+        let out = run_method(backend, &cfg.name, ClipMethod::Reweight, 1.0);
         assert!(out.loss.is_finite(), "{} loss", cfg.name);
         assert_eq!(out.grads.len(), cfg.params.len(), "{}", cfg.name);
         for (g, p) in out.grads.iter().zip(&cfg.params) {
             assert_eq!(g.len(), p.elems(), "{}.{}", cfg.name, p.name);
         }
+    }
+}
+
+#[test]
+fn all_fig5_configs_execute() {
+    assert_fig5_sweep(native());
+}
+
+#[test]
+fn all_fig5_configs_execute_pjrt() {
+    match pjrt() {
+        Some(b) => assert_fig5_sweep(b),
+        None => skip_no_pjrt("all_fig5_configs_execute_pjrt"),
     }
 }
