@@ -2,12 +2,20 @@
 //! (config, method) pair into a reusable "time one training step"
 //! closure with staged data and warm steps, over whatever `Backend`
 //! is available (PJRT artifacts when present, native otherwise).
+//!
+//! Also home of the method-matrix runner behind `fastclip
+//! bench-matrix`, which produces the `BENCH_<backend>.json` trajectory
+//! artifact (per-method step times) and the reweight-vs-nxbp speed
+//! check CI gates on.
 
+use crate::bench::BenchOpts;
 use crate::coordinator::{stage_batch, ClipMethod, GradComputer};
 use crate::data;
 use crate::runtime::{
     default_backend, init_params_glorot, Backend, BatchStage, ParamStore,
 };
+use crate::util::json::Json;
+use crate::util::stats::Summary;
 use anyhow::Result;
 
 /// Everything needed to repeatedly execute one step of one method.
@@ -83,6 +91,153 @@ pub fn per_epoch_seconds(step_mean_s: f64, dataset_n: usize, tau: usize) -> f64 
     step_mean_s * (dataset_n as f64 / tau as f64)
 }
 
+/// One timed (config, method) cell of the bench matrix.
+#[derive(Debug, Clone)]
+pub struct MatrixEntry {
+    pub config: String,
+    pub batch: usize,
+    pub method: ClipMethod,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub iters: usize,
+}
+
+/// Per-method step times over a set of configs — the bench
+/// trajectory's data point for one backend.
+#[derive(Debug, Clone)]
+pub struct MatrixReport {
+    pub backend: String,
+    pub smoke: bool,
+    pub entries: Vec<MatrixEntry>,
+}
+
+impl MatrixReport {
+    /// Mean step time of one (config, method) cell, if present.
+    pub fn mean_ms(&self, config: &str, method: ClipMethod) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|e| e.config == config && e.method == method)
+            .map(|e| e.mean_ms)
+    }
+
+    /// The paper's headline ratio: how many times faster `reweight`'s
+    /// step is than the naive `nxbp` loop on `config`.
+    pub fn reweight_speedup(&self, config: &str) -> Option<f64> {
+        let rw = self.mean_ms(config, ClipMethod::Reweight)?;
+        let nx = self.mean_ms(config, ClipMethod::NxBp)?;
+        if rw <= 0.0 {
+            return None;
+        }
+        Some(nx / rw)
+    }
+
+    /// The CI gate: on every batch-128 config that timed both methods,
+    /// reweight must beat nxbp. Errors if no such config was measured
+    /// (an empty check must not pass green).
+    pub fn check_reweight_beats_nxbp(&self) -> Result<()> {
+        let mut checked = 0usize;
+        for e in &self.entries {
+            if e.batch != 128 || e.method != ClipMethod::Reweight {
+                continue;
+            }
+            let Some(nx) = self.mean_ms(&e.config, ClipMethod::NxBp) else {
+                continue;
+            };
+            anyhow::ensure!(
+                e.mean_ms < nx,
+                "{}: reweight ({:.3} ms) is not faster than nxbp ({:.3} ms) \
+                 at batch 128 — the batched clipping path has lost its \
+                 structural advantage",
+                e.config,
+                e.mean_ms,
+                nx
+            );
+            checked += 1;
+        }
+        anyhow::ensure!(
+            checked > 0,
+            "no batch-128 config with both reweight and nxbp timings in the \
+             matrix — the check would be vacuous"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            let mut o = Json::obj();
+            o.set("config", e.config.as_str().into());
+            o.set("batch", e.batch.into());
+            o.set("method", e.method.name().into());
+            o.set("mean_ms", e.mean_ms.into());
+            o.set("p50_ms", e.p50_ms.into());
+            o.set("p95_ms", e.p95_ms.into());
+            o.set("iters", e.iters.into());
+            entries.push(o);
+        }
+        let mut speedups = Json::obj();
+        let mut seen: Vec<&str> = Vec::new();
+        for e in &self.entries {
+            if seen.contains(&e.config.as_str()) {
+                continue;
+            }
+            seen.push(&e.config);
+            if let Some(s) = self.reweight_speedup(&e.config) {
+                speedups.set(&e.config, s.into());
+            }
+        }
+        let mut root = Json::obj();
+        root.set("suite", "bench_matrix".into());
+        root.set("backend", self.backend.as_str().into());
+        root.set("smoke", self.smoke.into());
+        root.set("entries", Json::Arr(entries));
+        root.set("reweight_speedup_vs_nxbp", speedups);
+        root
+    }
+}
+
+/// Time every (config, method) cell: warmup, then iterate under
+/// `opts`'s iteration/time bounds. Methods a config cannot run
+/// (e.g. a backend without the artifact) fail hard — the matrix is
+/// the support claim, so a hole is an error, not a skip.
+pub fn run_matrix(
+    backend: &dyn Backend,
+    configs: &[String],
+    methods: &[ClipMethod],
+    opts: BenchOpts,
+    smoke: bool,
+) -> Result<MatrixReport> {
+    let mut entries = Vec::with_capacity(configs.len() * methods.len());
+    for config in configs {
+        for &method in methods {
+            let mut runner = StepRunner::new(backend, config, method)?;
+            let times = crate::bench::measure(opts, || runner.step());
+            let s = Summary::of(&times);
+            crate::log_info!(
+                "bench {config}/{}: {:.3} ms/step over {} iters",
+                method.name(),
+                s.mean * 1e3,
+                times.len()
+            );
+            entries.push(MatrixEntry {
+                config: config.clone(),
+                batch: runner.batch,
+                method,
+                mean_ms: s.mean * 1e3,
+                p50_ms: s.p50 * 1e3,
+                p95_ms: s.p95 * 1e3,
+                iters: times.len(),
+            });
+        }
+    }
+    Ok(MatrixReport {
+        backend: backend.name().to_string(),
+        smoke,
+        entries,
+    })
+}
+
 /// The four strategies every figure compares.
 pub fn figure_methods() -> [ClipMethod; 4] {
     [
@@ -102,6 +257,66 @@ mod tests {
         // 10ms steps, 60000 examples, batch 32 => 1875 steps => 18.75 s
         let s = per_epoch_seconds(0.010, 60_000, 32);
         assert!((s - 18.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matrix_check_logic() {
+        let mk = |method: ClipMethod, mean_ms: f64| MatrixEntry {
+            config: "mlp4_mnist_b128".into(),
+            batch: 128,
+            method,
+            mean_ms,
+            p50_ms: mean_ms,
+            p95_ms: mean_ms,
+            iters: 3,
+        };
+        let mut r = MatrixReport {
+            backend: "native".into(),
+            smoke: true,
+            entries: vec![
+                mk(ClipMethod::Reweight, 1.0),
+                mk(ClipMethod::NxBp, 5.0),
+            ],
+        };
+        assert!(r.check_reweight_beats_nxbp().is_ok());
+        assert!(
+            (r.reweight_speedup("mlp4_mnist_b128").unwrap() - 5.0).abs()
+                < 1e-9
+        );
+        let j = r.to_json().to_string();
+        assert!(j.contains("reweight") && j.contains("mlp4_mnist_b128"));
+        // reweight slower than nxbp => the gate trips
+        r.entries[0].mean_ms = 10.0;
+        assert!(r.check_reweight_beats_nxbp().is_err());
+        // an empty matrix must not pass vacuously
+        let empty = MatrixReport {
+            backend: "native".into(),
+            smoke: true,
+            entries: Vec::new(),
+        };
+        assert!(empty.check_reweight_beats_nxbp().is_err());
+    }
+
+    #[test]
+    fn run_matrix_times_native_methods() {
+        let backend = crate::runtime::NativeBackend::new();
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            min_iters: 1,
+            max_iters: 2,
+            target_seconds: 0.0,
+        };
+        let report = run_matrix(
+            &backend,
+            &["mlp2_mnist_b16".to_string()],
+            &[ClipMethod::Reweight, ClipMethod::ReweightDirect],
+            opts,
+            true,
+        )
+        .unwrap();
+        assert_eq!(report.entries.len(), 2);
+        assert!(report.entries.iter().all(|e| e.mean_ms > 0.0));
+        assert_eq!(report.backend, "native");
     }
 
     #[test]

@@ -93,21 +93,8 @@ impl Suite {
     }
 
     /// Measure `f` (one invocation = one iteration).
-    pub fn bench<F: FnMut()>(&mut self, name: &str, opts: BenchOpts, mut f: F) -> &BenchResult {
-        let opts = opts.from_env();
-        for _ in 0..opts.warmup_iters {
-            f();
-        }
-        let mut times = Vec::new();
-        let t0 = Instant::now();
-        while times.len() < opts.max_iters
-            && (times.len() < opts.min_iters
-                || t0.elapsed().as_secs_f64() < opts.target_seconds)
-        {
-            let t = Instant::now();
-            f();
-            times.push(t.elapsed().as_secs_f64());
-        }
+    pub fn bench<F: FnMut()>(&mut self, name: &str, opts: BenchOpts, f: F) -> &BenchResult {
+        let times = measure(opts, f);
         let summary = Summary::of(&times);
         eprintln!(
             "  {:<44} {:>10.3} ms/iter  (p50 {:.3}, p95 {:.3}, n={})",
@@ -179,6 +166,28 @@ impl Suite {
         eprintln!("(json: {})", path.display());
         Ok(())
     }
+}
+
+/// The one timing policy every harness entry point shares (Suite
+/// benches and the bench-matrix runner): honour FASTCLIP_BENCH_FAST,
+/// warm up, then iterate under the min/max/target-seconds bounds.
+/// Returns the per-iteration times in seconds.
+pub fn measure<F: FnMut()>(opts: BenchOpts, mut f: F) -> Vec<f64> {
+    let opts = opts.from_env();
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut times = Vec::new();
+    let t0 = Instant::now();
+    while times.len() < opts.max_iters
+        && (times.len() < opts.min_iters
+            || t0.elapsed().as_secs_f64() < opts.target_seconds)
+    {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times
 }
 
 /// Speedup helper: a / b with guard.

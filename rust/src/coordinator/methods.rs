@@ -1,17 +1,24 @@
-//! Gradient-clipping strategies (paper Sec 6.1): the four ways to
-//! compute `1/tau sum_i clip_c(grad l_i)`, dispatched by the trainer
-//! and bench harness.
+//! Gradient-clipping strategies (paper Sec 6.1 + the §Perf
+//! extensions): the seven ways to compute
+//! `1/tau sum_i clip_c(grad l_i)`, dispatched by the trainer and
+//! bench harness.
 //!
 //! All private methods return identical gradients (tested in
 //! rust/tests/integration.rs); only the computational structure —
 //! and therefore the wall clock — differs:
 //!
-//!   NonPrivate — one batched backward, no clipping (lower bound).
-//!   Reweight   — the paper: norms from taps, reweighted second
-//!                backward, all inside one step executable.
-//!   MultiLoss  — materialized per-example gradients (vmap of grad).
-//!   NxBp       — TF-Privacy-style loop: one backward per example on a
-//!                batch-1 step; Rust clips and accumulates.
+//!   NonPrivate     — one batched backward, no clipping (lower bound).
+//!   Reweight       — the paper: norms from taps, reweighted second
+//!                    backward, all inside one step executable.
+//!   ReweightGram   — norms via the Gram-matrix route (Sec 5.2),
+//!                    reweighted second backward.
+//!   ReweightDirect — one backward: the weighted gradient is
+//!                    assembled directly from the tapped deltas.
+//!   ReweightPallas — one backward, nu fused into the gradient GEMM.
+//!   MultiLoss      — materialized per-example gradients (vmap of
+//!                    grad).
+//!   NxBp           — TF-Privacy-style loop: one backward per example
+//!                    on a batch-1 step; Rust clips and accumulates.
 //!
 //! Everything here goes through the `Backend`/`StepFn` traits, so the
 //! same dispatch drives the native and PJRT implementations.
@@ -192,7 +199,9 @@ impl GradComputer {
             a.iter_mut().for_each(|x| *x = 0.0);
         }
         let mut norms = Vec::with_capacity(tau);
-        let mut loss_sum = 0.0f32;
+        // f64: the batched paths accumulate loss in f64, and the
+        // nxbp-vs-reweight loss equivalence must hold at large tau
+        let mut loss_sum = 0.0f64;
         for i in 0..tau {
             if naive.stage.is_f32 {
                 naive.stage.feat_f32
@@ -203,15 +212,28 @@ impl GradComputer {
             }
             naive.stage.labels[0] = stage.labels[i];
             let out = self.exe.run(params, &naive.stage, None)?;
-            let norm = out.norms.as_ref().map(|n| n[0]).unwrap_or(0.0);
-            let nu = if norm > clip { clip / norm } else { 1.0 };
+            // A missing norm MUST be a hard error: defaulting it to 0
+            // would make nu = 1 and silently add an *unclipped*
+            // gradient — the noise calibrated for sensitivity `clip`
+            // would no longer cover it, voiding the DP guarantee.
+            let norm = match out.norms.as_ref().and_then(|n| n.first()) {
+                Some(&n) => n,
+                None => anyhow::bail!(
+                    "nxbp: the naive1 step for config {} returned no \
+                     per-example norm for example {i}; refusing to treat \
+                     it as 0 (nu would be 1 and the update would go in \
+                     unclipped, breaking the sensitivity bound)",
+                    naive.cfg.name
+                ),
+            };
+            let nu = crate::runtime::clip_factor(norm, clip);
             for (acc, g) in naive.acc.iter_mut().zip(&out.grads) {
                 for (a, &gi) in acc.iter_mut().zip(g) {
                     *a += nu * gi;
                 }
             }
             norms.push(norm);
-            loss_sum += out.loss;
+            loss_sum += out.loss as f64;
         }
         let inv_tau = 1.0 / tau as f32;
         let grads: Vec<Vec<f32>> = naive
@@ -221,7 +243,7 @@ impl GradComputer {
             .collect();
         Ok(StepOut {
             grads,
-            loss: loss_sum * inv_tau,
+            loss: (loss_sum / tau as f64) as f32,
             norms: Some(norms),
             correct: None,
         })

@@ -6,8 +6,11 @@
 //! driving pluggable execution backends through `runtime::Backend`:
 //!
 //!   - `runtime::native::NativeBackend` (default, always on): pure-Rust
-//!     forward/backward for the MLP config family, rayon-parallel over
-//!     examples, bitwise deterministic. Tier-1 (`cargo build --release
+//!     *batched* execution for the MLP config family — activations and
+//!     deltas as B x d matrices over the cache-blocked rayon GEMM
+//!     kernels in `runtime::native::gemm`, bitwise deterministic, all
+//!     seven clip methods (reweight, gram, direct, pallas-fused,
+//!     multiloss, nxbp, nonprivate). Tier-1 (`cargo build --release
 //!     && cargo test -q`) runs entirely on this backend — no Python,
 //!     no artifacts, no xla.
 //!

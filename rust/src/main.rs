@@ -1,11 +1,12 @@
 //! fastclip CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   train       run DP training on one config (paper Alg 1)
-//!   bench-step  time one (config, method) step
-//!   accountant  RDP accounting / sigma calibration queries
-//!   memory      Sec 6.7 memory model table for a config
-//!   inspect     list manifest configs and artifacts
+//!   train         run DP training on one config (paper Alg 1)
+//!   bench-step    time one (config, method) step
+//!   bench-matrix  time a config x method matrix, write BENCH_<backend>.json
+//!   accountant    RDP accounting / sigma calibration queries
+//!   memory        Sec 6.7 memory model table for a config
+//!   inspect       list manifest configs and artifacts
 //!
 //! Every compute subcommand takes `--backend native|pjrt|auto`
 //! (default auto: PJRT when compiled in and artifacts exist, native
@@ -33,6 +34,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "bench-step" => cmd_bench_step(&args),
+        "bench-matrix" => cmd_bench_matrix(&args),
         "accountant" => cmd_accountant(&args),
         "memory" => cmd_memory(&args),
         "inspect" => cmd_inspect(&args),
@@ -59,6 +61,11 @@ USAGE: fastclip <subcommand> [flags]
               [--optimizer adam|sgd] [--seed N] [--eval-every N]
               [--poisson] [--checkpoint DIR] [--json]
   bench-step  --config NAME --method M [--iters N]
+  bench-matrix [--configs NAME,NAME,...] [--methods M,M,...] [--smoke]
+              [--out FILE] [--check]
+              times every (config, method) step and writes the
+              BENCH_<backend>.json trajectory artifact; --check fails
+              unless reweight beats nxbp on every batch-128 config
   accountant  --q F --sigma F --steps N [--delta F]
               | --calibrate --q F --steps N --eps F [--delta F]
   memory      --config NAME [--budget-gib F]
@@ -181,6 +188,67 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
         s.p50 * 1e3,
         s.p95 * 1e3
     );
+    Ok(())
+}
+
+fn cmd_bench_matrix(args: &Args) -> Result<()> {
+    use fastclip::bench::driver::run_matrix;
+    use fastclip::bench::BenchOpts;
+    let backend = backend(args)?;
+    let configs: Vec<String> = args
+        .str_or("configs", "mlp2_mnist_b128,mlp4_mnist_b128")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let methods: Vec<ClipMethod> = match args.str_opt("methods") {
+        Some(csv) => csv
+            .split(',')
+            .map(|m| ClipMethod::parse(m.trim()))
+            .collect::<Result<Vec<ClipMethod>>>()?,
+        None => ClipMethod::all().to_vec(),
+    };
+    let smoke = args.bool("smoke");
+    let opts = if smoke {
+        // CI smoke: enough iterations to rank methods, not to publish
+        BenchOpts {
+            warmup_iters: 1,
+            min_iters: 2,
+            max_iters: 5,
+            target_seconds: 0.3,
+        }
+    } else {
+        BenchOpts::default()
+    };
+    let report = run_matrix(backend.as_ref(), &configs, &methods, opts, smoke)?;
+    println!("| config | method | mean ms | p50 ms | p95 ms | iters |");
+    println!("|---|---|---:|---:|---:|---:|");
+    for e in &report.entries {
+        println!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {} |",
+            e.config,
+            e.method.name(),
+            e.mean_ms,
+            e.p50_ms,
+            e.p95_ms,
+            e.iters
+        );
+    }
+    for config in &configs {
+        if let Some(s) = report.reweight_speedup(config) {
+            println!("{config}: reweight is {s:.1}x faster than nxbp");
+        }
+    }
+    let out = args.str_or("out", &format!("BENCH_{}.json", backend.name()));
+    fastclip::util::write_file(
+        std::path::Path::new(&out),
+        &report.to_json().to_string_pretty(),
+    )?;
+    println!("wrote {out}");
+    if args.bool("check") {
+        report.check_reweight_beats_nxbp()?;
+        println!("check passed: reweight beats nxbp at batch 128");
+    }
     Ok(())
 }
 

@@ -23,9 +23,12 @@ use std::sync::Arc;
 ///
 /// Semantics by method (the artifact contract, DESIGN.md §7):
 ///   - `nonprivate`: grads = batch-mean gradient, loss = mean loss.
-///   - `reweight` / `multiloss`: grads = 1/tau * sum_i nu_i * g_i with
-///     nu_i = min(1, clip/||g_i||); norms = unclipped per-example
-///     norms; requires `clip`.
+///   - `reweight` / `reweight_gram` / `reweight_direct` /
+///     `reweight_pallas` / `multiloss`: grads = 1/tau * sum_i nu_i *
+///     g_i with nu_i = min(1, clip/||g_i||); norms = unclipped
+///     per-example norms; requires `clip`. The variants differ only in
+///     how norms are computed and where nu is applied — never in the
+///     result.
 ///   - `naive1` (batch-1): grads = the single example's unclipped
 ///     gradient; norms = [||g_0||]. The nxBP loop clips/averages in
 ///     the coordinator.

@@ -15,7 +15,7 @@ pub use backend::{Backend, StepFn};
 pub use engine::{Engine, StepExe};
 pub use manifest::{ArtifactSpec, ConfigSpec, Manifest, ParamSpec};
 pub use native::NativeBackend;
-pub use store::{init_params_glorot, BatchStage, ParamStore, StepOut};
+pub use store::{clip_factor, init_params_glorot, BatchStage, ParamStore, StepOut};
 
 use anyhow::Result;
 use std::path::PathBuf;

@@ -1,0 +1,352 @@
+//! Batched matrix kernels for the native backend: cache-blocked,
+//! rayon-parallel f32 GEMMs in the three orientations the MLP
+//! forward/backward/gradient passes need, plus the fused
+//! per-row-scaled variant behind `reweight_pallas` and the small
+//! reduction helpers (row norms, column sums).
+//!
+//! All matrices are dense row-major flat slices.
+//!
+//! # Determinism contract
+//!
+//! Every kernel is bitwise deterministic regardless of the rayon
+//! thread count:
+//!   - parallelism is only over disjoint row blocks of the *output* —
+//!     no two tasks ever accumulate into the same element, so there is
+//!     no reduction race to order;
+//!   - within a task, every output element is accumulated over the
+//!     reduction dimension in a single fixed ascending order. (`sgemm`
+//!     additionally blocks that loop by `TILE_K` for cache reuse —
+//!     blocks are visited in order, so the per-element floating-point
+//!     sequence is still plain ascending; `sgemm_nt`/`sgemm_tn` walk
+//!     the reduction unblocked.)
+//! Tile sizes are fixed constants — never derived from the machine's
+//! parallelism — so the same inputs produce the same bits on a laptop
+//! and a 128-core server.
+
+use rayon::prelude::*;
+
+/// Output rows per parallel task. Fixed so task boundaries (and the
+/// work split, though not the bits — see module docs) are
+/// machine-independent.
+pub const TILE_M: usize = 32;
+
+/// Reduction-dimension block: one block of the B (or A) operand stays
+/// hot in cache across the rows of a task.
+pub const TILE_K: usize = 256;
+
+/// C[m x n] += A[m x k] · B[k x n].
+///
+/// The inner loop is an axpy over a row of B, so it streams
+/// contiguous memory and skips zero A entries (ReLU activations are
+/// sparse — the skip changes no bits, only work).
+pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "sgemm: A must be {m}x{k}");
+    assert_eq!(b.len(), k * n, "sgemm: B must be {k}x{n}");
+    assert_eq!(c.len(), m * n, "sgemm: C must be {m}x{n}");
+    c.par_chunks_mut(TILE_M * n).enumerate().for_each(|(blk, cblk)| {
+        let row0 = blk * TILE_M;
+        let rows = cblk.len() / n;
+        let mut kb = 0;
+        while kb < k {
+            let kend = (kb + TILE_K).min(k);
+            for r in 0..rows {
+                let arow = &a[(row0 + r) * k..(row0 + r) * k + k];
+                let crow = &mut cblk[r * n..(r + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    if av != 0.0 {
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+            kb = kend;
+        }
+    });
+}
+
+/// C[m x n] += A[m x k] · B[n x k]ᵀ  (B stored row-major n x k).
+///
+/// C[i][j] = dot(A row i, B row j): both operands stream
+/// contiguously, which is why the backward pass (Δ_{l+1} · Wᵀ) and the
+/// Gram products (X · Xᵀ) use this orientation.
+pub fn sgemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "sgemm_nt: A must be {m}x{k}");
+    assert_eq!(b.len(), n * k, "sgemm_nt: B must be {n}x{k}");
+    assert_eq!(c.len(), m * n, "sgemm_nt: C must be {m}x{n}");
+    c.par_chunks_mut(TILE_M * n).enumerate().for_each(|(blk, cblk)| {
+        let row0 = blk * TILE_M;
+        let rows = cblk.len() / n;
+        for r in 0..rows {
+            let arow = &a[(row0 + r) * k..(row0 + r) * k + k];
+            let crow = &mut cblk[r * n..(r + 1) * n];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *cv += acc;
+            }
+        }
+    });
+}
+
+/// C[m x n] += A[p x m]ᵀ · B[p x n]  (A stored row-major p x m).
+///
+/// C[i][j] = Σ_r A[r][i] · B[r][j]: the weight-gradient orientation
+/// (taps ᵀ · deltas), reducing over the batch dimension p in ascending
+/// row order.
+pub fn sgemm_tn(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    sgemm_tn_impl(m, p, n, a, None, b, c)
+}
+
+/// C[m x n] += Σ_r s[r] · A[r][i] · B[r][j] — `sgemm_tn` with a
+/// per-reduction-row scale fused into the kernel. This is the
+/// `reweight_pallas` trick: the clip factor nu_r multiplies each
+/// example's rank-1 gradient contribution *inside* the GEMM, so the
+/// nu-weighted delta matrix is never materialized.
+pub fn sgemm_tn_scaled(
+    m: usize,
+    p: usize,
+    n: usize,
+    a: &[f32],
+    scale: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(scale.len(), p, "sgemm_tn_scaled: scale must have len {p}");
+    sgemm_tn_impl(m, p, n, a, Some(scale), b, c)
+}
+
+fn sgemm_tn_impl(
+    m: usize,
+    p: usize,
+    n: usize,
+    a: &[f32],
+    scale: Option<&[f32]>,
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), p * m, "sgemm_tn: A must be {p}x{m}");
+    assert_eq!(b.len(), p * n, "sgemm_tn: B must be {p}x{n}");
+    assert_eq!(c.len(), m * n, "sgemm_tn: C must be {m}x{n}");
+    c.par_chunks_mut(TILE_M * n).enumerate().for_each(|(blk, cblk)| {
+        let row0 = blk * TILE_M;
+        let rows = cblk.len() / n;
+        for r in 0..p {
+            let arow = &a[r * m..(r + 1) * m];
+            let brow = &b[r * n..(r + 1) * n];
+            let s = match scale {
+                Some(sc) => sc[r],
+                None => 1.0,
+            };
+            for i in 0..rows {
+                let av = s * arow[row0 + i];
+                if av != 0.0 {
+                    let crow = &mut cblk[i * n..(i + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Per-row squared L2 norms of an r x cols matrix, accumulated in f64
+/// (matching the scalar reference path's precision).
+pub fn row_sq_norms(rows: usize, cols: usize, a: &[f32]) -> Vec<f64> {
+    assert_eq!(a.len(), rows * cols, "row_sq_norms: A must be {rows}x{cols}");
+    (0..rows)
+        .map(|r| {
+            a[r * cols..(r + 1) * cols]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum()
+        })
+        .collect()
+}
+
+/// out[j] += Σ_r s[r] · B[r][j] (s = 1 when `scale` is None) — the
+/// bias-gradient reduction over the batch, in ascending row order.
+pub fn col_sums(rows: usize, cols: usize, b: &[f32], scale: Option<&[f32]>, out: &mut [f32]) {
+    assert_eq!(b.len(), rows * cols, "col_sums: B must be {rows}x{cols}");
+    assert_eq!(out.len(), cols, "col_sums: out must have len {cols}");
+    if let Some(sc) = scale {
+        assert_eq!(sc.len(), rows, "col_sums: scale must have len {rows}");
+    }
+    for r in 0..rows {
+        let brow = &b[r * cols..(r + 1) * cols];
+        let s = match scale {
+            Some(sc) => sc[r],
+            None => 1.0,
+        };
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += s * bv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::ChaCha20;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = ChaCha20::seeded(seed, 77);
+        (0..rows * cols).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    /// f64 triple-loop reference for C += A·B.
+    fn ref_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+            }
+        }
+        c
+    }
+
+    fn assert_close(got: &[f32], want: &[f64]) {
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            let denom = w.abs().max(1.0);
+            assert!(
+                ((g as f64) - w).abs() / denom < 1e-4,
+                "elem {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn nn_matches_reference_awkward_shapes() {
+        // sizes straddling the tile boundaries: 1, < tile, > tile
+        for (m, k, n) in [(1, 1, 1), (3, 5, 4), (33, 70, 17), (65, 300, 9)] {
+            let a = rand_mat(m, k, 1);
+            let b = rand_mat(k, n, 2);
+            let mut c = vec![0.0f32; m * n];
+            sgemm(m, k, n, &a, &b, &mut c);
+            assert_close(&c, &ref_nn(m, k, n, &a, &b));
+        }
+    }
+
+    #[test]
+    fn nt_matches_nn_on_transposed_operand() {
+        let (m, k, n) = (19, 37, 23);
+        let a = rand_mat(m, k, 3);
+        let b = rand_mat(k, n, 4); // k x n
+        // bt: n x k row-major (the transpose of b)
+        let mut bt = vec![0.0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        sgemm_nt(m, k, n, &a, &bt, &mut c);
+        assert_close(&c, &ref_nn(m, k, n, &a, &b));
+    }
+
+    #[test]
+    fn tn_matches_nn_on_transposed_operand() {
+        let (m, p, n) = (40, 13, 7);
+        let at = rand_mat(p, m, 5); // p x m: the stored operand
+        let b = rand_mat(p, n, 6);
+        // a: m x p (the logical Aᵀ as a plain matrix)
+        let mut a = vec![0.0f32; m * p];
+        for r in 0..p {
+            for i in 0..m {
+                a[i * p + r] = at[r * m + i];
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        sgemm_tn(m, p, n, &at, &b, &mut c);
+        assert_close(&c, &ref_nn(m, p, n, &a, &b));
+    }
+
+    #[test]
+    fn tn_scaled_matches_prescaled_rows() {
+        let (m, p, n) = (11, 9, 6);
+        let at = rand_mat(p, m, 7);
+        let b = rand_mat(p, n, 8);
+        let scale: Vec<f32> = (0..p).map(|r| 0.1 + r as f32 * 0.2).collect();
+        // reference: scale the rows of `at` up front, then plain tn
+        let scaled_at: Vec<f32> = at
+            .iter()
+            .enumerate()
+            .map(|(idx, &v)| scale[idx / m] * v)
+            .collect();
+        let mut want = vec![0.0f32; m * n];
+        sgemm_tn(m, p, n, &scaled_at, &b, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        sgemm_tn_scaled(m, p, n, &at, &scale, &b, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let (m, k, n) = (2, 3, 2);
+        let a = rand_mat(m, k, 9);
+        let b = rand_mat(k, n, 10);
+        let mut once = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut once);
+        let mut twice = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut twice);
+        sgemm(m, k, n, &a, &b, &mut twice);
+        for (o, t) in once.iter().zip(&twice) {
+            assert!((2.0 * o - t).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn kernels_are_bitwise_deterministic() {
+        // big enough for several parallel tasks
+        let (m, k, n) = (130, 500, 40);
+        let a = rand_mat(m, k, 11);
+        let b = rand_mat(k, n, 12);
+        let run = |f: &dyn Fn(&mut [f32])| {
+            let mut c = vec![0.0f32; m * n];
+            f(&mut c);
+            c
+        };
+        for _ in 0..3 {
+            assert_eq!(
+                run(&|c| sgemm(m, k, n, &a, &b, c)),
+                run(&|c| sgemm(m, k, n, &a, &b, c))
+            );
+        }
+        let bt = rand_mat(n, k, 13);
+        assert_eq!(
+            run(&|c| sgemm_nt(m, k, n, &a, &bt, c)),
+            run(&|c| sgemm_nt(m, k, n, &a, &bt, c))
+        );
+        let at = rand_mat(k, m, 14);
+        let bb = rand_mat(k, n, 15);
+        assert_eq!(
+            run(&|c| sgemm_tn(m, k, n, &at, &bb, c)),
+            run(&|c| sgemm_tn(m, k, n, &at, &bb, c))
+        );
+    }
+
+    #[test]
+    fn row_norms_and_col_sums() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2 x 3
+        let sq = row_sq_norms(2, 3, &a);
+        assert!((sq[0] - 14.0).abs() < 1e-12);
+        assert!((sq[1] - 77.0).abs() < 1e-12);
+        let mut sums = vec![0.0f32; 3];
+        col_sums(2, 3, &a, None, &mut sums);
+        assert_eq!(sums, vec![5.0, 7.0, 9.0]);
+        let mut wsums = vec![0.0f32; 3];
+        col_sums(2, 3, &a, Some(&[2.0, 0.5]), &mut wsums);
+        assert_eq!(wsums, vec![4.0, 6.5, 9.0]);
+    }
+}

@@ -5,35 +5,53 @@
 //! is the reference implementation the PJRT artifacts are checked
 //! against when both are present.
 //!
-//! All four clip methods are implemented with the *structure* the
-//! paper compares (Sec 6.1):
-//!   - `nonprivate`: one batched backward, no clipping.
-//!   - `reweight`:   per-example norms via the activation/delta tap
-//!                   trick, then a nu-reweighted gradient assembly —
-//!                   per-example gradients are never materialized.
-//!   - `multiloss`:  materialized per-example gradients, clipped and
-//!                   summed (the vmap-of-grad structure).
-//!   - `naive1`:     the batch-1 body of the nxBP loop.
+//! Execution is *batched* (the point of the paper): activations and
+//! deltas live as B x d matrices and every heavy op is a `gemm`
+//! kernel, so the clipping strategies differ only in the extra work
+//! they do around one batched forward/backward — which is exactly the
+//! structure the paper's figures compare:
 //!
-//! Examples are processed in fixed-size chunks in parallel (rayon);
-//! chunk boundaries and the merge order are deterministic, so results
-//! are bitwise reproducible regardless of thread scheduling.
+//!   - `nonprivate`:      one batched backward, no clipping.
+//!   - `reweight`:        per-example norms via the activation/delta
+//!                        tap trick, then a *second*, nu-reweighted
+//!                        backward pass (the paper's main method).
+//!   - `reweight_gram`:   norms via the A·Aᵀ ∘ Δ·Δᵀ Gram diagonal
+//!                        (paper Sec 5.2), then the reweighted
+//!                        backward.
+//!   - `reweight_direct`: one backward only — the tapped deltas are
+//!                        nu-scaled in place and the weighted gradient
+//!                        is assembled directly.
+//!   - `reweight_pallas`: one backward, and nu is fused *into* the
+//!                        gradient GEMM (no weighted delta matrix is
+//!                        ever materialized) — the fused-kernel
+//!                        variant.
+//!   - `multiloss`:       materialized per-example gradients, clipped
+//!                        and summed (the vmap-of-grad structure).
+//!   - `naive1`:          the batch-1 body of the nxBP loop.
+//!
+//! Determinism: the GEMM kernels parallelize only over disjoint
+//! output-row blocks with a fixed reduction order (see `gemm`), and
+//! the one remaining per-example stage (multiloss materialization)
+//! runs in fixed-size chunks merged in order — results are bitwise
+//! reproducible regardless of thread scheduling.
 
+pub mod gemm;
 pub mod mlp;
 
+use self::mlp::{BatchScratch, MlpSpec};
 use super::backend::{Backend, StepFn};
 use super::manifest::{ArtifactSpec, ConfigSpec, Manifest, ParamSpec};
 use super::store::{BatchStage, ParamStore, StepOut};
 use anyhow::{bail, ensure, Context, Result};
-use self::mlp::{MlpSpec, Scratch};
 use rayon::prelude::*;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-/// Examples per parallel work unit. Fixed (not derived from the thread
-/// count) so the floating-point merge order — and therefore every
-/// gradient bit — is independent of the machine's parallelism.
+/// Examples per parallel work unit in the multiloss materialization
+/// stage. Fixed (not derived from the thread count) so the
+/// floating-point merge order — and therefore every gradient bit — is
+/// independent of the machine's parallelism.
 const CHUNK_EXAMPLES: usize = 8;
 
 /// Hidden width of the built-in MLP config family.
@@ -92,6 +110,9 @@ impl Backend for NativeBackend {
 enum Kind {
     NonPrivate,
     Reweight,
+    ReweightGram,
+    ReweightDirect,
+    ReweightPallas,
     MultiLoss,
     Naive1,
     Fwd,
@@ -102,11 +123,26 @@ impl Kind {
         Ok(match method {
             "nonprivate" => Kind::NonPrivate,
             "reweight" => Kind::Reweight,
+            "reweight_gram" => Kind::ReweightGram,
+            "reweight_direct" => Kind::ReweightDirect,
+            "reweight_pallas" => Kind::ReweightPallas,
             "multiloss" => Kind::MultiLoss,
             "naive1" => Kind::Naive1,
             "fwd" => Kind::Fwd,
             other => bail!("no native kernel for method {other:?}"),
         })
+    }
+
+    /// Does this kernel need the clip threshold?
+    fn needs_clip(&self) -> bool {
+        matches!(
+            self,
+            Kind::Reweight
+                | Kind::ReweightGram
+                | Kind::ReweightDirect
+                | Kind::ReweightPallas
+                | Kind::MultiLoss
+        )
     }
 }
 
@@ -117,12 +153,13 @@ struct NativeStep {
     config: String,
 }
 
-/// Per-chunk partial results, merged sequentially in chunk order.
-struct Partial {
-    grads: Vec<Vec<f32>>,
-    loss_sum: f64,
-    norms: Vec<f32>,
-    correct: usize,
+/// nu_i = min(1, clip / ||g_i||) for every example, via the shared
+/// `runtime::clip_factor` definition.
+fn clip_factors(norms: &[f32], clip: f32) -> Vec<f32> {
+    norms
+        .iter()
+        .map(|&n| crate::runtime::clip_factor(n, clip))
+        .collect()
 }
 
 impl StepFn for NativeStep {
@@ -142,9 +179,21 @@ impl StepFn for NativeStep {
             "{}: native mlp expects f32 features",
             self.config
         );
-        let b = stage.labels.len();
+        // The batch comes from the *config*, never from the staged
+        // buffers: a consistently truncated stage (features and labels
+        // both short) must be a hard error, or training would silently
+        // run at a smaller batch than the sampling ratio the RDP
+        // accountant charges for.
+        let b = spec.batch;
         let d = spec.d_in;
-        ensure!(b > 0, "{}: empty staged batch", self.config);
+        ensure!(
+            stage.labels.len() == b,
+            "{}: staged batch holds {} labels but the config batch is {b} — \
+             executing a smaller batch would change the sampling ratio the \
+             RDP accountant assumes; stage the full batch",
+            self.config,
+            stage.labels.len()
+        );
         ensure!(
             stage.feat_f32.len() == b * d,
             "{}: staged features hold {} elems, need {} ({} examples x {})",
@@ -169,134 +218,151 @@ impl StepFn for NativeStep {
                 self.config
             );
         }
-        let clip = match self.kind {
-            Kind::Reweight | Kind::MultiLoss => Some(
-                clip.with_context(|| {
-                    format!("{}: {} requires a clip threshold", self.config, self.method)
-                })?,
-            ),
-            _ => None,
+        for (i, &y) in stage.labels.iter().enumerate() {
+            ensure!(
+                y >= 0 && (y as usize) < spec.n_classes,
+                "{}: label {y} at row {i} outside 0..{}",
+                self.config,
+                spec.n_classes
+            );
+        }
+        let clip = if self.kind.needs_clip() {
+            Some(clip.with_context(|| {
+                format!("{}: {} requires a clip threshold", self.config, self.method)
+            })?)
+        } else {
+            None
         };
 
         let host = &params.host;
-        let feats = &stage.feat_f32;
+        let x = &stage.feat_f32;
         let labels = &stage.labels;
-        let n_chunks = b / CHUNK_EXAMPLES + usize::from(b % CHUNK_EXAMPLES != 0);
-        let kind = self.kind;
-        let config = self.config.as_str();
+        let mut s = BatchScratch::for_spec(spec, b);
+        let (loss_sum, correct) = mlp::forward_batch(spec, host, x, labels, &mut s);
+        let loss = (loss_sum / b as f64) as f32;
 
-        let partials: Vec<Partial> = (0..n_chunks)
-            .into_par_iter()
-            .map(|ci| -> Result<Partial> {
-                let lo = ci * CHUNK_EXAMPLES;
-                let hi = (lo + CHUNK_EXAMPLES).min(b);
-                let mut scratch = Scratch::for_spec(spec);
-                let mut p = Partial {
-                    grads: if kind == Kind::Fwd {
-                        Vec::new()
-                    } else {
-                        spec.zero_grads()
-                    },
-                    loss_sum: 0.0,
-                    norms: Vec::with_capacity(hi - lo),
-                    correct: 0,
-                };
-                // multiLoss materializes one example gradient at a time
-                let mut mat = if kind == Kind::MultiLoss {
-                    spec.zero_grads()
+        if self.kind == Kind::Fwd {
+            return Ok(StepOut {
+                grads: Vec::new(),
+                loss,
+                norms: None,
+                correct: Some(correct as f32),
+            });
+        }
+
+        let mut grads = spec.zero_grads();
+        let norms: Option<Vec<f32>> = match self.kind {
+            Kind::Fwd => unreachable!("fwd returned above"),
+            Kind::NonPrivate => {
+                mlp::backward_batch(spec, host, labels, None, &mut s);
+                mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                None
+            }
+            Kind::Naive1 => {
+                // batch-1 nxBP body: unclipped gradient + its norm;
+                // the coordinator clips and accumulates
+                mlp::backward_batch(spec, host, labels, None, &mut s);
+                let sq = mlp::tap_sq_norms(spec, x, &s);
+                mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                Some(sq.iter().map(|&v| v.sqrt() as f32).collect())
+            }
+            Kind::Reweight
+            | Kind::ReweightGram
+            | Kind::ReweightDirect
+            | Kind::ReweightPallas => {
+                // shared prefix of the reweight family: one backward
+                // for the taps, per-example norms, clip factors
+                mlp::backward_batch(spec, host, labels, None, &mut s);
+                let sq = if self.kind == Kind::ReweightGram {
+                    mlp::gram_sq_norms(spec, x, &s)
                 } else {
-                    Vec::new()
+                    mlp::tap_sq_norms(spec, x, &s)
                 };
-                for i in lo..hi {
-                    let x = &feats[i * d..(i + 1) * d];
-                    let y = labels[i];
-                    ensure!(
-                        y >= 0 && (y as usize) < spec.n_classes,
-                        "{config}: label {y} at row {i} outside 0..{}",
-                        spec.n_classes
-                    );
-                    let (loss, hit) = mlp::forward(spec, host, x, y, &mut scratch);
-                    p.loss_sum += loss as f64;
-                    match kind {
-                        Kind::Fwd => p.correct += usize::from(hit),
-                        Kind::NonPrivate => {
-                            mlp::backward(spec, host, x, y, &mut scratch);
-                            mlp::accumulate_weighted(spec, x, &scratch, 1.0, &mut p.grads);
-                        }
-                        Kind::Reweight | Kind::Naive1 => {
-                            let sq = mlp::backward(spec, host, x, y, &mut scratch);
+                let norms: Vec<f32> =
+                    sq.iter().map(|&v| v.sqrt() as f32).collect();
+                let nu = clip_factors(&norms, clip.unwrap());
+                match self.kind {
+                    // the paper's reweight (and its gram-norm twin): a
+                    // *second* backward pass of the nu-weighted loss
+                    // Σ_i nu_i·l_i
+                    Kind::Reweight | Kind::ReweightGram => {
+                        mlp::backward_batch(spec, host, labels, Some(&nu), &mut s);
+                        mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                    }
+                    // one backward: reuse the tapped deltas, nu-scaled
+                    Kind::ReweightDirect => {
+                        mlp::scale_delta_rows(spec, &nu, &mut s);
+                        mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                    }
+                    // fused: nu enters the gradient GEMM directly
+                    Kind::ReweightPallas => {
+                        mlp::grads_from_deltas(spec, x, &s, Some(&nu), &mut grads);
+                    }
+                    _ => unreachable!("outer match covers the family"),
+                }
+                Some(norms)
+            }
+            Kind::MultiLoss => {
+                let c = clip.unwrap();
+                mlp::backward_batch(spec, host, labels, None, &mut s);
+                // materialize per-example gradients in fixed-size
+                // chunks (parallel, merged in order)
+                let n_chunks =
+                    b / CHUNK_EXAMPLES + usize::from(b % CHUNK_EXAMPLES != 0);
+                let shared = &s;
+                // (chunk's summed weighted grads, chunk's norms)
+                let partials = (0..n_chunks)
+                    .into_par_iter()
+                    .map(|ci| {
+                        let lo = ci * CHUNK_EXAMPLES;
+                        let hi = (lo + CHUNK_EXAMPLES).min(b);
+                        let mut acc = spec.zero_grads();
+                        let mut mat = spec.zero_grads();
+                        let mut norms = Vec::with_capacity(hi - lo);
+                        for i in lo..hi {
+                            let sq = mlp::materialize_grad_row(
+                                spec, x, shared, i, &mut mat,
+                            );
                             let norm = sq.sqrt() as f32;
-                            let nu = match clip {
-                                Some(c) if norm > c => c / norm,
-                                _ => 1.0,
-                            };
-                            mlp::accumulate_weighted(spec, x, &scratch, nu, &mut p.grads);
-                            p.norms.push(norm);
-                        }
-                        Kind::MultiLoss => {
-                            mlp::backward(spec, host, x, y, &mut scratch);
-                            let sq = mlp::materialize_grad(spec, x, &scratch, &mut mat);
-                            let norm = sq.sqrt() as f32;
-                            let c = clip.unwrap();
-                            let nu = if norm > c { c / norm } else { 1.0 };
-                            for (acc, g) in p.grads.iter_mut().zip(&mat) {
-                                for (a, &gv) in acc.iter_mut().zip(g) {
-                                    *a += nu * gv;
+                            let nu = crate::runtime::clip_factor(norm, c);
+                            for (a, g) in acc.iter_mut().zip(&mat) {
+                                for (av, &gv) in a.iter_mut().zip(g) {
+                                    *av += nu * gv;
                                 }
                             }
-                            p.norms.push(norm);
+                            norms.push(norm);
+                        }
+                        (acc, norms)
+                    })
+                    .collect::<Vec<_>>();
+                let mut norms = Vec::with_capacity(b);
+                for (acc, chunk_norms) in partials {
+                    norms.extend(chunk_norms);
+                    for (g, a) in grads.iter_mut().zip(&acc) {
+                        for (gv, &av) in g.iter_mut().zip(a) {
+                            *gv += av;
                         }
                     }
                 }
-                Ok(p)
-            })
-            .collect::<Result<Vec<Partial>>>()?;
-
-        // deterministic sequential merge in chunk order
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0usize;
-        let mut norms: Vec<f32> = Vec::with_capacity(b);
-        let mut grads = if kind == Kind::Fwd {
-            Vec::new()
-        } else {
-            spec.zero_grads()
-        };
-        for p in partials {
-            loss_sum += p.loss_sum;
-            correct += p.correct;
-            norms.extend(p.norms);
-            for (acc, pg) in grads.iter_mut().zip(&p.grads) {
-                for (a, &v) in acc.iter_mut().zip(pg) {
-                    *a += v;
-                }
+                Some(norms)
             }
-        }
-        let inv = 1.0 / b as f32;
+        };
+
+        let inv_b = 1.0 / b as f32;
         for g in grads.iter_mut() {
             for v in g.iter_mut() {
-                *v *= inv;
+                *v *= inv_b;
             }
         }
-        Ok(StepOut {
-            grads,
-            loss: (loss_sum / b as f64) as f32,
-            norms: match kind {
-                Kind::Reweight | Kind::MultiLoss | Kind::Naive1 => Some(norms),
-                _ => None,
-            },
-            correct: if kind == Kind::Fwd {
-                Some(correct as f32)
-            } else {
-                None
-            },
-        })
+        Ok(StepOut { grads, loss, norms, correct: None })
     }
 }
 
 fn artifact(method: &str, config: &str) -> (String, ArtifactSpec) {
     let (extra, outputs): (&[&str], &[&str]) = match method {
         "nonprivate" => (&[], &["grads", "loss"]),
-        "reweight" | "multiloss" => (&["clip"], &["grads", "loss", "norms"]),
+        "reweight" | "reweight_gram" | "reweight_direct" | "reweight_pallas"
+        | "multiloss" => (&["clip"], &["grads", "loss", "norms"]),
         "naive1" => (&[], &["grads", "loss", "norm"]),
         "fwd" => (&[], &["loss", "correct"]),
         _ => (&[], &[]),
@@ -340,7 +406,15 @@ fn mlp_config(
         tags.push("fig7".into());
     }
     let mut artifacts = BTreeMap::new();
-    for m in ["nonprivate", "reweight", "multiloss", "fwd"] {
+    for m in [
+        "nonprivate",
+        "reweight",
+        "reweight_gram",
+        "reweight_direct",
+        "reweight_pallas",
+        "multiloss",
+        "fwd",
+    ] {
         let (k, v) = artifact(m, &name);
         artifacts.insert(k, v);
     }
@@ -396,7 +470,18 @@ mod tests {
         let cfg = m.config("mlp2_mnist_b32").unwrap();
         assert_eq!(cfg.batch, 32);
         assert_eq!(cfg.params[0].shape, vec![784, HIDDEN]);
-        assert!(cfg.artifacts.contains_key("reweight"));
+        // the full batched method matrix is native now
+        for method in [
+            "nonprivate",
+            "reweight",
+            "reweight_gram",
+            "reweight_direct",
+            "reweight_pallas",
+            "multiloss",
+            "fwd",
+        ] {
+            assert!(cfg.artifacts.contains_key(method), "{method}");
+        }
         // every batched config has a naive1-capable b1 sibling
         for name in m.configs.keys().filter(|n| !n.ends_with("_b1")) {
             let n1 = m.naive_config(name).unwrap();
@@ -412,8 +497,9 @@ mod tests {
     fn unsupported_method_is_a_manifest_error() {
         let b = NativeBackend::new();
         let cfg = b.manifest().config("mlp2_mnist_b32").unwrap();
-        let err = b.load(cfg, "reweight_pallas").unwrap_err();
-        assert!(format!("{err:#}").contains("reweight_pallas"));
+        // naive1 is only registered on the batch-1 siblings
+        let err = b.load(cfg, "naive1").unwrap_err();
+        assert!(format!("{err:#}").contains("naive1"));
     }
 
     #[test]
@@ -451,11 +537,31 @@ mod tests {
         assert!(format!("{err:#}").contains("staged features"));
     }
 
+    /// The batch-size-laundering hazard: a stage where features *and*
+    /// labels are consistently short must still error — the batch is
+    /// defined by the config (and the accountant's sampling ratio),
+    /// not by whatever happens to be staged.
+    #[test]
+    fn consistently_truncated_stage_is_rejected() {
+        let b = NativeBackend::new();
+        let cfg = b.manifest().config("mlp2_mnist_b32").unwrap().clone();
+        let step = b.load(&cfg, "nonprivate").unwrap();
+        let mut params = ParamStore::new(&cfg, None).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        stage.feat_f32.truncate(784 * 16);
+        stage.labels.truncate(16); // a consistent batch... of 16
+        let err = step.run(&mut params, &stage, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("16 labels") && msg.contains("sampling ratio"),
+            "{msg}"
+        );
+    }
+
     #[test]
     fn results_are_deterministic_across_runs() {
         let b = NativeBackend::new();
         let cfg = b.manifest().config("mlp2_mnist_b32").unwrap().clone();
-        let step = b.load(&cfg, "reweight").unwrap();
         let ds = crate::data::load_dataset("mnist", 64, 3).unwrap();
         let mut stage = BatchStage::for_config(&cfg);
         let batch: Vec<usize> = (0..32).collect();
@@ -467,9 +573,43 @@ mod tests {
         );
         let mut params =
             ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 1))).unwrap();
-        let a = step.run(&mut params, &stage, Some(0.7)).unwrap();
-        let b2 = step.run(&mut params, &stage, Some(0.7)).unwrap();
-        assert_eq!(a.grads, b2.grads); // bitwise: fixed chunking + ordered merge
-        assert_eq!(a.norms, b2.norms);
+        for method in
+            ["reweight", "reweight_gram", "reweight_direct", "reweight_pallas"]
+        {
+            let step = b.load(&cfg, method).unwrap();
+            let a = step.run(&mut params, &stage, Some(0.7)).unwrap();
+            let a2 = step.run(&mut params, &stage, Some(0.7)).unwrap();
+            // bitwise: fixed tiles + ordered merge
+            assert_eq!(a.grads, a2.grads, "{method}");
+            assert_eq!(a.norms, a2.norms, "{method}");
+        }
+    }
+
+    /// Every artifact the builtin manifest declares actually executes.
+    #[test]
+    fn all_declared_artifacts_execute() {
+        let b = NativeBackend::new();
+        for name in ["mlp2_mnist_b16", "mlp2_mnist_b1"] {
+            let cfg = b.manifest().config(name).unwrap().clone();
+            let ds = crate::data::load_dataset("mnist", 64, 5).unwrap();
+            let mut stage = BatchStage::for_config(&cfg);
+            let batch: Vec<usize> = (0..cfg.batch).collect();
+            crate::data::gather_batch_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            );
+            let mut params =
+                ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 2)))
+                    .unwrap();
+            for method in cfg.artifacts.keys() {
+                let step = b.load(&cfg, method).unwrap();
+                let out = step
+                    .run(&mut params, &stage, Some(1.0))
+                    .unwrap_or_else(|e| panic!("{name}/{method}: {e:#}"));
+                assert!(out.loss.is_finite(), "{name}/{method}");
+            }
+        }
     }
 }

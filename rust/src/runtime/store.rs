@@ -19,6 +19,18 @@ pub struct StepOut {
     pub correct: Option<f32>,
 }
 
+/// The clip factor nu = min(1, clip / norm) of one per-example
+/// gradient norm — the single definition every clipping path (batched
+/// kernels, the multiloss materialization, the nxbp loop) must share:
+/// the DP sensitivity bound is exactly `norm * nu <= clip`.
+pub fn clip_factor(norm: f32, clip: f32) -> f32 {
+    if norm > clip {
+        clip / norm
+    } else {
+        1.0
+    }
+}
+
 /// Host-side batch staging buffers, reused across steps to keep
 /// allocation out of the hot loop.
 pub struct BatchStage {
@@ -210,6 +222,13 @@ mod tests {
         // deterministic
         assert_eq!(flat, init_params_glorot(&cfg, 3));
         assert_ne!(flat, init_params_glorot(&cfg, 4));
+    }
+
+    #[test]
+    fn clip_factor_formula() {
+        assert_eq!(clip_factor(2.0, 1.0), 0.5);
+        assert_eq!(clip_factor(0.5, 1.0), 1.0);
+        assert_eq!(clip_factor(1.0, 1.0), 1.0); // boundary: untouched
     }
 
     #[test]

@@ -6,10 +6,14 @@
 //! needed, or the native backend). Compile-path failures need the PJRT
 //! engine and skip with a message when it is unavailable.
 
-use fastclip::coordinator::{train, ClipMethod, TrainOptions};
-use fastclip::runtime::{Backend, Manifest, NativeBackend, ParamStore};
+use fastclip::coordinator::{train, ClipMethod, GradComputer, TrainOptions};
+use fastclip::runtime::{
+    Backend, BatchStage, ConfigSpec, Manifest, NativeBackend, ParamStore,
+    StepFn, StepOut,
+};
 use fastclip::util::json::Json;
 use std::path::Path;
+use std::sync::Arc;
 
 fn tmp_dir(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("fastclip_fail_{name}"));
@@ -128,9 +132,90 @@ fn unknown_config_and_method_errors_name_the_problem() {
     let err = cfg.artifact("no_such_method").unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("no_such_method") && msg.contains("mlp2_mnist_b32"));
-    // backend.load routes through the same manifest error
-    let err = backend.load(cfg, "reweight_gram").unwrap_err();
-    assert!(format!("{err:#}").contains("reweight_gram"));
+    // backend.load routes through the same manifest error (naive1 is
+    // only registered on the batch-1 siblings)
+    let err = backend.load(cfg, "naive1").unwrap_err();
+    assert!(format!("{err:#}").contains("naive1"));
+}
+
+/// A backend whose steps return gradients but *no* per-example norms —
+/// the failure mode of a miscompiled/miswired naive1 artifact.
+struct NoNormBackend {
+    manifest: Manifest,
+}
+
+impl NoNormBackend {
+    fn new() -> NoNormBackend {
+        // same config family as the native backend, broken execution
+        let native = NativeBackend::new();
+        NoNormBackend {
+            manifest: Manifest {
+                dir: std::path::PathBuf::from("mock:no-norms"),
+                configs: native.manifest().configs.clone(),
+            },
+        }
+    }
+}
+
+impl Backend for NoNormBackend {
+    fn name(&self) -> &'static str {
+        "mock-no-norms"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, cfg: &ConfigSpec, _method: &str) -> anyhow::Result<Arc<dyn StepFn>> {
+        Ok(Arc::new(NoNormStep {
+            elems: cfg.params.iter().map(|p| p.elems()).collect(),
+        }))
+    }
+}
+
+struct NoNormStep {
+    elems: Vec<usize>,
+}
+
+impl StepFn for NoNormStep {
+    fn method(&self) -> &str {
+        "naive1"
+    }
+
+    fn run(
+        &self,
+        _params: &ParamStore,
+        _stage: &BatchStage,
+        _clip: Option<f32>,
+    ) -> anyhow::Result<StepOut> {
+        Ok(StepOut {
+            grads: self.elems.iter().map(|&n| vec![0.0; n]).collect(),
+            loss: 0.1,
+            norms: None, // the injected fault
+            correct: None,
+        })
+    }
+}
+
+/// A naive1 step that omits the per-example norm must abort the nxbp
+/// loop: treating the missing norm as 0 would set nu = 1 and add an
+/// *unclipped* gradient under noise calibrated for sensitivity `clip`
+/// — a silent privacy violation, not a recoverable default.
+#[test]
+fn nxbp_missing_norm_is_an_error_not_unclipped() {
+    let backend = NoNormBackend::new();
+    let cfg = backend.manifest().config("mlp2_mnist_b32").unwrap().clone();
+    let mut computer =
+        GradComputer::new(&backend, "mlp2_mnist_b32", ClipMethod::NxBp)
+            .unwrap();
+    let mut params = ParamStore::new(&cfg, None).unwrap();
+    let stage = BatchStage::for_config(&cfg);
+    let err = computer.compute(&mut params, &stage, 1.0).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("norm") && msg.contains("unclipped"),
+        "error must explain the privacy hazard: {msg}"
+    );
 }
 
 #[test]
