@@ -5,8 +5,13 @@
 //!
 //! Also home of the method-matrix runner behind `fastclip
 //! bench-matrix`, which produces the `BENCH_<backend>.json` trajectory
-//! artifact (per-method step times) and the reweight-vs-nxbp speed
-//! check CI gates on.
+//! artifact (per-method step times), the reweight-vs-nxbp speed check
+//! CI gates on, and the `BENCH_history.jsonl` trajectory: one compact
+//! record per run, appended via `append_history`, gated so a
+//! reweight@b128 step-time regression beyond `HISTORY_MAX_RATIO`
+//! versus the previous record fails the run loudly (the entry is
+//! still recorded, so the trajectory tracks reality and an outlier
+//! baseline self-heals).
 
 use crate::bench::BenchOpts;
 use crate::coordinator::{stage_batch, ClipMethod, GradComputer};
@@ -163,6 +168,73 @@ impl MatrixReport {
         Ok(())
     }
 
+    /// Compact record for the `BENCH_history.jsonl` trajectory: the
+    /// reweight step means on every batch-128 config in this run
+    /// (the paper's headline operating point), plus provenance.
+    pub fn history_entry(&self) -> Json {
+        let mut means = Json::obj();
+        for e in &self.entries {
+            if e.batch == 128 && e.method == ClipMethod::Reweight {
+                means.set(&e.config, e.mean_ms.into());
+            }
+        }
+        let mut o = Json::obj();
+        o.set("suite", "bench_matrix".into());
+        o.set("backend", self.backend.as_str().into());
+        o.set("smoke", self.smoke.into());
+        if let Ok(sha) = std::env::var("GITHUB_SHA") {
+            o.set("commit", sha.into());
+        }
+        o.set("reweight_b128_ms", means);
+        o
+    }
+
+    /// The trajectory gate: no batch-128 config's reweight step may be
+    /// more than `max_ratio`x its **median** over the recent history
+    /// entries in `prevs`. The median (rather than the single last
+    /// entry) makes the gate robust in both directions: one
+    /// anomalously fast run cannot become a baseline that fails every
+    /// later run, and one recorded regression cannot be laundered into
+    /// the baseline by simply re-running the failed job. Configs
+    /// absent from the history are skipped — the matrix can grow —
+    /// and malformed records contribute nothing rather than blocking
+    /// every future run.
+    pub fn check_history_regression(
+        &self,
+        prevs: &[Json],
+        max_ratio: f64,
+    ) -> Result<()> {
+        for e in &self.entries {
+            if e.batch != 128 || e.method != ClipMethod::Reweight {
+                continue;
+            }
+            let mut samples: Vec<f64> = prevs
+                .iter()
+                .filter_map(|p| {
+                    p.get("reweight_b128_ms").get(&e.config).as_f64()
+                })
+                .filter(|&v| v > 0.0)
+                .collect();
+            if samples.is_empty() {
+                continue;
+            }
+            samples.sort_by(|a, b| a.total_cmp(b));
+            let baseline = samples[samples.len() / 2];
+            anyhow::ensure!(
+                e.mean_ms <= baseline * max_ratio,
+                "{}: reweight@b128 step time {:.3} ms is more than {:.0}% \
+                 over the recent BENCH_history median {:.3} ms \
+                 ({} samples)",
+                e.config,
+                e.mean_ms,
+                (max_ratio - 1.0) * 100.0,
+                baseline,
+                samples.len()
+            );
+        }
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         let mut entries = Vec::with_capacity(self.entries.len());
         for e in &self.entries {
@@ -195,6 +267,48 @@ impl MatrixReport {
         root.set("reweight_speedup_vs_nxbp", speedups);
         root
     }
+}
+
+/// Step-time regression budget for the history gate: fail when a
+/// reweight@b128 step exceeds 1.25x the recent-history median (>25%).
+pub const HISTORY_MAX_RATIO: f64 = 1.25;
+
+/// How many trailing history entries feed the gate's median baseline.
+pub const HISTORY_WINDOW: usize = 5;
+
+/// Append `report`'s compact record to the `BENCH_history.jsonl`
+/// trajectory at `path`, gating against the median of the trailing
+/// `HISTORY_WINDOW` entries via `check_history_regression`. The new
+/// entry is appended **even when the gate trips** — the history
+/// records reality; robustness against outlier baselines and
+/// laundered regressions comes from the median, not from editing the
+/// record. Unparsable lines (e.g. a half-written record from a killed
+/// job) are skipped instead of bricking the gate.
+pub fn append_history(
+    report: &MatrixReport,
+    path: &std::path::Path,
+    max_ratio: f64,
+) -> Result<()> {
+    let mut text = if path.exists() {
+        crate::util::read_file(path)?
+    } else {
+        String::new()
+    };
+    let prevs: Vec<Json> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .rev()
+        .take(HISTORY_WINDOW)
+        .filter_map(|l| Json::parse(l).ok())
+        .collect();
+    let check = report.check_history_regression(&prevs, max_ratio);
+    if !text.is_empty() && !text.ends_with('\n') {
+        text.push('\n');
+    }
+    text.push_str(&report.history_entry().to_string());
+    text.push('\n');
+    crate::util::write_file(path, &text)?;
+    check
 }
 
 /// Time every (config, method) cell: warmup, then iterate under
@@ -295,6 +409,106 @@ mod tests {
             entries: Vec::new(),
         };
         assert!(empty.check_reweight_beats_nxbp().is_err());
+    }
+
+    fn report_with(config: &str, reweight_ms: f64) -> MatrixReport {
+        MatrixReport {
+            backend: "native".into(),
+            smoke: true,
+            entries: vec![MatrixEntry {
+                config: config.into(),
+                batch: 128,
+                method: ClipMethod::Reweight,
+                mean_ms: reweight_ms,
+                p50_ms: reweight_ms,
+                p95_ms: reweight_ms,
+                iters: 3,
+            }],
+        }
+    }
+
+    #[test]
+    fn history_gate_trips_only_past_the_budget() {
+        let prevs = vec![report_with("cnn2_mnist_b128", 10.0).history_entry()];
+        // +20% passes, +30% fails
+        assert!(report_with("cnn2_mnist_b128", 12.0)
+            .check_history_regression(&prevs, HISTORY_MAX_RATIO)
+            .is_ok());
+        let err = report_with("cnn2_mnist_b128", 13.0)
+            .check_history_regression(&prevs, HISTORY_MAX_RATIO)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("median"), "{err:#}");
+        // a config the history never measured is not gated
+        assert!(report_with("mlp4_mnist_b128", 999.0)
+            .check_history_regression(&prevs, HISTORY_MAX_RATIO)
+            .is_ok());
+        // malformed history entries contribute nothing (never block)
+        assert!(report_with("cnn2_mnist_b128", 999.0)
+            .check_history_regression(
+                &[Json::parse("{}").unwrap()],
+                HISTORY_MAX_RATIO
+            )
+            .is_ok());
+        // the median absorbs a single outlier: one anomalously fast
+        // entry among normal ones does not trip the gate...
+        let window: Vec<Json> = [10.0, 9.8, 4.0, 10.2, 9.9]
+            .iter()
+            .map(|&ms| report_with("cnn2_mnist_b128", ms).history_entry())
+            .collect();
+        assert!(report_with("cnn2_mnist_b128", 11.0)
+            .check_history_regression(&window, HISTORY_MAX_RATIO)
+            .is_ok());
+        // ...and one recorded regression cannot launder itself into
+        // the baseline: re-checking against a window that contains it
+        // still fails
+        let window: Vec<Json> = [20.0, 10.0, 9.8, 10.2, 9.9]
+            .iter()
+            .map(|&ms| report_with("cnn2_mnist_b128", ms).history_entry())
+            .collect();
+        assert!(report_with("cnn2_mnist_b128", 20.0)
+            .check_history_regression(&window, HISTORY_MAX_RATIO)
+            .is_err());
+    }
+
+    #[test]
+    fn history_file_appends_and_flags_regressions() {
+        let path = std::env::temp_dir().join("fastclip_bench_history_test.jsonl");
+        std::fs::remove_file(&path).ok();
+        append_history(&report_with("cnn2_mnist_b128", 10.0), &path, 1.25)
+            .unwrap();
+        append_history(&report_with("cnn2_mnist_b128", 11.0), &path, 1.25)
+            .unwrap();
+        // regression vs the window median (20.0 > 11.0 * 1.25): the
+        // gate errors, but the entry is still recorded so the
+        // trajectory reflects reality
+        assert!(append_history(&report_with("cnn2_mnist_b128", 20.0), &path, 1.25)
+            .is_err());
+        let after = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(after.lines().count(), 3);
+        let last = Json::parse(after.lines().last().unwrap()).unwrap();
+        assert_eq!(
+            last.get("reweight_b128_ms").get("cnn2_mnist_b128").as_f64(),
+            Some(20.0)
+        );
+        // a re-run at the regressed speed still fails: the median of
+        // {10, 11, 20} is 11, so the recorded regression has not
+        // become its own baseline
+        assert!(append_history(&report_with("cnn2_mnist_b128", 19.0), &path, 1.25)
+            .is_err());
+        // a recovered run passes (upper median of {10,11,19,20} is
+        // 19, and 12 <= 19 * 1.25)
+        append_history(&report_with("cnn2_mnist_b128", 12.0), &path, 1.25)
+            .unwrap();
+        // a corrupt trailing line (half-written record) is skipped by
+        // the parser instead of permanently failing the gate
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"reweight_b128_ms\": {\"cnn2_mni");
+        std::fs::write(&path, &text).unwrap();
+        // median of the parseable window {11,20,19,12} is 19;
+        // 13 <= 19*1.25 passes — the corrupt line cost nothing
+        append_history(&report_with("cnn2_mnist_b128", 13.0), &path, 1.25)
+            .unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod trainer;
 
 pub use methods::{ClipMethod, GradComputer};
 pub use metrics::{Metrics, Phase, PhaseTimer};
-pub use trainer::{stage_batch, train, TrainOptions, TrainReport};
+pub use trainer::{evaluate, stage_batch, train, TrainOptions, TrainReport};

@@ -205,8 +205,7 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
 
         if let (Some(fwd), Some(eds)) = (&fwd_exe, &eval_ds) {
             if (step + 1) % opts.eval_every == 0 {
-                let (l, a) =
-                    evaluate(fwd.as_ref(), &mut params, eds, &cfg.input_dtype, tau)?;
+                let (l, a) = evaluate(fwd.as_ref(), &mut params, eds, &cfg)?;
                 metrics.record_eval(step + 1, l, a);
                 crate::log_info!(
                     "eval  step {:>5} loss={:.4} acc={:.3}",
@@ -275,33 +274,34 @@ pub fn stage_batch(ds: &Dataset, batch: &[usize], stage: &mut BatchStage) {
 }
 
 /// Run the fwd step over the eval set; returns (mean loss, accuracy).
-fn evaluate(
+///
+/// The staging buffers come from `BatchStage::for_config` — the same
+/// constructor every other execution path uses — rather than a
+/// hand-built duplicate that could drift from the config's shapes. An
+/// eval set smaller than one batch is a hard error: it would yield
+/// zero batches and a silent NaN loss/accuracy.
+pub fn evaluate(
     fwd: &dyn StepFn,
     params: &mut ParamStore,
     eval_ds: &Dataset,
-    input_dtype: &str,
-    tau: usize,
+    cfg: &crate::runtime::ConfigSpec,
 ) -> Result<(f32, f32)> {
+    let tau = cfg.batch;
+    anyhow::ensure!(
+        eval_ds.n >= tau,
+        "eval set holds {} examples but config {} evaluates in full \
+         batches of {tau}; supply at least one batch",
+        eval_ds.n,
+        cfg.name
+    );
+    anyhow::ensure!(
+        eval_ds.example_len() * cfg.batch == cfg.input_elems(),
+        "eval dataset example shape {:?} does not match config {}",
+        eval_ds.shape,
+        cfg.name
+    );
     let n_batches = eval_ds.n / tau;
-    let mut stage = BatchStage {
-        feat_f32: if input_dtype == "f32" {
-            vec![0.0; tau * eval_ds.example_len()]
-        } else {
-            Vec::new()
-        },
-        feat_i32: if input_dtype == "f32" {
-            Vec::new()
-        } else {
-            vec![0; tau * eval_ds.example_len()]
-        },
-        labels: vec![0; tau],
-        input_dims: {
-            let mut d = vec![tau as i64];
-            d.extend(eval_ds.shape.iter().map(|&x| x as i64));
-            d
-        },
-        is_f32: input_dtype == "f32",
-    };
+    let mut stage = BatchStage::for_config(cfg);
     let (mut loss_sum, mut correct_sum) = (0.0f32, 0.0f32);
     for b in 0..n_batches {
         let batch: Vec<usize> = (b * tau..(b + 1) * tau).collect();

@@ -6,8 +6,9 @@
 //!  * `PoissonSampler` — per-record inclusion with probability q, the
 //!    regime the RDP subsampled-Gaussian analysis assumes. AOT
 //!    artifacts have a fixed batch dimension, so Poisson draws are
-//!    resized to tau (pad by resampling / truncate uniformly) — the
-//!    standard fixed-batch compromise, documented in DESIGN.md.
+//!    resized to tau (pad from the complement / truncate uniformly) —
+//!    the standard fixed-batch compromise, documented in DESIGN.md
+//!    §"Poisson sampling vs the fixed batch ABI".
 
 use crate::rng::{shuffle, streams, ChaCha20};
 
@@ -87,14 +88,34 @@ impl PoissonSampler {
     }
 
     /// One Poisson draw, resized to tau.
+    ///
+    /// Short draws are padded **only from the complement** of the draw
+    /// (a partial Fisher–Yates over the not-yet-picked indices).
+    /// Padding by uniform resampling over all of `0..n` — the obvious
+    /// fix-up — can re-pick a record already in the draw; a duplicated
+    /// record contributes up to 2·clip to the step's gradient sum while
+    /// the Gaussian noise is calibrated for sensitivity clip, silently
+    /// voiding the DP guarantee (DESIGN.md §"Poisson sampling vs the
+    /// fixed batch ABI"). Oversized draws are truncated uniformly,
+    /// which cannot introduce duplicates.
     pub fn next_batch(&mut self) -> Batch {
         let mut picked: Vec<usize> =
             (0..self.n).filter(|_| self.rng.next_f64() < self.q).collect();
-        // resize to the fixed executable batch size
-        while picked.len() < self.tau {
-            picked.push(self.rng.next_bounded(self.n as u64) as usize);
-        }
-        if picked.len() > self.tau {
+        if picked.len() < self.tau {
+            let mut in_draw = vec![false; self.n];
+            for &i in &picked {
+                in_draw[i] = true;
+            }
+            let mut rest: Vec<usize> =
+                (0..self.n).filter(|&i| !in_draw[i]).collect();
+            // tau <= n, so the complement always has enough indices
+            let need = self.tau - picked.len();
+            for j in 0..need {
+                let k = j + self.rng.next_bounded((rest.len() - j) as u64) as usize;
+                rest.swap(j, k);
+                picked.push(rest[j]);
+            }
+        } else if picked.len() > self.tau {
             shuffle(&mut self.rng, &mut picked);
             picked.truncate(self.tau);
         }
@@ -154,6 +175,87 @@ mod tests {
                 assert_eq!(batch.len(), 7);
                 assert!(batch.iter().all(|&i| i < 50));
             }
+        }
+    }
+
+    /// Property: a Poisson draw never contains a duplicate index — a
+    /// duplicated record would contribute up to 2·clip per step,
+    /// past the sensitivity bound the noise is calibrated for. Random
+    /// (n, tau, seed) combos, biased toward high q so the padding path
+    /// is exercised constantly.
+    #[test]
+    fn prop_poisson_draw_never_duplicates() {
+        use crate::testkit::prop;
+        prop::check(40, |g| {
+            let n = g.usize_in(2..200);
+            // high tau/n => raw draws straddle tau, exercising both the
+            // pad and the truncate path
+            let tau = g.usize_incl(n.saturating_sub(n / 4).max(1)..=n);
+            let mut p = PoissonSampler::new(n, tau, g.u64());
+            for _ in 0..25 {
+                let b = p.next_batch();
+                if b.len() != tau {
+                    return Err(format!("draw len {} != tau {tau}", b.len()));
+                }
+                let mut seen = vec![false; n];
+                for &i in &b {
+                    if i >= n {
+                        return Err(format!("index {i} outside 0..{n}"));
+                    }
+                    if seen[i] {
+                        return Err(format!(
+                            "duplicate index {i} in Poisson draw (n={n}, tau={tau})"
+                        ));
+                    }
+                    seen[i] = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Regression companion for the padding bug: replay the *old*
+    /// padding strategy (uniform resampling over all of 0..n) on a
+    /// scenario where short draws are common, and show it (a) pads and
+    /// (b) duplicates an in-draw record. This pins down that
+    /// `prop_poisson_draw_never_duplicates` is not vacuous — the same
+    /// scenario run through the pre-fix sampler fails it.
+    #[test]
+    fn old_uniform_padding_duplicated_in_draw_records() {
+        let (n, tau) = (20usize, 18usize);
+        let q = tau as f64 / n as f64;
+        let mut rng = ChaCha20::seeded(7, streams::SAMPLER);
+        let (mut padded_draws, mut duplicated_draws) = (0usize, 0usize);
+        for _ in 0..300 {
+            let mut picked: Vec<usize> =
+                (0..n).filter(|_| rng.next_f64() < q).collect();
+            if picked.len() < tau {
+                padded_draws += 1;
+            }
+            while picked.len() < tau {
+                picked.push(rng.next_bounded(n as u64) as usize); // the bug
+            }
+            if picked.len() > tau {
+                shuffle(&mut rng, &mut picked);
+                picked.truncate(tau);
+            }
+            let distinct: HashSet<_> = picked.iter().copied().collect();
+            if distinct.len() < picked.len() {
+                duplicated_draws += 1;
+            }
+        }
+        assert!(padded_draws > 0, "scenario never exercised padding");
+        assert!(
+            duplicated_draws > 0,
+            "old uniform padding never duplicated — the regression \
+             scenario lost its teeth"
+        );
+        // and the fixed sampler on the very same scenario never does
+        let mut p = PoissonSampler::new(n, tau, 7);
+        for _ in 0..300 {
+            let b = p.next_batch();
+            let distinct: HashSet<_> = b.iter().copied().collect();
+            assert_eq!(distinct.len(), tau, "fixed sampler duplicated: {b:?}");
         }
     }
 

@@ -62,10 +62,13 @@ USAGE: fastclip <subcommand> [flags]
               [--poisson] [--checkpoint DIR] [--json]
   bench-step  --config NAME --method M [--iters N]
   bench-matrix [--configs NAME,NAME,...] [--methods M,M,...] [--smoke]
-              [--out FILE] [--check]
+              [--out FILE] [--check] [--history FILE]
               times every (config, method) step and writes the
               BENCH_<backend>.json trajectory artifact; --check fails
-              unless reweight beats nxbp on every batch-128 config
+              unless reweight beats nxbp on every batch-128 config;
+              --history appends a compact record to a jsonl trajectory
+              and fails on a >25% reweight@b128 step-time regression
+              versus the median of that file's recent entries
   accountant  --q F --sigma F --steps N [--delta F]
               | --calibrate --q F --steps N --eps F [--delta F]
   memory      --config NAME [--budget-gib F]
@@ -196,7 +199,7 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
     use fastclip::bench::BenchOpts;
     let backend = backend(args)?;
     let configs: Vec<String> = args
-        .str_or("configs", "mlp2_mnist_b128,mlp4_mnist_b128")
+        .str_or("configs", "mlp2_mnist_b128,mlp4_mnist_b128,cnn2_mnist_b128")
         .split(',')
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
@@ -248,6 +251,14 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
     if args.bool("check") {
         report.check_reweight_beats_nxbp()?;
         println!("check passed: reweight beats nxbp at batch 128");
+    }
+    if let Some(hist) = args.str_opt("history") {
+        fastclip::bench::driver::append_history(
+            &report,
+            std::path::Path::new(hist),
+            fastclip::bench::driver::HISTORY_MAX_RATIO,
+        )?;
+        println!("appended bench-history entry to {hist}");
     }
     Ok(())
 }

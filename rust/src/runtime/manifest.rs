@@ -28,6 +28,23 @@ pub struct ArtifactSpec {
     pub outputs: Vec<String>,
 }
 
+/// Convolution hyperparameters shared by every conv layer of a `cnn`
+/// config. The manifest's param shapes carry (cout, cin, kh, kw) but
+/// not stride/padding, so those ride here; absent, the native conv
+/// family's defaults (3x3, stride 2, pad 1) apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvMeta {
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Default for ConvMeta {
+    fn default() -> Self {
+        ConvMeta { kernel: 3, stride: 2, pad: 1 }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ConfigSpec {
     pub name: String,
@@ -40,6 +57,8 @@ pub struct ConfigSpec {
     pub input_dtype: String, // "f32" | "i32"
     /// pre-activation (tap) elements per example — memory model input
     pub act_elems_per_example: usize,
+    /// conv hyperparameters (model == "cnn" only)
+    pub conv: Option<ConvMeta>,
     pub params: Vec<ParamSpec>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
@@ -135,6 +154,7 @@ impl Manifest {
                     .get("act_elems_per_example")
                     .as_usize()
                     .unwrap_or(0),
+                conv: conv_meta(c.get("conv")),
                 params,
                 artifacts,
             };
@@ -170,6 +190,18 @@ impl Manifest {
     pub fn artifact_path(&self, spec: &ArtifactSpec) -> PathBuf {
         self.dir.join(&spec.file)
     }
+}
+
+/// Parse an optional `"conv": {"kernel": 3, "stride": 2, "pad": 1}`
+/// block; missing fields take the `ConvMeta` defaults.
+fn conv_meta(j: &Json) -> Option<ConvMeta> {
+    j.as_obj()?;
+    let d = ConvMeta::default();
+    Some(ConvMeta {
+        kernel: j.get("kernel").as_usize().unwrap_or(d.kernel),
+        stride: j.get("stride").as_usize().unwrap_or(d.stride),
+        pad: j.get("pad").as_usize().unwrap_or(d.pad),
+    })
 }
 
 fn usizes(j: &Json) -> Result<Vec<usize>> {
@@ -239,6 +271,27 @@ mod tests {
         assert!(c.artifact("nope").is_err());
         assert!(c.has_tag("fig5"));
         assert_eq!(m.by_tag("fig5").len(), 1);
+    }
+
+    #[test]
+    fn conv_meta_parses_with_defaults() {
+        let j = Json::parse(
+            r#"{"configs": {"cnn2_mnist_b16": {
+                "model": "cnn", "dataset": "mnist", "batch": 16,
+                "n_classes": 10,
+                "input": {"shape": [16,1,28,28], "dtype": "f32"},
+                "conv": {"kernel": 3, "stride": 2},
+                "params": [], "artifacts": {}
+            }}}"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        let c = m.config("cnn2_mnist_b16").unwrap();
+        // pad missing => default 1
+        assert_eq!(c.conv, Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }));
+        // mlp configs carry no conv block
+        let m2 = Manifest::from_json(Path::new("/tmp"), &sample()).unwrap();
+        assert_eq!(m2.config("mlp2_mnist_b32").unwrap().conv, None);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod store;
 pub use backend::{Backend, StepFn};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, StepExe};
-pub use manifest::{ArtifactSpec, ConfigSpec, Manifest, ParamSpec};
+pub use manifest::{ArtifactSpec, ConfigSpec, ConvMeta, Manifest, ParamSpec};
 pub use native::NativeBackend;
 pub use store::{clip_factor, init_params_glorot, BatchStage, ParamStore, StepOut};
 

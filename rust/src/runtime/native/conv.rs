@@ -1,0 +1,1148 @@
+//! Conv tap producer for the native backend: conv layers lowered to
+//! im2col patch matrices over the `gemm` kernels, so the whole
+//! batched clip-method matrix (`NativeStep` via `taps::TapModel`)
+//! runs on CNNs with no new per-method code.
+//!
+//! Layout. The network input arrives CHW per example (the manifest's
+//! `[b, c, h, w]` input shape) and is rearranged once per step to HWC
+//! (position-major, channel-minor), because that is the layout every
+//! conv GEMM naturally produces: layer l's pre-activation is a
+//! (B·P_l) x cout_l matrix whose row (i, p) is output position p of
+//! example i — flat, that *is* the HWC activation map of example i.
+//! Flattening into the fc head is therefore free (the fc input is the
+//! same buffer read as B x (P·c) rows), and the fc head reuses the
+//! MLP GEMM orientations unchanged.
+//!
+//! Per layer l (conv): patches_l = im2col(act_{l-1}) of shape
+//! (B·P) x K with K = cin·kh·kw and patch columns in (c, ky, kx)
+//! order — element-for-element the layout of one out-channel slice of
+//! the `[cout, cin, kh, kw]` weight tensor. Then:
+//!
+//!   forward:   Z = patches · Wᵀ + bias rows      (`sgemm_nt`)
+//!   backward:  dPatches = Δ · W                  (`sgemm`), then
+//!              col2im scatters dPatches onto act_{l-1} (overlapping
+//!              receptive fields sum — the weight sharing)
+//!   grads:     gW = Δᵀ · patches per example     (`sgemm_tn_f64acc`),
+//!              gb = column sums of Δ
+//!
+//! # Per-example norms under weight sharing
+//!
+//! The MLP tap trick ||g_i||² = Σ_l (||a_{l-1,i}||²+1)·||δ_{l,i}||²
+//! is exact only because each example owns a *single* tap row per
+//! layer. A conv layer's per-example weight gradient is a sum of P
+//! overlapping rank-1 contributions, g_i = A_iᵀ·Δ_i (A_i, Δ_i the
+//! example's P-row patch/delta blocks), so the row-norm product is
+//! only the Cauchy–Schwarz **upper bound**
+//!
+//!   ||A_iᵀ·Δ_i||²_F ≤ ||A_i||²_F · ||Δ_i||²_F .
+//!
+//! Clipping with an overestimated norm would still be DP-safe (nu
+//! only shrinks) but would *not* match the materialized-gradient
+//! methods, so every clip method here uses the exact norm. Two exact
+//! routes are provided, mirroring the paper's Sec 5.2 trade-off:
+//!
+//!   - `sq_norms` materializes the small K x cout product A_iᵀ·Δ_i
+//!     per example (cheap when K·cout is small — the direct route);
+//!   - `gram_sq_norms` forms the P x P position Grams A_i·A_iᵀ and
+//!     Δ_i·Δ_iᵀ and sums their Hadamard product (cheap when P² is
+//!     small; this is where the Gram structure's off-diagonal terms —
+//!     degenerate on MLPs — become load-bearing).
+//!
+//! `tap_bound_sq_norms` keeps the row-norm-product bound for
+//! diagnostics; the ordering tap ≥ gram (equality on MLPs) is pinned
+//! by tests here and in the integration suite. See DESIGN.md
+//! §"Per-example norms under weight sharing".
+
+use super::gemm;
+use crate::runtime::manifest::{ConfigSpec, ConvMeta};
+use anyhow::{bail, ensure, Result};
+use rayon::prelude::*;
+
+/// One layer of a cnn config: conv layers first, then the flatten
+/// boundary, then fc layers (the last fc maps to the classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    Conv {
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        h_in: usize,
+        w_in: usize,
+        h_out: usize,
+        w_out: usize,
+    },
+    Fc {
+        din: usize,
+        dout: usize,
+    },
+}
+
+impl Layer {
+    /// Rows of this layer's activation/delta matrix at batch `b`.
+    fn rows(&self, b: usize) -> usize {
+        match *self {
+            Layer::Conv { h_out, w_out, .. } => b * h_out * w_out,
+            Layer::Fc { .. } => b,
+        }
+    }
+
+    /// Feature columns per row (out-channels / fc out-dim).
+    fn cols(&self) -> usize {
+        match *self {
+            Layer::Conv { cout, .. } => cout,
+            Layer::Fc { dout, .. } => dout,
+        }
+    }
+
+    /// Reduction dim of the layer GEMMs (patch K / fc in-dim).
+    fn k_dim(&self) -> usize {
+        match *self {
+            Layer::Conv { cin, k, .. } => cin * k * k,
+            Layer::Fc { din, .. } => din,
+        }
+    }
+
+    /// Activation/delta elements of one example in this layer.
+    fn elems_per_example(&self) -> usize {
+        match *self {
+            Layer::Conv { cout, h_out, w_out, .. } => h_out * w_out * cout,
+            Layer::Fc { dout, .. } => dout,
+        }
+    }
+}
+
+/// Conv-family dimensions parsed and validated from a manifest config.
+#[derive(Debug, Clone)]
+pub struct ConvSpec {
+    /// flat input elements per example (cin·h·w)
+    pub d_in: usize,
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub layers: Vec<Layer>,
+    pub n_classes: usize,
+    pub batch: usize,
+}
+
+impl ConvSpec {
+    pub fn from_config(cfg: &ConfigSpec) -> Result<ConvSpec> {
+        ensure!(
+            cfg.model == "cnn",
+            "conv tap producer expects the `cnn` config family; config {} \
+             has model {:?}",
+            cfg.name,
+            cfg.model
+        );
+        ensure!(
+            cfg.input_dtype == "f32",
+            "native cnn expects f32 input, config {} has {:?}",
+            cfg.name,
+            cfg.input_dtype
+        );
+        ensure!(
+            cfg.input_shape.len() == 4 && cfg.input_shape[0] == cfg.batch,
+            "config {}: cnn input shape {:?} must be [batch, c, h, w] \
+             leading with batch {}",
+            cfg.name,
+            cfg.input_shape,
+            cfg.batch
+        );
+        let (in_c, in_h, in_w) =
+            (cfg.input_shape[1], cfg.input_shape[2], cfg.input_shape[3]);
+        ensure!(
+            !cfg.params.is_empty() && cfg.params.len() % 2 == 0,
+            "config {}: cnn params must be (weight, bias) pairs, got {} tensors",
+            cfg.name,
+            cfg.params.len()
+        );
+        let meta: ConvMeta = cfg.conv.unwrap_or_default();
+        ensure!(
+            meta.kernel > 0 && meta.stride > 0,
+            "config {}: conv meta {:?} has a zero kernel or stride",
+            cfg.name,
+            meta
+        );
+        let mut layers = Vec::with_capacity(cfg.params.len() / 2);
+        let (mut cur_c, mut cur_h, mut cur_w) = (in_c, in_h, in_w);
+        // Some(dout) once an fc layer has flattened the map
+        let mut flat: Option<usize> = None;
+        for (l, pair) in cfg.params.chunks(2).enumerate() {
+            let (w, b) = (&pair[0], &pair[1]);
+            ensure!(
+                b.shape.len() == 1,
+                "config {}: layer {l} expects a 1-d bias, got {:?}",
+                cfg.name,
+                b.shape
+            );
+            match w.shape.len() {
+                4 => {
+                    ensure!(
+                        flat.is_none(),
+                        "config {}: conv layer {l} after the flatten boundary",
+                        cfg.name
+                    );
+                    let (cout, cin, kh, kw) =
+                        (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                    ensure!(
+                        cin == cur_c,
+                        "config {}: conv layer {l} in-channels {cin} != \
+                         current channels {cur_c}",
+                        cfg.name
+                    );
+                    ensure!(
+                        kh == meta.kernel && kw == meta.kernel,
+                        "config {}: conv layer {l} kernel {kh}x{kw} != conv \
+                         meta kernel {}",
+                        cfg.name,
+                        meta.kernel
+                    );
+                    ensure!(
+                        b.shape[0] == cout,
+                        "config {}: conv layer {l} bias dim {} != out-channels \
+                         {cout}",
+                        cfg.name,
+                        b.shape[0]
+                    );
+                    ensure!(
+                        cur_h + 2 * meta.pad >= kh && cur_w + 2 * meta.pad >= kw,
+                        "config {}: conv layer {l} kernel {kh}x{kw} larger than \
+                         the padded {cur_h}x{cur_w} map",
+                        cfg.name
+                    );
+                    let h_out = gemm::conv_out(cur_h, kh, meta.stride, meta.pad);
+                    let w_out = gemm::conv_out(cur_w, kw, meta.stride, meta.pad);
+                    layers.push(Layer::Conv {
+                        cin,
+                        cout,
+                        k: meta.kernel,
+                        stride: meta.stride,
+                        pad: meta.pad,
+                        h_in: cur_h,
+                        w_in: cur_w,
+                        h_out,
+                        w_out,
+                    });
+                    cur_c = cout;
+                    cur_h = h_out;
+                    cur_w = w_out;
+                }
+                2 => {
+                    let (din, dout) = (w.shape[0], w.shape[1]);
+                    let expect = flat.unwrap_or(cur_c * cur_h * cur_w);
+                    ensure!(
+                        din == expect,
+                        "config {}: fc layer {l} in-dim {din} != flattened \
+                         feature dim {expect}",
+                        cfg.name
+                    );
+                    ensure!(
+                        b.shape[0] == dout,
+                        "config {}: fc layer {l} bias dim {} != out-dim {dout}",
+                        cfg.name,
+                        b.shape[0]
+                    );
+                    layers.push(Layer::Fc { din, dout });
+                    flat = Some(dout);
+                }
+                other => bail!(
+                    "config {}: layer {l} weight has {other} dims; cnn layers \
+                     are 4-d conv or 2-d fc",
+                    cfg.name
+                ),
+            }
+        }
+        ensure!(
+            layers.iter().any(|l| matches!(l, Layer::Conv { .. })),
+            "config {}: cnn family needs at least one conv layer",
+            cfg.name
+        );
+        match layers.last() {
+            Some(Layer::Fc { dout, .. }) if *dout == cfg.n_classes => {}
+            other => bail!(
+                "config {}: the final layer must be an fc head onto \
+                 n_classes {} (got {other:?})",
+                cfg.name,
+                cfg.n_classes
+            ),
+        }
+        Ok(ConvSpec {
+            d_in: in_c * in_h * in_w,
+            in_c,
+            in_h,
+            in_w,
+            layers,
+            n_classes: cfg.n_classes,
+            batch: cfg.batch,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Flat gradient buffers in manifest order [W0, b0, W1, b1, ...].
+    pub fn zero_grads(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.layers.len() * 2);
+        for l in &self.layers {
+            out.push(vec![0.0f32; l.cols() * l.k_dim()]);
+            out.push(vec![0.0f32; l.cols()]);
+        }
+        out
+    }
+
+    /// Check a param store's tensor count and per-tensor lengths.
+    pub fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+        ensure!(
+            host.len() == 2 * self.n_layers(),
+            "{config}: param store has {} tensors, spec needs {}",
+            host.len(),
+            2 * self.n_layers()
+        );
+        for (l, layer) in self.layers.iter().enumerate() {
+            ensure!(
+                host[2 * l].len() == layer.cols() * layer.k_dim()
+                    && host[2 * l + 1].len() == layer.cols(),
+                "{config}: layer {l} param shapes do not match the config"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Whole-batch forward/backward scratch for the conv family. All
+/// buffers are fully rewritten by every forward/backward, so one
+/// scratch can be reused across steps.
+pub struct ConvScratch {
+    pub b: usize,
+    /// network input rearranged CHW -> HWC, b x (h·w·cin)
+    x_hwc: Vec<f32>,
+    /// conv layers: the im2col patch matrix, rows x K (empty for fc)
+    patches: Vec<Vec<f32>>,
+    /// conv layers: dLoss/dPatches scratch, rows x K (empty for fc)
+    dpatches: Vec<Vec<f32>>,
+    /// pre-activations z_l, rows x cols
+    zs: Vec<Vec<f32>>,
+    /// post-activations relu(z_l); the last entry is unused
+    acts: Vec<Vec<f32>>,
+    /// dLoss/dz_l
+    deltas: Vec<Vec<f32>>,
+    /// softmax rows, b x n_classes
+    probs: Vec<f32>,
+}
+
+impl ConvScratch {
+    pub fn for_spec(spec: &ConvSpec, b: usize) -> ConvScratch {
+        let mut patches = Vec::with_capacity(spec.layers.len());
+        let mut dpatches = Vec::with_capacity(spec.layers.len());
+        let mut zs = Vec::with_capacity(spec.layers.len());
+        let mut acts = Vec::with_capacity(spec.layers.len());
+        let mut deltas = Vec::with_capacity(spec.layers.len());
+        for (li, l) in spec.layers.iter().enumerate() {
+            let rows = l.rows(b);
+            let cols = l.cols();
+            match l {
+                Layer::Conv { .. } => {
+                    patches.push(vec![0.0; rows * l.k_dim()]);
+                    // layer 0 never receives a propagated delta
+                    // (backward stops at l == 1), so its dPatches
+                    // buffer would be dead weight
+                    if li > 0 {
+                        dpatches.push(vec![0.0; rows * l.k_dim()]);
+                    } else {
+                        dpatches.push(Vec::new());
+                    }
+                }
+                Layer::Fc { .. } => {
+                    patches.push(Vec::new());
+                    dpatches.push(Vec::new());
+                }
+            }
+            zs.push(vec![0.0; rows * cols]);
+            acts.push(vec![0.0; rows * cols]);
+            deltas.push(vec![0.0; rows * cols]);
+        }
+        ConvScratch {
+            b,
+            x_hwc: vec![0.0; b * spec.d_in],
+            patches,
+            dpatches,
+            zs,
+            acts,
+            deltas,
+            probs: vec![0.0; b * spec.n_classes],
+        }
+    }
+}
+
+/// Rearrange b CHW examples to HWC in `out` (same flat length).
+fn chw_to_hwc(b: usize, c: usize, h: usize, w: usize, x: &[f32], out: &mut [f32]) {
+    let d = c * h * w;
+    debug_assert_eq!(x.len(), b * d);
+    debug_assert_eq!(out.len(), b * d);
+    for i in 0..b {
+        let src = &x[i * d..(i + 1) * d];
+        let dst = &mut out[i * d..(i + 1) * d];
+        for ch in 0..c {
+            let plane = &src[ch * h * w..(ch + 1) * h * w];
+            for (pos, &v) in plane.iter().enumerate() {
+                dst[pos * c + ch] = v;
+            }
+        }
+    }
+}
+
+/// Batched forward: im2col + GEMM per conv layer, the MLP GEMM per fc
+/// layer, row-wise softmax-CE at the head. Fills every scratch buffer;
+/// returns (f64 loss sum, correct-prediction count).
+pub fn forward_batch(
+    spec: &ConvSpec,
+    params: &[Vec<f32>],
+    x: &[f32],
+    labels: &[i32],
+    s: &mut ConvScratch,
+) -> (f64, usize) {
+    let b = s.b;
+    let n = spec.n_layers();
+    chw_to_hwc(b, spec.in_c, spec.in_h, spec.in_w, x, &mut s.x_hwc);
+    for l in 0..n {
+        let w = &params[2 * l];
+        let bias = &params[2 * l + 1];
+        match spec.layers[l] {
+            Layer::Conv {
+                cin, cout, k, stride, pad, h_in, w_in, h_out, w_out,
+            } => {
+                let rows = b * h_out * w_out;
+                let kdim = cin * k * k;
+                {
+                    let input: &[f32] =
+                        if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
+                    gemm::im2col_hwc(
+                        b, cin, h_in, w_in, k, k, stride, pad, input,
+                        &mut s.patches[l],
+                    );
+                }
+                let z = &mut s.zs[l];
+                for r in 0..rows {
+                    z[r * cout..(r + 1) * cout].copy_from_slice(bias);
+                }
+                gemm::sgemm_nt(rows, kdim, cout, &s.patches[l], w, z);
+            }
+            Layer::Fc { din, dout } => {
+                let z = &mut s.zs[l];
+                for r in 0..b {
+                    z[r * dout..(r + 1) * dout].copy_from_slice(bias);
+                }
+                let input: &[f32] =
+                    if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
+                gemm::sgemm(b, din, dout, input, w, z);
+            }
+        }
+        if l < n - 1 {
+            let a = &mut s.acts[l];
+            for (av, &zv) in a.iter_mut().zip(s.zs[l].iter()) {
+                *av = zv.max(0.0);
+            }
+        }
+    }
+    super::taps::softmax_xent_rows(
+        b,
+        spec.n_classes,
+        &s.zs[n - 1],
+        &mut s.probs,
+        labels,
+    )
+}
+
+/// Batched backward (after `forward_batch`): fills `deltas` for every
+/// layer — fc layers via `sgemm_nt`, conv layers via dPatches =
+/// Δ·W (`sgemm`) + col2im scatter — with the ReLU mask applied per
+/// layer. `nu`, when given, scales example i's output delta by nu_i
+/// (the reweighted second backward).
+pub fn backward_batch(
+    spec: &ConvSpec,
+    params: &[Vec<f32>],
+    labels: &[i32],
+    nu: Option<&[f32]>,
+    s: &mut ConvScratch,
+) {
+    let b = s.b;
+    let n = spec.n_layers();
+    let nc = spec.n_classes;
+    {
+        // dCE_i/dz = softmax(z_i) - onehot(y_i), optionally nu_i-scaled
+        let d = &mut s.deltas[n - 1];
+        d.copy_from_slice(&s.probs);
+        for r in 0..b {
+            d[r * nc + labels[r] as usize] -= 1.0;
+        }
+        if let Some(nu) = nu {
+            for (r, &wv) in nu.iter().enumerate() {
+                for v in d[r * nc..(r + 1) * nc].iter_mut() {
+                    *v *= wv;
+                }
+            }
+        }
+    }
+    for l in (1..n).rev() {
+        let w = &params[2 * l];
+        let (head, tail) = s.deltas.split_at_mut(l);
+        let d_here = &tail[0];
+        let d_prev = &mut head[l - 1];
+        match spec.layers[l] {
+            Layer::Fc { din, dout } => {
+                d_prev.iter_mut().for_each(|v| *v = 0.0);
+                // Δ_{l-1,flat} = Δ_l · W_lᵀ
+                gemm::sgemm_nt(b, dout, din, d_here, w, d_prev);
+            }
+            Layer::Conv {
+                cin, cout, k, stride, pad, h_in, w_in, h_out, w_out,
+            } => {
+                let rows = b * h_out * w_out;
+                let kdim = cin * k * k;
+                let dp = &mut s.dpatches[l];
+                dp.iter_mut().for_each(|v| *v = 0.0);
+                // dPatches = Δ_l · W_l  (W stored cout x K)
+                gemm::sgemm(rows, cout, kdim, d_here, w, dp);
+                // scatter overlapping receptive fields back onto the
+                // previous HWC map (col2im zeroes d_prev itself)
+                gemm::col2im_hwc(
+                    b, cin, h_in, w_in, k, k, stride, pad, dp, d_prev,
+                );
+            }
+        }
+        // every non-final layer is ReLU: mask by the stored z_{l-1}
+        for (dv, &zv) in d_prev.iter_mut().zip(s.zs[l - 1].iter()) {
+            if zv <= 0.0 {
+                *dv = 0.0;
+            }
+        }
+    }
+}
+
+/// Per-example slice of layer l's delta/patch rows for example `i`.
+fn example_rows(v: &[f32], i: usize, per_example: usize) -> &[f32] {
+    &v[i * per_example..(i + 1) * per_example]
+}
+
+/// The fc-layer tap term (||a_i||² + 1)·||δ_i||², f64-accumulated —
+/// exact for a dense layer, and the single definition all three norm
+/// routes (`sq_norms`, `gram_sq_norms`, `tap_bound_sq_norms`) share
+/// so they cannot silently desynchronize.
+fn fc_tap_sq(input: &[f32], deltas: &[f32], i: usize, din: usize, dout: usize) -> f64 {
+    let a = example_rows(input, i, din);
+    let d = example_rows(deltas, i, dout);
+    let a2: f64 = a.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let d2: f64 = d.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    (a2 + 1.0) * d2
+}
+
+/// Exact per-example squared gradient norms — the direct route: per
+/// conv layer, materialize the small K x cout product A_iᵀ·Δ_i per
+/// example and take its Frobenius norm (plus the bias column-sum
+/// term); per fc layer, the MLP tap trick. Parallel over examples;
+/// per-example work has a fixed order, so the result is bitwise
+/// deterministic.
+pub fn sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
+    let b = s.b;
+    (0..b)
+        .into_par_iter()
+        .map(|i| {
+            let mut sq = 0.0f64;
+            let mut mbuf: Vec<f32> = Vec::new();
+            let mut bias: Vec<f32> = Vec::new();
+            for l in 0..spec.n_layers() {
+                match spec.layers[l] {
+                    Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
+                        let p = h_out * w_out;
+                        let kdim = cin * k * k;
+                        let delta = example_rows(&s.deltas[l], i, p * cout);
+                        let patches = example_rows(&s.patches[l], i, p * kdim);
+                        mbuf.clear();
+                        mbuf.resize(cout * kdim, 0.0);
+                        // M = Δ_iᵀ · A_i, reduced over the P positions
+                        // in f64 — the same kernel the gradient
+                        // assembly and multiloss materialization use,
+                        // so every method reports identical norms
+                        gemm::sgemm_tn_f64acc(
+                            cout, p, kdim, delta, None, patches, &mut mbuf,
+                        );
+                        sq += mbuf
+                            .iter()
+                            .map(|&v| (v as f64) * (v as f64))
+                            .sum::<f64>();
+                        bias.clear();
+                        bias.resize(cout, 0.0);
+                        gemm::col_sums(p, cout, delta, None, &mut bias);
+                        sq += bias
+                            .iter()
+                            .map(|&v| (v as f64) * (v as f64))
+                            .sum::<f64>();
+                    }
+                    Layer::Fc { din, dout } => {
+                        let input: &[f32] =
+                            if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
+                        sq += fc_tap_sq(input, &s.deltas[l], i, din, dout);
+                    }
+                }
+            }
+            sq
+        })
+        .collect()
+}
+
+/// Exact per-example squared gradient norms — the Gram route (paper
+/// Sec 5.2): per conv layer, form the P x P position Grams A_i·A_iᵀ
+/// and Δ_i·Δ_iᵀ and sum their Hadamard product; the all-ones bias
+/// "tap" contributes Σ_pq (Δ_i·Δ_iᵀ)_pq. The off-diagonal terms are
+/// exactly what weight sharing adds over the MLP diagonal.
+pub fn gram_sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
+    let b = s.b;
+    (0..b)
+        .into_par_iter()
+        .map(|i| {
+            let mut sq = 0.0f64;
+            let mut ga: Vec<f32> = Vec::new();
+            let mut gd: Vec<f32> = Vec::new();
+            for l in 0..spec.n_layers() {
+                match spec.layers[l] {
+                    Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
+                        let p = h_out * w_out;
+                        let kdim = cin * k * k;
+                        let delta = example_rows(&s.deltas[l], i, p * cout);
+                        let patches = example_rows(&s.patches[l], i, p * kdim);
+                        ga.clear();
+                        ga.resize(p * p, 0.0);
+                        gd.clear();
+                        gd.resize(p * p, 0.0);
+                        gemm::sgemm_nt(p, kdim, p, patches, patches, &mut ga);
+                        gemm::sgemm_nt(p, cout, p, delta, delta, &mut gd);
+                        let mut w_term = 0.0f64;
+                        let mut b_term = 0.0f64;
+                        for (&gav, &gdv) in ga.iter().zip(gd.iter()) {
+                            w_term += (gav as f64) * (gdv as f64);
+                            b_term += gdv as f64;
+                        }
+                        sq += w_term + b_term;
+                    }
+                    Layer::Fc { din, dout } => {
+                        let input: &[f32] =
+                            if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
+                        sq += fc_tap_sq(input, &s.deltas[l], i, din, dout);
+                    }
+                }
+            }
+            sq
+        })
+        .collect()
+}
+
+/// The row-norm-product upper bound: Σ_l (||A_{l,i}||²_F + P_l) ·
+/// ||Δ_{l,i}||²_F (the +P_l augments the bias's all-ones tap column).
+/// Exact on fc layers, a strict overestimate wherever an example's
+/// patches overlap — see the module docs. Never used to clip.
+pub fn tap_bound_sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
+    let b = s.b;
+    let mut sq = vec![0.0f64; b];
+    for l in 0..spec.n_layers() {
+        match spec.layers[l] {
+            Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
+                let p = h_out * w_out;
+                let kdim = cin * k * k;
+                for (i, sqi) in sq.iter_mut().enumerate() {
+                    let patches = example_rows(&s.patches[l], i, p * kdim);
+                    let delta = example_rows(&s.deltas[l], i, p * cout);
+                    let a2: f64 = patches
+                        .iter()
+                        .map(|&v| (v as f64) * (v as f64))
+                        .sum();
+                    let d2: f64 = delta
+                        .iter()
+                        .map(|&v| (v as f64) * (v as f64))
+                        .sum();
+                    *sqi += (a2 + p as f64) * d2;
+                }
+            }
+            Layer::Fc { din, dout } => {
+                let input: &[f32] =
+                    if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
+                for (i, sqi) in sq.iter_mut().enumerate() {
+                    *sqi += fc_tap_sq(input, &s.deltas[l], i, din, dout);
+                }
+            }
+        }
+    }
+    sq
+}
+
+/// Scale every delta element of example i by nu_i in place (the
+/// `reweight_direct` assembly — conv examples own P rows per layer).
+pub fn scale_delta_rows(spec: &ConvSpec, nu: &[f32], s: &mut ConvScratch) {
+    for l in 0..spec.n_layers() {
+        let per_example = spec.layers[l].elems_per_example();
+        let d = &mut s.deltas[l];
+        for (i, &wv) in nu.iter().enumerate() {
+            for v in d[i * per_example..(i + 1) * per_example].iter_mut() {
+                *v *= wv;
+            }
+        }
+    }
+}
+
+/// Accumulate the batch-summed gradients from the current deltas:
+/// conv grads via Δᵀ·patches, fc grads as in the MLP.
+/// With `scale` (per example, the `reweight_pallas` path) the clip
+/// factor is fused into the reductions — conv layers expand it to the
+/// P patch rows each example owns.
+///
+/// Conv layers accumulate **example by example** with the
+/// f64-reduction kernel (`sgemm_tn_f64acc`) rather than in one flat
+/// f32 (B·P)-row reduction: the per-example association matches the
+/// multiloss materialization and the nxBP coordinator loop, and the
+/// near-exact P-position sums keep the cross-method float divergence
+/// at the same (batch-sized) scale as the MLP family instead of
+/// growing with B·P. No parallelism is lost *relative to the flat
+/// kernel* — a cout x K gradient occupies a single output tile either
+/// way, so both shapes run this reduction serially today; spreading
+/// it across cores (per-example f64 partials, ordered merge) is a
+/// ROADMAP item.
+pub fn grads_from_deltas(
+    spec: &ConvSpec,
+    s: &ConvScratch,
+    scale: Option<&[f32]>,
+    grads: &mut [Vec<f32>],
+) {
+    let b = s.b;
+    for l in 0..spec.n_layers() {
+        match spec.layers[l] {
+            Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
+                let p = h_out * w_out;
+                let kdim = cin * k * k;
+                let mut row_nu: Vec<f32> = Vec::new();
+                for i in 0..b {
+                    let delta = example_rows(&s.deltas[l], i, p * cout);
+                    let patches = example_rows(&s.patches[l], i, p * kdim);
+                    let row_scale: Option<&[f32]> = match scale {
+                        Some(nu) => {
+                            row_nu.clear();
+                            row_nu.resize(p, nu[i]);
+                            Some(&row_nu)
+                        }
+                        None => None,
+                    };
+                    gemm::sgemm_tn_f64acc(
+                        cout, p, kdim, delta, row_scale, patches,
+                        &mut grads[2 * l],
+                    );
+                    gemm::col_sums(
+                        p, cout, delta, row_scale, &mut grads[2 * l + 1],
+                    );
+                }
+            }
+            Layer::Fc { din, dout } => {
+                let input: &[f32] =
+                    if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
+                let delta = &s.deltas[l];
+                match scale {
+                    Some(nu) => gemm::sgemm_tn_scaled(
+                        din, b, dout, input, nu, delta, &mut grads[2 * l],
+                    ),
+                    None => gemm::sgemm_tn(
+                        din, b, dout, input, delta, &mut grads[2 * l],
+                    ),
+                }
+                gemm::col_sums(b, dout, delta, scale, &mut grads[2 * l + 1]);
+            }
+        }
+    }
+}
+
+/// Materialize example i's full gradient into `out` (overwriting),
+/// returning its squared norm from the materialized values — the
+/// multiLoss structure. The conv weight blocks run the same
+/// per-example Δᵀ·A reduction as `sq_norms`, so the reported norms
+/// agree bitwise with the direct route.
+pub fn materialize_grad_row(
+    spec: &ConvSpec,
+    s: &ConvScratch,
+    i: usize,
+    out: &mut [Vec<f32>],
+) -> f64 {
+    let mut sq = 0.0f64;
+    for l in 0..spec.n_layers() {
+        match spec.layers[l] {
+            Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
+                let p = h_out * w_out;
+                let kdim = cin * k * k;
+                let delta = example_rows(&s.deltas[l], i, p * cout);
+                let patches = example_rows(&s.patches[l], i, p * kdim);
+                let gw = &mut out[2 * l];
+                gw.iter_mut().for_each(|v| *v = 0.0);
+                gemm::sgemm_tn_f64acc(cout, p, kdim, delta, None, patches, gw);
+                sq += gw.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+                let gb = &mut out[2 * l + 1];
+                gb.iter_mut().for_each(|v| *v = 0.0);
+                gemm::col_sums(p, cout, delta, None, gb);
+                sq += gb.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            }
+            Layer::Fc { din, dout } => {
+                let input: &[f32] =
+                    if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
+                let a = example_rows(input, i, din);
+                let d = example_rows(&s.deltas[l], i, dout);
+                let gw = &mut out[2 * l];
+                for (kk, &xk) in a.iter().enumerate() {
+                    let row = &mut gw[kk * dout..(kk + 1) * dout];
+                    for (g, &dv) in row.iter_mut().zip(d.iter()) {
+                        *g = xk * dv;
+                        sq += (*g as f64) * (*g as f64);
+                    }
+                }
+                let gb = &mut out[2 * l + 1];
+                for (g, &dv) in gb.iter_mut().zip(d.iter()) {
+                    *g = dv;
+                    sq += (*g as f64) * (*g as f64);
+                }
+            }
+        }
+    }
+    sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::ChaCha20;
+    use crate::runtime::manifest::ParamSpec;
+    use std::collections::BTreeMap;
+
+    /// conv(1->2, 3x3 s2 p1) on 1x6x6 -> 3x3x2, fc 18 -> 3.
+    fn tiny_cnn_cfg() -> ConfigSpec {
+        ConfigSpec {
+            name: "tiny_cnn_b2".into(),
+            model: "cnn".into(),
+            dataset: "mnist".into(),
+            batch: 2,
+            n_classes: 3,
+            tags: vec![],
+            input_shape: vec![2, 1, 6, 6],
+            input_dtype: "f32".into(),
+            act_elems_per_example: 3 * 3 * 2 + 3,
+            conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }),
+            params: vec![
+                ParamSpec { name: "conv0.w".into(), shape: vec![2, 1, 3, 3] },
+                ParamSpec { name: "conv0.b".into(), shape: vec![2] },
+                ParamSpec { name: "fc.w".into(), shape: vec![18, 3] },
+                ParamSpec { name: "fc.b".into(), shape: vec![3] },
+            ],
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    /// Two stacked convs (exercises the col2im backprop boundary):
+    /// conv(1->2) on 1x7x7 -> 4x4, conv(2->3) -> 2x2, fc 12 -> 3.
+    fn deep_cnn_cfg() -> ConfigSpec {
+        ConfigSpec {
+            name: "deep_cnn_b3".into(),
+            model: "cnn".into(),
+            dataset: "mnist".into(),
+            batch: 3,
+            n_classes: 3,
+            tags: vec![],
+            input_shape: vec![3, 1, 7, 7],
+            input_dtype: "f32".into(),
+            act_elems_per_example: 4 * 4 * 2 + 2 * 2 * 3 + 3,
+            conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }),
+            params: vec![
+                ParamSpec { name: "conv0.w".into(), shape: vec![2, 1, 3, 3] },
+                ParamSpec { name: "conv0.b".into(), shape: vec![2] },
+                ParamSpec { name: "conv1.w".into(), shape: vec![3, 2, 3, 3] },
+                ParamSpec { name: "conv1.b".into(), shape: vec![3] },
+                ParamSpec { name: "fc.w".into(), shape: vec![12, 3] },
+                ParamSpec { name: "fc.b".into(), shape: vec![3] },
+            ],
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    fn rand_params(spec: &ConvSpec, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = ChaCha20::seeded(seed, 42);
+        spec.layers
+            .iter()
+            .flat_map(|l| {
+                vec![
+                    (0..l.cols() * l.k_dim())
+                        .map(|_| rng.next_f32() - 0.5)
+                        .collect::<Vec<f32>>(),
+                    (0..l.cols()).map(|_| rng.next_f32() - 0.5).collect(),
+                ]
+            })
+            .collect()
+    }
+
+    fn rand_input(spec: &ConvSpec, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = ChaCha20::seeded(seed, 7);
+        let x: Vec<f32> = (0..b * spec.d_in)
+            .map(|_| rng.next_f32() * 2.0 - 1.0)
+            .collect();
+        let labels: Vec<i32> = (0..b)
+            .map(|_| (rng.next_u32() % spec.n_classes as u32) as i32)
+            .collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn spec_parses_and_validates() {
+        let cfg = tiny_cnn_cfg();
+        let spec = ConvSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.d_in, 36);
+        assert_eq!(spec.layers.len(), 2);
+        assert_eq!(
+            spec.layers[0],
+            Layer::Conv {
+                cin: 1, cout: 2, k: 3, stride: 2, pad: 1,
+                h_in: 6, w_in: 6, h_out: 3, w_out: 3,
+            }
+        );
+        assert_eq!(spec.layers[1], Layer::Fc { din: 18, dout: 3 });
+
+        // channel-chain mismatch rejected
+        let mut bad = cfg.clone();
+        bad.params[0].shape = vec![2, 4, 3, 3];
+        assert!(ConvSpec::from_config(&bad).is_err());
+        // fc in-dim mismatch rejected
+        let mut bad = cfg.clone();
+        bad.params[2].shape = vec![20, 3];
+        assert!(ConvSpec::from_config(&bad).is_err());
+        // wrong family rejected
+        let mut bad = cfg.clone();
+        bad.model = "mlp".into();
+        assert!(ConvSpec::from_config(&bad).is_err());
+        // all-fc (no conv layer) rejected
+        let mut bad = cfg.clone();
+        bad.params = vec![
+            ParamSpec { name: "fc.w".into(), shape: vec![36, 3] },
+            ParamSpec { name: "fc.b".into(), shape: vec![3] },
+        ];
+        assert!(ConvSpec::from_config(&bad).is_err());
+    }
+
+    /// The ground-truth check the conv family rests on: batch-summed
+    /// gradients from backward_batch + grads_from_deltas match central
+    /// finite differences of the batch loss sum, through both the
+    /// single-conv and the stacked-conv (col2im) nets.
+    #[test]
+    fn conv_gradients_match_finite_differences() {
+        for cfg in [tiny_cnn_cfg(), deep_cnn_cfg()] {
+            let spec = ConvSpec::from_config(&cfg).unwrap();
+            let b = spec.batch;
+            let params = rand_params(&spec, 11);
+            let (x, labels) = rand_input(&spec, b, 5);
+
+            let mut s = ConvScratch::for_spec(&spec, b);
+            forward_batch(&spec, &params, &x, &labels, &mut s);
+            backward_batch(&spec, &params, &labels, None, &mut s);
+            let mut grads = spec.zero_grads();
+            grads_from_deltas(&spec, &s, None, &mut grads);
+
+            // eps: small enough that a pre-activation sitting near a
+            // ReLU kink (a bias nudge shifts a whole channel) cannot
+            // bend the central difference, large enough that the f32
+            // forward's rounding stays far below the tolerance
+            let eps = 1e-4f32;
+            let mut scratch = ConvScratch::for_spec(&spec, b);
+            for t in 0..params.len() {
+                for idx in [0usize, params[t].len() / 2, params[t].len() - 1] {
+                    let mut p_hi = params.clone();
+                    p_hi[t][idx] += eps;
+                    let (l_hi, _) =
+                        forward_batch(&spec, &p_hi, &x, &labels, &mut scratch);
+                    let mut p_lo = params.clone();
+                    p_lo[t][idx] -= eps;
+                    let (l_lo, _) =
+                        forward_batch(&spec, &p_lo, &x, &labels, &mut scratch);
+                    let fd = ((l_hi - l_lo) / (2.0 * eps as f64)) as f32;
+                    let an = grads[t][idx];
+                    assert!(
+                        (fd - an).abs() < 3e-3 * (1.0 + an.abs()),
+                        "{}: param {t}[{idx}]: finite-diff {fd} vs analytic {an}",
+                        cfg.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// Norm routes: direct == gram == materialized (all exact), and
+    /// the tap product bounds them from above — strictly, on conv
+    /// layers with overlapping patches.
+    #[test]
+    fn norm_routes_agree_and_tap_bounds_them() {
+        let cfg = deep_cnn_cfg();
+        let spec = ConvSpec::from_config(&cfg).unwrap();
+        let b = spec.batch;
+        let params = rand_params(&spec, 23);
+        let (x, labels) = rand_input(&spec, b, 9);
+        let mut s = ConvScratch::for_spec(&spec, b);
+        forward_batch(&spec, &params, &x, &labels, &mut s);
+        backward_batch(&spec, &params, &labels, None, &mut s);
+
+        let direct = sq_norms(&spec, &s);
+        let gram = gram_sq_norms(&spec, &s);
+        let tap = tap_bound_sq_norms(&spec, &s);
+        let mut mat = spec.zero_grads();
+        for i in 0..b {
+            let sq_mat = materialize_grad_row(&spec, &s, i, &mut mat);
+            assert!(
+                (direct[i] - sq_mat).abs() / sq_mat.max(1e-9) < 1e-6,
+                "direct {} vs materialized {sq_mat} (example {i})",
+                direct[i]
+            );
+            assert!(
+                (gram[i] - sq_mat).abs() / sq_mat.max(1e-9) < 1e-5,
+                "gram {} vs materialized {sq_mat} (example {i})",
+                gram[i]
+            );
+            // the bound is a true bound...
+            assert!(
+                tap[i] >= gram[i] * (1.0 - 1e-9),
+                "tap bound {} below exact {} (example {i})",
+                tap[i],
+                gram[i]
+            );
+        }
+        // ...and strictly loose on this net (patches genuinely overlap)
+        let slack: f64 = (0..b).map(|i| tap[i] / gram[i]).sum::<f64>() / b as f64;
+        assert!(
+            slack > 1.001,
+            "tap bound unexpectedly tight on a conv net: mean ratio {slack}"
+        );
+    }
+
+    /// The three weighted-assembly routes agree: a nu-weighted second
+    /// backward, nu-scaling the tapped deltas in place, and fusing nu
+    /// into the gradient GEMM — the conv-side guarantee behind
+    /// reweight / reweight_direct / reweight_pallas.
+    #[test]
+    fn weighted_assembly_routes_agree() {
+        let cfg = deep_cnn_cfg();
+        let spec = ConvSpec::from_config(&cfg).unwrap();
+        let b = spec.batch;
+        let params = rand_params(&spec, 31);
+        let (x, labels) = rand_input(&spec, b, 13);
+        let nu: Vec<f32> = (0..b).map(|i| 0.2 + 0.3 * i as f32).collect();
+
+        // route 1: second backward of the nu-weighted loss
+        let mut s1 = ConvScratch::for_spec(&spec, b);
+        forward_batch(&spec, &params, &x, &labels, &mut s1);
+        backward_batch(&spec, &params, &labels, Some(&nu), &mut s1);
+        let mut g1 = spec.zero_grads();
+        grads_from_deltas(&spec, &s1, None, &mut g1);
+
+        // route 2: one backward, deltas nu-scaled in place
+        let mut s2 = ConvScratch::for_spec(&spec, b);
+        forward_batch(&spec, &params, &x, &labels, &mut s2);
+        backward_batch(&spec, &params, &labels, None, &mut s2);
+        let mut g3 = spec.zero_grads();
+        // route 3 first (fused), from the unscaled deltas
+        grads_from_deltas(&spec, &s2, Some(&nu), &mut g3);
+        scale_delta_rows(&spec, &nu, &mut s2);
+        let mut g2 = spec.zero_grads();
+        grads_from_deltas(&spec, &s2, None, &mut g2);
+
+        for (t, (a, bb)) in g1.iter().zip(&g2).enumerate() {
+            for (&av, &bv) in a.iter().zip(bb.iter()) {
+                assert!(
+                    (av - bv).abs() < 1e-5,
+                    "grad[{t}]: backward-nu {av} vs scaled-deltas {bv}"
+                );
+            }
+        }
+        for (t, (a, c)) in g2.iter().zip(&g3).enumerate() {
+            for (&av, &cv) in a.iter().zip(c.iter()) {
+                assert!(
+                    (av - cv).abs() < 1e-5,
+                    "grad[{t}]: scaled-deltas {av} vs fused {cv}"
+                );
+            }
+        }
+    }
+
+    /// multiLoss agreement at the conv level: clipped-and-summed
+    /// materialized per-example gradients equal the reweighted batched
+    /// assembly when nu comes from the same (exact) norms.
+    #[test]
+    fn materialized_clipped_sum_matches_reweighted_assembly() {
+        let cfg = tiny_cnn_cfg();
+        let spec = ConvSpec::from_config(&cfg).unwrap();
+        let b = spec.batch;
+        let params = rand_params(&spec, 3);
+        let (x, labels) = rand_input(&spec, b, 17);
+        let clip = 0.5f32;
+
+        let mut s = ConvScratch::for_spec(&spec, b);
+        forward_batch(&spec, &params, &x, &labels, &mut s);
+        backward_batch(&spec, &params, &labels, None, &mut s);
+        let norms: Vec<f32> =
+            sq_norms(&spec, &s).iter().map(|&v| v.sqrt() as f32).collect();
+        let nu: Vec<f32> = norms
+            .iter()
+            .map(|&n| crate::runtime::clip_factor(n, clip))
+            .collect();
+        // clipping must actually bite for this to mean anything
+        assert!(nu.iter().any(|&v| v < 1.0));
+
+        let mut batched = spec.zero_grads();
+        grads_from_deltas(&spec, &s, Some(&nu), &mut batched);
+
+        let mut mat = spec.zero_grads();
+        let mut summed = spec.zero_grads();
+        for i in 0..b {
+            materialize_grad_row(&spec, &s, i, &mut mat);
+            for (acc, g) in summed.iter_mut().zip(&mat) {
+                for (av, &gv) in acc.iter_mut().zip(g) {
+                    *av += nu[i] * gv;
+                }
+            }
+        }
+        for (t, (a, m)) in batched.iter().zip(&summed).enumerate() {
+            for (&av, &mv) in a.iter().zip(m.iter()) {
+                assert!(
+                    (av - mv).abs() < 1e-5,
+                    "grad[{t}]: batched {av} vs materialized-sum {mv}"
+                );
+            }
+        }
+    }
+
+    /// Scratch reuse is clean: running the same step on a dirty
+    /// scratch reproduces the fresh-scratch results bitwise.
+    #[test]
+    fn scratch_reuse_is_bitwise_clean() {
+        let cfg = deep_cnn_cfg();
+        let spec = ConvSpec::from_config(&cfg).unwrap();
+        let b = spec.batch;
+        let params = rand_params(&spec, 19);
+        let (x, labels) = rand_input(&spec, b, 29);
+        let (x2, labels2) = rand_input(&spec, b, 30);
+
+        let run = |s: &mut ConvScratch| {
+            let (loss, _) = forward_batch(&spec, &params, &x, &labels, s);
+            backward_batch(&spec, &params, &labels, None, s);
+            let mut g = spec.zero_grads();
+            grads_from_deltas(&spec, s, None, &mut g);
+            (loss, sq_norms(&spec, s), g)
+        };
+        let mut fresh = ConvScratch::for_spec(&spec, b);
+        let want = run(&mut fresh);
+        let mut dirty = ConvScratch::for_spec(&spec, b);
+        // soil every buffer with an unrelated batch first
+        forward_batch(&spec, &params, &x2, &labels2, &mut dirty);
+        backward_batch(&spec, &params, &labels2, None, &mut dirty);
+        let got = run(&mut dirty);
+        assert_eq!(want.0.to_bits(), got.0.to_bits(), "loss");
+        assert_eq!(want.1, got.1, "norms");
+        assert_eq!(want.2, got.2, "grads");
+    }
+}

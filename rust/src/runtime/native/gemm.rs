@@ -1,8 +1,9 @@
 //! Batched matrix kernels for the native backend: cache-blocked,
-//! rayon-parallel f32 GEMMs in the three orientations the MLP
+//! rayon-parallel f32 GEMMs in the three orientations the
 //! forward/backward/gradient passes need, plus the fused
-//! per-row-scaled variant behind `reweight_pallas` and the small
-//! reduction helpers (row norms, column sums).
+//! per-row-scaled variant behind `reweight_pallas`, the im2col /
+//! col2im lowering pair that turns convolution into these same GEMMs,
+//! and the small reduction helpers (row norms, column sums).
 //!
 //! All matrices are dense row-major flat slices.
 //!
@@ -149,6 +150,178 @@ fn sgemm_tn_impl(
                     let crow = &mut cblk[i * n..(i + 1) * n];
                     for (cv, &bv) in crow.iter_mut().zip(brow) {
                         *cv += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `sgemm_tn` with **f64 accumulation**: C[m x n] += A[p x m]ᵀ · B[p x n],
+/// each output element reduced in f64 over the p rows (products of the
+/// f32 operands, cast exactly) and rounded to f32 once on store. With
+/// `scale`, row r's contribution is scaled by `scale[r]` — the
+/// multiply happens in f32 (`s * a`), bitwise matching a caller that
+/// pre-scales the A rows and passes `None`.
+///
+/// This is the conv family's per-example gradient/norm reduction: a
+/// conv weight gradient sums P overlapping position contributions per
+/// example, and carrying that reduction in f32 would make the
+/// cross-method float divergence grow with P (the MLP family only
+/// ever reduces over the batch). Same parallelism contract as the
+/// other kernels: disjoint output-row blocks, ascending reduction.
+pub fn sgemm_tn_f64acc(
+    m: usize,
+    p: usize,
+    n: usize,
+    a: &[f32],
+    scale: Option<&[f32]>,
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), p * m, "sgemm_tn_f64acc: A must be {p}x{m}");
+    assert_eq!(b.len(), p * n, "sgemm_tn_f64acc: B must be {p}x{n}");
+    assert_eq!(c.len(), m * n, "sgemm_tn_f64acc: C must be {m}x{n}");
+    if let Some(sc) = scale {
+        assert_eq!(sc.len(), p, "sgemm_tn_f64acc: scale must have len {p}");
+    }
+    c.par_chunks_mut(TILE_M * n).enumerate().for_each(|(blk, cblk)| {
+        let row0 = blk * TILE_M;
+        let rows = cblk.len() / n;
+        let mut acc = vec![0.0f64; rows * n];
+        for r in 0..p {
+            let arow = &a[r * m..(r + 1) * m];
+            let brow = &b[r * n..(r + 1) * n];
+            let s = match scale {
+                Some(sc) => sc[r],
+                None => 1.0,
+            };
+            for i in 0..rows {
+                let av = (s * arow[row0 + i]) as f64;
+                if av != 0.0 {
+                    let accrow = &mut acc[i * n..(i + 1) * n];
+                    for (cv, &bv) in accrow.iter_mut().zip(brow) {
+                        *cv += av * bv as f64;
+                    }
+                }
+            }
+        }
+        for (cv, &av) in cblk.iter_mut().zip(acc.iter()) {
+            *cv += av as f32;
+        }
+    });
+}
+
+/// Output spatial extent of a convolution dimension:
+/// `(len + 2*pad - k) / stride + 1`.
+pub fn conv_out(len: usize, k: usize, stride: usize, pad: usize) -> usize {
+    debug_assert!(len + 2 * pad >= k && stride > 0);
+    (len + 2 * pad - k) / stride + 1
+}
+
+/// im2col over an HWC activation map: gather every kh x kw receptive
+/// field into one row of the patch matrix.
+///
+/// `input` is b x (h*w*cin) row-major with per-example layout HWC
+/// (position-major, channel-minor — the layout the conv GEMMs
+/// produce). `out` is (b * h_out * w_out) x (cin*kh*kw), example-major
+/// (example i owns rows i*P..(i+1)*P), with **column order (c, ky,
+/// kx)** so a patch row lines up element-for-element with one
+/// out-channel slice of a `[cout, cin, kh, kw]` weight tensor.
+///
+/// Padded taps are written as explicit zeros (never skipped), so the
+/// buffer can be reused across steps without a separate clear.
+/// Parallel over examples — disjoint output slices, pure gather —
+/// hence bitwise deterministic under the module's contract.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_hwc(
+    b: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    input: &[f32],
+    out: &mut [f32],
+) {
+    let h_out = conv_out(h, kh, stride, pad);
+    let w_out = conv_out(w, kw, stride, pad);
+    let p = h_out * w_out;
+    let k = cin * kh * kw;
+    assert_eq!(input.len(), b * h * w * cin, "im2col: input must be {b} x {h}x{w}x{cin}");
+    assert_eq!(out.len(), b * p * k, "im2col: out must be {} x {k}", b * p);
+    out.par_chunks_mut(p * k).enumerate().for_each(|(i, oblk)| {
+        let iblk = &input[i * h * w * cin..(i + 1) * h * w * cin];
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let row = &mut oblk[(oy * w_out + ox) * k..(oy * w_out + ox + 1) * k];
+                for c in 0..cin {
+                    for ky in 0..kh {
+                        let y = (oy * stride + ky) as isize - pad as isize;
+                        let in_y = y >= 0 && (y as usize) < h;
+                        for kx in 0..kw {
+                            let x = (ox * stride + kx) as isize - pad as isize;
+                            let col = c * kh * kw + ky * kw + kx;
+                            row[col] = if in_y && x >= 0 && (x as usize) < w {
+                                iblk[((y as usize) * w + x as usize) * cin + c]
+                            } else {
+                                0.0
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Adjoint of `im2col_hwc`: scatter-accumulate patch-row gradients
+/// back onto the HWC input map (overlapping receptive fields sum —
+/// this is where conv weight sharing lives). Zeroes `out` first, so
+/// the buffer is safe to reuse across steps. Parallel over examples
+/// (disjoint output slices) with a fixed within-example scatter order
+/// — bitwise deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_hwc(
+    b: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    dpatches: &[f32],
+    out: &mut [f32],
+) {
+    let h_out = conv_out(h, kh, stride, pad);
+    let w_out = conv_out(w, kw, stride, pad);
+    let p = h_out * w_out;
+    let k = cin * kh * kw;
+    assert_eq!(dpatches.len(), b * p * k, "col2im: dpatches must be {} x {k}", b * p);
+    assert_eq!(out.len(), b * h * w * cin, "col2im: out must be {b} x {h}x{w}x{cin}");
+    out.par_chunks_mut(h * w * cin).enumerate().for_each(|(i, oblk)| {
+        oblk.iter_mut().for_each(|v| *v = 0.0);
+        let pblk = &dpatches[i * p * k..(i + 1) * p * k];
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                let row = &pblk[(oy * w_out + ox) * k..(oy * w_out + ox + 1) * k];
+                for c in 0..cin {
+                    for ky in 0..kh {
+                        let y = (oy * stride + ky) as isize - pad as isize;
+                        if y < 0 || y as usize >= h {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let x = (ox * stride + kx) as isize - pad as isize;
+                            if x < 0 || x as usize >= w {
+                                continue;
+                            }
+                            oblk[((y as usize) * w + x as usize) * cin + c] +=
+                                row[c * kh * kw + ky * kw + kx];
+                        }
                     }
                 }
             }
@@ -334,6 +507,129 @@ mod tests {
             run(&|c| sgemm_tn(m, k, n, &at, &bb, c)),
             run(&|c| sgemm_tn(m, k, n, &at, &bb, c))
         );
+    }
+
+    #[test]
+    fn tn_f64acc_matches_reference_and_scaled_rows() {
+        let (m, p, n) = (7, 50, 9);
+        let at = rand_mat(p, m, 16);
+        let b = rand_mat(p, n, 17);
+        // against the f64 triple-loop reference (via the transpose)
+        let mut a = vec![0.0f32; m * p];
+        for r in 0..p {
+            for i in 0..m {
+                a[i * p + r] = at[r * m + i];
+            }
+        }
+        let mut c = vec![0.0f32; m * n];
+        sgemm_tn_f64acc(m, p, n, &at, None, &b, &mut c);
+        assert_close(&c, &ref_nn(m, p, n, &a, &b));
+        // fused scale is bitwise identical to pre-scaling the A rows
+        let scale: Vec<f32> = (0..p).map(|r| 0.1 + r as f32 * 0.05).collect();
+        let scaled_at: Vec<f32> = at
+            .iter()
+            .enumerate()
+            .map(|(idx, &v)| scale[idx / m] * v)
+            .collect();
+        let mut want = vec![0.0f32; m * n];
+        sgemm_tn_f64acc(m, p, n, &scaled_at, None, &b, &mut want);
+        let mut got = vec![0.0f32; m * n];
+        sgemm_tn_f64acc(m, p, n, &at, Some(&scale), &b, &mut got);
+        assert_eq!(want, got);
+        // and it accumulates into C
+        let mut twice = c.clone();
+        sgemm_tn_f64acc(m, p, n, &at, None, &b, &mut twice);
+        for (t, &o) in twice.iter().zip(&c) {
+            assert!((t - 2.0 * o).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn im2col_hand_checked_tiny() {
+        // one example, one channel, 2x2 input, 3x3 kernel, stride 2,
+        // pad 1 => exactly one 1x1 output position centered so the
+        // patch window covers rows/cols -1..=1
+        let input = vec![1.0f32, 2.0, 3.0, 4.0]; // HW (c=1)
+        assert_eq!(conv_out(2, 3, 2, 1), 1);
+        let mut out = vec![f32::NAN; 9];
+        im2col_hwc(1, 1, 2, 2, 3, 3, 2, 1, &input, &mut out);
+        // window rows: (-1: all pad) (0: pad,1,2) (1: pad,3,4)
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn im2col_stride1_positions_and_channels() {
+        // 2 channels, 3x3 input, 3x3 kernel, stride 1, pad 1 => 9
+        // positions; the center position's patch is the whole map.
+        let (h, w, cin) = (3usize, 3usize, 2usize);
+        let input = rand_mat(1, h * w * cin, 21);
+        let p = conv_out(h, 3, 1, 1) * conv_out(w, 3, 1, 1);
+        assert_eq!(p, 9);
+        let k = cin * 9;
+        let mut out = vec![0.0f32; p * k];
+        im2col_hwc(1, cin, h, w, 3, 3, 1, 1, &input, &mut out);
+        // center position (oy=1, ox=1): tap (c, ky, kx) = input pixel
+        // (y=ky, x=kx) of channel c
+        let center = &out[4 * k..5 * k];
+        for c in 0..cin {
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    assert_eq!(
+                        center[c * 9 + ky * 3 + kx],
+                        input[(ky * w + kx) * cin + c],
+                        "c={c} ky={ky} kx={kx}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// col2im is the exact adjoint of im2col:
+    /// <im2col(x), y> == <x, col2im(y)> for random x, y — the identity
+    /// the conv backward pass rests on.
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        for (b, cin, h, w, k, stride, pad) in
+            [(2usize, 3usize, 5usize, 4usize, 3usize, 2usize, 1usize),
+             (1, 2, 6, 6, 3, 1, 1),
+             (3, 1, 4, 4, 2, 2, 0)]
+        {
+            let p = conv_out(h, k, stride, pad) * conv_out(w, k, stride, pad);
+            let kd = cin * k * k;
+            let x = rand_mat(b, h * w * cin, 31);
+            let y = rand_mat(b * p, kd, 32);
+            let mut ax = vec![0.0f32; b * p * kd];
+            im2col_hwc(b, cin, h, w, k, k, stride, pad, &x, &mut ax);
+            let mut aty = vec![0.0f32; b * h * w * cin];
+            col2im_hwc(b, cin, h, w, k, k, stride, pad, &y, &mut aty);
+            let lhs: f64 = ax.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let rhs: f64 = x.iter().zip(&aty).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!(
+                (lhs - rhs).abs() / lhs.abs().max(1.0) < 1e-4,
+                "adjoint identity broke: {lhs} vs {rhs} (b={b} cin={cin} h={h} w={w} k={k} s={stride} p={pad})"
+            );
+        }
+    }
+
+    #[test]
+    fn im2col_col2im_deterministic_and_reusable() {
+        let (b, cin, h, w) = (4usize, 2usize, 7usize, 7usize);
+        let p = conv_out(h, 3, 2, 1) * conv_out(w, 3, 2, 1);
+        let kd = cin * 9;
+        let x = rand_mat(b, h * w * cin, 41);
+        let dp = rand_mat(b * p, kd, 42);
+        // dirty buffers must come out identical to clean ones: every
+        // slot (including padding) is rewritten
+        let mut clean = vec![0.0f32; b * p * kd];
+        im2col_hwc(b, cin, h, w, 3, 3, 2, 1, &x, &mut clean);
+        let mut dirty = vec![7.5f32; b * p * kd];
+        im2col_hwc(b, cin, h, w, 3, 3, 2, 1, &x, &mut dirty);
+        assert_eq!(clean, dirty);
+        let mut c1 = vec![0.0f32; b * h * w * cin];
+        col2im_hwc(b, cin, h, w, 3, 3, 2, 1, &dp, &mut c1);
+        let mut c2 = vec![-3.25f32; b * h * w * cin];
+        col2im_hwc(b, cin, h, w, 3, 3, 2, 1, &dp, &mut c2);
+        assert_eq!(c1, c2);
     }
 
     #[test]

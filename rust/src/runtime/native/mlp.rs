@@ -4,8 +4,9 @@
 //!     `forward_batch`, `backward_batch`, `tap_sq_norms`,
 //!     `gram_sq_norms`, `grads_from_deltas`, ...): activations and
 //!     deltas held as B x d matrices, every heavy op a `gemm` kernel
-//!     call. This is what `NativeStep` executes — it is where the
-//!     paper's "clipping can stay batched" claim lives.
+//!     call. `NativeStep` executes it through the `taps::TapModel`
+//!     seam (alongside the conv family) — it is where the paper's
+//!     "clipping can stay batched" claim lives.
 //!   - the **scalar reference** (`Scratch`, `forward`, `backward`,
 //!     `accumulate_weighted`, `materialize_grad`): one example at a
 //!     time, validated against central finite differences. The batched
@@ -107,6 +108,23 @@ impl MlpSpec {
 
     pub fn n_layers(&self) -> usize {
         self.layers.len()
+    }
+
+    /// Check a param store's tensor count and per-tensor lengths.
+    pub fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+        ensure!(
+            host.len() == 2 * self.n_layers(),
+            "{config}: param store has {} tensors, spec needs {}",
+            host.len(),
+            2 * self.n_layers()
+        );
+        for (l, &(din, dout)) in self.layers.iter().enumerate() {
+            ensure!(
+                host[2 * l].len() == din * dout && host[2 * l + 1].len() == dout,
+                "{config}: layer {l} param shapes do not match the config"
+            );
+        }
+        Ok(())
     }
 
     /// Flat gradient buffers in manifest order [W0, b0, W1, b1, ...].
@@ -380,38 +398,14 @@ pub fn forward_batch(
         }
     }
     // row-wise numerically stable softmax-CE (f64 accumulation, same
-    // op order as the scalar reference)
-    let nc = spec.n_classes;
-    let logits = &s.zs[n - 1];
-    let mut loss_sum = 0.0f64;
-    let mut correct = 0usize;
-    for r in 0..b {
-        let row = &logits[r * nc..(r + 1) * nc];
-        let prow = &mut s.probs[r * nc..(r + 1) * nc];
-        let mut m = f32::NEG_INFINITY;
-        let mut argmax = 0usize;
-        for (j, &v) in row.iter().enumerate() {
-            if v > m {
-                m = v;
-                argmax = j;
-            }
-        }
-        let mut sum = 0.0f64;
-        for (p, &z) in prow.iter_mut().zip(row.iter()) {
-            let e = ((z - m) as f64).exp();
-            *p = e as f32;
-            sum += e;
-        }
-        let inv = (1.0 / sum) as f32;
-        for p in prow.iter_mut() {
-            *p *= inv;
-        }
-        let y = labels[r] as usize;
-        let loss = sum.ln() as f32 - (row[y] - m);
-        loss_sum += loss as f64;
-        correct += usize::from(argmax == y);
-    }
-    (loss_sum, correct)
+    // op order as the scalar reference) — shared with the conv family
+    super::taps::softmax_xent_rows(
+        b,
+        spec.n_classes,
+        &s.zs[n - 1],
+        &mut s.probs,
+        labels,
+    )
 }
 
 /// Batched backward (after `forward_batch`): fills `deltas` for every
@@ -610,6 +604,7 @@ mod tests {
             input_shape: vec![2, 4],
             input_dtype: "f32".into(),
             act_elems_per_example: 5,
+            conv: None,
             params: vec![
                 ParamSpec { name: "fc0.w".into(), shape: vec![4, 5] },
                 ParamSpec { name: "fc0.b".into(), shape: vec![5] },

@@ -1,23 +1,26 @@
 //! NativeBackend — a pure-Rust execution backend for the manifest's
-//! MLP config family (linear + bias + ReLU + softmax-CE). Always
-//! available, no Python, no artifacts, no xla: this is what makes
-//! tier-1 (`cargo build --release && cargo test -q`) hermetic, and it
-//! is the reference implementation the PJRT artifacts are checked
-//! against when both are present.
+//! MLP and CNN config families. Always available, no Python, no
+//! artifacts, no xla: this is what makes tier-1 (`cargo build
+//! --release && cargo test -q`) hermetic, and it is the reference
+//! implementation the PJRT artifacts are checked against when both
+//! are present.
 //!
-//! Execution is *batched* (the point of the paper): activations and
-//! deltas live as B x d matrices and every heavy op is a `gemm`
-//! kernel, so the clipping strategies differ only in the extra work
-//! they do around one batched forward/backward — which is exactly the
-//! structure the paper's figures compare:
+//! Execution is *batched* (the point of the paper) and goes through
+//! the `taps::TapModel` seam: each model family provides a tap
+//! producer — batched forward/backward exposing per-layer activation
+//! and delta matrices plus gradient assembly — and the clipping
+//! strategies differ only in the extra work they do around one
+//! batched forward/backward, which is exactly the structure the
+//! paper's figures compare:
 //!
 //!   - `nonprivate`:      one batched backward, no clipping.
-//!   - `reweight`:        per-example norms via the activation/delta
-//!                        tap trick, then a *second*, nu-reweighted
-//!                        backward pass (the paper's main method).
-//!   - `reweight_gram`:   norms via the A·Aᵀ ∘ Δ·Δᵀ Gram diagonal
-//!                        (paper Sec 5.2), then the reweighted
-//!                        backward.
+//!   - `reweight`:        exact per-example norms from the taps, then
+//!                        a *second*, nu-reweighted backward pass (the
+//!                        paper's main method).
+//!   - `reweight_gram`:   norms via the A·Aᵀ ∘ Δ·Δᵀ Gram structure
+//!                        (paper Sec 5.2 — the off-diagonal terms are
+//!                        load-bearing under conv weight sharing),
+//!                        then the reweighted backward.
 //!   - `reweight_direct`: one backward only — the tapped deltas are
 //!                        nu-scaled in place and the weighted gradient
 //!                        is assembled directly.
@@ -29,24 +32,38 @@
 //!                        and summed (the vmap-of-grad structure).
 //!   - `naive1`:          the batch-1 body of the nxBP loop.
 //!
-//! Determinism: the GEMM kernels parallelize only over disjoint
-//! output-row blocks with a fixed reduction order (see `gemm`), and
-//! the one remaining per-example stage (multiloss materialization)
-//! runs in fixed-size chunks merged in order — results are bitwise
-//! reproducible regardless of thread scheduling.
+//! Model families: `mlp{2,4,6,8}` (dense) and `cnn{2,4}` (stride-2
+//! 3x3 convs lowered to im2col patch matrices, fc head) over
+//! mnist/fmnist/cifar10 at batch {1,16,32,64,128}.
+//!
+//! Determinism: the GEMM/im2col kernels parallelize only over
+//! disjoint output blocks with fixed reduction orders (see `gemm`),
+//! and the remaining per-example stages (multiloss materialization,
+//! per-example norm reductions) run in fixed-size chunks merged in
+//! order — results are bitwise reproducible regardless of thread
+//! scheduling.
+//!
+//! Hot path: each `NativeStep` caches its batch scratch behind a
+//! mutex (`StepFn::run` takes `&self`), so the several hundred KB of
+//! forward/backward buffer alloc+zero that used to sit inside the
+//! timed step is paid once at `load` time; the returned gradient
+//! tensors are the one remaining per-step allocation (they are owned
+//! by `StepOut`).
 
+pub mod conv;
 pub mod gemm;
 pub mod mlp;
+pub mod taps;
 
-use self::mlp::{BatchScratch, MlpSpec};
+use self::taps::{TapModel, TapScratch};
 use super::backend::{Backend, StepFn};
-use super::manifest::{ArtifactSpec, ConfigSpec, Manifest, ParamSpec};
+use super::manifest::{ArtifactSpec, ConfigSpec, ConvMeta, Manifest, ParamSpec};
 use super::store::{BatchStage, ParamStore, StepOut};
 use anyhow::{bail, ensure, Context, Result};
 use rayon::prelude::*;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Examples per parallel work unit in the multiloss materialization
 /// stage. Fixed (not derived from the thread count) so the
@@ -57,13 +74,16 @@ const CHUNK_EXAMPLES: usize = 8;
 /// Hidden width of the built-in MLP config family.
 const HIDDEN: usize = 128;
 
+/// Conv channel progression of the built-in CNN config family.
+const CNN_CHANNELS: [usize; 4] = [8, 16, 32, 32];
+
 pub struct NativeBackend {
     manifest: Manifest,
 }
 
 impl NativeBackend {
-    /// Backend over the built-in MLP config family (mlp{2,4,6,8} x
-    /// {mnist,fmnist,cifar10} x batch {1,16,32,64,128}).
+    /// Backend over the built-in config families (mlp{2,4,6,8} and
+    /// cnn{2,4} x {mnist,fmnist,cifar10} x batch {1,16,32,64,128}).
     pub fn new() -> NativeBackend {
         NativeBackend { manifest: builtin_manifest() }
     }
@@ -96,12 +116,14 @@ impl Backend for NativeBackend {
         let kind = Kind::parse(&art.method).with_context(|| {
             format!("native backend cannot execute artifact {}", art.file)
         })?;
-        let spec = MlpSpec::from_config(cfg)?;
+        let model = TapModel::from_config(cfg)?;
+        let scratch = Mutex::new(model.new_scratch(cfg.batch));
         Ok(Arc::new(NativeStep {
-            spec,
+            model,
             kind,
             method: art.method.clone(),
             config: cfg.name.clone(),
+            scratch,
         }))
     }
 }
@@ -147,10 +169,18 @@ impl Kind {
 }
 
 struct NativeStep {
-    spec: MlpSpec,
+    model: TapModel,
     kind: Kind,
     method: String,
     config: String,
+    /// Cached batch scratch, reused across `run` calls (`StepFn::run`
+    /// takes `&self`). Every buffer is fully rewritten each step, so
+    /// reuse changes no bits — pinned by
+    /// `cached_scratch_matches_fresh_step`. The returned gradient
+    /// tensors are deliberately NOT cached: `StepOut` owns them, so a
+    /// fresh `zero_grads` + in-place scale is one full memory pass
+    /// cheaper than accumulate-into-cache + scale-into-a-new-copy.
+    scratch: Mutex<TapScratch>,
 }
 
 /// nu_i = min(1, clip / ||g_i||) for every example, via the shared
@@ -173,19 +203,20 @@ impl StepFn for NativeStep {
         stage: &BatchStage,
         clip: Option<f32>,
     ) -> Result<StepOut> {
-        let spec = &self.spec;
+        let model = &self.model;
         ensure!(
             stage.is_f32,
-            "{}: native mlp expects f32 features",
-            self.config
+            "{}: native {} expects f32 features",
+            self.config,
+            model.family()
         );
         // The batch comes from the *config*, never from the staged
         // buffers: a consistently truncated stage (features and labels
         // both short) must be a hard error, or training would silently
         // run at a smaller batch than the sampling ratio the RDP
         // accountant charges for.
-        let b = spec.batch;
-        let d = spec.d_in;
+        let b = model.batch();
+        let d = model.d_in();
         ensure!(
             stage.labels.len() == b,
             "{}: staged batch holds {} labels but the config batch is {b} — \
@@ -203,27 +234,13 @@ impl StepFn for NativeStep {
             b,
             d
         );
-        ensure!(
-            params.host.len() == 2 * spec.n_layers(),
-            "{}: param store has {} tensors, spec needs {}",
-            self.config,
-            params.host.len(),
-            2 * spec.n_layers()
-        );
-        for (l, &(din, dout)) in spec.layers.iter().enumerate() {
-            ensure!(
-                params.host[2 * l].len() == din * dout
-                    && params.host[2 * l + 1].len() == dout,
-                "{}: layer {l} param shapes do not match the config",
-                self.config
-            );
-        }
+        model.validate_params(&self.config, &params.host)?;
         for (i, &y) in stage.labels.iter().enumerate() {
             ensure!(
-                y >= 0 && (y as usize) < spec.n_classes,
+                y >= 0 && (y as usize) < model.n_classes(),
                 "{}: label {y} at row {i} outside 0..{}",
                 self.config,
-                spec.n_classes
+                model.n_classes()
             );
         }
         let clip = if self.kind.needs_clip() {
@@ -237,8 +254,14 @@ impl StepFn for NativeStep {
         let host = &params.host;
         let x = &stage.feat_f32;
         let labels = &stage.labels;
-        let mut s = BatchScratch::for_spec(spec, b);
-        let (loss_sum, correct) = mlp::forward_batch(spec, host, x, labels, &mut s);
+        // a panicked step leaves only buffers that the next run fully
+        // rewrites, so a poisoned lock is safe to recover
+        let mut guard = self
+            .scratch
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let s = &mut *guard;
+        let (loss_sum, correct) = model.forward_batch(host, x, labels, s);
         let loss = (loss_sum / b as f64) as f32;
 
         if self.kind == Kind::Fwd {
@@ -250,20 +273,20 @@ impl StepFn for NativeStep {
             });
         }
 
-        let mut grads = spec.zero_grads();
+        let mut grads = model.zero_grads();
         let norms: Option<Vec<f32>> = match self.kind {
             Kind::Fwd => unreachable!("fwd returned above"),
             Kind::NonPrivate => {
-                mlp::backward_batch(spec, host, labels, None, &mut s);
-                mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                model.backward_batch(host, labels, None, s);
+                model.grads_from_deltas(x, s, None, &mut grads);
                 None
             }
             Kind::Naive1 => {
                 // batch-1 nxBP body: unclipped gradient + its norm;
                 // the coordinator clips and accumulates
-                mlp::backward_batch(spec, host, labels, None, &mut s);
-                let sq = mlp::tap_sq_norms(spec, x, &s);
-                mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                model.backward_batch(host, labels, None, s);
+                let sq = model.sq_norms(x, s);
+                model.grads_from_deltas(x, s, None, &mut grads);
                 Some(sq.iter().map(|&v| v.sqrt() as f32).collect())
             }
             Kind::Reweight
@@ -271,12 +294,12 @@ impl StepFn for NativeStep {
             | Kind::ReweightDirect
             | Kind::ReweightPallas => {
                 // shared prefix of the reweight family: one backward
-                // for the taps, per-example norms, clip factors
-                mlp::backward_batch(spec, host, labels, None, &mut s);
+                // for the taps, exact per-example norms, clip factors
+                model.backward_batch(host, labels, None, s);
                 let sq = if self.kind == Kind::ReweightGram {
-                    mlp::gram_sq_norms(spec, x, &s)
+                    model.gram_sq_norms(x, s)
                 } else {
-                    mlp::tap_sq_norms(spec, x, &s)
+                    model.sq_norms(x, s)
                 };
                 let norms: Vec<f32> =
                     sq.iter().map(|&v| v.sqrt() as f32).collect();
@@ -286,17 +309,17 @@ impl StepFn for NativeStep {
                     // *second* backward pass of the nu-weighted loss
                     // Σ_i nu_i·l_i
                     Kind::Reweight | Kind::ReweightGram => {
-                        mlp::backward_batch(spec, host, labels, Some(&nu), &mut s);
-                        mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                        model.backward_batch(host, labels, Some(&nu), s);
+                        model.grads_from_deltas(x, s, None, &mut grads);
                     }
                     // one backward: reuse the tapped deltas, nu-scaled
                     Kind::ReweightDirect => {
-                        mlp::scale_delta_rows(spec, &nu, &mut s);
-                        mlp::grads_from_deltas(spec, x, &s, None, &mut grads);
+                        model.scale_delta_rows(&nu, s);
+                        model.grads_from_deltas(x, s, None, &mut grads);
                     }
                     // fused: nu enters the gradient GEMM directly
                     Kind::ReweightPallas => {
-                        mlp::grads_from_deltas(spec, x, &s, Some(&nu), &mut grads);
+                        model.grads_from_deltas(x, s, Some(&nu), &mut grads);
                     }
                     _ => unreachable!("outer match covers the family"),
                 }
@@ -304,24 +327,24 @@ impl StepFn for NativeStep {
             }
             Kind::MultiLoss => {
                 let c = clip.unwrap();
-                mlp::backward_batch(spec, host, labels, None, &mut s);
+                model.backward_batch(host, labels, None, s);
                 // materialize per-example gradients in fixed-size
                 // chunks (parallel, merged in order)
                 let n_chunks =
                     b / CHUNK_EXAMPLES + usize::from(b % CHUNK_EXAMPLES != 0);
-                let shared = &s;
+                let shared: &TapScratch = s;
                 // (chunk's summed weighted grads, chunk's norms)
                 let partials = (0..n_chunks)
                     .into_par_iter()
                     .map(|ci| {
                         let lo = ci * CHUNK_EXAMPLES;
                         let hi = (lo + CHUNK_EXAMPLES).min(b);
-                        let mut acc = spec.zero_grads();
-                        let mut mat = spec.zero_grads();
+                        let mut acc = model.zero_grads();
+                        let mut mat = model.zero_grads();
                         let mut norms = Vec::with_capacity(hi - lo);
                         for i in lo..hi {
-                            let sq = mlp::materialize_grad_row(
-                                spec, x, shared, i, &mut mat,
+                            let sq = model.materialize_grad_row(
+                                x, shared, i, &mut mat,
                             );
                             let norm = sq.sqrt() as f32;
                             let nu = crate::runtime::clip_factor(norm, c);
@@ -378,6 +401,27 @@ fn artifact(method: &str, config: &str) -> (String, ArtifactSpec) {
     )
 }
 
+/// The full batched method family every native config carries (plus
+/// `naive1` on the batch-1 siblings).
+fn insert_artifacts(name: &str, batch: usize, artifacts: &mut BTreeMap<String, ArtifactSpec>) {
+    for m in [
+        "nonprivate",
+        "reweight",
+        "reweight_gram",
+        "reweight_direct",
+        "reweight_pallas",
+        "multiloss",
+        "fwd",
+    ] {
+        let (k, v) = artifact(m, name);
+        artifacts.insert(k, v);
+    }
+    if batch == 1 {
+        let (k, v) = artifact("naive1", name);
+        artifacts.insert(k, v);
+    }
+}
+
 fn mlp_config(
     dataset: &str,
     img_shape: &[usize],
@@ -406,22 +450,7 @@ fn mlp_config(
         tags.push("fig7".into());
     }
     let mut artifacts = BTreeMap::new();
-    for m in [
-        "nonprivate",
-        "reweight",
-        "reweight_gram",
-        "reweight_direct",
-        "reweight_pallas",
-        "multiloss",
-        "fwd",
-    ] {
-        let (k, v) = artifact(m, &name);
-        artifacts.insert(k, v);
-    }
-    if batch == 1 {
-        let (k, v) = artifact("naive1", &name);
-        artifacts.insert(k, v);
-    }
+    insert_artifacts(&name, batch, &mut artifacts);
     let mut input_shape = vec![batch];
     input_shape.extend_from_slice(img_shape);
     ConfigSpec {
@@ -434,12 +463,73 @@ fn mlp_config(
         input_shape,
         input_dtype: "f32".into(),
         act_elems_per_example: (depth - 1) * HIDDEN + n_classes,
+        conv: None,
         params,
         artifacts,
     }
 }
 
-/// The built-in config family the native backend can always run.
+/// Built-in CNN config: `depth` stride-2 3x3 conv layers (channels
+/// from `CNN_CHANNELS`) followed by one fc head onto the classes.
+/// Spatial maps halve per conv (ceil), so mnist runs 28→14→7→4→2 and
+/// cifar10 32→16→8→4→2.
+fn cnn_config(
+    dataset: &str,
+    img_shape: &[usize],
+    n_classes: usize,
+    depth: usize,
+    batch: usize,
+) -> ConfigSpec {
+    assert!((1..=CNN_CHANNELS.len()).contains(&depth));
+    let name = format!("cnn{depth}_{dataset}_b{batch}");
+    let meta = ConvMeta { kernel: 3, stride: 2, pad: 1 };
+    let (mut cin, mut h, mut w) = (img_shape[0], img_shape[1], img_shape[2]);
+    let mut params = Vec::with_capacity(depth * 2 + 2);
+    let mut act_elems = 0usize;
+    for l in 0..depth {
+        let cout = CNN_CHANNELS[l];
+        params.push(ParamSpec {
+            name: format!("conv{l}.w"),
+            shape: vec![cout, cin, meta.kernel, meta.kernel],
+        });
+        params.push(ParamSpec { name: format!("conv{l}.b"), shape: vec![cout] });
+        h = gemm::conv_out(h, meta.kernel, meta.stride, meta.pad);
+        w = gemm::conv_out(w, meta.kernel, meta.stride, meta.pad);
+        act_elems += h * w * cout;
+        cin = cout;
+    }
+    let flat = cin * h * w;
+    params.push(ParamSpec { name: "fc.w".into(), shape: vec![flat, n_classes] });
+    params.push(ParamSpec { name: "fc.b".into(), shape: vec![n_classes] });
+    act_elems += n_classes;
+    let mut tags: Vec<String> = Vec::new();
+    if batch == 1 {
+        tags.push("naive".into());
+    }
+    if depth == 2 && batch == 32 && (dataset == "mnist" || dataset == "fmnist") {
+        tags.push("fig5".into());
+    }
+    let mut artifacts = BTreeMap::new();
+    insert_artifacts(&name, batch, &mut artifacts);
+    let mut input_shape = vec![batch];
+    input_shape.extend_from_slice(img_shape);
+    ConfigSpec {
+        name,
+        model: "cnn".into(),
+        dataset: dataset.into(),
+        batch,
+        n_classes,
+        tags,
+        input_shape,
+        input_dtype: "f32".into(),
+        act_elems_per_example: act_elems,
+        conv: Some(meta),
+        params,
+        artifacts,
+    }
+}
+
+/// The built-in config families the native backend can always run.
 fn builtin_manifest() -> Manifest {
     let mut configs = BTreeMap::new();
     let datasets: [(&str, &[usize], usize); 3] = [
@@ -448,9 +538,13 @@ fn builtin_manifest() -> Manifest {
         ("cifar10", &[3, 32, 32], 10),
     ];
     for (dataset, shape, n_classes) in datasets {
-        for depth in [2usize, 4, 6, 8] {
-            for batch in [1usize, 16, 32, 64, 128] {
+        for batch in [1usize, 16, 32, 64, 128] {
+            for depth in [2usize, 4, 6, 8] {
                 let cfg = mlp_config(dataset, shape, n_classes, depth, batch);
+                configs.insert(cfg.name.clone(), cfg);
+            }
+            for depth in [2usize, 4] {
+                let cfg = cnn_config(dataset, shape, n_classes, depth, batch);
                 configs.insert(cfg.name.clone(), cfg);
             }
         }
@@ -470,27 +564,39 @@ mod tests {
         let cfg = m.config("mlp2_mnist_b32").unwrap();
         assert_eq!(cfg.batch, 32);
         assert_eq!(cfg.params[0].shape, vec![784, HIDDEN]);
-        // the full batched method matrix is native now
-        for method in [
-            "nonprivate",
-            "reweight",
-            "reweight_gram",
-            "reweight_direct",
-            "reweight_pallas",
-            "multiloss",
-            "fwd",
-        ] {
-            assert!(cfg.artifacts.contains_key(method), "{method}");
+        // the full batched method matrix is native, on both families
+        for name in ["mlp2_mnist_b32", "cnn2_mnist_b32", "cnn4_cifar10_b64"] {
+            let cfg = m.config(name).unwrap();
+            for method in [
+                "nonprivate",
+                "reweight",
+                "reweight_gram",
+                "reweight_direct",
+                "reweight_pallas",
+                "multiloss",
+                "fwd",
+            ] {
+                assert!(cfg.artifacts.contains_key(method), "{name}/{method}");
+            }
         }
         // every batched config has a naive1-capable b1 sibling
         for name in m.configs.keys().filter(|n| !n.ends_with("_b1")) {
             let n1 = m.naive_config(name).unwrap();
             assert!(n1.artifacts.contains_key("naive1"), "{name}");
         }
-        // every config parses into an MlpSpec
+        // every config parses into its family's tap producer
         for cfg in m.configs.values() {
-            MlpSpec::from_config(cfg).unwrap();
+            let model = TapModel::from_config(cfg).unwrap();
+            assert_eq!(model.family(), cfg.model);
+            assert_eq!(model.batch(), cfg.batch);
         }
+        // cnn spatial chain: mnist 28 -> 14 -> 7, fc 7*7*16 -> 10
+        let cnn = m.config("cnn2_mnist_b32").unwrap();
+        assert_eq!(cnn.params[0].shape, vec![8, 1, 3, 3]);
+        assert_eq!(cnn.params[4].shape, vec![7 * 7 * 16, 10]);
+        assert_eq!(cnn.conv, Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }));
+        let cnn4 = m.config("cnn4_cifar10_b16").unwrap();
+        assert_eq!(cnn4.params[8].shape, vec![2 * 2 * 32, 10]);
     }
 
     #[test]
@@ -505,24 +611,27 @@ mod tests {
     #[test]
     fn fwd_counts_and_losses_are_sane() {
         let b = NativeBackend::new();
-        let cfg = b.manifest().config("mlp2_mnist_b32").unwrap().clone();
-        let step = b.load(&cfg, "fwd").unwrap();
-        let mut params =
-            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 0))).unwrap();
-        let ds = crate::data::load_dataset("mnist", 64, 0).unwrap();
-        let mut stage = BatchStage::for_config(&cfg);
-        let batch: Vec<usize> = (0..32).collect();
-        crate::data::gather_batch_f32(
-            &ds,
-            &batch,
-            &mut stage.feat_f32,
-            &mut stage.labels,
-        );
-        let out = step.run(&mut params, &stage, None).unwrap();
-        assert!(out.loss.is_finite() && out.loss > 0.0);
-        let correct = out.correct.unwrap();
-        assert!((0.0..=32.0).contains(&correct));
-        assert!(out.grads.is_empty());
+        for name in ["mlp2_mnist_b32", "cnn2_mnist_b32"] {
+            let cfg = b.manifest().config(name).unwrap().clone();
+            let step = b.load(&cfg, "fwd").unwrap();
+            let mut params =
+                ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 0)))
+                    .unwrap();
+            let ds = crate::data::load_dataset("mnist", 64, 0).unwrap();
+            let mut stage = BatchStage::for_config(&cfg);
+            let batch: Vec<usize> = (0..32).collect();
+            crate::data::gather_batch_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            );
+            let out = step.run(&mut params, &stage, None).unwrap();
+            assert!(out.loss.is_finite() && out.loss > 0.0, "{name}");
+            let correct = out.correct.unwrap();
+            assert!((0.0..=32.0).contains(&correct), "{name}");
+            assert!(out.grads.is_empty(), "{name}");
+        }
     }
 
     #[test]
@@ -561,37 +670,88 @@ mod tests {
     #[test]
     fn results_are_deterministic_across_runs() {
         let b = NativeBackend::new();
-        let cfg = b.manifest().config("mlp2_mnist_b32").unwrap().clone();
-        let ds = crate::data::load_dataset("mnist", 64, 3).unwrap();
-        let mut stage = BatchStage::for_config(&cfg);
-        let batch: Vec<usize> = (0..32).collect();
-        crate::data::gather_batch_f32(
-            &ds,
-            &batch,
-            &mut stage.feat_f32,
-            &mut stage.labels,
-        );
-        let mut params =
-            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 1))).unwrap();
-        for method in
-            ["reweight", "reweight_gram", "reweight_direct", "reweight_pallas"]
-        {
-            let step = b.load(&cfg, method).unwrap();
-            let a = step.run(&mut params, &stage, Some(0.7)).unwrap();
-            let a2 = step.run(&mut params, &stage, Some(0.7)).unwrap();
-            // bitwise: fixed tiles + ordered merge
-            assert_eq!(a.grads, a2.grads, "{method}");
-            assert_eq!(a.norms, a2.norms, "{method}");
+        for name in ["mlp2_mnist_b32", "cnn2_mnist_b32"] {
+            let cfg = b.manifest().config(name).unwrap().clone();
+            let ds = crate::data::load_dataset("mnist", 64, 3).unwrap();
+            let mut stage = BatchStage::for_config(&cfg);
+            let batch: Vec<usize> = (0..32).collect();
+            crate::data::gather_batch_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            );
+            let mut params =
+                ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 1)))
+                    .unwrap();
+            for method in
+                ["reweight", "reweight_gram", "reweight_direct", "reweight_pallas"]
+            {
+                let step = b.load(&cfg, method).unwrap();
+                let a = step.run(&mut params, &stage, Some(0.7)).unwrap();
+                let a2 = step.run(&mut params, &stage, Some(0.7)).unwrap();
+                // bitwise: fixed tiles + ordered merge + clean scratch
+                // reuse
+                assert_eq!(a.grads, a2.grads, "{name}/{method}");
+                assert_eq!(a.norms, a2.norms, "{name}/{method}");
+            }
         }
     }
 
-    /// Every artifact the builtin manifest declares actually executes.
+    /// The cached-scratch fast path changes no bits: a step object
+    /// that has already run (warm, reused buffers) produces results
+    /// identical to a freshly loaded step (cold buffers) — on both
+    /// model families, for the methods that touch every scratch
+    /// buffer.
+    #[test]
+    fn cached_scratch_matches_fresh_step() {
+        let b = NativeBackend::new();
+        for name in ["mlp2_mnist_b16", "cnn2_mnist_b16"] {
+            let cfg = b.manifest().config(name).unwrap().clone();
+            let ds = crate::data::load_dataset("mnist", 64, 9).unwrap();
+            let mut stage = BatchStage::for_config(&cfg);
+            let batch: Vec<usize> = (0..cfg.batch).collect();
+            crate::data::gather_batch_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            );
+            let mut params =
+                ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 4)))
+                    .unwrap();
+            for method in ["reweight", "multiloss", "nonprivate"] {
+                let warm = b.load(&cfg, method).unwrap();
+                let first = warm.run(&mut params, &stage, Some(0.6)).unwrap();
+                let second = warm.run(&mut params, &stage, Some(0.6)).unwrap();
+                let fresh = b.load(&cfg, method).unwrap();
+                let cold = fresh.run(&mut params, &stage, Some(0.6)).unwrap();
+                assert_eq!(first.grads, second.grads, "{name}/{method}");
+                assert_eq!(first.grads, cold.grads, "{name}/{method}");
+                assert_eq!(first.norms, cold.norms, "{name}/{method}");
+                assert_eq!(
+                    first.loss.to_bits(),
+                    cold.loss.to_bits(),
+                    "{name}/{method}"
+                );
+            }
+        }
+    }
+
+    /// Every artifact the builtin manifest declares actually executes
+    /// — on both model families, including the batch-1 naive1 bodies.
     #[test]
     fn all_declared_artifacts_execute() {
         let b = NativeBackend::new();
-        for name in ["mlp2_mnist_b16", "mlp2_mnist_b1"] {
+        for name in [
+            "mlp2_mnist_b16",
+            "mlp2_mnist_b1",
+            "cnn2_mnist_b16",
+            "cnn2_mnist_b1",
+            "cnn4_cifar10_b16",
+        ] {
             let cfg = b.manifest().config(name).unwrap().clone();
-            let ds = crate::data::load_dataset("mnist", 64, 5).unwrap();
+            let ds = crate::data::load_dataset(&cfg.dataset, 64, 5).unwrap();
             let mut stage = BatchStage::for_config(&cfg);
             let batch: Vec<usize> = (0..cfg.batch).collect();
             crate::data::gather_batch_f32(

@@ -1,0 +1,339 @@
+//! The tap-producer seam: `NativeStep` executes every clip method
+//! against this interface, so a model family only has to provide
+//! batched forward/backward passes that expose per-layer activation
+//! ("tap") and delta matrices plus per-layer gradient assembly — the
+//! seven clipping strategies, the norm tricks, and the bench matrix
+//! then come for free.
+//!
+//! Two families ship today:
+//!   - `Mlp` (`native/mlp.rs`): dense layers; taps are the B x d
+//!     layer inputs, one row per example.
+//!   - `Cnn` (`native/conv.rs`): conv layers lowered to im2col patch
+//!     matrices over the same `gemm` kernels; taps are (B·P) x K
+//!     patch matrices, P rows per example.
+//!
+//! The norm methods expose the paper's two routes plus the bound that
+//! separates them:
+//!   - `sq_norms` — the exact per-example squared gradient norms every
+//!     clipping method uses (the tap trick on MLPs; the per-example
+//!     position reduction on conv, where taps of one example overlap).
+//!   - `gram_sq_norms` — the same exact quantity through the
+//!     Gram-matrix structure of paper Sec 5.2 (A·Aᵀ ∘ Δ·Δᵀ); on MLPs
+//!     this degenerates to the tap trick's diagonal, on conv the
+//!     off-diagonal (cross-position) terms are load-bearing.
+//!   - `tap_bound_sq_norms` — the plain row-norm product. Equal to
+//!     `sq_norms` on MLPs; on conv it is only an *upper bound*
+//!     (Cauchy–Schwarz over the overlapping patches), so it must never
+//!     be used to clip alongside methods that use the exact norm. Kept
+//!     for diagnostics and the tap-vs-gram ordering tests.
+//!
+//! An enum rather than a trait object: two families today, static
+//! dispatch, and the scratch type stays concrete per family.
+
+use super::conv::{self, ConvScratch, ConvSpec};
+use super::mlp::{self, BatchScratch, MlpSpec};
+use crate::runtime::manifest::ConfigSpec;
+use anyhow::{bail, Result};
+
+/// A model family's batched tap producer, parsed from a manifest
+/// config.
+pub enum TapModel {
+    Mlp(MlpSpec),
+    Cnn(ConvSpec),
+}
+
+/// Whole-batch forward/backward buffers for one `TapModel`.
+pub enum TapScratch {
+    Mlp(BatchScratch),
+    Cnn(ConvScratch),
+}
+
+impl TapModel {
+    /// Dispatch on the config's model family.
+    pub fn from_config(cfg: &ConfigSpec) -> Result<TapModel> {
+        match cfg.model.as_str() {
+            "mlp" => Ok(TapModel::Mlp(MlpSpec::from_config(cfg)?)),
+            "cnn" => Ok(TapModel::Cnn(ConvSpec::from_config(cfg)?)),
+            other => bail!(
+                "native backend has no tap producer for model family \
+                 {other:?} (config {})",
+                cfg.name
+            ),
+        }
+    }
+
+    pub fn family(&self) -> &'static str {
+        match self {
+            TapModel::Mlp(_) => "mlp",
+            TapModel::Cnn(_) => "cnn",
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        match self {
+            TapModel::Mlp(m) => m.batch,
+            TapModel::Cnn(m) => m.batch,
+        }
+    }
+
+    /// Flat input elements per example.
+    pub fn d_in(&self) -> usize {
+        match self {
+            TapModel::Mlp(m) => m.d_in,
+            TapModel::Cnn(m) => m.d_in,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            TapModel::Mlp(m) => m.n_classes,
+            TapModel::Cnn(m) => m.n_classes,
+        }
+    }
+
+    /// Check the param store's tensor count and per-tensor lengths
+    /// against the spec; `config` names the config in errors.
+    pub fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+        match self {
+            TapModel::Mlp(m) => m.validate_params(config, host),
+            TapModel::Cnn(m) => m.validate_params(config, host),
+        }
+    }
+
+    /// Flat gradient buffers in manifest order.
+    pub fn zero_grads(&self) -> Vec<Vec<f32>> {
+        match self {
+            TapModel::Mlp(m) => m.zero_grads(),
+            TapModel::Cnn(m) => m.zero_grads(),
+        }
+    }
+
+    pub fn new_scratch(&self, b: usize) -> TapScratch {
+        match self {
+            TapModel::Mlp(m) => TapScratch::Mlp(BatchScratch::for_spec(m, b)),
+            TapModel::Cnn(m) => TapScratch::Cnn(ConvScratch::for_spec(m, b)),
+        }
+    }
+
+    /// Batched forward over the staged batch; fills the scratch taps
+    /// and returns (f64 loss sum, correct-prediction count).
+    pub fn forward_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        labels: &[i32],
+        s: &mut TapScratch,
+    ) -> (f64, usize) {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
+                mlp::forward_batch(m, params, x, labels, s)
+            }
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
+                conv::forward_batch(m, params, x, labels, s)
+            }
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+
+    /// Batched backward (after `forward_batch`); `nu` runs the
+    /// reweighted pass (loss Σ_i nu_i·l_i).
+    pub fn backward_batch(
+        &self,
+        params: &[Vec<f32>],
+        labels: &[i32],
+        nu: Option<&[f32]>,
+        s: &mut TapScratch,
+    ) {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
+                mlp::backward_batch(m, params, labels, nu, s)
+            }
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
+                conv::backward_batch(m, params, labels, nu, s)
+            }
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+
+    /// Exact per-example squared gradient norms — what every clipping
+    /// method uses.
+    pub fn sq_norms(&self, x: &[f32], s: &TapScratch) -> Vec<f64> {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => mlp::tap_sq_norms(m, x, s),
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => conv::sq_norms(m, s),
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+
+    /// Exact per-example squared norms through the Gram-matrix
+    /// structure (paper Sec 5.2).
+    pub fn gram_sq_norms(&self, x: &[f32], s: &TapScratch) -> Vec<f64> {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
+                mlp::gram_sq_norms(m, x, s)
+            }
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => conv::gram_sq_norms(m, s),
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+
+    /// The row-norm-product bound: equal to `sq_norms` on MLPs, an
+    /// upper bound (tap ≥ gram) on conv. Diagnostics/tests only.
+    pub fn tap_bound_sq_norms(&self, x: &[f32], s: &TapScratch) -> Vec<f64> {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => mlp::tap_sq_norms(m, x, s),
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
+                conv::tap_bound_sq_norms(m, s)
+            }
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+
+    /// Scale example i's delta rows by nu_i in place (the
+    /// `reweight_direct` assembly).
+    pub fn scale_delta_rows(&self, nu: &[f32], s: &mut TapScratch) {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
+                mlp::scale_delta_rows(m, nu, s)
+            }
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
+                conv::scale_delta_rows(m, nu, s)
+            }
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+
+    /// Accumulate the batch-summed gradients from the current deltas;
+    /// `scale` fuses per-example clip factors into the reductions (the
+    /// `reweight_pallas` path).
+    pub fn grads_from_deltas(
+        &self,
+        x: &[f32],
+        s: &TapScratch,
+        scale: Option<&[f32]>,
+        grads: &mut [Vec<f32>],
+    ) {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
+                mlp::grads_from_deltas(m, x, s, scale, grads)
+            }
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
+                conv::grads_from_deltas(m, s, scale, grads)
+            }
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+
+    /// Materialize example i's full gradient (the multiLoss
+    /// structure), returning its squared norm.
+    pub fn materialize_grad_row(
+        &self,
+        x: &[f32],
+        s: &TapScratch,
+        i: usize,
+        out: &mut [Vec<f32>],
+    ) -> f64 {
+        match (self, s) {
+            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
+                mlp::materialize_grad_row(m, x, s, i, out)
+            }
+            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
+                conv::materialize_grad_row(m, s, i, out)
+            }
+            _ => unreachable!("tap scratch does not match the model family"),
+        }
+    }
+}
+
+/// Row-wise numerically stable softmax + cross-entropy over b x nc
+/// logits: fills `probs`, returns (f64 loss sum, correct-prediction
+/// count). Shared by every tap producer; the op order matches the
+/// scalar reference in `mlp.rs` exactly, so moving a family onto this
+/// helper changes no bits.
+pub fn softmax_xent_rows(
+    b: usize,
+    nc: usize,
+    logits: &[f32],
+    probs: &mut [f32],
+    labels: &[i32],
+) -> (f64, usize) {
+    debug_assert_eq!(logits.len(), b * nc);
+    debug_assert_eq!(probs.len(), b * nc);
+    debug_assert_eq!(labels.len(), b);
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    for r in 0..b {
+        let row = &logits[r * nc..(r + 1) * nc];
+        let prow = &mut probs[r * nc..(r + 1) * nc];
+        let mut m = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > m {
+                m = v;
+                argmax = j;
+            }
+        }
+        let mut sum = 0.0f64;
+        for (p, &z) in prow.iter_mut().zip(row.iter()) {
+            let e = ((z - m) as f64).exp();
+            *p = e as f32;
+            sum += e;
+        }
+        let inv = (1.0 / sum) as f32;
+        for p in prow.iter_mut() {
+            *p *= inv;
+        }
+        let y = labels[r] as usize;
+        let loss = sum.ln() as f32 - (row[y] - m);
+        loss_sum += loss as f64;
+        correct += usize::from(argmax == y);
+    }
+    (loss_sum, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn unknown_family_is_a_clear_error() {
+        let cfg = ConfigSpec {
+            name: "rnn1_mnist_b4".into(),
+            model: "rnn".into(),
+            dataset: "mnist".into(),
+            batch: 4,
+            n_classes: 10,
+            tags: vec![],
+            input_shape: vec![4, 1, 28, 28],
+            input_dtype: "f32".into(),
+            act_elems_per_example: 0,
+            conv: None,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![784, 10] },
+                ParamSpec { name: "b".into(), shape: vec![10] },
+            ],
+            artifacts: BTreeMap::new(),
+        };
+        let err = TapModel::from_config(&cfg).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rnn") && msg.contains("tap producer"), "{msg}");
+    }
+
+    #[test]
+    fn softmax_rows_match_uniform_at_zero_logits() {
+        let b = 3;
+        let nc = 4;
+        let logits = vec![0.0f32; b * nc];
+        let mut probs = vec![0.0f32; b * nc];
+        let labels = vec![1i32, 0, 3];
+        let (loss_sum, _) =
+            softmax_xent_rows(b, nc, &logits, &mut probs, &labels);
+        for &p in &probs {
+            assert!((p - 0.25).abs() < 1e-6);
+        }
+        let want = (4.0f64).ln() * b as f64;
+        assert!((loss_sum - want).abs() < 1e-5, "{loss_sum} vs {want}");
+    }
+}

@@ -283,3 +283,23 @@ fn infeasible_privacy_target_is_an_error_not_a_silent_fallback() {
     let err = train(&backend, &opts).unwrap_err();
     assert!(format!("{err:#}").contains("infeasible"));
 }
+
+/// An eval set smaller than one batch must be a hard error — the old
+/// hand-rolled eval path divided by zero batches and reported NaN
+/// loss/accuracy without complaint.
+#[test]
+fn eval_set_smaller_than_batch_is_an_error_not_nan() {
+    let backend = NativeBackend::new();
+    let cfg = backend.manifest().config("mlp2_mnist_b32").unwrap().clone();
+    let fwd = backend.load(&cfg, "fwd").unwrap();
+    let mut params = ParamStore::new(&cfg, None).unwrap();
+    let tiny = fastclip::data::load_dataset("mnist", 16, 0).unwrap(); // < 32
+    let err =
+        fastclip::coordinator::evaluate(fwd.as_ref(), &mut params, &tiny, &cfg)
+            .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("eval set") && msg.contains("16"),
+        "unhelpful error: {msg}"
+    );
+}

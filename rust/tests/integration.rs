@@ -3,11 +3,13 @@
 //! end-to-end training behaviour, and checkpointing.
 //!
 //! Everything in this file runs hermetically on the pure-Rust
-//! `NativeBackend` — no Python, no artifacts, no xla. Tests that need
-//! the compiled model zoo (CNN/RNN/transformer, the pallas/gram/direct
-//! kernel variants) run only when the crate is built with
-//! `--features pjrt` *and* $FASTCLIP_ARTIFACTS points at a manifest;
-//! otherwise they skip with an explanatory message instead of failing.
+//! `NativeBackend` — no Python, no artifacts, no xla — covering both
+//! native model families (dense MLPs and the im2col conv family).
+//! Tests that need the compiled model zoo (the RNN/transformer
+//! configs, plus CNN cross-checks against compiled HLO) run only when
+//! the crate is built with `--features pjrt` *and* $FASTCLIP_ARTIFACTS
+//! points at a manifest; otherwise they skip with an explanatory
+//! message instead of failing.
 
 use fastclip::coordinator::{
     stage_batch, train, ClipMethod, GradComputer, TrainOptions,
@@ -132,12 +134,14 @@ fn all_private_methods_agree_deep_mlp() {
     assert_equivalence(native(), "mlp4_mnist_b16", 1e-4);
 }
 
-/// The full native method matrix (ISSUE 2 acceptance): every private
-/// strategy — the paper's reweight, the Gram-norm variant, the
-/// one-backward direct assembly, the fused-GEMM pallas variant, the
-/// materialized multiloss, and the naive nxbp loop — produces the same
-/// clipped gradient and the same per-example norms on the same staged
-/// batch, within 1e-5.
+/// The full native method matrix: every private strategy — the
+/// paper's reweight, the Gram-norm variant, the one-backward direct
+/// assembly, the fused-GEMM pallas variant, the materialized
+/// multiloss, and the naive nxbp loop — produces the same clipped
+/// gradient and the same per-example norms on the same staged batch,
+/// within 1e-5. Covers both model families: dense MLPs and the conv
+/// family (im2col taps), where the norms flow through the exact
+/// per-example position reduction rather than the row-norm product.
 #[test]
 fn native_method_matrix_agrees() {
     let clip = 0.5;
@@ -148,7 +152,9 @@ fn native_method_matrix_agrees() {
         ClipMethod::MultiLoss,
         ClipMethod::NxBp,
     ];
-    for config in ["mlp2_mnist_b32", "mlp4_mnist_b16"] {
+    for config in
+        ["mlp2_mnist_b32", "mlp4_mnist_b16", "cnn2_mnist_b16", "cnn4_mnist_b16"]
+    {
         let rw = run_method(native(), config, ClipMethod::Reweight, clip);
         let rw_norms = rw.norms.as_ref().unwrap();
         for m in others {
@@ -193,7 +199,13 @@ fn prop_reported_norm_times_nu_within_clip() {
         ClipMethod::ReweightPallas,
         ClipMethod::MultiLoss,
     ];
-    let configs = ["mlp2_mnist_b16", "mlp4_mnist_b16", "mlp2_cifar10_b16"];
+    let configs = [
+        "mlp2_mnist_b16",
+        "mlp4_mnist_b16",
+        "mlp2_cifar10_b16",
+        "cnn2_mnist_b16",
+        "cnn2_cifar10_b16",
+    ];
     prop::check(12, |g| {
         let clip = g.f64_in(0.02, 2.0) as f32;
         let config = *g.choice(&configs);
@@ -228,6 +240,71 @@ fn prop_reported_norm_times_nu_within_clip() {
         }
         Ok(())
     });
+}
+
+/// The paper's Sec 5 equivalence on the *native* conv family: the
+/// same claim `all_private_methods_agree_cnn` makes against compiled
+/// artifacts, but hermetic — reweight == multiloss == nxbp on a CNN.
+#[test]
+fn all_private_methods_agree_cnn_native() {
+    assert_equivalence(native(), "cnn2_mnist_b16", 1e-4);
+}
+
+/// Norm-route ordering across the tap seam: the exact norms and the
+/// Gram-route norms agree on both families, and the row-norm-product
+/// tap bound is equal on MLPs (each example owns one tap row) but a
+/// strict overestimate on conv (an example's patches overlap) — the
+/// im2col subtlety the paper calls out, documented in DESIGN.md.
+#[test]
+fn tap_bound_equals_exact_on_mlp_dominates_on_conv() {
+    use fastclip::runtime::native::taps::TapModel;
+    for (config, is_conv) in [("mlp2_mnist_b16", false), ("cnn2_mnist_b16", true)]
+    {
+        let cfg = native().manifest().config(config).unwrap().clone();
+        let ds = data::load_dataset(&cfg.dataset, 256, 3).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        let batch: Vec<usize> = (0..cfg.batch).collect();
+        stage_batch(&ds, &batch, &mut stage);
+        let params =
+            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 5))).unwrap();
+        let model = TapModel::from_config(&cfg).unwrap();
+        let mut s = model.new_scratch(cfg.batch);
+        model.forward_batch(&params.host, &stage.feat_f32, &stage.labels, &mut s);
+        model.backward_batch(&params.host, &stage.labels, None, &mut s);
+        let exact = model.sq_norms(&stage.feat_f32, &s);
+        let gram = model.gram_sq_norms(&stage.feat_f32, &s);
+        let tap = model.tap_bound_sq_norms(&stage.feat_f32, &s);
+        for i in 0..cfg.batch {
+            assert!(
+                (exact[i] - gram[i]).abs() / gram[i].max(1e-9) < 1e-5,
+                "{config} example {i}: exact {} vs gram {}",
+                exact[i],
+                gram[i]
+            );
+            if is_conv {
+                assert!(
+                    tap[i] >= gram[i] * (1.0 - 1e-9),
+                    "{config} example {i}: tap bound {} below exact {}",
+                    tap[i],
+                    gram[i]
+                );
+            } else {
+                assert!(
+                    (tap[i] - gram[i]).abs() / gram[i].max(1e-9) < 1e-5,
+                    "{config} example {i}: tap {} != gram {} on an MLP",
+                    tap[i],
+                    gram[i]
+                );
+            }
+        }
+        if is_conv {
+            assert!(
+                (0..cfg.batch).any(|i| tap[i] > gram[i] * 1.0001),
+                "{config}: tap bound never strictly loose — patches \
+                 stopped overlapping?"
+            );
+        }
+    }
 }
 
 #[test]
