@@ -1,23 +1,30 @@
 //! Shared driver for the per-figure bench targets: wraps one
 //! (config, method) pair into a reusable "time one training step"
-//! closure with staged data and warm steps, over whatever `Backend`
-//! is available (PJRT artifacts when present, native otherwise).
+//! closure with staged data, a persistent `StepOut` arena, and warm
+//! steps, over whatever `Backend` is available (PJRT artifacts when
+//! present, native otherwise).
 //!
 //! Also home of the method-matrix runner behind `fastclip
 //! bench-matrix`, which produces the `BENCH_<backend>.json` trajectory
 //! artifact (per-method step times), the reweight-vs-nxbp speed check
 //! CI gates on, and the `BENCH_history.jsonl` trajectory: one compact
 //! record per run, appended via `append_history`, gated so a
-//! reweight@b128 step-time regression beyond `HISTORY_MAX_RATIO`
-//! versus the previous record fails the run loudly (the entry is
-//! still recorded, so the trajectory tracks reality and an outlier
-//! baseline self-heals).
+//! reweight@b128 **p50** step-time regression beyond
+//! `HISTORY_MAX_RATIO` versus the recent-history median fails the run
+//! loudly (the entry is still recorded, so the trajectory tracks
+//! reality and an outlier baseline self-heals). p50 rather than mean:
+//! CI smoke runs take a handful of iterations on shared VMs, and one
+//! descheduled iteration should not trip — or mask — a gate. Each
+//! record also carries `steps_alloc_free`: whether the warm reweight
+//! step path performed zero heap allocations (the `StepOut` arena
+//! contract), probed at bench time via the counting allocator.
 
 use crate::bench::BenchOpts;
 use crate::coordinator::{stage_batch, ClipMethod, GradComputer};
 use crate::data;
 use crate::runtime::{
     default_backend, init_params_glorot, Backend, BatchStage, ParamStore,
+    StepOut,
 };
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -28,6 +35,9 @@ pub struct StepRunner {
     computer: GradComputer,
     params: ParamStore,
     stage: BatchStage,
+    /// persistent output arena — reused every step, so the timed path
+    /// matches the trainer's (allocation-free on native)
+    out: StepOut,
     clip: f32,
     pub batch: usize,
 }
@@ -64,10 +74,12 @@ impl StepRunner {
         let params =
             ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 5)))?;
         let computer = GradComputer::new(backend, config, method)?;
+        let out = computer.new_out();
         Ok(StepRunner {
             computer,
             params,
             stage,
+            out,
             clip: 1.0,
             batch: cfg.batch,
         })
@@ -75,11 +87,31 @@ impl StepRunner {
 
     /// One full gradient computation (what the figures time).
     pub fn step(&mut self) {
-        let out = self
-            .computer
-            .compute(&mut self.params, &self.stage, self.clip)
+        self.computer
+            .compute(&mut self.params, &self.stage, self.clip, &mut self.out)
             .expect("bench step failed");
-        std::hint::black_box(out.loss);
+        std::hint::black_box(self.out.loss);
+    }
+
+    /// Probe the arena contract: warm the step, then count heap
+    /// allocations across `iters` further steps. Zero means the whole
+    /// gradient path (step + coordinator) ran out of reused buffers.
+    /// Process-global counter — call from a single-threaded phase (the
+    /// step's own rayon workers are part of the measurement, which is
+    /// the point). The probe body runs inside one rayon scope so the
+    /// pool's external-injection plumbing (which may allocate queue
+    /// blocks) stays outside the measured window.
+    pub fn probe_alloc_free(&mut self, iters: usize) -> bool {
+        let mut clean = false;
+        rayon::scope(|_| {
+            self.step(); // warm: scratch, lazy buffers, arena
+            let before = crate::util::alloc::allocation_count();
+            for _ in 0..iters {
+                self.step();
+            }
+            clean = crate::util::alloc::allocation_count() == before;
+        });
+        clean
     }
 }
 
@@ -115,6 +147,10 @@ pub struct MatrixReport {
     pub backend: String,
     pub smoke: bool,
     pub entries: Vec<MatrixEntry>,
+    /// Whether every probed warm reweight step ran without a single
+    /// heap allocation. `None` when no probe ran (non-native backend,
+    /// or a method set without reweight).
+    pub steps_alloc_free: Option<bool>,
 }
 
 impl MatrixReport {
@@ -168,13 +204,33 @@ impl MatrixReport {
         Ok(())
     }
 
+    /// The arena gate: the alloc-free probe must have run and found
+    /// the warm reweight step path allocation-free.
+    pub fn check_steps_alloc_free(&self) -> Result<()> {
+        match self.steps_alloc_free {
+            Some(true) => Ok(()),
+            Some(false) => anyhow::bail!(
+                "warm reweight steps performed heap allocations — the \
+                 StepOut arena contract regressed (see tests/no_alloc.rs \
+                 for the per-method breakdown)"
+            ),
+            None => anyhow::bail!(
+                "no alloc-free probe ran (non-native backend or no reweight \
+                 entries) — the check would be vacuous"
+            ),
+        }
+    }
+
     /// Compact record for the `BENCH_history.jsonl` trajectory: the
-    /// reweight step means on every batch-128 config in this run
-    /// (the paper's headline operating point), plus provenance.
+    /// reweight step p50s (and, for provenance/back-compat, means) on
+    /// every batch-128 config in this run — the paper's headline
+    /// operating point — plus the alloc-free probe result.
     pub fn history_entry(&self) -> Json {
+        let mut p50s = Json::obj();
         let mut means = Json::obj();
         for e in &self.entries {
             if e.batch == 128 && e.method == ClipMethod::Reweight {
+                p50s.set(&e.config, e.p50_ms.into());
                 means.set(&e.config, e.mean_ms.into());
             }
         }
@@ -185,20 +241,28 @@ impl MatrixReport {
         if let Ok(sha) = std::env::var("GITHUB_SHA") {
             o.set("commit", sha.into());
         }
+        o.set("reweight_b128_p50_ms", p50s);
         o.set("reweight_b128_ms", means);
+        if let Some(af) = self.steps_alloc_free {
+            o.set("steps_alloc_free", af.into());
+        }
         o
     }
 
-    /// The trajectory gate: no batch-128 config's reweight step may be
-    /// more than `max_ratio`x its **median** over the recent history
-    /// entries in `prevs`. The median (rather than the single last
-    /// entry) makes the gate robust in both directions: one
-    /// anomalously fast run cannot become a baseline that fails every
-    /// later run, and one recorded regression cannot be laundered into
-    /// the baseline by simply re-running the failed job. Configs
-    /// absent from the history are skipped — the matrix can grow —
-    /// and malformed records contribute nothing rather than blocking
-    /// every future run.
+    /// The trajectory gate: no batch-128 config's reweight **p50**
+    /// step time may be more than `max_ratio`x its **median** over the
+    /// recent history entries in `prevs`. p50 (not mean) on both sides
+    /// cuts smoke-run noise: one descheduled iteration in a 5-iter CI
+    /// run inflates the mean by its full cost but leaves the median
+    /// untouched. The median baseline makes the gate robust in both
+    /// directions: one anomalously fast run cannot become a baseline
+    /// that fails every later run, and one recorded regression cannot
+    /// be laundered into the baseline by simply re-running the failed
+    /// job. History entries from before the p50 migration contribute
+    /// their recorded mean (`reweight_b128_ms`) instead of being
+    /// skipped. Configs absent from the history are skipped — the
+    /// matrix can grow — and malformed records contribute nothing
+    /// rather than blocking every future run.
     pub fn check_history_regression(
         &self,
         prevs: &[Json],
@@ -211,7 +275,13 @@ impl MatrixReport {
             let mut samples: Vec<f64> = prevs
                 .iter()
                 .filter_map(|p| {
-                    p.get("reweight_b128_ms").get(&e.config).as_f64()
+                    p.get("reweight_b128_p50_ms")
+                        .get(&e.config)
+                        .as_f64()
+                        .or_else(|| {
+                            // legacy record: mean-gated era
+                            p.get("reweight_b128_ms").get(&e.config).as_f64()
+                        })
                 })
                 .filter(|&v| v > 0.0)
                 .collect();
@@ -221,12 +291,12 @@ impl MatrixReport {
             samples.sort_by(|a, b| a.total_cmp(b));
             let baseline = samples[samples.len() / 2];
             anyhow::ensure!(
-                e.mean_ms <= baseline * max_ratio,
-                "{}: reweight@b128 step time {:.3} ms is more than {:.0}% \
-                 over the recent BENCH_history median {:.3} ms \
+                e.p50_ms <= baseline * max_ratio,
+                "{}: reweight@b128 p50 step time {:.3} ms is more than \
+                 {:.0}% over the recent BENCH_history median {:.3} ms \
                  ({} samples)",
                 e.config,
-                e.mean_ms,
+                e.p50_ms,
                 (max_ratio - 1.0) * 100.0,
                 baseline,
                 samples.len()
@@ -263,6 +333,9 @@ impl MatrixReport {
         root.set("suite", "bench_matrix".into());
         root.set("backend", self.backend.as_str().into());
         root.set("smoke", self.smoke.into());
+        if let Some(af) = self.steps_alloc_free {
+            root.set("steps_alloc_free", af.into());
+        }
         root.set("entries", Json::Arr(entries));
         root.set("reweight_speedup_vs_nxbp", speedups);
         root
@@ -270,7 +343,8 @@ impl MatrixReport {
 }
 
 /// Step-time regression budget for the history gate: fail when a
-/// reweight@b128 step exceeds 1.25x the recent-history median (>25%).
+/// reweight@b128 p50 step exceeds 1.25x the recent-history median
+/// (>25%).
 pub const HISTORY_MAX_RATIO: f64 = 1.25;
 
 /// How many trailing history entries feed the gate's median baseline.
@@ -314,7 +388,9 @@ pub fn append_history(
 /// Time every (config, method) cell: warmup, then iterate under
 /// `opts`'s iteration/time bounds. Methods a config cannot run
 /// (e.g. a backend without the artifact) fail hard — the matrix is
-/// the support claim, so a hole is an error, not a skip.
+/// the support claim, so a hole is an error, not a skip. On the
+/// native backend, every reweight cell is additionally probed for the
+/// zero-allocation warm path (`steps_alloc_free`).
 pub fn run_matrix(
     backend: &dyn Backend,
     configs: &[String],
@@ -323,6 +399,12 @@ pub fn run_matrix(
     smoke: bool,
 ) -> Result<MatrixReport> {
     let mut entries = Vec::with_capacity(configs.len() * methods.len());
+    // the probe only holds on native — PJRT marshalling allocates —
+    // and only measures anything when the counting allocator is
+    // installed (`alloc-count` feature, on by default)
+    let probe =
+        backend.name() == "native" && crate::util::alloc::counting_enabled();
+    let mut alloc_free: Option<bool> = None;
     for config in configs {
         for &method in methods {
             let mut runner = StepRunner::new(backend, config, method)?;
@@ -334,6 +416,15 @@ pub fn run_matrix(
                 s.mean * 1e3,
                 times.len()
             );
+            if probe && method == ClipMethod::Reweight {
+                let clean = runner.probe_alloc_free(3);
+                if !clean {
+                    crate::log_info!(
+                        "bench {config}/reweight: warm step path ALLOCATED"
+                    );
+                }
+                alloc_free = Some(alloc_free.unwrap_or(true) && clean);
+            }
             entries.push(MatrixEntry {
                 config: config.clone(),
                 batch: runner.batch,
@@ -349,6 +440,7 @@ pub fn run_matrix(
         backend: backend.name().to_string(),
         smoke,
         entries,
+        steps_alloc_free: alloc_free,
     })
 }
 
@@ -391,27 +483,37 @@ mod tests {
                 mk(ClipMethod::Reweight, 1.0),
                 mk(ClipMethod::NxBp, 5.0),
             ],
+            steps_alloc_free: Some(true),
         };
         assert!(r.check_reweight_beats_nxbp().is_ok());
+        assert!(r.check_steps_alloc_free().is_ok());
         assert!(
             (r.reweight_speedup("mlp4_mnist_b128").unwrap() - 5.0).abs()
                 < 1e-9
         );
         let j = r.to_json().to_string();
         assert!(j.contains("reweight") && j.contains("mlp4_mnist_b128"));
+        assert!(j.contains("steps_alloc_free"));
         // reweight slower than nxbp => the gate trips
         r.entries[0].mean_ms = 10.0;
         assert!(r.check_reweight_beats_nxbp().is_err());
+        // an allocating warm path trips the arena gate; an unprobed
+        // run must not pass vacuously
+        r.steps_alloc_free = Some(false);
+        assert!(r.check_steps_alloc_free().is_err());
+        r.steps_alloc_free = None;
+        assert!(r.check_steps_alloc_free().is_err());
         // an empty matrix must not pass vacuously
         let empty = MatrixReport {
             backend: "native".into(),
             smoke: true,
             entries: Vec::new(),
+            steps_alloc_free: None,
         };
         assert!(empty.check_reweight_beats_nxbp().is_err());
     }
 
-    fn report_with(config: &str, reweight_ms: f64) -> MatrixReport {
+    fn entry_with(config: &str, mean_ms: f64, p50_ms: f64) -> MatrixReport {
         MatrixReport {
             backend: "native".into(),
             smoke: true,
@@ -419,12 +521,17 @@ mod tests {
                 config: config.into(),
                 batch: 128,
                 method: ClipMethod::Reweight,
-                mean_ms: reweight_ms,
-                p50_ms: reweight_ms,
-                p95_ms: reweight_ms,
+                mean_ms,
+                p50_ms,
+                p95_ms: mean_ms,
                 iters: 3,
             }],
+            steps_alloc_free: Some(true),
         }
+    }
+
+    fn report_with(config: &str, reweight_ms: f64) -> MatrixReport {
+        entry_with(config, reweight_ms, reweight_ms)
     }
 
     #[test]
@@ -470,6 +577,31 @@ mod tests {
             .is_err());
     }
 
+    /// The gate compares p50s, not means: an entry whose mean is blown
+    /// up by one slow iteration passes as long as its p50 holds, and a
+    /// p50 regression trips even under an innocent-looking mean.
+    #[test]
+    fn history_gate_is_p50_based() {
+        let prevs = vec![report_with("cnn2_mnist_b128", 10.0).history_entry()];
+        // mean 3x the baseline, p50 fine => passes
+        assert!(entry_with("cnn2_mnist_b128", 30.0, 10.0)
+            .check_history_regression(&prevs, HISTORY_MAX_RATIO)
+            .is_ok());
+        // mean fine, p50 regressed => trips
+        assert!(entry_with("cnn2_mnist_b128", 10.0, 30.0)
+            .check_history_regression(&prevs, HISTORY_MAX_RATIO)
+            .is_err());
+        // legacy history entries (mean-only records) still gate: strip
+        // the p50 field to simulate a pre-migration line
+        let legacy = Json::parse(
+            r#"{"reweight_b128_ms": {"cnn2_mnist_b128": 10.0}}"#,
+        )
+        .unwrap();
+        assert!(entry_with("cnn2_mnist_b128", 10.0, 30.0)
+            .check_history_regression(&[legacy], HISTORY_MAX_RATIO)
+            .is_err());
+    }
+
     #[test]
     fn history_file_appends_and_flags_regressions() {
         let path = std::env::temp_dir().join("fastclip_bench_history_test.jsonl");
@@ -487,9 +619,10 @@ mod tests {
         assert_eq!(after.lines().count(), 3);
         let last = Json::parse(after.lines().last().unwrap()).unwrap();
         assert_eq!(
-            last.get("reweight_b128_ms").get("cnn2_mnist_b128").as_f64(),
+            last.get("reweight_b128_p50_ms").get("cnn2_mnist_b128").as_f64(),
             Some(20.0)
         );
+        assert_eq!(last.get("steps_alloc_free").as_bool(), Some(true));
         // a re-run at the regressed speed still fails: the median of
         // {10, 11, 20} is 11, so the recorded regression has not
         // become its own baseline
@@ -502,7 +635,7 @@ mod tests {
         // a corrupt trailing line (half-written record) is skipped by
         // the parser instead of permanently failing the gate
         let mut text = std::fs::read_to_string(&path).unwrap();
-        text.push_str("{\"reweight_b128_ms\": {\"cnn2_mni");
+        text.push_str("{\"reweight_b128_p50_ms\": {\"cnn2_mni");
         std::fs::write(&path, &text).unwrap();
         // median of the parseable window {11,20,19,12} is 19;
         // 13 <= 19*1.25 passes — the corrupt line cost nothing
@@ -512,7 +645,7 @@ mod tests {
     }
 
     #[test]
-    fn run_matrix_times_native_methods() {
+    fn run_matrix_times_native_methods_and_probes_alloc() {
         let backend = crate::runtime::NativeBackend::new();
         let opts = BenchOpts {
             warmup_iters: 1,
@@ -531,6 +664,10 @@ mod tests {
         assert_eq!(report.entries.len(), 2);
         assert!(report.entries.iter().all(|e| e.mean_ms > 0.0));
         assert_eq!(report.backend, "native");
+        // the reweight cell was probed; whether it is clean is pinned
+        // (strictly) by tests/no_alloc.rs — here we only require the
+        // probe to have run on a native matrix containing reweight
+        assert!(report.steps_alloc_free.is_some());
     }
 
     #[test]

@@ -20,8 +20,12 @@
 //!   NxBp           — TF-Privacy-style loop: one backward per example
 //!                    on a batch-1 step; Rust clips and accumulates.
 //!
-//! Everything here goes through the `Backend`/`StepFn` traits, so the
-//! same dispatch drives the native and PJRT implementations.
+//! Everything here goes through the `Backend`/`StepFn` traits and the
+//! caller-owned `StepOut` arena (`compute` writes into the arena the
+//! caller reuses across steps), so the same dispatch drives the
+//! native and PJRT implementations with no per-step allocation on the
+//! coordinator side. The nxBP loop keeps its own persistent arena for
+//! the per-example naive1 outputs.
 
 use crate::runtime::{
     Backend, BatchStage, ConfigSpec, ParamStore, StepFn, StepOut,
@@ -106,15 +110,21 @@ pub struct GradComputer {
     pub method: ClipMethod,
     pub cfg: ConfigSpec,
     exe: Arc<dyn StepFn>,
-    /// NxBp only: the batch-1 config + staging buffer
+    /// gradient arena layout of the config's parameter tensors
+    param_lens: Vec<usize>,
+    /// NxBp only: the batch-1 config + persistent staging/output state
     naive: Option<NaiveLoop>,
 }
 
+/// Persistent nxBP loop state: the batch-1 staging buffers, the arena
+/// the per-example naive1 steps write into, and the norm collection
+/// buffer — all reused across steps so the loop allocates nothing
+/// warm.
 struct NaiveLoop {
     cfg: ConfigSpec,
     stage: BatchStage,
-    /// gradient accumulator, one vec per param
-    acc: Vec<Vec<f32>>,
+    out: StepOut,
+    norms: Vec<f32>,
 }
 
 impl GradComputer {
@@ -124,6 +134,8 @@ impl GradComputer {
         method: ClipMethod,
     ) -> Result<GradComputer> {
         let cfg = backend.manifest().config(config)?.clone();
+        let param_lens: Vec<usize> =
+            cfg.params.iter().map(|p| p.elems()).collect();
         let (exe, naive) = if method == ClipMethod::NxBp {
             let ncfg = backend
                 .manifest()
@@ -132,19 +144,23 @@ impl GradComputer {
                 .clone();
             let exe = backend.load(&ncfg, "naive1")?;
             let stage = BatchStage::for_config(&ncfg);
-            let acc = ncfg
-                .params
-                .iter()
-                .map(|p| vec![0.0f32; p.elems()])
-                .collect();
-            (exe, Some(NaiveLoop { cfg: ncfg, stage, acc }))
+            let out = StepOut::for_config(&ncfg);
+            let norms = Vec::with_capacity(cfg.batch);
+            (exe, Some(NaiveLoop { cfg: ncfg, stage, out, norms }))
         } else {
             (backend.load(&cfg, method.artifact())?, None)
         };
-        Ok(GradComputer { method, cfg, exe, naive })
+        Ok(GradComputer { method, cfg, exe, param_lens, naive })
     }
 
-    /// Compute the (clipped, averaged) gradient for the staged batch.
+    /// A fresh output arena sized for this computer's config — the
+    /// caller holds it and passes it to every `compute`.
+    pub fn new_out(&self) -> StepOut {
+        StepOut::for_config(&self.cfg)
+    }
+
+    /// Compute the (clipped, averaged) gradient for the staged batch
+    /// into the caller-owned arena.
     ///
     /// For NxBp, `stage` holds the full batch; the loop re-stages one
     /// example at a time into the batch-1 buffers.
@@ -153,15 +169,18 @@ impl GradComputer {
         params: &mut ParamStore,
         stage: &BatchStage,
         clip: f32,
-    ) -> Result<StepOut> {
+        out: &mut StepOut,
+    ) -> Result<()> {
         match self.method {
-            ClipMethod::NonPrivate => self.exe.run(params, stage, None),
+            ClipMethod::NonPrivate => self.exe.run_into(params, stage, None, out),
             ClipMethod::Reweight
             | ClipMethod::ReweightPallas
             | ClipMethod::ReweightGram
             | ClipMethod::ReweightDirect
-            | ClipMethod::MultiLoss => self.exe.run(params, stage, Some(clip)),
-            ClipMethod::NxBp => self.nxbp_loop(params, stage, clip),
+            | ClipMethod::MultiLoss => {
+                self.exe.run_into(params, stage, Some(clip), out)
+            }
+            ClipMethod::NxBp => self.nxbp_loop(params, stage, clip, out),
         }
     }
 
@@ -174,7 +193,8 @@ impl GradComputer {
         params: &mut ParamStore,
         stage: &BatchStage,
         clip: f32,
-    ) -> Result<StepOut> {
+        out: &mut StepOut,
+    ) -> Result<()> {
         let naive = self.naive.as_mut().expect("nxbp state");
         let tau = self.cfg.batch;
         let d = naive.cfg.input_elems(); // per-example elems (batch 1)
@@ -195,10 +215,9 @@ impl GradComputer {
             self.cfg.name,
             tau * d
         );
-        for a in naive.acc.iter_mut() {
-            a.iter_mut().for_each(|x| *x = 0.0);
-        }
-        let mut norms = Vec::with_capacity(tau);
+        // the caller's arena accumulates Σ_i nu_i·g_i directly
+        out.reset(&self.param_lens);
+        naive.norms.clear();
         // f64: the batched paths accumulate loss in f64, and the
         // nxbp-vs-reweight loss equivalence must hold at large tau
         let mut loss_sum = 0.0f64;
@@ -211,12 +230,12 @@ impl GradComputer {
                     .copy_from_slice(&stage.feat_i32[i * d..(i + 1) * d]);
             }
             naive.stage.labels[0] = stage.labels[i];
-            let out = self.exe.run(params, &naive.stage, None)?;
+            self.exe.run_into(params, &naive.stage, None, &mut naive.out)?;
             // A missing norm MUST be a hard error: defaulting it to 0
             // would make nu = 1 and silently add an *unclipped*
             // gradient — the noise calibrated for sensitivity `clip`
             // would no longer cover it, voiding the DP guarantee.
-            let norm = match out.norms.as_ref().and_then(|n| n.first()) {
+            let norm = match naive.out.norms().and_then(|n| n.first()) {
                 Some(&n) => n,
                 None => anyhow::bail!(
                     "nxbp: the naive1 step for config {} returned no \
@@ -227,26 +246,14 @@ impl GradComputer {
                 ),
             };
             let nu = crate::runtime::clip_factor(norm, clip);
-            for (acc, g) in naive.acc.iter_mut().zip(&out.grads) {
-                for (a, &gi) in acc.iter_mut().zip(g) {
-                    *a += nu * gi;
-                }
-            }
-            norms.push(norm);
-            loss_sum += out.loss as f64;
+            out.grads.add_scaled(&naive.out.grads, nu);
+            naive.norms.push(norm);
+            loss_sum += naive.out.loss as f64;
         }
-        let inv_tau = 1.0 / tau as f32;
-        let grads: Vec<Vec<f32>> = naive
-            .acc
-            .iter()
-            .map(|a| a.iter().map(|&x| x * inv_tau).collect())
-            .collect();
-        Ok(StepOut {
-            grads,
-            loss: (loss_sum / tau as f64) as f32,
-            norms: Some(norms),
-            correct: None,
-        })
+        out.grads.scale(1.0 / tau as f32);
+        out.set_norms(&naive.norms);
+        out.loss = (loss_sum / tau as f64) as f32;
+        Ok(())
     }
 
     pub fn compile_ms(&self) -> f64 {
@@ -291,8 +298,9 @@ mod tests {
         let mut params = ParamStore::new(&cfg, None).unwrap();
         let mut stage = BatchStage::for_config(&cfg);
         stage.feat_f32.truncate(784 * 30); // 30 of 32 examples staged
+        let mut out = computer.new_out();
         let err = computer
-            .compute(&mut params, &stage, 1.0)
+            .compute(&mut params, &stage, 1.0, &mut out)
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("nxbp") && msg.contains("stage"), "{msg}");

@@ -144,6 +144,9 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
     };
 
     let mut stage = BatchStage::for_config(&cfg);
+    // one output arena for the whole run: the step resets it each
+    // call, so the warm loop performs zero per-step heap allocation
+    let mut out = computer.new_out();
     let mut metrics = Metrics::new();
     let noise_std = noise_stddev_for_mean(sigma, opts.clip, tau);
 
@@ -162,16 +165,16 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
         t.stop(&mut metrics, Phase::Gather);
 
         let t = PhaseTimer::start();
-        let out = computer.compute(&mut params, &stage, opts.clip as f32)?;
+        computer.compute(&mut params, &stage, opts.clip as f32, &mut out)?;
         t.stop(&mut metrics, Phase::Execute);
 
-        let mut grads = out.grads;
         if opts.method.is_private() {
             let t = PhaseTimer::start();
             // §Perf L3 iteration 3: parallel chunked polar-method noise
-            // (was: sequential Box-Muller at 68% of step time).
+            // (was: sequential Box-Muller at 68% of step time) — one
+            // flat pass over the arena's gradient buffer.
             crate::rng::add_noise_parallel(
-                &mut grads,
+                out.grads.flat_mut(),
                 noise_std,
                 opts.seed,
                 step,
@@ -181,7 +184,7 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
         }
 
         let t = PhaseTimer::start();
-        opt.step(&mut params.host, &grads);
+        opt.step(&mut params.host, &out.grads);
         params.mark_dirty();
         t.stop(&mut metrics, Phase::Update);
 
@@ -280,6 +283,11 @@ pub fn stage_batch(ds: &Dataset, batch: &[usize], stage: &mut BatchStage) {
 /// hand-built duplicate that could drift from the config's shapes. An
 /// eval set smaller than one batch is a hard error: it would yield
 /// zero batches and a silent NaN loss/accuracy.
+///
+/// Accuracy is integer-exact: the fwd step reports the
+/// correct-prediction *count* (`u32`), summed here in `u64` and
+/// divided once by the number of evaluated examples — no float
+/// accumulation of counts.
 pub fn evaluate(
     fwd: &dyn StepFn,
     params: &mut ParamStore,
@@ -302,16 +310,18 @@ pub fn evaluate(
     );
     let n_batches = eval_ds.n / tau;
     let mut stage = BatchStage::for_config(cfg);
-    let (mut loss_sum, mut correct_sum) = (0.0f32, 0.0f32);
+    let mut out = crate::runtime::StepOut::for_config(cfg);
+    let mut loss_sum = 0.0f32;
+    let mut correct_sum = 0u64;
     for b in 0..n_batches {
         let batch: Vec<usize> = (b * tau..(b + 1) * tau).collect();
         stage_batch(eval_ds, &batch, &mut stage);
-        let out = fwd.run(params, &stage, None)?;
+        fwd.run_into(params, &stage, None, &mut out)?;
         loss_sum += out.loss;
-        correct_sum += out.correct.unwrap_or(0.0);
+        correct_sum += u64::from(out.correct.unwrap_or(0));
     }
     Ok((
         loss_sum / n_batches as f32,
-        correct_sum / (n_batches * tau) as f32,
+        correct_sum as f32 / (n_batches * tau) as f32,
     ))
 }

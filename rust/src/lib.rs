@@ -6,13 +6,15 @@
 //! driving pluggable execution backends through `runtime::Backend`:
 //!
 //!   - `runtime::native::NativeBackend` (default, always on): pure-Rust
-//!     *batched* execution for the MLP config family — activations and
-//!     deltas as B x d matrices over the cache-blocked rayon GEMM
-//!     kernels in `runtime::native::gemm`, bitwise deterministic, all
-//!     seven clip methods (reweight, gram, direct, pallas-fused,
-//!     multiloss, nxbp, nonprivate). Tier-1 (`cargo build --release
-//!     && cargo test -q`) runs entirely on this backend — no Python,
-//!     no artifacts, no xla.
+//!     *batched* execution through an open `ModelFamily` registry
+//!     (dense MLPs + im2col conv built in) — activations and deltas as
+//!     batched matrices over the cache-blocked rayon GEMM kernels in
+//!     `runtime::native::gemm`, bitwise deterministic, all seven clip
+//!     methods (reweight, gram, direct, pallas-fused, multiloss, nxbp,
+//!     nonprivate), writing into a caller-owned `StepOut` arena so the
+//!     warm step path allocates nothing. Tier-1 (`cargo build
+//!     --release && cargo test -q`) runs entirely on this backend — no
+//!     Python, no artifacts, no xla.
 //!
 //!   - `runtime::engine::Engine` (cargo feature `pjrt`): executes AOT
 //!     HLO-text artifacts via the PJRT C API. The artifacts come from

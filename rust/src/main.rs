@@ -65,10 +65,13 @@ USAGE: fastclip <subcommand> [flags]
               [--out FILE] [--check] [--history FILE]
               times every (config, method) step and writes the
               BENCH_<backend>.json trajectory artifact; --check fails
-              unless reweight beats nxbp on every batch-128 config;
-              --history appends a compact record to a jsonl trajectory
-              and fails on a >25% reweight@b128 step-time regression
-              versus the median of that file's recent entries
+              unless reweight beats nxbp on every batch-128 config and
+              (on the native backend) the warm reweight step path ran
+              with zero heap allocations; --history appends a compact
+              record (p50s + steps_alloc_free) to a jsonl trajectory
+              and fails on a >25% reweight@b128 p50 step-time
+              regression versus the median of that file's recent
+              entries
   accountant  --q F --sigma F --steps N [--delta F]
               | --calibrate --q F --steps N --eps F [--delta F]
   memory      --config NAME [--budget-gib F]
@@ -174,13 +177,15 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
         &cfg,
         Some(&fastclip::runtime::init_params_glorot(&cfg, 0)),
     )?;
+    // one arena for every timed step (the trainer's shape)
+    let mut out = computer.new_out();
     // warmup (includes compile)
-    computer.compute(&mut params, &stage, 1.0)?;
+    computer.compute(&mut params, &stage, 1.0, &mut out)?;
     log_info!("compile took {:.0} ms", computer.compile_ms());
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = std::time::Instant::now();
-        computer.compute(&mut params, &stage, 1.0)?;
+        computer.compute(&mut params, &stage, 1.0, &mut out)?;
         times.push(t.elapsed().as_secs_f64());
     }
     let s = fastclip::util::stats::Summary::of(&times);
@@ -251,6 +256,17 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
     if args.bool("check") {
         report.check_reweight_beats_nxbp()?;
         println!("check passed: reweight beats nxbp at batch 128");
+        // the zero-allocation arena contract only holds (and is only
+        // probed) on the native backend — PJRT marshalling allocates —
+        // and only when the counting allocator is installed: a
+        // no-default-features build skips the gate instead of failing
+        // on an unmeasurable probe
+        if backend.name() == "native"
+            && fastclip::util::alloc::counting_enabled()
+        {
+            report.check_steps_alloc_free()?;
+            println!("check passed: warm reweight steps are allocation-free");
+        }
     }
     if let Some(hist) = args.str_opt("history") {
         fastclip::bench::driver::append_history(

@@ -4,6 +4,7 @@
 //! average plus Gaussian noise.
 
 use super::Optimizer;
+use crate::runtime::GradVec;
 
 pub struct Adam {
     pub lr: f64,
@@ -38,8 +39,8 @@ impl Adam {
 }
 
 impl Optimizer for Adam {
-    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
-        assert_eq!(params.len(), grads.len());
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &GradVec) {
+        assert_eq!(params.len(), grads.n_params());
         self.ensure_state(params);
         self.t += 1;
         let (b1, b2) = (self.beta1 as f32, self.beta2 as f32);
@@ -49,7 +50,7 @@ impl Optimizer for Adam {
         let alpha = (self.lr * bc2.sqrt() / bc1) as f32;
         let eps = self.eps as f32;
         for k in 0..params.len() {
-            let (p, g) = (&mut params[k], &grads[k]);
+            let (p, g) = (&mut params[k], grads.param(k));
             let (m, v) = (&mut self.m[k], &mut self.v[k]);
             assert_eq!(p.len(), g.len());
             for i in 0..p.len() {
@@ -74,7 +75,7 @@ mod tests {
         // With m=v=0: m1 = (1-b1) g, v1 = (1-b2) g^2;
         // mhat = g, vhat = g^2; update = lr * g / (|g| + eps) ~ lr*sign(g)
         let mut p = vec![vec![1.0f32]];
-        let g = vec![vec![0.5f32]];
+        let g = GradVec::from_vecs(&[vec![0.5f32]]);
         let mut opt = Adam::new(0.001);
         opt.step(&mut p, &g);
         assert!((p[0][0] - (1.0 - 0.001)).abs() < 1e-5, "{}", p[0][0]);
@@ -85,7 +86,7 @@ mod tests {
         let mut p = vec![vec![-4.0f32]];
         let mut opt = Adam::new(0.05);
         for _ in 0..2000 {
-            let g = vec![vec![2.0 * (p[0][0] - 3.0)]];
+            let g = GradVec::from_vecs(&[vec![2.0 * (p[0][0] - 3.0)]]);
             opt.step(&mut p, &g);
         }
         assert!((p[0][0] - 3.0).abs() < 1e-2, "{}", p[0][0]);
@@ -94,7 +95,7 @@ mod tests {
     #[test]
     fn state_tracks_multiple_tensors() {
         let mut p = vec![vec![0.0f32; 3], vec![0.0f32; 2]];
-        let g = vec![vec![1.0f32; 3], vec![-1.0f32; 2]];
+        let g = GradVec::from_vecs(&[vec![1.0f32; 3], vec![-1.0f32; 2]]);
         let mut opt = Adam::new(0.1);
         for _ in 0..10 {
             opt.step(&mut p, &g);
@@ -112,8 +113,8 @@ mod tests {
         let mut p = vec![vec![0.0f32; 16]];
         let mut opt = Adam::new(0.001);
         for _ in 0..500 {
-            let mut g = vec![vec![0.0f32; 16]];
-            gauss.add_noise_f32(&mut g[0], 10.0);
+            let mut g = GradVec::with_layout(&[16]);
+            gauss.add_noise_f32(g.param_mut(0), 10.0);
             opt.step(&mut p, &g);
         }
         assert!(p[0].iter().all(|x| x.is_finite()));

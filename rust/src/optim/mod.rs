@@ -13,11 +13,13 @@ pub mod sgd;
 pub use adam::Adam;
 pub use sgd::Sgd;
 
+use crate::runtime::GradVec;
+
 /// A first-order optimizer over per-tensor parameter vectors.
 pub trait Optimizer {
-    /// In-place update with (possibly noisy) gradients, one slice per
-    /// parameter tensor, same order/lengths as `params`.
-    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]);
+    /// In-place update with the (possibly noisy) gradient arena —
+    /// per-parameter views in the same order/lengths as `params`.
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &GradVec);
 
     fn name(&self) -> &'static str;
 }

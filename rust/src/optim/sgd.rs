@@ -1,6 +1,7 @@
 //! Vanilla SGD: theta <- theta - eta * g  (paper Sec 3.1 update rule).
 
 use super::Optimizer;
+use crate::runtime::GradVec;
 
 pub struct Sgd {
     pub lr: f64,
@@ -14,10 +15,10 @@ impl Sgd {
 }
 
 impl Optimizer for Sgd {
-    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
-        assert_eq!(params.len(), grads.len());
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &GradVec) {
+        assert_eq!(params.len(), grads.n_params());
         let lr = self.lr as f32;
-        for (p, g) in params.iter_mut().zip(grads) {
+        for (p, g) in params.iter_mut().zip(grads.params()) {
             assert_eq!(p.len(), g.len());
             for (pi, gi) in p.iter_mut().zip(g) {
                 *pi -= lr * gi;
@@ -37,7 +38,7 @@ mod tests {
     #[test]
     fn analytic_step() {
         let mut p = vec![vec![1.0f32, 2.0], vec![3.0]];
-        let g = vec![vec![0.5f32, -1.0], vec![2.0]];
+        let g = GradVec::from_vecs(&[vec![0.5f32, -1.0], vec![2.0]]);
         Sgd::new(0.1).step(&mut p, &g);
         assert_eq!(p[0], vec![0.95, 2.1]);
         assert!((p[1][0] - 2.8).abs() < 1e-6);
@@ -49,7 +50,7 @@ mod tests {
         let mut p = vec![vec![0.0f32]];
         let mut opt = Sgd::new(0.1);
         for _ in 0..200 {
-            let g = vec![vec![2.0 * (p[0][0] - 3.0)]];
+            let g = GradVec::from_vecs(&[vec![2.0 * (p[0][0] - 3.0)]]);
             opt.step(&mut p, &g);
         }
         assert!((p[0][0] - 3.0).abs() < 1e-4);

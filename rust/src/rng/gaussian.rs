@@ -57,75 +57,29 @@ impl Gaussian {
 }
 
 /// §Perf L3: noise generation dominated the DP step (68% of step time
-/// for the MLP). This is the optimized path: polar method + scoped
-/// threads over fixed-size chunks, each chunk on its own ChaCha stream
-/// derived from (seed, step, chunk index) — bitwise deterministic for
-/// a given (seed, step) regardless of thread scheduling.
-pub fn add_noise_parallel(
-    grads: &mut [Vec<f32>],
-    sigma: f64,
-    seed: u64,
-    step: u64,
-) {
+/// for the MLP). This is the optimized path: polar method over
+/// fixed-size chunks of the **flat** gradient buffer (the `GradVec`
+/// arena is one contiguous allocation, so no per-tensor work list is
+/// needed), each chunk on its own ChaCha stream derived from
+/// (seed, step, chunk index) — bitwise deterministic for a given
+/// (seed, step) regardless of thread scheduling, because chunk
+/// boundaries are fixed and rayon only hands out disjoint chunks.
+pub fn add_noise_parallel(grads: &mut [f32], sigma: f64, seed: u64, step: u64) {
+    use rayon::prelude::*;
     if sigma == 0.0 {
         return;
     }
     const CHUNK: usize = 16 * 1024;
-    // flatten the work list: (tensor index, chunk range)
-    let mut work: Vec<(usize, usize, usize)> = Vec::new();
-    for (k, g) in grads.iter().enumerate() {
-        let mut off = 0;
-        while off < g.len() {
-            let end = (off + CHUNK).min(g.len());
-            work.push((k, off, end));
-            off = end;
-        }
-    }
-    let n_threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(work.len().max(1));
-
-    // Single-core machines (or one chunk): run inline — thread spawn +
-    // queue overhead would exceed the parallel gain.
-    if n_threads <= 1 {
-        for (widx, &(k, off, end)) in work.iter().enumerate() {
+    grads
+        .par_chunks_mut(CHUNK)
+        .enumerate()
+        .for_each(|(widx, chunk)| {
+            // stream id: disjoint from the sequential streams and
+            // unique per (step, chunk): [1][step:39][chunk:24]
             let stream = (1u64 << 63) | (step << 24) | widx as u64;
             let mut rng = ChaCha20::seeded(seed ^ 0xD09E, stream);
-            fill_chunk(&mut grads[k][off..end], sigma, &mut rng);
-        }
-        return;
-    }
-
-    // hand out disjoint &mut chunk views
-    let mut views: Vec<(&mut [f32], u64)> = Vec::with_capacity(work.len());
-    {
-        // split each tensor progressively
-        let mut rest: Vec<&mut [f32]> =
-            grads.iter_mut().map(|g| g.as_mut_slice()).collect();
-        for (widx, &(k, off, end)) in work.iter().enumerate() {
-            let len = end - off;
-            let slice = std::mem::take(&mut rest[k]);
-            let (head, tail) = slice.split_at_mut(len);
-            rest[k] = tail;
-            let _ = off;
-            views.push((head, widx as u64));
-        }
-    }
-    let chunks = std::sync::Mutex::new(views.into_iter());
-    std::thread::scope(|s| {
-        for _ in 0..n_threads {
-            s.spawn(|| loop {
-                let next = chunks.lock().unwrap().next();
-                let Some((chunk, widx)) = next else { break };
-                // stream id: disjoint from the sequential streams and
-                // unique per (step, chunk): [1][step:39][chunk:24]
-                let stream = (1u64 << 63) | (step << 24) | widx;
-                let mut rng = ChaCha20::seeded(seed ^ 0xD09E, stream);
-                fill_chunk(chunk, sigma, &mut rng);
-            });
-        }
-    });
+            fill_chunk(chunk, sigma, &mut rng);
+        });
 }
 
 /// f32 polar transform for the f32-gradient hot path: the output is
@@ -239,7 +193,7 @@ mod tests {
 
     #[test]
     fn parallel_noise_deterministic_and_gaussian() {
-        let mk = || vec![vec![0.0f32; 40_000], vec![0.0f32; 123]];
+        let mk = || vec![0.0f32; 40_123];
         let mut a = mk();
         let mut b = mk();
         add_noise_parallel(&mut a, 1.5, 7, 3);
@@ -248,8 +202,8 @@ mod tests {
         let mut c = mk();
         add_noise_parallel(&mut c, 1.5, 7, 4);
         assert_ne!(a, c, "different step must differ");
-        // moments of the big tensor
-        let xs: Vec<f64> = a[0].iter().map(|&x| x as f64).collect();
+        // moments of the flat buffer
+        let xs: Vec<f64> = a.iter().map(|&x| x as f64).collect();
         let (mean, var, skew, kurt) = moments(&xs);
         assert!(mean.abs() < 0.03, "mean {mean}");
         assert!((var - 2.25).abs() < 0.1, "var {var}");
@@ -267,11 +221,11 @@ mod tests {
 
     #[test]
     fn parallel_noise_zero_sigma_and_odd_sizes() {
-        let mut a = vec![vec![1.0f32; 7], vec![2.0f32; 1]];
+        let mut a = vec![1.0f32; 7];
         add_noise_parallel(&mut a, 0.0, 1, 1);
-        assert_eq!(a[0], vec![1.0; 7]);
-        let mut b = vec![vec![0.0f32; 3]];
+        assert_eq!(a, vec![1.0; 7]);
+        let mut b = vec![0.0f32; 3];
         add_noise_parallel(&mut b, 1.0, 1, 1);
-        assert!(b[0].iter().all(|&x| x != 0.0 && x.is_finite()));
+        assert!(b.iter().all(|&x| x != 0.0 && x.is_finite()));
     }
 }

@@ -2,9 +2,12 @@
 //! execute it", abstracted over *how* the math runs.
 //!
 //! Two implementations ship today:
-//!   - `runtime::native::NativeBackend` — pure-Rust forward/backward
-//!     for the MLP config family, always available, hermetic (the
-//!     default; what tier-1 CI exercises).
+//!   - `runtime::native::NativeBackend` — pure-Rust batched execution,
+//!     always available, hermetic (the default; what tier-1 CI
+//!     exercises). Model families are pluggable: the backend resolves
+//!     a config's `model` string through its `ModelFamily` registry
+//!     (`runtime::native::taps`), so new families (attention, RNN)
+//!     register themselves without touching this seam.
 //!   - `runtime::engine::Engine` (feature `pjrt`) — compiles AOT HLO
 //!     artifacts produced by the Python build path and executes them
 //!     via the PJRT C API.
@@ -13,6 +16,19 @@
 //! CLI) is written against these traits only, so adding a backend —
 //! GPU PJRT, a sharded multi-host runner, a fused-kernel path — never
 //! touches the training loop again.
+//!
+//! # Step execution contract (arena form)
+//!
+//! `run_into` is the primitive: the **caller owns the `StepOut`
+//! arena** and reuses it across steps, so the warm execution path
+//! performs zero heap allocation (DESIGN.md §"Step execution
+//! contract", pinned by `tests/no_alloc.rs`). The step — not the
+//! caller — resets the arena at entry (`StepOut::reset`): gradients
+//! are zeroed, norms/scalars cleared, and the gradient layout adopted
+//! from the step's config, so a cold (empty) arena and a warm (dirty)
+//! arena produce bitwise-identical results. `run` is a thin
+//! convenience wrapper for one-shot callers that allocates a fresh
+//! arena per call.
 
 use super::manifest::{ConfigSpec, Manifest};
 use super::store::{BatchStage, ParamStore, StepOut};
@@ -33,7 +49,8 @@ use std::sync::Arc;
 ///     gradient; norms = [||g_0||]. The nxBP loop clips/averages in
 ///     the coordinator.
 ///   - `fwd`: loss = mean loss, correct = correct-prediction count,
-///     no grads.
+///     no grads (the arena's gradient buffer collapses to the empty
+///     layout — zero parameters — on every backend).
 pub trait StepFn: Send + Sync {
     /// Artifact method name this step implements (e.g. "reweight").
     fn method(&self) -> &str;
@@ -43,16 +60,31 @@ pub trait StepFn: Send + Sync {
         0.0
     }
 
-    /// Execute one step: params + staged batch (+ clip threshold for
-    /// the private batched methods). Steps never mutate the store;
-    /// backends that cache device uploads key on
-    /// `ParamStore::{id, version}`.
+    /// Execute one step into the caller-owned arena: params + staged
+    /// batch (+ clip threshold for the private batched methods).
+    /// Steps never mutate the store; backends that cache device
+    /// uploads key on `ParamStore::{id, version}`. The step resets
+    /// `out` first — callers only ever *read* it afterwards.
+    fn run_into(
+        &self,
+        params: &ParamStore,
+        stage: &BatchStage,
+        clip: Option<f32>,
+        out: &mut StepOut,
+    ) -> Result<()>;
+
+    /// One-shot convenience: allocate a fresh arena, `run_into` it,
+    /// return it. Hot loops should hold an arena and call `run_into`.
     fn run(
         &self,
         params: &ParamStore,
         stage: &BatchStage,
         clip: Option<f32>,
-    ) -> Result<StepOut>;
+    ) -> Result<StepOut> {
+        let mut out = StepOut::new();
+        self.run_into(params, stage, clip, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// An execution backend: a manifest of runnable configs plus the

@@ -152,20 +152,26 @@ impl StepFn for StepExe {
         self.compile_ms
     }
 
-    /// Execute one step: params + staged batch (+ optional clip
-    /// scalar).
+    /// Execute one step into the caller's arena: params + staged batch
+    /// (+ optional clip scalar).
     ///
     /// Parameters are passed by reference into PJRT (`Borrow<Literal>`)
     /// and their literals are cached across calls keyed on the store's
     /// `(id, version)` — `Literal` construction is a deep copy through
     /// the C API, and the nxBP loop would otherwise pay it once per
     /// *example* (§Perf L3 iteration 1).
-    fn run(
+    ///
+    /// Marshalling out of PJRT literals inherently copies, so this
+    /// backend does not meet the native backend's zero-allocation
+    /// warm-path guarantee — the arena still saves the per-step
+    /// `Vec<Vec<f32>>` churn on the Rust side.
+    fn run_into(
         &self,
         params: &ParamStore,
         stage: &BatchStage,
         clip: Option<f32>,
-    ) -> Result<StepOut> {
+        out: &mut StepOut,
+    ) -> Result<()> {
         let mut owned: Vec<xla::Literal> = Vec::with_capacity(3);
         owned.push(input_literal(stage)?);
         owned.push(label_literal(stage)?);
@@ -202,11 +208,15 @@ impl StepFn for StepExe {
         let result = self.exe.execute::<&xla::Literal>(&args)?;
         let tuple = result[0][0].to_literal_sync()?;
         let parts = tuple.to_tuple()?;
-        decode_outputs(self, parts)
+        decode_outputs_into(self, parts, out)
     }
 }
 
-fn decode_outputs(exe: &StepExe, parts: Vec<xla::Literal>) -> Result<StepOut> {
+fn decode_outputs_into(
+    exe: &StepExe,
+    parts: Vec<xla::Literal>,
+    out: &mut StepOut,
+) -> Result<()> {
     let has_grads = exe.outputs.iter().any(|o| o == "grads");
     let n_grads = if has_grads { exe.n_params } else { 0 };
     let expected = n_grads + exe.outputs.len() - usize::from(has_grads);
@@ -221,19 +231,30 @@ fn decode_outputs(exe: &StepExe, parts: Vec<xla::Literal>) -> Result<StepOut> {
         );
     }
     let mut it = parts.into_iter();
-    let mut grads = Vec::with_capacity(n_grads);
+    let mut grad_vecs: Vec<Vec<f32>> = Vec::with_capacity(n_grads);
     for _ in 0..n_grads {
-        grads.push(it.next().unwrap().to_vec::<f32>()?);
+        grad_vecs.push(it.next().unwrap().to_vec::<f32>()?);
     }
-    let mut out = StepOut { grads, loss: 0.0, norms: None, correct: None };
+    let lens: Vec<usize> = grad_vecs.iter().map(|v| v.len()).collect();
+    // reset adopts the decoded layout and clears norms/scalars; for a
+    // grad-less artifact (fwd) the arena's gradient buffer collapses
+    // to the empty layout
+    out.reset(&lens);
+    for (i, v) in grad_vecs.iter().enumerate() {
+        out.grads.param_mut(i).copy_from_slice(v);
+    }
     for name in exe.outputs.iter().filter(|o| o.as_str() != "grads") {
         let lit = it.next().unwrap();
         match name.as_str() {
             "loss" => out.loss = lit.to_vec::<f32>()?[0],
-            "norms" | "norm" => out.norms = Some(lit.to_vec::<f32>()?),
-            "correct" => out.correct = Some(lit.to_vec::<f32>()?[0]),
+            "norms" | "norm" => out.set_norms(&lit.to_vec::<f32>()?),
+            // the artifact returns the correct-prediction count as an
+            // f32 scalar; it is an integer count in [0, batch]
+            "correct" => {
+                out.correct = Some(lit.to_vec::<f32>()?[0].round() as u32)
+            }
             other => bail!("unknown output group {other:?}"),
         }
     }
-    Ok(out)
+    Ok(())
 }

@@ -14,8 +14,11 @@ pub use backend::{Backend, StepFn};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, StepExe};
 pub use manifest::{ArtifactSpec, ConfigSpec, ConvMeta, Manifest, ParamSpec};
+pub use native::taps::{FamilyBuilder, FamilyRegistry, ModelFamily};
 pub use native::NativeBackend;
-pub use store::{clip_factor, init_params_glorot, BatchStage, ParamStore, StepOut};
+pub use store::{
+    clip_factor, init_params_glorot, BatchStage, GradVec, ParamStore, StepOut,
+};
 
 use anyhow::Result;
 use std::path::PathBuf;

@@ -54,7 +54,11 @@
 //! §"Per-example norms under weight sharing".
 
 use super::gemm;
+use super::taps::{
+    downcast_scratch, downcast_scratch_ref, ModelFamily, ScratchAny,
+};
 use crate::runtime::manifest::{ConfigSpec, ConvMeta};
+use crate::runtime::store::GradVec;
 use anyhow::{bail, ensure, Result};
 use rayon::prelude::*;
 
@@ -282,18 +286,35 @@ impl ConvSpec {
         self.layers.len()
     }
 
-    /// Flat gradient buffers in manifest order [W0, b0, W1, b1, ...].
-    pub fn zero_grads(&self) -> Vec<Vec<f32>> {
+    /// Per-parameter element counts in manifest order
+    /// [W0, b0, W1, b1, ...] — the gradient arena layout.
+    pub fn grad_lens(&self) -> Vec<usize> {
         let mut out = Vec::with_capacity(self.layers.len() * 2);
         for l in &self.layers {
-            out.push(vec![0.0f32; l.cols() * l.k_dim()]);
-            out.push(vec![0.0f32; l.cols()]);
+            out.push(l.cols() * l.k_dim());
+            out.push(l.cols());
         }
         out
     }
 
+    /// Per-example conv working-buffer extents over all conv layers:
+    /// (max cout·K weight elements, max cout, max P²). Sizes the
+    /// scratch's per-example partial/Gram buffers.
+    fn conv_partial_dims(&self) -> (usize, usize, usize) {
+        let (mut max_w, mut max_b, mut max_p2) = (1usize, 1usize, 1usize);
+        for l in &self.layers {
+            if let Layer::Conv { cin, cout, k, h_out, w_out, .. } = *l {
+                let p = h_out * w_out;
+                max_w = max_w.max(cout * cin * k * k);
+                max_b = max_b.max(cout);
+                max_p2 = max_p2.max(p * p);
+            }
+        }
+        (max_w, max_b, max_p2)
+    }
+
     /// Check a param store's tensor count and per-tensor lengths.
-    pub fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+    pub fn check_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
         ensure!(
             host.len() == 2 * self.n_layers(),
             "{config}: param store has {} tensors, spec needs {}",
@@ -330,6 +351,23 @@ pub struct ConvScratch {
     deltas: Vec<Vec<f32>>,
     /// softmax rows, b x n_classes
     probs: Vec<f32>,
+    /// Per-example working buffers, grown lazily on first use and
+    /// reused afterwards (the warm path allocates nothing). Example i
+    /// owns the i-th fixed-stride chunk of each, so parallel
+    /// per-example stages write disjoint slices:
+    ///   - `ex_w` (b x max cout·K, f32): the K x cout per-example
+    ///     product of the direct norm route / the per-example weight-
+    ///     gradient partials of the parallel assembly;
+    ///   - `ex_work` (b x max cout·K, f64): the f64 accumulation
+    ///     workspace those reductions run in;
+    ///   - `ex_b` (b x max cout, f32): per-example bias partials;
+    ///   - `ex_ga`/`ex_gd` (b x max P², f32): the position-Gram
+    ///     buffers of the Gram norm route.
+    ex_w: Vec<f32>,
+    ex_work: Vec<f64>,
+    ex_b: Vec<f32>,
+    ex_ga: Vec<f32>,
+    ex_gd: Vec<f32>,
 }
 
 impl ConvScratch {
@@ -372,6 +410,11 @@ impl ConvScratch {
             acts,
             deltas,
             probs: vec![0.0; b * spec.n_classes],
+            ex_w: Vec::new(),
+            ex_work: Vec::new(),
+            ex_b: Vec::new(),
+            ex_ga: Vec::new(),
+            ex_gd: Vec::new(),
         }
     }
 }
@@ -541,40 +584,65 @@ fn fc_tap_sq(input: &[f32], deltas: &[f32], i: usize, din: usize, dout: usize) -
 /// Exact per-example squared gradient norms — the direct route: per
 /// conv layer, materialize the small K x cout product A_iᵀ·Δ_i per
 /// example and take its Frobenius norm (plus the bias column-sum
-/// term); per fc layer, the MLP tap trick. Parallel over examples;
+/// term); per fc layer, the MLP tap trick. Parallel over examples
+/// writing disjoint scratch chunks (`ex_w`/`ex_work`/`ex_b`);
 /// per-example work has a fixed order, so the result is bitwise
-/// deterministic.
-pub fn sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
+/// deterministic — and the warm path allocates nothing.
+pub fn sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
     let b = s.b;
-    (0..b)
-        .into_par_iter()
-        .map(|i| {
+    debug_assert_eq!(out.len(), b);
+    let (max_w, max_b, _) = spec.conv_partial_dims();
+    let ConvScratch {
+        x_hwc, patches, acts, deltas, ex_w, ex_work, ex_b, ..
+    } = s;
+    if ex_w.len() < b * max_w {
+        ex_w.resize(b * max_w, 0.0);
+        ex_work.resize(b * max_w, 0.0);
+    }
+    if ex_b.len() < b * max_b {
+        ex_b.resize(b * max_b, 0.0);
+    }
+    // downgrade the read-only fields to shared refs: the parallel
+    // closure must be Sync, and a captured `&mut` is not
+    let (x_hwc, patches, acts, deltas) =
+        (&*x_hwc, &*patches, &*acts, &*deltas);
+    out.par_iter_mut()
+        .zip(ex_w.par_chunks_mut(max_w))
+        .zip(ex_work.par_chunks_mut(max_w))
+        .zip(ex_b.par_chunks_mut(max_b))
+        .enumerate()
+        .for_each(|(i, (((sqi, wbuf), workbuf), bbuf))| {
             let mut sq = 0.0f64;
-            let mut mbuf: Vec<f32> = Vec::new();
-            let mut bias: Vec<f32> = Vec::new();
             for l in 0..spec.n_layers() {
                 match spec.layers[l] {
                     Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                         let p = h_out * w_out;
                         let kdim = cin * k * k;
-                        let delta = example_rows(&s.deltas[l], i, p * cout);
-                        let patches = example_rows(&s.patches[l], i, p * kdim);
-                        mbuf.clear();
-                        mbuf.resize(cout * kdim, 0.0);
+                        let delta = example_rows(&deltas[l], i, p * cout);
+                        let pat = example_rows(&patches[l], i, p * kdim);
+                        let mbuf = &mut wbuf[..cout * kdim];
+                        mbuf.iter_mut().for_each(|v| *v = 0.0);
                         // M = Δ_iᵀ · A_i, reduced over the P positions
                         // in f64 — the same kernel the gradient
                         // assembly and multiloss materialization use,
                         // so every method reports identical norms
                         gemm::sgemm_tn_f64acc(
-                            cout, p, kdim, delta, None, patches, &mut mbuf,
+                            cout,
+                            p,
+                            kdim,
+                            delta,
+                            None,
+                            pat,
+                            mbuf,
+                            &mut workbuf[..cout * kdim],
                         );
                         sq += mbuf
                             .iter()
                             .map(|&v| (v as f64) * (v as f64))
                             .sum::<f64>();
-                        bias.clear();
-                        bias.resize(cout, 0.0);
-                        gemm::col_sums(p, cout, delta, None, &mut bias);
+                        let bias = &mut bbuf[..cout];
+                        bias.iter_mut().for_each(|v| *v = 0.0);
+                        gemm::col_sums(p, cout, delta, None, bias);
                         sq += bias
                             .iter()
                             .map(|&v| (v as f64) * (v as f64))
@@ -582,42 +650,52 @@ pub fn sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
                     }
                     Layer::Fc { din, dout } => {
                         let input: &[f32] =
-                            if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
-                        sq += fc_tap_sq(input, &s.deltas[l], i, din, dout);
+                            if l == 0 { x_hwc } else { &acts[l - 1] };
+                        sq += fc_tap_sq(input, &deltas[l], i, din, dout);
                     }
                 }
             }
-            sq
-        })
-        .collect()
+            *sqi = sq;
+        });
 }
 
 /// Exact per-example squared gradient norms — the Gram route (paper
 /// Sec 5.2): per conv layer, form the P x P position Grams A_i·A_iᵀ
 /// and Δ_i·Δ_iᵀ and sum their Hadamard product; the all-ones bias
 /// "tap" contributes Σ_pq (Δ_i·Δ_iᵀ)_pq. The off-diagonal terms are
-/// exactly what weight sharing adds over the MLP diagonal.
-pub fn gram_sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
+/// exactly what weight sharing adds over the MLP diagonal. Parallel
+/// over examples, Gram buffers in the scratch (`ex_ga`/`ex_gd`).
+pub fn gram_sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
     let b = s.b;
-    (0..b)
-        .into_par_iter()
-        .map(|i| {
+    debug_assert_eq!(out.len(), b);
+    let (_, _, max_p2) = spec.conv_partial_dims();
+    let ConvScratch { x_hwc, patches, acts, deltas, ex_ga, ex_gd, .. } = s;
+    if ex_ga.len() < b * max_p2 {
+        ex_ga.resize(b * max_p2, 0.0);
+        ex_gd.resize(b * max_p2, 0.0);
+    }
+    // shared views for the Sync parallel closure (see sq_norms)
+    let (x_hwc, patches, acts, deltas) =
+        (&*x_hwc, &*patches, &*acts, &*deltas);
+    out.par_iter_mut()
+        .zip(ex_ga.par_chunks_mut(max_p2))
+        .zip(ex_gd.par_chunks_mut(max_p2))
+        .enumerate()
+        .for_each(|(i, ((sqi, gabuf), gdbuf))| {
             let mut sq = 0.0f64;
-            let mut ga: Vec<f32> = Vec::new();
-            let mut gd: Vec<f32> = Vec::new();
             for l in 0..spec.n_layers() {
                 match spec.layers[l] {
                     Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                         let p = h_out * w_out;
                         let kdim = cin * k * k;
-                        let delta = example_rows(&s.deltas[l], i, p * cout);
-                        let patches = example_rows(&s.patches[l], i, p * kdim);
-                        ga.clear();
-                        ga.resize(p * p, 0.0);
-                        gd.clear();
-                        gd.resize(p * p, 0.0);
-                        gemm::sgemm_nt(p, kdim, p, patches, patches, &mut ga);
-                        gemm::sgemm_nt(p, cout, p, delta, delta, &mut gd);
+                        let delta = example_rows(&deltas[l], i, p * cout);
+                        let pat = example_rows(&patches[l], i, p * kdim);
+                        let ga = &mut gabuf[..p * p];
+                        ga.iter_mut().for_each(|v| *v = 0.0);
+                        let gd = &mut gdbuf[..p * p];
+                        gd.iter_mut().for_each(|v| *v = 0.0);
+                        gemm::sgemm_nt(p, kdim, p, pat, pat, ga);
+                        gemm::sgemm_nt(p, cout, p, delta, delta, gd);
                         let mut w_term = 0.0f64;
                         let mut b_term = 0.0f64;
                         for (&gav, &gdv) in ga.iter().zip(gd.iter()) {
@@ -628,29 +706,28 @@ pub fn gram_sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
                     }
                     Layer::Fc { din, dout } => {
                         let input: &[f32] =
-                            if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
-                        sq += fc_tap_sq(input, &s.deltas[l], i, din, dout);
+                            if l == 0 { x_hwc } else { &acts[l - 1] };
+                        sq += fc_tap_sq(input, &deltas[l], i, din, dout);
                     }
                 }
             }
-            sq
-        })
-        .collect()
+            *sqi = sq;
+        });
 }
 
 /// The row-norm-product upper bound: Σ_l (||A_{l,i}||²_F + P_l) ·
 /// ||Δ_{l,i}||²_F (the +P_l augments the bias's all-ones tap column).
 /// Exact on fc layers, a strict overestimate wherever an example's
 /// patches overlap — see the module docs. Never used to clip.
-pub fn tap_bound_sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
-    let b = s.b;
-    let mut sq = vec![0.0f64; b];
+pub fn tap_bound_sq_norms(spec: &ConvSpec, s: &ConvScratch, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), s.b);
+    out.iter_mut().for_each(|v| *v = 0.0);
     for l in 0..spec.n_layers() {
         match spec.layers[l] {
             Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                 let p = h_out * w_out;
                 let kdim = cin * k * k;
-                for (i, sqi) in sq.iter_mut().enumerate() {
+                for (i, sqi) in out.iter_mut().enumerate() {
                     let patches = example_rows(&s.patches[l], i, p * kdim);
                     let delta = example_rows(&s.deltas[l], i, p * cout);
                     let a2: f64 = patches
@@ -667,13 +744,12 @@ pub fn tap_bound_sq_norms(spec: &ConvSpec, s: &ConvScratch) -> Vec<f64> {
             Layer::Fc { din, dout } => {
                 let input: &[f32] =
                     if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
-                for (i, sqi) in sq.iter_mut().enumerate() {
+                for (i, sqi) in out.iter_mut().enumerate() {
                     *sqi += fc_tap_sq(input, &s.deltas[l], i, din, dout);
                 }
             }
         }
     }
-    sq
 }
 
 /// Scale every delta element of example i by nu_i in place (the
@@ -690,85 +766,144 @@ pub fn scale_delta_rows(spec: &ConvSpec, nu: &[f32], s: &mut ConvScratch) {
     }
 }
 
-/// Accumulate the batch-summed gradients from the current deltas:
-/// conv grads via Δᵀ·patches, fc grads as in the MLP.
+/// Accumulate the batch-summed gradients from the current deltas into
+/// the arena: conv grads via Δᵀ·patches, fc grads as in the MLP.
 /// With `scale` (per example, the `reweight_pallas` path) the clip
-/// factor is fused into the reductions — conv layers expand it to the
-/// P patch rows each example owns.
+/// factor is fused into the reductions — conv layers apply it
+/// uniformly over the P patch rows each example owns.
 ///
-/// Conv layers accumulate **example by example** with the
-/// f64-reduction kernel (`sgemm_tn_f64acc`) rather than in one flat
-/// f32 (B·P)-row reduction: the per-example association matches the
-/// multiloss materialization and the nxBP coordinator loop, and the
-/// near-exact P-position sums keep the cross-method float divergence
-/// at the same (batch-sized) scale as the MLP family instead of
-/// growing with B·P. No parallelism is lost *relative to the flat
-/// kernel* — a cout x K gradient occupies a single output tile either
-/// way, so both shapes run this reduction serially today; spreading
-/// it across cores (per-example f64 partials, ordered merge) is a
-/// ROADMAP item.
+/// Conv layers keep the **per-example association**: example i's
+/// contribution is the f64-reduced Δ_iᵀ·A_i (`sgemm_tn_f64acc`), so
+/// the assembly matches the multiloss materialization and the nxBP
+/// coordinator loop, and the cross-method float divergence stays
+/// batch-sized instead of growing with B·P. A cout x K output fills
+/// only one GEMM tile, so the reduction itself cannot parallelize —
+/// instead the per-example partials are computed **on all cores**
+/// (disjoint `ex_w`/`ex_b` chunks) and merged into the gradient in
+/// ascending example order, which preserves both the determinism
+/// contract and the example-order float association of the old serial
+/// loop.
 pub fn grads_from_deltas(
     spec: &ConvSpec,
-    s: &ConvScratch,
+    s: &mut ConvScratch,
     scale: Option<&[f32]>,
-    grads: &mut [Vec<f32>],
+    grads: &mut GradVec,
 ) {
     let b = s.b;
+    let (max_w, max_b, _) = spec.conv_partial_dims();
+    let ConvScratch {
+        x_hwc, patches, acts, deltas, ex_w, ex_work, ex_b, ..
+    } = s;
+    if ex_w.len() < b * max_w {
+        ex_w.resize(b * max_w, 0.0);
+        ex_work.resize(b * max_w, 0.0);
+    }
+    if ex_b.len() < b * max_b {
+        ex_b.resize(b * max_b, 0.0);
+    }
+    // shared views for the Sync parallel closure (see sq_norms)
+    let (x_hwc, patches, acts, deltas) =
+        (&*x_hwc, &*patches, &*acts, &*deltas);
     for l in 0..spec.n_layers() {
         match spec.layers[l] {
             Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                 let p = h_out * w_out;
                 let kdim = cin * k * k;
-                let mut row_nu: Vec<f32> = Vec::new();
-                for i in 0..b {
-                    let delta = example_rows(&s.deltas[l], i, p * cout);
-                    let patches = example_rows(&s.patches[l], i, p * kdim);
-                    let row_scale: Option<&[f32]> = match scale {
-                        Some(nu) => {
-                            row_nu.clear();
-                            row_nu.resize(p, nu[i]);
-                            Some(&row_nu)
+                let wlen = cout * kdim;
+                // per-example f64 partials, all cores
+                ex_w.par_chunks_mut(max_w)
+                    .zip(ex_work.par_chunks_mut(max_w))
+                    .zip(ex_b.par_chunks_mut(max_b))
+                    .enumerate()
+                    .for_each(|(i, ((wbuf, workbuf), bbuf))| {
+                        let delta = example_rows(&deltas[l], i, p * cout);
+                        let pat = example_rows(&patches[l], i, p * kdim);
+                        let wpart = &mut wbuf[..wlen];
+                        wpart.iter_mut().for_each(|v| *v = 0.0);
+                        let bpart = &mut bbuf[..cout];
+                        bpart.iter_mut().for_each(|v| *v = 0.0);
+                        let work = &mut workbuf[..wlen];
+                        match scale {
+                            Some(nu) => {
+                                gemm::sgemm_tn_f64acc_uniform(
+                                    cout, p, kdim, delta, nu[i], pat, wpart,
+                                    work,
+                                );
+                                gemm::col_sums_uniform(
+                                    p, cout, delta, nu[i], bpart,
+                                );
+                            }
+                            None => {
+                                gemm::sgemm_tn_f64acc(
+                                    cout, p, kdim, delta, None, pat, wpart,
+                                    work,
+                                );
+                                gemm::col_sums(p, cout, delta, None, bpart);
+                            }
                         }
-                        None => None,
-                    };
-                    gemm::sgemm_tn_f64acc(
-                        cout, p, kdim, delta, row_scale, patches,
-                        &mut grads[2 * l],
-                    );
-                    gemm::col_sums(
-                        p, cout, delta, row_scale, &mut grads[2 * l + 1],
-                    );
+                    });
+                // ascending-example merge into the arena
+                let gw = grads.param_mut(2 * l);
+                for i in 0..b {
+                    let wpart = &ex_w[i * max_w..i * max_w + wlen];
+                    for (g, &v) in gw.iter_mut().zip(wpart) {
+                        *g += v;
+                    }
+                }
+                let gb = grads.param_mut(2 * l + 1);
+                for i in 0..b {
+                    let bpart = &ex_b[i * max_b..i * max_b + cout];
+                    for (g, &v) in gb.iter_mut().zip(bpart) {
+                        *g += v;
+                    }
                 }
             }
             Layer::Fc { din, dout } => {
-                let input: &[f32] =
-                    if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
-                let delta = &s.deltas[l];
+                let input: &[f32] = if l == 0 { x_hwc } else { &acts[l - 1] };
+                let delta = &deltas[l];
                 match scale {
                     Some(nu) => gemm::sgemm_tn_scaled(
-                        din, b, dout, input, nu, delta, &mut grads[2 * l],
+                        din,
+                        b,
+                        dout,
+                        input,
+                        nu,
+                        delta,
+                        grads.param_mut(2 * l),
                     ),
                     None => gemm::sgemm_tn(
-                        din, b, dout, input, delta, &mut grads[2 * l],
+                        din,
+                        b,
+                        dout,
+                        input,
+                        delta,
+                        grads.param_mut(2 * l),
                     ),
                 }
-                gemm::col_sums(b, dout, delta, scale, &mut grads[2 * l + 1]);
+                gemm::col_sums(b, dout, delta, scale, grads.param_mut(2 * l + 1));
             }
         }
     }
 }
 
-/// Materialize example i's full gradient into `out` (overwriting),
+/// Materialize example i's full gradient into the arena (overwriting),
 /// returning its squared norm from the materialized values — the
 /// multiLoss structure. The conv weight blocks run the same
 /// per-example Δᵀ·A reduction as `sq_norms`, so the reported norms
-/// agree bitwise with the direct route.
+/// agree bitwise with the direct route. `work` is the caller's
+/// grow-only f64 workspace (multiloss chunks own one each, so this is
+/// safe to run concurrently over distinct examples).
 pub fn materialize_grad_row(
     spec: &ConvSpec,
     s: &ConvScratch,
     i: usize,
-    out: &mut [Vec<f32>],
+    out: &mut GradVec,
+    work: &mut Vec<f64>,
 ) -> f64 {
+    let (max_w, _, _) = spec.conv_partial_dims();
+    if work.len() < max_w {
+        work.resize(max_w, 0.0);
+    }
     let mut sq = 0.0f64;
     for l in 0..spec.n_layers() {
         match spec.layers[l] {
@@ -777,11 +912,20 @@ pub fn materialize_grad_row(
                 let kdim = cin * k * k;
                 let delta = example_rows(&s.deltas[l], i, p * cout);
                 let patches = example_rows(&s.patches[l], i, p * kdim);
-                let gw = &mut out[2 * l];
+                let gw = out.param_mut(2 * l);
                 gw.iter_mut().for_each(|v| *v = 0.0);
-                gemm::sgemm_tn_f64acc(cout, p, kdim, delta, None, patches, gw);
+                gemm::sgemm_tn_f64acc(
+                    cout,
+                    p,
+                    kdim,
+                    delta,
+                    None,
+                    patches,
+                    gw,
+                    &mut work[..cout * kdim],
+                );
                 sq += gw.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
-                let gb = &mut out[2 * l + 1];
+                let gb = out.param_mut(2 * l + 1);
                 gb.iter_mut().for_each(|v| *v = 0.0);
                 gemm::col_sums(p, cout, delta, None, gb);
                 sq += gb.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
@@ -791,7 +935,7 @@ pub fn materialize_grad_row(
                     if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
                 let a = example_rows(input, i, din);
                 let d = example_rows(&s.deltas[l], i, dout);
-                let gw = &mut out[2 * l];
+                let gw = out.param_mut(2 * l);
                 for (kk, &xk) in a.iter().enumerate() {
                     let row = &mut gw[kk * dout..(kk + 1) * dout];
                     for (g, &dv) in row.iter_mut().zip(d.iter()) {
@@ -799,7 +943,7 @@ pub fn materialize_grad_row(
                         sq += (*g as f64) * (*g as f64);
                     }
                 }
-                let gb = &mut out[2 * l + 1];
+                let gb = out.param_mut(2 * l + 1);
                 for (g, &dv) in gb.iter_mut().zip(d.iter()) {
                     *g = dv;
                     sq += (*g as f64) * (*g as f64);
@@ -808,6 +952,107 @@ pub fn materialize_grad_row(
         }
     }
     sq
+}
+
+// ---------------------------------------------------------------------
+// ModelFamily registration (taps::FamilyRegistry "cnn")
+// ---------------------------------------------------------------------
+
+impl ModelFamily for ConvSpec {
+    fn family(&self) -> &'static str {
+        "cnn"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn grad_layout(&self) -> Vec<usize> {
+        self.grad_lens()
+    }
+
+    fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+        self.check_params(config, host)
+    }
+
+    fn new_scratch(&self) -> Box<ScratchAny> {
+        Box::new(ConvScratch::for_spec(self, self.batch))
+    }
+
+    fn forward_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        labels: &[i32],
+        s: &mut ScratchAny,
+    ) -> (f64, usize) {
+        let scr = downcast_scratch::<ConvScratch>(s, "cnn");
+        forward_batch(self, params, x, labels, scr)
+    }
+
+    fn backward_batch(
+        &self,
+        params: &[Vec<f32>],
+        labels: &[i32],
+        nu: Option<&[f32]>,
+        s: &mut ScratchAny,
+    ) {
+        let scr = downcast_scratch::<ConvScratch>(s, "cnn");
+        backward_batch(self, params, labels, nu, scr)
+    }
+
+    /// The network input is not needed — the scratch holds the HWC
+    /// rearrangement from the forward pass.
+    fn sq_norms(&self, _x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<ConvScratch>(s, "cnn");
+        sq_norms(self, scr, out)
+    }
+
+    fn gram_sq_norms(&self, _x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<ConvScratch>(s, "cnn");
+        gram_sq_norms(self, scr, out)
+    }
+
+    fn tap_bound_sq_norms(&self, _x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<ConvScratch>(s, "cnn");
+        tap_bound_sq_norms(self, scr, out)
+    }
+
+    fn scale_delta_rows(&self, nu: &[f32], s: &mut ScratchAny) {
+        let scr = downcast_scratch::<ConvScratch>(s, "cnn");
+        scale_delta_rows(self, nu, scr)
+    }
+
+    fn grads_from_deltas(
+        &self,
+        _x: &[f32],
+        s: &mut ScratchAny,
+        scale: Option<&[f32]>,
+        grads: &mut GradVec,
+    ) {
+        let scr = downcast_scratch::<ConvScratch>(s, "cnn");
+        grads_from_deltas(self, scr, scale, grads)
+    }
+
+    fn materialize_grad_row(
+        &self,
+        _x: &[f32],
+        s: &ScratchAny,
+        i: usize,
+        out: &mut GradVec,
+        work: &mut Vec<f64>,
+    ) -> f64 {
+        let scr = downcast_scratch_ref::<ConvScratch>(s, "cnn");
+        materialize_grad_row(self, scr, i, out, work)
+    }
 }
 
 #[cfg(test)]
@@ -943,8 +1188,8 @@ mod tests {
             let mut s = ConvScratch::for_spec(&spec, b);
             forward_batch(&spec, &params, &x, &labels, &mut s);
             backward_batch(&spec, &params, &labels, None, &mut s);
-            let mut grads = spec.zero_grads();
-            grads_from_deltas(&spec, &s, None, &mut grads);
+            let mut grads = GradVec::with_layout(&spec.grad_lens());
+            grads_from_deltas(&spec, &mut s, None, &mut grads);
 
             // eps: small enough that a pre-activation sitting near a
             // ReLU kink (a bias nudge shifts a whole channel) cannot
@@ -963,7 +1208,7 @@ mod tests {
                     let (l_lo, _) =
                         forward_batch(&spec, &p_lo, &x, &labels, &mut scratch);
                     let fd = ((l_hi - l_lo) / (2.0 * eps as f64)) as f32;
-                    let an = grads[t][idx];
+                    let an = grads.param(t)[idx];
                     assert!(
                         (fd - an).abs() < 3e-3 * (1.0 + an.abs()),
                         "{}: param {t}[{idx}]: finite-diff {fd} vs analytic {an}",
@@ -988,12 +1233,16 @@ mod tests {
         forward_batch(&spec, &params, &x, &labels, &mut s);
         backward_batch(&spec, &params, &labels, None, &mut s);
 
-        let direct = sq_norms(&spec, &s);
-        let gram = gram_sq_norms(&spec, &s);
-        let tap = tap_bound_sq_norms(&spec, &s);
-        let mut mat = spec.zero_grads();
+        let mut direct = vec![0.0f64; b];
+        sq_norms(&spec, &mut s, &mut direct);
+        let mut gram = vec![0.0f64; b];
+        gram_sq_norms(&spec, &mut s, &mut gram);
+        let mut tap = vec![0.0f64; b];
+        tap_bound_sq_norms(&spec, &s, &mut tap);
+        let mut mat = GradVec::with_layout(&spec.grad_lens());
+        let mut work: Vec<f64> = Vec::new();
         for i in 0..b {
-            let sq_mat = materialize_grad_row(&spec, &s, i, &mut mat);
+            let sq_mat = materialize_grad_row(&spec, &s, i, &mut mat, &mut work);
             assert!(
                 (direct[i] - sq_mat).abs() / sq_mat.max(1e-9) < 1e-6,
                 "direct {} vs materialized {sq_mat} (example {i})",
@@ -1037,35 +1286,31 @@ mod tests {
         let mut s1 = ConvScratch::for_spec(&spec, b);
         forward_batch(&spec, &params, &x, &labels, &mut s1);
         backward_batch(&spec, &params, &labels, Some(&nu), &mut s1);
-        let mut g1 = spec.zero_grads();
-        grads_from_deltas(&spec, &s1, None, &mut g1);
+        let mut g1 = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &mut s1, None, &mut g1);
 
         // route 2: one backward, deltas nu-scaled in place
         let mut s2 = ConvScratch::for_spec(&spec, b);
         forward_batch(&spec, &params, &x, &labels, &mut s2);
         backward_batch(&spec, &params, &labels, None, &mut s2);
-        let mut g3 = spec.zero_grads();
+        let mut g3 = GradVec::with_layout(&spec.grad_lens());
         // route 3 first (fused), from the unscaled deltas
-        grads_from_deltas(&spec, &s2, Some(&nu), &mut g3);
+        grads_from_deltas(&spec, &mut s2, Some(&nu), &mut g3);
         scale_delta_rows(&spec, &nu, &mut s2);
-        let mut g2 = spec.zero_grads();
-        grads_from_deltas(&spec, &s2, None, &mut g2);
+        let mut g2 = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &mut s2, None, &mut g2);
 
-        for (t, (a, bb)) in g1.iter().zip(&g2).enumerate() {
-            for (&av, &bv) in a.iter().zip(bb.iter()) {
-                assert!(
-                    (av - bv).abs() < 1e-5,
-                    "grad[{t}]: backward-nu {av} vs scaled-deltas {bv}"
-                );
-            }
+        for (&av, &bv) in g1.flat().iter().zip(g2.flat()) {
+            assert!(
+                (av - bv).abs() < 1e-5,
+                "backward-nu {av} vs scaled-deltas {bv}"
+            );
         }
-        for (t, (a, c)) in g2.iter().zip(&g3).enumerate() {
-            for (&av, &cv) in a.iter().zip(c.iter()) {
-                assert!(
-                    (av - cv).abs() < 1e-5,
-                    "grad[{t}]: scaled-deltas {av} vs fused {cv}"
-                );
-            }
+        for (&av, &cv) in g2.flat().iter().zip(g3.flat()) {
+            assert!(
+                (av - cv).abs() < 1e-5,
+                "scaled-deltas {av} vs fused {cv}"
+            );
         }
     }
 
@@ -1084,35 +1329,30 @@ mod tests {
         let mut s = ConvScratch::for_spec(&spec, b);
         forward_batch(&spec, &params, &x, &labels, &mut s);
         backward_batch(&spec, &params, &labels, None, &mut s);
-        let norms: Vec<f32> =
-            sq_norms(&spec, &s).iter().map(|&v| v.sqrt() as f32).collect();
-        let nu: Vec<f32> = norms
+        let mut sq = vec![0.0f64; b];
+        sq_norms(&spec, &mut s, &mut sq);
+        let nu: Vec<f32> = sq
             .iter()
-            .map(|&n| crate::runtime::clip_factor(n, clip))
+            .map(|&v| crate::runtime::clip_factor(v.sqrt() as f32, clip))
             .collect();
         // clipping must actually bite for this to mean anything
         assert!(nu.iter().any(|&v| v < 1.0));
 
-        let mut batched = spec.zero_grads();
-        grads_from_deltas(&spec, &s, Some(&nu), &mut batched);
+        let mut batched = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &mut s, Some(&nu), &mut batched);
 
-        let mut mat = spec.zero_grads();
-        let mut summed = spec.zero_grads();
+        let mut mat = GradVec::with_layout(&spec.grad_lens());
+        let mut summed = GradVec::with_layout(&spec.grad_lens());
+        let mut work: Vec<f64> = Vec::new();
         for i in 0..b {
-            materialize_grad_row(&spec, &s, i, &mut mat);
-            for (acc, g) in summed.iter_mut().zip(&mat) {
-                for (av, &gv) in acc.iter_mut().zip(g) {
-                    *av += nu[i] * gv;
-                }
-            }
+            materialize_grad_row(&spec, &s, i, &mut mat, &mut work);
+            summed.add_scaled(&mat, nu[i]);
         }
-        for (t, (a, m)) in batched.iter().zip(&summed).enumerate() {
-            for (&av, &mv) in a.iter().zip(m.iter()) {
-                assert!(
-                    (av - mv).abs() < 1e-5,
-                    "grad[{t}]: batched {av} vs materialized-sum {mv}"
-                );
-            }
+        for (&av, &mv) in batched.flat().iter().zip(summed.flat()) {
+            assert!(
+                (av - mv).abs() < 1e-5,
+                "batched {av} vs materialized-sum {mv}"
+            );
         }
     }
 
@@ -1130,9 +1370,11 @@ mod tests {
         let run = |s: &mut ConvScratch| {
             let (loss, _) = forward_batch(&spec, &params, &x, &labels, s);
             backward_batch(&spec, &params, &labels, None, s);
-            let mut g = spec.zero_grads();
+            let mut g = GradVec::with_layout(&spec.grad_lens());
             grads_from_deltas(&spec, s, None, &mut g);
-            (loss, sq_norms(&spec, s), g)
+            let mut sq = vec![0.0f64; s.b];
+            sq_norms(&spec, s, &mut sq);
+            (loss, sq, g)
         };
         let mut fresh = ConvScratch::for_spec(&spec, b);
         let want = run(&mut fresh);

@@ -3,7 +3,7 @@
 //! forward/backward/gradient passes need, plus the fused
 //! per-row-scaled variant behind `reweight_pallas`, the im2col /
 //! col2im lowering pair that turns convolution into these same GEMMs,
-//! and the small reduction helpers (row norms, column sums).
+//! and the column-sum reduction helpers behind the bias gradients.
 //!
 //! All matrices are dense row-major flat slices.
 //!
@@ -157,6 +157,28 @@ fn sgemm_tn_impl(
     });
 }
 
+/// Per-reduction-row scaling mode of the f64-accumulating TN kernel.
+#[derive(Clone, Copy)]
+enum RowScale<'a> {
+    One,
+    /// per-row factors, len p
+    Rows(&'a [f32]),
+    /// one factor for every row (a conv example's nu expanded over its
+    /// P patch rows, without materializing the expansion)
+    Uniform(f32),
+}
+
+impl RowScale<'_> {
+    #[inline]
+    fn at(&self, r: usize) -> f32 {
+        match *self {
+            RowScale::One => 1.0,
+            RowScale::Rows(sc) => sc[r],
+            RowScale::Uniform(s) => s,
+        }
+    }
+}
+
 /// `sgemm_tn` with **f64 accumulation**: C[m x n] += A[p x m]ᵀ · B[p x n],
 /// each output element reduced in f64 over the p rows (products of the
 /// f32 operands, cast exactly) and rounded to f32 once on store. With
@@ -164,12 +186,17 @@ fn sgemm_tn_impl(
 /// multiply happens in f32 (`s * a`), bitwise matching a caller that
 /// pre-scales the A rows and passes `None`.
 ///
+/// `work` is the caller-owned f64 accumulation workspace (>= m*n
+/// elements): the kernel allocates nothing, which is what keeps the
+/// warm step path allocation-free (the arena contract in backend.rs).
+///
 /// This is the conv family's per-example gradient/norm reduction: a
 /// conv weight gradient sums P overlapping position contributions per
 /// example, and carrying that reduction in f32 would make the
 /// cross-method float divergence grow with P (the MLP family only
 /// ever reduces over the batch). Same parallelism contract as the
 /// other kernels: disjoint output-row blocks, ascending reduction.
+#[allow(clippy::too_many_arguments)]
 pub fn sgemm_tn_f64acc(
     m: usize,
     p: usize,
@@ -178,38 +205,83 @@ pub fn sgemm_tn_f64acc(
     scale: Option<&[f32]>,
     b: &[f32],
     c: &mut [f32],
+    work: &mut [f64],
+) {
+    let scale = match scale {
+        Some(sc) => {
+            assert_eq!(sc.len(), p, "sgemm_tn_f64acc: scale must have len {p}");
+            RowScale::Rows(sc)
+        }
+        None => RowScale::One,
+    };
+    sgemm_tn_f64acc_impl(m, p, n, a, scale, b, c, work);
+}
+
+/// `sgemm_tn_f64acc` with one scale factor applied to every reduction
+/// row — bitwise identical to passing `scale = Some(&[s; p])` without
+/// materializing that vector.
+#[allow(clippy::too_many_arguments)]
+pub fn sgemm_tn_f64acc_uniform(
+    m: usize,
+    p: usize,
+    n: usize,
+    a: &[f32],
+    s: f32,
+    b: &[f32],
+    c: &mut [f32],
+    work: &mut [f64],
+) {
+    sgemm_tn_f64acc_impl(m, p, n, a, RowScale::Uniform(s), b, c, work);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sgemm_tn_f64acc_impl(
+    m: usize,
+    p: usize,
+    n: usize,
+    a: &[f32],
+    scale: RowScale<'_>,
+    b: &[f32],
+    c: &mut [f32],
+    work: &mut [f64],
 ) {
     assert_eq!(a.len(), p * m, "sgemm_tn_f64acc: A must be {p}x{m}");
     assert_eq!(b.len(), p * n, "sgemm_tn_f64acc: B must be {p}x{n}");
     assert_eq!(c.len(), m * n, "sgemm_tn_f64acc: C must be {m}x{n}");
-    if let Some(sc) = scale {
-        assert_eq!(sc.len(), p, "sgemm_tn_f64acc: scale must have len {p}");
-    }
-    c.par_chunks_mut(TILE_M * n).enumerate().for_each(|(blk, cblk)| {
-        let row0 = blk * TILE_M;
-        let rows = cblk.len() / n;
-        let mut acc = vec![0.0f64; rows * n];
-        for r in 0..p {
-            let arow = &a[r * m..(r + 1) * m];
-            let brow = &b[r * n..(r + 1) * n];
-            let s = match scale {
-                Some(sc) => sc[r],
-                None => 1.0,
-            };
-            for i in 0..rows {
-                let av = (s * arow[row0 + i]) as f64;
-                if av != 0.0 {
-                    let accrow = &mut acc[i * n..(i + 1) * n];
-                    for (cv, &bv) in accrow.iter_mut().zip(brow) {
-                        *cv += av * bv as f64;
+    assert!(
+        work.len() >= m * n,
+        "sgemm_tn_f64acc: work must hold {} f64s, has {}",
+        m * n,
+        work.len()
+    );
+    // zip by identical chunk size so work chunk k covers the same
+    // output offsets as c chunk k (zip stops at the shorter side)
+    c.par_chunks_mut(TILE_M * n)
+        .zip(work.par_chunks_mut(TILE_M * n))
+        .enumerate()
+        .for_each(|(blk, (cblk, wblk))| {
+            let row0 = blk * TILE_M;
+            let rows = cblk.len() / n;
+            let acc = &mut wblk[..cblk.len()];
+            acc.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..p {
+                let arow = &a[r * m..(r + 1) * m];
+                let brow = &b[r * n..(r + 1) * n];
+                let s = scale.at(r);
+                for i in 0..rows {
+                    let av = (s * arow[row0 + i]) as f64;
+                    if av != 0.0 {
+                        let accrow = &mut acc[i * n..(i + 1) * n];
+                        for (cv, &bv) in accrow.iter_mut().zip(brow) {
+                            *cv += av * bv as f64;
+                        }
                     }
                 }
             }
-        }
-        for (cv, &av) in cblk.iter_mut().zip(acc.iter()) {
-            *cv += av as f32;
-        }
-    });
+            for (cv, &av) in cblk.iter_mut().zip(acc.iter()) {
+                *cv += av as f32;
+            }
+        });
 }
 
 /// Output spatial extent of a convolution dimension:
@@ -329,18 +401,22 @@ pub fn col2im_hwc(
     });
 }
 
-/// Per-row squared L2 norms of an r x cols matrix, accumulated in f64
-/// (matching the scalar reference path's precision).
-pub fn row_sq_norms(rows: usize, cols: usize, a: &[f32]) -> Vec<f64> {
-    assert_eq!(a.len(), rows * cols, "row_sq_norms: A must be {rows}x{cols}");
-    (0..rows)
-        .map(|r| {
-            a[r * cols..(r + 1) * cols]
-                .iter()
-                .map(|&v| (v as f64) * (v as f64))
-                .sum()
-        })
-        .collect()
+// (The old `row_sq_norms` helper was removed: the tap-trick row
+// reduction now lives fused inside `mlp::tap_sq_norms`, writing into
+// the caller's buffer so the warm norm path allocates nothing.)
+
+/// `col_sums` with one scale factor for every row — bitwise identical
+/// to passing `scale = Some(&[s; rows])` without materializing that
+/// vector (a conv example's nu expanded over its P patch rows).
+pub fn col_sums_uniform(rows: usize, cols: usize, b: &[f32], s: f32, out: &mut [f32]) {
+    assert_eq!(b.len(), rows * cols, "col_sums: B must be {rows}x{cols}");
+    assert_eq!(out.len(), cols, "col_sums: out must have len {cols}");
+    for r in 0..rows {
+        let brow = &b[r * cols..(r + 1) * cols];
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += s * bv;
+        }
+    }
 }
 
 /// out[j] += Σ_r s[r] · B[r][j] (s = 1 when `scale` is None) — the
@@ -514,6 +590,7 @@ mod tests {
         let (m, p, n) = (7, 50, 9);
         let at = rand_mat(p, m, 16);
         let b = rand_mat(p, n, 17);
+        let mut work = vec![0.0f64; m * n];
         // against the f64 triple-loop reference (via the transpose)
         let mut a = vec![0.0f32; m * p];
         for r in 0..p {
@@ -522,7 +599,7 @@ mod tests {
             }
         }
         let mut c = vec![0.0f32; m * n];
-        sgemm_tn_f64acc(m, p, n, &at, None, &b, &mut c);
+        sgemm_tn_f64acc(m, p, n, &at, None, &b, &mut c, &mut work);
         assert_close(&c, &ref_nn(m, p, n, &a, &b));
         // fused scale is bitwise identical to pre-scaling the A rows
         let scale: Vec<f32> = (0..p).map(|r| 0.1 + r as f32 * 0.05).collect();
@@ -532,13 +609,25 @@ mod tests {
             .map(|(idx, &v)| scale[idx / m] * v)
             .collect();
         let mut want = vec![0.0f32; m * n];
-        sgemm_tn_f64acc(m, p, n, &scaled_at, None, &b, &mut want);
+        sgemm_tn_f64acc(m, p, n, &scaled_at, None, &b, &mut want, &mut work);
         let mut got = vec![0.0f32; m * n];
-        sgemm_tn_f64acc(m, p, n, &at, Some(&scale), &b, &mut got);
+        sgemm_tn_f64acc(m, p, n, &at, Some(&scale), &b, &mut got, &mut work);
         assert_eq!(want, got);
+        // the uniform variant is bitwise identical to a constant
+        // per-row scale vector (a dirty, oversized workspace is fine —
+        // the kernel zeroes what it uses)
+        let flat: Vec<f32> = vec![0.37; p];
+        let mut per_row = vec![0.0f32; m * n];
+        sgemm_tn_f64acc(m, p, n, &at, Some(&flat), &b, &mut per_row, &mut work);
+        let mut dirty_work = vec![f64::NAN; m * n + 13];
+        let mut uniform = vec![0.0f32; m * n];
+        sgemm_tn_f64acc_uniform(
+            m, p, n, &at, 0.37, &b, &mut uniform, &mut dirty_work,
+        );
+        assert_eq!(per_row, uniform);
         // and it accumulates into C
         let mut twice = c.clone();
-        sgemm_tn_f64acc(m, p, n, &at, None, &b, &mut twice);
+        sgemm_tn_f64acc(m, p, n, &at, None, &b, &mut twice, &mut work);
         for (t, &o) in twice.iter().zip(&c) {
             assert!((t - 2.0 * o).abs() < 1e-4);
         }
@@ -633,16 +722,19 @@ mod tests {
     }
 
     #[test]
-    fn row_norms_and_col_sums() {
+    fn col_sums_plain_scaled_and_uniform() {
         let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2 x 3
-        let sq = row_sq_norms(2, 3, &a);
-        assert!((sq[0] - 14.0).abs() < 1e-12);
-        assert!((sq[1] - 77.0).abs() < 1e-12);
         let mut sums = vec![0.0f32; 3];
         col_sums(2, 3, &a, None, &mut sums);
         assert_eq!(sums, vec![5.0, 7.0, 9.0]);
         let mut wsums = vec![0.0f32; 3];
         col_sums(2, 3, &a, Some(&[2.0, 0.5]), &mut wsums);
         assert_eq!(wsums, vec![4.0, 6.5, 9.0]);
+        // the uniform variant matches a constant scale vector bitwise
+        let mut per_row = vec![0.0f32; 3];
+        col_sums(2, 3, &a, Some(&[0.3, 0.3]), &mut per_row);
+        let mut uniform = vec![0.0f32; 3];
+        col_sums_uniform(2, 3, &a, 0.3, &mut uniform);
+        assert_eq!(per_row, uniform);
     }
 }

@@ -4,9 +4,10 @@
 //!     `forward_batch`, `backward_batch`, `tap_sq_norms`,
 //!     `gram_sq_norms`, `grads_from_deltas`, ...): activations and
 //!     deltas held as B x d matrices, every heavy op a `gemm` kernel
-//!     call. `NativeStep` executes it through the `taps::TapModel`
-//!     seam (alongside the conv family) — it is where the paper's
-//!     "clipping can stay batched" claim lives.
+//!     call. `NativeStep` executes it through the `taps::ModelFamily`
+//!     trait (`MlpSpec` is the registry's `"mlp"` family, alongside
+//!     the conv family) — it is where the paper's "clipping can stay
+//!     batched" claim lives.
 //!   - the **scalar reference** (`Scratch`, `forward`, `backward`,
 //!     `accumulate_weighted`, `materialize_grad`): one example at a
 //!     time, validated against central finite differences. The batched
@@ -24,7 +25,11 @@
 //! per-example gradient tensors themselves.
 
 use super::gemm;
+use super::taps::{
+    downcast_scratch, downcast_scratch_ref, ModelFamily, ScratchAny,
+};
 use crate::runtime::manifest::ConfigSpec;
+use crate::runtime::store::GradVec;
 use anyhow::{ensure, Result};
 
 /// Layer dimensions parsed and validated from a manifest config.
@@ -110,8 +115,19 @@ impl MlpSpec {
         self.layers.len()
     }
 
+    /// Per-parameter element counts in manifest order
+    /// [W0, b0, W1, b1, ...] — the gradient arena layout.
+    pub fn grad_lens(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.layers.len() * 2);
+        for &(din, dout) in &self.layers {
+            out.push(din * dout);
+            out.push(dout);
+        }
+        out
+    }
+
     /// Check a param store's tensor count and per-tensor lengths.
-    pub fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+    pub fn check_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
         ensure!(
             host.len() == 2 * self.n_layers(),
             "{config}: param store has {} tensors, spec needs {}",
@@ -352,6 +368,11 @@ pub struct BatchScratch {
     pub deltas: Vec<Vec<f32>>,
     /// softmax rows, b x n_classes
     pub probs: Vec<f32>,
+    /// b x b activation/delta Gram buffers for `gram_sq_norms` —
+    /// lazily grown on first use, then reused so the warm norm path
+    /// allocates nothing
+    gram_a: Vec<f32>,
+    gram_d: Vec<f32>,
 }
 
 impl BatchScratch {
@@ -363,6 +384,8 @@ impl BatchScratch {
             acts: outs.iter().map(|&o| vec![0.0; b * o]).collect(),
             deltas: outs.iter().map(|&o| vec![0.0; b * o]).collect(),
             probs: vec![0.0; b * spec.n_classes],
+            gram_a: Vec::new(),
+            gram_d: Vec::new(),
         }
     }
 }
@@ -459,20 +482,28 @@ pub fn backward_batch(
 }
 
 /// Per-example squared gradient norms via the tap trick (paper Sec 5):
-/// row norms of the taps and deltas only, f64-accumulated.
-pub fn tap_sq_norms(spec: &MlpSpec, x: &[f32], s: &BatchScratch) -> Vec<f64> {
+/// row norms of the taps and deltas only, f64-accumulated into `out`
+/// (len = batch; no allocation — the arena contract).
+pub fn tap_sq_norms(spec: &MlpSpec, x: &[f32], s: &BatchScratch, out: &mut [f64]) {
     let b = s.b;
-    let mut sq = vec![0.0f64; b];
+    debug_assert_eq!(out.len(), b);
+    out.iter_mut().for_each(|v| *v = 0.0);
     for l in 0..spec.n_layers() {
         let (din, dout) = spec.layers[l];
         let input: &[f32] = if l == 0 { x } else { &s.acts[l - 1] };
-        let a2 = gemm::row_sq_norms(b, din, input);
-        let d2 = gemm::row_sq_norms(b, dout, &s.deltas[l]);
-        for i in 0..b {
-            sq[i] += (a2[i] + 1.0) * d2[i];
+        let delta = &s.deltas[l];
+        for (i, sqi) in out.iter_mut().enumerate() {
+            let a2: f64 = input[i * din..(i + 1) * din]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum();
+            let d2: f64 = delta[i * dout..(i + 1) * dout]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum();
+            *sqi += (a2 + 1.0) * d2;
         }
     }
-    sq
 }
 
 /// Per-example squared gradient norms via the Gram route (paper Sec
@@ -483,24 +514,33 @@ pub fn tap_sq_norms(spec: &MlpSpec, x: &[f32], s: &BatchScratch) -> Vec<f64> {
 /// structure*, which carries over unchanged to the conv/attention taps
 /// where the off-diagonal (per-example, cross-position) terms are
 /// genuinely needed.
-pub fn gram_sq_norms(spec: &MlpSpec, x: &[f32], s: &BatchScratch) -> Vec<f64> {
+pub fn gram_sq_norms(
+    spec: &MlpSpec,
+    x: &[f32],
+    s: &mut BatchScratch,
+    out: &mut [f64],
+) {
     let b = s.b;
-    let mut ga = vec![0.0f32; b * b];
-    let mut gd = vec![0.0f32; b * b];
-    let mut sq = vec![0.0f64; b];
+    debug_assert_eq!(out.len(), b);
+    let BatchScratch { acts, deltas, gram_a, gram_d, .. } = s;
+    // grow-only: first use allocates, every later step reuses
+    if gram_a.len() < b * b {
+        gram_a.resize(b * b, 0.0);
+        gram_d.resize(b * b, 0.0);
+    }
+    out.iter_mut().for_each(|v| *v = 0.0);
     for l in 0..spec.n_layers() {
         let (din, dout) = spec.layers[l];
-        let input: &[f32] = if l == 0 { x } else { &s.acts[l - 1] };
-        ga.iter_mut().for_each(|v| *v = 0.0);
-        gd.iter_mut().for_each(|v| *v = 0.0);
-        gemm::sgemm_nt(b, din, b, input, input, &mut ga);
-        let delta = &s.deltas[l];
-        gemm::sgemm_nt(b, dout, b, delta, delta, &mut gd);
-        for i in 0..b {
-            sq[i] += (ga[i * b + i] as f64 + 1.0) * gd[i * b + i] as f64;
+        let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+        gram_a.iter_mut().for_each(|v| *v = 0.0);
+        gram_d.iter_mut().for_each(|v| *v = 0.0);
+        gemm::sgemm_nt(b, din, b, input, input, &mut gram_a[..b * b]);
+        let delta = &deltas[l];
+        gemm::sgemm_nt(b, dout, b, delta, delta, &mut gram_d[..b * b]);
+        for (i, sqi) in out.iter_mut().enumerate() {
+            *sqi += (gram_a[i * b + i] as f64 + 1.0) * gram_d[i * b + i] as f64;
         }
     }
-    sq
 }
 
 /// Scale every layer's delta row i by nu_i in place — the
@@ -518,17 +558,17 @@ pub fn scale_delta_rows(spec: &MlpSpec, nu: &[f32], s: &mut BatchScratch) {
     }
 }
 
-/// Accumulate the batch-summed gradients from the current deltas:
-/// grads[W_l] += tapsᵀ·Δ_l (`sgemm_tn`), grads[b_l] += column sums of
-/// Δ_l. With `scale` (the `reweight_pallas` path) the per-example clip
-/// factor is fused into both reductions instead of materializing a
-/// weighted delta matrix.
+/// Accumulate the batch-summed gradients from the current deltas into
+/// the arena: grads[W_l] += tapsᵀ·Δ_l (`sgemm_tn`), grads[b_l] +=
+/// column sums of Δ_l. With `scale` (the `reweight_pallas` path) the
+/// per-example clip factor is fused into both reductions instead of
+/// materializing a weighted delta matrix.
 pub fn grads_from_deltas(
     spec: &MlpSpec,
     x: &[f32],
     s: &BatchScratch,
     scale: Option<&[f32]>,
-    grads: &mut [Vec<f32>],
+    grads: &mut GradVec,
 ) {
     let b = s.b;
     for l in 0..spec.n_layers() {
@@ -543,24 +583,31 @@ pub fn grads_from_deltas(
                 input,
                 nu,
                 delta,
-                &mut grads[2 * l],
+                grads.param_mut(2 * l),
             ),
-            None => gemm::sgemm_tn(din, b, dout, input, delta, &mut grads[2 * l]),
+            None => gemm::sgemm_tn(
+                din,
+                b,
+                dout,
+                input,
+                delta,
+                grads.param_mut(2 * l),
+            ),
         }
-        gemm::col_sums(b, dout, delta, scale, &mut grads[2 * l + 1]);
+        gemm::col_sums(b, dout, delta, scale, grads.param_mut(2 * l + 1));
     }
 }
 
-/// Materialize example i's full gradient into `out` (overwriting) from
-/// the batch scratch rows, returning the squared norm computed from
-/// the materialized values — the multiLoss structure, deliberately
-/// heavier than the tap trick.
+/// Materialize example i's full gradient into the arena (overwriting)
+/// from the batch scratch rows, returning the squared norm computed
+/// from the materialized values — the multiLoss structure,
+/// deliberately heavier than the tap trick.
 pub fn materialize_grad_row(
     spec: &MlpSpec,
     x: &[f32],
     s: &BatchScratch,
     i: usize,
-    out: &mut [Vec<f32>],
+    out: &mut GradVec,
 ) -> f64 {
     let mut sq = 0.0f64;
     for l in 0..spec.n_layers() {
@@ -571,7 +618,7 @@ pub fn materialize_grad_row(
             &s.acts[l - 1][i * din..(i + 1) * din]
         };
         let delta = &s.deltas[l][i * dout..(i + 1) * dout];
-        let gw = &mut out[2 * l];
+        let gw = out.param_mut(2 * l);
         for (k, &xk) in input.iter().enumerate() {
             let row = &mut gw[k * dout..(k + 1) * dout];
             for (g, &d) in row.iter_mut().zip(delta.iter()) {
@@ -579,13 +626,115 @@ pub fn materialize_grad_row(
                 sq += (*g as f64) * (*g as f64);
             }
         }
-        let gb = &mut out[2 * l + 1];
+        let gb = out.param_mut(2 * l + 1);
         for (g, &d) in gb.iter_mut().zip(delta.iter()) {
             *g = d;
             sq += (*g as f64) * (*g as f64);
         }
     }
     sq
+}
+
+// ---------------------------------------------------------------------
+// ModelFamily registration (taps::FamilyRegistry "mlp")
+// ---------------------------------------------------------------------
+
+impl ModelFamily for MlpSpec {
+    fn family(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn grad_layout(&self) -> Vec<usize> {
+        self.grad_lens()
+    }
+
+    fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+        self.check_params(config, host)
+    }
+
+    fn new_scratch(&self) -> Box<ScratchAny> {
+        Box::new(BatchScratch::for_spec(self, self.batch))
+    }
+
+    fn forward_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        labels: &[i32],
+        s: &mut ScratchAny,
+    ) -> (f64, usize) {
+        let scr = downcast_scratch::<BatchScratch>(s, "mlp");
+        forward_batch(self, params, x, labels, scr)
+    }
+
+    fn backward_batch(
+        &self,
+        params: &[Vec<f32>],
+        labels: &[i32],
+        nu: Option<&[f32]>,
+        s: &mut ScratchAny,
+    ) {
+        let scr = downcast_scratch::<BatchScratch>(s, "mlp");
+        backward_batch(self, params, labels, nu, scr)
+    }
+
+    fn sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<BatchScratch>(s, "mlp");
+        tap_sq_norms(self, x, scr, out)
+    }
+
+    fn gram_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<BatchScratch>(s, "mlp");
+        gram_sq_norms(self, x, scr, out)
+    }
+
+    /// On a dense family the row-norm product *is* the exact norm —
+    /// one tap row per example — so the bound coincides with
+    /// `sq_norms`.
+    fn tap_bound_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<BatchScratch>(s, "mlp");
+        tap_sq_norms(self, x, scr, out)
+    }
+
+    fn scale_delta_rows(&self, nu: &[f32], s: &mut ScratchAny) {
+        let scr = downcast_scratch::<BatchScratch>(s, "mlp");
+        scale_delta_rows(self, nu, scr)
+    }
+
+    fn grads_from_deltas(
+        &self,
+        x: &[f32],
+        s: &mut ScratchAny,
+        scale: Option<&[f32]>,
+        grads: &mut GradVec,
+    ) {
+        let scr = downcast_scratch::<BatchScratch>(s, "mlp");
+        grads_from_deltas(self, x, scr, scale, grads)
+    }
+
+    fn materialize_grad_row(
+        &self,
+        x: &[f32],
+        s: &ScratchAny,
+        i: usize,
+        out: &mut GradVec,
+        _work: &mut Vec<f64>,
+    ) -> f64 {
+        let scr = downcast_scratch_ref::<BatchScratch>(s, "mlp");
+        materialize_grad_row(self, x, scr, i, out)
+    }
 }
 
 #[cfg(test)]
@@ -720,9 +869,11 @@ mod tests {
         let mut bs = BatchScratch::for_spec(&spec, b);
         let (loss_sum, _) = forward_batch(&spec, &params, &x, &labels, &mut bs);
         backward_batch(&spec, &params, &labels, None, &mut bs);
-        let tap = tap_sq_norms(&spec, &x, &bs);
-        let gram = gram_sq_norms(&spec, &x, &bs);
-        let mut bgrads = spec.zero_grads();
+        let mut tap = vec![0.0f64; b];
+        tap_sq_norms(&spec, &x, &bs, &mut tap);
+        let mut gram = vec![0.0f64; b];
+        gram_sq_norms(&spec, &x, &mut bs, &mut gram);
+        let mut bgrads = GradVec::with_layout(&spec.grad_lens());
         grads_from_deltas(&spec, &x, &bs, None, &mut bgrads);
 
         let mut s = Scratch::for_spec(&spec);
@@ -757,8 +908,10 @@ mod tests {
             accumulate_weighted(&spec, xi, &s, 1.0, &mut sgrads);
         }
         assert!((loss_sum - sloss).abs() / sloss.abs().max(1e-9) < 1e-6);
-        for (t, (bg, sg)) in bgrads.iter().zip(&sgrads).enumerate() {
-            for (j, (&bv, &sv)) in bg.iter().zip(sg.iter()).enumerate() {
+        for (t, sg) in sgrads.iter().enumerate() {
+            for (j, (&bv, &sv)) in
+                bgrads.param(t).iter().zip(sg.iter()).enumerate()
+            {
                 assert!(
                     (bv - sv).abs() < 1e-5,
                     "grad[{t}][{j}]: batched {bv} vs scalar {sv}"
@@ -767,15 +920,13 @@ mod tests {
         }
         // the fused scaled GEMM matches scaling the delta rows first
         let nu: Vec<f32> = (0..b).map(|i| 0.2 + 0.1 * i as f32).collect();
-        let mut fused = spec.zero_grads();
+        let mut fused = GradVec::with_layout(&spec.grad_lens());
         grads_from_deltas(&spec, &x, &bs, Some(&nu), &mut fused);
         scale_delta_rows(&spec, &nu, &mut bs);
-        let mut scaled = spec.zero_grads();
+        let mut scaled = GradVec::with_layout(&spec.grad_lens());
         grads_from_deltas(&spec, &x, &bs, None, &mut scaled);
-        for (f, sc) in fused.iter().zip(&scaled) {
-            for (&fv, &sv) in f.iter().zip(sc.iter()) {
-                assert!((fv - sv).abs() < 1e-5, "fused {fv} vs scaled {sv}");
-            }
+        for (&fv, &sv) in fused.flat().iter().zip(scaled.flat()) {
+            assert!((fv - sv).abs() < 1e-5, "fused {fv} vs scaled {sv}");
         }
     }
 
@@ -800,11 +951,11 @@ mod tests {
             backward(&spec, &params, xi, labels[i], &mut s);
             let mut want = spec.zero_grads();
             let sq_s = materialize_grad(&spec, xi, &s, &mut want);
-            let mut got = spec.zero_grads();
+            let mut got = GradVec::with_layout(&spec.grad_lens());
             let sq_b = materialize_grad_row(&spec, &x, &bs, i, &mut got);
             assert!((sq_s - sq_b).abs() / sq_s.max(1e-9) < 1e-6);
-            for (w, g) in want.iter().zip(&got) {
-                for (&wv, &gv) in w.iter().zip(g.iter()) {
+            for (t, w) in want.iter().enumerate() {
+                for (&wv, &gv) in w.iter().zip(got.param(t).iter()) {
                     assert!((wv - gv).abs() < 1e-6, "{wv} vs {gv}");
                 }
             }

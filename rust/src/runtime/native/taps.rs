@@ -1,16 +1,40 @@
-//! The tap-producer seam: `NativeStep` executes every clip method
-//! against this interface, so a model family only has to provide
-//! batched forward/backward passes that expose per-layer activation
-//! ("tap") and delta matrices plus per-layer gradient assembly — the
-//! seven clipping strategies, the norm tricks, and the bench matrix
-//! then come for free.
+//! The model-family seam of the native backend: an **open registry**
+//! of `ModelFamily` tap producers.
 //!
-//! Two families ship today:
-//!   - `Mlp` (`native/mlp.rs`): dense layers; taps are the B x d
-//!     layer inputs, one row per example.
-//!   - `Cnn` (`native/conv.rs`): conv layers lowered to im2col patch
-//!     matrices over the same `gemm` kernels; taps are (B·P) x K
-//!     patch matrices, P rows per example.
+//! `NativeStep` executes every clip method against the `ModelFamily`
+//! trait, so a family only has to provide batched forward/backward
+//! passes that expose per-layer activation ("tap") and delta matrices
+//! plus per-layer gradient assembly — the seven clipping strategies,
+//! the norm tricks, and the bench matrix then come for free. Families
+//! are resolved by the config's `model` string through a name-keyed
+//! `FamilyRegistry` on `NativeBackend`: adding a family (attention
+//! per-head taps, RNN timestep taps) is one new file implementing the
+//! trait plus one `register` call — zero dispatch edits anywhere.
+//!
+//! Two families register by default (`FamilyRegistry::builtin`):
+//!   - `"mlp"` (`native/mlp.rs`, `MlpSpec`): dense layers; taps are
+//!     the B x d layer inputs, one row per example.
+//!   - `"cnn"` (`native/conv.rs`, `ConvSpec`): conv layers lowered to
+//!     im2col patch matrices over the same `gemm` kernels; taps are
+//!     (B·P) x K patch matrices, P rows per example.
+//!
+//! # ModelFamily obligations
+//!
+//! Scratch: `new_scratch` returns the family's whole-batch buffer set,
+//! type-erased (`Box<ScratchAny>`); every other method downcasts it
+//! back (`downcast_scratch`). All scratch buffers must be **fully
+//! rewritten or explicitly cleared** by the passes that use them —
+//! `NativeStep` reuses one scratch across steps, and the warm-vs-cold
+//! bitwise tests pin that reuse changes no bits. Buffers may grow
+//! lazily, but never per-call: after the first (cold) execution the
+//! warm path must not allocate (`tests/no_alloc.rs`).
+//!
+//! Outputs: norm methods write into caller slices (`out: &mut [f64]`,
+//! len = batch); `grads_from_deltas`/`materialize_grad_row` write into
+//! a caller `GradVec` arena via its per-parameter views. Gradient
+//! assembly *accumulates* (`+=`) into `grads_from_deltas`'s target —
+//! the step zeroes the arena — while `materialize_grad_row`
+//! *overwrites* its target completely.
 //!
 //! The norm methods expose the paper's two routes plus the bound that
 //! separates them:
@@ -27,221 +51,197 @@
 //!     be used to clip alongside methods that use the exact norm. Kept
 //!     for diagnostics and the tap-vs-gram ordering tests.
 //!
-//! An enum rather than a trait object: two families today, static
-//! dispatch, and the scratch type stays concrete per family.
+//! Determinism: every method must be bitwise deterministic under the
+//! gemm module's contract (parallel only over disjoint outputs, fixed
+//! reduction orders) — `materialize_grad_row` in particular runs
+//! concurrently over examples against a shared scratch.
 
-use super::conv::{self, ConvScratch, ConvSpec};
-use super::mlp::{self, BatchScratch, MlpSpec};
 use crate::runtime::manifest::ConfigSpec;
+use crate::runtime::store::GradVec;
 use anyhow::{bail, Result};
+use std::any::Any;
+use std::collections::BTreeMap;
+
+/// Type-erased whole-batch scratch for one `ModelFamily`. Concretely a
+/// family-private struct (`BatchScratch`, `ConvScratch`, ...); only
+/// the owning family looks inside.
+pub type ScratchAny = dyn Any + Send + Sync;
+
+/// Downcast a family's scratch back to its concrete type. Panics with
+/// the family name on a mismatch — that is a plumbing bug (a scratch
+/// can only come from the same family's `new_scratch`), never a user
+/// error.
+pub fn downcast_scratch<'a, T: 'static>(
+    s: &'a mut ScratchAny,
+    family: &str,
+) -> &'a mut T {
+    match s.downcast_mut::<T>() {
+        Some(t) => t,
+        None => panic!("scratch does not belong to the {family} family"),
+    }
+}
+
+/// Shared-reference variant of `downcast_scratch` (for the methods
+/// that read the scratch concurrently, e.g. `materialize_grad_row`).
+pub fn downcast_scratch_ref<'a, T: 'static>(
+    s: &'a ScratchAny,
+    family: &str,
+) -> &'a T {
+    match s.downcast_ref::<T>() {
+        Some(t) => t,
+        None => panic!("scratch does not belong to the {family} family"),
+    }
+}
 
 /// A model family's batched tap producer, parsed from a manifest
-/// config.
-pub enum TapModel {
-    Mlp(MlpSpec),
-    Cnn(ConvSpec),
-}
+/// config. See the module docs for the full obligations.
+pub trait ModelFamily: Send + Sync {
+    /// Registry name of this family ("mlp", "cnn", ...).
+    fn family(&self) -> &'static str;
 
-/// Whole-batch forward/backward buffers for one `TapModel`.
-pub enum TapScratch {
-    Mlp(BatchScratch),
-    Cnn(ConvScratch),
-}
-
-impl TapModel {
-    /// Dispatch on the config's model family.
-    pub fn from_config(cfg: &ConfigSpec) -> Result<TapModel> {
-        match cfg.model.as_str() {
-            "mlp" => Ok(TapModel::Mlp(MlpSpec::from_config(cfg)?)),
-            "cnn" => Ok(TapModel::Cnn(ConvSpec::from_config(cfg)?)),
-            other => bail!(
-                "native backend has no tap producer for model family \
-                 {other:?} (config {})",
-                cfg.name
-            ),
-        }
-    }
-
-    pub fn family(&self) -> &'static str {
-        match self {
-            TapModel::Mlp(_) => "mlp",
-            TapModel::Cnn(_) => "cnn",
-        }
-    }
-
-    pub fn batch(&self) -> usize {
-        match self {
-            TapModel::Mlp(m) => m.batch,
-            TapModel::Cnn(m) => m.batch,
-        }
-    }
+    /// The config's batch size (the leading dimension of every pass).
+    fn batch(&self) -> usize;
 
     /// Flat input elements per example.
-    pub fn d_in(&self) -> usize {
-        match self {
-            TapModel::Mlp(m) => m.d_in,
-            TapModel::Cnn(m) => m.d_in,
-        }
-    }
+    fn d_in(&self) -> usize;
 
-    pub fn n_classes(&self) -> usize {
-        match self {
-            TapModel::Mlp(m) => m.n_classes,
-            TapModel::Cnn(m) => m.n_classes,
-        }
-    }
+    fn n_classes(&self) -> usize;
+
+    /// Per-parameter element counts in manifest order — the gradient
+    /// arena layout (`GradVec::ensure_layout`).
+    fn grad_layout(&self) -> Vec<usize>;
 
     /// Check the param store's tensor count and per-tensor lengths
     /// against the spec; `config` names the config in errors.
-    pub fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
-        match self {
-            TapModel::Mlp(m) => m.validate_params(config, host),
-            TapModel::Cnn(m) => m.validate_params(config, host),
-        }
-    }
+    fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()>;
 
-    /// Flat gradient buffers in manifest order.
-    pub fn zero_grads(&self) -> Vec<Vec<f32>> {
-        match self {
-            TapModel::Mlp(m) => m.zero_grads(),
-            TapModel::Cnn(m) => m.zero_grads(),
-        }
-    }
-
-    pub fn new_scratch(&self, b: usize) -> TapScratch {
-        match self {
-            TapModel::Mlp(m) => TapScratch::Mlp(BatchScratch::for_spec(m, b)),
-            TapModel::Cnn(m) => TapScratch::Cnn(ConvScratch::for_spec(m, b)),
-        }
-    }
+    /// Allocate this family's whole-batch forward/backward buffers.
+    fn new_scratch(&self) -> Box<ScratchAny>;
 
     /// Batched forward over the staged batch; fills the scratch taps
     /// and returns (f64 loss sum, correct-prediction count).
-    pub fn forward_batch(
+    fn forward_batch(
         &self,
         params: &[Vec<f32>],
         x: &[f32],
         labels: &[i32],
-        s: &mut TapScratch,
-    ) -> (f64, usize) {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
-                mlp::forward_batch(m, params, x, labels, s)
-            }
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
-                conv::forward_batch(m, params, x, labels, s)
-            }
-            _ => unreachable!("tap scratch does not match the model family"),
-        }
-    }
+        s: &mut ScratchAny,
+    ) -> (f64, usize);
 
     /// Batched backward (after `forward_batch`); `nu` runs the
     /// reweighted pass (loss Σ_i nu_i·l_i).
-    pub fn backward_batch(
+    fn backward_batch(
         &self,
         params: &[Vec<f32>],
         labels: &[i32],
         nu: Option<&[f32]>,
-        s: &mut TapScratch,
-    ) {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
-                mlp::backward_batch(m, params, labels, nu, s)
-            }
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
-                conv::backward_batch(m, params, labels, nu, s)
-            }
-            _ => unreachable!("tap scratch does not match the model family"),
-        }
-    }
+        s: &mut ScratchAny,
+    );
 
     /// Exact per-example squared gradient norms — what every clipping
-    /// method uses.
-    pub fn sq_norms(&self, x: &[f32], s: &TapScratch) -> Vec<f64> {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => mlp::tap_sq_norms(m, x, s),
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => conv::sq_norms(m, s),
-            _ => unreachable!("tap scratch does not match the model family"),
-        }
-    }
+    /// method uses. Writes into `out` (len = batch).
+    fn sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]);
 
     /// Exact per-example squared norms through the Gram-matrix
-    /// structure (paper Sec 5.2).
-    pub fn gram_sq_norms(&self, x: &[f32], s: &TapScratch) -> Vec<f64> {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
-                mlp::gram_sq_norms(m, x, s)
-            }
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => conv::gram_sq_norms(m, s),
-            _ => unreachable!("tap scratch does not match the model family"),
-        }
-    }
+    /// structure (paper Sec 5.2). Writes into `out` (len = batch).
+    fn gram_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]);
 
     /// The row-norm-product bound: equal to `sq_norms` on MLPs, an
-    /// upper bound (tap ≥ gram) on conv. Diagnostics/tests only.
-    pub fn tap_bound_sq_norms(&self, x: &[f32], s: &TapScratch) -> Vec<f64> {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => mlp::tap_sq_norms(m, x, s),
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
-                conv::tap_bound_sq_norms(m, s)
-            }
-            _ => unreachable!("tap scratch does not match the model family"),
-        }
-    }
+    /// upper bound (tap ≥ gram) under weight sharing.
+    /// Diagnostics/tests only — never used to clip.
+    fn tap_bound_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]);
 
     /// Scale example i's delta rows by nu_i in place (the
     /// `reweight_direct` assembly).
-    pub fn scale_delta_rows(&self, nu: &[f32], s: &mut TapScratch) {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
-                mlp::scale_delta_rows(m, nu, s)
-            }
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
-                conv::scale_delta_rows(m, nu, s)
-            }
-            _ => unreachable!("tap scratch does not match the model family"),
-        }
-    }
+    fn scale_delta_rows(&self, nu: &[f32], s: &mut ScratchAny);
 
-    /// Accumulate the batch-summed gradients from the current deltas;
-    /// `scale` fuses per-example clip factors into the reductions (the
-    /// `reweight_pallas` path).
-    pub fn grads_from_deltas(
+    /// Accumulate the batch-summed gradients from the current deltas
+    /// into the arena; `scale` fuses per-example clip factors into the
+    /// reductions (the `reweight_pallas` path).
+    fn grads_from_deltas(
         &self,
         x: &[f32],
-        s: &TapScratch,
+        s: &mut ScratchAny,
         scale: Option<&[f32]>,
-        grads: &mut [Vec<f32>],
-    ) {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
-                mlp::grads_from_deltas(m, x, s, scale, grads)
-            }
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
-                conv::grads_from_deltas(m, s, scale, grads)
-            }
-            _ => unreachable!("tap scratch does not match the model family"),
-        }
-    }
+        grads: &mut GradVec,
+    );
 
-    /// Materialize example i's full gradient (the multiLoss
-    /// structure), returning its squared norm.
-    pub fn materialize_grad_row(
+    /// Materialize example i's full gradient (the multiLoss structure)
+    /// into `out`, overwriting it, and return its squared norm. `work`
+    /// is a caller-owned grow-only f64 workspace for families whose
+    /// per-example reduction needs one (conv); MLPs ignore it. Safe to
+    /// call concurrently over distinct `i` against a shared scratch.
+    fn materialize_grad_row(
         &self,
         x: &[f32],
-        s: &TapScratch,
+        s: &ScratchAny,
         i: usize,
-        out: &mut [Vec<f32>],
-    ) -> f64 {
-        match (self, s) {
-            (TapModel::Mlp(m), TapScratch::Mlp(s)) => {
-                mlp::materialize_grad_row(m, x, s, i, out)
-            }
-            (TapModel::Cnn(m), TapScratch::Cnn(s)) => {
-                conv::materialize_grad_row(m, s, i, out)
-            }
-            _ => unreachable!("tap scratch does not match the model family"),
+        out: &mut GradVec,
+        work: &mut Vec<f64>,
+    ) -> f64;
+}
+
+/// Builder: parse a manifest config into a family instance. Plain fn
+/// pointer so registries stay `Clone` and registration stays a
+/// one-liner.
+pub type FamilyBuilder = fn(&ConfigSpec) -> Result<Box<dyn ModelFamily>>;
+
+/// Name-keyed `ModelFamily` registry: `NativeBackend` resolves a
+/// config's `model` string here, and **only** here — there is no
+/// match-on-family-name anywhere outside registration, which is what
+/// makes the family set open.
+#[derive(Clone)]
+pub struct FamilyRegistry {
+    builders: BTreeMap<String, FamilyBuilder>,
+}
+
+impl FamilyRegistry {
+    /// Registry with no families (tests, fully custom backends).
+    pub fn empty() -> FamilyRegistry {
+        FamilyRegistry { builders: BTreeMap::new() }
+    }
+
+    /// The built-in families: `mlp` (dense) and `cnn` (im2col conv).
+    pub fn builtin() -> FamilyRegistry {
+        let mut r = FamilyRegistry::empty();
+        r.register("mlp", |cfg| {
+            Ok(Box::new(super::mlp::MlpSpec::from_config(cfg)?))
+        });
+        r.register("cnn", |cfg| {
+            Ok(Box::new(super::conv::ConvSpec::from_config(cfg)?))
+        });
+        r
+    }
+
+    /// Register (or replace) the builder for family `name`.
+    pub fn register(&mut self, name: &str, builder: FamilyBuilder) {
+        self.builders.insert(name.to_string(), builder);
+    }
+
+    /// Registered family names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.builders.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Build the tap producer for `cfg.model`, or a clear error naming
+    /// the unknown family and the registered ones.
+    pub fn build(&self, cfg: &ConfigSpec) -> Result<Box<dyn ModelFamily>> {
+        match self.builders.get(&cfg.model) {
+            Some(b) => b(cfg),
+            None => bail!(
+                "native backend has no registered tap producer for model \
+                 family {:?} (config {}); registered families: {:?}",
+                cfg.model,
+                cfg.name,
+                self.names()
+            ),
         }
+    }
+}
+
+impl Default for FamilyRegistry {
+    fn default() -> Self {
+        FamilyRegistry::builtin()
     }
 }
 
@@ -297,9 +297,8 @@ mod tests {
     use crate::runtime::manifest::ParamSpec;
     use std::collections::BTreeMap;
 
-    #[test]
-    fn unknown_family_is_a_clear_error() {
-        let cfg = ConfigSpec {
+    fn rnn_cfg() -> ConfigSpec {
+        ConfigSpec {
             name: "rnn1_mnist_b4".into(),
             model: "rnn".into(),
             dataset: "mnist".into(),
@@ -315,10 +314,42 @@ mod tests {
                 ParamSpec { name: "b".into(), shape: vec![10] },
             ],
             artifacts: BTreeMap::new(),
-        };
-        let err = TapModel::from_config(&cfg).unwrap_err();
+        }
+    }
+
+    #[test]
+    fn unknown_family_is_a_clear_error() {
+        let err = FamilyRegistry::builtin().build(&rnn_cfg()).unwrap_err();
         let msg = format!("{err:#}");
-        assert!(msg.contains("rnn") && msg.contains("tap producer"), "{msg}");
+        assert!(
+            msg.contains("rnn") && msg.contains("tap producer"),
+            "{msg}"
+        );
+        // ...and the error lists what *is* registered
+        assert!(msg.contains("mlp") && msg.contains("cnn"), "{msg}");
+    }
+
+    #[test]
+    fn registry_is_open_registration_resolves() {
+        // a custom builder registered under a new name resolves; the
+        // builtin families stay untouched
+        let mut r = FamilyRegistry::builtin();
+        assert_eq!(r.names(), vec!["cnn", "mlp"]);
+        // route "rnn" to the mlp builder as a stand-in: registration
+        // alone (no dispatch edits) makes the family resolvable
+        fn rnn_as_mlp(
+            cfg: &ConfigSpec,
+        ) -> Result<Box<dyn ModelFamily>> {
+            let mut mlp_cfg = cfg.clone();
+            mlp_cfg.model = "mlp".into();
+            mlp_cfg.input_shape = vec![cfg.batch, 784];
+            Ok(Box::new(super::super::mlp::MlpSpec::from_config(&mlp_cfg)?))
+        }
+        r.register("rnn", rnn_as_mlp);
+        let fam = r.build(&rnn_cfg()).unwrap();
+        assert_eq!(fam.batch(), 4);
+        assert_eq!(fam.d_in(), 784);
+        assert_eq!(fam.grad_layout(), vec![784 * 10, 10]);
     }
 
     #[test]

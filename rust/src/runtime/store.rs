@@ -1,22 +1,239 @@
 //! Backend-neutral runtime state: host-side batch staging buffers,
-//! the parameter store, step outputs, and deterministic parameter
-//! initialization. Every `Backend` (native or PJRT) consumes these;
-//! nothing here depends on xla.
+//! the parameter store, the caller-owned step output arena
+//! (`StepOut`/`GradVec`), and deterministic parameter initialization.
+//! Every `Backend` (native or PJRT) consumes these; nothing here
+//! depends on xla.
 
 use super::manifest::ConfigSpec;
 use anyhow::{bail, Result};
 
-/// Structured results of one step execution.
-#[derive(Debug, Clone)]
+/// A flat per-parameter gradient buffer: one contiguous `f32`
+/// allocation plus per-parameter sub-ranges in manifest order. This is
+/// the storage every step writes its gradients into — one buffer, not
+/// one `Vec` per tensor — so a reused `StepOut` arena makes the warm
+/// step path allocation-free, and whole-gradient operations (noise,
+/// scaling, accumulation) are single flat passes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GradVec {
+    flat: Vec<f32>,
+    /// cumulative element offsets; `bounds[0] == 0`, param i spans
+    /// `bounds[i]..bounds[i+1]`
+    bounds: Vec<usize>,
+}
+
+impl Default for GradVec {
+    /// Same as `new` — the `bounds[0] == 0` invariant must hold even
+    /// for an empty buffer.
+    fn default() -> Self {
+        GradVec::new()
+    }
+}
+
+impl GradVec {
+    /// An empty buffer (no parameters); `ensure_layout` grows it.
+    pub fn new() -> GradVec {
+        GradVec { flat: Vec::new(), bounds: vec![0] }
+    }
+
+    /// Pre-sized buffer for per-parameter lengths `lens` (zeroed).
+    pub fn with_layout(lens: &[usize]) -> GradVec {
+        let mut g = GradVec::new();
+        g.ensure_layout(lens);
+        g
+    }
+
+    /// Pre-sized buffer matching a config's parameter tensors.
+    pub fn for_config(cfg: &ConfigSpec) -> GradVec {
+        let lens: Vec<usize> = cfg.params.iter().map(|p| p.elems()).collect();
+        GradVec::with_layout(&lens)
+    }
+
+    /// Build from per-tensor vectors (tests, artifact decoding).
+    pub fn from_vecs(vecs: &[Vec<f32>]) -> GradVec {
+        let lens: Vec<usize> = vecs.iter().map(|v| v.len()).collect();
+        let mut g = GradVec::with_layout(&lens);
+        for (i, v) in vecs.iter().enumerate() {
+            g.param_mut(i).copy_from_slice(v);
+        }
+        g
+    }
+
+    /// Whether the current layout is exactly `lens`.
+    pub fn layout_matches(&self, lens: &[usize]) -> bool {
+        self.bounds.len() == lens.len() + 1
+            && lens
+                .iter()
+                .enumerate()
+                .all(|(i, &l)| self.bounds[i + 1] - self.bounds[i] == l)
+    }
+
+    /// Adopt the layout `lens`, reallocating only on a change — the
+    /// warm path (same step, same config) never allocates here.
+    /// Contents are unspecified afterwards; call `zero` before
+    /// accumulating.
+    pub fn ensure_layout(&mut self, lens: &[usize]) {
+        if self.layout_matches(lens) {
+            return;
+        }
+        self.bounds.clear();
+        self.bounds.push(0);
+        let mut total = 0usize;
+        for &l in lens {
+            total += l;
+            self.bounds.push(total);
+        }
+        self.flat.clear();
+        self.flat.resize(total, 0.0);
+    }
+
+    /// Number of parameter tensors.
+    pub fn n_params(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total elements across all parameters.
+    pub fn total_elems(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Parameter i's gradient slice.
+    pub fn param(&self, i: usize) -> &[f32] {
+        &self.flat[self.bounds[i]..self.bounds[i + 1]]
+    }
+
+    /// Parameter i's gradient slice, mutable.
+    pub fn param_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.flat[self.bounds[i]..self.bounds[i + 1]]
+    }
+
+    /// All gradients as one flat slice (concatenated manifest order).
+    pub fn flat(&self) -> &[f32] {
+        &self.flat
+    }
+
+    /// All gradients as one flat mutable slice.
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.flat
+    }
+
+    /// Iterate the per-parameter views in manifest order.
+    pub fn params(&self) -> impl Iterator<Item = &[f32]> {
+        (0..self.n_params()).map(move |i| self.param(i))
+    }
+
+    /// Zero every element (no reallocation).
+    pub fn zero(&mut self) {
+        self.flat.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Multiply every element by `s`.
+    pub fn scale(&mut self, s: f32) {
+        self.flat.iter_mut().for_each(|v| *v *= s);
+    }
+
+    /// `self += other` elementwise; layouts must match. A hard assert,
+    /// not a debug one: a silent `zip` truncation here would drop part
+    /// of an accumulated gradient — in the nxBP loop that is a wrong
+    /// DP update with no error, exactly the failure mode this repo
+    /// hard-errors on elsewhere.
+    pub fn add(&mut self, other: &GradVec) {
+        assert_eq!(self.bounds, other.bounds, "GradVec layout mismatch");
+        for (a, &b) in self.flat.iter_mut().zip(&other.flat) {
+            *a += b;
+        }
+    }
+
+    /// `self += s * other` elementwise; layouts must match (hard
+    /// assert — see `add`).
+    pub fn add_scaled(&mut self, other: &GradVec, s: f32) {
+        assert_eq!(self.bounds, other.bounds, "GradVec layout mismatch");
+        for (a, &b) in self.flat.iter_mut().zip(&other.flat) {
+            *a += s * b;
+        }
+    }
+}
+
+/// Caller-owned, reusable step output arena. A `StepFn::run_into`
+/// call writes its results here instead of allocating return values;
+/// reusing one arena across steps makes the warm execution path
+/// allocation-free (pinned by `tests/no_alloc.rs`).
+///
+/// Layout (pre-sized by `for_config`, grown on demand otherwise):
+///   - `grads`: flat gradient buffer with per-parameter views
+///     (`GradVec`), zeroed by the step itself at the start of every
+///     `run_into` — callers never need to clear it;
+///   - `norms`: per-example gradient norms for the norm-reporting
+///     methods (capacity = batch), absent otherwise;
+///   - `loss` / `correct`: scalars (`correct` is the
+///     correct-prediction *count* of the fwd artifact — a `u32`, not
+///     a float).
+#[derive(Debug, Clone, Default)]
 pub struct StepOut {
-    /// per-parameter gradients (host f32), same order as the manifest
-    pub grads: Vec<Vec<f32>>,
+    /// per-parameter gradients, flat (host f32), manifest order
+    pub grads: GradVec,
     pub loss: f32,
-    /// per-example gradient norms (reweight/multiloss) or the single
-    /// example's norm (naive1)
-    pub norms: Option<Vec<f32>>,
+    norms: Vec<f32>,
+    has_norms: bool,
     /// correct-prediction count (fwd artifact only)
-    pub correct: Option<f32>,
+    pub correct: Option<u32>,
+}
+
+impl StepOut {
+    /// An empty arena; the first `run_into` sizes it (one-shot
+    /// callers via `StepFn::run` use this).
+    pub fn new() -> StepOut {
+        StepOut::default()
+    }
+
+    /// Arena pre-sized for `cfg`: gradient layout from the config's
+    /// parameter tensors, norms capacity for one batch.
+    pub fn for_config(cfg: &ConfigSpec) -> StepOut {
+        StepOut {
+            grads: GradVec::for_config(cfg),
+            loss: 0.0,
+            norms: Vec::with_capacity(cfg.batch),
+            has_norms: false,
+            correct: None,
+        }
+    }
+
+    /// Begin a step: adopt the gradient layout `lens` (no-op when it
+    /// already matches), zero the gradient buffer, clear norms and
+    /// scalars. Steps call this first — the arena's previous contents
+    /// never leak into a new step's outputs.
+    pub fn reset(&mut self, lens: &[usize]) {
+        self.grads.ensure_layout(lens);
+        self.grads.zero();
+        self.loss = 0.0;
+        self.norms.clear();
+        self.has_norms = false;
+        self.correct = None;
+    }
+
+    /// The per-example norms, if this step produced them.
+    pub fn norms(&self) -> Option<&[f32]> {
+        if self.has_norms {
+            Some(&self.norms)
+        } else {
+            None
+        }
+    }
+
+    /// Mark norms present and return the n-slot buffer to fill
+    /// (zero-initialized; reuses capacity on the warm path).
+    pub fn norms_fill(&mut self, n: usize) -> &mut [f32] {
+        self.norms.clear();
+        self.norms.resize(n, 0.0);
+        self.has_norms = true;
+        &mut self.norms
+    }
+
+    /// Copy `src` in as this step's per-example norms.
+    pub fn set_norms(&mut self, src: &[f32]) {
+        self.norms.clear();
+        self.norms.extend_from_slice(src);
+        self.has_norms = true;
+    }
 }
 
 /// The clip factor nu = min(1, clip / norm) of one per-example
@@ -241,5 +458,64 @@ mod tests {
         assert_eq!(stage.labels.len(), 4);
         assert_eq!(stage.input_dims, vec![4, 3]);
         assert_eq!(stage.batch(), 4);
+    }
+
+    #[test]
+    fn grad_vec_layout_views_and_ops() {
+        let mut g = GradVec::with_layout(&[6, 2]);
+        assert_eq!(g.n_params(), 2);
+        assert_eq!(g.total_elems(), 8);
+        assert_eq!(g.param(0).len(), 6);
+        assert_eq!(g.param(1).len(), 2);
+        g.param_mut(1).copy_from_slice(&[1.0, 2.0]);
+        assert_eq!(&g.flat()[6..], &[1.0, 2.0]);
+        // ensure_layout is a no-op on a matching layout (same storage)
+        let ptr = g.flat().as_ptr();
+        g.ensure_layout(&[6, 2]);
+        assert_eq!(g.flat().as_ptr(), ptr);
+        assert_eq!(&g.flat()[6..], &[1.0, 2.0]);
+        // ...and rebuilds (zeroed) on a different one
+        g.ensure_layout(&[3]);
+        assert_eq!(g.n_params(), 1);
+        assert!(g.flat().iter().all(|&v| v == 0.0));
+        // arithmetic
+        let a = GradVec::from_vecs(&[vec![1.0, 2.0], vec![3.0]]);
+        let mut b = GradVec::from_vecs(&[vec![10.0, 10.0], vec![10.0]]);
+        b.add_scaled(&a, 2.0);
+        assert_eq!(b.flat(), &[12.0, 14.0, 16.0]);
+        b.add(&a);
+        assert_eq!(b.flat(), &[13.0, 16.0, 19.0]);
+        b.scale(0.5);
+        assert_eq!(b.flat(), &[6.5, 8.0, 9.5]);
+        assert_eq!(b.params().count(), 2);
+    }
+
+    #[test]
+    fn step_out_reset_and_norms() {
+        let cfg = dummy_cfg();
+        let mut out = StepOut::for_config(&cfg);
+        assert_eq!(out.grads.total_elems(), 8);
+        assert!(out.norms().is_none());
+        out.loss = 3.0;
+        out.correct = Some(2);
+        out.grads.param_mut(0)[0] = 9.0;
+        {
+            let n = out.norms_fill(4);
+            n[0] = 1.5;
+        }
+        assert_eq!(out.norms().unwrap().len(), 4);
+        assert_eq!(out.norms().unwrap()[0], 1.5);
+        out.set_norms(&[0.5, 0.25]);
+        assert_eq!(out.norms().unwrap(), &[0.5, 0.25]);
+        // reset clears everything a step could have written
+        out.reset(&[6, 2]);
+        assert_eq!(out.loss, 0.0);
+        assert!(out.norms().is_none());
+        assert!(out.correct.is_none());
+        assert!(out.grads.flat().iter().all(|&v| v == 0.0));
+        // an empty arena grows on first reset (one-shot callers)
+        let mut fresh = StepOut::new();
+        fresh.reset(&[6, 2]);
+        assert_eq!(fresh.grads.total_elems(), 8);
     }
 }

@@ -1,0 +1,90 @@
+//! Heap-allocation accounting: a counting wrapper around the system
+//! allocator, installed process-wide as the crate's global allocator.
+//!
+//! Two consumers rely on the counter:
+//!   - `tests/no_alloc.rs` asserts the warm `StepFn::run_into` path
+//!     performs **zero** heap allocations (the point of the caller-
+//!     owned `StepOut` arena);
+//!   - the bench matrix probes the same property at bench time and
+//!     records it as `steps_alloc_free` in the `BENCH_history.jsonl`
+//!     trajectory, so CI notices if an allocation sneaks back into
+//!     the hot loop.
+//!
+//! Cost: one relaxed atomic increment per allocation — unmeasurable
+//! next to the allocation itself, so the counter stays on in release
+//! builds (the bench probe needs it there). Installation is gated on
+//! the default-on `alloc-count` cargo feature: a downstream consumer
+//! of the library that wants its own `#[global_allocator]` builds
+//! with `default-features = false`, and `counting_enabled()` lets the
+//! probe report "not measured" instead of a vacuous zero delta.
+//! (A plain `#[cfg(test)]` gate would not work: integration tests
+//! link the library compiled *without* `cfg(test)`.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper that counts every allocation event
+/// (`alloc`, `alloc_zeroed`, and growth via `realloc`). Frees are not
+/// counted — the probe looks for allocation pressure, not leaks.
+pub struct CountingAllocator;
+
+// SAFETY: delegates every operation verbatim to `System`; the only
+// addition is a relaxed counter increment, which cannot affect
+// allocator correctness.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Whether the counting allocator is actually installed. When the
+/// `alloc-count` feature is off, `allocation_count` never moves — a
+/// delta of zero would then be vacuous, so probes must check this
+/// first.
+pub fn counting_enabled() -> bool {
+    cfg!(feature = "alloc-count")
+}
+
+/// Total allocation events since process start (process-wide — callers
+/// measuring a delta must not race other allocating threads).
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(feature = "alloc-count")]
+    #[test]
+    fn counter_observes_allocations() {
+        let before = allocation_count();
+        let v: Vec<u64> = Vec::with_capacity(64);
+        std::hint::black_box(&v);
+        assert!(
+            allocation_count() > before,
+            "a fresh Vec allocation must bump the counter"
+        );
+    }
+}

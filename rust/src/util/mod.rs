@@ -1,5 +1,7 @@
-//! General-purpose substrates: JSON, logging, statistics.
+//! General-purpose substrates: JSON, logging, statistics, and the
+//! counting global allocator behind the zero-allocation step checks.
 
+pub mod alloc;
 pub mod json;
 pub mod logging;
 pub mod stats;

@@ -159,6 +159,7 @@ fn prop_composition_commutes() {
 /// gradients, zero gradient is a fixed point for SGD.
 #[test]
 fn prop_optimizers_stay_finite() {
+    use fastclip::runtime::GradVec;
     prop::check(40, |g| {
         let n_tensors = g.usize_in(1..4);
         let sizes: Vec<usize> = (0..n_tensors).map(|_| g.usize_in(1..64)).collect();
@@ -168,18 +169,15 @@ fn prop_optimizers_stay_finite() {
         let mut sgd = Sgd::new(g.f64_in(1e-4, 1e-1));
         let mut noise = Gaussian::new(ChaCha20::seeded(g.u64(), 0));
         for _ in 0..20 {
-            let mut grads: Vec<Vec<f32>> =
-                sizes.iter().map(|&n| vec![0.0f32; n]).collect();
-            for gr in grads.iter_mut() {
-                noise.add_noise_f32(gr, 2.0);
-            }
+            let mut grads = GradVec::with_layout(&sizes);
+            noise.add_noise_f32(grads.flat_mut(), 2.0);
             adam.step(&mut params, &grads);
         }
         if params.iter().flatten().any(|x| !x.is_finite()) {
             return Err("adam produced non-finite params".into());
         }
         let snapshot = params.clone();
-        let zero: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        let zero = GradVec::with_layout(&sizes);
         sgd.step(&mut params, &zero);
         if params != snapshot {
             return Err("sgd moved on zero gradient".into());

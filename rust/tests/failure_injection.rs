@@ -182,18 +182,19 @@ impl StepFn for NoNormStep {
         "naive1"
     }
 
-    fn run(
+    fn run_into(
         &self,
         _params: &ParamStore,
         _stage: &BatchStage,
         _clip: Option<f32>,
-    ) -> anyhow::Result<StepOut> {
-        Ok(StepOut {
-            grads: self.elems.iter().map(|&n| vec![0.0; n]).collect(),
-            loss: 0.1,
-            norms: None, // the injected fault
-            correct: None,
-        })
+        out: &mut StepOut,
+    ) -> anyhow::Result<()> {
+        // gradients present, loss present... but no per-example norms
+        // (the injected fault): reset clears any norms a previous step
+        // left in the arena
+        out.reset(&self.elems);
+        out.loss = 0.1;
+        Ok(())
     }
 }
 
@@ -210,7 +211,10 @@ fn nxbp_missing_norm_is_an_error_not_unclipped() {
             .unwrap();
     let mut params = ParamStore::new(&cfg, None).unwrap();
     let stage = BatchStage::for_config(&cfg);
-    let err = computer.compute(&mut params, &stage, 1.0).unwrap_err();
+    let mut out = computer.new_out();
+    let err = computer
+        .compute(&mut params, &stage, 1.0, &mut out)
+        .unwrap_err();
     let msg = format!("{err:#}");
     assert!(
         msg.contains("norm") && msg.contains("unclipped"),

@@ -15,8 +15,11 @@ use fastclip::coordinator::{
     stage_batch, train, ClipMethod, GradComputer, TrainOptions,
 };
 use fastclip::data;
+#[allow(unused_imports)] // trait methods on Box<dyn ModelFamily>
+use fastclip::runtime::ModelFamily;
 use fastclip::runtime::{
-    init_params_glorot, Backend, BatchStage, NativeBackend, ParamStore,
+    init_params_glorot, Backend, BatchStage, GradVec, NativeBackend,
+    ParamStore,
 };
 use std::sync::OnceLock;
 
@@ -61,15 +64,13 @@ fn skip_no_pjrt(test: &str) {
     );
 }
 
-/// Max relative difference between two gradient sets.
-fn max_rel_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+/// Max relative difference between two gradient arenas.
+fn max_rel_diff(a: &GradVec, b: &GradVec) -> f32 {
+    assert_eq!(a.total_elems(), b.total_elems());
     let mut worst = 0f32;
-    for (x, y) in a.iter().zip(b) {
-        assert_eq!(x.len(), y.len());
-        for (&u, &v) in x.iter().zip(y) {
-            let denom = u.abs().max(v.abs()).max(1e-3);
-            worst = worst.max((u - v).abs() / denom);
-        }
+    for (&u, &v) in a.flat().iter().zip(b.flat()) {
+        let denom = u.abs().max(v.abs()).max(1e-3);
+        worst = worst.max((u - v).abs() / denom);
     }
     worst
 }
@@ -100,7 +101,9 @@ fn run_method_seeded(
         ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, param_seed)))
             .unwrap();
     let mut computer = GradComputer::new(backend, config, method).unwrap();
-    computer.compute(&mut params, &stage, clip).unwrap()
+    let mut out = computer.new_out();
+    computer.compute(&mut params, &stage, clip, &mut out).unwrap();
+    out
 }
 
 /// The paper's equivalence claim (Sec 5) on one backend: Reweight ==
@@ -118,8 +121,8 @@ fn assert_equivalence(backend: &dyn Backend, config: &str, tol: f32) {
     );
     assert!(max_rel_diff(&rw.grads, &nx.grads) < tol, "reweight vs nxbp");
     // per-example norms agree too
-    let (nr, nm) = (rw.norms.unwrap(), ml.norms.unwrap());
-    for (a, b) in nr.iter().zip(&nm) {
+    let (nr, nm) = (rw.norms().unwrap(), ml.norms().unwrap());
+    for (a, b) in nr.iter().zip(nm) {
         assert!((a - b).abs() / b.max(1e-3) < 1e-3, "{a} vs {b}");
     }
 }
@@ -156,7 +159,7 @@ fn native_method_matrix_agrees() {
         ["mlp2_mnist_b32", "mlp4_mnist_b16", "cnn2_mnist_b16", "cnn4_mnist_b16"]
     {
         let rw = run_method(native(), config, ClipMethod::Reweight, clip);
-        let rw_norms = rw.norms.as_ref().unwrap();
+        let rw_norms = rw.norms().unwrap();
         for m in others {
             let o = run_method(native(), config, m, clip);
             let diff = max_rel_diff(&rw.grads, &o.grads);
@@ -165,7 +168,7 @@ fn native_method_matrix_agrees() {
                 "reweight vs {} on {config}: rel diff {diff}",
                 m.name()
             );
-            let on = o.norms.as_ref().unwrap();
+            let on = o.norms().unwrap();
             assert_eq!(rw_norms.len(), on.len(), "{}", m.name());
             for (a, b) in rw_norms.iter().zip(on) {
                 assert!(
@@ -181,6 +184,58 @@ fn native_method_matrix_agrees() {
                 o.loss,
                 rw.loss
             );
+        }
+    }
+}
+
+/// Warm-vs-cold bitwise equivalence through the arena API, for all
+/// seven clip methods on both families: a computer whose step state
+/// and output arena are already warm (and dirty from a previous step)
+/// must produce results bitwise identical to a freshly constructed
+/// computer writing into a fresh arena. This is the reuse contract of
+/// `StepFn::run_into` (DESIGN.md §"Step execution contract").
+#[test]
+fn warm_arena_matches_cold_for_all_seven_methods() {
+    for config in ["mlp2_mnist_b16", "cnn2_mnist_b16"] {
+        let cfg = native().manifest().config(config).unwrap().clone();
+        let ds = data::load_dataset(&cfg.dataset, 256, 11).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        let batch: Vec<usize> = (0..cfg.batch).collect();
+        stage_batch(&ds, &batch, &mut stage);
+        let mut params =
+            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 13)))
+                .unwrap();
+        for method in ClipMethod::all() {
+            let mut warm =
+                GradComputer::new(native(), config, method).unwrap();
+            let mut out = warm.new_out();
+            // first pass dirties the arena and every scratch buffer...
+            warm.compute(&mut params, &stage, 0.5, &mut out).unwrap();
+            // ...second (warm) pass reuses all of it
+            warm.compute(&mut params, &stage, 0.5, &mut out).unwrap();
+            let mut fresh =
+                GradComputer::new(native(), config, method).unwrap();
+            let mut cold = fresh.new_out();
+            fresh.compute(&mut params, &stage, 0.5, &mut cold).unwrap();
+            assert_eq!(
+                out.grads,
+                cold.grads,
+                "{config}/{}: warm grads != cold grads",
+                method.name()
+            );
+            assert_eq!(
+                out.norms(),
+                cold.norms(),
+                "{config}/{}: warm norms != cold norms",
+                method.name()
+            );
+            assert_eq!(
+                out.loss.to_bits(),
+                cold.loss.to_bits(),
+                "{config}/{}: warm loss != cold loss",
+                method.name()
+            );
+            assert_eq!(out.correct, cold.correct, "{config}/{}", method.name());
         }
     }
 }
@@ -219,12 +274,12 @@ fn prop_reported_norm_times_nu_within_clip() {
             g.u64() % 1000,
         );
         let norms = out
-            .norms
+            .norms()
             .ok_or_else(|| format!("{} reported no norms", method.name()))?;
         if norms.len() != 16 {
             return Err(format!("{} norms, want 16", norms.len()));
         }
-        for &n in &norms {
+        for &n in norms {
             if !n.is_finite() || n <= 0.0 {
                 return Err(format!("bad norm {n} ({}, {config})", method.name()));
             }
@@ -257,7 +312,6 @@ fn all_private_methods_agree_cnn_native() {
 /// im2col subtlety the paper calls out, documented in DESIGN.md.
 #[test]
 fn tap_bound_equals_exact_on_mlp_dominates_on_conv() {
-    use fastclip::runtime::native::taps::TapModel;
     for (config, is_conv) in [("mlp2_mnist_b16", false), ("cnn2_mnist_b16", true)]
     {
         let cfg = native().manifest().config(config).unwrap().clone();
@@ -267,13 +321,23 @@ fn tap_bound_equals_exact_on_mlp_dominates_on_conv() {
         stage_batch(&ds, &batch, &mut stage);
         let params =
             ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 5))).unwrap();
-        let model = TapModel::from_config(&cfg).unwrap();
-        let mut s = model.new_scratch(cfg.batch);
-        model.forward_batch(&params.host, &stage.feat_f32, &stage.labels, &mut s);
-        model.backward_batch(&params.host, &stage.labels, None, &mut s);
-        let exact = model.sq_norms(&stage.feat_f32, &s);
-        let gram = model.gram_sq_norms(&stage.feat_f32, &s);
-        let tap = model.tap_bound_sq_norms(&stage.feat_f32, &s);
+        // the family resolves through the backend's open registry —
+        // the same path `load` uses
+        let model = native().families().build(&cfg).unwrap();
+        let mut s = model.new_scratch();
+        model.forward_batch(
+            &params.host,
+            &stage.feat_f32,
+            &stage.labels,
+            s.as_mut(),
+        );
+        model.backward_batch(&params.host, &stage.labels, None, s.as_mut());
+        let mut exact = vec![0.0f64; cfg.batch];
+        model.sq_norms(&stage.feat_f32, s.as_mut(), &mut exact);
+        let mut gram = vec![0.0f64; cfg.batch];
+        model.gram_sq_norms(&stage.feat_f32, s.as_mut(), &mut gram);
+        let mut tap = vec![0.0f64; cfg.batch];
+        model.tap_bound_sq_norms(&stage.feat_f32, s.as_mut(), &mut tap);
         for i in 0..cfg.batch {
             assert!(
                 (exact[i] - gram[i]).abs() / gram[i].max(1e-9) < 1e-5,
@@ -383,19 +447,14 @@ fn clipped_gradient_norm_bounded() {
     let clip = 0.25f32;
     let out = run_method(native(), "mlp2_mnist_b32", ClipMethod::Reweight, clip);
     // ||1/tau sum_i clip(g_i)|| <= 1/tau * tau * c = c
-    let total_sq: f32 = out
-        .grads
-        .iter()
-        .flat_map(|g| g.iter())
-        .map(|&x| x * x)
-        .sum();
+    let total_sq: f32 = out.grads.flat().iter().map(|&x| x * x).sum();
     assert!(
         total_sq.sqrt() <= clip * 1.01,
         "averaged clipped grad norm {} > clip {}",
         total_sq.sqrt(),
         clip
     );
-    let norms = out.norms.unwrap();
+    let norms = out.norms().unwrap();
     assert!(norms.iter().all(|&n| n > 0.0));
 }
 
@@ -551,8 +610,8 @@ fn assert_fig5_sweep(backend: &dyn Backend) {
     for cfg in backend.manifest().by_tag("fig5") {
         let out = run_method(backend, &cfg.name, ClipMethod::Reweight, 1.0);
         assert!(out.loss.is_finite(), "{} loss", cfg.name);
-        assert_eq!(out.grads.len(), cfg.params.len(), "{}", cfg.name);
-        for (g, p) in out.grads.iter().zip(&cfg.params) {
+        assert_eq!(out.grads.n_params(), cfg.params.len(), "{}", cfg.name);
+        for (g, p) in out.grads.params().zip(&cfg.params) {
             assert_eq!(g.len(), p.elems(), "{}.{}", cfg.name, p.name);
         }
     }

@@ -1,0 +1,86 @@
+//! The zero-allocation contract of the step execution arena
+//! (`StepFn::run_into`, DESIGN.md §"Step execution contract"): after
+//! one cold execution has sized every buffer — the caller's `StepOut`
+//! arena, the step's scratch, the lazily grown per-example working
+//! buffers, the rayon pool — a warm step performs **zero** heap
+//! allocations, for every batched method on both model families.
+//!
+//! The measurement uses the crate's counting global allocator
+//! (`util::alloc`), whose counter is process-wide. This file
+//! therefore holds exactly ONE `#[test]` (integration test binaries
+//! are separate processes, but tests *within* a binary run on
+//! concurrent threads and would pollute the delta).
+
+use fastclip::data;
+#[allow(unused_imports)] // trait methods on Arc<dyn StepFn>
+use fastclip::runtime::StepFn;
+use fastclip::runtime::{
+    init_params_glorot, Backend, BatchStage, NativeBackend, ParamStore,
+    StepOut,
+};
+use fastclip::util::alloc::allocation_count;
+
+#[test]
+fn warm_step_path_performs_zero_heap_allocations() {
+    if !fastclip::util::alloc::counting_enabled() {
+        eprintln!(
+            "SKIP warm_step_path_performs_zero_heap_allocations: built \
+             without the `alloc-count` feature, so the counting \
+             allocator is not installed and a zero delta would be \
+             vacuous"
+        );
+        return;
+    }
+    let backend = NativeBackend::new();
+    // one MLP and one CNN config (the satellite contract), at batch
+    // sizes big enough that every parallel stage actually fans out
+    for config in ["mlp2_mnist_b32", "cnn2_mnist_b16"] {
+        let cfg = backend.manifest().config(config).unwrap().clone();
+        let ds = data::load_dataset(&cfg.dataset, 64, 7).unwrap();
+        let mut stage = BatchStage::for_config(&cfg);
+        let batch: Vec<usize> = (0..cfg.batch).collect();
+        data::gather_batch_f32(&ds, &batch, &mut stage.feat_f32, &mut stage.labels);
+        let params =
+            ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 3))).unwrap();
+        // one arena reused across every method of the config — exactly
+        // how the trainer holds it
+        let mut out = StepOut::for_config(&cfg);
+        for method in [
+            "nonprivate",
+            "reweight",
+            "reweight_gram",
+            "reweight_direct",
+            "reweight_pallas",
+            "multiloss",
+            "fwd",
+        ] {
+            let step = backend.load(&cfg, method).unwrap();
+            // Execute inside the rayon pool: launching a parallel
+            // region from an *external* thread goes through the pool's
+            // injector queue, which may allocate queue blocks — pool
+            // plumbing, not step state. One scope hoists the whole
+            // warm+measure sequence into a worker, where nested
+            // parallel regions use the allocation-free fast path.
+            let mut delta = u64::MAX;
+            rayon::scope(|_| {
+                // warm up: cold passes size the scratch, the lazy
+                // per-example buffers, and the arena
+                for _ in 0..3 {
+                    step.run_into(&params, &stage, Some(0.5), &mut out)
+                        .unwrap();
+                }
+                let before = allocation_count();
+                for _ in 0..5 {
+                    step.run_into(&params, &stage, Some(0.5), &mut out)
+                        .unwrap();
+                }
+                delta = allocation_count() - before;
+            });
+            assert_eq!(
+                delta, 0,
+                "{config}/{method}: {delta} heap allocations across 5 warm \
+                 steps — the StepOut arena contract is broken"
+            );
+        }
+    }
+}
