@@ -61,7 +61,7 @@ impl StepRunner {
         method: ClipMethod,
         dataset_override: Option<&str>,
     ) -> Result<StepRunner> {
-        let cfg = backend.manifest().config(config)?.clone();
+        let cfg = backend.resolve(config)?;
         let dataset = dataset_override.unwrap_or(&cfg.dataset);
         let ds = data::load_dataset(dataset, cfg.batch.max(256), 3)?;
         anyhow::ensure!(
@@ -160,6 +160,14 @@ impl MatrixReport {
             .iter()
             .find(|e| e.config == config && e.method == method)
             .map(|e| e.mean_ms)
+    }
+
+    /// p50 step time of one (config, method) cell, if present.
+    pub fn p50_ms(&self, config: &str, method: ClipMethod) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|e| e.config == config && e.method == method)
+            .map(|e| e.p50_ms)
     }
 
     /// The paper's headline ratio: how many times faster `reweight`'s
@@ -274,16 +282,7 @@ impl MatrixReport {
             }
             let mut samples: Vec<f64> = prevs
                 .iter()
-                .filter_map(|p| {
-                    p.get("reweight_b128_p50_ms")
-                        .get(&e.config)
-                        .as_f64()
-                        .or_else(|| {
-                            // legacy record: mean-gated era
-                            p.get("reweight_b128_ms").get(&e.config).as_f64()
-                        })
-                })
-                .filter(|&v| v > 0.0)
+                .filter_map(|p| history_value(p, &e.config))
                 .collect();
             if samples.is_empty() {
                 continue;
@@ -383,6 +382,93 @@ pub fn append_history(
     text.push('\n');
     crate::util::write_file(path, &text)?;
     check
+}
+
+/// One history entry's reweight@b128 step time for `config`: the p50
+/// field wins, legacy mean-only records contribute their recorded
+/// mean (`reweight_b128_ms`), malformed or non-positive values yield
+/// `None`. The single extraction rule shared by the regression gate
+/// (`check_history_regression`) and the renderer (`render_history`),
+/// so the two can never disagree about the same jsonl line.
+fn history_value(entry: &Json, config: &str) -> Option<f64> {
+    entry
+        .get("reweight_b128_p50_ms")
+        .get(config)
+        .as_f64()
+        .or_else(|| entry.get("reweight_b128_ms").get(config).as_f64())
+        .filter(|&v| v > 0.0)
+}
+
+/// Render the `BENCH_history.jsonl` trajectory as a markdown report:
+/// one row per config key with run count, best/median/latest
+/// reweight@b128 p50 and an ASCII sparkline of the whole series — the
+/// "graph the jsonl across PRs" artifact CI uploads next to the raw
+/// history (`fastclip bench-history`). Per entry, the p50 field wins;
+/// legacy mean-only records contribute their recorded mean. Malformed
+/// or non-positive values contribute nothing.
+pub fn render_history(entries: &[Json]) -> String {
+    use std::collections::BTreeMap;
+    let mut series: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for e in entries {
+        let p50s = e.get("reweight_b128_p50_ms");
+        let means = e.get("reweight_b128_ms");
+        let mut keys: Vec<String> = Vec::new();
+        if let Some(o) = p50s.as_obj() {
+            keys.extend(o.keys().cloned());
+        }
+        if let Some(o) = means.as_obj() {
+            keys.extend(o.keys().cloned());
+        }
+        keys.sort();
+        keys.dedup();
+        for k in keys {
+            if let Some(v) = history_value(e, &k) {
+                series.entry(k).or_default().push(v);
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str("# Bench history — reweight@b128 p50 step time (ms)\n\n");
+    if series.is_empty() {
+        out.push_str("_no parseable history entries_\n");
+        return out;
+    }
+    out.push_str("| config | runs | best | median | latest | trend |\n");
+    out.push_str("|---|---:|---:|---:|---:|---|\n");
+    for (config, vals) in &series {
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let best = sorted[0];
+        let median = sorted[sorted.len() / 2];
+        let latest = *vals.last().unwrap();
+        out.push_str(&format!(
+            "| {config} | {} | {best:.3} | {median:.3} | {latest:.3} | `{}` |\n",
+            vals.len(),
+            sparkline(vals)
+        ));
+    }
+    out.push_str(
+        "\nLower is faster. The sparkline spans the full series in file \
+         order (oldest → newest), scaled per config.\n",
+    );
+    out
+}
+
+/// Map a series onto the eight unicode block heights, scaled to the
+/// series' own min..max; a constant series renders mid-height.
+pub fn sparkline(vals: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    vals.iter()
+        .map(|&v| {
+            let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.5 };
+            BARS[((t * 7.0).round() as usize).min(7)]
+        })
+        .collect()
 }
 
 /// Time every (config, method) cell: warmup, then iterate under
@@ -642,6 +728,48 @@ mod tests {
         append_history(&report_with("cnn2_mnist_b128", 13.0), &path, 1.25)
             .unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn history_renders_tables_and_sparklines() {
+        // three modern entries + one legacy mean-only + one malformed
+        let mut entries: Vec<Json> = [10.0, 12.0, 8.0]
+            .iter()
+            .map(|&ms| report_with("cnn2_mnist_b128", ms).history_entry())
+            .collect();
+        entries.push(
+            Json::parse(r#"{"reweight_b128_ms": {"cnn2_mnist_b128": 14.0}}"#)
+                .unwrap(),
+        );
+        entries.push(Json::parse("{}").unwrap());
+        let md = render_history(&entries);
+        assert!(md.contains("| cnn2_mnist_b128 | 4 |"), "{md}");
+        // best 8, median of {8,10,12,14} (upper) 12, latest 14
+        assert!(md.contains("| 8.000 | 12.000 | 14.000 |"), "{md}");
+        // the sparkline covers all four runs and spans the full range
+        assert!(md.contains('▁') && md.contains('█'), "{md}");
+        // spec-key config names survive as table keys
+        let spec_entries = vec![report_with(
+            "mlp(depth=4,width=512)@cifar10:b128",
+            5.0,
+        )
+        .history_entry()];
+        let md = render_history(&spec_entries);
+        assert!(md.contains("mlp(depth=4,width=512)@cifar10:b128"), "{md}");
+        // an empty/garbage history renders a note, not a panic
+        assert!(render_history(&[]).contains("no parseable"));
+    }
+
+    #[test]
+    fn sparkline_scales_and_handles_constants() {
+        let s = sparkline(&[1.0, 8.0]);
+        assert_eq!(s.chars().count(), 2);
+        assert_eq!(s.chars().next(), Some('▁'));
+        assert_eq!(s.chars().last(), Some('█'));
+        // constant series: mid-height, no division by zero
+        let c = sparkline(&[3.0, 3.0, 3.0]);
+        assert_eq!(c.chars().count(), 3);
+        assert!(c.chars().all(|ch| ch == c.chars().next().unwrap()));
     }
 
     #[test]

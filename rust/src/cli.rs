@@ -1,8 +1,50 @@
 //! Declarative-ish CLI flag parsing (no `clap` offline): subcommand +
 //! `--key value` / `--flag` arguments with typed accessors.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
+
+/// Parse a batch sweep flag: `"16..512"` doubles from lo while it
+/// stays <= hi (16,32,...,512); `"16,32,48"` is an explicit list;
+/// `"128"` a single batch. The doubling form is how the paper's
+/// speedup-vs-batch curves are sampled.
+pub fn parse_batches(s: &str) -> Result<Vec<usize>> {
+    let s = s.trim();
+    if let Some((lo, hi)) = s.split_once("..") {
+        let lo: usize = lo.trim().parse().with_context(|| {
+            format!("batch sweep {s:?}: expected `LO..HI` with integers")
+        })?;
+        let hi: usize = hi.trim().parse().with_context(|| {
+            format!("batch sweep {s:?}: expected `LO..HI` with integers")
+        })?;
+        ensure!(lo >= 1 && hi >= lo, "batch sweep {s:?}: need 1 <= LO <= HI");
+        let mut out = Vec::new();
+        let mut b = lo;
+        while b <= hi {
+            out.push(b);
+            // checked: an unchecked `b *= 2` would wrap to 0 in release
+            // builds near usize::MAX and loop forever
+            match b.checked_mul(2) {
+                Some(next) => b = next,
+                None => break,
+            }
+        }
+        return Ok(out);
+    }
+    let out: Vec<usize> = s
+        .split(',')
+        .map(|p| {
+            p.trim().parse::<usize>().with_context(|| {
+                format!("batch list {s:?}: expected comma-separated integers")
+            })
+        })
+        .collect::<Result<_>>()?;
+    ensure!(
+        !out.is_empty() && out.iter().all(|&b| b >= 1),
+        "batch list {s:?} must be non-empty, every batch >= 1"
+    );
+    Ok(out)
+}
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -122,5 +164,21 @@ mod tests {
     fn positionals() {
         let a = parse("inspect cfg1 cfg2");
         assert_eq!(a.positional, vec!["cfg1", "cfg2"]);
+    }
+
+    #[test]
+    fn batch_sweeps() {
+        assert_eq!(
+            parse_batches("16..512").unwrap(),
+            vec![16, 32, 64, 128, 256, 512]
+        );
+        // hi off the doubling chain truncates below it
+        assert_eq!(parse_batches("16..100").unwrap(), vec![16, 32, 64]);
+        assert_eq!(parse_batches("16,32,48").unwrap(), vec![16, 32, 48]);
+        assert_eq!(parse_batches(" 128 ").unwrap(), vec![128]);
+        assert_eq!(parse_batches("1..1").unwrap(), vec![1]);
+        for bad in ["", "0..8", "8..4", "a..b", "16,,32", "16,0"] {
+            assert!(parse_batches(bad).is_err(), "{bad:?} parsed");
+        }
     }
 }

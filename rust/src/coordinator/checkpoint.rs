@@ -12,11 +12,25 @@ use std::path::Path;
 pub struct CheckpointMeta {
     pub config: String,
     pub method: String,
+    /// optimizer name ("adam"/"sgd"); empty in pre-PR5 checkpoints.
+    /// Optimizer *state* (Adam moments) is not checkpointed — resume
+    /// validates the name and warns that stateful optimizers restart
+    /// their moments (see `trainer::train`).
+    pub optimizer: String,
     pub step: u64,
     pub sampling_rate: f64,
     pub sigma: f64,
     pub clip: f64,
+    /// learning rate of the recorded steps; 0.0 in pre-PR5 checkpoints
+    /// (resume skips the continuity check then)
+    pub lr: f64,
     pub seed: u64,
+    /// Poisson subsampling vs shuffle-partition — the sampling regime
+    /// the recorded steps ran under (and the one the RDP re-charge
+    /// assumes). `None` for pre-PR5 checkpoints that did not record
+    /// it: resume must *skip* the mode check then, not treat the
+    /// absence as a definitive shuffle-partition.
+    pub poisson: Option<bool>,
 }
 
 pub fn save(
@@ -36,11 +50,16 @@ pub fn save(
     let mut j = Json::obj();
     j.set("config", meta.config.as_str().into());
     j.set("method", meta.method.as_str().into());
+    j.set("optimizer", meta.optimizer.as_str().into());
     j.set("step", (meta.step as usize).into());
     j.set("sampling_rate", meta.sampling_rate.into());
     j.set("sigma", meta.sigma.into());
     j.set("clip", meta.clip.into());
+    j.set("lr", meta.lr.into());
     j.set("seed", (meta.seed as usize).into());
+    if let Some(p) = meta.poisson {
+        j.set("poisson", p.into());
+    }
     j.set("param_elems", total.into());
     crate::util::write_file(&dir.join("meta.json"), &j.to_string_pretty())?;
     Ok(())
@@ -52,11 +71,14 @@ pub fn load(dir: &Path, cfg: &ConfigSpec) -> Result<(CheckpointMeta, Vec<f32>)> 
     let meta = CheckpointMeta {
         config: j.get("config").as_str().unwrap_or("").to_string(),
         method: j.get("method").as_str().unwrap_or("").to_string(),
+        optimizer: j.get("optimizer").as_str().unwrap_or("").to_string(),
         step: j.get("step").as_usize().unwrap_or(0) as u64,
         sampling_rate: j.get("sampling_rate").as_f64().unwrap_or(0.0),
         sigma: j.get("sigma").as_f64().unwrap_or(0.0),
         clip: j.get("clip").as_f64().unwrap_or(1.0),
+        lr: j.get("lr").as_f64().unwrap_or(0.0),
         seed: j.get("seed").as_usize().unwrap_or(0) as u64,
+        poisson: j.get("poisson").as_bool(),
     };
     if meta.config != cfg.name {
         bail!(
@@ -99,6 +121,7 @@ mod tests {
             input_dtype: "f32".into(),
             act_elems_per_example: 0,
             conv: None,
+            spec: None,
             params: vec![
                 ParamSpec { name: "w".into(), shape: vec![4, 3] },
                 ParamSpec { name: "b".into(), shape: vec![3] },
@@ -115,17 +138,22 @@ mod tests {
         let meta = CheckpointMeta {
             config: "ckpt_test".into(),
             method: "reweight".into(),
+            optimizer: "adam".into(),
             step: 42,
             sampling_rate: 0.01,
             sigma: 1.1,
             clip: 1.0,
+            lr: 1e-3,
             seed: 7,
+            poisson: Some(true),
         };
         let dir = std::env::temp_dir().join("fastclip_ckpt_test");
         save(&dir, &meta, &ps).unwrap();
         let (m2, flat) = load(&dir, &c).unwrap();
         assert_eq!(m2.step, 42);
         assert_eq!(m2.method, "reweight");
+        assert_eq!(m2.optimizer, "adam");
+        assert_eq!(m2.poisson, Some(true));
         assert!((m2.sigma - 1.1).abs() < 1e-12);
         assert_eq!(flat, init);
         std::fs::remove_dir_all(&dir).ok();
@@ -138,11 +166,14 @@ mod tests {
         let meta = CheckpointMeta {
             config: "ckpt_test".into(),
             method: "reweight".into(),
+            optimizer: "sgd".into(),
             step: 1,
             sampling_rate: 0.0,
             sigma: 0.0,
             clip: 1.0,
+            lr: 1e-3,
             seed: 0,
+            poisson: None,
         };
         let dir = std::env::temp_dir().join("fastclip_ckpt_test2");
         save(&dir, &meta, &ps).unwrap();

@@ -56,10 +56,19 @@ impl ClipMethod {
             "reweight_direct" => ClipMethod::ReweightDirect,
             "multiloss" => ClipMethod::MultiLoss,
             "nxbp" => ClipMethod::NxBp,
+            // the list in the error is generated, not hand-written, so
+            // it can never drift from the actual method set
             other => anyhow::bail!(
-                "unknown method {other:?} (nonprivate|reweight|reweight_pallas|reweight_gram|reweight_direct|multiloss|nxbp)"
+                "unknown method {other:?} ({})",
+                ClipMethod::names().join("|")
             ),
         })
+    }
+
+    /// Every method's CLI name, in `all()` order — the single source
+    /// the help text and parse errors render from.
+    pub fn names() -> Vec<&'static str> {
+        ClipMethod::all().iter().map(|m| m.name()).collect()
     }
 
     pub fn name(&self) -> &'static str {
@@ -128,20 +137,21 @@ struct NaiveLoop {
 }
 
 impl GradComputer {
+    /// `config` is a config *reference* — a manifest/preset name or,
+    /// on backends that synthesize (native), a `model@dataset:bN` spec
+    /// key — resolved through `Backend::resolve`.
     pub fn new(
         backend: &dyn Backend,
         config: &str,
         method: ClipMethod,
     ) -> Result<GradComputer> {
-        let cfg = backend.manifest().config(config)?.clone();
+        let cfg = backend.resolve(config)?;
         let param_lens: Vec<usize> =
             cfg.params.iter().map(|p| p.elems()).collect();
         let (exe, naive) = if method == ClipMethod::NxBp {
             let ncfg = backend
-                .manifest()
-                .naive_config(config)
-                .context("nxbp needs the batch-1 naive1 artifact")?
-                .clone();
+                .naive_sibling(&cfg)
+                .context("nxbp needs the batch-1 naive1 sibling config")?;
             let exe = backend.load(&ncfg, "naive1")?;
             let stage = BatchStage::for_config(&ncfg);
             let out = StepOut::for_config(&ncfg);
@@ -271,6 +281,14 @@ mod tests {
             assert_eq!(ClipMethod::parse(m.name()).unwrap(), m);
         }
         assert!(ClipMethod::parse("bogus").is_err());
+        // the generated name list covers every method (this is what
+        // the help text and parse errors render from — the old
+        // hand-written list silently omitted reweight_direct)
+        assert_eq!(ClipMethod::names().len(), ClipMethod::all().len());
+        assert!(ClipMethod::names().contains(&"reweight_direct"));
+        // ...and the parse error actually lists it
+        let err = ClipMethod::parse("bogus").unwrap_err();
+        assert!(format!("{err:#}").contains("reweight_direct"));
     }
 
     #[test]

@@ -34,8 +34,27 @@ pub struct TrainOptions {
     pub seed: u64,
     /// 0 = no eval
     pub eval_every: u64,
+    /// eval set size; None = 4 batches (the old hardcoded default).
+    /// Must be a positive multiple of the config batch — evaluation
+    /// runs in full batches, and a remainder would be silently dropped
+    pub eval_n: Option<usize>,
     pub log_every: u64,
     pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from a checkpoint directory (`checkpoint::load`):
+    /// restores the parameters, the step counter, and the RDP
+    /// accountant state (the checkpointed steps are re-charged at
+    /// their recorded sampling rate and sigma). `steps` stays a
+    /// *total*: resuming a 5-step checkpoint with `steps: 8` runs 3
+    /// more steps. The resumed run must continue the *same* process:
+    /// seed, sampling mode, method, optimizer, lr, and sampling rate
+    /// must match, and (for private methods) clip / sigma must match
+    /// the recorded values and `target_eps` is rejected — the
+    /// checkpoint can record only one value of each for its whole
+    /// history, so a heterogeneous chain would corrupt the accounting
+    /// of a later resume. Optimizer *state* is not checkpointed: sgd
+    /// resumes bitwise-exactly, adam restarts its moments (warned
+    /// loudly).
+    pub resume: Option<PathBuf>,
     /// Poisson subsampling (the regime the RDP analysis assumes)
     /// instead of shuffle-partition
     pub poisson: bool,
@@ -56,8 +75,10 @@ impl Default for TrainOptions {
             optimizer: "adam".into(),
             seed: 0,
             eval_every: 0,
+            eval_n: None,
             log_every: 20,
             checkpoint_dir: None,
+            resume: None,
             poisson: false,
         }
     }
@@ -95,7 +116,7 @@ impl Sampler {
 }
 
 pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> {
-    let cfg = backend.manifest().config(&opts.config)?.clone();
+    let cfg = backend.resolve(&opts.config)?;
     let tau = cfg.batch;
     anyhow::ensure!(
         opts.dataset_n >= tau,
@@ -104,6 +125,199 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
         tau
     );
     let q = tau as f64 / opts.dataset_n as f64;
+
+    // --- resume: restore params / step counter / accountant inputs ---
+    let mut start_step = 0u64;
+    let mut resume_init: Option<Vec<f32>> = None;
+    // (sampling rate, sigma) the checkpointed steps were run at — what
+    // the accountant must re-charge, regardless of the current flags
+    let mut resume_charge: Option<(f64, f64)> = None;
+    if let Some(dir) = &opts.resume {
+        let (meta, flat) = super::checkpoint::load(dir, &cfg)
+            .with_context(|| format!("resuming from {}", dir.display()))?;
+        anyhow::ensure!(
+            meta.step < opts.steps,
+            "checkpoint at {} already covers {} steps and --steps {} is a \
+             total, not an increment — raise --steps to continue training",
+            dir.display(),
+            meta.step,
+            opts.steps
+        );
+        // Continuity: the replayed sampler and the step-keyed noise
+        // stream both derive from the seed, so a silently different
+        // seed would diverge from the run being continued.
+        anyhow::ensure!(
+            opts.seed == meta.seed,
+            "resume: checkpoint at {} was trained with --seed {} but this \
+             run uses --seed {} — the replayed batch and noise streams \
+             would diverge from the run being continued",
+            dir.display(),
+            meta.seed,
+            opts.seed
+        );
+        // Sampling-mode continuity: the replayed sampler AND the
+        // RDP re-charge both assume the recorded regime — resuming a
+        // Poisson run with shuffle-partition (or vice versa) would
+        // silently change both the batch stream and the subsampling
+        // assumption the accountant's rate q rests on. A pre-PR5
+        // checkpoint recorded no mode (None): skip the check rather
+        // than misread the absence as shuffle-partition.
+        if let Some(was_poisson) = meta.poisson {
+            anyhow::ensure!(
+                opts.poisson == was_poisson,
+                "resume: checkpoint was trained with {} sampling but this \
+                 run uses {} — the replayed batch stream and the \
+                 accountant's subsampling assumption would both change \
+                 mid-run; {}",
+                if was_poisson { "--poisson" } else { "shuffle-partition" },
+                if opts.poisson { "--poisson" } else { "shuffle-partition" },
+                if was_poisson { "pass --poisson" } else { "drop --poisson" }
+            );
+        }
+        // Method continuity: all private methods agree to ~1e-5 but
+        // not bitwise, so switching mid-run is not a continuation of
+        // the same trajectory (and private/non-private switches would
+        // corrupt the epsilon report outright).
+        anyhow::ensure!(
+            meta.method == opts.method.name(),
+            "resume: checkpoint was trained with --method {} but this run \
+             uses --method {} — switch methods only in a fresh run; pass \
+             --method {}",
+            meta.method,
+            opts.method.name(),
+            meta.method
+        );
+        // Optimizer continuity: the name is validated (a pre-PR5
+        // checkpoint records none — skip); optimizer *state* is not
+        // checkpointed, so a stateful optimizer restarts its moments —
+        // warn loudly rather than silently diverging. With sgd
+        // (stateless) a resumed run is bitwise the continuous run.
+        if !meta.optimizer.is_empty() {
+            anyhow::ensure!(
+                opts.optimizer == meta.optimizer,
+                "resume: checkpoint was trained with --optimizer {} but \
+                 this run uses --optimizer {} — switching optimizers \
+                 mid-run is not a continuation; pass --optimizer {}",
+                meta.optimizer,
+                opts.optimizer,
+                meta.optimizer
+            );
+        }
+        // Learning-rate continuity (every method): the tail would
+        // silently train at a different rate than the recorded steps.
+        // A pre-PR5 checkpoint records no lr (0.0): skip.
+        if meta.lr > 0.0 {
+            anyhow::ensure!(
+                (opts.lr - meta.lr).abs() < 1e-12,
+                "resume: checkpoint records lr={} but this run passes \
+                 lr={} — the continuation would train at a different \
+                 rate; pass --lr {}",
+                meta.lr,
+                opts.lr,
+                meta.lr
+            );
+        }
+        if opts.optimizer != "sgd" {
+            crate::log_info!(
+                "resume: WARNING — optimizer state is not checkpointed; \
+                 {} restarts its moment estimates from zero at step {}, \
+                 so the continuation is not bitwise identical to an \
+                 uninterrupted run (use --optimizer sgd for exact \
+                 continuation)",
+                opts.optimizer,
+                meta.step
+            );
+        }
+        if opts.method.is_private() {
+            // The checkpoint records ONE (sampling_rate, sigma, clip)
+            // for its whole history, so the accountant cannot represent
+            // a heterogeneous chain: a later resume of the checkpoint
+            // this run writes would re-charge every step at whatever
+            // values are current here. Refuse the combinations that
+            // would corrupt (or double-count) the recorded privacy
+            // spend — or, for clip, silently break the continuation
+            // (noise_std and the clipping threshold both derive from
+            // it).
+            anyhow::ensure!(
+                (opts.clip - meta.clip).abs() < 1e-12,
+                "resume: checkpoint records clip={} but this run passes \
+                 clip={} — the clipping threshold and the noise scale \
+                 would both change mid-run; pass --clip {}",
+                meta.clip,
+                opts.clip,
+                meta.clip
+            );
+            anyhow::ensure!(
+                opts.target_eps.is_none(),
+                "resume: --target-eps would re-calibrate sigma as if all \
+                 {} steps were fresh budget, double-counting the {} \
+                 checkpointed steps' spend; pass --sigma explicitly (the \
+                 checkpoint records sigma={})",
+                opts.steps,
+                meta.step,
+                meta.sigma
+            );
+            anyhow::ensure!(
+                (opts.sigma - meta.sigma).abs() < 1e-12,
+                "resume: checkpoint records sigma={} but this run passes \
+                 sigma={} — the checkpoint written at the end could only \
+                 record one value for the whole history, mis-charging a \
+                 later resume; pass --sigma {}",
+                meta.sigma,
+                opts.sigma,
+                meta.sigma
+            );
+        }
+        // The sampling rate fixes both the replayed batch stream (the
+        // samplers are seeded over dataset_n) and, for private
+        // methods, the accountant's subsampling rate — so it must
+        // match for *every* method, not only private ones. Guard on a
+        // recorded rate > 0 (a damaged/ancient meta contributes
+        // nothing rather than a division by zero in the hint).
+        if meta.sampling_rate > 0.0 {
+            anyhow::ensure!(
+                (q - meta.sampling_rate).abs() < 1e-12,
+                "resume: checkpoint records sampling rate q={} but --n {} \
+                 gives q={} — the replayed batch stream (and any privacy \
+                 accounting) must cover the whole history at one rate; \
+                 pass --n {}",
+                meta.sampling_rate,
+                opts.dataset_n,
+                q,
+                (tau as f64 / meta.sampling_rate).round()
+            );
+        }
+        crate::log_info!(
+            "resume: {} at step {} (q={:.4}, sigma={:.3})",
+            dir.display(),
+            meta.step,
+            meta.sampling_rate,
+            meta.sigma
+        );
+        start_step = meta.step;
+        resume_charge = Some((meta.sampling_rate, meta.sigma));
+        resume_init = Some(flat);
+    }
+
+    // --- eval set size (was: a silent hardcoded `tau * 4`) ----------
+    let eval_n = match opts.eval_n {
+        Some(n) => {
+            anyhow::ensure!(
+                opts.eval_every > 0,
+                "--eval-n has no effect without --eval-every; set an \
+                 evaluation interval or drop --eval-n"
+            );
+            anyhow::ensure!(
+                n >= tau && n % tau == 0,
+                "--eval-n {n} must be a positive multiple of config {}'s \
+                 batch {tau} — evaluation runs in full batches and would \
+                 silently drop the remainder examples",
+                cfg.name
+            );
+            n
+        }
+        None => tau * 4,
+    };
 
     // --- noise calibration (Alg 1, line 1) --------------------------
     let sigma = match opts.target_eps {
@@ -122,7 +336,7 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
     // --- data --------------------------------------------------------
     let ds = data::load_dataset(&cfg.dataset, opts.dataset_n, opts.seed)?;
     let eval_ds = if opts.eval_every > 0 {
-        Some(data::load_dataset(&cfg.dataset, tau * 4, opts.seed + 1)?)
+        Some(data::load_dataset(&cfg.dataset, eval_n, opts.seed + 1)?)
     } else {
         None
     };
@@ -134,14 +348,30 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
     } else {
         None
     };
-    let mut params = ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, opts.seed)))?;
+    let init = match resume_init {
+        Some(flat) => flat,
+        None => init_params_glorot(&cfg, opts.seed),
+    };
+    let mut params = ParamStore::new(&cfg, Some(&init))?;
     let mut opt = optim::by_name(&opts.optimizer, opts.lr)?;
     let mut accountant = RdpAccountant::new();
+    if opts.method.is_private() && start_step > 0 {
+        // re-charge the checkpointed steps at their *recorded* rate and
+        // sigma: budget already spent cannot change just because the
+        // resumed run passes different flags
+        let (q0, s0) = resume_charge.expect("resume meta");
+        accountant.steps(q0, s0, start_step);
+    }
     let mut sampler = if opts.poisson {
         Sampler::Poisson(PoissonSampler::new(opts.dataset_n, tau, opts.seed))
     } else {
         Sampler::Shuffle(ShuffleBatcher::new(opts.dataset_n, tau, opts.seed))
     };
+    // replay the sampler to the resume point, so a resumed run draws
+    // the same batch sequence the continuous run would have drawn
+    for _ in 0..start_step {
+        sampler.next_batch();
+    }
 
     let mut stage = BatchStage::for_config(&cfg);
     // one output arena for the whole run: the step resets it each
@@ -156,7 +386,7 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
     );
 
     // --- the loop (Alg 1, lines 2-16) --------------------------------
-    for step in 0..opts.steps {
+    for step in start_step..opts.steps {
         let t_step = Instant::now();
 
         let t = PhaseTimer::start();
@@ -227,11 +457,14 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
             &super::checkpoint::CheckpointMeta {
                 config: cfg.name.clone(),
                 method: opts.method.name().into(),
+                optimizer: opts.optimizer.clone(),
                 step: opts.steps,
                 sampling_rate: q,
                 sigma,
                 clip: opts.clip,
+                lr: opts.lr,
                 seed: opts.seed,
+                poisson: Some(opts.poisson),
             },
             &params,
         )?;

@@ -7,7 +7,10 @@
 //!
 //!   - `runtime::native::NativeBackend` (default, always on): pure-Rust
 //!     *batched* execution through an open `ModelFamily` registry
-//!     (dense MLPs + im2col conv built in) — activations and deltas as
+//!     (dense MLPs + im2col conv built in) and an open *config* space —
+//!     `Backend::resolve` synthesizes any `model@dataset:bN` spec key
+//!     through `runtime::spec::ConfigBuilder` (the builtin grid is a
+//!     preset layer over the same builder) — activations and deltas as
 //!     batched matrices over the cache-blocked rayon GEMM kernels in
 //!     `runtime::native::gemm`, bitwise deterministic, all seven clip
 //!     methods (reweight, gram, direct, pallas-fused, multiloss, nxbp,

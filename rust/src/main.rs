@@ -16,7 +16,9 @@ use anyhow::{Context, Result};
 use fastclip::cli::Args;
 use fastclip::coordinator::{memory, train, ClipMethod, GradComputer, TrainOptions};
 use fastclip::privacy;
-use fastclip::runtime::{backend_by_name, Backend, BatchStage, ParamStore};
+use fastclip::runtime::{
+    backend_by_name, Backend, BatchStage, ModelSpec, ParamStore, SpecKey,
+};
 use fastclip::util::json::Json;
 use fastclip::{log_info, util};
 
@@ -35,6 +37,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "bench-step" => cmd_bench_step(&args),
         "bench-matrix" => cmd_bench_matrix(&args),
+        "bench-history" => cmd_bench_history(&args),
         "accountant" => cmd_accountant(&args),
         "memory" => cmd_memory(&args),
         "inspect" => cmd_inspect(&args),
@@ -50,39 +53,101 @@ fn run(argv: Vec<String>) -> Result<()> {
 }
 
 fn print_help() {
+    // generated from ClipMethod::all(), so the list can never drift
+    // from the methods the trainer actually accepts
+    let methods = ClipMethod::names().join("|");
     println!(
         r#"fastclip — DP deep learning with fast per-example gradient clipping
 
 USAGE: fastclip <subcommand> [flags]
 
-  train       --config NAME [--method reweight|nxbp|multiloss|nonprivate|
-              reweight_pallas|reweight_gram] [--steps N] [--n DATASET_SIZE]
+Configs are referenced either by name (--config) — a builtin preset
+like mlp2_mnist_b32, a full spec key, or an artifacts-manifest entry —
+or composed from parts (--model + --dataset + --batch):
+
+  --config "mlp(depth=4,width=512)@cifar10:b256"
+  --model "cnn(depth=2,k=3,s=1,pad=1,ch=8-16)" --dataset mnist --batch 48
+
+Spec keys synthesize on demand (native backend; any depth/width/
+kernel/stride/batch); the pjrt backend is manifest-bound.
+
+  train       --config NAME | --model SPEC [--dataset D] [--batch N]
+              [--method {methods}]
+              [--steps N] [--n DATASET_SIZE]
               [--lr F] [--clip F] [--sigma F | --target-eps F] [--delta F]
               [--optimizer adam|sgd] [--seed N] [--eval-every N]
-              [--poisson] [--checkpoint DIR] [--json]
-  bench-step  --config NAME --method M [--iters N]
+              [--eval-n N] [--poisson] [--checkpoint DIR] [--resume DIR]
+              [--json]
+              --resume restores params/step/accountant state from a
+              checkpoint dir; --steps stays the *total* step count,
+              and the run must continue the same process (seed,
+              sampling mode, method, optimizer, lr, sampling rate —
+              and, for private methods, clip and sigma — must match
+              the checkpoint; --target-eps is rejected).
+              --eval-n sizes the eval set (default 4 batches; must be
+              a multiple of the config batch — eval runs full batches)
+  bench-step  (--config NAME | --model SPEC [--dataset D] [--batch N])
+              --method M [--iters N]
   bench-matrix [--configs NAME,NAME,...] [--methods M,M,...] [--smoke]
+              [--model SPEC [--dataset D] [--batches 16..512]]
               [--out FILE] [--check] [--history FILE]
               times every (config, method) step and writes the
-              BENCH_<backend>.json trajectory artifact; --check fails
-              unless reweight beats nxbp on every batch-128 config and
-              (on the native backend) the warm reweight step path ran
-              with zero heap allocations; --history appends a compact
-              record (p50s + steps_alloc_free) to a jsonl trajectory
-              and fails on a >25% reweight@b128 p50 step-time
-              regression versus the median of that file's recent
-              entries
+              BENCH_<backend>.json trajectory artifact; --model with
+              --batches sweeps one spec across batch sizes (doubling
+              LO..HI or a comma list) and prints the speedup-vs-batch
+              curve; --check fails unless reweight beats nxbp on every
+              batch-128 config and (on the native backend) the warm
+              reweight step path ran with zero heap allocations;
+              --history appends a compact record (p50s +
+              steps_alloc_free) to a jsonl trajectory and fails on a
+              >25% reweight@b128 p50 step-time regression versus the
+              median of that file's recent entries
+  bench-history [--file BENCH_history.jsonl] [--out FILE.md]
+              renders the jsonl trajectory as a markdown table with an
+              ASCII sparkline per config (stdout without --out)
   accountant  --q F --sigma F --steps N [--delta F]
               | --calibrate --q F --steps N --eps F [--delta F]
-  memory      --config NAME [--budget-gib F]
-  inspect     [--config NAME] [--tag TAG]
+  memory      (--config NAME | --model SPEC ...) [--budget-gib F]
+  inspect     [--config NAME | --model SPEC ...] [--tag TAG]
 
 All compute subcommands accept --backend native|pjrt|auto (default
-auto). The native backend runs the built-in MLP config family in pure
-Rust — no Python, no artifacts. The pjrt backend (requires building
-with --features pjrt) executes AOT HLO artifacts from
+auto). The native backend runs the builtin presets and any spec key in
+pure Rust — no Python, no artifacts. The pjrt backend (requires
+building with --features pjrt) executes AOT HLO artifacts from
 $FASTCLIP_ARTIFACTS (default ./artifacts; build with `make artifacts`)."#
     );
+}
+
+/// The config reference from the flags: `--config NAME` (preset,
+/// manifest entry, or full `model@dataset:bN` spec key), or the
+/// composed form `--model SPEC [--dataset D] [--batch N]`. The
+/// composed form is canonicalized through `SpecKey`, so checkpoints
+/// and bench records key on one stable spelling.
+fn config_ref(args: &Args) -> Result<String> {
+    if let Some(model) = args.str_opt("model") {
+        anyhow::ensure!(
+            args.str_opt("config").is_none(),
+            "--model and --config are mutually exclusive; --model composes \
+             a spec key from --dataset/--batch, --config names one directly"
+        );
+        let spec = ModelSpec::parse(model)?;
+        let dataset = args.str_or("dataset", "mnist");
+        let batch = args.usize_or("batch", 32)?;
+        Ok(SpecKey::new(spec, &dataset, batch).to_string())
+    } else {
+        // --dataset/--batch only compose with --model; silently
+        // ignoring them here would run a different batch (and a
+        // different RDP sampling ratio) than the user asked for
+        for flag in ["dataset", "batch"] {
+            anyhow::ensure!(
+                args.str_opt(flag).is_none(),
+                "--{flag} has no effect with --config (the config names its \
+                 dataset and batch); use --model to compose a spec, or put \
+                 it in the spec key (model@dataset:bN)"
+            );
+        }
+        Ok(args.require("config")?.to_string())
+    }
 }
 
 fn backend(args: &Args) -> Result<Box<dyn Backend>> {
@@ -98,7 +163,7 @@ fn backend(args: &Args) -> Result<Box<dyn Backend>> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let opts = TrainOptions {
-        config: args.require("config")?.to_string(),
+        config: config_ref(args)?,
         method: ClipMethod::parse(&args.str_or("method", "reweight"))?,
         steps: args.u64_or("steps", 100)?,
         dataset_n: args.usize_or("n", 2048)?,
@@ -110,8 +175,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         optimizer: args.str_or("optimizer", "adam"),
         seed: args.u64_or("seed", 0)?,
         eval_every: args.u64_or("eval-every", 0)?,
+        eval_n: match args.str_opt("eval-n") {
+            Some(v) => Some(v.parse().with_context(|| {
+                format!("--eval-n expects an integer, got {v:?}")
+            })?),
+            None => None,
+        },
         log_every: args.u64_or("log-every", 20)?,
         checkpoint_dir: args.str_opt("checkpoint").map(Into::into),
+        resume: args.str_opt("resume").map(Into::into),
         poisson: args.bool("poisson"),
     };
     let backend = backend(args)?;
@@ -163,11 +235,11 @@ fn opts_delta(args: &Args) -> Result<f64> {
 }
 
 fn cmd_bench_step(args: &Args) -> Result<()> {
-    let config = args.require("config")?.to_string();
+    let config = config_ref(args)?;
     let method = ClipMethod::parse(&args.str_or("method", "reweight"))?;
     let iters = args.usize_or("iters", 10)?;
     let backend = backend(args)?;
-    let cfg = backend.manifest().config(&config)?.clone();
+    let cfg = backend.resolve(&config)?;
     let mut computer = GradComputer::new(backend.as_ref(), &config, method)?;
     let ds = fastclip::data::load_dataset(&cfg.dataset, cfg.batch.max(256), 0)?;
     let mut stage = BatchStage::for_config(&cfg);
@@ -203,12 +275,50 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
     use fastclip::bench::driver::run_matrix;
     use fastclip::bench::BenchOpts;
     let backend = backend(args)?;
-    let configs: Vec<String> = args
-        .str_or("configs", "mlp2_mnist_b128,mlp4_mnist_b128,cnn2_mnist_b128")
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
+    let mut configs: Vec<String> = match args.str_opt("configs") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        // sweep mode without --configs times only the sweep
+        None if args.str_opt("model").is_some() => Vec::new(),
+        None => ["mlp2_mnist_b128", "mlp4_mnist_b128", "cnn2_mnist_b128"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    // --model SPEC [--dataset D] [--batches 16..512]: sweep one spec
+    // across batch sizes — the paper's speedup-vs-batch curves, past
+    // the old grid's ceiling of 128
+    anyhow::ensure!(
+        args.str_opt("batches").is_none() || args.str_opt("model").is_some(),
+        "--batches sweeps a --model spec across batch sizes; without \
+         --model it would be silently ignored (name full configs with \
+         --configs instead)"
+    );
+    anyhow::ensure!(
+        args.str_opt("batch").is_none(),
+        "bench-matrix takes --batches (a sweep), not --batch; a single \
+         batch is `--batches N`"
+    );
+    anyhow::ensure!(
+        args.str_opt("dataset").is_none() || args.str_opt("model").is_some(),
+        "--dataset only composes with --model; configs named via \
+         --configs carry their own dataset"
+    );
+    let mut sweep: Vec<(usize, String)> = Vec::new();
+    if let Some(model) = args.str_opt("model") {
+        let spec = ModelSpec::parse(model)?;
+        let dataset = args.str_or("dataset", "mnist");
+        let batches =
+            fastclip::cli::parse_batches(&args.str_or("batches", "16..128"))?;
+        for b in batches {
+            let name = SpecKey::new(spec.clone(), &dataset, b).to_string();
+            sweep.push((b, name.clone()));
+            configs.push(name);
+        }
+    }
     let methods: Vec<ClipMethod> = match args.str_opt("methods") {
         Some(csv) => csv
             .split(',')
@@ -247,6 +357,26 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
             println!("{config}: reweight is {s:.1}x faster than nxbp");
         }
     }
+    if !sweep.is_empty() {
+        let fmt = |v: Option<f64>| {
+            v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into())
+        };
+        println!(
+            "\nspeedup vs batch for {}:",
+            args.str_or("model", "?")
+        );
+        println!("| batch | reweight p50 ms | nxbp p50 ms | speedup |");
+        println!("|---:|---:|---:|---:|");
+        for (b, name) in &sweep {
+            let rw = report.p50_ms(name, ClipMethod::Reweight);
+            let nx = report.p50_ms(name, ClipMethod::NxBp);
+            let sp = match (rw, nx) {
+                (Some(r), Some(n)) if r > 0.0 => format!("{:.1}x", n / r),
+                _ => "-".into(),
+            };
+            println!("| {b} | {} | {} | {sp} |", fmt(rw), fmt(nx));
+        }
+    }
     let out = args.str_or("out", &format!("BENCH_{}.json", backend.name()));
     fastclip::util::write_file(
         std::path::Path::new(&out),
@@ -279,6 +409,26 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_bench_history(args: &Args) -> Result<()> {
+    let file = args.str_or("file", "BENCH_history.jsonl");
+    let text = util::read_file(std::path::Path::new(&file))
+        .with_context(|| format!("reading bench history {file:?}"))?;
+    let entries: Vec<Json> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| Json::parse(l).ok())
+        .collect();
+    let md = fastclip::bench::driver::render_history(&entries);
+    match args.str_opt("out") {
+        Some(out) => {
+            util::write_file(std::path::Path::new(out), &md)?;
+            println!("wrote {out} ({} history entries)", entries.len());
+        }
+        None => print!("{md}"),
+    }
+    Ok(())
+}
+
 fn cmd_accountant(args: &Args) -> Result<()> {
     let q = args.f64_or("q", 0.01)?;
     let delta = args.f64_or("delta", 1e-5)?;
@@ -304,11 +454,11 @@ fn cmd_accountant(args: &Args) -> Result<()> {
 }
 
 fn cmd_memory(args: &Args) -> Result<()> {
-    let config = args.require("config")?.to_string();
+    let config = config_ref(args)?;
     let budget_gib = args.f64_or("budget-gib", 11.0)?; // 1080 Ti
     let backend = backend(args)?;
-    let cfg = backend.manifest().config(&config)?;
-    let fp = memory::Footprint::of(cfg, cfg.act_elems_per_example as u64);
+    let cfg = backend.resolve(&config)?;
+    let fp = memory::Footprint::of(&cfg, cfg.act_elems_per_example as u64);
     let budget = (budget_gib * (1u64 << 30) as f64) as u64;
     println!(
         "memory model for {config} (P={} params, A={} act/ex, budget {:.1} GiB):",
@@ -329,12 +479,16 @@ fn cmd_memory(args: &Args) -> Result<()> {
 
 fn cmd_inspect(args: &Args) -> Result<()> {
     let backend = backend(args)?;
-    if let Some(name) = args.str_opt("config") {
-        let cfg = backend.manifest().config(name)?;
+    if args.str_opt("config").is_some() || args.str_opt("model").is_some() {
+        let name = config_ref(args)?;
+        let cfg = backend.resolve(&name)?;
         let mut j = Json::obj();
         j.set("name", cfg.name.as_str().into());
         j.set("backend", backend.name().into());
         j.set("model", cfg.model.as_str().into());
+        if let Some(spec) = &cfg.spec {
+            j.set("spec", spec.to_string().into());
+        }
         j.set("dataset", cfg.dataset.as_str().into());
         j.set("batch", cfg.batch.into());
         j.set("param_tensors", cfg.params.len().into());

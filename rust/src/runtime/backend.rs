@@ -31,6 +31,7 @@
 //! arena per call.
 
 use super::manifest::{ConfigSpec, Manifest};
+use super::spec::SpecKey;
 use super::store::{BatchStage, ParamStore, StepOut};
 use anyhow::Result;
 use std::sync::Arc;
@@ -100,4 +101,59 @@ pub trait Backend: Send + Sync {
     /// Compile (or fetch from cache) the step for a config's method.
     /// `method` is the artifact method name (see `ClipMethod::artifact`).
     fn load(&self, cfg: &ConfigSpec, method: &str) -> Result<Arc<dyn StepFn>>;
+
+    /// Resolve a config *reference*: an exact manifest name, or — on
+    /// backends that can synthesize configs — a `model@dataset:bN`
+    /// spec key (see `runtime::spec`). This is the `ConfigSource` seam
+    /// above `Manifest`: the coordinator (trainer, `GradComputer`,
+    /// bench driver, CLI) resolves every reference through it, so a
+    /// backend decides for itself whether the config space is a closed
+    /// manifest or an open spec grammar.
+    ///
+    /// The default implementation is **manifest-bound** (the PJRT
+    /// engine executes ahead-of-time compiled artifacts, so it cannot
+    /// synthesize steps for arbitrary shapes): it accepts exactly the
+    /// manifest's names, and when the reference *parses* as a spec key
+    /// it explains that this backend cannot synthesize configs instead
+    /// of pretending the name is merely unknown. The native backend
+    /// overrides this with spec synthesis.
+    fn resolve(&self, name: &str) -> Result<ConfigSpec> {
+        match self.manifest().config(name) {
+            Ok(cfg) => Ok(cfg.clone()),
+            Err(e) => {
+                if SpecKey::parse(name).is_ok() {
+                    anyhow::bail!(
+                        "config {name:?} is a synthesizable model spec, but \
+                         the `{}` backend is manifest-bound (it executes \
+                         ahead-of-time compiled artifacts); run it with \
+                         `--backend native`, or AOT-compile the config into \
+                         the artifacts manifest",
+                        self.name()
+                    );
+                }
+                // spec-shaped but malformed (no manifest name contains
+                // `@`): the grammar error is the useful diagnostic
+                if name.contains('@') {
+                    return Err(SpecKey::parse(name).unwrap_err().context(
+                        format!(
+                            "config reference {name:?} looks like a spec \
+                             key but does not parse"
+                        ),
+                    ));
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The batch-1 sibling config the nxBP loop's naive1 body runs on.
+    /// Spec-derived configs (provenance present) rebuild structurally
+    /// via `ConfigSpec::with_batch(1)`; manifest-loaded configs fall
+    /// back to the manifest's `_b1` naming convention.
+    fn naive_sibling(&self, cfg: &ConfigSpec) -> Result<ConfigSpec> {
+        if cfg.spec.is_some() {
+            return cfg.with_batch(1);
+        }
+        Ok(self.manifest().naive_config(&cfg.name)?.clone())
+    }
 }

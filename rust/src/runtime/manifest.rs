@@ -1,6 +1,7 @@
 //! artifacts/manifest.json loader — the contract between the Python
 //! compile path (aot.py) and the Rust request path.
 
+use super::spec::ModelSpec;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -59,6 +60,13 @@ pub struct ConfigSpec {
     pub act_elems_per_example: usize,
     /// conv hyperparameters (model == "cnn" only)
     pub conv: Option<ConvMeta>,
+    /// The `ModelSpec` this config was synthesized from, when it came
+    /// through `spec::ConfigBuilder` (every builtin preset and every
+    /// spec-resolved config). Structural derivations — e.g. the
+    /// batch-1 nxBP sibling via `ConfigSpec::with_batch` — need it;
+    /// manifest-loaded (AOT artifact) configs carry `None` and fall
+    /// back to the manifest's `_b` naming convention instead.
+    pub spec: Option<ModelSpec>,
     pub params: Vec<ParamSpec>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
@@ -155,6 +163,7 @@ impl Manifest {
                     .as_usize()
                     .unwrap_or(0),
                 conv: conv_meta(c.get("conv")),
+                spec: None,
                 params,
                 artifacts,
             };
@@ -181,7 +190,11 @@ impl Manifest {
         self.configs.values().filter(|c| c.has_tag(tag)).collect()
     }
 
-    /// The batch-1 naive (nxBP body) config for a batched config.
+    /// The batch-1 naive (nxBP body) config for a batched config, by
+    /// the manifest's `_b<batch>` naming convention. This is the
+    /// fallback for manifest-loaded configs only — spec-derived
+    /// configs rebuild the sibling structurally via
+    /// `ConfigSpec::with_batch` (see `Backend::naive_sibling`).
     pub fn naive_config(&self, name: &str) -> Result<&ConfigSpec> {
         let base = name.rsplit_once("_b").map(|(b, _)| b).unwrap_or(name);
         self.config(&format!("{base}_b1"))

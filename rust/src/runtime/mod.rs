@@ -8,6 +8,7 @@ pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod native;
+pub mod spec;
 pub mod store;
 
 pub use backend::{Backend, StepFn};
@@ -16,6 +17,7 @@ pub use engine::{Engine, StepExe};
 pub use manifest::{ArtifactSpec, ConfigSpec, ConvMeta, Manifest, ParamSpec};
 pub use native::taps::{FamilyBuilder, FamilyRegistry, ModelFamily};
 pub use native::NativeBackend;
+pub use spec::{ConfigBuilder, ModelSpec, SpecKey};
 pub use store::{
     clip_factor, init_params_glorot, BatchStage, GradVec, ParamStore, StepOut,
 };

@@ -1075,6 +1075,7 @@ mod tests {
             input_dtype: "f32".into(),
             act_elems_per_example: 3 * 3 * 2 + 3,
             conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }),
+            spec: None,
             params: vec![
                 ParamSpec { name: "conv0.w".into(), shape: vec![2, 1, 3, 3] },
                 ParamSpec { name: "conv0.b".into(), shape: vec![2] },
@@ -1099,6 +1100,7 @@ mod tests {
             input_dtype: "f32".into(),
             act_elems_per_example: 4 * 4 * 2 + 2 * 2 * 3 + 3,
             conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }),
+            spec: None,
             params: vec![
                 ParamSpec { name: "conv0.w".into(), shape: vec![2, 1, 3, 3] },
                 ParamSpec { name: "conv0.b".into(), shape: vec![2] },

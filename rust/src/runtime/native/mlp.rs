@@ -754,6 +754,7 @@ mod tests {
             input_dtype: "f32".into(),
             act_elems_per_example: 5,
             conv: None,
+            spec: None,
             params: vec![
                 ParamSpec { name: "fc0.w".into(), shape: vec![4, 5] },
                 ParamSpec { name: "fc0.b".into(), shape: vec![5] },

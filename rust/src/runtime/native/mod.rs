@@ -32,10 +32,14 @@
 //!   - `naive1`:          the batch-1 body of the nxBP loop.
 //!
 //! Model families resolve through a name-keyed `FamilyRegistry`
-//! (`NativeBackend::register_family` to add one): `mlp{2,4,6,8}`
-//! (dense) and `cnn{2,4}` (stride-2 3x3 convs lowered to im2col patch
-//! matrices, fc head) register by default, over mnist/fmnist/cifar10
-//! at batch {1,16,32,64,128}.
+//! (`NativeBackend::register_family` to add one): `mlp` (dense) and
+//! `cnn` (convs lowered to im2col patch matrices, fc head) register by
+//! default. The *config* space is open too: `resolve` synthesizes any
+//! `model@dataset:bN` spec key through `spec::ConfigBuilder` (e.g.
+//! `mlp(depth=4,width=512)@cifar10:b256`), while the builtin grid —
+//! mlp{2,4,6,8} and cnn{2,4} over mnist/fmnist/cifar10 at batch
+//! {1,16,32,64,128} — survives as a preset naming layer over the same
+//! builder.
 //!
 //! Determinism: the GEMM/im2col kernels parallelize only over
 //! disjoint output blocks with fixed reduction orders (see `gemm`),
@@ -61,7 +65,10 @@ pub mod taps;
 
 use self::taps::{FamilyRegistry, ModelFamily, ScratchAny};
 use super::backend::{Backend, StepFn};
-use super::manifest::{ArtifactSpec, ConfigSpec, ConvMeta, Manifest, ParamSpec};
+use super::manifest::{ConfigSpec, Manifest};
+use super::spec::{
+    ConfigBuilder, ModelSpec, SpecKey, DEFAULT_CNN_CHANNELS, DEFAULT_MLP_WIDTH,
+};
 use super::store::{BatchStage, GradVec, ParamStore, StepOut};
 use anyhow::{bail, ensure, Context, Result};
 use rayon::prelude::*;
@@ -74,12 +81,6 @@ use std::sync::{Arc, Mutex};
 /// floating-point merge order — and therefore every gradient bit — is
 /// independent of the machine's parallelism.
 const CHUNK_EXAMPLES: usize = 8;
-
-/// Hidden width of the built-in MLP config family.
-const HIDDEN: usize = 128;
-
-/// Conv channel progression of the built-in CNN config family.
-const CNN_CHANNELS: [usize; 4] = [8, 16, 32, 32];
 
 pub struct NativeBackend {
     manifest: Manifest,
@@ -129,6 +130,29 @@ impl Backend for NativeBackend {
 
     fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Native config resolution is *open*: a reference that parses as
+    /// a `model@dataset:bN` spec key is synthesized on demand through
+    /// `spec::ConfigBuilder` (any depth/width/kernel/stride/batch the
+    /// family kernels can run); anything else must name a builtin
+    /// preset or a caller-manifest entry. Spec grammar is checked
+    /// first — it cannot collide with preset names (`mlp2_mnist_b32`
+    /// has no `@`), a parseable-but-unbuildable spec errors with the
+    /// builder's explanation, and a *malformed* spec-shaped reference
+    /// (it contains `@`, which no manifest name does) surfaces the
+    /// grammar error instead of a useless "unknown config".
+    fn resolve(&self, name: &str) -> Result<ConfigSpec> {
+        match SpecKey::parse(name) {
+            Ok(key) => ConfigBuilder::from_key(key)
+                .build()
+                .with_context(|| format!("synthesizing config {name:?}")),
+            Err(e) if name.contains('@') => Err(e.context(format!(
+                "config reference {name:?} looks like a spec key but does \
+                 not parse"
+            ))),
+            Err(_) => Ok(self.manifest.config(name)?.clone()),
+        }
     }
 
     fn load(&self, cfg: &ConfigSpec, method: &str) -> Result<Arc<dyn StepFn>> {
@@ -480,170 +504,57 @@ impl StepFn for NativeStep {
     }
 }
 
-fn artifact(method: &str, config: &str) -> (String, ArtifactSpec) {
-    let (extra, outputs): (&[&str], &[&str]) = match method {
-        "nonprivate" => (&[], &["grads", "loss"]),
-        "reweight" | "reweight_gram" | "reweight_direct" | "reweight_pallas"
-        | "multiloss" => (&["clip"], &["grads", "loss", "norms"]),
-        "naive1" => (&[], &["grads", "loss", "norm"]),
-        "fwd" => (&[], &["loss", "correct"]),
-        _ => (&[], &[]),
-    };
-    (
-        method.to_string(),
-        ArtifactSpec {
-            method: method.to_string(),
-            file: format!("native:{config}.{method}"),
-            extra_args: extra.iter().map(|s| s.to_string()).collect(),
-            outputs: outputs.iter().map(|s| s.to_string()).collect(),
-        },
-    )
-}
-
-/// The full batched method family every native config carries (plus
-/// `naive1` on the batch-1 siblings).
-fn insert_artifacts(name: &str, batch: usize, artifacts: &mut BTreeMap<String, ArtifactSpec>) {
-    for m in [
-        "nonprivate",
-        "reweight",
-        "reweight_gram",
-        "reweight_direct",
-        "reweight_pallas",
-        "multiloss",
-        "fwd",
-    ] {
-        let (k, v) = artifact(m, name);
-        artifacts.insert(k, v);
-    }
-    if batch == 1 {
-        let (k, v) = artifact("naive1", name);
-        artifacts.insert(k, v);
-    }
-}
-
-fn mlp_config(
-    dataset: &str,
-    img_shape: &[usize],
-    n_classes: usize,
-    depth: usize,
-    batch: usize,
-) -> ConfigSpec {
-    let name = format!("mlp{depth}_{dataset}_b{batch}");
-    let d_in: usize = img_shape.iter().product();
-    let mut params = Vec::with_capacity(depth * 2);
-    let mut prev = d_in;
-    for l in 0..depth {
-        let out = if l == depth - 1 { n_classes } else { HIDDEN };
-        params.push(ParamSpec { name: format!("fc{l}.w"), shape: vec![prev, out] });
-        params.push(ParamSpec { name: format!("fc{l}.b"), shape: vec![out] });
-        prev = out;
-    }
-    let mut tags: Vec<String> = Vec::new();
-    if batch == 1 {
-        tags.push("naive".into());
-    }
+/// One builtin *preset*: a spec-built config published under the
+/// grid's stable short name (`mlp2_mnist_b32`-style), with the figure
+/// tags the bench suite selects on. Structurally this is exactly
+/// `ConfigBuilder` output — the grid is a thin naming/tagging layer
+/// over the open spec space, not a separate construction path.
+fn preset(model: ModelSpec, dataset: &str, batch: usize) -> ConfigSpec {
+    let depth = model.depth();
+    let family = model.family();
+    let name = format!("{family}{depth}_{dataset}_b{batch}");
+    let mut cfg = ConfigBuilder::new(model, dataset, batch)
+        .named(&name)
+        .build()
+        .expect("builtin preset must synthesize");
     if depth == 2 && batch == 32 && (dataset == "mnist" || dataset == "fmnist") {
-        tags.push("fig5".into());
+        cfg.tags.push("fig5".into());
     }
-    if batch == 128 {
-        tags.push("fig7".into());
+    if family == "mlp" && batch == 128 {
+        cfg.tags.push("fig7".into());
     }
-    let mut artifacts = BTreeMap::new();
-    insert_artifacts(&name, batch, &mut artifacts);
-    let mut input_shape = vec![batch];
-    input_shape.extend_from_slice(img_shape);
-    ConfigSpec {
-        name,
-        model: "mlp".into(),
-        dataset: dataset.into(),
-        batch,
-        n_classes,
-        tags,
-        input_shape,
-        input_dtype: "f32".into(),
-        act_elems_per_example: (depth - 1) * HIDDEN + n_classes,
-        conv: None,
-        params,
-        artifacts,
-    }
+    cfg
 }
 
-/// Built-in CNN config: `depth` stride-2 3x3 conv layers (channels
-/// from `CNN_CHANNELS`) followed by one fc head onto the classes.
-/// Spatial maps halve per conv (ceil), so mnist runs 28→14→7→4→2 and
-/// cifar10 32→16→8→4→2.
-fn cnn_config(
-    dataset: &str,
-    img_shape: &[usize],
-    n_classes: usize,
-    depth: usize,
-    batch: usize,
-) -> ConfigSpec {
-    assert!((1..=CNN_CHANNELS.len()).contains(&depth));
-    let name = format!("cnn{depth}_{dataset}_b{batch}");
-    let meta = ConvMeta { kernel: 3, stride: 2, pad: 1 };
-    let (mut cin, mut h, mut w) = (img_shape[0], img_shape[1], img_shape[2]);
-    let mut params = Vec::with_capacity(depth * 2 + 2);
-    let mut act_elems = 0usize;
-    for l in 0..depth {
-        let cout = CNN_CHANNELS[l];
-        params.push(ParamSpec {
-            name: format!("conv{l}.w"),
-            shape: vec![cout, cin, meta.kernel, meta.kernel],
-        });
-        params.push(ParamSpec { name: format!("conv{l}.b"), shape: vec![cout] });
-        h = gemm::conv_out(h, meta.kernel, meta.stride, meta.pad);
-        w = gemm::conv_out(w, meta.kernel, meta.stride, meta.pad);
-        act_elems += h * w * cout;
-        cin = cout;
-    }
-    let flat = cin * h * w;
-    params.push(ParamSpec { name: "fc.w".into(), shape: vec![flat, n_classes] });
-    params.push(ParamSpec { name: "fc.b".into(), shape: vec![n_classes] });
-    act_elems += n_classes;
-    let mut tags: Vec<String> = Vec::new();
-    if batch == 1 {
-        tags.push("naive".into());
-    }
-    if depth == 2 && batch == 32 && (dataset == "mnist" || dataset == "fmnist") {
-        tags.push("fig5".into());
-    }
-    let mut artifacts = BTreeMap::new();
-    insert_artifacts(&name, batch, &mut artifacts);
-    let mut input_shape = vec![batch];
-    input_shape.extend_from_slice(img_shape);
-    ConfigSpec {
-        name,
-        model: "cnn".into(),
-        dataset: dataset.into(),
-        batch,
-        n_classes,
-        tags,
-        input_shape,
-        input_dtype: "f32".into(),
-        act_elems_per_example: act_elems,
-        conv: Some(meta),
-        params,
-        artifacts,
-    }
-}
-
-/// The built-in config families the native backend can always run.
+/// The built-in preset grid the native backend always carries:
+/// mlp{2,4,6,8} (width `DEFAULT_MLP_WIDTH`) and cnn{2,4} (stride-2 3x3, channels
+/// from `DEFAULT_CNN_CHANNELS`) over mnist/fmnist/cifar10 at batch
+/// {1,16,32,64,128}. Anything beyond the grid resolves through the
+/// spec grammar (`NativeBackend::resolve`) instead of being added
+/// here.
 fn builtin_manifest() -> Manifest {
     let mut configs = BTreeMap::new();
-    let datasets: [(&str, &[usize], usize); 3] = [
-        ("mnist", &[1, 28, 28], 10),
-        ("fmnist", &[1, 28, 28], 10),
-        ("cifar10", &[3, 32, 32], 10),
-    ];
-    for (dataset, shape, n_classes) in datasets {
+    for dataset in ["mnist", "fmnist", "cifar10"] {
         for batch in [1usize, 16, 32, 64, 128] {
             for depth in [2usize, 4, 6, 8] {
-                let cfg = mlp_config(dataset, shape, n_classes, depth, batch);
+                let cfg = preset(
+                    ModelSpec::Mlp { depth, width: DEFAULT_MLP_WIDTH },
+                    dataset,
+                    batch,
+                );
                 configs.insert(cfg.name.clone(), cfg);
             }
             for depth in [2usize, 4] {
-                let cfg = cnn_config(dataset, shape, n_classes, depth, batch);
+                let cfg = preset(
+                    ModelSpec::Cnn {
+                        k: 3,
+                        s: 2,
+                        pad: 1,
+                        ch: DEFAULT_CNN_CHANNELS[..depth].to_vec(),
+                    },
+                    dataset,
+                    batch,
+                );
                 configs.insert(cfg.name.clone(), cfg);
             }
         }
@@ -654,6 +565,7 @@ fn builtin_manifest() -> Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::ConvMeta;
     use crate::runtime::store::init_params_glorot;
 
     #[test]
@@ -662,7 +574,7 @@ mod tests {
         let m = b.manifest();
         let cfg = m.config("mlp2_mnist_b32").unwrap();
         assert_eq!(cfg.batch, 32);
-        assert_eq!(cfg.params[0].shape, vec![784, HIDDEN]);
+        assert_eq!(cfg.params[0].shape, vec![784, DEFAULT_MLP_WIDTH]);
         // the full batched method matrix is native, on both families
         for name in ["mlp2_mnist_b32", "cnn2_mnist_b32", "cnn4_cifar10_b64"] {
             let cfg = m.config(name).unwrap();
@@ -702,6 +614,67 @@ mod tests {
         assert_eq!(cnn.conv, Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }));
         let cnn4 = m.config("cnn4_cifar10_b16").unwrap();
         assert_eq!(cnn4.params[8].shape, vec![2 * 2 * 32, 10]);
+    }
+
+    /// Every builtin preset carries spec provenance, and its batch-1
+    /// sibling derived *structurally* (`with_batch(1)`) matches the
+    /// manifest's `_b1` entry in everything but the name — so the
+    /// preset layer and the builder can never drift apart.
+    #[test]
+    fn presets_carry_provenance_matching_their_b1_sibling() {
+        let b = NativeBackend::new();
+        for name in ["mlp4_cifar10_b64", "cnn2_mnist_b32"] {
+            let cfg = b.manifest().config(name).unwrap();
+            assert!(cfg.spec.is_some(), "{name} has no spec provenance");
+            let structural = b.naive_sibling(cfg).unwrap();
+            let by_name = b.manifest().naive_config(name).unwrap();
+            assert_eq!(structural.batch, 1);
+            assert_eq!(structural.params.len(), by_name.params.len(), "{name}");
+            for (a, c) in structural.params.iter().zip(&by_name.params) {
+                assert_eq!(a.shape, c.shape, "{name}.{}", a.name);
+            }
+            assert_eq!(
+                structural.act_elems_per_example,
+                by_name.act_elems_per_example,
+                "{name}"
+            );
+            assert_eq!(structural.conv, by_name.conv, "{name}");
+            assert!(structural.artifacts.contains_key("naive1"), "{name}");
+        }
+    }
+
+    /// Native resolution order: spec keys synthesize (off the grid),
+    /// preset names hit the manifest, and everything else errors with
+    /// the manifest's unknown-config message.
+    #[test]
+    fn resolve_synthesizes_specs_and_keeps_preset_names() {
+        let b = NativeBackend::new();
+        // a config far outside the builtin grid synthesizes on demand
+        let cfg = b.resolve("mlp(depth=4,width=512)@cifar10:b256").unwrap();
+        assert_eq!(cfg.batch, 256);
+        assert_eq!(cfg.params[0].shape, vec![3072, 512]);
+        assert!(b.manifest().config(&cfg.name).is_err(), "not grid-backed");
+        // ...and executes through the ordinary load path
+        assert!(b.load(&cfg, "reweight").is_ok());
+        // preset names resolve to the grid entry, bit-for-bit
+        let grid = b.resolve("mlp2_mnist_b32").unwrap();
+        assert_eq!(grid.name, "mlp2_mnist_b32");
+        assert_eq!(grid.batch, 32);
+        // a parseable-but-unbuildable spec reports the builder's error
+        let err = b.resolve("mlp(depth=2,width=8)@nodataset:b4").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown dataset"));
+        // a malformed spec-shaped reference (contains `@`) surfaces the
+        // grammar error — not a useless "unknown config"
+        let err =
+            b.resolve("mlp(depth=4,widht=512)@cifar10:b256").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("does not parse") && msg.contains("widht"),
+            "{msg}"
+        );
+        // a plain unknown name reports the manifest's error
+        let err = b.resolve("no_such_config").unwrap_err();
+        assert!(format!("{err:#}").contains("no_such_config"));
     }
 
     #[test]

@@ -309,6 +309,7 @@ mod tests {
             input_dtype: "f32".into(),
             act_elems_per_example: 0,
             conv: None,
+            spec: None,
             params: vec![
                 ParamSpec { name: "w".into(), shape: vec![784, 10] },
                 ParamSpec { name: "b".into(), shape: vec![10] },

@@ -1,0 +1,834 @@
+//! The ModelSpec DSL + `ConfigBuilder`: config *synthesis* for any
+//! architecture x dataset x batch, replacing "look a name up in a
+//! closed grid".
+//!
+//! The paper's headline claims are scaling curves — step time as a
+//! function of batch size and architecture — so the interesting
+//! configs are exactly the ones a fixed grid does not contain. This
+//! module turns a small parseable spec into a full `ConfigSpec`
+//! (param shapes, activation elements, conv meta, the standard
+//! artifact set) on demand:
+//!
+//! ```text
+//!   model spec   mlp(depth=4,width=512)
+//!                cnn(depth=2,k=3,s=1,pad=1,ch=8-16)
+//!   spec key     <model-spec>@<dataset>:b<batch>
+//!                e.g. mlp(depth=4,width=512)@cifar10:b256
+//! ```
+//!
+//! Grammar notes:
+//!   - keys may be abbreviated (`d`/`depth`, `w`/`width`, `k`/`kernel`,
+//!     `s`/`stride`, `p`/`pad`, `ch`/`channels`), appear in any order,
+//!     and fall back to the builtin grid's defaults when omitted;
+//!   - `ch` is a dash-separated out-channel progression whose length is
+//!     the conv depth (`depth` may be given redundantly, but must then
+//!     agree);
+//!   - the *canonical* form (what `Display` prints) spells every field
+//!     out in a fixed order, so `SpecKey::to_string()` is a stable key
+//!     for bench records and checkpoints, and `parse(print(x)) == x`.
+//!
+//! Resolution order (see `Backend::resolve`): a config reference that
+//! parses as a spec key is synthesized here (native backend only);
+//! otherwise it must name a builtin preset / manifest entry. The
+//! builtin grid itself is a thin preset layer over this builder
+//! (`runtime::native::builtin_manifest`), which is what lets
+//! `ConfigSpec::with_batch` derive e.g. the batch-1 nxBP sibling
+//! *structurally* instead of by `_b`-suffix string surgery.
+
+use super::manifest::{ArtifactSpec, ConfigSpec, ConvMeta, ParamSpec};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Default hidden width of `mlp(...)` specs (the builtin grid's width).
+pub const DEFAULT_MLP_WIDTH: usize = 128;
+
+/// Default out-channel progression of `cnn(...)` specs; depths past the
+/// table repeat the last entry.
+pub const DEFAULT_CNN_CHANNELS: [usize; 4] = [8, 16, 32, 32];
+
+/// A parsed model architecture spec — the open half of a config
+/// (the closed half being dataset + batch, carried by `SpecKey`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// Dense net: `depth` fc layers, hidden width `width`, final layer
+    /// onto the dataset's classes.
+    Mlp { depth: usize, width: usize },
+    /// Conv net: one kxk/stride-s/pad-p conv per entry of `ch` (the
+    /// out-channel progression), then one fc head onto the classes.
+    Cnn { k: usize, s: usize, pad: usize, ch: Vec<usize> },
+}
+
+/// The default channel progression truncated/extended to `depth`.
+fn default_channels(depth: usize) -> Vec<usize> {
+    (0..depth)
+        .map(|i| DEFAULT_CNN_CHANNELS[i.min(DEFAULT_CNN_CHANNELS.len() - 1)])
+        .collect()
+}
+
+impl ModelSpec {
+    /// Parse `family(key=value,...)`. See the module docs for the
+    /// grammar; the canonical printed form always round-trips.
+    pub fn parse(src: &str) -> Result<ModelSpec> {
+        let s = src.trim();
+        let open = s.find('(').with_context(|| {
+            format!(
+                "model spec {src:?}: expected `family(key=value,...)`, \
+                 e.g. mlp(depth=4,width=512) or cnn(depth=2,k=3,s=1,pad=1,ch=8-16)"
+            )
+        })?;
+        ensure!(
+            s.ends_with(')'),
+            "model spec {src:?}: missing closing `)`"
+        );
+        let family = &s[..open];
+        // family first: an unknown family must say so, not blame the
+        // first key canon_key fails to recognize for it
+        ensure!(
+            family == "mlp" || family == "cnn",
+            "model spec {src:?}: unknown model family {family:?} (mlp|cnn)"
+        );
+        let body = &s[open + 1..s.len() - 1];
+        let mut fields: BTreeMap<&'static str, &str> = BTreeMap::new();
+        for part in body.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=').with_context(|| {
+                format!("model spec {src:?}: expected key=value, got {part:?}")
+            })?;
+            let key = canon_key(family, k.trim())
+                .with_context(|| format!("model spec {src:?}"))?;
+            ensure!(
+                fields.insert(key, v.trim()).is_none(),
+                "model spec {src:?}: duplicate key {key:?}"
+            );
+        }
+        match family {
+            "mlp" => {
+                let depth = field_usize(&fields, "depth", src)?.unwrap_or(2);
+                let width =
+                    field_usize(&fields, "width", src)?.unwrap_or(DEFAULT_MLP_WIDTH);
+                ensure!(depth >= 1, "model spec {src:?}: depth must be >= 1");
+                ensure!(width >= 1, "model spec {src:?}: width must be >= 1");
+                Ok(ModelSpec::Mlp { depth, width })
+            }
+            "cnn" => {
+                let k = field_usize(&fields, "k", src)?.unwrap_or(3);
+                let s_ = field_usize(&fields, "s", src)?.unwrap_or(2);
+                let pad = field_usize(&fields, "pad", src)?.unwrap_or(1);
+                ensure!(k >= 1, "model spec {src:?}: kernel must be >= 1");
+                ensure!(s_ >= 1, "model spec {src:?}: stride must be >= 1");
+                let depth = field_usize(&fields, "depth", src)?;
+                let ch = match fields.get("ch") {
+                    Some(v) => {
+                        let ch: Vec<usize> = v
+                            .split('-')
+                            .map(|c| {
+                                c.trim().parse::<usize>().with_context(|| {
+                                    format!(
+                                        "model spec {src:?}: ch expects \
+                                         dash-separated channel counts, got {v:?}"
+                                    )
+                                })
+                            })
+                            .collect::<Result<_>>()?;
+                        if let Some(d) = depth {
+                            ensure!(
+                                ch.len() == d,
+                                "model spec {src:?}: depth={d} but ch lists \
+                                 {} channels",
+                                ch.len()
+                            );
+                        }
+                        ch
+                    }
+                    None => default_channels(depth.unwrap_or(2)),
+                };
+                ensure!(
+                    !ch.is_empty() && ch.iter().all(|&c| c >= 1),
+                    "model spec {src:?}: channel counts must be >= 1"
+                );
+                Ok(ModelSpec::Cnn { k, s: s_, pad, ch })
+            }
+            _ => unreachable!("family validated above"),
+        }
+    }
+
+    /// Registry name of the model family this spec synthesizes
+    /// (matches `ConfigSpec::model`).
+    pub fn family(&self) -> &'static str {
+        match self {
+            ModelSpec::Mlp { .. } => "mlp",
+            ModelSpec::Cnn { .. } => "cnn",
+        }
+    }
+
+    /// Number of parameterized layers before the classifier head
+    /// counts itself: fc layers for mlp, conv layers for cnn.
+    pub fn depth(&self) -> usize {
+        match self {
+            ModelSpec::Mlp { depth, .. } => *depth,
+            ModelSpec::Cnn { ch, .. } => ch.len(),
+        }
+    }
+}
+
+impl fmt::Display for ModelSpec {
+    /// The canonical form: every field explicit, fixed order.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelSpec::Mlp { depth, width } => {
+                write!(f, "mlp(depth={depth},width={width})")
+            }
+            ModelSpec::Cnn { k, s, pad, ch } => {
+                let chs: Vec<String> =
+                    ch.iter().map(|c| c.to_string()).collect();
+                write!(
+                    f,
+                    "cnn(depth={},k={k},s={s},pad={pad},ch={})",
+                    ch.len(),
+                    chs.join("-")
+                )
+            }
+        }
+    }
+}
+
+/// Map a (possibly abbreviated) spec key to its canonical field name.
+fn canon_key(family: &str, k: &str) -> Result<&'static str> {
+    Ok(match (family, k) {
+        ("mlp", "depth") | ("mlp", "d") => "depth",
+        ("mlp", "width") | ("mlp", "w") => "width",
+        ("cnn", "depth") | ("cnn", "d") => "depth",
+        ("cnn", "k") | ("cnn", "kernel") => "k",
+        ("cnn", "s") | ("cnn", "stride") => "s",
+        ("cnn", "pad") | ("cnn", "p") => "pad",
+        ("cnn", "ch") | ("cnn", "channels") => "ch",
+        _ => bail!("unknown key {k:?} for a {family} spec"),
+    })
+}
+
+fn field_usize(
+    fields: &BTreeMap<&'static str, &str>,
+    key: &'static str,
+    src: &str,
+) -> Result<Option<usize>> {
+    match fields.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.parse::<usize>().with_context(|| {
+            format!("model spec {src:?}: {key} expects an integer, got {v:?}")
+        })?)),
+    }
+}
+
+/// A full config reference in spec form: model x dataset x batch —
+/// everything the builder needs, and (printed canonically) the stable
+/// name synthesized configs carry through bench records, checkpoints,
+/// and the CLI.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecKey {
+    pub model: ModelSpec,
+    pub dataset: String,
+    pub batch: usize,
+}
+
+impl SpecKey {
+    pub fn new(model: ModelSpec, dataset: &str, batch: usize) -> SpecKey {
+        SpecKey { model, dataset: dataset.to_string(), batch }
+    }
+
+    /// Parse `model(...)@dataset:bN`.
+    pub fn parse(src: &str) -> Result<SpecKey> {
+        let s = src.trim();
+        let (model, rest) = s.rsplit_once('@').with_context(|| {
+            format!(
+                "config spec {src:?}: expected `model(...)@dataset:bN`, \
+                 e.g. mlp(depth=4,width=512)@cifar10:b256"
+            )
+        })?;
+        let (dataset, b) = rest.rsplit_once(":b").with_context(|| {
+            format!("config spec {src:?}: expected `dataset:bN` after `@`")
+        })?;
+        let batch: usize = b.parse().with_context(|| {
+            format!("config spec {src:?}: batch expects an integer, got {b:?}")
+        })?;
+        ensure!(batch >= 1, "config spec {src:?}: batch must be >= 1");
+        ensure!(
+            !dataset.is_empty()
+                && dataset
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "config spec {src:?}: bad dataset name {dataset:?}"
+        );
+        Ok(SpecKey {
+            model: ModelSpec::parse(model)?,
+            dataset: dataset.to_string(),
+            batch,
+        })
+    }
+}
+
+impl fmt::Display for SpecKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}:b{}", self.model, self.dataset, self.batch)
+    }
+}
+
+/// Image-shaped f32 datasets the builder can synthesize configs for:
+/// ([c, h, w], n_classes). Kept in sync with `data::synth::by_name`.
+pub fn dataset_shape(name: &str) -> Result<(Vec<usize>, usize)> {
+    Ok(match name {
+        "mnist" | "fmnist" => (vec![1, 28, 28], 10),
+        "cifar10" => (vec![3, 32, 32], 10),
+        "lsun16" => (vec![3, 16, 16], 10),
+        "lsun32" => (vec![3, 32, 32], 10),
+        "lsun48" => (vec![3, 48, 48], 10),
+        "lsun64" => (vec![3, 64, 64], 10),
+        "imdb" => bail!(
+            "dataset \"imdb\" stages i32 token features; the native model \
+             families consume f32 images, so it cannot be synthesized from \
+             a model spec"
+        ),
+        other => bail!(
+            "unknown dataset {other:?} \
+             (mnist|fmnist|cifar10|lsun16|lsun32|lsun48|lsun64)"
+        ),
+    })
+}
+
+fn artifact(method: &str, config: &str) -> (String, ArtifactSpec) {
+    let (extra, outputs): (&[&str], &[&str]) = match method {
+        "nonprivate" => (&[], &["grads", "loss"]),
+        "reweight" | "reweight_gram" | "reweight_direct" | "reweight_pallas"
+        | "multiloss" => (&["clip"], &["grads", "loss", "norms"]),
+        "naive1" => (&[], &["grads", "loss", "norm"]),
+        "fwd" => (&[], &["loss", "correct"]),
+        _ => (&[], &[]),
+    };
+    (
+        method.to_string(),
+        ArtifactSpec {
+            method: method.to_string(),
+            file: format!("native:{config}.{method}"),
+            extra_args: extra.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        },
+    )
+}
+
+/// The full batched method family every synthesized config carries
+/// (plus `naive1` on batch-1 configs — the nxBP loop body).
+pub fn standard_artifacts(
+    name: &str,
+    batch: usize,
+) -> BTreeMap<String, ArtifactSpec> {
+    let mut artifacts = BTreeMap::new();
+    for m in [
+        "nonprivate",
+        "reweight",
+        "reweight_gram",
+        "reweight_direct",
+        "reweight_pallas",
+        "multiloss",
+        "fwd",
+    ] {
+        let (k, v) = artifact(m, name);
+        artifacts.insert(k, v);
+    }
+    if batch == 1 {
+        let (k, v) = artifact("naive1", name);
+        artifacts.insert(k, v);
+    }
+    artifacts
+}
+
+/// Synthesize a full `ConfigSpec` — param shapes, activation elements,
+/// conv meta, the standard artifact set, and the canonical name — from
+/// a `ModelSpec` x dataset x batch. This is the open replacement for
+/// the closed builtin grid; the grid itself is now a preset layer that
+/// calls this builder under its stable short names (`named`).
+pub struct ConfigBuilder {
+    model: ModelSpec,
+    dataset: String,
+    batch: usize,
+    name: Option<String>,
+}
+
+impl ConfigBuilder {
+    pub fn new(model: ModelSpec, dataset: &str, batch: usize) -> ConfigBuilder {
+        ConfigBuilder {
+            model,
+            dataset: dataset.to_string(),
+            batch,
+            name: None,
+        }
+    }
+
+    pub fn from_key(key: SpecKey) -> ConfigBuilder {
+        ConfigBuilder {
+            model: key.model,
+            dataset: key.dataset,
+            batch: key.batch,
+            name: None,
+        }
+    }
+
+    /// Override the canonical printed name (the builtin grid's preset
+    /// layer names its configs `mlp2_mnist_b32`-style).
+    pub fn named(mut self, name: &str) -> ConfigBuilder {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    fn key(&self) -> SpecKey {
+        SpecKey {
+            model: self.model.clone(),
+            dataset: self.dataset.clone(),
+            batch: self.batch,
+        }
+    }
+
+    pub fn build(&self) -> Result<ConfigSpec> {
+        let key = self.key();
+        ensure!(self.batch >= 1, "config spec {key}: batch must be >= 1");
+        let (img_shape, n_classes) = dataset_shape(&self.dataset)
+            .with_context(|| format!("building config for spec {key}"))?;
+        let name = self.name.clone().unwrap_or_else(|| key.to_string());
+        // Mirror the parse-time invariants: `ModelSpec`'s fields and
+        // `ConfigBuilder::new` are pub, so a programmatically built
+        // spec can bypass `ModelSpec::parse` — without these, s=0
+        // would reach `conv_out`'s division and depth=0 would
+        // underflow the act_elems arithmetic instead of erroring.
+        let (params, act_elems, conv) = match &self.model {
+            ModelSpec::Mlp { depth, width } => {
+                ensure!(
+                    *depth >= 1 && *width >= 1,
+                    "config spec {key}: depth and width must be >= 1"
+                );
+                let d_in: usize = img_shape.iter().product();
+                let mut params = Vec::with_capacity(depth * 2);
+                let mut prev = d_in;
+                for l in 0..*depth {
+                    let out = if l == depth - 1 { n_classes } else { *width };
+                    params.push(ParamSpec {
+                        name: format!("fc{l}.w"),
+                        shape: vec![prev, out],
+                    });
+                    params.push(ParamSpec {
+                        name: format!("fc{l}.b"),
+                        shape: vec![out],
+                    });
+                    prev = out;
+                }
+                (params, (depth - 1) * width + n_classes, None)
+            }
+            ModelSpec::Cnn { k, s, pad, ch } => {
+                ensure!(
+                    *k >= 1 && *s >= 1,
+                    "config spec {key}: kernel and stride must be >= 1"
+                );
+                ensure!(
+                    !ch.is_empty() && ch.iter().all(|&c| c >= 1),
+                    "config spec {key}: channel counts must be >= 1"
+                );
+                let meta = ConvMeta { kernel: *k, stride: *s, pad: *pad };
+                let (mut cin, mut h, mut w) =
+                    (img_shape[0], img_shape[1], img_shape[2]);
+                let mut params = Vec::with_capacity(ch.len() * 2 + 2);
+                let mut act_elems = 0usize;
+                for (l, &cout) in ch.iter().enumerate() {
+                    let (k0, p0) = (meta.kernel, meta.pad);
+                    ensure!(
+                        h + 2 * p0 >= k0 && w + 2 * p0 >= k0,
+                        "config spec {key}: conv layer {l}'s {k0}x{k0} kernel \
+                         does not fit the {h}x{w} map at pad {p0} — reduce \
+                         depth/kernel or increase pad"
+                    );
+                    params.push(ParamSpec {
+                        name: format!("conv{l}.w"),
+                        shape: vec![cout, cin, meta.kernel, meta.kernel],
+                    });
+                    params.push(ParamSpec {
+                        name: format!("conv{l}.b"),
+                        shape: vec![cout],
+                    });
+                    h = super::native::gemm::conv_out(
+                        h,
+                        meta.kernel,
+                        meta.stride,
+                        meta.pad,
+                    );
+                    w = super::native::gemm::conv_out(
+                        w,
+                        meta.kernel,
+                        meta.stride,
+                        meta.pad,
+                    );
+                    ensure!(
+                        h >= 1 && w >= 1,
+                        "config spec {key}: the spatial map collapsed to \
+                         {h}x{w} after conv layer {l}"
+                    );
+                    act_elems += h * w * cout;
+                    cin = cout;
+                }
+                let flat = cin * h * w;
+                params.push(ParamSpec {
+                    name: "fc.w".into(),
+                    shape: vec![flat, n_classes],
+                });
+                params.push(ParamSpec {
+                    name: "fc.b".into(),
+                    shape: vec![n_classes],
+                });
+                act_elems += n_classes;
+                (params, act_elems, Some(meta))
+            }
+        };
+        let mut tags: Vec<String> = Vec::new();
+        if self.batch == 1 {
+            tags.push("naive".into());
+        }
+        let mut input_shape = vec![self.batch];
+        input_shape.extend_from_slice(&img_shape);
+        Ok(ConfigSpec {
+            name: name.clone(),
+            model: self.model.family().to_string(),
+            dataset: self.dataset.clone(),
+            batch: self.batch,
+            n_classes,
+            tags,
+            input_shape,
+            input_dtype: "f32".into(),
+            act_elems_per_example: act_elems,
+            conv,
+            spec: Some(self.model.clone()),
+            params,
+            artifacts: standard_artifacts(&name, self.batch),
+        })
+    }
+}
+
+impl ConfigSpec {
+    /// Rebuild this config at a different batch size — *structurally*,
+    /// through the spec provenance and `ConfigBuilder`, never by name
+    /// surgery. The sibling carries the canonical spec name (a preset
+    /// short name is not propagated) and, at batch 1, the `naive1`
+    /// artifact the nxBP loop needs. Manifest-loaded configs without
+    /// provenance cannot be rebuilt; `Backend::naive_sibling` falls
+    /// back to the manifest's `_b` naming convention for those.
+    pub fn with_batch(&self, batch: usize) -> Result<ConfigSpec> {
+        let model = self.spec.clone().with_context(|| {
+            format!(
+                "config {} carries no model spec provenance \
+                 (manifest-loaded) — cannot derive a batch-{batch} sibling \
+                 structurally",
+                self.name
+            )
+        })?;
+        ConfigBuilder::new(model, &self.dataset, batch).build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_print_roundtrip_canonical() {
+        for src in [
+            "mlp(depth=4,width=512)",
+            "mlp(depth=1,width=7)",
+            "cnn(depth=2,k=3,s=1,pad=1,ch=8-16)",
+            "cnn(depth=3,k=5,s=2,pad=2,ch=4-4-12)",
+        ] {
+            let spec = ModelSpec::parse(src).unwrap();
+            assert_eq!(spec.to_string(), src);
+            assert_eq!(ModelSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_accepts_aliases_order_whitespace_and_defaults() {
+        let a = ModelSpec::parse("mlp(w=64, d=3)").unwrap();
+        assert_eq!(a, ModelSpec::Mlp { depth: 3, width: 64 });
+        let b = ModelSpec::parse("mlp()").unwrap();
+        assert_eq!(b, ModelSpec::Mlp { depth: 2, width: DEFAULT_MLP_WIDTH });
+        let c = ModelSpec::parse(" cnn( stride=1 , kernel=3 ) ").unwrap();
+        assert_eq!(
+            c,
+            ModelSpec::Cnn { k: 3, s: 1, pad: 1, ch: vec![8, 16] }
+        );
+        // depth alone pulls the default channel progression (and
+        // extends it past the table by repeating the last entry)
+        let d = ModelSpec::parse("cnn(depth=5,p=0)").unwrap();
+        assert_eq!(
+            d,
+            ModelSpec::Cnn { k: 3, s: 2, pad: 0, ch: vec![8, 16, 32, 32, 32] }
+        );
+        // redundant-but-consistent depth+ch is fine
+        let e = ModelSpec::parse("cnn(depth=2,ch=8-16)").unwrap();
+        assert_eq!(e.depth(), 2);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "mlp",                       // no parens
+            "mlp(depth=4",               // unclosed
+            "mlp(depth)",                // no value
+            "mlp(depth=4,depth=6)",      // duplicate key
+            "mlp(depth=x)",              // bad int
+            "mlp(depth=0)",              // zero depth
+            "mlp(k=3)",                  // cnn key on mlp
+            "rnn(depth=2)",              // unknown family
+            "cnn(depth=3,ch=8-16)",      // depth/ch disagree
+            "cnn(ch=8-0)",               // zero channels
+            "cnn(s=0)",                  // zero stride
+        ] {
+            assert!(ModelSpec::parse(bad).is_err(), "{bad:?} parsed");
+        }
+        // an unknown family names the family — it does not blame the
+        // first key (`canon_key` would otherwise see it first)
+        let err = ModelSpec::parse("resnet(depth=18)").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("unknown model family") && msg.contains("resnet"),
+            "{msg}"
+        );
+    }
+
+    /// Property: a randomly generated spec survives print -> parse
+    /// exactly (the canonical form is a faithful key).
+    #[test]
+    fn prop_spec_roundtrip() {
+        use crate::testkit::prop;
+        prop::check(200, |g| {
+            let spec = if g.bool() {
+                ModelSpec::Mlp {
+                    depth: g.usize_incl(1..=12),
+                    width: g.usize_incl(1..=2048),
+                }
+            } else {
+                let depth = g.usize_incl(1..=5);
+                ModelSpec::Cnn {
+                    k: g.usize_incl(1..=7),
+                    s: g.usize_incl(1..=3),
+                    pad: g.usize_incl(0..=3),
+                    ch: (0..depth).map(|_| g.usize_incl(1..=64)).collect(),
+                }
+            };
+            let printed = spec.to_string();
+            let back = ModelSpec::parse(&printed)
+                .map_err(|e| format!("{printed}: {e:#}"))?;
+            if back != spec {
+                return Err(format!("{printed} reparsed as {back:?}"));
+            }
+            // ...and the full key round-trips too
+            let key = SpecKey::new(spec, "cifar10", g.usize_incl(1..=512));
+            let back = SpecKey::parse(&key.to_string())
+                .map_err(|e| format!("{key}: {e:#}"))?;
+            if back != key {
+                return Err(format!("{key} reparsed as {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spec_key_parse_and_errors() {
+        let k = SpecKey::parse("mlp(depth=4,width=512)@cifar10:b256").unwrap();
+        assert_eq!(k.dataset, "cifar10");
+        assert_eq!(k.batch, 256);
+        assert_eq!(k.to_string(), "mlp(depth=4,width=512)@cifar10:b256");
+        for bad in [
+            "mlp(depth=4,width=512)",            // no @dataset
+            "mlp(depth=4)@cifar10",              // no :bN
+            "mlp(depth=4)@cifar10:b0",           // zero batch
+            "mlp(depth=4)@cifar10:bxyz",         // bad batch
+            "mlp(depth=4)@ci far:b8",            // bad dataset
+            "mlp2_mnist_b32",                    // grid preset names are not specs
+        ] {
+            assert!(SpecKey::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn builder_synthesizes_off_grid_mlp() {
+        let cfg = ConfigBuilder::from_key(
+            SpecKey::parse("mlp(depth=4,width=512)@cifar10:b256").unwrap(),
+        )
+        .build()
+        .unwrap();
+        assert_eq!(cfg.name, "mlp(depth=4,width=512)@cifar10:b256");
+        assert_eq!(cfg.model, "mlp");
+        assert_eq!(cfg.batch, 256);
+        assert_eq!(cfg.input_shape, vec![256, 3, 32, 32]);
+        // 3072 -> 512 -> 512 -> 512 -> 10
+        assert_eq!(cfg.params.len(), 8);
+        assert_eq!(cfg.params[0].shape, vec![3072, 512]);
+        assert_eq!(cfg.params[2].shape, vec![512, 512]);
+        assert_eq!(cfg.params[6].shape, vec![512, 10]);
+        assert_eq!(cfg.params[7].shape, vec![10]);
+        assert_eq!(cfg.act_elems_per_example, 3 * 512 + 10);
+        assert_eq!(cfg.conv, None);
+        assert_eq!(
+            cfg.spec,
+            Some(ModelSpec::Mlp { depth: 4, width: 512 })
+        );
+        // the standard batched artifact set, no naive1 above batch 1
+        for m in ["reweight", "reweight_direct", "multiloss", "fwd"] {
+            assert!(cfg.artifacts.contains_key(m), "{m}");
+        }
+        assert!(!cfg.artifacts.contains_key("naive1"));
+    }
+
+    #[test]
+    fn builder_synthesizes_stride1_cnn() {
+        let cfg = ConfigBuilder::from_key(
+            SpecKey::parse("cnn(depth=2,k=3,s=1,pad=1,ch=8-16)@mnist:b48")
+                .unwrap(),
+        )
+        .build()
+        .unwrap();
+        // stride-1 pad-1 3x3 preserves the 28x28 map
+        assert_eq!(cfg.params[0].shape, vec![8, 1, 3, 3]);
+        assert_eq!(cfg.params[2].shape, vec![16, 8, 3, 3]);
+        assert_eq!(cfg.params[4].shape, vec![28 * 28 * 16, 10]);
+        assert_eq!(
+            cfg.act_elems_per_example,
+            28 * 28 * 8 + 28 * 28 * 16 + 10
+        );
+        assert_eq!(
+            cfg.conv,
+            Some(ConvMeta { kernel: 3, stride: 1, pad: 1 })
+        );
+        assert_eq!(cfg.batch, 48);
+    }
+
+    /// The batch-1 sibling is derived structurally: same shapes, batch
+    /// 1, and the `naive1` artifact the nxBP loop needs.
+    #[test]
+    fn with_batch_derives_naive_sibling() {
+        let cfg = ConfigBuilder::from_key(
+            SpecKey::parse("mlp(depth=3,width=96)@mnist:b24").unwrap(),
+        )
+        .build()
+        .unwrap();
+        let sib = cfg.with_batch(1).unwrap();
+        assert_eq!(sib.batch, 1);
+        assert_eq!(sib.input_shape[0], 1);
+        assert_eq!(sib.params.len(), cfg.params.len());
+        for (a, b) in sib.params.iter().zip(&cfg.params) {
+            assert_eq!(a.shape, b.shape);
+        }
+        assert_eq!(sib.act_elems_per_example, cfg.act_elems_per_example);
+        assert!(sib.artifacts.contains_key("naive1"));
+        assert!(sib.has_tag("naive"));
+        // no provenance -> no structural sibling
+        let mut bare = cfg.clone();
+        bare.spec = None;
+        let err = bare.with_batch(1).unwrap_err();
+        assert!(format!("{err:#}").contains("provenance"));
+    }
+
+    #[test]
+    fn builder_rejects_unsynthesizable_keys() {
+        // unknown dataset
+        let err = ConfigBuilder::new(
+            ModelSpec::Mlp { depth: 2, width: 8 },
+            "nope",
+            4,
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown dataset"));
+        // token dataset
+        let err = ConfigBuilder::new(
+            ModelSpec::Mlp { depth: 2, width: 8 },
+            "imdb",
+            4,
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("imdb"));
+        // kernel outgrows the shrinking map
+        let err = ConfigBuilder::new(
+            ModelSpec::Cnn { k: 5, s: 2, pad: 0, ch: vec![4, 4, 4] },
+            "mnist",
+            4,
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("does not fit"));
+        // programmatically built specs bypass parse: build() must
+        // still reject degenerate geometry (a release-mode s=0 would
+        // otherwise divide by zero inside conv_out)
+        let err = ConfigBuilder::new(
+            ModelSpec::Cnn { k: 3, s: 0, pad: 1, ch: vec![8] },
+            "mnist",
+            4,
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("stride"), "{err:#}");
+        let err = ConfigBuilder::new(
+            ModelSpec::Mlp { depth: 0, width: 8 },
+            "mnist",
+            4,
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("depth"), "{err:#}");
+    }
+
+    /// `dataset_shape` must stay in lock-step with the synthetic
+    /// generators in `data::synth::by_name` — this pins the two tables
+    /// together so a shape/class change in one cannot silently drift
+    /// from the other (the builder would synthesize params for a stale
+    /// shape while the staged data had the new one).
+    #[test]
+    fn dataset_table_matches_the_synth_generators() {
+        for name in
+            ["mnist", "fmnist", "cifar10", "lsun16", "lsun32", "lsun48", "lsun64"]
+        {
+            let (shape, n_classes) = dataset_shape(name).unwrap();
+            let ds = crate::data::synth::by_name(name, 4, 0).unwrap();
+            assert_eq!(ds.shape, shape, "{name}");
+            assert_eq!(ds.n_classes, n_classes, "{name}");
+        }
+        // the two non-synthesizable cases stay errors
+        assert!(dataset_shape("imdb").is_err());
+        assert!(dataset_shape("nope").is_err());
+    }
+
+    /// Synthesized configs pass the same structural validation the
+    /// model families apply at load time — the builder and the family
+    /// parsers can never disagree about what a spec means.
+    #[test]
+    fn synthesized_configs_satisfy_family_parsers() {
+        use crate::runtime::native::taps::{FamilyRegistry, ModelFamily as _};
+        let reg = FamilyRegistry::builtin();
+        for key in [
+            "mlp(depth=4,width=512)@cifar10:b256",
+            "mlp(depth=1,width=32)@mnist:b4",
+            "cnn(depth=2,k=3,s=1,pad=1,ch=8-16)@mnist:b48",
+            "cnn(depth=3,k=5,s=2,pad=2,ch=4-8-8)@lsun32:b16",
+        ] {
+            let cfg = ConfigBuilder::from_key(SpecKey::parse(key).unwrap())
+                .build()
+                .unwrap_or_else(|e| panic!("{key}: {e:#}"));
+            let fam = reg
+                .build(&cfg)
+                .unwrap_or_else(|e| panic!("{key}: {e:#}"));
+            assert_eq!(fam.batch(), cfg.batch, "{key}");
+            let lens = fam.grad_layout();
+            assert_eq!(lens.len(), cfg.params.len(), "{key}");
+            for (l, p) in lens.iter().zip(&cfg.params) {
+                assert_eq!(*l, p.elems(), "{key}.{}", p.name);
+            }
+        }
+    }
+}

@@ -398,6 +398,7 @@ mod tests {
             input_dtype: "f32".into(),
             act_elems_per_example: 0,
             conv: None,
+            spec: None,
             params: vec![
                 ParamSpec { name: "w".into(), shape: vec![3, 2] },
                 ParamSpec { name: "b".into(), shape: vec![2] },

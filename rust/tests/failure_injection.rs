@@ -198,6 +198,31 @@ impl StepFn for NoNormStep {
     }
 }
 
+/// A manifest-bound backend (the default `Backend::resolve` — what the
+/// PJRT engine uses) must reject a spec key with *guidance* (it parses
+/// as a spec, the backend just cannot synthesize it), while plain
+/// unknown names keep the manifest's error.
+#[test]
+fn manifest_bound_backend_rejects_spec_keys_with_guidance() {
+    let backend = NoNormBackend::new(); // uses the default resolve
+    let err = backend.resolve("mlp(depth=2,width=8)@mnist:b4").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("manifest-bound") && msg.contains("--backend native"),
+        "unhelpful spec-key error: {msg}"
+    );
+    let err = backend.resolve("nope_b2").unwrap_err();
+    assert!(format!("{err:#}").contains("nope_b2"));
+    // a malformed spec-shaped name gets the grammar error, not the
+    // bare unknown-config message
+    let err = backend.resolve("mlp(depth=4,widht=8)@mnist:b4").unwrap_err();
+    assert!(format!("{err:#}").contains("does not parse"), "{err:#}");
+    // the native backend, by contrast, synthesizes the same key
+    assert!(NativeBackend::new()
+        .resolve("mlp(depth=2,width=8)@mnist:b4")
+        .is_ok());
+}
+
 /// A naive1 step that omits the per-example norm must abort the nxbp
 /// loop: treating the missing norm as 0 would set nu = 1 and add an
 /// *unclipped* gradient under noise calibrated for sensitivity `clip`

@@ -92,7 +92,8 @@ fn run_method_seeded(
     data_seed: u64,
     param_seed: u64,
 ) -> fastclip::runtime::StepOut {
-    let cfg = backend.manifest().config(config).unwrap().clone();
+    // resolve, not manifest lookup: config may be a spec key
+    let cfg = backend.resolve(config).unwrap();
     let ds = data::load_dataset(&cfg.dataset, 256, data_seed).unwrap();
     let mut stage = BatchStage::for_config(&cfg);
     let batch: Vec<usize> = (0..cfg.batch).collect();
@@ -184,6 +185,53 @@ fn native_method_matrix_agrees() {
                 o.loss,
                 rw.loss
             );
+        }
+    }
+}
+
+/// The acceptance matrix for the spec resolver (PR 5): the full
+/// seven-method agreement holds *off the grid* — on configs the old
+/// closed manifest could not express, reached through `model@dataset:bN`
+/// spec keys. One off-grid MLP (non-grid width/depth/batch) and one
+/// stride-1 conv geometry at batch 48 (the ROADMAP's "other
+/// geometries" ask: stride 1 maximizes patch overlap, so the exact
+/// per-example norm reduction and the Gram route's off-diagonal terms
+/// are working hardest here).
+#[test]
+fn off_grid_method_matrix_agrees() {
+    let clip = 0.5;
+    let others = [
+        ClipMethod::ReweightGram,
+        ClipMethod::ReweightDirect,
+        ClipMethod::ReweightPallas,
+        ClipMethod::MultiLoss,
+        ClipMethod::NxBp,
+    ];
+    for config in [
+        "mlp(depth=3,width=192)@mnist:b24",
+        "cnn(depth=2,k=3,s=1,pad=1,ch=4-8)@mnist:b48",
+    ] {
+        // genuinely off the grid: the manifest cannot name it
+        assert!(native().manifest().config(config).is_err(), "{config}");
+        let rw = run_method(native(), config, ClipMethod::Reweight, clip);
+        let rw_norms = rw.norms().unwrap();
+        for m in others {
+            let o = run_method(native(), config, m, clip);
+            let diff = max_rel_diff(&rw.grads, &o.grads);
+            assert!(
+                diff < 1e-5,
+                "reweight vs {} on {config}: rel diff {diff}",
+                m.name()
+            );
+            let on = o.norms().unwrap();
+            assert_eq!(rw_norms.len(), on.len(), "{}", m.name());
+            for (a, b) in rw_norms.iter().zip(on) {
+                assert!(
+                    (a - b).abs() / b.max(1e-3) < 1e-5,
+                    "{} norm {a} vs {b} on {config}",
+                    m.name()
+                );
+            }
         }
     }
 }
@@ -567,6 +615,212 @@ fn checkpoint_roundtrip() {
     assert_eq!(flat.len(), cfg.param_elems());
     assert!(flat.iter().all(|x| x.is_finite()));
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance command (PR 5): `fastclip train --model
+/// "mlp(depth=4,width=512)" --dataset cifar10 --batch 256 --backend
+/// native` — a config outside the old grid — trains end to end
+/// through the spec resolver.
+#[test]
+fn off_grid_spec_trains_end_to_end() {
+    let opts = TrainOptions {
+        config: "mlp(depth=4,width=512)@cifar10:b256".into(),
+        method: ClipMethod::Reweight,
+        steps: 2,
+        dataset_n: 512,
+        log_every: 0,
+        ..Default::default()
+    };
+    let report = train(native(), &opts).unwrap();
+    assert_eq!(report.config, "mlp(depth=4,width=512)@cifar10:b256");
+    assert_eq!(report.steps, 2);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    // b256 at n=512 is q=0.5 — the accountant charged it
+    assert!((report.sampling_rate - 0.5).abs() < 1e-12);
+    assert!(report.epsilon.is_some());
+}
+
+/// Save → resume → continue round-trip. With the stateless SGD
+/// optimizer the resumed run *is* the continuous run bitwise: the
+/// sampler is replayed to the resume point, the noise stream is
+/// step-keyed, and the accountant re-charges the checkpointed steps —
+/// so final parameters match exactly and the spent epsilon agrees.
+#[test]
+fn resume_roundtrip_matches_continuous_run() {
+    let half = std::env::temp_dir().join("fastclip_resume_half");
+    let full = std::env::temp_dir().join("fastclip_resume_full");
+    let cont = std::env::temp_dir().join("fastclip_resume_cont");
+    for d in [&half, &full, &cont] {
+        std::fs::remove_dir_all(d).ok();
+    }
+    let base = |steps: u64, ckpt: &std::path::Path| TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps,
+        dataset_n: 256,
+        optimizer: "sgd".into(),
+        log_every: 0,
+        seed: 3,
+        checkpoint_dir: Some(ckpt.to_path_buf()),
+        ..Default::default()
+    };
+    train(native(), &base(4, &half)).unwrap();
+    let mut resumed = base(8, &full);
+    resumed.resume = Some(half.clone());
+    let r = train(native(), &resumed).unwrap();
+    assert_eq!(r.steps, 8);
+    let c = train(native(), &base(8, &cont)).unwrap();
+    let cfg = native().manifest().config("mlp2_mnist_b32").unwrap();
+    let (mf, pf) =
+        fastclip::coordinator::checkpoint::load(&full, cfg).unwrap();
+    let (mc, pc) =
+        fastclip::coordinator::checkpoint::load(&cont, cfg).unwrap();
+    assert_eq!(mf.step, 8);
+    assert_eq!(mc.step, 8);
+    // bitwise-identical final parameters
+    assert_eq!(pf, pc);
+    // identical privacy spend (bulk re-charge vs per-step loop may
+    // differ by float reassociation only)
+    let (er, oa) = r.epsilon.unwrap();
+    let (ec, ob) = c.epsilon.unwrap();
+    assert!((er - ec).abs() < 1e-9, "{er} vs {ec}");
+    assert_eq!(oa, ob);
+    // the resumed run's recorded losses are the continuous run's tail
+    assert_eq!(r.losses.len(), 4);
+    assert_eq!(r.losses, c.losses[4..].to_vec());
+    for d in [&half, &full, &cont] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// Resume guard rails: `--steps` is a total (a checkpoint already at
+/// or past it is an error), and a checkpoint for a different config is
+/// rejected rather than silently reshaped.
+#[test]
+fn resume_validates_steps_and_config() {
+    let dir = std::env::temp_dir().join("fastclip_resume_guard");
+    std::fs::remove_dir_all(&dir).ok();
+    let mk = |config: &str, steps: u64| TrainOptions {
+        config: config.into(),
+        method: ClipMethod::Reweight,
+        steps,
+        dataset_n: 256,
+        log_every: 0,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    train(native(), &mk("mlp2_mnist_b32", 3)).unwrap();
+    let mut stale = mk("mlp2_mnist_b32", 3);
+    stale.checkpoint_dir = None;
+    stale.resume = Some(dir.clone());
+    let err = train(native(), &stale).unwrap_err();
+    assert!(format!("{err:#}").contains("total"), "{err:#}");
+    let mut wrong = mk("mlp4_mnist_b32", 8);
+    wrong.checkpoint_dir = None;
+    wrong.resume = Some(dir.clone());
+    let err = train(native(), &wrong).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mlp2_mnist_b32"), "{msg}");
+    // a different seed would silently diverge from the continued run
+    let mut reseeded = mk("mlp2_mnist_b32", 8);
+    reseeded.checkpoint_dir = None;
+    reseeded.resume = Some(dir.clone());
+    reseeded.seed = 99;
+    let err = train(native(), &reseeded).unwrap_err();
+    assert!(format!("{err:#}").contains("--seed"), "{err:#}");
+    // the checkpoint records ONE (sigma, q) for its whole history, so
+    // a heterogeneous continuation must be refused, not mis-recorded
+    let mut hot = mk("mlp2_mnist_b32", 8);
+    hot.checkpoint_dir = None;
+    hot.resume = Some(dir.clone());
+    hot.sigma = 2.5;
+    let err = train(native(), &hot).unwrap_err();
+    assert!(format!("{err:#}").contains("sigma"), "{err:#}");
+    let mut rerated = mk("mlp2_mnist_b32", 8);
+    rerated.checkpoint_dir = None;
+    rerated.resume = Some(dir.clone());
+    rerated.dataset_n = 512;
+    let err = train(native(), &rerated).unwrap_err();
+    assert!(format!("{err:#}").contains("sampling rate"), "{err:#}");
+    // the sampling regime is recorded; a silent Poisson<->shuffle flip
+    // would change both the batch stream and the RDP assumption
+    let mut resampled = mk("mlp2_mnist_b32", 8);
+    resampled.checkpoint_dir = None;
+    resampled.resume = Some(dir.clone());
+    resampled.poisson = true;
+    let err = train(native(), &resampled).unwrap_err();
+    assert!(format!("{err:#}").contains("--poisson"), "{err:#}");
+    // methods agree to ~1e-5, not bitwise: switching is not a continuation
+    let mut remethod = mk("mlp2_mnist_b32", 8);
+    remethod.checkpoint_dir = None;
+    remethod.resume = Some(dir.clone());
+    remethod.method = ClipMethod::MultiLoss;
+    let err = train(native(), &remethod).unwrap_err();
+    assert!(format!("{err:#}").contains("--method"), "{err:#}");
+    // clip drives both the threshold and the noise scale
+    let mut reclipped = mk("mlp2_mnist_b32", 8);
+    reclipped.checkpoint_dir = None;
+    reclipped.resume = Some(dir.clone());
+    reclipped.clip = 0.25;
+    let err = train(native(), &reclipped).unwrap_err();
+    assert!(format!("{err:#}").contains("clip"), "{err:#}");
+    // the optimizer name is recorded; switching it is not a continuation
+    let mut swapped = mk("mlp2_mnist_b32", 8);
+    swapped.checkpoint_dir = None;
+    swapped.resume = Some(dir.clone());
+    swapped.optimizer = "sgd".into(); // checkpoint recorded adam
+    let err = train(native(), &swapped).unwrap_err();
+    assert!(format!("{err:#}").contains("--optimizer"), "{err:#}");
+    // the learning rate is recorded; the tail must train at it
+    let mut relearned = mk("mlp2_mnist_b32", 8);
+    relearned.checkpoint_dir = None;
+    relearned.resume = Some(dir.clone());
+    relearned.lr = 0.05;
+    let err = train(native(), &relearned).unwrap_err();
+    assert!(format!("{err:#}").contains("--lr"), "{err:#}");
+    // --target-eps on resume would double-count the recorded spend
+    let mut budgeted = mk("mlp2_mnist_b32", 8);
+    budgeted.checkpoint_dir = None;
+    budgeted.resume = Some(dir.clone());
+    budgeted.target_eps = Some(2.0);
+    let err = train(native(), &budgeted).unwrap_err();
+    assert!(format!("{err:#}").contains("target-eps"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--eval-n` replaces the silent hardcoded 4-batch eval set: it is
+/// validated against the config batch (eval runs in full batches) and
+/// actually sizes the eval set when valid.
+#[test]
+fn eval_n_is_validated_against_the_batch() {
+    let mk = |eval_n: Option<usize>| TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::NonPrivate,
+        steps: 2,
+        dataset_n: 64,
+        eval_every: 2,
+        eval_n,
+        log_every: 0,
+        ..Default::default()
+    };
+    let err = train(native(), &mk(Some(16))).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("--eval-n 16") && msg.contains("32"),
+        "unhelpful error: {msg}"
+    );
+    // a non-multiple would silently drop the remainder examples
+    let err = train(native(), &mk(Some(100))).unwrap_err();
+    assert!(format!("{err:#}").contains("multiple"), "{err:#}");
+    // --eval-n without --eval-every would be silently ignored
+    let mut idle = mk(Some(64));
+    idle.eval_every = 0;
+    let err = train(native(), &idle).unwrap_err();
+    assert!(format!("{err:#}").contains("--eval-every"), "{err:#}");
+    let report = train(native(), &mk(Some(64))).unwrap();
+    assert_eq!(report.eval_points.len(), 1);
+    let (_, l, a) = report.eval_points[0];
+    assert!(l.is_finite() && (0.0..=1.0).contains(&a));
 }
 
 /// Poisson-sampling mode runs and matches the fixed batch ABI.
