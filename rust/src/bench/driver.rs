@@ -23,8 +23,8 @@ use crate::bench::BenchOpts;
 use crate::coordinator::{stage_batch, ClipMethod, GradComputer};
 use crate::data;
 use crate::runtime::{
-    default_backend, init_params_glorot, Backend, BatchStage, ParamStore,
-    StepOut,
+    default_backend, init_params_glorot, Backend, BatchStage, ClipPolicy,
+    ParamStore, StepOut,
 };
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -38,7 +38,9 @@ pub struct StepRunner {
     /// persistent output arena — reused every step, so the timed path
     /// matches the trainer's (allocation-free on native)
     out: StepOut,
-    clip: f32,
+    /// clip policy every timed step clips under (default: the paper's
+    /// global hard clip at 1.0)
+    policy: ClipPolicy,
     pub batch: usize,
 }
 
@@ -80,15 +82,21 @@ impl StepRunner {
             params,
             stage,
             out,
-            clip: 1.0,
+            policy: ClipPolicy::hard_global(1.0),
             batch: cfg.batch,
         })
+    }
+
+    /// Swap the clip policy the timed steps run under (e.g. to compare
+    /// group-wise against whole-model clipping on the same config).
+    pub fn set_policy(&mut self, policy: ClipPolicy) {
+        self.policy = policy;
     }
 
     /// One full gradient computation (what the figures time).
     pub fn step(&mut self) {
         self.computer
-            .compute(&mut self.params, &self.stage, self.clip, &mut self.out)
+            .compute(&mut self.params, &self.stage, &self.policy, &mut self.out)
             .expect("bench step failed");
         std::hint::black_box(self.out.loss);
     }
@@ -476,13 +484,16 @@ pub fn sparkline(vals: &[f64]) -> String {
 /// (e.g. a backend without the artifact) fail hard — the matrix is
 /// the support claim, so a hole is an error, not a skip. On the
 /// native backend, every reweight cell is additionally probed for the
-/// zero-allocation warm path (`steps_alloc_free`).
+/// zero-allocation warm path (`steps_alloc_free`). Every cell clips
+/// under `policy` (pass `ClipPolicy::hard_global(1.0)` for the
+/// classical matrix the trajectory artifacts track).
 pub fn run_matrix(
     backend: &dyn Backend,
     configs: &[String],
     methods: &[ClipMethod],
     opts: BenchOpts,
     smoke: bool,
+    policy: &ClipPolicy,
 ) -> Result<MatrixReport> {
     let mut entries = Vec::with_capacity(configs.len() * methods.len());
     // the probe only holds on native — PJRT marshalling allocates —
@@ -494,6 +505,7 @@ pub fn run_matrix(
     for config in configs {
         for &method in methods {
             let mut runner = StepRunner::new(backend, config, method)?;
+            runner.set_policy(policy.clone());
             let times = crate::bench::measure(opts, || runner.step());
             let s = Summary::of(&times);
             crate::log_info!(
@@ -787,6 +799,7 @@ mod tests {
             &[ClipMethod::Reweight, ClipMethod::ReweightDirect],
             opts,
             true,
+            &ClipPolicy::hard_global(1.0),
         )
         .unwrap();
         assert_eq!(report.entries.len(), 2);
@@ -808,5 +821,10 @@ mod tests {
                 .unwrap();
         runner.step(); // must not panic
         assert_eq!(runner.batch, 16);
+        // grouped and automatic policies run through the same timed path
+        runner.set_policy(ClipPolicy::parse("per_layer:0.5").unwrap());
+        runner.step();
+        runner.set_policy(ClipPolicy::parse("auto:1,g=0.01").unwrap());
+        runner.step();
     }
 }

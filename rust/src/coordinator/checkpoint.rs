@@ -31,6 +31,12 @@ pub struct CheckpointMeta {
     /// it: resume must *skip* the mode check then, not treat the
     /// absence as a definitive shuffle-partition.
     pub poisson: Option<bool>,
+    /// Canonical clip-policy name (`ClipPolicy` Display form, e.g.
+    /// `per_layer:0.5` or `auto:1,g=0.01`) the recorded steps clipped
+    /// under. `None` for pre-policy checkpoints, which recorded only
+    /// the bare `clip` — resume treats that as the classical global
+    /// hard policy rather than skipping the check.
+    pub clip_policy: Option<String>,
 }
 
 pub fn save(
@@ -60,6 +66,9 @@ pub fn save(
     if let Some(p) = meta.poisson {
         j.set("poisson", p.into());
     }
+    if let Some(cp) = &meta.clip_policy {
+        j.set("clip_policy", cp.as_str().into());
+    }
     j.set("param_elems", total.into());
     crate::util::write_file(&dir.join("meta.json"), &j.to_string_pretty())?;
     Ok(())
@@ -79,6 +88,7 @@ pub fn load(dir: &Path, cfg: &ConfigSpec) -> Result<(CheckpointMeta, Vec<f32>)> 
         lr: j.get("lr").as_f64().unwrap_or(0.0),
         seed: j.get("seed").as_usize().unwrap_or(0) as u64,
         poisson: j.get("poisson").as_bool(),
+        clip_policy: j.get("clip_policy").as_str().map(String::from),
     };
     if meta.config != cfg.name {
         bail!(
@@ -146,6 +156,7 @@ mod tests {
             lr: 1e-3,
             seed: 7,
             poisson: Some(true),
+            clip_policy: Some("per_layer:0.5".into()),
         };
         let dir = std::env::temp_dir().join("fastclip_ckpt_test");
         save(&dir, &meta, &ps).unwrap();
@@ -154,6 +165,7 @@ mod tests {
         assert_eq!(m2.method, "reweight");
         assert_eq!(m2.optimizer, "adam");
         assert_eq!(m2.poisson, Some(true));
+        assert_eq!(m2.clip_policy.as_deref(), Some("per_layer:0.5"));
         assert!((m2.sigma - 1.1).abs() < 1e-12);
         assert_eq!(flat, init);
         std::fs::remove_dir_all(&dir).ok();
@@ -174,6 +186,7 @@ mod tests {
             lr: 1e-3,
             seed: 0,
             poisson: None,
+            clip_policy: None,
         };
         let dir = std::env::temp_dir().join("fastclip_ckpt_test2");
         save(&dir, &meta, &ps).unwrap();

@@ -28,7 +28,7 @@
 //! the per-example naive1 outputs.
 
 use crate::runtime::{
-    Backend, BatchStage, ConfigSpec, ParamStore, StepFn, StepOut,
+    Backend, BatchStage, ClipPolicy, ConfigSpec, ParamStore, StepFn, StepOut,
 };
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -121,19 +121,28 @@ pub struct GradComputer {
     exe: Arc<dyn StepFn>,
     /// gradient arena layout of the config's parameter tensors
     param_lens: Vec<usize>,
+    /// parametric-layer count (every layer is one (W, b) pair in
+    /// manifest order) — what clip-policy group boundaries index
+    n_param_layers: usize,
     /// NxBp only: the batch-1 config + persistent staging/output state
     naive: Option<NaiveLoop>,
 }
 
 /// Persistent nxBP loop state: the batch-1 staging buffers, the arena
-/// the per-example naive1 steps write into, and the norm collection
-/// buffer — all reused across steps so the loop allocates nothing
-/// warm.
+/// the per-example naive1 steps write into, and the norm/group
+/// collection buffers — all reused across steps so the loop allocates
+/// nothing warm.
 struct NaiveLoop {
     cfg: ConfigSpec,
     stage: BatchStage,
     out: StepOut,
     norms: Vec<f32>,
+    /// group index of each parametric layer under the current policy
+    groups: Vec<usize>,
+    /// group boundaries in parametric-layer index space (ng+1 entries)
+    gb: Vec<usize>,
+    /// per-group per-example norms, group-major (`g*tau + i`)
+    gnorms: Vec<f32>,
 }
 
 impl GradComputer {
@@ -148,6 +157,9 @@ impl GradComputer {
         let cfg = backend.resolve(config)?;
         let param_lens: Vec<usize> =
             cfg.params.iter().map(|p| p.elems()).collect();
+        // every parametric layer contributes exactly (W, b) in
+        // manifest order — the layout grouped policies slice on
+        let n_param_layers = cfg.params.len() / 2;
         let (exe, naive) = if method == ClipMethod::NxBp {
             let ncfg = backend
                 .naive_sibling(&cfg)
@@ -156,11 +168,22 @@ impl GradComputer {
             let stage = BatchStage::for_config(&ncfg);
             let out = StepOut::for_config(&ncfg);
             let norms = Vec::with_capacity(cfg.batch);
-            (exe, Some(NaiveLoop { cfg: ncfg, stage, out, norms }))
+            (
+                exe,
+                Some(NaiveLoop {
+                    cfg: ncfg,
+                    stage,
+                    out,
+                    norms,
+                    groups: vec![0; n_param_layers],
+                    gb: Vec::new(),
+                    gnorms: Vec::new(),
+                }),
+            )
         } else {
             (backend.load(&cfg, method.artifact())?, None)
         };
-        Ok(GradComputer { method, cfg, exe, param_lens, naive })
+        Ok(GradComputer { method, cfg, exe, param_lens, n_param_layers, naive })
     }
 
     /// A fresh output arena sized for this computer's config — the
@@ -169,16 +192,27 @@ impl GradComputer {
         StepOut::for_config(&self.cfg)
     }
 
+    /// Parametric-layer count of this computer's config — the index
+    /// space clip-policy group boundaries live in (and the argument
+    /// the trainer passes to `ClipPolicy::sensitivity`).
+    pub fn n_param_layers(&self) -> usize {
+        self.n_param_layers
+    }
+
     /// Compute the (clipped, averaged) gradient for the staged batch
-    /// into the caller-owned arena.
+    /// into the caller-owned arena. The policy decides both the
+    /// clipping granularity and the nu formula; `NonPrivate` ignores
+    /// it.
     ///
     /// For NxBp, `stage` holds the full batch; the loop re-stages one
-    /// example at a time into the batch-1 buffers.
+    /// example at a time into the batch-1 buffers and applies the
+    /// policy to the *materialized* per-example gradient — the oracle
+    /// every batched method is tested against, for every policy.
     pub fn compute(
         &mut self,
         params: &mut ParamStore,
         stage: &BatchStage,
-        clip: f32,
+        policy: &ClipPolicy,
         out: &mut StepOut,
     ) -> Result<()> {
         match self.method {
@@ -188,9 +222,9 @@ impl GradComputer {
             | ClipMethod::ReweightGram
             | ClipMethod::ReweightDirect
             | ClipMethod::MultiLoss => {
-                self.exe.run_into(params, stage, Some(clip), out)
+                self.exe.run_into(params, stage, Some(policy), out)
             }
-            ClipMethod::NxBp => self.nxbp_loop(params, stage, clip, out),
+            ClipMethod::NxBp => self.nxbp_loop(params, stage, policy, out),
         }
     }
 
@@ -198,15 +232,42 @@ impl GradComputer {
     /// in Rust, accumulate, average. This deliberately preserves the
     /// inefficiency being benchmarked — one executable launch per
     /// example — while still being a *correct* DP gradient.
+    ///
+    /// Because the per-example gradient is fully materialized here,
+    /// grouped policies are implemented by the definition itself: each
+    /// group's parameter window gets its own norm
+    /// (`GradVec::sq_norm_params`) and its own nu-scaled accumulation
+    /// (`add_scaled_params`). This is the reference the batched
+    /// kernels' slab reductions are checked against.
     fn nxbp_loop(
         &mut self,
         params: &mut ParamStore,
         stage: &BatchStage,
-        clip: f32,
+        policy: &ClipPolicy,
         out: &mut StepOut,
     ) -> Result<()> {
         let naive = self.naive.as_mut().expect("nxbp state");
         let tau = self.cfg.batch;
+        let nl = self.n_param_layers;
+        policy.check(nl)?;
+        let ng = policy.n_groups(nl);
+        // layer -> group map and the group boundaries in parametric-
+        // layer index space (group g spans layers gb[g]..gb[g+1], i.e.
+        // params 2*gb[g]..2*gb[g+1]); rebuilt into grow-only buffers
+        policy.fill_layer_groups(&mut naive.groups);
+        naive.gb.clear();
+        naive.gb.push(0);
+        for l in 1..nl {
+            if naive.groups[l] != naive.groups[l - 1] {
+                naive.gb.push(l);
+            }
+        }
+        naive.gb.push(nl);
+        debug_assert_eq!(naive.gb.len(), ng + 1);
+        naive.gnorms.clear();
+        if ng > 1 {
+            naive.gnorms.resize(ng * tau, 0.0);
+        }
         let d = naive.cfg.input_elems(); // per-example elems (batch 1)
         // The loop below slices example i out of the staged buffers; a
         // partially staged batch would silently replay stale tail rows
@@ -255,13 +316,30 @@ impl GradComputer {
                     naive.cfg.name
                 ),
             };
-            let nu = crate::runtime::clip_factor(norm, clip);
-            out.grads.add_scaled(&naive.out.grads, nu);
+            if ng == 1 {
+                // global granularity: nu from the step-reported norm
+                // (for the hard formula this is bitwise the pre-policy
+                // clip_factor path)
+                let nu = policy.nu_for(norm);
+                out.grads.add_scaled(&naive.out.grads, nu);
+            } else {
+                for g in 0..ng {
+                    let (lo, hi) = (2 * naive.gb[g], 2 * naive.gb[g + 1]);
+                    let gnorm =
+                        naive.out.grads.sq_norm_params(lo, hi).sqrt() as f32;
+                    let nu = policy.nu_for(gnorm);
+                    out.grads.add_scaled_params(&naive.out.grads, lo, hi, nu);
+                    naive.gnorms[g * tau + i] = gnorm;
+                }
+            }
             naive.norms.push(norm);
             loss_sum += naive.out.loss as f64;
         }
         out.grads.scale(1.0 / tau as f32);
         out.set_norms(&naive.norms);
+        if ng > 1 {
+            out.set_group_norms(&naive.gnorms, ng);
+        }
         out.loss = (loss_sum / tau as f64) as f32;
         Ok(())
     }
@@ -317,8 +395,9 @@ mod tests {
         let mut stage = BatchStage::for_config(&cfg);
         stage.feat_f32.truncate(784 * 30); // 30 of 32 examples staged
         let mut out = computer.new_out();
+        let pol = ClipPolicy::hard_global(1.0);
         let err = computer
-            .compute(&mut params, &stage, 1.0, &mut out)
+            .compute(&mut params, &stage, &pol, &mut out)
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("nxbp") && msg.contains("stage"), "{msg}");

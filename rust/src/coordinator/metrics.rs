@@ -43,6 +43,11 @@ pub struct Metrics {
     pub loss_ema: Ema,
     pub losses: Vec<f32>,
     pub eval_points: Vec<(u64, f32, f32)>, // (step, eval loss, accuracy)
+    /// running sum of per-group mean unclipped norms (grouped clip
+    /// policies only; `StepOut::group_norms`), one slot per group
+    group_norm_sums: Vec<f64>,
+    /// steps that contributed to `group_norm_sums`
+    group_norm_steps: u64,
     run_start: Instant,
 }
 
@@ -54,6 +59,8 @@ impl Metrics {
             loss_ema: Ema::new(0.05),
             losses: Vec::new(),
             eval_points: Vec::new(),
+            group_norm_sums: Vec::new(),
+            group_norm_steps: 0,
             run_start: Instant::now(),
         }
     }
@@ -70,6 +77,37 @@ impl Metrics {
 
     pub fn record_eval(&mut self, step: u64, loss: f32, acc: f32) {
         self.eval_points.push((step, loss, acc));
+    }
+
+    /// Record one step's per-group per-example norms (group-major,
+    /// `norms.len() == n_groups * batch`): the batch mean of each
+    /// group's unclipped norm accumulates into a per-group running
+    /// sum, exported as `group_norm_mean` — how far each layer group
+    /// sits from its clip threshold over the run.
+    pub fn record_group_norms(&mut self, norms: &[f32], n_groups: usize) {
+        debug_assert!(n_groups > 0 && norms.len() % n_groups == 0);
+        if self.group_norm_sums.len() != n_groups {
+            self.group_norm_sums.clear();
+            self.group_norm_sums.resize(n_groups, 0.0);
+            self.group_norm_steps = 0;
+        }
+        let b = norms.len() / n_groups;
+        for g in 0..n_groups {
+            let sum: f64 =
+                norms[g * b..(g + 1) * b].iter().map(|&v| v as f64).sum();
+            self.group_norm_sums[g] += sum / b as f64;
+        }
+        self.group_norm_steps += 1;
+    }
+
+    /// Mean unclipped norm per group over the recorded steps, if any
+    /// grouped-policy steps were recorded.
+    pub fn group_norm_means(&self) -> Option<Vec<f64>> {
+        if self.group_norm_steps == 0 {
+            return None;
+        }
+        let n = self.group_norm_steps as f64;
+        Some(self.group_norm_sums.iter().map(|&s| s / n).collect())
     }
 
     pub fn steps(&self) -> usize {
@@ -121,6 +159,12 @@ impl Metrics {
         o.set("phases", phases);
         if let Some(l) = self.loss_ema.get() {
             o.set("loss_ema", l.into());
+        }
+        if let Some(means) = self.group_norm_means() {
+            o.set(
+                "group_norm_mean",
+                Json::Arr(means.into_iter().map(Json::from).collect()),
+            );
         }
         o.set(
             "eval",
@@ -176,6 +220,20 @@ mod tests {
         let shares: f64 = m.phase_breakdown().iter().map(|(_, _, s)| s).sum();
         assert!((shares - 1.0).abs() < 1e-12);
         assert!((m.phase_breakdown()[1].2 - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_norm_means_average_over_steps() {
+        let mut m = Metrics::new();
+        assert!(m.group_norm_means().is_none());
+        // 2 groups, batch 2: per-step group means (2, 6) then (4, 8)
+        m.record_group_norms(&[1.0, 3.0, 5.0, 7.0], 2);
+        m.record_group_norms(&[3.0, 5.0, 7.0, 9.0], 2);
+        let means = m.group_norm_means().unwrap();
+        assert!((means[0] - 3.0).abs() < 1e-12);
+        assert!((means[1] - 7.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("group_norm_mean").as_arr().unwrap().len(), 2);
     }
 
     #[test]

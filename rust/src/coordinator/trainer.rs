@@ -11,7 +11,7 @@ use crate::data::{self, Dataset, Features, PoissonSampler, ShuffleBatcher};
 use crate::optim;
 use crate::privacy::{calibrate_sigma, noise_stddev_for_mean, RdpAccountant};
 use crate::runtime::{
-    init_params_glorot, Backend, BatchStage, ParamStore, StepFn,
+    init_params_glorot, Backend, BatchStage, ClipPolicy, ParamStore, StepFn,
 };
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -26,6 +26,15 @@ pub struct TrainOptions {
     pub dataset_n: usize,
     pub lr: f64,
     pub clip: f64,
+    /// Clipping policy (granularity × nu formula). `None` means the
+    /// classical policy the paper uses — global granularity, hard clip
+    /// at `clip` — reproducing the pre-policy trainer bitwise
+    /// (including the noise stream, which then calibrates to the f64
+    /// `clip` exactly). When set, `clip` is ignored: the policy
+    /// carries its own threshold, and the noise is calibrated to the
+    /// policy's true L2 sensitivity (C·sqrt(G) for grouped
+    /// granularities).
+    pub policy: Option<ClipPolicy>,
     /// noise multiplier; ignored when target_eps is set (calibrated)
     pub sigma: f64,
     pub target_eps: Option<f64>,
@@ -47,8 +56,8 @@ pub struct TrainOptions {
     /// *total*: resuming a 5-step checkpoint with `steps: 8` runs 3
     /// more steps. The resumed run must continue the *same* process:
     /// seed, sampling mode, method, optimizer, lr, and sampling rate
-    /// must match, and (for private methods) clip / sigma must match
-    /// the recorded values and `target_eps` is rejected — the
+    /// must match, and (for private methods) clip policy / sigma must
+    /// match the recorded values and `target_eps` is rejected — the
     /// checkpoint can record only one value of each for its whole
     /// history, so a heterogeneous chain would corrupt the accounting
     /// of a later resume. Optimizer *state* is not checkpointed: sgd
@@ -69,6 +78,7 @@ impl Default for TrainOptions {
             dataset_n: 2048,
             lr: 1e-3,
             clip: 1.0,
+            policy: None,
             sigma: 1.1,
             target_eps: None,
             delta: 1e-5,
@@ -94,6 +104,11 @@ pub struct TrainReport {
     pub eval_points: Vec<(u64, f32, f32)>,
     pub epsilon: Option<(f64, u32)>,
     pub sigma: f64,
+    /// canonical clip-policy name the run clipped under
+    pub policy: String,
+    /// the L2 sensitivity the noise was calibrated to (C for global
+    /// policies, C·sqrt(G) for grouped ones)
+    pub sensitivity: f64,
     pub sampling_rate: f64,
     pub wall_seconds: f64,
     pub mean_step_ms: f64,
@@ -125,6 +140,28 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
         tau
     );
     let q = tau as f64 / opts.dataset_n as f64;
+
+    // --- effective clip policy ---------------------------------------
+    // Every parametric layer is one (W, b) pair in manifest order, so
+    // policy group boundaries index cfg.params in steps of two.
+    let n_param_layers = cfg.params.len() / 2;
+    let policy = opts
+        .policy
+        .clone()
+        .unwrap_or_else(|| ClipPolicy::hard_global(opts.clip as f32));
+    if opts.method.is_private() {
+        policy.check(n_param_layers).with_context(|| {
+            format!("--clip-policy {policy} on config {}", cfg.name)
+        })?;
+    }
+    // The mechanism's L2 sensitivity — what the Gaussian noise must be
+    // calibrated to. The pre-policy flag path keeps the exact f64 clip
+    // (bitwise noise-stream continuity); an explicit policy computes
+    // C·sqrt(G) (= C for global granularities).
+    let sensitivity = match &opts.policy {
+        None => opts.clip,
+        Some(p) => p.sensitivity(n_param_layers),
+    };
 
     // --- resume: restore params / step counter / accountant inputs ---
     let mut start_step = 0u64;
@@ -238,15 +275,57 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
             // spend — or, for clip, silently break the continuation
             // (noise_std and the clipping threshold both derive from
             // it).
-            anyhow::ensure!(
-                (opts.clip - meta.clip).abs() < 1e-12,
-                "resume: checkpoint records clip={} but this run passes \
-                 clip={} — the clipping threshold and the noise scale \
-                 would both change mid-run; pass --clip {}",
-                meta.clip,
-                opts.clip,
-                meta.clip
-            );
+            match &meta.clip_policy {
+                // policy-recording checkpoint: the canonical name is
+                // the policy's stable identity — compare it wholesale
+                Some(rec) => {
+                    anyhow::ensure!(
+                        *rec == policy.to_string(),
+                        "resume: checkpoint records clip policy {} but \
+                         this run clips under {} — the threshold \
+                         structure and the noise scale would change \
+                         mid-run; pass --clip-policy {}",
+                        rec,
+                        policy,
+                        rec
+                    );
+                }
+                // pre-policy checkpoint + pre-policy flags: the
+                // recorded bare clip IS the classical global hard
+                // policy — the original continuity check, verbatim
+                None if opts.policy.is_none() => {
+                    anyhow::ensure!(
+                        (opts.clip - meta.clip).abs() < 1e-12,
+                        "resume: checkpoint records clip={} but this run \
+                         passes clip={} — the clipping threshold and the \
+                         noise scale would both change mid-run; pass \
+                         --clip {}",
+                        meta.clip,
+                        opts.clip,
+                        meta.clip
+                    );
+                }
+                // pre-policy checkpoint + explicit --clip-policy: only
+                // the classical policy at the recorded threshold
+                // continues the same process (1e-6: the policy
+                // threshold is f32)
+                None => {
+                    anyhow::ensure!(
+                        policy.is_global_hard()
+                            && (policy.clip() as f64 - meta.clip).abs()
+                                < 1e-6,
+                        "resume: checkpoint predates clip policies — its \
+                         steps ran the classical global hard clip at {} — \
+                         but this run passes --clip-policy {}; pass \
+                         --clip-policy global:{} (or drop the flag and \
+                         pass --clip {})",
+                        meta.clip,
+                        policy,
+                        meta.clip,
+                        meta.clip
+                    );
+                }
+            }
             anyhow::ensure!(
                 opts.target_eps.is_none(),
                 "resume: --target-eps would re-calibrate sigma as if all \
@@ -378,11 +457,11 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
     // call, so the warm loop performs zero per-step heap allocation
     let mut out = computer.new_out();
     let mut metrics = Metrics::new();
-    let noise_std = noise_stddev_for_mean(sigma, opts.clip, tau);
+    let noise_std = noise_stddev_for_mean(sigma, sensitivity, tau);
 
     crate::log_info!(
-        "train {} method={} steps={} tau={} q={:.4} sigma={:.3} clip={} opt={}",
-        cfg.name, opts.method.name(), opts.steps, tau, q, sigma, opts.clip, opts.optimizer
+        "train {} method={} steps={} tau={} q={:.4} sigma={:.3} policy={} sens={} opt={}",
+        cfg.name, opts.method.name(), opts.steps, tau, q, sigma, policy, sensitivity, opts.optimizer
     );
 
     // --- the loop (Alg 1, lines 2-16) --------------------------------
@@ -395,8 +474,11 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
         t.stop(&mut metrics, Phase::Gather);
 
         let t = PhaseTimer::start();
-        computer.compute(&mut params, &stage, opts.clip as f32, &mut out)?;
+        computer.compute(&mut params, &stage, &policy, &mut out)?;
         t.stop(&mut metrics, Phase::Execute);
+        if let Some((gn, ng)) = out.group_norms() {
+            metrics.record_group_norms(gn, ng);
+        }
 
         if opts.method.is_private() {
             let t = PhaseTimer::start();
@@ -461,10 +543,14 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
                 step: opts.steps,
                 sampling_rate: q,
                 sigma,
-                clip: opts.clip,
+                clip: match &opts.policy {
+                    Some(p) => p.clip() as f64,
+                    None => opts.clip,
+                },
                 lr: opts.lr,
                 seed: opts.seed,
                 poisson: Some(opts.poisson),
+                clip_policy: Some(policy.to_string()),
             },
             &params,
         )?;
@@ -489,6 +575,8 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
         eval_points: metrics.eval_points.clone(),
         epsilon,
         sigma,
+        policy: policy.to_string(),
+        sensitivity,
         sampling_rate: q,
         wall_seconds: metrics.wall_seconds(),
         mean_step_ms,

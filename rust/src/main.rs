@@ -17,7 +17,8 @@ use fastclip::cli::Args;
 use fastclip::coordinator::{memory, train, ClipMethod, GradComputer, TrainOptions};
 use fastclip::privacy;
 use fastclip::runtime::{
-    backend_by_name, Backend, BatchStage, ModelSpec, ParamStore, SpecKey,
+    backend_by_name, Backend, BatchStage, ClipPolicy, ModelSpec, ParamStore,
+    SpecKey,
 };
 use fastclip::util::json::Json;
 use fastclip::{log_info, util};
@@ -53,9 +54,10 @@ fn run(argv: Vec<String>) -> Result<()> {
 }
 
 fn print_help() {
-    // generated from ClipMethod::all(), so the list can never drift
-    // from the methods the trainer actually accepts
+    // generated from ClipMethod::all() and ClipPolicy::kinds(), so
+    // neither list can drift from what the binary actually accepts
     let methods = ClipMethod::names().join("|");
+    let policies = ClipPolicy::help_grammar();
     println!(
         r#"fastclip — DP deep learning with fast per-example gradient clipping
 
@@ -74,20 +76,27 @@ kernel/stride/batch); the pjrt backend is manifest-bound.
   train       --config NAME | --model SPEC [--dataset D] [--batch N]
               [--method {methods}]
               [--steps N] [--n DATASET_SIZE]
-              [--lr F] [--clip F] [--sigma F | --target-eps F] [--delta F]
+              [--lr F] [--clip F | --clip-policy P]
+              [--sigma F | --target-eps F] [--delta F]
               [--optimizer adam|sgd] [--seed N] [--eval-every N]
               [--eval-n N] [--poisson] [--checkpoint DIR] [--resume DIR]
               [--json]
+              --clip-policy P selects clipping granularity x nu
+              formula: {policies}.
+              Noise is calibrated to the policy's true L2 sensitivity
+              (C*sqrt(G) for grouped granularities). Grouped/automatic
+              policies need --backend native. --clip F is shorthand
+              for global:F (the paper's classical hard clip).
               --resume restores params/step/accountant state from a
               checkpoint dir; --steps stays the *total* step count,
               and the run must continue the same process (seed,
               sampling mode, method, optimizer, lr, sampling rate —
-              and, for private methods, clip and sigma — must match
-              the checkpoint; --target-eps is rejected).
+              and, for private methods, clip policy and sigma — must
+              match the checkpoint; --target-eps is rejected).
               --eval-n sizes the eval set (default 4 batches; must be
               a multiple of the config batch — eval runs full batches)
   bench-step  (--config NAME | --model SPEC [--dataset D] [--batch N])
-              --method M [--iters N]
+              --method M [--iters N] [--clip-policy P]
   bench-matrix [--configs NAME,NAME,...] [--methods M,M,...] [--smoke]
               [--model SPEC [--dataset D] [--batches 16..512]]
               [--out FILE] [--check] [--history FILE]
@@ -161,7 +170,26 @@ fn backend(args: &Args) -> Result<Box<dyn Backend>> {
     Ok(b)
 }
 
+/// Parse `--clip-policy`, if present. `None` keeps the classical
+/// global hard clip at `--clip` (and, in the trainer, the exact
+/// pre-policy noise stream).
+fn clip_policy_opt(args: &Args) -> Result<Option<ClipPolicy>> {
+    args.str_opt("clip-policy")
+        .map(|v| {
+            ClipPolicy::parse(v)
+                .with_context(|| format!("parsing --clip-policy {v:?}"))
+        })
+        .transpose()
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    let policy = clip_policy_opt(args)?;
+    anyhow::ensure!(
+        policy.is_none() || args.str_opt("clip").is_none(),
+        "--clip and --clip-policy are mutually exclusive; --clip F is \
+         shorthand for --clip-policy global:F (the policy carries its \
+         own clip threshold)"
+    );
     let opts = TrainOptions {
         config: config_ref(args)?,
         method: ClipMethod::parse(&args.str_or("method", "reweight"))?,
@@ -169,6 +197,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         dataset_n: args.usize_or("n", 2048)?,
         lr: args.f64_or("lr", 1e-3)?,
         clip: args.f64_or("clip", 1.0)?,
+        policy,
         sigma: args.f64_or("sigma", 1.1)?,
         target_eps: args.str_opt("target-eps").map(|v| v.parse()).transpose()?,
         delta: args.f64_or("delta", 1e-5)?,
@@ -238,6 +267,10 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     let config = config_ref(args)?;
     let method = ClipMethod::parse(&args.str_or("method", "reweight"))?;
     let iters = args.usize_or("iters", 10)?;
+    let policy = match clip_policy_opt(args)? {
+        Some(p) => p,
+        None => ClipPolicy::hard_global(args.f64_or("clip", 1.0)? as f32),
+    };
     let backend = backend(args)?;
     let cfg = backend.resolve(&config)?;
     let mut computer = GradComputer::new(backend.as_ref(), &config, method)?;
@@ -252,17 +285,17 @@ fn cmd_bench_step(args: &Args) -> Result<()> {
     // one arena for every timed step (the trainer's shape)
     let mut out = computer.new_out();
     // warmup (includes compile)
-    computer.compute(&mut params, &stage, 1.0, &mut out)?;
+    computer.compute(&mut params, &stage, &policy, &mut out)?;
     log_info!("compile took {:.0} ms", computer.compile_ms());
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = std::time::Instant::now();
-        computer.compute(&mut params, &stage, 1.0, &mut out)?;
+        computer.compute(&mut params, &stage, &policy, &mut out)?;
         times.push(t.elapsed().as_secs_f64());
     }
     let s = fastclip::util::stats::Summary::of(&times);
     println!(
-        "{config} {}: mean {:.3} ms, p50 {:.3} ms, p95 {:.3} ms over {iters} iters",
+        "{config} {} [{policy}]: mean {:.3} ms, p50 {:.3} ms, p95 {:.3} ms over {iters} iters",
         method.name(),
         s.mean * 1e3,
         s.p50 * 1e3,
@@ -338,7 +371,15 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
     } else {
         BenchOpts::default()
     };
-    let report = run_matrix(backend.as_ref(), &configs, &methods, opts, smoke)?;
+    let policy_arg = clip_policy_opt(args)?;
+    let policy = policy_arg
+        .clone()
+        .unwrap_or_else(|| ClipPolicy::hard_global(1.0));
+    if policy_arg.is_some() {
+        println!("clip policy: {policy}");
+    }
+    let report =
+        run_matrix(backend.as_ref(), &configs, &methods, opts, smoke, &policy)?;
     println!("| config | method | mean ms | p50 ms | p95 ms | iters |");
     println!("|---|---|---:|---:|---:|---:|");
     for e in &report.entries {
@@ -377,6 +418,35 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
             println!("| {b} | {} | {} | {sp} |", fmt(rw), fmt(nx));
         }
     }
+    // where does group-wise clipping pay? re-time reweight under the
+    // classical whole-model hard clip at the same C and show the p50
+    // overhead (or win) of the requested policy side by side
+    if !policy.is_global_hard() && methods.contains(&ClipMethod::Reweight) {
+        let base = ClipPolicy::hard_global(policy.clip());
+        let base_report = run_matrix(
+            backend.as_ref(),
+            &configs,
+            &[ClipMethod::Reweight],
+            opts,
+            smoke,
+            &base,
+        )?;
+        let fmt = |v: Option<f64>| {
+            v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into())
+        };
+        println!("\nreweight p50: {policy} vs whole-model {base}:");
+        println!("| config | {policy} ms | {base} ms | ratio |");
+        println!("|---|---:|---:|---:|");
+        for config in &configs {
+            let pol = report.p50_ms(config, ClipMethod::Reweight);
+            let glb = base_report.p50_ms(config, ClipMethod::Reweight);
+            let ratio = match (pol, glb) {
+                (Some(p), Some(g)) if g > 0.0 => format!("{:.2}x", p / g),
+                _ => "-".into(),
+            };
+            println!("| {config} | {} | {} | {ratio} |", fmt(pol), fmt(glb));
+        }
+    }
     let out = args.str_or("out", &format!("BENCH_{}.json", backend.name()));
     fastclip::util::write_file(
         std::path::Path::new(&out),
@@ -399,6 +469,15 @@ fn cmd_bench_matrix(args: &Args) -> Result<()> {
         }
     }
     if let Some(hist) = args.str_opt("history") {
+        // history medians baseline the *default* policy; mixing in
+        // entries timed under another policy would poison the
+        // regression gate with incomparable step times
+        anyhow::ensure!(
+            policy_arg.is_none(),
+            "--history tracks the default-policy trajectory; drop \
+             --clip-policy (or --history) so the appended entry stays \
+             comparable with the file's recent medians"
+        );
         fastclip::bench::driver::append_history(
             &report,
             std::path::Path::new(hist),

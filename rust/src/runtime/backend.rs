@@ -31,6 +31,7 @@
 //! arena per call.
 
 use super::manifest::{ConfigSpec, Manifest};
+use super::policy::ClipPolicy;
 use super::spec::SpecKey;
 use super::store::{BatchStage, ParamStore, StepOut};
 use anyhow::Result;
@@ -42,10 +43,14 @@ use std::sync::Arc;
 ///   - `nonprivate`: grads = batch-mean gradient, loss = mean loss.
 ///   - `reweight` / `reweight_gram` / `reweight_direct` /
 ///     `reweight_pallas` / `multiloss`: grads = 1/tau * sum_i nu_i *
-///     g_i with nu_i = min(1, clip/||g_i||); norms = unclipped
-///     per-example norms; requires `clip`. The variants differ only in
-///     how norms are computed and where nu is applied — never in the
-///     result.
+///     g_i with nu_i determined by the clip *policy* (hard global:
+///     nu_i = min(1, clip/||g_i||), the paper's setting; grouped
+///     granularities clip each layer group's slice independently;
+///     the automatic formula uses clip/(norm+gamma)); norms = the
+///     unclipped whole-model per-example norms, and grouped policies
+///     additionally publish per-group norms (`StepOut::group_norms`).
+///     Requires a policy. The variants differ only in how norms are
+///     computed and where nu is applied — never in the result.
 ///   - `naive1` (batch-1): grads = the single example's unclipped
 ///     gradient; norms = [||g_0||]. The nxBP loop clips/averages in
 ///     the coordinator.
@@ -62,7 +67,7 @@ pub trait StepFn: Send + Sync {
     }
 
     /// Execute one step into the caller-owned arena: params + staged
-    /// batch (+ clip threshold for the private batched methods).
+    /// batch (+ the clip policy for the private batched methods).
     /// Steps never mutate the store; backends that cache device
     /// uploads key on `ParamStore::{id, version}`. The step resets
     /// `out` first — callers only ever *read* it afterwards.
@@ -70,7 +75,7 @@ pub trait StepFn: Send + Sync {
         &self,
         params: &ParamStore,
         stage: &BatchStage,
-        clip: Option<f32>,
+        policy: Option<&ClipPolicy>,
         out: &mut StepOut,
     ) -> Result<()>;
 
@@ -80,10 +85,10 @@ pub trait StepFn: Send + Sync {
         &self,
         params: &ParamStore,
         stage: &BatchStage,
-        clip: Option<f32>,
+        policy: Option<&ClipPolicy>,
     ) -> Result<StepOut> {
         let mut out = StepOut::new();
-        self.run_into(params, stage, clip, &mut out)?;
+        self.run_into(params, stage, policy, &mut out)?;
         Ok(out)
     }
 }

@@ -11,6 +11,7 @@
 
 use super::backend::{Backend, StepFn};
 use super::manifest::{ArtifactSpec, ConfigSpec, Manifest};
+use super::policy::ClipPolicy;
 use super::store::{BatchStage, ParamStore, StepOut};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -153,7 +154,9 @@ impl StepFn for StepExe {
     }
 
     /// Execute one step into the caller's arena: params + staged batch
-    /// (+ optional clip scalar).
+    /// (+ optional clip policy). The AOT artifacts bake in the
+    /// classical scalar clip, so only the global-hard policy is
+    /// executable here — anything else needs `--backend native`.
     ///
     /// Parameters are passed by reference into PJRT (`Borrow<Literal>`)
     /// and their literals are cached across calls keyed on the store's
@@ -169,14 +172,23 @@ impl StepFn for StepExe {
         &self,
         params: &ParamStore,
         stage: &BatchStage,
-        clip: Option<f32>,
+        policy: Option<&ClipPolicy>,
         out: &mut StepOut,
     ) -> Result<()> {
         let mut owned: Vec<xla::Literal> = Vec::with_capacity(3);
         owned.push(input_literal(stage)?);
         owned.push(label_literal(stage)?);
-        if let Some(c) = clip {
-            owned.push(xla::Literal::scalar(c));
+        if let Some(p) = policy {
+            if !p.is_global_hard() {
+                bail!(
+                    "{}: clip policy {p} needs per-layer norm structure, but \
+                     the AOT artifact bakes in the classical global hard \
+                     clip — run grouped/automatic policies with `--backend \
+                     native`",
+                    self.method
+                );
+            }
+            owned.push(xla::Literal::scalar(p.clip()));
         }
         let key = (params.id(), params.version());
         // scope the lock to the cache lookup/refresh — PJRT execution

@@ -38,11 +38,14 @@ pub struct ConvMeta {
     pub kernel: usize,
     pub stride: usize,
     pub pad: usize,
+    /// average-pool window (and stride) after every conv layer;
+    /// 0 or 1 means no pooling
+    pub pool: usize,
 }
 
 impl Default for ConvMeta {
     fn default() -> Self {
-        ConvMeta { kernel: 3, stride: 2, pad: 1 }
+        ConvMeta { kernel: 3, stride: 2, pad: 1, pool: 0 }
     }
 }
 
@@ -214,6 +217,7 @@ fn conv_meta(j: &Json) -> Option<ConvMeta> {
         kernel: j.get("kernel").as_usize().unwrap_or(d.kernel),
         stride: j.get("stride").as_usize().unwrap_or(d.stride),
         pad: j.get("pad").as_usize().unwrap_or(d.pad),
+        pool: j.get("pool").as_usize().unwrap_or(d.pool),
     })
 }
 
@@ -300,8 +304,11 @@ mod tests {
         .unwrap();
         let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
         let c = m.config("cnn2_mnist_b16").unwrap();
-        // pad missing => default 1
-        assert_eq!(c.conv, Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }));
+        // pad/pool missing => defaults (pad 1, no pool)
+        assert_eq!(
+            c.conv,
+            Some(ConvMeta { kernel: 3, stride: 2, pad: 1, pool: 0 })
+        );
         // mlp configs carry no conv block
         let m2 = Manifest::from_json(Path::new("/tmp"), &sample()).unwrap();
         assert_eq!(m2.config("mlp2_mnist_b32").unwrap().conv, None);

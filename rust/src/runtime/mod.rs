@@ -8,6 +8,7 @@ pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod native;
+pub mod policy;
 pub mod spec;
 pub mod store;
 
@@ -15,8 +16,9 @@ pub use backend::{Backend, StepFn};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, StepExe};
 pub use manifest::{ArtifactSpec, ConfigSpec, ConvMeta, Manifest, ParamSpec};
-pub use native::taps::{FamilyBuilder, FamilyRegistry, ModelFamily};
+pub use native::taps::{FamilyBuilder, FamilyRegistry, ModelFamily, NuBlock};
 pub use native::NativeBackend;
+pub use policy::{ClipPolicy, Granularity, NuFormula};
 pub use spec::{ConfigBuilder, ModelSpec, SpecKey};
 pub use store::{
     clip_factor, init_params_glorot, BatchStage, GradVec, ParamStore, StepOut,

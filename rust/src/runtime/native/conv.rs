@@ -55,15 +55,16 @@
 
 use super::gemm;
 use super::taps::{
-    downcast_scratch, downcast_scratch_ref, ModelFamily, ScratchAny,
+    downcast_scratch, downcast_scratch_ref, ModelFamily, NuBlock, ScratchAny,
 };
 use crate::runtime::manifest::{ConfigSpec, ConvMeta};
 use crate::runtime::store::GradVec;
 use anyhow::{bail, ensure, Result};
 use rayon::prelude::*;
 
-/// One layer of a cnn config: conv layers first, then the flatten
-/// boundary, then fc layers (the last fc maps to the classes).
+/// One layer of a cnn config: conv layers first (each optionally
+/// followed by an average-pool stage), then the flatten boundary, then
+/// fc layers (the last fc maps to the classes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layer {
     Conv {
@@ -77,6 +78,18 @@ pub enum Layer {
         h_out: usize,
         w_out: usize,
     },
+    /// Parameterless k x k average pool with window == stride
+    /// (disjoint windows, a rim narrower than `k` is dropped — the
+    /// floor(h/k) convention). Mean-pooled post-ReLU maps stay ≥ 0, so
+    /// the uniform ReLU applied between layers is the identity here.
+    Pool {
+        c: usize,
+        h_in: usize,
+        w_in: usize,
+        h_out: usize,
+        w_out: usize,
+        k: usize,
+    },
     Fc {
         din: usize,
         dout: usize,
@@ -87,7 +100,8 @@ impl Layer {
     /// Rows of this layer's activation/delta matrix at batch `b`.
     fn rows(&self, b: usize) -> usize {
         match *self {
-            Layer::Conv { h_out, w_out, .. } => b * h_out * w_out,
+            Layer::Conv { h_out, w_out, .. }
+            | Layer::Pool { h_out, w_out, .. } => b * h_out * w_out,
             Layer::Fc { .. } => b,
         }
     }
@@ -96,14 +110,17 @@ impl Layer {
     fn cols(&self) -> usize {
         match *self {
             Layer::Conv { cout, .. } => cout,
+            Layer::Pool { c, .. } => c,
             Layer::Fc { dout, .. } => dout,
         }
     }
 
-    /// Reduction dim of the layer GEMMs (patch K / fc in-dim).
+    /// Reduction dim of the layer GEMMs (patch K / fc in-dim; pool
+    /// runs no GEMM).
     fn k_dim(&self) -> usize {
         match *self {
             Layer::Conv { cin, k, .. } => cin * k * k,
+            Layer::Pool { .. } => 0,
             Layer::Fc { din, .. } => din,
         }
     }
@@ -112,6 +129,7 @@ impl Layer {
     fn elems_per_example(&self) -> usize {
         match *self {
             Layer::Conv { cout, h_out, w_out, .. } => h_out * w_out * cout,
+            Layer::Pool { c, h_out, w_out, .. } => h_out * w_out * c,
             Layer::Fc { dout, .. } => dout,
         }
     }
@@ -126,6 +144,15 @@ pub struct ConvSpec {
     pub in_h: usize,
     pub in_w: usize,
     pub layers: Vec<Layer>,
+    /// chain layer → parametric layer index (None for pool stages):
+    /// the chain is longer than the param list once pools are in, so
+    /// every `params[2*p]` access routes through this map
+    pub park: Vec<Option<usize>>,
+    /// chain layer → first norm-slab slot of that layer (pools own no
+    /// slots; their entry points at the next layer's base)
+    slot_base: Vec<usize>,
+    /// norm-slab slot → parametric layer (the `norm_slots` contract)
+    slots: Vec<usize>,
     pub n_classes: usize,
     pub batch: usize,
 }
@@ -231,6 +258,29 @@ impl ConvSpec {
                     cur_c = cout;
                     cur_h = h_out;
                     cur_w = w_out;
+                    // pool >= 2 inserts an average-pool stage after
+                    // every conv layer (pool 0/1 means none)
+                    if meta.pool >= 2 {
+                        ensure!(
+                            cur_h >= meta.pool && cur_w >= meta.pool,
+                            "config {}: pool {} larger than the {cur_h}x{cur_w} \
+                             map after conv layer {l}",
+                            cfg.name,
+                            meta.pool
+                        );
+                        let (ph, pw) =
+                            (cur_h / meta.pool, cur_w / meta.pool);
+                        layers.push(Layer::Pool {
+                            c: cur_c,
+                            h_in: cur_h,
+                            w_in: cur_w,
+                            h_out: ph,
+                            w_out: pw,
+                            k: meta.pool,
+                        });
+                        cur_h = ph;
+                        cur_w = pw;
+                    }
                 }
                 2 => {
                     let (din, dout) = (w.shape[0], w.shape[1]);
@@ -271,12 +321,41 @@ impl ConvSpec {
                 cfg.n_classes
             ),
         }
+        // parametric-index and norm-slab maps over the final chain:
+        // conv layers own two slab slots (weight term, bias term), fc
+        // layers one, pool stages none
+        let mut park = Vec::with_capacity(layers.len());
+        let mut slot_base = Vec::with_capacity(layers.len());
+        let mut slots = Vec::new();
+        let mut p = 0usize;
+        for l in &layers {
+            park.push(match l {
+                Layer::Pool { .. } => None,
+                _ => Some(p),
+            });
+            slot_base.push(slots.len());
+            match l {
+                Layer::Conv { .. } => {
+                    slots.push(p);
+                    slots.push(p);
+                    p += 1;
+                }
+                Layer::Fc { .. } => {
+                    slots.push(p);
+                    p += 1;
+                }
+                Layer::Pool { .. } => {}
+            }
+        }
         Ok(ConvSpec {
             d_in: in_c * in_h * in_w,
             in_c,
             in_h,
             in_w,
             layers,
+            park,
+            slot_base,
+            slots,
             n_classes: cfg.n_classes,
             batch: cfg.batch,
         })
@@ -286,13 +365,21 @@ impl ConvSpec {
         self.layers.len()
     }
 
+    /// Parametric (weight, bias) layer pairs — the chain minus pools.
+    pub fn n_param_layers(&self) -> usize {
+        self.park.iter().flatten().count()
+    }
+
     /// Per-parameter element counts in manifest order
-    /// [W0, b0, W1, b1, ...] — the gradient arena layout.
+    /// [W0, b0, W1, b1, ...] — the gradient arena layout. Pool stages
+    /// are parameterless and contribute nothing.
     pub fn grad_lens(&self) -> Vec<usize> {
         let mut out = Vec::with_capacity(self.layers.len() * 2);
         for l in &self.layers {
-            out.push(l.cols() * l.k_dim());
-            out.push(l.cols());
+            if !matches!(l, Layer::Pool { .. }) {
+                out.push(l.cols() * l.k_dim());
+                out.push(l.cols());
+            }
         }
         out
     }
@@ -316,15 +403,16 @@ impl ConvSpec {
     /// Check a param store's tensor count and per-tensor lengths.
     pub fn check_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
         ensure!(
-            host.len() == 2 * self.n_layers(),
+            host.len() == 2 * self.n_param_layers(),
             "{config}: param store has {} tensors, spec needs {}",
             host.len(),
-            2 * self.n_layers()
+            2 * self.n_param_layers()
         );
         for (l, layer) in self.layers.iter().enumerate() {
+            let Some(p) = self.park[l] else { continue };
             ensure!(
-                host[2 * l].len() == layer.cols() * layer.k_dim()
-                    && host[2 * l + 1].len() == layer.cols(),
+                host[2 * p].len() == layer.cols() * layer.k_dim()
+                    && host[2 * p + 1].len() == layer.cols(),
                 "{config}: layer {l} param shapes do not match the config"
             );
         }
@@ -392,7 +480,7 @@ impl ConvScratch {
                         dpatches.push(Vec::new());
                     }
                 }
-                Layer::Fc { .. } => {
+                Layer::Pool { .. } | Layer::Fc { .. } => {
                     patches.push(Vec::new());
                     dpatches.push(Vec::new());
                 }
@@ -450,12 +538,13 @@ pub fn forward_batch(
     let n = spec.n_layers();
     chw_to_hwc(b, spec.in_c, spec.in_h, spec.in_w, x, &mut s.x_hwc);
     for l in 0..n {
-        let w = &params[2 * l];
-        let bias = &params[2 * l + 1];
         match spec.layers[l] {
             Layer::Conv {
                 cin, cout, k, stride, pad, h_in, w_in, h_out, w_out,
             } => {
+                let p = spec.park[l].unwrap();
+                let w = &params[2 * p];
+                let bias = &params[2 * p + 1];
                 let rows = b * h_out * w_out;
                 let kdim = cin * k * k;
                 {
@@ -472,7 +561,40 @@ pub fn forward_batch(
                 }
                 gemm::sgemm_nt(rows, kdim, cout, &s.patches[l], w, z);
             }
+            Layer::Pool { c, h_in, w_in, h_out, w_out, k } => {
+                // mean over disjoint k x k windows of the HWC map; a
+                // pool always follows a conv, so acts[l-1] exists
+                let input = &s.acts[l - 1];
+                let z = &mut s.zs[l];
+                let inv = 1.0 / (k * k) as f32;
+                let (d_in, d_out) = (h_in * w_in * c, h_out * w_out * c);
+                for i in 0..b {
+                    let src = &input[i * d_in..(i + 1) * d_in];
+                    let dst = &mut z[i * d_out..(i + 1) * d_out];
+                    for oy in 0..h_out {
+                        for ox in 0..w_out {
+                            for ch in 0..c {
+                                let mut sum = 0.0f32;
+                                for ky in 0..k {
+                                    for kx in 0..k {
+                                        let idx = ((oy * k + ky) * w_in
+                                            + ox * k
+                                            + kx)
+                                            * c
+                                            + ch;
+                                        sum += src[idx];
+                                    }
+                                }
+                                dst[(oy * w_out + ox) * c + ch] = sum * inv;
+                            }
+                        }
+                    }
+                }
+            }
             Layer::Fc { din, dout } => {
+                let p = spec.park[l].unwrap();
+                let w = &params[2 * p];
+                let bias = &params[2 * p + 1];
                 let z = &mut s.zs[l];
                 for r in 0..b {
                     z[r * dout..(r + 1) * dout].copy_from_slice(bias);
@@ -529,12 +651,12 @@ pub fn backward_batch(
         }
     }
     for l in (1..n).rev() {
-        let w = &params[2 * l];
         let (head, tail) = s.deltas.split_at_mut(l);
         let d_here = &tail[0];
         let d_prev = &mut head[l - 1];
         match spec.layers[l] {
             Layer::Fc { din, dout } => {
+                let w = &params[2 * spec.park[l].unwrap()];
                 d_prev.iter_mut().for_each(|v| *v = 0.0);
                 // Δ_{l-1,flat} = Δ_l · W_lᵀ
                 gemm::sgemm_nt(b, dout, din, d_here, w, d_prev);
@@ -542,6 +664,7 @@ pub fn backward_batch(
             Layer::Conv {
                 cin, cout, k, stride, pad, h_in, w_in, h_out, w_out,
             } => {
+                let w = &params[2 * spec.park[l].unwrap()];
                 let rows = b * h_out * w_out;
                 let kdim = cin * k * k;
                 let dp = &mut s.dpatches[l];
@@ -554,8 +677,41 @@ pub fn backward_batch(
                     b, cin, h_in, w_in, k, k, stride, pad, dp, d_prev,
                 );
             }
+            Layer::Pool { c, h_in, w_in, h_out, w_out, k } => {
+                // mean pool: each output delta spreads /k² onto its
+                // disjoint window; positions in the dropped rim (and
+                // anything stale) are zeroed first
+                d_prev.iter_mut().for_each(|v| *v = 0.0);
+                let inv = 1.0 / (k * k) as f32;
+                let (d_in, d_out) = (h_in * w_in * c, h_out * w_out * c);
+                for i in 0..b {
+                    let src = &d_here[i * d_out..(i + 1) * d_out];
+                    let dst = &mut d_prev[i * d_in..(i + 1) * d_in];
+                    for oy in 0..h_out {
+                        for ox in 0..w_out {
+                            for ch in 0..c {
+                                let g =
+                                    src[(oy * w_out + ox) * c + ch] * inv;
+                                for ky in 0..k {
+                                    for kx in 0..k {
+                                        let idx = ((oy * k + ky) * w_in
+                                            + ox * k
+                                            + kx)
+                                            * c
+                                            + ch;
+                                        dst[idx] = g;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
         }
-        // every non-final layer is ReLU: mask by the stored z_{l-1}
+        // every non-final layer is ReLU: mask by the stored z_{l-1}.
+        // (When z_{l-1} is a pool output the map is ≥ 0, so the mask
+        // only zeroes positions whose whole window was already dead —
+        // a no-op on the propagated gradient.)
         for (dv, &zv) in d_prev.iter_mut().zip(s.zs[l - 1].iter()) {
             if zv <= 0.0 {
                 *dv = 0.0;
@@ -584,13 +740,18 @@ fn fc_tap_sq(input: &[f32], deltas: &[f32], i: usize, din: usize, dout: usize) -
 /// Exact per-example squared gradient norms — the direct route: per
 /// conv layer, materialize the small K x cout product A_iᵀ·Δ_i per
 /// example and take its Frobenius norm (plus the bias column-sum
-/// term); per fc layer, the MLP tap trick. Parallel over examples
+/// term); per fc layer, the MLP tap trick. Terms land in the `out`
+/// slab (len = batch × `norm_slots().len()`, example-major): a conv
+/// layer's weight and bias terms fill its two slots, an fc layer its
+/// one — summing a row in ascending slot order replays the legacy
+/// whole-model f64 addition sequence exactly. Parallel over examples
 /// writing disjoint scratch chunks (`ex_w`/`ex_work`/`ex_b`);
 /// per-example work has a fixed order, so the result is bitwise
 /// deterministic — and the warm path allocates nothing.
 pub fn sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
     let b = s.b;
-    debug_assert_eq!(out.len(), b);
+    let ns = spec.slots.len();
+    debug_assert_eq!(out.len(), b * ns);
     let (max_w, max_b, _) = spec.conv_partial_dims();
     let ConvScratch {
         x_hwc, patches, acts, deltas, ex_w, ex_work, ex_b, ..
@@ -606,14 +767,14 @@ pub fn sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
     // closure must be Sync, and a captured `&mut` is not
     let (x_hwc, patches, acts, deltas) =
         (&*x_hwc, &*patches, &*acts, &*deltas);
-    out.par_iter_mut()
+    out.par_chunks_mut(ns)
         .zip(ex_w.par_chunks_mut(max_w))
         .zip(ex_work.par_chunks_mut(max_w))
         .zip(ex_b.par_chunks_mut(max_b))
         .enumerate()
-        .for_each(|(i, (((sqi, wbuf), workbuf), bbuf))| {
-            let mut sq = 0.0f64;
+        .for_each(|(i, (((row, wbuf), workbuf), bbuf))| {
             for l in 0..spec.n_layers() {
+                let base = spec.slot_base[l];
                 match spec.layers[l] {
                     Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                         let p = h_out * w_out;
@@ -636,26 +797,27 @@ pub fn sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
                             mbuf,
                             &mut workbuf[..cout * kdim],
                         );
-                        sq += mbuf
+                        row[base] = mbuf
                             .iter()
                             .map(|&v| (v as f64) * (v as f64))
                             .sum::<f64>();
                         let bias = &mut bbuf[..cout];
                         bias.iter_mut().for_each(|v| *v = 0.0);
                         gemm::col_sums(p, cout, delta, None, bias);
-                        sq += bias
+                        row[base + 1] = bias
                             .iter()
                             .map(|&v| (v as f64) * (v as f64))
                             .sum::<f64>();
                     }
+                    Layer::Pool { .. } => {}
                     Layer::Fc { din, dout } => {
                         let input: &[f32] =
                             if l == 0 { x_hwc } else { &acts[l - 1] };
-                        sq += fc_tap_sq(input, &deltas[l], i, din, dout);
+                        row[base] =
+                            fc_tap_sq(input, &deltas[l], i, din, dout);
                     }
                 }
             }
-            *sqi = sq;
         });
 }
 
@@ -667,7 +829,8 @@ pub fn sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
 /// over examples, Gram buffers in the scratch (`ex_ga`/`ex_gd`).
 pub fn gram_sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
     let b = s.b;
-    debug_assert_eq!(out.len(), b);
+    let ns = spec.slots.len();
+    debug_assert_eq!(out.len(), b * ns);
     let (_, _, max_p2) = spec.conv_partial_dims();
     let ConvScratch { x_hwc, patches, acts, deltas, ex_ga, ex_gd, .. } = s;
     if ex_ga.len() < b * max_p2 {
@@ -677,13 +840,13 @@ pub fn gram_sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
     // shared views for the Sync parallel closure (see sq_norms)
     let (x_hwc, patches, acts, deltas) =
         (&*x_hwc, &*patches, &*acts, &*deltas);
-    out.par_iter_mut()
+    out.par_chunks_mut(ns)
         .zip(ex_ga.par_chunks_mut(max_p2))
         .zip(ex_gd.par_chunks_mut(max_p2))
         .enumerate()
-        .for_each(|(i, ((sqi, gabuf), gdbuf))| {
-            let mut sq = 0.0f64;
+        .for_each(|(i, ((row, gabuf), gdbuf))| {
             for l in 0..spec.n_layers() {
+                let base = spec.slot_base[l];
                 match spec.layers[l] {
                     Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                         let p = h_out * w_out;
@@ -702,16 +865,22 @@ pub fn gram_sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
                             w_term += (gav as f64) * (gdv as f64);
                             b_term += gdv as f64;
                         }
-                        sq += w_term + b_term;
+                        // this route computes the conv layer's terms
+                        // jointly as one addend — it fills the first
+                        // slot and pads the second with the +0.0
+                        // identity (the slab contract)
+                        row[base] = w_term + b_term;
+                        row[base + 1] = 0.0;
                     }
+                    Layer::Pool { .. } => {}
                     Layer::Fc { din, dout } => {
                         let input: &[f32] =
                             if l == 0 { x_hwc } else { &acts[l - 1] };
-                        sq += fc_tap_sq(input, &deltas[l], i, din, dout);
+                        row[base] =
+                            fc_tap_sq(input, &deltas[l], i, din, dout);
                     }
                 }
             }
-            *sqi = sq;
         });
 }
 
@@ -720,14 +889,16 @@ pub fn gram_sq_norms(spec: &ConvSpec, s: &mut ConvScratch, out: &mut [f64]) {
 /// Exact on fc layers, a strict overestimate wherever an example's
 /// patches overlap — see the module docs. Never used to clip.
 pub fn tap_bound_sq_norms(spec: &ConvSpec, s: &ConvScratch, out: &mut [f64]) {
-    debug_assert_eq!(out.len(), s.b);
-    out.iter_mut().for_each(|v| *v = 0.0);
+    let b = s.b;
+    let ns = spec.slots.len();
+    debug_assert_eq!(out.len(), b * ns);
     for l in 0..spec.n_layers() {
+        let base = spec.slot_base[l];
         match spec.layers[l] {
             Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                 let p = h_out * w_out;
                 let kdim = cin * k * k;
-                for (i, sqi) in out.iter_mut().enumerate() {
+                for i in 0..b {
                     let patches = example_rows(&s.patches[l], i, p * kdim);
                     let delta = example_rows(&s.deltas[l], i, p * cout);
                     let a2: f64 = patches
@@ -738,27 +909,35 @@ pub fn tap_bound_sq_norms(spec: &ConvSpec, s: &ConvScratch, out: &mut [f64]) {
                         .iter()
                         .map(|&v| (v as f64) * (v as f64))
                         .sum();
-                    *sqi += (a2 + p as f64) * d2;
+                    // one joint addend per conv layer: first slot
+                    // carries it, the second takes the +0.0 pad
+                    out[i * ns + base] = (a2 + p as f64) * d2;
+                    out[i * ns + base + 1] = 0.0;
                 }
             }
+            Layer::Pool { .. } => {}
             Layer::Fc { din, dout } => {
                 let input: &[f32] =
                     if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
-                for (i, sqi) in out.iter_mut().enumerate() {
-                    *sqi += fc_tap_sq(input, &s.deltas[l], i, din, dout);
+                for i in 0..b {
+                    out[i * ns + base] =
+                        fc_tap_sq(input, &s.deltas[l], i, din, dout);
                 }
             }
         }
     }
 }
 
-/// Scale every delta element of example i by nu_i in place (the
-/// `reweight_direct` assembly — conv examples own P rows per layer).
-pub fn scale_delta_rows(spec: &ConvSpec, nu: &[f32], s: &mut ConvScratch) {
+/// Scale every delta element of example i by its layer group's clip
+/// factor in place (the `reweight_direct` assembly — conv examples own
+/// P rows per layer). Pool deltas are intermediate-only (no params,
+/// never read by the assembly) and are skipped.
+pub fn scale_delta_rows(spec: &ConvSpec, nu: &NuBlock<'_>, s: &mut ConvScratch) {
     for l in 0..spec.n_layers() {
+        let Some(p) = spec.park[l] else { continue };
         let per_example = spec.layers[l].elems_per_example();
         let d = &mut s.deltas[l];
-        for (i, &wv) in nu.iter().enumerate() {
+        for (i, &wv) in nu.layer(p).iter().enumerate() {
             for v in d[i * per_example..(i + 1) * per_example].iter_mut() {
                 *v *= wv;
             }
@@ -786,7 +965,7 @@ pub fn scale_delta_rows(spec: &ConvSpec, nu: &[f32], s: &mut ConvScratch) {
 pub fn grads_from_deltas(
     spec: &ConvSpec,
     s: &mut ConvScratch,
-    scale: Option<&[f32]>,
+    scale: Option<&NuBlock<'_>>,
     grads: &mut GradVec,
 ) {
     let b = s.b;
@@ -805,6 +984,8 @@ pub fn grads_from_deltas(
     let (x_hwc, patches, acts, deltas) =
         (&*x_hwc, &*patches, &*acts, &*deltas);
     for l in 0..spec.n_layers() {
+        let Some(pi) = spec.park[l] else { continue };
+        let scale_l = scale.map(|nb| nb.layer(pi));
         match spec.layers[l] {
             Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                 let p = h_out * w_out;
@@ -823,7 +1004,7 @@ pub fn grads_from_deltas(
                         let bpart = &mut bbuf[..cout];
                         bpart.iter_mut().for_each(|v| *v = 0.0);
                         let work = &mut workbuf[..wlen];
-                        match scale {
+                        match scale_l {
                             Some(nu) => {
                                 gemm::sgemm_tn_f64acc_uniform(
                                     cout, p, kdim, delta, nu[i], pat, wpart,
@@ -843,14 +1024,14 @@ pub fn grads_from_deltas(
                         }
                     });
                 // ascending-example merge into the arena
-                let gw = grads.param_mut(2 * l);
+                let gw = grads.param_mut(2 * pi);
                 for i in 0..b {
                     let wpart = &ex_w[i * max_w..i * max_w + wlen];
                     for (g, &v) in gw.iter_mut().zip(wpart) {
                         *g += v;
                     }
                 }
-                let gb = grads.param_mut(2 * l + 1);
+                let gb = grads.param_mut(2 * pi + 1);
                 for i in 0..b {
                     let bpart = &ex_b[i * max_b..i * max_b + cout];
                     for (g, &v) in gb.iter_mut().zip(bpart) {
@@ -858,10 +1039,11 @@ pub fn grads_from_deltas(
                     }
                 }
             }
+            Layer::Pool { .. } => unreachable!("pool layers carry no params"),
             Layer::Fc { din, dout } => {
                 let input: &[f32] = if l == 0 { x_hwc } else { &acts[l - 1] };
                 let delta = &deltas[l];
-                match scale {
+                match scale_l {
                     Some(nu) => gemm::sgemm_tn_scaled(
                         din,
                         b,
@@ -869,7 +1051,7 @@ pub fn grads_from_deltas(
                         input,
                         nu,
                         delta,
-                        grads.param_mut(2 * l),
+                        grads.param_mut(2 * pi),
                     ),
                     None => gemm::sgemm_tn(
                         din,
@@ -877,10 +1059,16 @@ pub fn grads_from_deltas(
                         dout,
                         input,
                         delta,
-                        grads.param_mut(2 * l),
+                        grads.param_mut(2 * pi),
                     ),
                 }
-                gemm::col_sums(b, dout, delta, scale, grads.param_mut(2 * l + 1));
+                gemm::col_sums(
+                    b,
+                    dout,
+                    delta,
+                    scale_l,
+                    grads.param_mut(2 * pi + 1),
+                );
             }
         }
     }
@@ -906,13 +1094,14 @@ pub fn materialize_grad_row(
     }
     let mut sq = 0.0f64;
     for l in 0..spec.n_layers() {
+        let Some(pi) = spec.park[l] else { continue };
         match spec.layers[l] {
             Layer::Conv { cin, cout, k, h_out, w_out, .. } => {
                 let p = h_out * w_out;
                 let kdim = cin * k * k;
                 let delta = example_rows(&s.deltas[l], i, p * cout);
                 let patches = example_rows(&s.patches[l], i, p * kdim);
-                let gw = out.param_mut(2 * l);
+                let gw = out.param_mut(2 * pi);
                 gw.iter_mut().for_each(|v| *v = 0.0);
                 gemm::sgemm_tn_f64acc(
                     cout,
@@ -925,17 +1114,18 @@ pub fn materialize_grad_row(
                     &mut work[..cout * kdim],
                 );
                 sq += gw.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
-                let gb = out.param_mut(2 * l + 1);
+                let gb = out.param_mut(2 * pi + 1);
                 gb.iter_mut().for_each(|v| *v = 0.0);
                 gemm::col_sums(p, cout, delta, None, gb);
                 sq += gb.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
             }
+            Layer::Pool { .. } => unreachable!("pool layers carry no params"),
             Layer::Fc { din, dout } => {
                 let input: &[f32] =
                     if l == 0 { &s.x_hwc } else { &s.acts[l - 1] };
                 let a = example_rows(input, i, din);
                 let d = example_rows(&s.deltas[l], i, dout);
-                let gw = out.param_mut(2 * l);
+                let gw = out.param_mut(2 * pi);
                 for (kk, &xk) in a.iter().enumerate() {
                     let row = &mut gw[kk * dout..(kk + 1) * dout];
                     for (g, &dv) in row.iter_mut().zip(d.iter()) {
@@ -943,7 +1133,7 @@ pub fn materialize_grad_row(
                         sq += (*g as f64) * (*g as f64);
                     }
                 }
-                let gb = out.param_mut(2 * l + 1);
+                let gb = out.param_mut(2 * pi + 1);
                 for (g, &dv) in gb.iter_mut().zip(d.iter()) {
                     *g = dv;
                     sq += (*g as f64) * (*g as f64);
@@ -977,6 +1167,12 @@ impl ModelFamily for ConvSpec {
 
     fn grad_layout(&self) -> Vec<usize> {
         self.grad_lens()
+    }
+
+    /// Two slots per conv layer (weight term, then bias term), one per
+    /// fc layer, none for pool stages.
+    fn norm_slots(&self) -> Vec<usize> {
+        self.slots.clone()
     }
 
     fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
@@ -1026,7 +1222,7 @@ impl ModelFamily for ConvSpec {
         tap_bound_sq_norms(self, scr, out)
     }
 
-    fn scale_delta_rows(&self, nu: &[f32], s: &mut ScratchAny) {
+    fn scale_delta_rows(&self, nu: &NuBlock<'_>, s: &mut ScratchAny) {
         let scr = downcast_scratch::<ConvScratch>(s, "cnn");
         scale_delta_rows(self, nu, scr)
     }
@@ -1035,7 +1231,7 @@ impl ModelFamily for ConvSpec {
         &self,
         _x: &[f32],
         s: &mut ScratchAny,
-        scale: Option<&[f32]>,
+        scale: Option<&NuBlock<'_>>,
         grads: &mut GradVec,
     ) {
         let scr = downcast_scratch::<ConvScratch>(s, "cnn");
@@ -1074,7 +1270,7 @@ mod tests {
             input_shape: vec![2, 1, 6, 6],
             input_dtype: "f32".into(),
             act_elems_per_example: 3 * 3 * 2 + 3,
-            conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }),
+            conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1, pool: 0 }),
             spec: None,
             params: vec![
                 ParamSpec { name: "conv0.w".into(), shape: vec![2, 1, 3, 3] },
@@ -1099,7 +1295,7 @@ mod tests {
             input_shape: vec![3, 1, 7, 7],
             input_dtype: "f32".into(),
             act_elems_per_example: 4 * 4 * 2 + 2 * 2 * 3 + 3,
-            conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }),
+            conv: Some(ConvMeta { kernel: 3, stride: 2, pad: 1, pool: 0 }),
             spec: None,
             params: vec![
                 ParamSpec { name: "conv0.w".into(), shape: vec![2, 1, 3, 3] },
@@ -1113,10 +1309,36 @@ mod tests {
         }
     }
 
+    /// conv(1->2, 3x3 s1 p1) on 1x6x6 -> 6x6x2, avg-pool 2 -> 3x3x2,
+    /// fc 18 -> 3 — the stride-1+pool geometry the pool stage unlocks.
+    fn pooled_cnn_cfg() -> ConfigSpec {
+        ConfigSpec {
+            name: "pooled_cnn_b2".into(),
+            model: "cnn".into(),
+            dataset: "mnist".into(),
+            batch: 2,
+            n_classes: 3,
+            tags: vec![],
+            input_shape: vec![2, 1, 6, 6],
+            input_dtype: "f32".into(),
+            act_elems_per_example: 6 * 6 * 2 + 3 * 3 * 2 + 3,
+            conv: Some(ConvMeta { kernel: 3, stride: 1, pad: 1, pool: 2 }),
+            spec: None,
+            params: vec![
+                ParamSpec { name: "conv0.w".into(), shape: vec![2, 1, 3, 3] },
+                ParamSpec { name: "conv0.b".into(), shape: vec![2] },
+                ParamSpec { name: "fc.w".into(), shape: vec![18, 3] },
+                ParamSpec { name: "fc.b".into(), shape: vec![3] },
+            ],
+            artifacts: BTreeMap::new(),
+        }
+    }
+
     fn rand_params(spec: &ConvSpec, seed: u64) -> Vec<Vec<f32>> {
         let mut rng = ChaCha20::seeded(seed, 42);
         spec.layers
             .iter()
+            .filter(|l| !matches!(l, Layer::Pool { .. }))
             .flat_map(|l| {
                 vec![
                     (0..l.cols() * l.k_dim())
@@ -1126,6 +1348,12 @@ mod tests {
                 ]
             })
             .collect()
+    }
+
+    /// Whole-model squared norms from a slab: per-example ascending-
+    /// slot row sums (what the global policy's reduce does).
+    fn slab_row_sums(slab: &[f64], b: usize, ns: usize) -> Vec<f64> {
+        (0..b).map(|i| slab[i * ns..(i + 1) * ns].iter().sum()).collect()
     }
 
     fn rand_input(spec: &ConvSpec, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
@@ -1175,13 +1403,36 @@ mod tests {
         assert!(ConvSpec::from_config(&bad).is_err());
     }
 
+    #[test]
+    fn pooled_spec_inserts_parameterless_pool_stages() {
+        let cfg = pooled_cnn_cfg();
+        let spec = ConvSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.layers.len(), 3);
+        assert_eq!(
+            spec.layers[1],
+            Layer::Pool { c: 2, h_in: 6, w_in: 6, h_out: 3, w_out: 3, k: 2 }
+        );
+        assert_eq!(spec.layers[2], Layer::Fc { din: 18, dout: 3 });
+        // the chain is 3 long but only 2 layers are parametric
+        assert_eq!(spec.park, vec![Some(0), None, Some(1)]);
+        assert_eq!(spec.n_param_layers(), 2);
+        assert_eq!(spec.grad_lens(), vec![2 * 9, 2, 18 * 3, 3]);
+        // slab: conv owns two slots, pool none, fc one
+        assert_eq!(spec.slots, vec![0, 0, 1]);
+
+        // a pool wider than the conv output map is rejected
+        let mut bad = cfg.clone();
+        bad.conv = Some(ConvMeta { kernel: 3, stride: 2, pad: 0, pool: 4 });
+        assert!(ConvSpec::from_config(&bad).is_err());
+    }
+
     /// The ground-truth check the conv family rests on: batch-summed
     /// gradients from backward_batch + grads_from_deltas match central
     /// finite differences of the batch loss sum, through both the
     /// single-conv and the stacked-conv (col2im) nets.
     #[test]
     fn conv_gradients_match_finite_differences() {
-        for cfg in [tiny_cnn_cfg(), deep_cnn_cfg()] {
+        for cfg in [tiny_cnn_cfg(), deep_cnn_cfg(), pooled_cnn_cfg()] {
             let spec = ConvSpec::from_config(&cfg).unwrap();
             let b = spec.batch;
             let params = rand_params(&spec, 11);
@@ -1226,49 +1477,82 @@ mod tests {
     /// layers with overlapping patches.
     #[test]
     fn norm_routes_agree_and_tap_bounds_them() {
-        let cfg = deep_cnn_cfg();
-        let spec = ConvSpec::from_config(&cfg).unwrap();
-        let b = spec.batch;
-        let params = rand_params(&spec, 23);
-        let (x, labels) = rand_input(&spec, b, 9);
-        let mut s = ConvScratch::for_spec(&spec, b);
-        forward_batch(&spec, &params, &x, &labels, &mut s);
-        backward_batch(&spec, &params, &labels, None, &mut s);
+        for cfg in [deep_cnn_cfg(), pooled_cnn_cfg()] {
+            let spec = ConvSpec::from_config(&cfg).unwrap();
+            let b = spec.batch;
+            let ns = spec.slots.len();
+            let params = rand_params(&spec, 23);
+            let (x, labels) = rand_input(&spec, b, 9);
+            let mut s = ConvScratch::for_spec(&spec, b);
+            forward_batch(&spec, &params, &x, &labels, &mut s);
+            backward_batch(&spec, &params, &labels, None, &mut s);
 
-        let mut direct = vec![0.0f64; b];
-        sq_norms(&spec, &mut s, &mut direct);
-        let mut gram = vec![0.0f64; b];
-        gram_sq_norms(&spec, &mut s, &mut gram);
-        let mut tap = vec![0.0f64; b];
-        tap_bound_sq_norms(&spec, &s, &mut tap);
-        let mut mat = GradVec::with_layout(&spec.grad_lens());
-        let mut work: Vec<f64> = Vec::new();
-        for i in 0..b {
-            let sq_mat = materialize_grad_row(&spec, &s, i, &mut mat, &mut work);
+            let mut direct_slab = vec![0.0f64; b * ns];
+            sq_norms(&spec, &mut s, &mut direct_slab);
+            let mut gram_slab = vec![0.0f64; b * ns];
+            gram_sq_norms(&spec, &mut s, &mut gram_slab);
+            let mut tap_slab = vec![0.0f64; b * ns];
+            tap_bound_sq_norms(&spec, &s, &mut tap_slab);
+            let direct = slab_row_sums(&direct_slab, b, ns);
+            let gram = slab_row_sums(&gram_slab, b, ns);
+            let tap = slab_row_sums(&tap_slab, b, ns);
+            // per-slot: gram folds each conv layer's two terms into
+            // its first slot, so compare per parametric layer
+            for i in 0..b {
+                for (pl, dv) in (0..spec.n_param_layers()).map(|pl| {
+                    let layer_sum = |slab: &[f64]| -> f64 {
+                        spec.slots
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, &sl)| sl == pl)
+                            .map(|(slot, _)| slab[i * ns + slot])
+                            .sum()
+                    };
+                    (pl, (layer_sum(&direct_slab), layer_sum(&gram_slab)))
+                }) {
+                    let (d, g) = dv;
+                    assert!(
+                        (d - g).abs() / d.max(1e-9) < 1e-5,
+                        "{}: layer {pl} term: direct {d} vs gram {g}",
+                        cfg.name
+                    );
+                }
+            }
+            let mut mat = GradVec::with_layout(&spec.grad_lens());
+            let mut work: Vec<f64> = Vec::new();
+            for i in 0..b {
+                let sq_mat =
+                    materialize_grad_row(&spec, &s, i, &mut mat, &mut work);
+                assert!(
+                    (direct[i] - sq_mat).abs() / sq_mat.max(1e-9) < 1e-6,
+                    "{}: direct {} vs materialized {sq_mat} (example {i})",
+                    cfg.name,
+                    direct[i]
+                );
+                assert!(
+                    (gram[i] - sq_mat).abs() / sq_mat.max(1e-9) < 1e-5,
+                    "{}: gram {} vs materialized {sq_mat} (example {i})",
+                    cfg.name,
+                    gram[i]
+                );
+                // the bound is a true bound...
+                assert!(
+                    tap[i] >= gram[i] * (1.0 - 1e-9),
+                    "{}: tap bound {} below exact {} (example {i})",
+                    cfg.name,
+                    tap[i],
+                    gram[i]
+                );
+            }
+            // ...and strictly loose on these nets (patches overlap)
+            let slack: f64 =
+                (0..b).map(|i| tap[i] / gram[i]).sum::<f64>() / b as f64;
             assert!(
-                (direct[i] - sq_mat).abs() / sq_mat.max(1e-9) < 1e-6,
-                "direct {} vs materialized {sq_mat} (example {i})",
-                direct[i]
-            );
-            assert!(
-                (gram[i] - sq_mat).abs() / sq_mat.max(1e-9) < 1e-5,
-                "gram {} vs materialized {sq_mat} (example {i})",
-                gram[i]
-            );
-            // the bound is a true bound...
-            assert!(
-                tap[i] >= gram[i] * (1.0 - 1e-9),
-                "tap bound {} below exact {} (example {i})",
-                tap[i],
-                gram[i]
+                slack > 1.001,
+                "{}: tap bound unexpectedly tight: mean ratio {slack}",
+                cfg.name
             );
         }
-        // ...and strictly loose on this net (patches genuinely overlap)
-        let slack: f64 = (0..b).map(|i| tap[i] / gram[i]).sum::<f64>() / b as f64;
-        assert!(
-            slack > 1.001,
-            "tap bound unexpectedly tight on a conv net: mean ratio {slack}"
-        );
     }
 
     /// The three weighted-assembly routes agree: a nu-weighted second
@@ -1277,41 +1561,99 @@ mod tests {
     /// reweight / reweight_direct / reweight_pallas.
     #[test]
     fn weighted_assembly_routes_agree() {
+        for cfg in [deep_cnn_cfg(), pooled_cnn_cfg()] {
+            let spec = ConvSpec::from_config(&cfg).unwrap();
+            let b = spec.batch;
+            let params = rand_params(&spec, 31);
+            let (x, labels) = rand_input(&spec, b, 13);
+            let nu: Vec<f32> = (0..b).map(|i| 0.2 + 0.3 * i as f32).collect();
+            let groups = vec![0usize; spec.n_param_layers()];
+            let block = NuBlock { nu: &nu, groups: &groups, b };
+
+            // route 1: second backward of the nu-weighted loss
+            let mut s1 = ConvScratch::for_spec(&spec, b);
+            forward_batch(&spec, &params, &x, &labels, &mut s1);
+            backward_batch(&spec, &params, &labels, Some(&nu), &mut s1);
+            let mut g1 = GradVec::with_layout(&spec.grad_lens());
+            grads_from_deltas(&spec, &mut s1, None, &mut g1);
+
+            // route 2: one backward, deltas nu-scaled in place
+            let mut s2 = ConvScratch::for_spec(&spec, b);
+            forward_batch(&spec, &params, &x, &labels, &mut s2);
+            backward_batch(&spec, &params, &labels, None, &mut s2);
+            let mut g3 = GradVec::with_layout(&spec.grad_lens());
+            // route 3 first (fused), from the unscaled deltas
+            grads_from_deltas(&spec, &mut s2, Some(&block), &mut g3);
+            scale_delta_rows(&spec, &block, &mut s2);
+            let mut g2 = GradVec::with_layout(&spec.grad_lens());
+            grads_from_deltas(&spec, &mut s2, None, &mut g2);
+
+            for (&av, &bv) in g1.flat().iter().zip(g2.flat()) {
+                assert!(
+                    (av - bv).abs() < 1e-5,
+                    "{}: backward-nu {av} vs scaled-deltas {bv}",
+                    cfg.name
+                );
+            }
+            for (&av, &cv) in g2.flat().iter().zip(g3.flat()) {
+                assert!(
+                    (av - cv).abs() < 1e-5,
+                    "{}: scaled-deltas {av} vs fused {cv}",
+                    cfg.name
+                );
+            }
+        }
+    }
+
+    /// Group-wise scaling: a two-group NuBlock applied through the
+    /// fused assembly equals scaling each materialized per-example
+    /// gradient's param-group views independently — the runtime-side
+    /// guarantee behind the per_layer/groups policies.
+    #[test]
+    fn group_blocks_match_per_group_materialized_scaling() {
         let cfg = deep_cnn_cfg();
         let spec = ConvSpec::from_config(&cfg).unwrap();
         let b = spec.batch;
-        let params = rand_params(&spec, 31);
-        let (x, labels) = rand_input(&spec, b, 13);
-        let nu: Vec<f32> = (0..b).map(|i| 0.2 + 0.3 * i as f32).collect();
+        let np = spec.n_param_layers();
+        let params = rand_params(&spec, 41);
+        let (x, labels) = rand_input(&spec, b, 43);
+        // conv layers in group 0, fc head in group 1
+        let groups: Vec<usize> = spec
+            .layers
+            .iter()
+            .filter(|l| !matches!(l, Layer::Pool { .. }))
+            .map(|l| matches!(l, Layer::Fc { .. }) as usize)
+            .collect();
+        assert_eq!(groups.len(), np);
+        let n_groups = 2usize;
+        let nu: Vec<f32> =
+            (0..n_groups * b).map(|i| 0.15 + 0.2 * i as f32).collect();
+        let block = NuBlock { nu: &nu, groups: &groups, b };
 
-        // route 1: second backward of the nu-weighted loss
-        let mut s1 = ConvScratch::for_spec(&spec, b);
-        forward_batch(&spec, &params, &x, &labels, &mut s1);
-        backward_batch(&spec, &params, &labels, Some(&nu), &mut s1);
-        let mut g1 = GradVec::with_layout(&spec.grad_lens());
-        grads_from_deltas(&spec, &mut s1, None, &mut g1);
+        let mut s = ConvScratch::for_spec(&spec, b);
+        forward_batch(&spec, &params, &x, &labels, &mut s);
+        backward_batch(&spec, &params, &labels, None, &mut s);
+        let mut fused = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &mut s, Some(&block), &mut fused);
 
-        // route 2: one backward, deltas nu-scaled in place
-        let mut s2 = ConvScratch::for_spec(&spec, b);
-        forward_batch(&spec, &params, &x, &labels, &mut s2);
-        backward_batch(&spec, &params, &labels, None, &mut s2);
-        let mut g3 = GradVec::with_layout(&spec.grad_lens());
-        // route 3 first (fused), from the unscaled deltas
-        grads_from_deltas(&spec, &mut s2, Some(&nu), &mut g3);
-        scale_delta_rows(&spec, &nu, &mut s2);
-        let mut g2 = GradVec::with_layout(&spec.grad_lens());
-        grads_from_deltas(&spec, &mut s2, None, &mut g2);
-
-        for (&av, &bv) in g1.flat().iter().zip(g2.flat()) {
-            assert!(
-                (av - bv).abs() < 1e-5,
-                "backward-nu {av} vs scaled-deltas {bv}"
-            );
+        let mut mat = GradVec::with_layout(&spec.grad_lens());
+        let mut want = GradVec::with_layout(&spec.grad_lens());
+        let mut work: Vec<f64> = Vec::new();
+        for i in 0..b {
+            materialize_grad_row(&spec, &s, i, &mut mat, &mut work);
+            for (pl, &g) in groups.iter().enumerate() {
+                want.add_scaled_params(
+                    &mat,
+                    2 * pl,
+                    2 * pl + 2,
+                    nu[g * b + i],
+                );
+            }
         }
-        for (&av, &cv) in g2.flat().iter().zip(g3.flat()) {
+        for (&fv, &wv) in fused.flat().iter().zip(want.flat()) {
             assert!(
-                (av - cv).abs() < 1e-5,
-                "scaled-deltas {av} vs fused {cv}"
+                (fv - wv).abs() < 1e-5,
+                "fused group-scaled {fv} vs materialized {wv}"
             );
         }
     }
@@ -1331,17 +1673,21 @@ mod tests {
         let mut s = ConvScratch::for_spec(&spec, b);
         forward_batch(&spec, &params, &x, &labels, &mut s);
         backward_batch(&spec, &params, &labels, None, &mut s);
-        let mut sq = vec![0.0f64; b];
-        sq_norms(&spec, &mut s, &mut sq);
+        let ns = spec.slots.len();
+        let mut slab = vec![0.0f64; b * ns];
+        sq_norms(&spec, &mut s, &mut slab);
+        let sq = slab_row_sums(&slab, b, ns);
         let nu: Vec<f32> = sq
             .iter()
             .map(|&v| crate::runtime::clip_factor(v.sqrt() as f32, clip))
             .collect();
         // clipping must actually bite for this to mean anything
         assert!(nu.iter().any(|&v| v < 1.0));
+        let groups = vec![0usize; spec.n_param_layers()];
+        let block = NuBlock { nu: &nu, groups: &groups, b };
 
         let mut batched = GradVec::with_layout(&spec.grad_lens());
-        grads_from_deltas(&spec, &mut s, Some(&nu), &mut batched);
+        grads_from_deltas(&spec, &mut s, Some(&block), &mut batched);
 
         let mut mat = GradVec::with_layout(&spec.grad_lens());
         let mut summed = GradVec::with_layout(&spec.grad_lens());
@@ -1374,7 +1720,7 @@ mod tests {
             backward_batch(&spec, &params, &labels, None, s);
             let mut g = GradVec::with_layout(&spec.grad_lens());
             grads_from_deltas(&spec, s, None, &mut g);
-            let mut sq = vec![0.0f64; s.b];
+            let mut sq = vec![0.0f64; s.b * spec.slots.len()];
             sq_norms(&spec, s, &mut sq);
             (loss, sq, g)
         };

@@ -26,7 +26,7 @@
 
 use super::gemm;
 use super::taps::{
-    downcast_scratch, downcast_scratch_ref, ModelFamily, ScratchAny,
+    downcast_scratch, downcast_scratch_ref, ModelFamily, NuBlock, ScratchAny,
 };
 use crate::runtime::manifest::ConfigSpec;
 use crate::runtime::store::GradVec;
@@ -481,18 +481,20 @@ pub fn backward_batch(
     }
 }
 
-/// Per-example squared gradient norms via the tap trick (paper Sec 5):
-/// row norms of the taps and deltas only, f64-accumulated into `out`
-/// (len = batch; no allocation — the arena contract).
+/// Per-example, per-layer squared gradient norm contributions via the
+/// tap trick (paper Sec 5): row norms of the taps and deltas only,
+/// written into the `out` slab (len = batch × n_layers, example-major:
+/// `out[i*L + l]` is layer l's term for example i; no allocation — the
+/// arena contract). Summing a slab row recovers the whole-model norm.
 pub fn tap_sq_norms(spec: &MlpSpec, x: &[f32], s: &BatchScratch, out: &mut [f64]) {
     let b = s.b;
-    debug_assert_eq!(out.len(), b);
-    out.iter_mut().for_each(|v| *v = 0.0);
-    for l in 0..spec.n_layers() {
+    let n = spec.n_layers();
+    debug_assert_eq!(out.len(), b * n);
+    for l in 0..n {
         let (din, dout) = spec.layers[l];
         let input: &[f32] = if l == 0 { x } else { &s.acts[l - 1] };
         let delta = &s.deltas[l];
-        for (i, sqi) in out.iter_mut().enumerate() {
+        for i in 0..b {
             let a2: f64 = input[i * din..(i + 1) * din]
                 .iter()
                 .map(|&v| (v as f64) * (v as f64))
@@ -501,7 +503,7 @@ pub fn tap_sq_norms(spec: &MlpSpec, x: &[f32], s: &BatchScratch, out: &mut [f64]
                 .iter()
                 .map(|&v| (v as f64) * (v as f64))
                 .sum();
-            *sqi += (a2 + 1.0) * d2;
+            out[i * n + l] = (a2 + 1.0) * d2;
         }
     }
 }
@@ -521,15 +523,15 @@ pub fn gram_sq_norms(
     out: &mut [f64],
 ) {
     let b = s.b;
-    debug_assert_eq!(out.len(), b);
+    let n = spec.n_layers();
+    debug_assert_eq!(out.len(), b * n);
     let BatchScratch { acts, deltas, gram_a, gram_d, .. } = s;
     // grow-only: first use allocates, every later step reuses
     if gram_a.len() < b * b {
         gram_a.resize(b * b, 0.0);
         gram_d.resize(b * b, 0.0);
     }
-    out.iter_mut().for_each(|v| *v = 0.0);
-    for l in 0..spec.n_layers() {
+    for l in 0..n {
         let (din, dout) = spec.layers[l];
         let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
         gram_a.iter_mut().for_each(|v| *v = 0.0);
@@ -537,20 +539,24 @@ pub fn gram_sq_norms(
         gemm::sgemm_nt(b, din, b, input, input, &mut gram_a[..b * b]);
         let delta = &deltas[l];
         gemm::sgemm_nt(b, dout, b, delta, delta, &mut gram_d[..b * b]);
-        for (i, sqi) in out.iter_mut().enumerate() {
-            *sqi += (gram_a[i * b + i] as f64 + 1.0) * gram_d[i * b + i] as f64;
+        for i in 0..b {
+            out[i * n + l] =
+                (gram_a[i * b + i] as f64 + 1.0) * gram_d[i * b + i] as f64;
         }
     }
 }
 
-/// Scale every layer's delta row i by nu_i in place — the
-/// `reweight_direct` assembly: the tapped deltas from the *first*
-/// backward are reused, so no second backward pass runs.
-pub fn scale_delta_rows(spec: &MlpSpec, nu: &[f32], s: &mut BatchScratch) {
+/// Scale every layer's delta row i by that layer's group clip factor
+/// in place — the `reweight_direct` assembly: the tapped deltas from
+/// the *first* backward are reused, so no second backward pass runs.
+/// Under the global policy every layer sees the same nu slice; under
+/// group-wise policies `nu.layer(l)` routes each layer to its group's
+/// per-example factors.
+pub fn scale_delta_rows(spec: &MlpSpec, nu: &NuBlock<'_>, s: &mut BatchScratch) {
     for l in 0..spec.n_layers() {
         let (_, dout) = spec.layers[l];
         let d = &mut s.deltas[l];
-        for (r, &w) in nu.iter().enumerate() {
+        for (r, &w) in nu.layer(l).iter().enumerate() {
             for v in d[r * dout..(r + 1) * dout].iter_mut() {
                 *v *= w;
             }
@@ -567,7 +573,7 @@ pub fn grads_from_deltas(
     spec: &MlpSpec,
     x: &[f32],
     s: &BatchScratch,
-    scale: Option<&[f32]>,
+    scale: Option<&NuBlock<'_>>,
     grads: &mut GradVec,
 ) {
     let b = s.b;
@@ -575,6 +581,7 @@ pub fn grads_from_deltas(
         let (din, dout) = spec.layers[l];
         let input: &[f32] = if l == 0 { x } else { &s.acts[l - 1] };
         let delta = &s.deltas[l];
+        let scale = scale.map(|nb| nb.layer(l));
         match scale {
             Some(nu) => gemm::sgemm_tn_scaled(
                 din,
@@ -660,6 +667,11 @@ impl ModelFamily for MlpSpec {
         self.grad_lens()
     }
 
+    /// One slab slot per linear layer, in layer order.
+    fn norm_slots(&self) -> Vec<usize> {
+        (0..self.n_layers()).collect()
+    }
+
     fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
         self.check_params(config, host)
     }
@@ -708,7 +720,7 @@ impl ModelFamily for MlpSpec {
         tap_sq_norms(self, x, scr, out)
     }
 
-    fn scale_delta_rows(&self, nu: &[f32], s: &mut ScratchAny) {
+    fn scale_delta_rows(&self, nu: &NuBlock<'_>, s: &mut ScratchAny) {
         let scr = downcast_scratch::<BatchScratch>(s, "mlp");
         scale_delta_rows(self, nu, scr)
     }
@@ -717,7 +729,7 @@ impl ModelFamily for MlpSpec {
         &self,
         x: &[f32],
         s: &mut ScratchAny,
-        scale: Option<&[f32]>,
+        scale: Option<&NuBlock<'_>>,
         grads: &mut GradVec,
     ) {
         let scr = downcast_scratch::<BatchScratch>(s, "mlp");
@@ -867,13 +879,20 @@ mod tests {
         let labels: Vec<i32> =
             (0..b).map(|_| (rng.next_u32() % 3) as i32).collect();
 
+        let n = spec.n_layers();
         let mut bs = BatchScratch::for_spec(&spec, b);
         let (loss_sum, _) = forward_batch(&spec, &params, &x, &labels, &mut bs);
         backward_batch(&spec, &params, &labels, None, &mut bs);
-        let mut tap = vec![0.0f64; b];
-        tap_sq_norms(&spec, &x, &bs, &mut tap);
-        let mut gram = vec![0.0f64; b];
-        gram_sq_norms(&spec, &x, &mut bs, &mut gram);
+        let mut tap_slab = vec![0.0f64; b * n];
+        tap_sq_norms(&spec, &x, &bs, &mut tap_slab);
+        let mut gram_slab = vec![0.0f64; b * n];
+        gram_sq_norms(&spec, &x, &mut bs, &mut gram_slab);
+        // whole-model norms = slab row sums (the global policy's reduce)
+        let row_sum = |slab: &[f64], i: usize| -> f64 {
+            slab[i * n..(i + 1) * n].iter().sum()
+        };
+        let tap: Vec<f64> = (0..b).map(|i| row_sum(&tap_slab, i)).collect();
+        let gram: Vec<f64> = (0..b).map(|i| row_sum(&gram_slab, i)).collect();
         let mut bgrads = GradVec::with_layout(&spec.grad_lens());
         grads_from_deltas(&spec, &x, &bs, None, &mut bgrads);
 
@@ -919,11 +938,25 @@ mod tests {
                 );
             }
         }
-        // the fused scaled GEMM matches scaling the delta rows first
-        let nu: Vec<f32> = (0..b).map(|i| 0.2 + 0.1 * i as f32).collect();
+        // per-layer slab terms agree between the tap and Gram routes
+        for (slot, (&tv, &gv)) in
+            tap_slab.iter().zip(gram_slab.iter()).enumerate()
+        {
+            assert!(
+                (tv - gv).abs() / tv.max(1e-9) < 1e-5,
+                "slab slot {slot}: tap {tv} vs gram {gv}"
+            );
+        }
+        // the fused scaled GEMM matches scaling the delta rows first —
+        // here with a genuinely per-layer nu block (2 groups) so the
+        // group routing is exercised, not just the global degenerate
+        let nu: Vec<f32> =
+            (0..2 * b).map(|i| 0.2 + 0.1 * i as f32).collect();
+        let groups: Vec<usize> = (0..n).map(|l| (l >= 1) as usize).collect();
+        let block = NuBlock { nu: &nu, groups: &groups, b };
         let mut fused = GradVec::with_layout(&spec.grad_lens());
-        grads_from_deltas(&spec, &x, &bs, Some(&nu), &mut fused);
-        scale_delta_rows(&spec, &nu, &mut bs);
+        grads_from_deltas(&spec, &x, &bs, Some(&block), &mut fused);
+        scale_delta_rows(&spec, &block, &mut bs);
         let mut scaled = GradVec::with_layout(&spec.grad_lens());
         grads_from_deltas(&spec, &x, &bs, None, &mut scaled);
         for (&fv, &sv) in fused.flat().iter().zip(scaled.flat()) {

@@ -63,9 +63,12 @@ pub mod gemm;
 pub mod mlp;
 pub mod taps;
 
-use self::taps::{FamilyRegistry, ModelFamily, ScratchAny};
+use self::taps::{
+    reduce_norm_slab, FamilyRegistry, ModelFamily, NuBlock, ScratchAny,
+};
 use super::backend::{Backend, StepFn};
 use super::manifest::{ConfigSpec, Manifest};
+use super::policy::ClipPolicy;
 use super::spec::{
     ConfigBuilder, ModelSpec, SpecKey, DEFAULT_CNN_CHANNELS, DEFAULT_MLP_WIDTH,
 };
@@ -165,13 +168,24 @@ impl Backend for NativeBackend {
         // the one and only family dispatch: the registry
         let model = self.families.build(cfg)?;
         let lens = model.grad_layout();
-        let state = Mutex::new(StepState::new(model.as_ref(), &lens, kind));
+        let slot_layers = model.norm_slots();
+        let n_param_layers =
+            slot_layers.iter().copied().max().map_or(0, |m| m + 1);
+        let state = Mutex::new(StepState::new(
+            model.as_ref(),
+            &lens,
+            &slot_layers,
+            n_param_layers,
+            kind,
+        ));
         Ok(Arc::new(NativeStep {
             model,
             kind,
             method: art.method.clone(),
             config: cfg.name.clone(),
             lens,
+            slot_layers,
+            n_param_layers,
             state,
         }))
     }
@@ -204,8 +218,8 @@ impl Kind {
         })
     }
 
-    /// Does this kernel need the clip threshold?
-    fn needs_clip(&self) -> bool {
+    /// Does this kernel need the clip policy?
+    fn needs_policy(&self) -> bool {
         matches!(
             self,
             Kind::Reweight
@@ -230,6 +244,9 @@ struct MlChunk {
     /// one (conv); grows once, then reused
     work: Vec<f64>,
     norms: Vec<f32>,
+    /// per-group norms under a grouped policy, example-major within
+    /// the chunk (`gnorms[(i-lo)*n_groups + g]`); empty otherwise
+    gnorms: Vec<f32>,
 }
 
 /// Everything a `NativeStep` mutates during execution, behind one
@@ -237,16 +254,40 @@ struct MlChunk {
 /// used to be per-call allocations. Sized at `load`, reused forever.
 struct StepState {
     taps: Box<ScratchAny>,
-    /// per-example squared norms (len = batch)
-    sq: Vec<f64>,
-    /// per-example norms, then rescaled in place to clip factors nu
+    /// per-layer squared-norm slab (batch × `norm_slots()`,
+    /// example-major) the norm routes write into; the *policy* reduces
+    /// it (`reduce_norm_slab`)
+    slab: Vec<f64>,
+    /// group-major per-group per-example squared norms (grow-only:
+    /// sized for one group at load, regrown once if a grouped policy
+    /// runs)
+    gsq: Vec<f64>,
+    /// group-major norms, then rescaled in place to clip factors nu
+    /// (grow-only, like `gsq`)
     nu: Vec<f32>,
+    /// group-major per-group norms published to the arena under a
+    /// grouped policy (grow-only; empty under global)
+    gnorms: Vec<f32>,
+    /// whole-model per-example norms under a grouped policy (len = b)
+    wnorms: Vec<f32>,
+    /// group index of each parametric layer (len = n_param_layers),
+    /// refilled from the policy every step
+    groups: Vec<usize>,
+    /// layer-index boundaries of the groups (`gb[g]..gb[g+1]`),
+    /// rebuilt per step for the grouped multiloss path (grow-only)
+    gb: Vec<usize>,
     /// multiloss chunk arenas (empty for every other kind)
     ml: Vec<MlChunk>,
 }
 
 impl StepState {
-    fn new(model: &dyn ModelFamily, lens: &[usize], kind: Kind) -> StepState {
+    fn new(
+        model: &dyn ModelFamily,
+        lens: &[usize],
+        slot_layers: &[usize],
+        n_param_layers: usize,
+        kind: Kind,
+    ) -> StepState {
         let b = model.batch();
         let ml = if kind == Kind::MultiLoss {
             let n_chunks =
@@ -261,6 +302,7 @@ impl StepState {
                         mat: GradVec::with_layout(lens),
                         work: Vec::new(),
                         norms: Vec::with_capacity(CHUNK_EXAMPLES),
+                        gnorms: Vec::new(),
                     }
                 })
                 .collect()
@@ -269,8 +311,13 @@ impl StepState {
         };
         StepState {
             taps: model.new_scratch(),
-            sq: vec![0.0; b],
+            slab: vec![0.0; b * slot_layers.len()],
+            gsq: vec![0.0; b],
             nu: vec![0.0; b],
+            gnorms: Vec::new(),
+            wnorms: vec![0.0; b],
+            groups: vec![0; n_param_layers],
+            gb: Vec::new(),
             ml,
         }
     }
@@ -283,6 +330,10 @@ struct NativeStep {
     config: String,
     /// gradient arena layout (per-parameter element counts)
     lens: Vec<usize>,
+    /// the family's norm-slab layout (`ModelFamily::norm_slots`)
+    slot_layers: Vec<usize>,
+    /// parametric layer count — the clip policy's granularity domain
+    n_param_layers: usize,
     /// Cached execution state, reused across `run_into` calls
     /// (`StepFn::run_into` takes `&self`). Every buffer is fully
     /// rewritten (or explicitly cleared) each step, so reuse changes
@@ -299,7 +350,7 @@ impl StepFn for NativeStep {
         &self,
         params: &ParamStore,
         stage: &BatchStage,
-        clip: Option<f32>,
+        policy: Option<&ClipPolicy>,
         out: &mut StepOut,
     ) -> Result<()> {
         let model = self.model.as_ref();
@@ -342,10 +393,14 @@ impl StepFn for NativeStep {
                 model.n_classes()
             );
         }
-        let clip = if self.kind.needs_clip() {
-            Some(clip.with_context(|| {
-                format!("{}: {} requires a clip threshold", self.config, self.method)
-            })?)
+        let policy = if self.kind.needs_policy() {
+            let p = policy.with_context(|| {
+                format!("{}: {} requires a clip policy", self.config, self.method)
+            })?;
+            p.check(self.n_param_layers).with_context(|| {
+                format!("{}: {}", self.config, self.method)
+            })?;
+            Some(p)
         } else {
             None
         };
@@ -387,12 +442,23 @@ impl StepFn for NativeStep {
             }
             Kind::Naive1 => {
                 // batch-1 nxBP body: unclipped gradient + its norm;
-                // the coordinator clips and accumulates
+                // the coordinator clips and accumulates (grouped
+                // policies re-derive per-group norms from the
+                // materialized gradient there)
                 model.backward_batch(host, labels, None, st.taps.as_mut());
-                model.sq_norms(x, st.taps.as_mut(), &mut st.sq);
+                model.sq_norms(x, st.taps.as_mut(), &mut st.slab);
+                st.groups.iter_mut().for_each(|g| *g = 0);
+                reduce_norm_slab(
+                    &st.slab,
+                    b,
+                    &self.slot_layers,
+                    &st.groups,
+                    1,
+                    &mut st.gsq,
+                );
                 model.grads_from_deltas(x, st.taps.as_mut(), None, &mut out.grads);
                 let norms = out.norms_fill(b);
-                for (n, &s) in norms.iter_mut().zip(st.sq.iter()) {
+                for (n, &s) in norms.iter_mut().zip(st.gsq.iter()) {
                     *n = s.sqrt() as f32;
                 }
             }
@@ -401,44 +467,111 @@ impl StepFn for NativeStep {
             | Kind::ReweightDirect
             | Kind::ReweightPallas => {
                 // shared prefix of the reweight family: one backward
-                // for the taps, exact per-example norms, clip factors
+                // for the taps, exact per-example norms into the slab,
+                // policy reduction, clip factors
+                let p = policy.unwrap();
+                let ng = p.n_groups(self.n_param_layers);
                 model.backward_batch(host, labels, None, st.taps.as_mut());
                 if self.kind == Kind::ReweightGram {
-                    model.gram_sq_norms(x, st.taps.as_mut(), &mut st.sq);
+                    model.gram_sq_norms(x, st.taps.as_mut(), &mut st.slab);
                 } else {
-                    model.sq_norms(x, st.taps.as_mut(), &mut st.sq);
+                    model.sq_norms(x, st.taps.as_mut(), &mut st.slab);
                 }
-                // st.nu: first the norms (published to the arena),
-                // then rescaled in place to the clip factors
-                for (nv, &s) in st.nu.iter_mut().zip(st.sq.iter()) {
-                    *nv = s.sqrt() as f32;
+                p.fill_layer_groups(&mut st.groups);
+                if st.gsq.len() < ng * b {
+                    st.gsq.resize(ng * b, 0.0);
                 }
-                out.set_norms(&st.nu);
-                let c = clip.unwrap();
-                for nv in st.nu.iter_mut() {
-                    *nv = crate::runtime::clip_factor(*nv, c);
+                if st.nu.len() < ng * b {
+                    st.nu.resize(ng * b, 0.0);
                 }
+                reduce_norm_slab(
+                    &st.slab,
+                    b,
+                    &self.slot_layers,
+                    &st.groups,
+                    ng,
+                    &mut st.gsq,
+                );
+                if ng == 1 {
+                    // one group: the ascending slab reduction replayed
+                    // the legacy whole-model sum bit-for-bit; st.nu is
+                    // first the norms (published), then the factors
+                    for (nv, &s) in
+                        st.nu[..b].iter_mut().zip(st.gsq[..b].iter())
+                    {
+                        *nv = s.sqrt() as f32;
+                    }
+                    out.set_norms(&st.nu[..b]);
+                    for nv in st.nu[..b].iter_mut() {
+                        *nv = p.nu_for(*nv);
+                    }
+                } else {
+                    // grouped: per-group norms (published group-major)
+                    // plus the whole-model norms for the norm report
+                    if st.gnorms.len() < ng * b {
+                        st.gnorms.resize(ng * b, 0.0);
+                    }
+                    for (gn, &s) in st.gnorms[..ng * b]
+                        .iter_mut()
+                        .zip(st.gsq[..ng * b].iter())
+                    {
+                        *gn = s.sqrt() as f32;
+                    }
+                    out.set_group_norms(&st.gnorms[..ng * b], ng);
+                    for i in 0..b {
+                        let mut s = 0.0f64;
+                        for g in 0..ng {
+                            s += st.gsq[g * b + i];
+                        }
+                        st.wnorms[i] = s.sqrt() as f32;
+                    }
+                    out.set_norms(&st.wnorms);
+                    for (nv, &gn) in st.nu[..ng * b]
+                        .iter_mut()
+                        .zip(st.gnorms[..ng * b].iter())
+                    {
+                        *nv = p.nu_for(gn);
+                    }
+                }
+                let block = NuBlock {
+                    nu: &st.nu[..ng * b],
+                    groups: &st.groups,
+                    b,
+                };
                 match self.kind {
                     // the paper's reweight (and its gram-norm twin): a
                     // *second* backward pass of the nu-weighted loss
-                    // Σ_i nu_i·l_i
+                    // Σ_i nu_i·l_i. The reweighted loss can only carry
+                    // one scalar per example, so grouped policies
+                    // scale the tapped deltas per layer instead —
+                    // algebraically the same weighted gradient.
                     Kind::Reweight | Kind::ReweightGram => {
-                        model.backward_batch(
-                            host,
-                            labels,
-                            Some(&st.nu),
-                            st.taps.as_mut(),
-                        );
-                        model.grads_from_deltas(
-                            x,
-                            st.taps.as_mut(),
-                            None,
-                            &mut out.grads,
-                        );
+                        if ng == 1 {
+                            model.backward_batch(
+                                host,
+                                labels,
+                                Some(&st.nu[..b]),
+                                st.taps.as_mut(),
+                            );
+                            model.grads_from_deltas(
+                                x,
+                                st.taps.as_mut(),
+                                None,
+                                &mut out.grads,
+                            );
+                        } else {
+                            model.scale_delta_rows(&block, st.taps.as_mut());
+                            model.grads_from_deltas(
+                                x,
+                                st.taps.as_mut(),
+                                None,
+                                &mut out.grads,
+                            );
+                        }
                     }
                     // one backward: reuse the tapped deltas, nu-scaled
                     Kind::ReweightDirect => {
-                        model.scale_delta_rows(&st.nu, st.taps.as_mut());
+                        model.scale_delta_rows(&block, st.taps.as_mut());
                         model.grads_from_deltas(
                             x,
                             st.taps.as_mut(),
@@ -451,7 +584,7 @@ impl StepFn for NativeStep {
                         model.grads_from_deltas(
                             x,
                             st.taps.as_mut(),
-                            Some(&st.nu),
+                            Some(&block),
                             &mut out.grads,
                         );
                     }
@@ -459,15 +592,30 @@ impl StepFn for NativeStep {
                 }
             }
             Kind::MultiLoss => {
-                let c = clip.unwrap();
+                let p = policy.unwrap();
+                let ng = p.n_groups(self.n_param_layers);
                 model.backward_batch(host, labels, None, st.taps.as_mut());
+                // group g spans parametric layers gb[g]..gb[g+1], i.e.
+                // params 2·gb[g]..2·gb[g+1] (one (W, b) pair per layer)
+                p.fill_layer_groups(&mut st.groups);
+                st.gb.clear();
+                st.gb.push(0);
+                for l in 1..self.n_param_layers {
+                    if st.groups[l] != st.groups[l - 1] {
+                        st.gb.push(l);
+                    }
+                }
+                st.gb.push(self.n_param_layers);
+                debug_assert_eq!(st.gb.len(), ng + 1);
                 // materialize per-example gradients in fixed-size
                 // chunks: parallel over the pre-allocated chunk
                 // arenas, merged in order below
                 let taps_ref: &ScratchAny = st.taps.as_ref();
                 let model_ref = &self.model;
+                let gb = &st.gb;
                 st.ml.par_iter_mut().for_each(|chunk| {
                     chunk.norms.clear();
+                    chunk.gnorms.clear();
                     chunk.acc.zero();
                     for i in chunk.lo..chunk.hi {
                         let sq = model_ref.materialize_grad_row(
@@ -477,10 +625,31 @@ impl StepFn for NativeStep {
                             &mut chunk.mat,
                             &mut chunk.work,
                         );
-                        let norm = sq.sqrt() as f32;
-                        chunk.norms.push(norm);
-                        let nu = crate::runtime::clip_factor(norm, c);
-                        chunk.acc.add_scaled(&chunk.mat, nu);
+                        if ng == 1 {
+                            // whole-model squared norm straight from
+                            // the materialization — the legacy path
+                            let norm = sq.sqrt() as f32;
+                            chunk.norms.push(norm);
+                            let nu = p.nu_for(norm);
+                            chunk.acc.add_scaled(&chunk.mat, nu);
+                        } else {
+                            // grouped: each group's slice of the
+                            // materialized gradient is normed and
+                            // scaled independently
+                            let mut wsq = 0.0f64;
+                            for g in 0..ng {
+                                let (lo, hi) = (2 * gb[g], 2 * gb[g + 1]);
+                                let gsq = chunk.mat.sq_norm_params(lo, hi);
+                                wsq += gsq;
+                                let gn = gsq.sqrt() as f32;
+                                chunk.gnorms.push(gn);
+                                let nu = p.nu_for(gn);
+                                chunk
+                                    .acc
+                                    .add_scaled_params(&chunk.mat, lo, hi, nu);
+                            }
+                            chunk.norms.push(wsq.sqrt() as f32);
+                        }
                     }
                 });
                 {
@@ -492,6 +661,22 @@ impl StepFn for NativeStep {
                             at += 1;
                         }
                     }
+                }
+                if ng > 1 {
+                    // regroup the chunks' example-major group norms
+                    // into the arena's group-major layout
+                    if st.gnorms.len() < ng * b {
+                        st.gnorms.resize(ng * b, 0.0);
+                    }
+                    for chunk in &st.ml {
+                        for (k, i) in (chunk.lo..chunk.hi).enumerate() {
+                            for g in 0..ng {
+                                st.gnorms[g * b + i] =
+                                    chunk.gnorms[k * ng + g];
+                            }
+                        }
+                    }
+                    out.set_group_norms(&st.gnorms[..ng * b], ng);
                 }
                 for chunk in &st.ml {
                     out.grads.add(&chunk.acc);
@@ -550,6 +735,7 @@ fn builtin_manifest() -> Manifest {
                         k: 3,
                         s: 2,
                         pad: 1,
+                        pool: 0,
                         ch: DEFAULT_CNN_CHANNELS[..depth].to_vec(),
                     },
                     dataset,
@@ -611,7 +797,10 @@ mod tests {
         let cnn = m.config("cnn2_mnist_b32").unwrap();
         assert_eq!(cnn.params[0].shape, vec![8, 1, 3, 3]);
         assert_eq!(cnn.params[4].shape, vec![7 * 7 * 16, 10]);
-        assert_eq!(cnn.conv, Some(ConvMeta { kernel: 3, stride: 2, pad: 1 }));
+        assert_eq!(
+            cnn.conv,
+            Some(ConvMeta { kernel: 3, stride: 2, pad: 1, pool: 0 })
+        );
         let cnn4 = m.config("cnn4_cifar10_b16").unwrap();
         assert_eq!(cnn4.params[8].shape, vec![2 * 2 * 32, 10]);
     }
@@ -768,16 +957,29 @@ mod tests {
             let params =
                 ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 1)))
                     .unwrap();
-            for method in
-                ["reweight", "reweight_gram", "reweight_direct", "reweight_pallas"]
-            {
-                let step = b.load(&cfg, method).unwrap();
-                let a = step.run(&params, &stage, Some(0.7)).unwrap();
-                let a2 = step.run(&params, &stage, Some(0.7)).unwrap();
-                // bitwise: fixed tiles + ordered merge + clean scratch
-                // reuse
-                assert_eq!(a.grads, a2.grads, "{name}/{method}");
-                assert_eq!(a.norms(), a2.norms(), "{name}/{method}");
+            // determinism holds for every policy shape, not just the
+            // classical global-hard one
+            for pol in ["global:0.7", "per_layer:0.7", "auto:0.7,g=0.01"] {
+                let pol = ClipPolicy::parse(pol).unwrap();
+                for method in [
+                    "reweight",
+                    "reweight_gram",
+                    "reweight_direct",
+                    "reweight_pallas",
+                ] {
+                    let step = b.load(&cfg, method).unwrap();
+                    let a = step.run(&params, &stage, Some(&pol)).unwrap();
+                    let a2 = step.run(&params, &stage, Some(&pol)).unwrap();
+                    // bitwise: fixed tiles + ordered merge + clean
+                    // scratch reuse
+                    assert_eq!(a.grads, a2.grads, "{name}/{method}/{pol}");
+                    assert_eq!(a.norms(), a2.norms(), "{name}/{method}/{pol}");
+                    assert_eq!(
+                        a.group_norms(),
+                        a2.group_norms(),
+                        "{name}/{method}/{pol}"
+                    );
+                }
             }
         }
     }
@@ -805,16 +1007,17 @@ mod tests {
             let params =
                 ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 4)))
                     .unwrap();
+            let pol = ClipPolicy::hard_global(0.6);
             for method in ["reweight", "multiloss", "nonprivate"] {
                 let warm = b.load(&cfg, method).unwrap();
                 // reuse one arena across the warm runs: dirty arena in,
                 // same bits out
                 let mut out = StepOut::for_config(&cfg);
-                warm.run_into(&params, &stage, Some(0.6), &mut out).unwrap();
+                warm.run_into(&params, &stage, Some(&pol), &mut out).unwrap();
                 let first = out.clone();
-                warm.run_into(&params, &stage, Some(0.6), &mut out).unwrap();
+                warm.run_into(&params, &stage, Some(&pol), &mut out).unwrap();
                 let fresh = b.load(&cfg, method).unwrap();
-                let cold = fresh.run(&params, &stage, Some(0.6)).unwrap();
+                let cold = fresh.run(&params, &stage, Some(&pol)).unwrap();
                 assert_eq!(first.grads, out.grads, "{name}/{method}");
                 assert_eq!(first.grads, cold.grads, "{name}/{method}");
                 assert_eq!(first.norms(), cold.norms(), "{name}/{method}");
@@ -823,6 +1026,97 @@ mod tests {
                     cold.loss.to_bits(),
                     "{name}/{method}"
                 );
+            }
+        }
+    }
+
+    /// All five batched private methods agree under *grouped* and
+    /// *automatic* policies too: reweight, gram, direct, pallas and
+    /// multiloss compute the same nu-weighted gradient whichever way
+    /// nu is derived and applied — the cross-method equivalence that
+    /// pins the global case extends to every policy shape. Grouped
+    /// runs must also publish consistent per-group norms (whole-model
+    /// norm² = Σ_g group-norm²).
+    #[test]
+    fn batched_methods_agree_under_grouped_and_auto_policies() {
+        let b = NativeBackend::new();
+        for name in ["mlp2_mnist_b16", "cnn2_mnist_b16"] {
+            let cfg = b.manifest().config(name).unwrap().clone();
+            let ds = crate::data::load_dataset("mnist", 64, 11).unwrap();
+            let mut stage = BatchStage::for_config(&cfg);
+            let batch: Vec<usize> = (0..cfg.batch).collect();
+            crate::data::gather_batch_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            );
+            let params =
+                ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 7)))
+                    .unwrap();
+            for pol_s in [
+                "per_layer:0.5",
+                "groups(1):0.5",
+                "auto:0.5,g=0.01",
+                "per_layer:0.5,g=0.01",
+            ] {
+                let pol = ClipPolicy::parse(pol_s).unwrap();
+                let outs: Vec<StepOut> = [
+                    "reweight",
+                    "reweight_gram",
+                    "reweight_direct",
+                    "reweight_pallas",
+                    "multiloss",
+                ]
+                .iter()
+                .map(|m| {
+                    b.load(&cfg, m)
+                        .unwrap()
+                        .run(&params, &stage, Some(&pol))
+                        .unwrap()
+                })
+                .collect();
+                let reference = &outs[0];
+                for (k, o) in outs.iter().enumerate().skip(1) {
+                    for (a, c) in
+                        reference.grads.flat().iter().zip(o.grads.flat())
+                    {
+                        assert!(
+                            (a - c).abs() <= 1e-5 * a.abs().max(1.0),
+                            "{name}/{pol_s}/method{k}: {a} vs {c}"
+                        );
+                    }
+                    let rn = reference.norms().unwrap();
+                    let on = o.norms().unwrap();
+                    for (a, c) in rn.iter().zip(on) {
+                        assert!(
+                            (a - c).abs() <= 1e-4 * a.max(1.0),
+                            "{name}/{pol_s}/method{k} norms: {a} vs {c}"
+                        );
+                    }
+                }
+                // grouped policies publish group norms consistent with
+                // the whole-model norm; global ones publish none
+                let ng = pol.n_groups(cfg.params.len() / 2);
+                if ng > 1 {
+                    let (gn, got_ng) = reference.group_norms().unwrap();
+                    assert_eq!(got_ng, ng, "{name}/{pol_s}");
+                    let norms = reference.norms().unwrap();
+                    for (i, &w) in norms.iter().enumerate() {
+                        let sum: f32 = (0..ng)
+                            .map(|g| gn[g * cfg.batch + i].powi(2))
+                            .sum();
+                        assert!(
+                            (sum.sqrt() - w).abs() <= 1e-4 * w.max(1.0),
+                            "{name}/{pol_s}: sqrt({sum}) vs {w}"
+                        );
+                    }
+                } else {
+                    assert!(
+                        reference.group_norms().is_none(),
+                        "{name}/{pol_s}"
+                    );
+                }
             }
         }
     }
@@ -855,9 +1149,10 @@ mod tests {
             // one shared arena across every method of the config: the
             // reset contract isolates them
             let mut out = StepOut::for_config(&cfg);
+            let pol = ClipPolicy::hard_global(1.0);
             for method in cfg.artifacts.keys() {
                 let step = b.load(&cfg, method).unwrap();
-                step.run_into(&params, &stage, Some(1.0), &mut out)
+                step.run_into(&params, &stage, Some(&pol), &mut out)
                     .unwrap_or_else(|e| panic!("{name}/{method}: {e:#}"));
                 assert!(out.loss.is_finite(), "{name}/{method}");
             }

@@ -29,12 +29,27 @@
 //! lazily, but never per-call: after the first (cold) execution the
 //! warm path must not allocate (`tests/no_alloc.rs`).
 //!
-//! Outputs: norm methods write into caller slices (`out: &mut [f64]`,
-//! len = batch); `grads_from_deltas`/`materialize_grad_row` write into
-//! a caller `GradVec` arena via its per-parameter views. Gradient
+//! Outputs: norm methods write per-layer contributions into a caller
+//! **slab** (`out: &mut [f64]`, len = batch × `norm_slots().len()`,
+//! example-major) — the clipping *policy* performs the final reduction
+//! over slots (`reduce_norm_slab`), which is what lets a group-wise
+//! policy keep the per-layer structure the old per-example sum threw
+//! away. `grads_from_deltas`/`materialize_grad_row` write into a
+//! caller `GradVec` arena via its per-parameter views. Gradient
 //! assembly *accumulates* (`+=`) into `grads_from_deltas`'s target —
 //! the step zeroes the arena — while `materialize_grad_row`
 //! *overwrites* its target completely.
+//!
+//! # Slab contract (bitwise-compatibility load-bearing)
+//!
+//! `norm_slots()` declares the slab layout: slot s belongs to
+//! parametric layer `norm_slots()[s]`, slots ascend with the layer
+//! order, and each slot holds exactly one f64 **addend** of the
+//! legacy per-example norm sum (a route with fewer addends for a
+//! layer pads its extra slots with +0.0). Reducing a slab row in
+//! ascending slot order from +0.0 therefore replays the exact f64
+//! addition sequence of the pre-slab routes — the `global` policy is
+//! bitwise-identical to the pre-policy code by construction.
 //!
 //! The norm methods expose the paper's two routes plus the bound that
 //! separates them:
@@ -61,6 +76,56 @@ use crate::runtime::store::GradVec;
 use anyhow::{bail, Result};
 use std::any::Any;
 use std::collections::BTreeMap;
+
+/// A group-blocked nu matrix: per-group per-example clip factors plus
+/// the layer → group map, group-major (`nu[g*b + i]` is example i's
+/// factor in group g). `layer(l)` yields parametric layer l's len-b
+/// factor slice — for a global policy every layer maps to group 0 and
+/// the slice is the same one the pre-policy whole-batch code used, so
+/// the degenerate case is bitwise-identical.
+#[derive(Debug, Clone, Copy)]
+pub struct NuBlock<'a> {
+    /// group-major factors, len = n_groups · b
+    pub nu: &'a [f32],
+    /// group index of each parametric layer
+    pub groups: &'a [usize],
+    pub b: usize,
+}
+
+impl NuBlock<'_> {
+    /// Parametric layer l's per-example factors (len = b).
+    #[inline]
+    pub fn layer(&self, l: usize) -> &[f32] {
+        &self.nu[self.groups[l] * self.b..][..self.b]
+    }
+}
+
+/// Reduce a norm slab (b rows × `slot_layers.len()` slots,
+/// example-major) into group-major per-group squared norms
+/// (`gsq[g*b + i]`). Slots are added in ascending order starting from
+/// +0.0 per (group, example) accumulator — with one group this
+/// replays the legacy whole-model sum bit-for-bit (see the module
+/// docs' slab contract).
+pub fn reduce_norm_slab(
+    slab: &[f64],
+    b: usize,
+    slot_layers: &[usize],
+    layer_groups: &[usize],
+    n_groups: usize,
+    gsq: &mut [f64],
+) {
+    let s = slot_layers.len();
+    debug_assert_eq!(slab.len(), b * s);
+    debug_assert!(gsq.len() >= n_groups * b);
+    gsq[..n_groups * b].iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..b {
+        let row = &slab[i * s..(i + 1) * s];
+        for (slot, &v) in row.iter().enumerate() {
+            let g = layer_groups[slot_layers[slot]];
+            gsq[g * b + i] += v;
+        }
+    }
+}
 
 /// Type-erased whole-batch scratch for one `ModelFamily`. Concretely a
 /// family-private struct (`BatchScratch`, `ConvScratch`, ...); only
@@ -111,6 +176,13 @@ pub trait ModelFamily: Send + Sync {
     /// arena layout (`GradVec::ensure_layout`).
     fn grad_layout(&self) -> Vec<usize>;
 
+    /// The norm-slab layout: slot s of a slab row holds one f64 addend
+    /// of parametric layer `norm_slots()[s]`'s squared-norm
+    /// contribution (see the module docs' slab contract). Layer
+    /// indices are parametric (one per (W, b) pair — parameterless
+    /// layers such as avg-pool do not appear) and must ascend.
+    fn norm_slots(&self) -> Vec<usize>;
+
     /// Check the param store's tensor count and per-tensor lengths
     /// against the spec; `config` names the config in errors.
     fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()>;
@@ -139,30 +211,34 @@ pub trait ModelFamily: Send + Sync {
     );
 
     /// Exact per-example squared gradient norms — what every clipping
-    /// method uses. Writes into `out` (len = batch).
+    /// method uses. Writes per-layer contributions into the `out` slab
+    /// (len = batch × `norm_slots().len()`, example-major; see the
+    /// slab contract).
     fn sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]);
 
     /// Exact per-example squared norms through the Gram-matrix
-    /// structure (paper Sec 5.2). Writes into `out` (len = batch).
+    /// structure (paper Sec 5.2). Same slab output as `sq_norms`.
     fn gram_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]);
 
     /// The row-norm-product bound: equal to `sq_norms` on MLPs, an
-    /// upper bound (tap ≥ gram) under weight sharing.
-    /// Diagnostics/tests only — never used to clip.
+    /// upper bound (tap ≥ gram) under weight sharing. Same slab
+    /// output. Diagnostics/tests only — never used to clip.
     fn tap_bound_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]);
 
-    /// Scale example i's delta rows by nu_i in place (the
-    /// `reweight_direct` assembly).
-    fn scale_delta_rows(&self, nu: &[f32], s: &mut ScratchAny);
+    /// Scale the delta rows by the policy's clip factors in place (the
+    /// `reweight_direct` assembly): example i's rows of parametric
+    /// layer l scale by `nu.layer(l)[i]`.
+    fn scale_delta_rows(&self, nu: &NuBlock<'_>, s: &mut ScratchAny);
 
     /// Accumulate the batch-summed gradients from the current deltas
-    /// into the arena; `scale` fuses per-example clip factors into the
-    /// reductions (the `reweight_pallas` path).
+    /// into the arena; `scale` fuses the policy's clip factors into
+    /// the reductions (the `reweight_pallas` path), layer l using
+    /// `scale.layer(l)`.
     fn grads_from_deltas(
         &self,
         x: &[f32],
         s: &mut ScratchAny,
-        scale: Option<&[f32]>,
+        scale: Option<&NuBlock<'_>>,
         grads: &mut GradVec,
     );
 

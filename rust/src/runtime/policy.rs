@@ -1,0 +1,452 @@
+//! Clipping policies: *what* gets a per-example norm and *how* that
+//! norm becomes a scale factor nu (DESIGN.md §"Clipping policies").
+//!
+//! The paper's fast-clipping machinery computes one whole-model
+//! per-example norm and one scalar nu per example. Two follow-up lines
+//! generalize exactly those two axes, and `ClipPolicy` is their
+//! product:
+//!
+//!   - **granularity** (He et al. 2022, group-wise / per-layer
+//!     clipping): instead of one norm over the whole parameter vector,
+//!     the parametric layers are partitioned into G groups and each
+//!     group is clipped against the threshold independently. The
+//!     mechanism's L2 sensitivity becomes sqrt(Σ_g C_g²) = C·sqrt(G).
+//!   - **nu formula** (Bu et al. 2022, automatic clipping): the hard
+//!     factor min(1, C/norm) is replaced by C/(norm+gamma), which is
+//!     strictly inside the C-ball for every norm and removes the
+//!     clip-threshold tuning sensitivity.
+//!
+//! A policy is written `<granularity>:<clip>[,g=<gamma>]` — e.g.
+//! `global:1.0`, `per_layer:0.5`, `auto:1.0,g=0.01`,
+//! `groups(2,4):1.0`. `auto` is shorthand for the global granularity
+//! with the automatic formula; appending `,g=<gamma>` to any
+//! granularity selects the automatic formula there too. The canonical
+//! `Display` form round-trips through `parse` and is the policy's
+//! stable name (checkpoint meta, bench labels).
+//!
+//! The granularity grammar is driven by `ClipPolicy::kinds()` — the
+//! same registry renders the `--clip-policy` help text and the parse
+//! errors, so the documented list can never drift from the parser
+//! (the `ClipMethod::all()` pattern).
+
+use crate::runtime::store::clip_factor;
+use anyhow::{bail, ensure, Context, Result};
+use std::fmt;
+
+/// Which slices of the parameter vector get their own per-example
+/// norm (and their own nu). Group boundaries are *parametric-layer*
+/// indices (a layer = one (W, b) pair; parameterless layers such as
+/// avg-pool are not counted).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Granularity {
+    /// One norm over the whole parameter vector — the paper's setting.
+    Global,
+    /// Every parametric layer is its own group.
+    PerLayer,
+    /// Explicit group boundaries: strictly increasing layer indices;
+    /// boundary `b` starts a new group at layer `b`. `Groups(vec![2,4])`
+    /// on a 6-layer model yields groups {0,1}, {2,3}, {4,5}.
+    Groups(Vec<usize>),
+}
+
+/// How a per-example (per-group) norm becomes the scale factor nu.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NuFormula {
+    /// nu = min(1, clip/norm) — the classical Abadi et al. clip.
+    Hard { clip: f32 },
+    /// nu = clip/(norm + gamma) — automatic clipping (Bu et al. 2022):
+    /// nu·norm < clip for every norm ≥ 0, no hard threshold.
+    Automatic { clip: f32, gamma: f32 },
+}
+
+/// Default gamma for the automatic formula when `,g=` is omitted
+/// (the stability constant of Bu et al. 2022).
+pub const DEFAULT_GAMMA: f32 = 0.01;
+
+/// A complete clipping policy: granularity × nu formula. Replaces the
+/// bare `clip: f32` everywhere a step or trainer clips.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClipPolicy {
+    pub granularity: Granularity,
+    pub nu: NuFormula,
+}
+
+/// One entry of the policy-kind registry: (syntax, description).
+/// Drives `--clip-policy` help text and parse errors.
+pub struct PolicyKind {
+    pub syntax: &'static str,
+    pub describes: &'static str,
+}
+
+impl ClipPolicy {
+    /// The granularity registry — every syntax `parse` accepts, with
+    /// the one-line description the CLI help renders. Parse errors
+    /// list exactly these, so the documented grammar cannot drift.
+    pub fn kinds() -> &'static [PolicyKind] {
+        &[
+            PolicyKind {
+                syntax: "global:<clip>",
+                describes: "one whole-model norm per example (the paper)",
+            },
+            PolicyKind {
+                syntax: "per_layer:<clip>",
+                describes: "every parametric layer clipped independently",
+            },
+            PolicyKind {
+                syntax: "groups(<b1>,<b2>,...):<clip>",
+                describes: "custom layer groups split at the given boundaries",
+            },
+            PolicyKind {
+                syntax: "auto:<clip>[,g=<gamma>]",
+                describes: "automatic clipping, nu = clip/(norm+gamma)",
+            },
+        ]
+    }
+
+    /// One-line grammar summary for help text: every registered
+    /// syntax, `|`-joined, plus the gamma suffix rule.
+    pub fn help_grammar() -> String {
+        let kinds: Vec<&str> = Self::kinds().iter().map(|k| k.syntax).collect();
+        format!(
+            "{} (append ,g=<gamma> to any form for the automatic formula)",
+            kinds.join(" | ")
+        )
+    }
+
+    /// The classical policy: global granularity, hard clip at `clip`.
+    /// Exactly what the pre-policy code meant by a bare clip value.
+    pub fn hard_global(clip: f32) -> ClipPolicy {
+        ClipPolicy {
+            granularity: Granularity::Global,
+            nu: NuFormula::Hard { clip },
+        }
+    }
+
+    /// Parse `<granularity>:<clip>[,g=<gamma>]`. Errors list the
+    /// registered kinds.
+    pub fn parse(s: &str) -> Result<ClipPolicy> {
+        let grammar = || {
+            let kinds: Vec<&str> =
+                Self::kinds().iter().map(|k| k.syntax).collect();
+            format!("expected one of: {}", kinds.join(", "))
+        };
+        let (gran_s, rest) = s.split_once(':').with_context(|| {
+            format!("clip policy {s:?} has no `:<clip>` part — {}", grammar())
+        })?;
+        // rest = <clip>[,g=<gamma>]
+        let (clip_s, gamma_s) = match rest.split_once(',') {
+            Some((c, tail)) => {
+                let g = tail.strip_prefix("g=").with_context(|| {
+                    format!(
+                        "clip policy {s:?}: expected `,g=<gamma>` after the \
+                         clip value, got `,{tail}`"
+                    )
+                })?;
+                (c, Some(g))
+            }
+            None => (rest, None),
+        };
+        let clip: f32 = clip_s
+            .parse()
+            .with_context(|| format!("clip policy {s:?}: bad clip value {clip_s:?}"))?;
+        ensure!(
+            clip.is_finite() && clip > 0.0,
+            "clip policy {s:?}: clip must be finite and > 0, got {clip}"
+        );
+        let gamma: Option<f32> = match gamma_s {
+            Some(gs) => {
+                let g: f32 = gs.parse().with_context(|| {
+                    format!("clip policy {s:?}: bad gamma value {gs:?}")
+                })?;
+                ensure!(
+                    g.is_finite() && g > 0.0,
+                    "clip policy {s:?}: gamma must be finite and > 0, got {g}"
+                );
+                Some(g)
+            }
+            None => None,
+        };
+        // `auto` forces the automatic formula; everywhere else the
+        // formula is selected by the presence of `,g=`.
+        let (granularity, auto) = if gran_s == "global" {
+            (Granularity::Global, false)
+        } else if gran_s == "per_layer" {
+            (Granularity::PerLayer, false)
+        } else if gran_s == "auto" {
+            (Granularity::Global, true)
+        } else if let Some(inner) =
+            gran_s.strip_prefix("groups(").and_then(|t| t.strip_suffix(')'))
+        {
+            let mut bounds = Vec::new();
+            for tok in inner.split(',') {
+                let v: usize = tok.trim().parse().with_context(|| {
+                    format!(
+                        "clip policy {s:?}: bad group boundary {tok:?} \
+                         (want layer indices, e.g. groups(2,4))"
+                    )
+                })?;
+                bounds.push(v);
+            }
+            ensure!(
+                !bounds.is_empty(),
+                "clip policy {s:?}: groups(...) needs at least one boundary"
+            );
+            ensure!(
+                bounds.windows(2).all(|w| w[0] < w[1]) && bounds[0] > 0,
+                "clip policy {s:?}: group boundaries must be strictly \
+                 increasing layer indices starting above 0, got {bounds:?}"
+            );
+            (Granularity::Groups(bounds), false)
+        } else {
+            bail!(
+                "unknown clip-policy granularity {gran_s:?} in {s:?} — {}",
+                grammar()
+            );
+        };
+        let nu = if auto || gamma.is_some() {
+            NuFormula::Automatic { clip, gamma: gamma.unwrap_or(DEFAULT_GAMMA) }
+        } else {
+            NuFormula::Hard { clip }
+        };
+        Ok(ClipPolicy { granularity, nu })
+    }
+
+    /// The clip threshold C (per group for grouped granularities).
+    pub fn clip(&self) -> f32 {
+        match self.nu {
+            NuFormula::Hard { clip } => clip,
+            NuFormula::Automatic { clip, .. } => clip,
+        }
+    }
+
+    /// nu for one (per-example, per-group) norm.
+    #[inline]
+    pub fn nu_for(&self, norm: f32) -> f32 {
+        match self.nu {
+            NuFormula::Hard { clip } => clip_factor(norm, clip),
+            NuFormula::Automatic { clip, gamma } => clip / (norm + gamma),
+        }
+    }
+
+    pub fn is_global(&self) -> bool {
+        self.granularity == Granularity::Global
+    }
+
+    /// The exact policy the pre-policy scalar-clip code implemented —
+    /// the only one the PJRT artifacts understand.
+    pub fn is_global_hard(&self) -> bool {
+        self.is_global() && matches!(self.nu, NuFormula::Hard { .. })
+    }
+
+    /// Validate against a model with `n_layers` parametric layers.
+    pub fn check(&self, n_layers: usize) -> Result<()> {
+        ensure!(n_layers > 0, "clip policy on a model with no parameters");
+        if let Granularity::Groups(bounds) = &self.granularity {
+            for &b in bounds {
+                ensure!(
+                    b < n_layers,
+                    "clip policy {self}: group boundary {b} out of range — \
+                     the model has {n_layers} parametric layers \
+                     (boundaries must be in 1..{n_layers})"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of groups on a model with `n_layers` parametric layers.
+    pub fn n_groups(&self, n_layers: usize) -> usize {
+        match &self.granularity {
+            Granularity::Global => 1,
+            Granularity::PerLayer => n_layers,
+            Granularity::Groups(bounds) => bounds.len() + 1,
+        }
+    }
+
+    /// Fill `out[l]` with the group index of parametric layer `l`
+    /// (`out.len() == n_layers`; no allocation — the warm-path
+    /// contract).
+    pub fn fill_layer_groups(&self, out: &mut [usize]) {
+        match &self.granularity {
+            Granularity::Global => out.iter_mut().for_each(|g| *g = 0),
+            Granularity::PerLayer => {
+                out.iter_mut().enumerate().for_each(|(l, g)| *g = l)
+            }
+            Granularity::Groups(bounds) => {
+                for (l, g) in out.iter_mut().enumerate() {
+                    *g = bounds.iter().filter(|&&b| b <= l).count();
+                }
+            }
+        }
+    }
+
+    /// The mechanism's true L2 sensitivity on a model with `n_layers`
+    /// parametric layers: every group contributes a gradient of norm
+    /// at most C (hard: min(1,C/n)·n ≤ C; automatic: C·n/(n+γ) < C),
+    /// and the groups are orthogonal slices of the parameter vector,
+    /// so the whole clipped gradient has norm ≤ sqrt(Σ_g C²) =
+    /// C·sqrt(G). Global policies keep the paper's sensitivity C.
+    pub fn sensitivity(&self, n_layers: usize) -> f64 {
+        self.clip() as f64 * (self.n_groups(n_layers) as f64).sqrt()
+    }
+}
+
+impl fmt::Display for ClipPolicy {
+    /// Canonical form — round-trips through `parse` and is the
+    /// policy's stable name. `auto` is preferred over `global:…,g=…`
+    /// for the global-automatic combination.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let auto_global = self.is_global()
+            && matches!(self.nu, NuFormula::Automatic { .. });
+        match &self.granularity {
+            Granularity::Global if auto_global => write!(f, "auto")?,
+            Granularity::Global => write!(f, "global")?,
+            Granularity::PerLayer => write!(f, "per_layer")?,
+            Granularity::Groups(bounds) => {
+                write!(f, "groups(")?;
+                for (i, b) in bounds.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{b}")?;
+                }
+                write!(f, ")")?;
+            }
+        }
+        match self.nu {
+            NuFormula::Hard { clip } => write!(f, ":{clip}"),
+            NuFormula::Automatic { clip, gamma } => {
+                write!(f, ":{clip},g={gamma}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_every_registered_kind() {
+        let p = ClipPolicy::parse("global:1.0").unwrap();
+        assert!(p.is_global_hard());
+        assert_eq!(p.clip(), 1.0);
+
+        let p = ClipPolicy::parse("per_layer:0.5").unwrap();
+        assert_eq!(p.granularity, Granularity::PerLayer);
+        assert_eq!(p.nu, NuFormula::Hard { clip: 0.5 });
+
+        let p = ClipPolicy::parse("auto:1.0").unwrap();
+        assert!(p.is_global() && !p.is_global_hard());
+        assert_eq!(
+            p.nu,
+            NuFormula::Automatic { clip: 1.0, gamma: DEFAULT_GAMMA }
+        );
+
+        let p = ClipPolicy::parse("auto:1.0,g=0.25").unwrap();
+        assert_eq!(p.nu, NuFormula::Automatic { clip: 1.0, gamma: 0.25 });
+
+        let p = ClipPolicy::parse("groups(2,4):0.8").unwrap();
+        assert_eq!(p.granularity, Granularity::Groups(vec![2, 4]));
+
+        // gamma suffix switches any granularity to the automatic formula
+        let p = ClipPolicy::parse("per_layer:0.5,g=0.1").unwrap();
+        assert_eq!(p.granularity, Granularity::PerLayer);
+        assert_eq!(p.nu, NuFormula::Automatic { clip: 0.5, gamma: 0.1 });
+    }
+
+    /// parse ↔ print round-trip on the canonical forms (the satellite
+    /// contract: the printed form is the stable name).
+    #[test]
+    fn canonical_display_round_trips() {
+        for s in [
+            "global:1",
+            "global:0.5",
+            "per_layer:0.25",
+            "per_layer:0.5,g=0.1",
+            "auto:1,g=0.01",
+            "auto:2.5,g=0.001",
+            "groups(1):1",
+            "groups(2,4):0.75",
+            "groups(1,2,3):0.5,g=0.02",
+        ] {
+            let p = ClipPolicy::parse(s).unwrap();
+            assert_eq!(p.to_string(), s, "not canonical: {s}");
+            let p2 = ClipPolicy::parse(&p.to_string()).unwrap();
+            assert_eq!(p, p2, "round trip changed {s}");
+        }
+        // non-canonical spellings normalize to the canonical name
+        let p = ClipPolicy::parse("auto:1.0").unwrap();
+        assert_eq!(p.to_string(), "auto:1,g=0.01");
+        let p = ClipPolicy::parse("global:1.0,g=0.01").unwrap();
+        assert_eq!(p.to_string(), "auto:1,g=0.01");
+    }
+
+    /// Parse errors are generated from the registry — every registered
+    /// syntax appears in the unknown-granularity message.
+    #[test]
+    fn parse_errors_list_registered_kinds() {
+        let err = ClipPolicy::parse("bogus:1.0").unwrap_err();
+        let msg = format!("{err:#}");
+        for k in ClipPolicy::kinds() {
+            let head = k.syntax.split(':').next().unwrap();
+            assert!(msg.contains(head), "missing {head} in: {msg}");
+        }
+        assert!(ClipPolicy::parse("global").is_err()); // no clip
+        assert!(ClipPolicy::parse("global:0").is_err()); // clip <= 0
+        assert!(ClipPolicy::parse("global:nan").is_err());
+        assert!(ClipPolicy::parse("auto:1.0,g=0").is_err()); // gamma <= 0
+        assert!(ClipPolicy::parse("auto:1.0,x=2").is_err()); // not g=
+        assert!(ClipPolicy::parse("groups():1.0").is_err());
+        assert!(ClipPolicy::parse("groups(0):1.0").is_err()); // must be > 0
+        assert!(ClipPolicy::parse("groups(3,2):1.0").is_err()); // not increasing
+        assert!(ClipPolicy::parse("groups(2,2):1.0").is_err());
+        // help grammar mentions every kind
+        let help = ClipPolicy::help_grammar();
+        for k in ClipPolicy::kinds() {
+            let head = k.syntax.split(':').next().unwrap();
+            assert!(help.contains(head), "help missing {head}");
+        }
+    }
+
+    #[test]
+    fn groups_and_sensitivity() {
+        let n = 6usize;
+        let mut g = vec![0usize; n];
+
+        let p = ClipPolicy::parse("global:1.0").unwrap();
+        p.fill_layer_groups(&mut g);
+        assert_eq!(g, vec![0; 6]);
+        assert_eq!(p.n_groups(n), 1);
+        assert_eq!(p.sensitivity(n), 1.0);
+
+        let p = ClipPolicy::parse("per_layer:2.0").unwrap();
+        p.fill_layer_groups(&mut g);
+        assert_eq!(g, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(p.n_groups(n), 6);
+        assert!((p.sensitivity(n) - 2.0 * 6f64.sqrt()).abs() < 1e-12);
+
+        let p = ClipPolicy::parse("groups(2,4):1.5").unwrap();
+        p.fill_layer_groups(&mut g);
+        assert_eq!(g, vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(p.n_groups(n), 3);
+        assert!((p.sensitivity(n) - 1.5 * 3f64.sqrt()).abs() < 1e-12);
+        assert!(p.check(6).is_ok());
+        assert!(p.check(4).is_err()); // boundary 4 out of range
+        assert!(p.check(5).is_ok());
+    }
+
+    #[test]
+    fn nu_formulas() {
+        let hard = ClipPolicy::parse("global:1.0").unwrap();
+        assert_eq!(hard.nu_for(0.5), 1.0); // under the threshold
+        assert_eq!(hard.nu_for(2.0), 0.5); // clipped to C/norm
+        let auto = ClipPolicy::parse("auto:1.0,g=0.01").unwrap();
+        for norm in [0.0f32, 0.1, 1.0, 10.0, 1e6] {
+            let nu = auto.nu_for(norm);
+            assert!(nu * norm < 1.0, "auto nu·norm = {} >= C", nu * norm);
+        }
+        // norm = 0 stays finite (the gamma regularizer)
+        assert!(auto.nu_for(0.0).is_finite());
+    }
+}

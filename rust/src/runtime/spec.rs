@@ -56,7 +56,10 @@ pub enum ModelSpec {
     Mlp { depth: usize, width: usize },
     /// Conv net: one kxk/stride-s/pad-p conv per entry of `ch` (the
     /// out-channel progression), then one fc head onto the classes.
-    Cnn { k: usize, s: usize, pad: usize, ch: Vec<usize> },
+    /// `pool >= 2` inserts a parameterless `pool`x`pool` average pool
+    /// (window == stride) after every conv layer; 0 means none (1 is
+    /// normalized to 0 at parse time — a 1x1 mean is the identity).
+    Cnn { k: usize, s: usize, pad: usize, pool: usize, ch: Vec<usize> },
 }
 
 /// The default channel progression truncated/extended to `depth`.
@@ -118,6 +121,13 @@ impl ModelSpec {
                 let k = field_usize(&fields, "k", src)?.unwrap_or(3);
                 let s_ = field_usize(&fields, "s", src)?.unwrap_or(2);
                 let pad = field_usize(&fields, "pad", src)?.unwrap_or(1);
+                // a 1x1 mean pool is the identity — normalize to "none"
+                // so the canonical form (which omits pool=0) round-trips
+                let pool = match field_usize(&fields, "pool", src)?.unwrap_or(0)
+                {
+                    0 | 1 => 0,
+                    p => p,
+                };
                 ensure!(k >= 1, "model spec {src:?}: kernel must be >= 1");
                 ensure!(s_ >= 1, "model spec {src:?}: stride must be >= 1");
                 let depth = field_usize(&fields, "depth", src)?;
@@ -150,7 +160,7 @@ impl ModelSpec {
                     !ch.is_empty() && ch.iter().all(|&c| c >= 1),
                     "model spec {src:?}: channel counts must be >= 1"
                 );
-                Ok(ModelSpec::Cnn { k, s: s_, pad, ch })
+                Ok(ModelSpec::Cnn { k, s: s_, pad, pool, ch })
             }
             _ => unreachable!("family validated above"),
         }
@@ -182,12 +192,19 @@ impl fmt::Display for ModelSpec {
             ModelSpec::Mlp { depth, width } => {
                 write!(f, "mlp(depth={depth},width={width})")
             }
-            ModelSpec::Cnn { k, s, pad, ch } => {
+            ModelSpec::Cnn { k, s, pad, pool, ch } => {
                 let chs: Vec<String> =
                     ch.iter().map(|c| c.to_string()).collect();
+                // pool is printed only when active so pre-pool spec
+                // strings (and their bench/checkpoint keys) are stable
+                let pool_part = if *pool >= 2 {
+                    format!(",pool={pool}")
+                } else {
+                    String::new()
+                };
                 write!(
                     f,
-                    "cnn(depth={},k={k},s={s},pad={pad},ch={})",
+                    "cnn(depth={},k={k},s={s},pad={pad}{pool_part},ch={})",
                     ch.len(),
                     chs.join("-")
                 )
@@ -205,6 +222,7 @@ fn canon_key(family: &str, k: &str) -> Result<&'static str> {
         ("cnn", "k") | ("cnn", "kernel") => "k",
         ("cnn", "s") | ("cnn", "stride") => "s",
         ("cnn", "pad") | ("cnn", "p") => "pad",
+        ("cnn", "pool") => "pool",
         ("cnn", "ch") | ("cnn", "channels") => "ch",
         _ => bail!("unknown key {k:?} for a {family} spec"),
     })
@@ -424,7 +442,7 @@ impl ConfigBuilder {
                 }
                 (params, (depth - 1) * width + n_classes, None)
             }
-            ModelSpec::Cnn { k, s, pad, ch } => {
+            ModelSpec::Cnn { k, s, pad, pool, ch } => {
                 ensure!(
                     *k >= 1 && *s >= 1,
                     "config spec {key}: kernel and stride must be >= 1"
@@ -433,7 +451,17 @@ impl ConfigBuilder {
                     !ch.is_empty() && ch.iter().all(|&c| c >= 1),
                     "config spec {key}: channel counts must be >= 1"
                 );
-                let meta = ConvMeta { kernel: *k, stride: *s, pad: *pad };
+                ensure!(
+                    *pool != 1,
+                    "config spec {key}: pool=1 is the identity — use 0 \
+                     (ModelSpec::parse normalizes this)"
+                );
+                let meta = ConvMeta {
+                    kernel: *k,
+                    stride: *s,
+                    pad: *pad,
+                    pool: *pool,
+                };
                 let (mut cin, mut h, mut w) =
                     (img_shape[0], img_shape[1], img_shape[2]);
                 let mut params = Vec::with_capacity(ch.len() * 2 + 2);
@@ -472,6 +500,20 @@ impl ConfigBuilder {
                          {h}x{w} after conv layer {l}"
                     );
                     act_elems += h * w * cout;
+                    // a pool stage stores its own (smaller) map — it is
+                    // a chain layer with activations but no params
+                    if meta.pool >= 2 {
+                        ensure!(
+                            h >= meta.pool && w >= meta.pool,
+                            "config spec {key}: the {}x{} pool window does \
+                             not fit the {h}x{w} map after conv layer {l}",
+                            meta.pool,
+                            meta.pool
+                        );
+                        h /= meta.pool;
+                        w /= meta.pool;
+                        act_elems += h * w * cout;
+                    }
                     cin = cout;
                 }
                 let flat = cin * h * w;
@@ -543,6 +585,7 @@ mod tests {
             "mlp(depth=1,width=7)",
             "cnn(depth=2,k=3,s=1,pad=1,ch=8-16)",
             "cnn(depth=3,k=5,s=2,pad=2,ch=4-4-12)",
+            "cnn(depth=2,k=3,s=1,pad=1,pool=2,ch=8-16)",
         ] {
             let spec = ModelSpec::parse(src).unwrap();
             assert_eq!(spec.to_string(), src);
@@ -559,15 +602,26 @@ mod tests {
         let c = ModelSpec::parse(" cnn( stride=1 , kernel=3 ) ").unwrap();
         assert_eq!(
             c,
-            ModelSpec::Cnn { k: 3, s: 1, pad: 1, ch: vec![8, 16] }
+            ModelSpec::Cnn { k: 3, s: 1, pad: 1, pool: 0, ch: vec![8, 16] }
         );
         // depth alone pulls the default channel progression (and
         // extends it past the table by repeating the last entry)
         let d = ModelSpec::parse("cnn(depth=5,p=0)").unwrap();
         assert_eq!(
             d,
-            ModelSpec::Cnn { k: 3, s: 2, pad: 0, ch: vec![8, 16, 32, 32, 32] }
+            ModelSpec::Cnn {
+                k: 3,
+                s: 2,
+                pad: 0,
+                pool: 0,
+                ch: vec![8, 16, 32, 32, 32]
+            }
         );
+        // pool=1 is the identity and normalizes to "no pool", so the
+        // canonical form (which omits it) still round-trips
+        let p = ModelSpec::parse("cnn(pool=1)").unwrap();
+        assert!(matches!(p, ModelSpec::Cnn { pool: 0, .. }));
+        assert!(!p.to_string().contains("pool"));
         // redundant-but-consistent depth+ch is fine
         let e = ModelSpec::parse("cnn(depth=2,ch=8-16)").unwrap();
         assert_eq!(e.depth(), 2);
@@ -617,6 +671,7 @@ mod tests {
                     k: g.usize_incl(1..=7),
                     s: g.usize_incl(1..=3),
                     pad: g.usize_incl(0..=3),
+                    pool: if g.bool() { 0 } else { g.usize_incl(2..=4) },
                     ch: (0..depth).map(|_| g.usize_incl(1..=64)).collect(),
                 }
             };
@@ -703,9 +758,41 @@ mod tests {
         );
         assert_eq!(
             cfg.conv,
-            Some(ConvMeta { kernel: 3, stride: 1, pad: 1 })
+            Some(ConvMeta { kernel: 3, stride: 1, pad: 1, pool: 0 })
         );
         assert_eq!(cfg.batch, 48);
+    }
+
+    /// A pooled spec synthesizes pool stages into the spatial chain and
+    /// the activation budget: each pool is a parameterless chain layer
+    /// whose (smaller) output map is stored alongside the conv maps.
+    #[test]
+    fn builder_synthesizes_pooled_cnn() {
+        let key = "cnn(depth=1,k=3,s=1,pad=1,pool=2,ch=4)@mnist:b8";
+        let cfg = ConfigBuilder::from_key(SpecKey::parse(key).unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.name, key);
+        // conv keeps 28x28, pool halves it to 14x14, fc sees the
+        // pooled map
+        assert_eq!(cfg.params[0].shape, vec![4, 1, 3, 3]);
+        assert_eq!(cfg.params[2].shape, vec![14 * 14 * 4, 10]);
+        assert_eq!(
+            cfg.act_elems_per_example,
+            28 * 28 * 4 + 14 * 14 * 4 + 10
+        );
+        assert_eq!(
+            cfg.conv,
+            Some(ConvMeta { kernel: 3, stride: 1, pad: 1, pool: 2 })
+        );
+        // a pool window larger than the map is rejected
+        let err = ConfigBuilder::from_key(
+            SpecKey::parse("cnn(depth=1,k=3,s=2,pad=0,pool=16,ch=4)@mnist:b4")
+                .unwrap(),
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("pool window"), "{err:#}");
     }
 
     /// The batch-1 sibling is derived structurally: same shapes, batch
@@ -756,7 +843,7 @@ mod tests {
         assert!(format!("{err:#}").contains("imdb"));
         // kernel outgrows the shrinking map
         let err = ConfigBuilder::new(
-            ModelSpec::Cnn { k: 5, s: 2, pad: 0, ch: vec![4, 4, 4] },
+            ModelSpec::Cnn { k: 5, s: 2, pad: 0, pool: 0, ch: vec![4, 4, 4] },
             "mnist",
             4,
         )
@@ -767,7 +854,7 @@ mod tests {
         // still reject degenerate geometry (a release-mode s=0 would
         // otherwise divide by zero inside conv_out)
         let err = ConfigBuilder::new(
-            ModelSpec::Cnn { k: 3, s: 0, pad: 1, ch: vec![8] },
+            ModelSpec::Cnn { k: 3, s: 0, pad: 1, pool: 0, ch: vec![8] },
             "mnist",
             4,
         )
@@ -816,6 +903,7 @@ mod tests {
             "mlp(depth=1,width=32)@mnist:b4",
             "cnn(depth=2,k=3,s=1,pad=1,ch=8-16)@mnist:b48",
             "cnn(depth=3,k=5,s=2,pad=2,ch=4-8-8)@lsun32:b16",
+            "cnn(depth=2,k=3,s=1,pad=1,pool=2,ch=4-8)@mnist:b8",
         ] {
             let cfg = ConfigBuilder::from_key(SpecKey::parse(key).unwrap())
                 .build()

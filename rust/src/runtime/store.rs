@@ -151,6 +151,33 @@ impl GradVec {
             *a += s * b;
         }
     }
+
+    /// Squared L2 norm over the parameter range `lo..hi` (f64
+    /// accumulation, ascending element order). This is the per-group
+    /// norm of a materialized gradient — the bounds already delimit
+    /// the groups, so a group-wise clip policy is a sum over a bounds
+    /// window.
+    pub fn sq_norm_params(&self, lo: usize, hi: usize) -> f64 {
+        let range = self.bounds[lo]..self.bounds[hi];
+        self.flat[range]
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum()
+    }
+
+    /// `self[lo..hi] += s * other[lo..hi]` over a parameter range —
+    /// the group-wise counterpart of `add_scaled` (hard layout assert,
+    /// see `add`).
+    pub fn add_scaled_params(&mut self, other: &GradVec, lo: usize, hi: usize, s: f32) {
+        assert_eq!(self.bounds, other.bounds, "GradVec layout mismatch");
+        let range = self.bounds[lo]..self.bounds[hi];
+        for (a, &b) in self.flat[range.clone()]
+            .iter_mut()
+            .zip(&other.flat[range])
+        {
+            *a += s * b;
+        }
+    }
 }
 
 /// Caller-owned, reusable step output arena. A `StepFn::run_into`
@@ -174,6 +201,12 @@ pub struct StepOut {
     pub loss: f32,
     norms: Vec<f32>,
     has_norms: bool,
+    /// per-group per-example norms under a grouped clip policy,
+    /// group-major (group g, example i at `g*batch + i`); empty under
+    /// a global policy
+    group_norms: Vec<f32>,
+    /// number of groups in `group_norms` (0 = not produced)
+    n_groups: usize,
     /// correct-prediction count (fwd artifact only)
     pub correct: Option<u32>,
 }
@@ -193,6 +226,8 @@ impl StepOut {
             loss: 0.0,
             norms: Vec::with_capacity(cfg.batch),
             has_norms: false,
+            group_norms: Vec::new(),
+            n_groups: 0,
             correct: None,
         }
     }
@@ -207,6 +242,8 @@ impl StepOut {
         self.loss = 0.0;
         self.norms.clear();
         self.has_norms = false;
+        self.group_norms.clear();
+        self.n_groups = 0;
         self.correct = None;
     }
 
@@ -233,6 +270,26 @@ impl StepOut {
         self.norms.clear();
         self.norms.extend_from_slice(src);
         self.has_norms = true;
+    }
+
+    /// Per-group per-example norms and the group count, if this step
+    /// ran under a grouped clip policy. Group-major: group g's norms
+    /// are `view[g*b..(g+1)*b]` with `b = len/n_groups`.
+    pub fn group_norms(&self) -> Option<(&[f32], usize)> {
+        if self.n_groups > 0 {
+            Some((&self.group_norms, self.n_groups))
+        } else {
+            None
+        }
+    }
+
+    /// Copy `src` (group-major, `n_groups` blocks) in as this step's
+    /// per-group norms. Reuses capacity on the warm path.
+    pub fn set_group_norms(&mut self, src: &[f32], n_groups: usize) {
+        debug_assert!(n_groups > 0 && src.len() % n_groups == 0);
+        self.group_norms.clear();
+        self.group_norms.extend_from_slice(src);
+        self.n_groups = n_groups;
     }
 }
 
@@ -492,6 +549,24 @@ mod tests {
     }
 
     #[test]
+    fn grad_vec_param_range_ops() {
+        let a = GradVec::from_vecs(&[vec![3.0, 4.0], vec![2.0], vec![6.0]]);
+        // per-range squared norms partition the whole
+        assert_eq!(a.sq_norm_params(0, 1), 25.0);
+        assert_eq!(a.sq_norm_params(1, 3), 40.0);
+        assert_eq!(
+            a.sq_norm_params(0, 3),
+            a.flat().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        );
+        // range add_scaled touches only the window
+        let mut b = GradVec::with_layout(&[2, 1, 1]);
+        b.add_scaled_params(&a, 1, 3, 0.5);
+        assert_eq!(b.flat(), &[0.0, 0.0, 1.0, 3.0]);
+        b.add_scaled_params(&a, 0, 1, 2.0);
+        assert_eq!(b.flat(), &[6.0, 8.0, 1.0, 3.0]);
+    }
+
+    #[test]
     fn step_out_reset_and_norms() {
         let cfg = dummy_cfg();
         let mut out = StepOut::for_config(&cfg);
@@ -508,10 +583,15 @@ mod tests {
         assert_eq!(out.norms().unwrap()[0], 1.5);
         out.set_norms(&[0.5, 0.25]);
         assert_eq!(out.norms().unwrap(), &[0.5, 0.25]);
+        assert!(out.group_norms().is_none());
+        out.set_group_norms(&[1.0, 2.0, 3.0, 4.0], 2);
+        let (gn, g) = out.group_norms().unwrap();
+        assert_eq!((gn, g), (&[1.0f32, 2.0, 3.0, 4.0][..], 2));
         // reset clears everything a step could have written
         out.reset(&[6, 2]);
         assert_eq!(out.loss, 0.0);
         assert!(out.norms().is_none());
+        assert!(out.group_norms().is_none());
         assert!(out.correct.is_none());
         assert!(out.grads.flat().iter().all(|&v| v == 0.0));
         // an empty arena grows on first reset (one-shot callers)

@@ -6,6 +6,7 @@ use fastclip::data::{PoissonSampler, ShuffleBatcher};
 use fastclip::optim::{Adam, Optimizer, Sgd};
 use fastclip::privacy::{calibrate_sigma, epsilon_for, RdpAccountant};
 use fastclip::rng::{ChaCha20, Gaussian};
+use fastclip::runtime::ClipPolicy;
 use fastclip::testkit::prop;
 use std::collections::HashSet;
 
@@ -57,27 +58,142 @@ fn prop_poisson_batches_fixed_shape() {
     });
 }
 
-/// Clip factor nu = min(1, c/norm): the reweighted norm never exceeds
-/// c and direction is preserved (sign of every coordinate unchanged).
+/// Hard clip factor nu = min(1, c/norm), generalized per *group* (the
+/// policy seam's granularity axis): partitioning a vector into
+/// arbitrary contiguous groups and reweighting each by its own nu
+/// keeps every group's norm within c, leaves in-bounds groups
+/// untouched, preserves every sign, and bounds the whole reweighted
+/// vector by c·sqrt(G) — the grouped mechanism's L2 sensitivity, the
+/// value the trainer calibrates noise to. G = 1 is the classic
+/// whole-vector bound.
 #[test]
-fn prop_clip_factor_bounds() {
+fn prop_grouped_hard_clip_bounds() {
     prop::check(200, |g| {
-        let n = g.usize_in(1..64);
-        let v = g.f32_vec(n, -5.0, 5.0);
         let c = g.f64_in(0.01, 3.0) as f32;
-        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
-        let nu = if norm > c { c / norm } else { 1.0 };
-        let clipped: Vec<f32> = v.iter().map(|x| nu * x).collect();
-        let cnorm = clipped.iter().map(|x| x * x).sum::<f32>().sqrt();
-        if cnorm > c * 1.0001 && norm > c {
-            return Err(format!("clipped norm {cnorm} > c {c}"));
+        let pol = ClipPolicy::hard_global(c);
+        let ngroups = g.usize_in(1..5);
+        let sizes: Vec<usize> =
+            (0..ngroups).map(|_| g.usize_in(1..48)).collect();
+        let groups: Vec<Vec<f32>> =
+            sizes.iter().map(|&n| g.f32_vec(n, -5.0, 5.0)).collect();
+        let mut total_sq = 0f64;
+        for v in &groups {
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let nu = pol.nu_for(norm);
+            let clipped: Vec<f32> = v.iter().map(|x| nu * x).collect();
+            let cnorm = clipped.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if cnorm > c * 1.0001 {
+                return Err(format!("group clipped norm {cnorm} > c {c}"));
+            }
+            if norm <= c && (cnorm - norm).abs() > 1e-6 {
+                return Err("clip modified an in-bounds group".into());
+            }
+            for (a, b) in v.iter().zip(&clipped) {
+                if a.signum() != b.signum() && *a != 0.0 && *b != 0.0 {
+                    return Err("clip flipped a sign".into());
+                }
+            }
+            total_sq += (cnorm as f64).powi(2);
         }
-        if norm <= c && (cnorm - norm).abs() > 1e-6 {
-            return Err("clip modified an in-bounds vector".into());
+        let bound = c as f64 * (ngroups as f64).sqrt();
+        if total_sq.sqrt() > bound * 1.0001 {
+            return Err(format!(
+                "whole-vector norm {} > grouped sensitivity {bound}",
+                total_sq.sqrt()
+            ));
         }
-        for (a, b) in v.iter().zip(&clipped) {
-            if a.signum() != b.signum() && *a != 0.0 && *b != 0.0 {
-                return Err("clip flipped a sign".into());
+        Ok(())
+    });
+}
+
+/// Automatic clipping (Bu et al. 2022) nu = C/(norm+gamma): the
+/// reweighted norm stays *strictly* below C for every norm >= 0
+/// (including 0 — no division hazard), nu is monotone nonincreasing
+/// in the norm, and as gamma -> 0 the rule approaches the
+/// normalized-gradient limit nu·norm -> C.
+#[test]
+fn prop_automatic_nu_properties() {
+    prop::check(200, |g| {
+        let c = g.f64_in(0.01, 3.0) as f32;
+        let gamma = g.f64_in(1e-4, 0.5) as f32;
+        let pol = ClipPolicy::parse(&format!("auto:{c},g={gamma}"))
+            .map_err(|e| e.to_string())?;
+        let mut norms: Vec<f32> =
+            (0..32).map(|_| g.f64_in(0.0, 50.0) as f32).collect();
+        norms.push(0.0);
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev_nu = f32::INFINITY;
+        for &n in &norms {
+            let nu = pol.nu_for(n);
+            if !(nu > 0.0 && nu.is_finite()) {
+                return Err(format!("bad nu {nu} at norm {n}"));
+            }
+            if nu * n >= c {
+                return Err(format!(
+                    "auto-clipped norm {} not strictly below C {c} \
+                     (norm {n}, gamma {gamma})",
+                    nu * n
+                ));
+            }
+            if nu > prev_nu * 1.000001 {
+                return Err(format!("nu increased at norm {n}"));
+            }
+            prev_nu = nu;
+        }
+        // gamma -> 0: every example's contribution normalizes to C
+        let tiny = ClipPolicy::parse(&format!("auto:{c},g=0.0000001"))
+            .map_err(|e| e.to_string())?;
+        for &n in &norms {
+            if n < 0.01 {
+                continue;
+            }
+            let scaled = tiny.nu_for(n) * n;
+            if (scaled - c).abs() / c > 1e-4 {
+                return Err(format!(
+                    "gamma->0 limit broken: nu*norm {scaled} vs C {c} \
+                     at norm {n}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The policy grammar's parse <-> print contract: the canonical
+/// `Display` form of any parsed policy re-parses to an equal policy,
+/// and the help grammar names every registered kind (what `--help`
+/// and parse errors render).
+#[test]
+fn prop_policy_parse_print_roundtrip() {
+    prop::check(100, |g| {
+        let c = g.f64_in(0.01, 9.0) as f32;
+        let gamma = g.f64_in(1e-4, 1.0) as f32;
+        let b1 = g.usize_in(1..4);
+        let b2 = b1 + g.usize_in(1..4);
+        let spellings = [
+            format!("global:{c}"),
+            format!("per_layer:{c}"),
+            format!("auto:{c},g={gamma}"),
+            format!("per_layer:{c},g={gamma}"),
+            format!("groups({b1}):{c}"),
+            format!("groups({b1},{b2}):{c},g={gamma}"),
+        ];
+        for s in &spellings {
+            let p = ClipPolicy::parse(s).map_err(|e| e.to_string())?;
+            let printed = p.to_string();
+            let p2 = ClipPolicy::parse(&printed)
+                .map_err(|e| format!("canonical {printed:?}: {e}"))?;
+            if p != p2 {
+                return Err(format!(
+                    "{s:?} -> {printed:?} did not round-trip"
+                ));
+            }
+        }
+        let help = ClipPolicy::help_grammar();
+        for k in ClipPolicy::kinds() {
+            let head = k.syntax.split(':').next().unwrap();
+            if !help.contains(head) {
+                return Err(format!("help grammar omits {head:?}"));
             }
         }
         Ok(())

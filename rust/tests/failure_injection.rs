@@ -8,8 +8,8 @@
 
 use fastclip::coordinator::{train, ClipMethod, GradComputer, TrainOptions};
 use fastclip::runtime::{
-    Backend, BatchStage, ConfigSpec, Manifest, NativeBackend, ParamStore,
-    StepFn, StepOut,
+    Backend, BatchStage, ClipPolicy, ConfigSpec, Manifest, NativeBackend,
+    ParamStore, StepFn, StepOut,
 };
 use fastclip::util::json::Json;
 use std::path::Path;
@@ -186,7 +186,7 @@ impl StepFn for NoNormStep {
         &self,
         _params: &ParamStore,
         _stage: &BatchStage,
-        _clip: Option<f32>,
+        _policy: Option<&ClipPolicy>,
         out: &mut StepOut,
     ) -> anyhow::Result<()> {
         // gradients present, loss present... but no per-example norms
@@ -237,8 +237,9 @@ fn nxbp_missing_norm_is_an_error_not_unclipped() {
     let mut params = ParamStore::new(&cfg, None).unwrap();
     let stage = BatchStage::for_config(&cfg);
     let mut out = computer.new_out();
+    let pol = ClipPolicy::hard_global(1.0);
     let err = computer
-        .compute(&mut params, &stage, 1.0, &mut out)
+        .compute(&mut params, &stage, &pol, &mut out)
         .unwrap_err();
     let msg = format!("{err:#}");
     assert!(

@@ -18,8 +18,8 @@ use fastclip::data;
 #[allow(unused_imports)] // trait methods on Box<dyn ModelFamily>
 use fastclip::runtime::ModelFamily;
 use fastclip::runtime::{
-    init_params_glorot, Backend, BatchStage, GradVec, NativeBackend,
-    ParamStore,
+    init_params_glorot, Backend, BatchStage, ClipPolicy, GradVec,
+    NativeBackend, ParamStore,
 };
 use std::sync::OnceLock;
 
@@ -92,6 +92,24 @@ fn run_method_seeded(
     data_seed: u64,
     param_seed: u64,
 ) -> fastclip::runtime::StepOut {
+    run_policy_seeded(
+        backend,
+        config,
+        method,
+        &ClipPolicy::hard_global(clip),
+        data_seed,
+        param_seed,
+    )
+}
+
+fn run_policy_seeded(
+    backend: &dyn Backend,
+    config: &str,
+    method: ClipMethod,
+    policy: &ClipPolicy,
+    data_seed: u64,
+    param_seed: u64,
+) -> fastclip::runtime::StepOut {
     // resolve, not manifest lookup: config may be a spec key
     let cfg = backend.resolve(config).unwrap();
     let ds = data::load_dataset(&cfg.dataset, 256, data_seed).unwrap();
@@ -103,7 +121,7 @@ fn run_method_seeded(
             .unwrap();
     let mut computer = GradComputer::new(backend, config, method).unwrap();
     let mut out = computer.new_out();
-    computer.compute(&mut params, &stage, clip, &mut out).unwrap();
+    computer.compute(&mut params, &stage, policy, &mut out).unwrap();
     out
 }
 
@@ -236,6 +254,74 @@ fn off_grid_method_matrix_agrees() {
     }
 }
 
+/// The tentpole acceptance matrix: under grouped and automatic clip
+/// policies, every batched method agrees with the materialized nxBP
+/// per-group reference at 1e-5 — on both native families. The nxBP
+/// loop clips each param-group view of the materialized per-example
+/// gradient independently, so it is the oracle for *any* policy the
+/// seam can express; the batched methods must reproduce it through
+/// the B×L slab reduction and group-block nu scaling.
+#[test]
+fn grouped_and_automatic_policies_match_nxbp_oracle() {
+    let batched = [
+        ClipMethod::Reweight,
+        ClipMethod::ReweightGram,
+        ClipMethod::ReweightDirect,
+        ClipMethod::ReweightPallas,
+        ClipMethod::MultiLoss,
+    ];
+    for policy in ["per_layer:0.3", "auto:0.5,g=0.05", "groups(1):0.4"] {
+        let pol = ClipPolicy::parse(policy).unwrap();
+        for config in ["mlp4_mnist_b16", "cnn2_mnist_b16"] {
+            let nx = run_policy_seeded(
+                native(),
+                config,
+                ClipMethod::NxBp,
+                &pol,
+                7,
+                11,
+            );
+            for m in batched {
+                let o = run_policy_seeded(native(), config, m, &pol, 7, 11);
+                let diff = max_rel_diff(&nx.grads, &o.grads);
+                assert!(
+                    diff < 1e-5,
+                    "nxbp vs {} under {policy} on {config}: rel diff {diff}",
+                    m.name()
+                );
+                // grouped policies publish per-group norms on both
+                // routes (group-major G·b); they must agree too
+                match (nx.group_norms(), o.group_norms()) {
+                    (Some((a, ga)), Some((b, gb))) => {
+                        assert_eq!(
+                            ga,
+                            gb,
+                            "{} group count under {policy} on {config}",
+                            m.name()
+                        );
+                        for (x, y) in a.iter().zip(b) {
+                            assert!(
+                                (x - y).abs() / y.max(1e-3) < 1e-5,
+                                "{} group norm {x} vs {y} under {policy} \
+                                 on {config}",
+                                m.name()
+                            );
+                        }
+                    }
+                    (None, None) => {} // single-group policy
+                    (a, b) => panic!(
+                        "{} group-norm presence mismatch under {policy} on \
+                         {config}: oracle {:?} vs {:?}",
+                        m.name(),
+                        a.map(|(_, g)| g),
+                        b.map(|(_, g)| g)
+                    ),
+                }
+            }
+        }
+    }
+}
+
 /// Warm-vs-cold bitwise equivalence through the arena API, for all
 /// seven clip methods on both families: a computer whose step state
 /// and output arena are already warm (and dirty from a previous step)
@@ -253,18 +339,19 @@ fn warm_arena_matches_cold_for_all_seven_methods() {
         let mut params =
             ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 13)))
                 .unwrap();
+        let pol = ClipPolicy::hard_global(0.5);
         for method in ClipMethod::all() {
             let mut warm =
                 GradComputer::new(native(), config, method).unwrap();
             let mut out = warm.new_out();
             // first pass dirties the arena and every scratch buffer...
-            warm.compute(&mut params, &stage, 0.5, &mut out).unwrap();
+            warm.compute(&mut params, &stage, &pol, &mut out).unwrap();
             // ...second (warm) pass reuses all of it
-            warm.compute(&mut params, &stage, 0.5, &mut out).unwrap();
+            warm.compute(&mut params, &stage, &pol, &mut out).unwrap();
             let mut fresh =
                 GradComputer::new(native(), config, method).unwrap();
             let mut cold = fresh.new_out();
-            fresh.compute(&mut params, &stage, 0.5, &mut cold).unwrap();
+            fresh.compute(&mut params, &stage, &pol, &mut cold).unwrap();
             assert_eq!(
                 out.grads,
                 cold.grads,
@@ -785,6 +872,133 @@ fn resume_validates_steps_and_config() {
     budgeted.target_eps = Some(2.0);
     let err = train(native(), &budgeted).unwrap_err();
     assert!(format!("{err:#}").contains("target-eps"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The refactor's continuity claim at the trainer level: an explicit
+/// `global:C` policy is the same process as the classical `--clip C`
+/// path — identical losses (clipping AND the noise stream; the
+/// pre-policy path keeps the exact f64 clip as its sensitivity, and
+/// 0.5 round-trips through the policy's f32 threshold exactly).
+#[test]
+fn explicit_global_policy_trains_bitwise_like_default() {
+    let mk = |policy: Option<ClipPolicy>| TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 6,
+        dataset_n: 256,
+        clip: 0.5,
+        policy,
+        log_every: 0,
+        seed: 9,
+        ..Default::default()
+    };
+    let a = train(native(), &mk(None)).unwrap();
+    let b = train(
+        native(),
+        &mk(Some(ClipPolicy::parse("global:0.5").unwrap())),
+    )
+    .unwrap();
+    assert_eq!(a.losses, b.losses);
+    assert_eq!(a.policy, b.policy);
+    assert_eq!(a.sensitivity, b.sensitivity);
+}
+
+/// Grouped noise calibration: per-layer clipping on an L-layer model
+/// has L2 sensitivity C·sqrt(L) — neighboring datasets move each
+/// group's contribution by up to C on *disjoint* coordinates — and
+/// the trainer reports (and calibrates the Gaussian to) exactly that,
+/// plus per-group mean unclipped norms in the metrics.
+#[test]
+fn trainer_calibrates_grouped_sensitivity_and_reports_group_norms() {
+    let opts = TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps: 4,
+        dataset_n: 256,
+        policy: Some(ClipPolicy::parse("per_layer:0.5").unwrap()),
+        log_every: 0,
+        seed: 4,
+        ..Default::default()
+    };
+    let report = train(native(), &opts).unwrap();
+    assert_eq!(report.policy, "per_layer:0.5");
+    // mlp2 has 2 parametric (W, b) layers => G = 2
+    assert!((report.sensitivity - 0.5 * 2f64.sqrt()).abs() < 1e-12);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let means = report.metrics_json.get("group_norm_mean");
+    let arr = means.as_arr().unwrap();
+    assert_eq!(arr.len(), 2);
+    assert!(arr.iter().all(|m| m.as_f64().unwrap() > 0.0));
+}
+
+/// Resume guard for clip policies: a policy-recording checkpoint only
+/// continues under the identical canonical policy; a pre-policy
+/// checkpoint (no recorded policy) continues under the classical
+/// global hard clip — bare `--clip` or an explicit `global:C` — and
+/// refuses any other policy.
+#[test]
+fn resume_validates_clip_policy() {
+    let dir = std::env::temp_dir().join("fastclip_resume_policy");
+    std::fs::remove_dir_all(&dir).ok();
+    let mk = |steps: u64, policy: Option<ClipPolicy>| TrainOptions {
+        config: "mlp2_mnist_b32".into(),
+        method: ClipMethod::Reweight,
+        steps,
+        dataset_n: 256,
+        policy,
+        log_every: 0,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let per_layer = || ClipPolicy::parse("per_layer:0.5").unwrap();
+    train(native(), &mk(3, Some(per_layer()))).unwrap();
+    // a different policy is refused, naming the recorded one
+    let mut wrong = mk(6, Some(ClipPolicy::parse("per_layer:0.25").unwrap()));
+    wrong.checkpoint_dir = None;
+    wrong.resume = Some(dir.clone());
+    let err = train(native(), &wrong).unwrap_err();
+    assert!(format!("{err:#}").contains("per_layer:0.5"), "{err:#}");
+    // dropping down to the classical --clip path is also refused —
+    // the threshold structure and the noise scale would change
+    let mut dropped = mk(6, None);
+    dropped.checkpoint_dir = None;
+    dropped.resume = Some(dir.clone());
+    let err = train(native(), &dropped).unwrap_err();
+    assert!(format!("{err:#}").contains("per_layer:0.5"), "{err:#}");
+    // the identical policy continues (and re-records it)
+    let mut ok = mk(6, Some(per_layer()));
+    ok.resume = Some(dir.clone());
+    let report = train(native(), &ok).unwrap();
+    assert_eq!(report.steps, 6);
+
+    // pre-policy checkpoint compatibility: strip the recorded policy
+    // from the meta — what a checkpoint written before this refactor
+    // looks like — and check the compat arms against it
+    let cfg = native().manifest().config("mlp2_mnist_b32").unwrap();
+    let (mut meta, flat) =
+        fastclip::coordinator::checkpoint::load(&dir, cfg).unwrap();
+    meta.clip_policy = None;
+    meta.clip = 1.0; // the classical threshold those steps "ran" at
+    let ps = ParamStore::new(cfg, Some(&flat)).unwrap();
+    fastclip::coordinator::checkpoint::save(&dir, &meta, &ps).unwrap();
+    // a grouped policy cannot continue a pre-policy checkpoint
+    let mut grouped = mk(9, Some(per_layer()));
+    grouped.checkpoint_dir = None;
+    grouped.resume = Some(dir.clone());
+    let err = train(native(), &grouped).unwrap_err();
+    assert!(format!("{err:#}").contains("predates"), "{err:#}");
+    // ...but the bare --clip path does (the original continuity check)
+    let mut classical = mk(9, None);
+    classical.checkpoint_dir = None;
+    classical.resume = Some(dir.clone());
+    assert_eq!(train(native(), &classical).unwrap().steps, 9);
+    // ...and so does the explicit spelling of the same policy
+    let mut explicit =
+        mk(12, Some(ClipPolicy::parse("global:1.0").unwrap()));
+    explicit.checkpoint_dir = None;
+    explicit.resume = Some(dir.clone());
+    assert_eq!(train(native(), &explicit).unwrap().steps, 12);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -3,7 +3,10 @@
 //! one cold execution has sized every buffer — the caller's `StepOut`
 //! arena, the step's scratch, the lazily grown per-example working
 //! buffers, the rayon pool — a warm step performs **zero** heap
-//! allocations, for every batched method on both model families.
+//! allocations, for every batched method on both model families and
+//! for every clip-policy shape (global hard, per-layer, automatic):
+//! the policy seam's group bookkeeping (layer→group map, per-group
+//! norm slots) must be sized on the cold pass like everything else.
 //!
 //! The measurement uses the crate's counting global allocator
 //! (`util::alloc`), whose counter is process-wide. This file
@@ -15,8 +18,8 @@ use fastclip::data;
 #[allow(unused_imports)] // trait methods on Arc<dyn StepFn>
 use fastclip::runtime::StepFn;
 use fastclip::runtime::{
-    init_params_glorot, Backend, BatchStage, NativeBackend, ParamStore,
-    StepOut,
+    init_params_glorot, Backend, BatchStage, ClipPolicy, NativeBackend,
+    ParamStore, StepOut,
 };
 use fastclip::util::alloc::allocation_count;
 
@@ -45,6 +48,11 @@ fn warm_step_path_performs_zero_heap_allocations() {
         // one arena reused across every method of the config — exactly
         // how the trainer holds it
         let mut out = StepOut::for_config(&cfg);
+        let policies = [
+            ClipPolicy::parse("global:0.5").unwrap(),
+            ClipPolicy::parse("per_layer:0.5").unwrap(),
+            ClipPolicy::parse("auto:0.5,g=0.01").unwrap(),
+        ];
         for method in [
             "nonprivate",
             "reweight",
@@ -55,32 +63,45 @@ fn warm_step_path_performs_zero_heap_allocations() {
             "fwd",
         ] {
             let step = backend.load(&cfg, method).unwrap();
-            // Execute inside the rayon pool: launching a parallel
-            // region from an *external* thread goes through the pool's
-            // injector queue, which may allocate queue blocks — pool
-            // plumbing, not step state. One scope hoists the whole
-            // warm+measure sequence into a worker, where nested
-            // parallel regions use the allocation-free fast path.
-            let mut delta = u64::MAX;
-            rayon::scope(|_| {
-                // warm up: cold passes size the scratch, the lazy
-                // per-example buffers, and the arena
-                for _ in 0..3 {
-                    step.run_into(&params, &stage, Some(0.5), &mut out)
-                        .unwrap();
+            for policy in &policies {
+                // nonprivate/fwd ignore the policy; probing them once
+                // (under the first one) keeps the matrix cheap
+                if matches!(method, "nonprivate" | "fwd")
+                    && !policy.is_global_hard()
+                {
+                    continue;
                 }
-                let before = allocation_count();
-                for _ in 0..5 {
-                    step.run_into(&params, &stage, Some(0.5), &mut out)
-                        .unwrap();
-                }
-                delta = allocation_count() - before;
-            });
-            assert_eq!(
-                delta, 0,
-                "{config}/{method}: {delta} heap allocations across 5 warm \
-                 steps — the StepOut arena contract is broken"
-            );
+                let pol = Some(policy);
+                // Execute inside the rayon pool: launching a parallel
+                // region from an *external* thread goes through the
+                // pool's injector queue, which may allocate queue
+                // blocks — pool plumbing, not step state. One scope
+                // hoists the whole warm+measure sequence into a
+                // worker, where nested parallel regions use the
+                // allocation-free fast path.
+                let mut delta = u64::MAX;
+                rayon::scope(|_| {
+                    // warm up: cold passes size the scratch, the lazy
+                    // per-example buffers, the group bookkeeping, and
+                    // the arena
+                    for _ in 0..3 {
+                        step.run_into(&params, &stage, pol, &mut out)
+                            .unwrap();
+                    }
+                    let before = allocation_count();
+                    for _ in 0..5 {
+                        step.run_into(&params, &stage, pol, &mut out)
+                            .unwrap();
+                    }
+                    delta = allocation_count() - before;
+                });
+                assert_eq!(
+                    delta, 0,
+                    "{config}/{method} under {policy}: {delta} heap \
+                     allocations across 5 warm steps — the StepOut arena \
+                     contract is broken"
+                );
+            }
         }
     }
 }
