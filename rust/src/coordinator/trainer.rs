@@ -491,6 +491,14 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
                 opts.seed,
                 step,
             );
+            // poisoning guard (debug/test profile only): the noised
+            // gradient is the last value before the optimizer — a
+            // NaN/Inf here must fail at the source, not as a drifted
+            // loss many steps later
+            crate::runtime::store::debug_assert_finite(
+                out.grads.flat(),
+                "trainer noise path (post add_noise_parallel)",
+            );
             accountant.step(q, sigma);
             t.stop(&mut metrics, Phase::Noise);
         }

@@ -66,6 +66,12 @@ impl Gaussian {
 /// boundaries are fixed and rayon only hands out disjoint chunks.
 pub fn add_noise_parallel(grads: &mut [f32], sigma: f64, seed: u64, step: u64) {
     use rayon::prelude::*;
+    // a NaN/Inf sigma would poison every gradient element in one call;
+    // negative sigma means the caller's noise-multiplier math is wrong
+    debug_assert!(
+        sigma.is_finite() && sigma >= 0.0,
+        "add_noise_parallel: bad sigma {sigma}"
+    );
     if sigma == 0.0 {
         return;
     }

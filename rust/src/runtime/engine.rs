@@ -14,8 +14,11 @@ use super::manifest::{ArtifactSpec, ConfigSpec, Manifest};
 use super::policy::ClipPolicy;
 use super::store::{BatchStage, ParamStore, StepOut};
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+// lint: allow-file(no-wallclock-entropy) -- Instant measures compile
+// latency only (`compile_ms` telemetry in StepExe); wall time never
+// feeds step math, artifact selection, or anything replayed.
 use std::time::Instant;
 
 /// A compiled step executable plus its output layout.
@@ -39,18 +42,27 @@ pub struct StepExe {
 pub struct Engine {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<StepExe>>>,
+    /// BTreeMap, not HashMap: anything that iterates or logs the cache
+    /// must see one fixed order — hash order varies per process.
+    cache: Mutex<BTreeMap<String, Arc<StepExe>>>,
 }
 
-// SAFETY: the xla crate wraps raw PJRT pointers without Send/Sync
-// markers, but the PJRT C API contract makes clients and loaded
-// executables thread-safe (execution is internally synchronized;
-// executables are immutable after compilation). The only shared
-// mutable state on our side is the compile cache, which is
-// mutex-guarded.
+// The xla crate wraps raw PJRT pointers without Send/Sync markers, but
+// the PJRT C API contract makes clients and loaded executables
+// thread-safe: execution is internally synchronized and executables
+// are immutable after compilation.
+
+// SAFETY: PJRT loaded executables are immutable after compilation and
+// internally synchronized; `lit_cache` is mutex-guarded.
 unsafe impl Send for StepExe {}
+// SAFETY: concurrent `execute` calls on one executable are legal per
+// the PJRT C API; shared mutable state (`lit_cache`) is mutex-guarded.
 unsafe impl Sync for StepExe {}
+// SAFETY: the PJRT CPU client is thread-safe per the C API contract;
+// `manifest` is immutable and `cache` is mutex-guarded.
 unsafe impl Send for Engine {}
+// SAFETY: same as Send — every &Engine operation either reads
+// immutable state or goes through the `cache` mutex.
 unsafe impl Sync for Engine {}
 
 impl Engine {
@@ -61,7 +73,7 @@ impl Engine {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Engine { client, manifest, cache: Mutex::new(BTreeMap::new()) })
     }
 
     pub fn from_dir(dir: &std::path::Path) -> Result<Engine> {

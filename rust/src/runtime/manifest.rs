@@ -326,4 +326,34 @@ mod tests {
         let j = Json::parse(r#"{"configs": {}}"#).unwrap();
         assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
     }
+
+    /// Regression for the no-hash-container rule's motivation: config
+    /// (and artifact) iteration order must be a pure function of the
+    /// key set — independent of the order the manifest text lists them
+    /// in, stable across loads.
+    #[test]
+    fn config_iteration_order_is_stable() {
+        fn cfg(name: &str) -> String {
+            format!(
+                r#""{name}": {{
+                    "model": "mlp", "dataset": "mnist", "batch": 1,
+                    "n_classes": 10,
+                    "input": {{"shape": [1,1,28,28], "dtype": "f32"}},
+                    "params": [], "artifacts": {{}}
+                }}"#
+            )
+        }
+        let (a, b, c) = (cfg("zz_last"), cfg("aa_first"), cfg("mm_mid"));
+        let fwd = format!(r#"{{"configs": {{{a}, {b}, {c}}}}}"#);
+        let rev = format!(r#"{{"configs": {{{c}, {b}, {a}}}}}"#);
+        let order = |text: &str| -> Vec<String> {
+            let m =
+                Manifest::from_json(Path::new("/tmp"), &Json::parse(text).unwrap()).unwrap();
+            m.configs.keys().cloned().collect()
+        };
+        let o1 = order(&fwd);
+        assert_eq!(o1, vec!["aa_first", "mm_mid", "zz_last"], "sorted by key");
+        assert_eq!(o1, order(&rev), "insertion order must not leak through");
+        assert_eq!(o1, order(&fwd), "repeat load, identical order");
+    }
 }

@@ -29,6 +29,9 @@ use std::path::PathBuf;
 
 /// Default artifacts directory: $FASTCLIP_ARTIFACTS or ./artifacts.
 pub fn artifacts_dir() -> PathBuf {
+    // lint: allow(no-wallclock-entropy) -- startup config resolution
+    // (where to find artifacts), not a hot-path value; resolved once
+    // before any step runs.
     std::env::var("FASTCLIP_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))

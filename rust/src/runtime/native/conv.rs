@@ -574,6 +574,11 @@ pub fn forward_batch(
                     for oy in 0..h_out {
                         for ox in 0..w_out {
                             for ch in 0..c {
+                                // lint: allow(f32-accum) -- k*k pool
+                                // window summed in fixed (ky, kx)
+                                // ascending order; tiny (k<=3) and the
+                                // same order on every path, so bitwise
+                                // reproducible.
                                 let mut sum = 0.0f32;
                                 for ky in 0..k {
                                     for kx in 0..k {

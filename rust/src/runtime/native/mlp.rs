@@ -262,6 +262,10 @@ pub fn backward(
         for (k, dk) in d_here.iter_mut().enumerate() {
             if s.zs[l][k] > 0.0 {
                 let row = &w_next[k * dout_next..(k + 1) * dout_next];
+                // lint: allow(f32-accum) -- single-row dot in fixed
+                // ascending index order (the zip walks 0..dout_next),
+                // identical order on every path, so it is bitwise
+                // reproducible; dout_next is small (a layer width).
                 let mut acc = 0.0f32;
                 for (&wv, &dv) in row.iter().zip(d_next.iter()) {
                     acc += wv * dv;

@@ -429,6 +429,32 @@ mod tests {
         assert_eq!(fam.grad_layout(), vec![784 * 10, 10]);
     }
 
+    /// Regression for the no-hash-container rule's motivation: family
+    /// resolution order must be a pure function of the registered name
+    /// set — whatever order registration happened in.
+    #[test]
+    fn registry_iteration_order_is_stable() {
+        fn stub(cfg: &ConfigSpec) -> Result<Box<dyn ModelFamily>> {
+            let mut mlp_cfg = cfg.clone();
+            mlp_cfg.model = "mlp".into();
+            mlp_cfg.input_shape = vec![cfg.batch, 784];
+            Ok(Box::new(super::super::mlp::MlpSpec::from_config(&mlp_cfg)?))
+        }
+        let names = ["zeta", "alpha", "mu", "beta"];
+        let mut fwd = FamilyRegistry::empty();
+        for n in names {
+            fwd.register(n, stub);
+        }
+        let mut rev = FamilyRegistry::empty();
+        for n in names.iter().rev() {
+            rev.register(n, stub);
+        }
+        assert_eq!(fwd.names(), vec!["alpha", "beta", "mu", "zeta"]);
+        assert_eq!(fwd.names(), rev.names(), "registration order must not leak");
+        // builtin() is likewise sorted, not registration-ordered
+        assert_eq!(FamilyRegistry::builtin().names(), vec!["cnn", "mlp"]);
+    }
+
     #[test]
     fn softmax_rows_match_uniform_at_zero_logits() {
         let b = 3;

@@ -222,10 +222,18 @@ impl ClipPolicy {
     /// nu for one (per-example, per-group) norm.
     #[inline]
     pub fn nu_for(&self, norm: f32) -> f32 {
-        match self.nu {
+        let nu = match self.nu {
             NuFormula::Hard { clip } => clip_factor(norm, clip),
             NuFormula::Automatic { clip, gamma } => clip / (norm + gamma),
-        }
+        };
+        // poisoning guard: a NaN norm (or gamma=0 with norm=0) would
+        // otherwise propagate a non-finite nu into every element of
+        // this example's clipped gradient
+        debug_assert!(
+            nu.is_finite() && nu > 0.0,
+            "ClipPolicy::nu_for: non-finite or non-positive nu {nu} (norm {norm}, {self})"
+        );
+        nu
     }
 
     pub fn is_global(&self) -> bool {

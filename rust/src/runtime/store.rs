@@ -138,6 +138,7 @@ impl GradVec {
     /// hard-errors on elsewhere.
     pub fn add(&mut self, other: &GradVec) {
         assert_eq!(self.bounds, other.bounds, "GradVec layout mismatch");
+        debug_assert_finite(&other.flat, "GradVec::add rhs");
         for (a, &b) in self.flat.iter_mut().zip(&other.flat) {
             *a += b;
         }
@@ -147,6 +148,8 @@ impl GradVec {
     /// assert — see `add`).
     pub fn add_scaled(&mut self, other: &GradVec, s: f32) {
         assert_eq!(self.bounds, other.bounds, "GradVec layout mismatch");
+        debug_assert!(s.is_finite(), "GradVec::add_scaled: non-finite scale {s}");
+        debug_assert_finite(&other.flat, "GradVec::add_scaled rhs");
         for (a, &b) in self.flat.iter_mut().zip(&other.flat) {
             *a += s * b;
         }
@@ -170,7 +173,12 @@ impl GradVec {
     /// see `add`).
     pub fn add_scaled_params(&mut self, other: &GradVec, lo: usize, hi: usize, s: f32) {
         assert_eq!(self.bounds, other.bounds, "GradVec layout mismatch");
+        debug_assert!(
+            s.is_finite(),
+            "GradVec::add_scaled_params: non-finite scale {s}"
+        );
         let range = self.bounds[lo]..self.bounds[hi];
+        debug_assert_finite(&other.flat[range.clone()], "GradVec::add_scaled_params rhs");
         for (a, &b) in self.flat[range.clone()]
             .iter_mut()
             .zip(&other.flat[range])
@@ -298,10 +306,31 @@ impl StepOut {
 /// kernels, the multiloss materialization, the nxbp loop) must share:
 /// the DP sensitivity bound is exactly `norm * nu <= clip`.
 pub fn clip_factor(norm: f32, clip: f32) -> f32 {
-    if norm > clip {
-        clip / norm
-    } else {
-        1.0
+    debug_assert!(
+        norm.is_finite() && norm >= 0.0,
+        "clip_factor: bad per-example norm {norm}"
+    );
+    debug_assert!(
+        clip.is_finite() && clip > 0.0,
+        "clip_factor: bad clip bound {clip}"
+    );
+    let nu = if norm > clip { clip / norm } else { 1.0 };
+    // the DP invariant itself: norm * nu <= clip, i.e. nu in (0, 1]
+    debug_assert!(nu > 0.0 && nu <= 1.0, "clip_factor: nu {nu} outside (0, 1]");
+    nu
+}
+
+/// Debug-profile poisoning guard: assert every element is finite.
+/// Compiled out of release builds; in the test profile a NaN/Inf
+/// gradient fails *at the source* instead of surfacing steps later as
+/// a silently drifted loss.
+#[inline]
+pub(crate) fn debug_assert_finite(xs: &[f32], what: &str) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    if let Some((i, v)) = xs.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+        panic!("{what}: non-finite value {v} at flat index {i}");
     }
 }
 

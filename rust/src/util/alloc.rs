@@ -34,21 +34,31 @@ pub struct CountingAllocator;
 // addition is a relaxed counter increment, which cannot affect
 // allocator correctness.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: forwards `layout` unchanged to `System::alloc`, which
+    // upholds the GlobalAlloc contract for any layout the caller was
+    // required to make valid.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: forwards `layout` unchanged to `System::alloc_zeroed`;
+    // no bytes are touched here, so the zeroing guarantee is System's.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: `ptr`/`layout`/`new_size` pass through untouched; the
+    // caller's obligations (ptr from this allocator, layout matches,
+    // new_size nonzero) are exactly System's preconditions.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: pure pass-through; the caller guarantees `ptr` came from
+    // this allocator with `layout`, which is System's precondition.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
@@ -75,6 +85,44 @@ pub fn allocation_count() -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Drives every `CountingAllocator` method directly through raw
+    /// `Layout` calls — independent of the `#[global_allocator]`
+    /// installation, so the crate's only native `unsafe` is reachable
+    /// under `cargo miri test --no-default-features` (the sanitizer
+    /// lane runs with `alloc-count` off).
+    #[test]
+    fn counting_allocator_roundtrip_raw() {
+        let a = CountingAllocator;
+        let layout = Layout::from_size_align(64, 8).expect("valid layout");
+        let before = allocation_count();
+        // SAFETY: `layout` has nonzero size; every pointer below is
+        // used only while live, written within its allocated size, and
+        // freed exactly once with the layout it was (re)allocated as.
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            std::ptr::write_bytes(p, 0xAB, 64);
+            assert_eq!(*p, 0xAB);
+
+            let grown = a.realloc(p, layout, 128);
+            assert!(!grown.is_null());
+            // the prefix survives realloc
+            assert_eq!(*grown, 0xAB);
+            let grown_layout = Layout::from_size_align(128, 8).expect("valid layout");
+            a.dealloc(grown, grown_layout);
+
+            let z = a.alloc_zeroed(layout);
+            assert!(!z.is_null());
+            assert_eq!(*z, 0);
+            assert_eq!(*z.add(63), 0);
+            a.dealloc(z, layout);
+        }
+        assert!(
+            allocation_count() - before >= 3,
+            "alloc + realloc + alloc_zeroed must each bump the counter"
+        );
+    }
 
     #[cfg(feature = "alloc-count")]
     #[test]

@@ -1,0 +1,284 @@
+//! fastclip-lint: machine-checks for the repo's two prose contracts —
+//! the bitwise-determinism contract (`rust/src/runtime/native/gemm.rs`
+//! module docs) and the DP-flow invariant (per-example gradients reach
+//! the optimizer only through the clip/noise pipeline). See DESIGN.md
+//! §"Machine-checked invariants" for the rule list and the etiquette
+//! for allow-list annotations.
+//!
+//! Suppression grammar (checked, not free-form):
+//!
+//! ```text
+//! // lint: allow(<rule-id>) -- <reason>         (next code line)
+//! // lint: allow-file(<rule-id>) -- <reason>    (whole file)
+//! ```
+//!
+//! An allow without a reason, naming an unknown rule, or suppressing
+//! nothing is itself a finding (rule `lint-allow`), so the allow-list
+//! can only shrink to what is genuinely explained and genuinely used.
+
+pub mod rules;
+pub mod source;
+
+use source::SourceFile;
+use std::path::{Path, PathBuf};
+
+/// One lint hit. `line` is 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Rule id of the engine's own allow-hygiene findings.
+pub const LINT_ALLOW: &str = "lint-allow";
+
+#[derive(Debug)]
+struct Allow {
+    rule: String,
+    /// line the annotation comment sits on (for reporting)
+    decl_line: usize,
+    /// code line the allow applies to (`None` = whole file)
+    target_line: Option<usize>,
+    has_reason: bool,
+    used: bool,
+}
+
+/// Lint one file's text under a given (possibly virtual) path. The
+/// path drives the rules' directory scoping, so fixtures can exercise
+/// path-scoped rules from anywhere on disk.
+pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
+    let f = SourceFile::parse(path, text);
+    let mut raw: Vec<Finding> = Vec::new();
+    for rule in rules::all() {
+        rule.check(&f, &mut raw);
+    }
+    // one finding per (rule, line): several tokens of the same rule on
+    // one line are one problem, and one allow covers them
+    raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    raw.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+
+    let mut allows = parse_allows(&f);
+    let mut out: Vec<Finding> = Vec::new();
+    'finding: for fi in raw {
+        for al in allows.iter_mut() {
+            if al.rule != fi.rule {
+                continue;
+            }
+            let hits = match al.target_line {
+                None => true,
+                Some(t) => t == fi.line,
+            };
+            if hits {
+                al.used = true;
+                continue 'finding;
+            }
+        }
+        out.push(fi);
+    }
+
+    // allow-list hygiene: every annotation must name a real rule,
+    // carry a reason, and suppress something
+    let known: Vec<&'static str> = rules::all()
+        .iter()
+        .map(|r| r.id())
+        .chain(std::iter::once(LINT_ALLOW))
+        .collect();
+    for al in &allows {
+        if !known.contains(&al.rule.as_str()) {
+            out.push(Finding {
+                path: f.path.clone(),
+                line: al.decl_line,
+                rule: LINT_ALLOW,
+                message: format!(
+                    "allow names unknown rule {:?} (known: {})",
+                    al.rule,
+                    known.join(", ")
+                ),
+            });
+            continue;
+        }
+        if !al.has_reason {
+            out.push(Finding {
+                path: f.path.clone(),
+                line: al.decl_line,
+                rule: LINT_ALLOW,
+                message: format!(
+                    "allow({}) has no reason — write `// lint: allow({}) -- <why this is sound>`",
+                    al.rule, al.rule
+                ),
+            });
+        }
+        if !al.used {
+            out.push(Finding {
+                path: f.path.clone(),
+                line: al.decl_line,
+                rule: LINT_ALLOW,
+                message: format!(
+                    "allow({}) suppresses nothing here — remove the stale annotation",
+                    al.rule
+                ),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Extract `lint: allow(...)` / `lint: allow-file(...)` annotations.
+fn parse_allows(f: &SourceFile) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for c in &f.comments {
+        let t = c.text.trim();
+        let (body, file_scope) = if let Some(rest) = t.strip_prefix("lint: allow-file(") {
+            (rest, true)
+        } else if let Some(rest) = t.strip_prefix("lint: allow(") {
+            (rest, false)
+        } else {
+            continue;
+        };
+        let (rule, tail) = match body.split_once(')') {
+            Some(x) => x,
+            None => ("", body),
+        };
+        let has_reason = tail
+            .trim_start()
+            .strip_prefix("--")
+            .map(|r| !r.trim().is_empty())
+            .unwrap_or(false);
+        let target_line = if file_scope {
+            None
+        } else {
+            // the next line carrying code; a trailing comment applies
+            // to its own line
+            let own = c.line;
+            if f.code_on_line.get(own - 1).copied().unwrap_or(false) {
+                Some(own)
+            } else {
+                let mut l = own + 1;
+                while l <= f.code_on_line.len()
+                    && !f.code_on_line[l - 1]
+                {
+                    l += 1;
+                }
+                Some(l)
+            }
+        };
+        out.push(Allow {
+            rule: rule.trim().to_string(),
+            decl_line: c.line,
+            target_line,
+            has_reason,
+            used: false,
+        });
+    }
+    out
+}
+
+/// Lint a file on disk. The path is used as-is for scoping.
+pub fn lint_file(path: &Path) -> std::io::Result<Vec<Finding>> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(lint_source(&path.to_string_lossy(), &text))
+}
+
+/// Recursively collect `.rs` files under each path (files pass
+/// through), sorted so output order is stable across platforms.
+pub fn collect_rs_files(paths: &[PathBuf]) -> std::io::Result<Vec<PathBuf>> {
+    fn walk(p: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        if p.is_file() {
+            if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(p.to_path_buf());
+            }
+            return Ok(());
+        }
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(p)?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<std::io::Result<_>>()?;
+        entries.sort();
+        for e in entries {
+            let name = e.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            walk(&e, out)?;
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for p in paths {
+        walk(p, &mut out)?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `paths`; returns (findings, files seen).
+pub fn run_paths(paths: &[PathBuf]) -> std::io::Result<(Vec<Finding>, usize)> {
+    let files = collect_rs_files(paths)?;
+    let mut findings = Vec::new();
+    for file in &files {
+        findings.extend(lint_file(file)?);
+    }
+    Ok((findings, files.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_with_reason_suppresses_next_line() {
+        let src = "\
+// lint: allow(no-hash-container) -- pinned iteration below
+use std::collections::HashMap;
+";
+        let f = lint_source("rust/src/runtime/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let src = "\
+// lint: allow(no-hash-container)
+use std::collections::HashMap;
+";
+        let f = lint_source("rust/src/runtime/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, LINT_ALLOW);
+        assert!(f[0].message.contains("no reason"));
+    }
+
+    #[test]
+    fn unused_allow_is_a_finding() {
+        let src = "// lint: allow(no-hash-container) -- nothing here uses one\nfn f() {}\n";
+        let f = lint_source("rust/src/runtime/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("suppresses nothing"));
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_a_finding() {
+        let src = "// lint: allow(no-such-rule) -- why not\nfn f() {}\n";
+        let f = lint_source("rust/src/runtime/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn file_allow_covers_every_hit() {
+        let src = "\
+// lint: allow-file(no-wallclock-entropy) -- compile telemetry only
+use std::time::Instant;
+fn t() -> std::time::Instant { Instant::now() }
+";
+        let f = lint_source("rust/src/runtime/engine.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

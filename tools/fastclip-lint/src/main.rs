@@ -1,0 +1,60 @@
+//! CLI driver: `fastclip-lint <path>...` lints every `.rs` file under
+//! the given paths and exits nonzero on findings. `--list-rules`
+//! prints the registry. CI runs `cargo run -p fastclip-lint -- rust/src`
+//! as a required job.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        usage();
+        return ExitCode::SUCCESS;
+    }
+    if args.iter().any(|a| a == "--list-rules") {
+        for rule in fastclip_lint::rules::all() {
+            println!("{:<22} {}", rule.id(), rule.describe());
+        }
+        println!(
+            "{:<22} {}",
+            fastclip_lint::LINT_ALLOW,
+            "allow-list hygiene: every `lint: allow` must name a real rule, carry a reason, and suppress something"
+        );
+        return ExitCode::SUCCESS;
+    }
+    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
+    if paths.is_empty() {
+        usage();
+        return ExitCode::from(2);
+    }
+    match fastclip_lint::run_paths(&paths) {
+        Ok((findings, n_files)) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            let n_rules = fastclip_lint::rules::all().len() + 1; // + lint-allow
+            if findings.is_empty() {
+                println!("fastclip-lint: {n_files} files clean ({n_rules} rules active)");
+                ExitCode::SUCCESS
+            } else {
+                println!(
+                    "fastclip-lint: {} finding(s) in {n_files} files ({n_rules} rules active)",
+                    findings.len()
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("fastclip-lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: fastclip-lint <path>...   lint every .rs file under the paths\n\
+         \x20      fastclip-lint --list-rules"
+    );
+}

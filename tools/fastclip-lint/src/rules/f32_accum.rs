@@ -1,0 +1,168 @@
+//! `f32-accum`: float reductions in `runtime/native/` must go through
+//! the contract's helpers — fixed ascending-order loops or the
+//! `sgemm_tn_f64acc` f64 accumulators in `gemm.rs`. A bare
+//! `.sum::<f32>()` or an ad-hoc `let mut acc = 0.0f32; … acc += …`
+//! loop re-introduces order- and width-dependent rounding, which is
+//! exactly what makes per-example norms drift between code paths.
+
+use super::{push, Rule};
+use crate::source::SourceFile;
+use crate::Finding;
+
+pub struct F32Accum;
+
+pub const ID: &str = "f32-accum";
+/// The module that *implements* the approved accumulation helpers.
+const APPROVED_FILE: &str = "gemm.rs";
+
+impl Rule for F32Accum {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "float accumulation in runtime/native/ must use the ascending-order / f64-accumulator helpers (no bare .sum::<f32>() or f32 += loops)"
+    }
+
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        if !f.has_component("native") || f.file_name() == APPROVED_FILE {
+            return;
+        }
+        for off in f.find_word("sum::<f32>") {
+            let line = f.line_of(off);
+            if f.in_test(line) {
+                continue;
+            }
+            push(
+                out,
+                f,
+                line,
+                ID,
+                "bare `.sum::<f32>()` — reduction order/width is unspecified; use \
+                 the ascending-order or f64-accumulator helpers in gemm.rs"
+                    .to_string(),
+            );
+        }
+        scan_scalar_accumulators(f, out);
+    }
+}
+
+/// Flag `let mut <id> = 0.0f32`-style declarations whose `<id> += …`
+/// happens in a *nested* block (a reduction loop). Same-depth `+=` is
+/// fine — that's a running update, not an order-sensitive reduction.
+fn scan_scalar_accumulators(f: &SourceFile, out: &mut Vec<Finding>) {
+    let n_lines = f.line_starts.len();
+    for l in 1..=n_lines {
+        if f.in_test(l) {
+            continue;
+        }
+        let lc = f.code_line(l);
+        let ident = match f32_zero_decl(lc) {
+            Some(id) => id,
+            None => continue,
+        };
+        let decl_depth = f.depth_at_line[l - 1];
+        let mut m = l + 1;
+        while m <= n_lines && f.depth_at_line[m - 1] >= decl_depth {
+            let mc = f.code_line(m);
+            if let Some(plus_line_depth) = add_assign_depth(mc, &ident, f.depth_at_line[m - 1]) {
+                if plus_line_depth > decl_depth && !f.in_test(m) {
+                    push(
+                        out,
+                        f,
+                        l,
+                        ID,
+                        format!(
+                            "f32 accumulator `{ident}` (declared here, `+=` in a \
+                             nested loop at line {m}) — accumulate in f64 or use \
+                             the fixed ascending-order helpers in gemm.rs"
+                        ),
+                    );
+                    break;
+                }
+            }
+            m += 1;
+        }
+    }
+}
+
+/// If `line` declares a zero-initialized f32 (`let mut acc = 0.0f32;`
+/// or `let mut acc: f32 = 0.0;`), return the identifier.
+fn f32_zero_decl(line: &str) -> Option<String> {
+    let at = line.find("let mut ")?;
+    let rest = &line[at + "let mut ".len()..];
+    let ident: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if ident.is_empty() {
+        return None;
+    }
+    let tail = &rest[ident.len()..];
+    if tail.contains("f32") && tail.contains("= 0") {
+        Some(ident)
+    } else {
+        None
+    }
+}
+
+/// If `line` contains `<ident> += …`, return the brace depth at the
+/// `+=` (line-start depth adjusted for braces earlier on the line).
+fn add_assign_depth(line: &str, ident: &str, line_start_depth: usize) -> Option<usize> {
+    for at in crate::source::find_word_in(line, ident) {
+        let after = line[at + ident.len()..].trim_start();
+        if after.starts_with("+=") {
+            let mut depth = line_start_depth;
+            for ch in line[..at].chars() {
+                match ch {
+                    '{' => depth += 1,
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            return Some(depth);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint_source;
+
+    #[test]
+    fn flags_sum_f32_and_nested_accumulator() {
+        let src = "\
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let quick: f32 = a.iter().sum::<f32>();
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc + quick
+}
+";
+        let f = lint_source("rust/src/runtime/native/mlp.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == super::ID));
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[1].line, 3); // reported at the declaration
+    }
+
+    #[test]
+    fn f64_accumulator_and_same_depth_update_pass() {
+        let src = "\
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += (a[i] * b[i]) as f64;
+    }
+    let mut running = 0.0f32;
+    running += acc as f32;
+    running
+}
+";
+        let f = lint_source("rust/src/runtime/native/mlp.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -1,0 +1,105 @@
+//! `gradvec-seam`: the DP proof needs every per-example gradient to
+//! reach the optimizer through the clip/noise pipeline. The lexical
+//! enforcement: `GradVec`'s mutating entry points may only be called
+//! from the approved module set (the store itself, the engine, the
+//! native kernels that fill taps, and the coordinator's method/
+//! trainer pipeline). A new family that calls `.flat_mut()` from
+//! somewhere else is routing gradients around the `ClipPolicy` seam.
+//!
+//! Deliberately *not* matched: `.add(`, `.zero(`, `.scale(` — those
+//! names are too generic to attribute to `GradVec` lexically; the
+//! distinctive mutators below are the ones a bypass would need.
+
+use super::{push, Rule};
+use crate::source::SourceFile;
+use crate::Finding;
+
+pub struct GradVecSeam;
+
+pub const ID: &str = "gradvec-seam";
+const MUTATORS: &[&str] = &[
+    "flat_mut",
+    "param_mut",
+    "add_scaled",
+    "add_scaled_params",
+    "norms_fill",
+    "set_norms",
+    "set_group_norms",
+];
+
+/// The approved module set. Kept in one place so DESIGN.md and the
+/// finding message can cite it verbatim.
+pub fn approved(f: &SourceFile) -> bool {
+    if f.has_component("native") {
+        return true;
+    }
+    let name = f.file_name();
+    (f.has_component("runtime") && (name == "store.rs" || name == "engine.rs"))
+        || (f.has_component("coordinator") && (name == "methods.rs" || name == "trainer.rs"))
+}
+
+impl Rule for GradVecSeam {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "GradVec mutators (flat_mut/param_mut/add_scaled*/norms_fill/set_*norms) callable only from the approved clip/noise pipeline modules"
+    }
+
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        if approved(f) {
+            return;
+        }
+        let bytes = f.code.as_bytes();
+        for tok in MUTATORS {
+            for off in f.find_word(tok) {
+                // only method-call syntax: `.tok(`
+                if off == 0 || bytes[off - 1] != b'.' {
+                    continue;
+                }
+                if !f.code[off + tok.len()..].trim_start().starts_with('(') {
+                    continue;
+                }
+                let line = f.line_of(off);
+                if f.in_test(line) {
+                    continue;
+                }
+                push(
+                    out,
+                    f,
+                    line,
+                    ID,
+                    format!(
+                        "`.{tok}(…)` outside the approved GradVec pipeline modules \
+                         (runtime/store.rs, runtime/engine.rs, runtime/native/*, \
+                         coordinator/methods.rs, coordinator/trainer.rs) — \
+                         gradients must flow through the ClipPolicy seam"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint_source;
+
+    #[test]
+    fn flags_flat_mut_outside_pipeline() {
+        let src = "fn leak(g: &mut GradVec) {\n    g.flat_mut()[0] = 1.0;\n}\n";
+        let f = lint_source("rust/src/optim/adam.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, super::ID);
+    }
+
+    #[test]
+    fn approved_modules_and_non_method_uses_pass() {
+        let src = "fn ok(g: &mut GradVec) {\n    g.add_scaled(&other, 0.5);\n}\n";
+        assert!(lint_source("rust/src/coordinator/trainer.rs", src).is_empty());
+        // a free fn of the same name is not a GradVec method call
+        let free = "fn f() {\n    let x = param_mut(0);\n    let _ = x;\n}\n";
+        assert!(lint_source("rust/src/optim/adam.rs", free).is_empty());
+    }
+}

@@ -1,0 +1,77 @@
+//! `no-hash-container`: determinism-scoped modules must not use
+//! `HashMap`/`HashSet`. Their iteration order is randomized per
+//! process (SipHash keys), so any artifact, manifest, or dispatch
+//! order derived from one silently varies across runs — exactly the
+//! class of drift the bitwise-determinism contract forbids.
+
+use super::{push, Rule};
+use crate::source::SourceFile;
+use crate::Finding;
+
+pub struct HashContainer;
+
+pub const ID: &str = "no-hash-container";
+const SCOPES: &[&str] = &["runtime", "coordinator", "privacy"];
+const TOKENS: &[&str] = &["HashMap", "HashSet"];
+
+impl Rule for HashContainer {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "no HashMap/HashSet in runtime/, coordinator/, privacy/ (nondeterministic iteration order) — use BTreeMap/BTreeSet"
+    }
+
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        let scope = match SCOPES.iter().find(|d| f.has_component(d)) {
+            Some(s) => *s,
+            None => return,
+        };
+        for tok in TOKENS {
+            for off in f.find_word(tok) {
+                let line = f.line_of(off);
+                if f.in_test(line) {
+                    continue;
+                }
+                push(
+                    out,
+                    f,
+                    line,
+                    ID,
+                    format!(
+                        "`{tok}` in a determinism-scoped module ({scope}/): iteration \
+                         order is randomized per process — use BTreeMap/BTreeSet or \
+                         pin the order explicitly"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint_source;
+
+    #[test]
+    fn flags_hashmap_in_runtime() {
+        let f = lint_source(
+            "rust/src/runtime/engine.rs",
+            "use std::collections::HashMap;\n",
+        );
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, super::ID);
+    }
+
+    #[test]
+    fn ignores_out_of_scope_and_test_code() {
+        let outside = lint_source("rust/src/data/batcher.rs", "use std::collections::HashMap;\n");
+        assert!(outside.is_empty());
+        let in_test = lint_source(
+            "rust/src/runtime/engine.rs",
+            "#[cfg(test)]\nmod tests {\n    use std::collections::HashSet;\n}\n",
+        );
+        assert!(in_test.is_empty(), "{in_test:?}");
+    }
+}

@@ -1,0 +1,59 @@
+//! The rule registry. Every rule is a lexical/structural check over a
+//! [`SourceFile`](crate::source::SourceFile); path scoping (which
+//! directories a rule patrols) lives inside each rule so fixtures can
+//! exercise it with virtual paths.
+//!
+//! Adding a rule: write a unit struct implementing [`Rule`] in a new
+//! submodule, register it in [`all`], and add `bad.rs` / `good.rs`
+//! fixtures under `tests/fixtures/<rule-id>/`. The meta-test in
+//! `tests/ui.rs` will then hold the real tree to it.
+
+mod f32_accum;
+mod gradvec_seam;
+mod hash_container;
+mod rayon_disjoint;
+mod unsafe_comment;
+mod wallclock_entropy;
+
+use crate::source::SourceFile;
+use crate::Finding;
+
+/// A single named check.
+pub trait Rule: Sync {
+    /// Stable id used in findings and `lint: allow(...)` annotations.
+    fn id(&self) -> &'static str;
+    /// One-line description for `--list-rules` and docs.
+    fn describe(&self) -> &'static str;
+    /// Append findings for `f`. Suppression is the engine's job —
+    /// rules report everything they see.
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>);
+}
+
+/// All registered rules, in reporting order.
+pub fn all() -> &'static [&'static dyn Rule] {
+    static RULES: [&'static dyn Rule; 6] = [
+        &hash_container::HashContainer,
+        &wallclock_entropy::WallclockEntropy,
+        &rayon_disjoint::RayonDisjointMut,
+        &f32_accum::F32Accum,
+        &unsafe_comment::UndocumentedUnsafe,
+        &gradvec_seam::GradVecSeam,
+    ];
+    &RULES
+}
+
+/// Shared helper: record a finding at a 1-based line.
+pub(crate) fn push(
+    out: &mut Vec<Finding>,
+    f: &SourceFile,
+    line: usize,
+    rule: &'static str,
+    message: String,
+) {
+    out.push(Finding {
+        path: f.path.clone(),
+        line,
+        rule,
+        message,
+    });
+}

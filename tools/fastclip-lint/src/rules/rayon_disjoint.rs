@@ -1,0 +1,86 @@
+//! `rayon-disjoint-mut`: the determinism contract allows parallel
+//! mutation only through *disjoint views* — `par_chunks_mut`,
+//! `par_iter_mut`, or the gemm/conv helpers that split output rows
+//! into non-overlapping blocks. A `for_each` driven by
+//! `into_par_iter`/`par_bridge` over indices invites shared-`&mut`
+//! index arithmetic where writes can overlap (UB) or race on order.
+
+use super::{push, Rule};
+use crate::source::SourceFile;
+use crate::Finding;
+
+pub struct RayonDisjointMut;
+
+pub const ID: &str = "rayon-disjoint-mut";
+const SCOPES: &[&str] = &["runtime", "rng", "coordinator", "privacy"];
+/// Modules implementing the blocked-disjoint pattern itself; their
+/// index arithmetic is the approved primitive others must call.
+const APPROVED_FILES: &[&str] = &["gemm.rs", "conv.rs"];
+const BAD_SOURCES: &[&str] = &["into_par_iter", "par_bridge"];
+
+impl Rule for RayonDisjointMut {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "rayon mutation only via disjoint views (par_chunks_mut/par_iter_mut) outside the approved gemm/conv helpers"
+    }
+
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        if !SCOPES.iter().any(|d| f.has_component(d)) {
+            return;
+        }
+        if f.has_component("native") && APPROVED_FILES.contains(&f.file_name()) {
+            return;
+        }
+        for off in f.find_word("for_each") {
+            let line = f.line_of(off);
+            if f.in_test(line) {
+                continue;
+            }
+            // the iterator chain feeding this for_each: scan back to
+            // the start of the statement in the code view
+            let stmt_start = f.code[..off].rfind(';').map(|p| p + 1).unwrap_or(0);
+            let chain = &f.code[stmt_start..off];
+            for src in BAD_SOURCES {
+                if chain.contains(src) {
+                    push(
+                        out,
+                        f,
+                        line,
+                        ID,
+                        format!(
+                            "`{src}` feeding a `for_each` — parallel mutation must \
+                             go through disjoint views (`par_chunks_mut`, \
+                             `par_iter_mut`) or the approved gemm/conv row-block \
+                             helpers, so writes cannot overlap"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint_source;
+
+    #[test]
+    fn flags_into_par_iter_for_each() {
+        let src = "fn f(out: &mut [f32]) {\n    (0..4).into_par_iter().for_each(|i| {\n        let p = out.as_mut_ptr();\n    });\n}\n";
+        let f = lint_source("rust/src/runtime/native/relu.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, super::ID);
+    }
+
+    #[test]
+    fn par_chunks_mut_passes_and_gemm_is_approved() {
+        let good = "fn f(out: &mut [f32]) {\n    out.par_chunks_mut(16).for_each(|c| c.fill(0.0));\n}\n";
+        assert!(lint_source("rust/src/rng/gaussian.rs", good).is_empty());
+        let bad_but_approved =
+            "fn f() {\n    (0..4).into_par_iter().for_each(|_i| {});\n}\n";
+        assert!(lint_source("rust/src/runtime/native/gemm.rs", bad_but_approved).is_empty());
+    }
+}

@@ -1,0 +1,120 @@
+//! `undocumented-unsafe`: every `unsafe` token (block, fn, impl)
+//! needs a contiguous `// SAFETY:` comment immediately above it (or
+//! on the same line). This is the lexical twin of clippy's
+//! `undocumented_unsafe_blocks`, extended to `unsafe impl` and
+//! `unsafe fn`, and it runs inside `#[cfg(test)]` code too — test
+//! unsafe is still unsafe.
+
+use super::{push, Rule};
+use crate::source::SourceFile;
+use crate::Finding;
+
+pub struct UndocumentedUnsafe;
+
+pub const ID: &str = "undocumented-unsafe";
+
+impl Rule for UndocumentedUnsafe {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "every unsafe block/fn/impl needs a contiguous // SAFETY: comment immediately above"
+    }
+
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        let n_lines = f.line_starts.len();
+        // lines carrying a comment that contains "SAFETY:"
+        let mut safety = vec![false; n_lines];
+        for c in &f.comments {
+            if !c.text.contains("SAFETY:") {
+                continue;
+            }
+            let extra = c.text.matches('\n').count();
+            for k in 0..=extra {
+                let l = c.line - 1 + k;
+                if l < n_lines {
+                    safety[l] = true;
+                }
+            }
+        }
+        for off in f.find_word("unsafe") {
+            let line = f.line_of(off);
+            if safety[line - 1] {
+                continue; // same-line (trailing) SAFETY comment
+            }
+            // walk the contiguous run of comment-only lines above
+            let mut l = line - 1;
+            let mut documented = false;
+            while l >= 1 && f.comment_on_line[l - 1] && !f.code_on_line[l - 1] {
+                if safety[l - 1] {
+                    documented = true;
+                    break;
+                }
+                l -= 1;
+            }
+            if !documented {
+                push(
+                    out,
+                    f,
+                    line,
+                    ID,
+                    "`unsafe` without a contiguous `// SAFETY:` comment immediately \
+                     above — state the invariant that makes this sound"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint_source;
+
+    #[test]
+    fn flags_bare_unsafe_block() {
+        let src = "fn f(p: *mut f32) {\n    unsafe { *p = 0.0; }\n}\n";
+        let f = lint_source("rust/src/util/alloc.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, super::ID);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_above_or_trailing_passes() {
+        let above = "\
+fn f(p: *mut f32) {
+    // SAFETY: caller guarantees p is valid and exclusive
+    unsafe { *p = 0.0; }
+}
+";
+        assert!(lint_source("rust/src/util/alloc.rs", above).is_empty());
+        let multi = "\
+// SAFETY: the registry is append-only, so the pointer
+// outlives every reader.
+unsafe impl Send for X {}
+";
+        assert!(lint_source("rust/src/runtime/engine.rs", multi).is_empty());
+    }
+
+    #[test]
+    fn code_between_comment_and_unsafe_breaks_contiguity() {
+        let src = "\
+fn f(p: *mut f32) {
+    // SAFETY: stale comment
+    let x = 1;
+    unsafe { *p = x as f32; }
+}
+";
+        let f = lint_source("rust/src/util/alloc.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn applies_inside_test_modules_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(p: *mut f32) {\n        unsafe { *p = 0.0; }\n    }\n}\n";
+        let f = lint_source("rust/src/util/alloc.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+}

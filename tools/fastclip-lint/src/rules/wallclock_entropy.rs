@@ -1,0 +1,82 @@
+//! `no-wallclock-entropy`: `runtime/` is the replayable core — given
+//! the same inputs and seed it must produce bit-identical steps. Wall
+//! clocks, ambient RNGs, and environment variables are hidden inputs
+//! that break replay (and make DP accounting unauditable), so they
+//! may not appear there without an explicit allow.
+
+use super::{push, Rule};
+use crate::source::SourceFile;
+use crate::Finding;
+
+pub struct WallclockEntropy;
+
+pub const ID: &str = "no-wallclock-entropy";
+const TOKENS: &[&str] = &[
+    "std::time",
+    "SystemTime",
+    "Instant",
+    "thread_rng",
+    "rand::random",
+    "std::env",
+    "env::var",
+    "env::vars",
+];
+
+impl Rule for WallclockEntropy {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "no std::time / thread_rng / env reads in runtime/ — hidden inputs break replayable, seeded execution"
+    }
+
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        if !f.has_component("runtime") {
+            return;
+        }
+        for tok in TOKENS {
+            for off in f.find_word(tok) {
+                let line = f.line_of(off);
+                if f.in_test(line) {
+                    continue;
+                }
+                push(
+                    out,
+                    f,
+                    line,
+                    ID,
+                    format!(
+                        "`{tok}` in runtime/: wall clocks, ambient RNGs, and env \
+                         reads are hidden inputs — thread seeds/config through \
+                         StepSpec instead"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint_source;
+
+    #[test]
+    fn flags_instant_in_runtime() {
+        let f = lint_source(
+            "rust/src/runtime/hot.rs",
+            "use std::time::Instant;\nfn t() { let _ = Instant::now(); }\n",
+        );
+        assert_eq!(f.len(), 2, "{f:?}"); // one per line, deduped within a line
+        assert!(f.iter().all(|x| x.rule == super::ID));
+    }
+
+    #[test]
+    fn coordinator_may_read_env() {
+        let f = lint_source(
+            "rust/src/coordinator/cli.rs",
+            "fn t() -> Option<String> { std::env::var(\"X\").ok() }\n",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

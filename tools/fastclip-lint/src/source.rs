@@ -1,0 +1,483 @@
+//! The file model every rule consumes: a comment-and-string-blanked
+//! *code view* of the source (same byte length, so offsets and line
+//! numbers agree with the original), the comment list, per-line brace
+//! depth, and the `#[cfg(test)] mod` mask.
+//!
+//! The lexer understands line comments, nested block comments, string
+//! / raw-string / byte-string literals, char literals, and lifetimes
+//! (so `'a` does not open a char literal). It does not build an AST —
+//! every rule in this tool is a lexical/structural check, which keeps
+//! the tool dependency-free.
+
+/// One comment's text, attributed to the line it starts on.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// Text after `//` (line) or between `/*` and `*/` (block).
+    pub text: String,
+}
+
+/// A parsed source file plus the derived views the rules need.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path used for scoping decisions, normalized to `/` separators.
+    pub path: String,
+    /// Original text.
+    pub raw: String,
+    /// Same length as `raw`: comments and literal contents (including
+    /// their delimiters) replaced by spaces, newlines preserved.
+    pub code: String,
+    /// Byte offset where each 0-based line starts.
+    pub line_starts: Vec<usize>,
+    /// Per 0-based line: inside a `#[cfg(test)] mod … { … }` body.
+    pub test_mask: Vec<bool>,
+    /// Per 0-based line: the line has at least one comment on it.
+    pub comment_on_line: Vec<bool>,
+    /// Per 0-based line: the line has non-whitespace *code* on it.
+    pub code_on_line: Vec<bool>,
+    /// Per 0-based line: brace depth at the start of the line.
+    pub depth_at_line: Vec<usize>,
+    /// All comments in order.
+    pub comments: Vec<Comment>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, raw: &str) -> SourceFile {
+        let (code, comments) = blank_non_code(raw);
+        let line_starts = line_starts(raw);
+        let n_lines = line_starts.len();
+
+        // mark every line a comment touches (block comments span lines)
+        let mut comment_on_line = vec![false; n_lines];
+        for c in &comments {
+            let extra = c.text.matches('\n').count();
+            for k in 0..=extra {
+                let l = c.line - 1 + k;
+                if l < n_lines {
+                    comment_on_line[l] = true;
+                }
+            }
+        }
+
+        let mut code_on_line = vec![false; n_lines];
+        let mut depth_at_line = vec![0usize; n_lines];
+        let mut depth = 0usize;
+        let mut line = 0usize;
+        depth_at_line[0] = 0;
+        for ch in code.chars() {
+            match ch {
+                '\n' => {
+                    line += 1;
+                    if line < n_lines {
+                        depth_at_line[line] = depth;
+                    }
+                }
+                '{' => depth += 1,
+                '}' => depth = depth.saturating_sub(1),
+                c if !c.is_whitespace() => code_on_line[line] = true,
+                _ => {}
+            }
+        }
+
+        let test_mask = test_region_mask(&code, &line_starts);
+
+        SourceFile {
+            path: path.replace('\\', "/"),
+            raw: raw.to_string(),
+            code,
+            line_starts,
+            test_mask,
+            comment_on_line,
+            code_on_line,
+            depth_at_line,
+            comments,
+        }
+    }
+
+    /// 1-based line number of byte offset `off`.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_starts.binary_search(&off) {
+            Ok(i) => i + 1,
+            Err(i) => i, // i >= 1 because line_starts[0] == 0
+        }
+    }
+
+    /// Whether 1-based `line` is inside a `#[cfg(test)]` module body.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_mask.get(line - 1).copied().unwrap_or(false)
+    }
+
+    /// The code view of 1-based `line`.
+    pub fn code_line(&self, line: usize) -> &str {
+        let lo = self.line_starts[line - 1];
+        let hi = self
+            .line_starts
+            .get(line)
+            .map(|&h| h.saturating_sub(1))
+            .unwrap_or(self.code.len());
+        &self.code[lo..hi.max(lo)]
+    }
+
+    /// Does the path contain `dir` as a full component?
+    pub fn has_component(&self, dir: &str) -> bool {
+        self.path.split('/').any(|c| c == dir)
+    }
+
+    /// The file name (last component).
+    pub fn file_name(&self) -> &str {
+        self.path.rsplit('/').next().unwrap_or(&self.path)
+    }
+
+    /// Byte offsets (in the code view) of every word-bounded
+    /// occurrence of `token`. A boundary is any char that cannot be
+    /// part of an identifier.
+    pub fn find_word(&self, token: &str) -> Vec<usize> {
+        find_word_in(&self.code, token)
+    }
+}
+
+/// Word-bounded substring search over arbitrary text.
+pub fn find_word_in(hay: &str, token: &str) -> Vec<usize> {
+    let bytes = hay.as_bytes();
+    let is_ident = |b: u8| b == b'_' || b.is_ascii_alphanumeric();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(token) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + token.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        // token itself may contain `::` or `.`; boundaries only apply
+        // when the token's own edge chars are identifier-like
+        let head_ident = token.bytes().next().map(is_ident).unwrap_or(false);
+        let tail_ident = token.bytes().last().map(is_ident).unwrap_or(false);
+        if (!head_ident || before_ok) && (!tail_ident || after_ok) {
+            out.push(at);
+        }
+        from = at + token.len().max(1);
+    }
+    out
+}
+
+/// Byte offsets of each 0-based line start.
+fn line_starts(raw: &str) -> Vec<usize> {
+    let mut v = vec![0usize];
+    for (i, b) in raw.bytes().enumerate() {
+        if b == b'\n' && i + 1 < raw.len() {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+/// Blank comments and literal contents out of `raw`, preserving byte
+/// length and newlines; collect comments with their starting line.
+fn blank_non_code(raw: &str) -> (String, Vec<Comment>) {
+    let b = raw.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = raw.bytes().collect();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    let blank = |out: &mut [u8], lo: usize, hi: usize| {
+        for item in out.iter_mut().take(hi).skip(lo) {
+            if *item != b'\n' {
+                *item = b' ';
+            }
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            let start_line = line;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line: start_line,
+                text: raw[start + 2..i].to_string(),
+            });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            let text_end = i.saturating_sub(2).max(start + 2);
+            comments.push(Comment {
+                line: start_line,
+                text: raw[start + 2..text_end].to_string(),
+            });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // raw string r"..." / r#"..."# (and br variants)
+        if (c == b'r' || c == b'b') && raw_string_at(b, i).is_some() {
+            let (body_start, hashes) = raw_string_at(b, i).unwrap();
+            let start = i;
+            let closer = {
+                let mut s = String::from("\"");
+                for _ in 0..hashes {
+                    s.push('#');
+                }
+                s
+            };
+            let rest = &raw[body_start..];
+            let end = match rest.find(&closer) {
+                Some(p) => body_start + p + closer.len(),
+                None => n,
+            };
+            line += raw[start..end].matches('\n').count();
+            blank(&mut out, start, end);
+            i = end;
+            continue;
+        }
+        // plain / byte string
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let start = i;
+            i += if c == b'b' { 2 } else { 1 };
+            while i < n {
+                if b[i] == b'\\' {
+                    // an escape can hide a newline (string line
+                    // continuation: `\` at end of line) — count it,
+                    // or every later comment is attributed low
+                    if i + 1 < n && b[i + 1] == b'\n' {
+                        line += 1;
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            blank(&mut out, start, i);
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if let Some(end) = char_literal_end(b, i) {
+                blank(&mut out, i, end);
+                i = end;
+                continue;
+            }
+            // lifetime: leave as code
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    (String::from_utf8(out).expect("blanking preserves utf8 boundaries"), comments)
+}
+
+/// If a raw (byte) string literal starts at `i`, return
+/// (offset of first body byte, number of `#`s).
+fn raw_string_at(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// If a char literal starts at `i` (a `'`), return the offset just
+/// past its closing quote; `None` for lifetimes.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    let n = b.len();
+    if i + 1 >= n {
+        return None;
+    }
+    if b[i + 1] == b'\\' {
+        // escaped char: skip to the closing quote
+        let mut j = i + 2;
+        while j < n && b[j] != b'\'' && b[j] != b'\n' {
+            j += 1;
+        }
+        if j < n && b[j] == b'\'' {
+            return Some(j + 1);
+        }
+        return None;
+    }
+    // unescaped: exactly one char then a quote, else it's a lifetime
+    let mut j = i + 1;
+    // advance one utf8 char
+    j += 1;
+    while j < n && (b[j] & 0xC0) == 0x80 {
+        j += 1;
+    }
+    if j < n && b[j] == b'\'' {
+        Some(j + 1)
+    } else {
+        None
+    }
+}
+
+/// Mark every 0-based line inside a `#[cfg(test)] mod … { … }` body.
+fn test_region_mask(code: &str, line_starts: &[usize]) -> Vec<bool> {
+    let n_lines = line_starts.len();
+    let mut mask = vec![false; n_lines];
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find("#[cfg(test)]") {
+        let attr_at = from + p;
+        from = attr_at + 1;
+        // skip whitespace and further attributes to the next token
+        let bytes = code.as_bytes();
+        let mut j = attr_at + "#[cfg(test)]".len();
+        loop {
+            while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j < bytes.len() && bytes[j] == b'#' {
+                // another attribute: skip to its closing ']'
+                while j < bytes.len() && bytes[j] != b']' {
+                    j += 1;
+                }
+                j = (j + 1).min(bytes.len());
+                continue;
+            }
+            break;
+        }
+        if !code[j..].starts_with("mod") && !code[j..].starts_with("pub mod") {
+            continue;
+        }
+        // find the module's opening brace, then its match
+        let open = match code[j..].find('{') {
+            Some(o) => j + o,
+            None => continue, // `mod x;` — out-of-line, nothing to mask
+        };
+        let mut depth = 0usize;
+        let mut close = code.len();
+        for (k, ch) in code[open..].char_indices() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = open + k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let first = offset_line(line_starts, open);
+        let last = offset_line(line_starts, close);
+        for item in mask.iter_mut().take(last.min(n_lines)).skip(first - 1) {
+            *item = true;
+        }
+    }
+    mask
+}
+
+/// 1-based line of a byte offset.
+fn offset_line(line_starts: &[usize], off: usize) -> usize {
+    match line_starts.binary_search(&off) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_comments_and_strings_keeps_lines() {
+        let src = "let a = \"HashMap\"; // HashMap here\nlet b = 1;\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert_eq!(f.code.len(), src.len());
+        assert!(!f.code.contains("HashMap"));
+        assert!(f.code.contains("let b = 1;"));
+        assert_eq!(f.comments.len(), 1);
+        assert_eq!(f.comments[0].line, 1);
+        assert!(f.comments[0].text.contains("HashMap here"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* a /* b */ c */ fn x() {}\nlet r = r#\"un\"safe\"#;\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.code.contains("fn x()"));
+        assert!(!f.code.contains("safe\""));
+        // the nested comment was blanked entirely, `fn x` survived
+        assert!(!f.code.contains("a /* b"));
+    }
+
+    #[test]
+    fn string_line_continuations_keep_comment_lines_aligned() {
+        // `\` at end of line inside a string hides a newline from the
+        // escape-skipping lexer; comment attribution must still match
+        let src = "let s = \"a \\\n   b\";\n// on line three\nlet t = 1;\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert_eq!(f.comments.len(), 1);
+        assert_eq!(f.comments[0].line, 3, "{:?}", f.comments[0]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'y';\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.code.contains("&'a str"));
+        assert!(!f.code.contains("'y'"));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(4));
+        assert!(!f.in_test(6));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        let hits = find_word_in("HashMap XHashMap HashMapX HashMap::new", "HashMap");
+        assert_eq!(hits.len(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//@ path: rust/src/runtime/native/norms.rs
+pub fn sq_norm(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for x in xs {
+        acc += x * x;
+    }
+    acc
+}
+
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().copied().sum::<f32>()
+}

@@ -1,0 +1,8 @@
+//@ path: rust/src/runtime/native/norms.rs
+pub fn sq_norm(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += (*x as f64) * (*x as f64);
+    }
+    acc as f32
+}

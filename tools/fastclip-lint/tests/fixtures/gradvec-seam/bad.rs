@@ -1,0 +1,9 @@
+//@ path: rust/src/optim/fancy.rs
+use crate::runtime::store::GradVec;
+
+pub fn leak(g: &mut GradVec, raw: &[f32]) {
+    let flat = g.flat_mut();
+    for (d, s) in flat.iter_mut().zip(raw) {
+        *d = *s;
+    }
+}

@@ -1,0 +1,6 @@
+//@ path: rust/src/optim/fancy.rs
+use crate::runtime::store::GradVec;
+
+pub fn max_component(g: &GradVec) -> f32 {
+    g.flat().iter().copied().fold(0.0, f32::max)
+}

@@ -1,0 +1,14 @@
+//@ path: rust/src/runtime/cfg.rs
+// lint: allow(no-hash-container)
+use std::collections::HashMap;
+
+// lint: allow(no-hash-container) -- nothing on the next line uses one
+pub type Names = Vec<String>;
+
+// lint: allow(no-such-rule) -- misspelled rule id
+pub const N: usize = 4;
+
+// lint: allow(no-hash-container) -- presence check only, no iteration
+pub fn touch(m: &HashMap<String, u32>) -> usize {
+    m.len()
+}

@@ -1,0 +1,10 @@
+//@ path: rust/src/runtime/cfg.rs
+// lint: allow-file(no-hash-container) -- keys are collected and sorted
+// before any order-dependent use; the map itself is a presence check
+use std::collections::HashMap;
+
+pub fn names(m: &HashMap<String, u32>) -> Vec<String> {
+    let mut v: Vec<String> = m.keys().cloned().collect();
+    v.sort();
+    v
+}

@@ -1,0 +1,6 @@
+//@ path: rust/src/runtime/registry.rs
+use std::collections::HashMap;
+
+pub fn order(m: &HashMap<String, u32>) -> Vec<String> {
+    m.keys().cloned().collect()
+}

@@ -1,0 +1,6 @@
+//@ path: rust/src/runtime/registry.rs
+use std::collections::BTreeMap;
+
+pub fn order(m: &BTreeMap<String, u32>) -> Vec<String> {
+    m.keys().cloned().collect()
+}

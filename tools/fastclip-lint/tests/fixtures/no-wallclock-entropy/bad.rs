@@ -1,0 +1,7 @@
+//@ path: rust/src/runtime/hot.rs
+pub fn stamp() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .expect("clock")
+        .as_nanos()
+}

@@ -1,0 +1,4 @@
+//@ path: rust/src/runtime/hot.rs
+pub fn stream_id(seed: u64, step: u64) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(step)
+}

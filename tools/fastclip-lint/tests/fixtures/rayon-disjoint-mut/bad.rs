@@ -1,0 +1,9 @@
+//@ path: rust/src/runtime/native/scale.rs
+use rayon::prelude::*;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+pub fn bump(cells: &[AtomicU32], k: u32) {
+    (0..cells.len()).into_par_iter().for_each(|i| {
+        cells[i].fetch_add(k, Ordering::Relaxed);
+    });
+}

@@ -1,0 +1,10 @@
+//@ path: rust/src/runtime/native/scale.rs
+use rayon::prelude::*;
+
+pub fn scale(out: &mut [f32], k: f32) {
+    out.par_chunks_mut(4096).for_each(|chunk| {
+        for x in chunk {
+            *x *= k;
+        }
+    });
+}

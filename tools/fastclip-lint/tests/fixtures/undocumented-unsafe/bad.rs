@@ -1,0 +1,6 @@
+//@ path: rust/src/util/ptr.rs
+pub fn write(p: *mut f32, v: f32) {
+    unsafe {
+        *p = v;
+    }
+}

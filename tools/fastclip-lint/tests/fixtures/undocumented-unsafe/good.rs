@@ -1,0 +1,8 @@
+//@ path: rust/src/util/ptr.rs
+pub fn write(p: *mut f32, v: f32) {
+    // SAFETY: callers pass a pointer derived from a live &mut f32, so
+    // it is valid, aligned, and exclusively owned for this write.
+    unsafe {
+        *p = v;
+    }
+}

@@ -1,0 +1,119 @@
+//! Fixture UI tests: every rule ships a `bad.rs` that must fail with
+//! exactly that rule id and a `good.rs` that must pass, plus the
+//! meta-test that the real tree (`rust/src`) lints clean — which also
+//! proves there are zero unexplained allow-lists, since a reason-less
+//! or unused allow is itself a finding.
+//!
+//! Fixtures live under `tests/fixtures/<rule-id>/` and are read as
+//! text, never compiled. Their first line is a `//@ path: <virtual>`
+//! directive giving the path the lint should scope the file under, so
+//! path-scoped rules can be exercised from fixture files on disk.
+
+use fastclip_lint::{lint_source, rules, run_paths, LINT_ALLOW};
+use std::path::{Path, PathBuf};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+/// Load a fixture, returning (virtual path, full text).
+fn load(rule: &str, which: &str) -> (String, String) {
+    let p = fixture_root().join(rule).join(format!("{which}.rs"));
+    let text = std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("missing fixture {}: {e}", p.display()));
+    let first = text.lines().next().unwrap_or("");
+    let vpath = first
+        .strip_prefix("//@ path:")
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| {
+            panic!(
+                "fixture {} must start with `//@ path: <virtual path>`",
+                p.display()
+            )
+        });
+    (vpath, text)
+}
+
+fn all_rule_ids() -> Vec<&'static str> {
+    let mut ids: Vec<&'static str> = rules::all().iter().map(|r| r.id()).collect();
+    ids.push(LINT_ALLOW);
+    ids
+}
+
+#[test]
+fn every_rule_has_a_failing_fixture() {
+    for id in all_rule_ids() {
+        let (vpath, text) = load(id, "bad");
+        let findings = lint_source(&vpath, &text);
+        assert!(
+            !findings.is_empty(),
+            "{id}: bad fixture produced no findings"
+        );
+        for f in &findings {
+            assert_eq!(
+                f.rule, id,
+                "{id}: bad fixture tripped a different rule: {f}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_rule_has_a_passing_fixture() {
+    for id in all_rule_ids() {
+        let (vpath, text) = load(id, "good");
+        let findings = lint_source(&vpath, &text);
+        assert!(
+            findings.is_empty(),
+            "{id}: good fixture should lint clean, got:\n{}",
+            render(&findings)
+        );
+    }
+}
+
+#[test]
+fn registry_meets_the_rule_floor() {
+    // the acceptance criterion: >= 6 rules active (the engine's
+    // lint-allow hygiene check is on top of these)
+    assert!(
+        rules::all().len() >= 6,
+        "expected >= 6 registered rules, have {}",
+        rules::all().len()
+    );
+    // ids are unique and kebab-case
+    let ids = all_rule_ids();
+    let mut sorted = ids.clone();
+    sorted.sort();
+    sorted.dedup();
+    assert_eq!(sorted.len(), ids.len(), "duplicate rule ids: {ids:?}");
+    for id in ids {
+        assert!(
+            id.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'),
+            "rule id {id:?} is not kebab-case"
+        );
+    }
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let (findings, n_files) = run_paths(&[src]).expect("walk rust/src");
+    assert!(
+        n_files >= 20,
+        "expected to see the real tree, linted only {n_files} files"
+    );
+    assert!(
+        findings.is_empty(),
+        "rust/src has lint findings (fix them or add a reasoned \
+         `// lint: allow(...)`):\n{}",
+        render(&findings)
+    );
+}
+
+fn render(findings: &[fastclip_lint::Finding]) -> String {
+    findings
+        .iter()
+        .map(|f| f.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
