@@ -1,12 +1,27 @@
 //! Checkpointing: parameters as raw little-endian f32 (`.bin`) plus a
 //! JSON sidecar with run metadata (step, accountant state inputs,
 //! optimizer name). Resumable and Python-free.
+//!
+//! Writes are atomic per file: content goes to a `.tmp` sibling,
+//! fsyncs, then renames over the final name (and the directory is
+//! fsynced so the rename itself is durable). A crash mid-write leaves
+//! either the previous checkpoint or the new one — never a truncated
+//! file that `load` would deserialize as garbage. `params.bin` renames
+//! before `meta.json`: the sidecar is the commit record, so a crash
+//! between the two renames leaves the old metadata (resume re-runs a
+//! suffix) rather than metadata describing parameters that were never
+//! written.
+//!
+//! [`CheckpointWriter`] moves saves off the serve scheduler's hot
+//! path: a background thread drains a queue of (dir, meta, params)
+//! jobs through the same atomic `save_flat`, so the continuity
+//! guarantees are identical to an inline save.
 
 use crate::runtime::{ConfigSpec, ParamStore};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]
 pub struct CheckpointMeta {
@@ -44,15 +59,56 @@ pub fn save(
     meta: &CheckpointMeta,
     params: &ParamStore,
 ) -> Result<()> {
-    std::fs::create_dir_all(dir)?;
-    let mut bin = std::fs::File::create(dir.join("params.bin"))?;
-    let mut total = 0usize;
-    for v in &params.host {
-        // safe: f32 slices serialize as raw LE bytes on all our targets
-        let bytes: Vec<u8> = v.iter().flat_map(|f| f.to_le_bytes()).collect();
-        bin.write_all(&bytes)?;
-        total += v.len();
+    save_flat(dir, meta, &params.host)
+}
+
+/// Write `path` atomically: `.tmp` sibling, fsync, rename, directory
+/// fsync. The data fsync precedes the rename — rename-before-data
+/// could expose a durable name pointing at un-flushed content.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
     }
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} into place", path.display())
+    })?;
+    if let Some(parent) = path.parent() {
+        // directory fsync makes the rename durable; opening a dir
+        // read-only works on the unix targets we build for, and a
+        // failure here (exotic fs) only weakens durability, never
+        // correctness — so it is advisory
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// `save` for a bare host parameter list — what the serve scheduler's
+/// writer thread snapshots (it cannot hold the session's `ParamStore`
+/// across the queue).
+pub fn save_flat(
+    dir: &Path,
+    meta: &CheckpointMeta,
+    host: &[Vec<f32>],
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let total: usize = host.iter().map(|v| v.len()).sum();
+    let mut bin = Vec::with_capacity(total * 4);
+    for v in host {
+        for f in v {
+            bin.extend_from_slice(&f.to_le_bytes());
+        }
+    }
+    // params first, meta second: meta.json is the commit record
+    write_atomic(&dir.join("params.bin"), &bin)?;
     let mut j = Json::obj();
     j.set("config", meta.config.as_str().into());
     j.set("method", meta.method.as_str().into());
@@ -70,8 +126,70 @@ pub fn save(
         j.set("clip_policy", cp.as_str().into());
     }
     j.set("param_elems", total.into());
-    crate::util::write_file(&dir.join("meta.json"), &j.to_string_pretty())?;
+    write_atomic(&dir.join("meta.json"), j.to_string_pretty().as_bytes())?;
     Ok(())
+}
+
+/// A background checkpoint writer: `enqueue` hands off a (dir, meta,
+/// params-snapshot) job and returns immediately; the writer thread
+/// runs the same atomic [`save_flat`], so every checkpoint it lands
+/// upholds the resume continuity guards. `finish` drains the queue,
+/// joins the thread, and surfaces the first write error.
+pub struct CheckpointWriter {
+    tx: Option<std::sync::mpsc::Sender<WriteJob>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+struct WriteJob {
+    dir: PathBuf,
+    meta: CheckpointMeta,
+    host: Vec<Vec<f32>>,
+}
+
+impl CheckpointWriter {
+    pub fn spawn() -> CheckpointWriter {
+        let (tx, rx) = std::sync::mpsc::channel::<WriteJob>();
+        let handle = std::thread::spawn(move || -> Result<()> {
+            // stop at the first failure: a later job's checkpoint must
+            // not paper over an earlier job's missing one
+            for job in rx {
+                save_flat(&job.dir, &job.meta, &job.host).with_context(|| {
+                    format!("checkpoint writer: {}", job.dir.display())
+                })?;
+            }
+            Ok(())
+        });
+        CheckpointWriter { tx: Some(tx), handle: Some(handle) }
+    }
+
+    pub fn enqueue(
+        &self,
+        dir: &Path,
+        meta: CheckpointMeta,
+        host: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("checkpoint writer already finished")
+            .send(WriteJob { dir: dir.to_path_buf(), meta, host })
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "checkpoint writer thread exited early — a previous \
+                     save failed; its error surfaces from finish()"
+                )
+            })
+    }
+
+    /// Close the queue, wait for pending saves, propagate the first
+    /// write error.
+    pub fn finish(mut self) -> Result<()> {
+        drop(self.tx.take());
+        let handle = self.handle.take().expect("checkpoint writer handle");
+        match handle.join() {
+            Ok(r) => r,
+            Err(_) => bail!("checkpoint writer thread panicked"),
+        }
+    }
 }
 
 pub fn load(dir: &Path, cfg: &ConfigSpec) -> Result<(CheckpointMeta, Vec<f32>)> {
@@ -169,6 +287,94 @@ mod tests {
         assert!((m2.sigma - 1.1).abs() < 1e-12);
         assert_eq!(flat, init);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_checkpoint_files_are_refused() {
+        let c = cfg();
+        let init: Vec<f32> = (0..15).map(|i| i as f32).collect();
+        let ps = ParamStore::new(&c, Some(&init)).unwrap();
+        let meta = CheckpointMeta {
+            config: "ckpt_test".into(),
+            method: "reweight".into(),
+            optimizer: "sgd".into(),
+            step: 9,
+            sampling_rate: 0.1,
+            sigma: 1.0,
+            clip: 1.0,
+            lr: 1e-3,
+            seed: 1,
+            poisson: Some(false),
+            clip_policy: Some("global:1".into()),
+        };
+        let dir = std::env::temp_dir().join("fastclip_ckpt_truncated");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // a crash mid-params leaves a short params.bin: refused with
+        // the byte counts, not deserialized short
+        save(&dir, &meta, &ps).unwrap();
+        let full = std::fs::read(dir.join("params.bin")).unwrap();
+        std::fs::write(dir.join("params.bin"), &full[..full.len() / 2]).unwrap();
+        let err = load(&dir, &c).unwrap_err();
+        assert!(err.to_string().contains("expected"), "{err}");
+
+        // a crash mid-meta leaves invalid JSON: refused as a parse
+        // error, not defaulted field-by-field into a wrong resume
+        save(&dir, &meta, &ps).unwrap();
+        let full = std::fs::read_to_string(dir.join("meta.json")).unwrap();
+        std::fs::write(dir.join("meta.json"), &full[..full.len() / 2]).unwrap();
+        let err = load(&dir, &c).unwrap_err();
+        assert!(format!("{err:#}").contains("parsing checkpoint meta"), "{err:#}");
+
+        // and the atomic path leaves no .tmp siblings behind
+        save(&dir, &meta, &ps).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_thread_saves_identically_to_inline_save() {
+        let c = cfg();
+        let init: Vec<f32> = (0..15).map(|i| 1.5 - i as f32).collect();
+        let ps = ParamStore::new(&c, Some(&init)).unwrap();
+        let meta = CheckpointMeta {
+            config: "ckpt_test".into(),
+            method: "naive".into(),
+            optimizer: "sgd".into(),
+            step: 3,
+            sampling_rate: 0.25,
+            sigma: 1.2,
+            clip: 0.5,
+            lr: 0.01,
+            seed: 4,
+            poisson: Some(true),
+            clip_policy: Some("per_layer:0.5".into()),
+        };
+        let inline_dir = std::env::temp_dir().join("fastclip_ckpt_wr_inline");
+        let queued_dir = std::env::temp_dir().join("fastclip_ckpt_wr_queued");
+        for d in [&inline_dir, &queued_dir] {
+            std::fs::remove_dir_all(d).ok();
+        }
+        save(&inline_dir, &meta, &ps).unwrap();
+        let w = CheckpointWriter::spawn();
+        w.enqueue(&queued_dir, meta.clone(), ps.host.clone()).unwrap();
+        w.finish().unwrap();
+        assert_eq!(
+            std::fs::read(inline_dir.join("params.bin")).unwrap(),
+            std::fs::read(queued_dir.join("params.bin")).unwrap()
+        );
+        assert_eq!(
+            std::fs::read_to_string(inline_dir.join("meta.json")).unwrap(),
+            std::fs::read_to_string(queued_dir.join("meta.json")).unwrap()
+        );
+        for d in [&inline_dir, &queued_dir] {
+            std::fs::remove_dir_all(d).ok();
+        }
     }
 
     #[test]

@@ -65,6 +65,14 @@ impl Metrics {
         }
     }
 
+    /// Preallocate the per-step records for `n` further steps so the
+    /// warm loop's `record_step` pushes never grow the vectors — part
+    /// of the `TrainSession::step` zero-allocation contract.
+    pub fn reserve_steps(&mut self, n: usize) {
+        self.step_times.reserve(n);
+        self.losses.reserve(n);
+    }
+
     pub fn record_step(&mut self, total_s: f64, loss: f32) {
         self.step_times.push(total_s);
         self.losses.push(loss);

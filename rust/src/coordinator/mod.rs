@@ -1,14 +1,19 @@
 //! L3 coordinator: the DP-SGD training orchestrator around the AOT
 //! compute artifacts — method dispatch (the four clipping strategies),
-//! the training loop (paper Alg 1), metrics, checkpoints, and the
-//! memory model for the Sec 6.7 experiment.
+//! the session state machine + thin training loop (paper Alg 1), the
+//! multi-job serve scheduler, metrics, checkpoints, and the memory
+//! model for the Sec 6.7 experiment.
 
 pub mod checkpoint;
 pub mod memory;
 pub mod methods;
 pub mod metrics;
+pub mod serve;
+pub mod session;
 pub mod trainer;
 
 pub use methods::{ClipMethod, GradComputer};
 pub use metrics::{Metrics, Phase, PhaseTimer};
+pub use serve::{parse_jobs, serve, JobSpec, ServeOptions, ServeReport};
+pub use session::TrainSession;
 pub use trainer::{evaluate, stage_batch, train, TrainOptions, TrainReport};

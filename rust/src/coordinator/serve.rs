@@ -1,0 +1,548 @@
+//! `fastclip serve`: a cooperative scheduler that interleaves
+//! [`TrainSession::step()`] calls from many concurrent training jobs.
+//!
+//! Jobs come from a JSON jobs file ([`parse_jobs`]); up to
+//! `max_concurrent` sessions are live at once, stepped round-robin in
+//! declaration order over the shared rayon pool. Because every
+//! session's batch and noise streams are keyed by its own seed (and
+//! the noise stream is schedule-independent), each job's trajectory is
+//! **bitwise-identical to a solo `train()` run** — interleaving
+//! changes wall-clock sharing, never results. `tests/serve.rs` pins
+//! this.
+//!
+//! Per-job `StepOut` arenas come from a reusable [`ArenaPool`]: when a
+//! job retires, its arena is recycled into the next admitted session
+//! (the first compute re-layouts it for the new config).
+//!
+//! Privacy governance: a [`BudgetLedger`] holds one lookahead probe
+//! accountant per job (cloned from the session, so resume re-charges
+//! are included). Before each step the probe charges that step and the
+//! scheduler *refuses* the step if the job's epsilon would exceed its
+//! `target_eps` budget — the job retires with a final checkpoint at
+//! its last admitted step, spend strictly within budget.
+//!
+//! Checkpoints are written on a background [`CheckpointWriter`] thread
+//! (atomic tmp+fsync+rename writes), so a retiring job never stalls
+//! the jobs still stepping. A graceful-stop flag retires every live
+//! session with a final checkpoint and skips un-started jobs.
+
+use super::checkpoint::CheckpointWriter;
+use super::session::TrainSession;
+use super::trainer::{TrainOptions, TrainReport};
+use crate::privacy::RdpAccountant;
+use crate::runtime::{Backend, ClipPolicy, StepOut};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// One entry of the jobs file: a named training job plus an optional
+/// privacy budget the serve ledger enforces.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub opts: TrainOptions,
+    /// Hard epsilon ceiling (at the job's delta). Unlike
+    /// `TrainOptions::target_eps` — which calibrates sigma up-front —
+    /// this is *enforcement*: the scheduler refuses any step whose
+    /// spend would exceed it. `None` = unbounded (run to `steps`).
+    pub eps_budget: Option<f64>,
+}
+
+/// Scheduler options.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Maximum live sessions; `0` = all jobs at once.
+    pub max_concurrent: usize,
+    /// Graceful-stop flag (see `util::signal::install_sigint`): when it
+    /// flips, every live session retires with a final checkpoint and
+    /// pending jobs are skipped.
+    pub stop: Option<Arc<AtomicBool>>,
+}
+
+/// How one job ended.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub name: String,
+    /// The privacy ledger refused the next step (epsilon budget
+    /// exhausted) — the report's step count is where it stopped.
+    pub budget_stopped: bool,
+    pub report: TrainReport,
+}
+
+#[derive(Debug)]
+pub struct ServeReport {
+    /// One outcome per *started* job, in jobs-file order.
+    pub outcomes: Vec<JobOutcome>,
+    /// The stop flag ended the run before all jobs completed.
+    pub stopped_early: bool,
+}
+
+const JOB_KEYS: &[&str] = &[
+    "name",
+    "config",
+    "method",
+    "steps",
+    "n",
+    "lr",
+    "clip",
+    "clip_policy",
+    "sigma",
+    "delta",
+    "optimizer",
+    "seed",
+    "eval_every",
+    "eval_n",
+    "log_every",
+    "poisson",
+    "checkpoint",
+    "target_eps",
+    "stream_chunk",
+];
+
+fn want_str(v: &Json, idx: usize, key: &str) -> Result<String> {
+    v.as_str()
+        .map(str::to_string)
+        .with_context(|| format!("jobs[{idx}]: {key:?} must be a string"))
+}
+
+fn want_f64(v: &Json, idx: usize, key: &str) -> Result<f64> {
+    v.as_f64()
+        .with_context(|| format!("jobs[{idx}]: {key:?} must be a number"))
+}
+
+fn want_usize(v: &Json, idx: usize, key: &str) -> Result<usize> {
+    let n = want_f64(v, idx, key)?;
+    anyhow::ensure!(
+        n >= 0.0 && n.fract() == 0.0,
+        "jobs[{idx}]: {key:?} must be a non-negative integer, got {n}"
+    );
+    Ok(n as usize)
+}
+
+/// Parse a jobs file: `{"max_concurrent": N, "jobs": [{...}, ...]}`.
+/// Returns the job list and the file's `max_concurrent` (0 = all at
+/// once). Unknown keys — top-level or per-job — are hard errors: a
+/// typo'd `"sigm"` silently training at the default noise multiplier
+/// is exactly the failure mode a DP tool cannot afford.
+pub fn parse_jobs(text: &str) -> Result<(Vec<JobSpec>, usize)> {
+    let root = Json::parse(text).map_err(|e| anyhow::anyhow!("jobs file: {e}"))?;
+    let top = root
+        .as_obj()
+        .context("jobs file: top level must be an object")?;
+    for k in top.keys() {
+        anyhow::ensure!(
+            k == "jobs" || k == "max_concurrent",
+            "jobs file: unknown top-level key {k:?} (expected \"jobs\" and \
+             optionally \"max_concurrent\")"
+        );
+    }
+    let max_concurrent = match root.get("max_concurrent") {
+        Json::Null => 0,
+        v => v
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .context("jobs file: \"max_concurrent\" must be a non-negative integer")?
+            as usize,
+    };
+    let arr = root
+        .get("jobs")
+        .as_arr()
+        .context("jobs file: missing \"jobs\" array")?;
+    anyhow::ensure!(!arr.is_empty(), "jobs file: \"jobs\" is empty");
+
+    let mut jobs: Vec<JobSpec> = Vec::with_capacity(arr.len());
+    for (idx, item) in arr.iter().enumerate() {
+        let obj = item
+            .as_obj()
+            .with_context(|| format!("jobs[{idx}]: each job must be an object"))?;
+        for k in obj.keys() {
+            anyhow::ensure!(
+                JOB_KEYS.contains(&k.as_str()),
+                "jobs[{idx}]: unknown key {k:?} (known keys: {})",
+                JOB_KEYS.join(", ")
+            );
+        }
+        let name = want_str(item.get("name"), idx, "name")
+            .with_context(|| format!("jobs[{idx}]: every job needs a \"name\""))?;
+        anyhow::ensure!(!name.is_empty(), "jobs[{idx}]: \"name\" is empty");
+        anyhow::ensure!(
+            jobs.iter().all(|p| p.name != name),
+            "jobs[{idx}]: duplicate job name {name:?}"
+        );
+
+        // serve jobs default to silent per-step logging — the scheduler
+        // emits per-job lifecycle lines instead
+        let mut opts = TrainOptions {
+            log_every: 0,
+            ..TrainOptions::default()
+        };
+        let mut eps_budget = None;
+        let mut saw_clip = false;
+        for (k, v) in obj {
+            match k.as_str() {
+                "name" => {}
+                "config" => opts.config = want_str(v, idx, k)?,
+                "method" => {
+                    opts.method = super::ClipMethod::parse(&want_str(v, idx, k)?)
+                        .with_context(|| format!("jobs[{idx}] ({name})"))?
+                }
+                "steps" => opts.steps = want_usize(v, idx, k)? as u64,
+                "n" => opts.dataset_n = want_usize(v, idx, k)?,
+                "lr" => opts.lr = want_f64(v, idx, k)?,
+                "clip" => {
+                    opts.clip = want_f64(v, idx, k)?;
+                    saw_clip = true;
+                }
+                "clip_policy" => {
+                    opts.policy = Some(
+                        ClipPolicy::parse(&want_str(v, idx, k)?)
+                            .with_context(|| format!("jobs[{idx}] ({name})"))?,
+                    )
+                }
+                "sigma" => opts.sigma = want_f64(v, idx, k)?,
+                "delta" => opts.delta = want_f64(v, idx, k)?,
+                "optimizer" => opts.optimizer = want_str(v, idx, k)?,
+                "seed" => opts.seed = want_usize(v, idx, k)? as u64,
+                "eval_every" => opts.eval_every = want_usize(v, idx, k)? as u64,
+                "eval_n" => opts.eval_n = Some(want_usize(v, idx, k)?),
+                "log_every" => opts.log_every = want_usize(v, idx, k)? as u64,
+                "poisson" => {
+                    opts.poisson = v
+                        .as_bool()
+                        .with_context(|| format!("jobs[{idx}]: \"poisson\" must be a bool"))?
+                }
+                "checkpoint" => {
+                    opts.checkpoint_dir = Some(PathBuf::from(want_str(v, idx, k)?))
+                }
+                "target_eps" => eps_budget = Some(want_f64(v, idx, k)?),
+                "stream_chunk" => opts.stream_chunk = Some(want_usize(v, idx, k)?),
+                _ => unreachable!("unknown keys rejected above"),
+            }
+        }
+        anyhow::ensure!(
+            !(saw_clip && opts.policy.is_some()),
+            "jobs[{idx}] ({name}): pass either \"clip\" or \"clip_policy\", \
+             not both — the policy carries its own threshold"
+        );
+        if let Some(b) = eps_budget {
+            anyhow::ensure!(
+                b > 0.0,
+                "jobs[{idx}] ({name}): \"target_eps\" must be positive"
+            );
+            anyhow::ensure!(
+                opts.method.is_private(),
+                "jobs[{idx}] ({name}): \"target_eps\" set but method {} adds \
+                 no noise — there is no privacy spend to budget",
+                opts.method.name()
+            );
+        }
+        jobs.push(JobSpec {
+            name,
+            opts,
+            eps_budget,
+        });
+    }
+    Ok((jobs, max_concurrent))
+}
+
+/// Recycled `StepOut` arenas: a retiring job's arena becomes the next
+/// admitted session's, so K concurrent slots allocate K arenas total
+/// no matter how many jobs pass through them.
+struct ArenaPool {
+    free: Vec<StepOut>,
+}
+
+impl ArenaPool {
+    fn new() -> ArenaPool {
+        ArenaPool { free: Vec::new() }
+    }
+
+    fn acquire(&mut self) -> Option<StepOut> {
+        self.free.pop()
+    }
+
+    fn release(&mut self, arena: StepOut) {
+        self.free.push(arena);
+    }
+}
+
+/// One job's budget-enforcement state: a probe accountant that stays
+/// exactly one admitted step ahead of the session's real accountant.
+struct LedgerSlot {
+    probe: RdpAccountant,
+    q: f64,
+    sigma: f64,
+    delta: f64,
+    budget: Option<f64>,
+    private: bool,
+}
+
+/// The global privacy-budget ledger. `admit` charges the *next* step
+/// into the job's probe and answers whether its epsilon stays within
+/// budget — so a refused job has spent strictly less than its budget
+/// (the probe overshoots by the one refused step; the session's real
+/// accountant never charges it).
+struct BudgetLedger {
+    slots: Vec<Option<LedgerSlot>>,
+}
+
+impl BudgetLedger {
+    fn new() -> BudgetLedger {
+        BudgetLedger { slots: Vec::new() }
+    }
+
+    fn register(&mut self, job: usize, session: &TrainSession, budget: Option<f64>) {
+        if self.slots.len() <= job {
+            self.slots.resize_with(job + 1, || None);
+        }
+        self.slots[job] = Some(LedgerSlot {
+            // clone, not fresh: a resumed session has already re-charged
+            // its checkpointed steps, and the probe must count them
+            probe: session.accountant_clone(),
+            q: session.sampling_rate(),
+            sigma: session.sigma(),
+            delta: session.delta(),
+            budget,
+            private: session.is_private(),
+        });
+    }
+
+    /// May `job` run one more step? Invariant: each `true` answer is
+    /// followed by exactly one `session.step()`, keeping the probe one
+    /// step ahead.
+    fn admit(&mut self, job: usize) -> bool {
+        let slot = self.slots[job].as_mut().expect("job registered");
+        if !slot.private {
+            return true;
+        }
+        let Some(budget) = slot.budget else {
+            return true;
+        };
+        slot.probe.step(slot.q, slot.sigma);
+        slot.probe.epsilon(slot.delta).0 <= budget
+    }
+}
+
+/// Run `jobs` to completion (or budget refusal, or stop flag),
+/// stepping live sessions round-robin in declaration order. Per-job
+/// results are bitwise-identical to solo `train()` runs with the same
+/// options.
+pub fn serve(
+    backend: &dyn Backend,
+    jobs: &[JobSpec],
+    sopts: &ServeOptions,
+) -> Result<ServeReport> {
+    anyhow::ensure!(!jobs.is_empty(), "serve: no jobs");
+    for (i, a) in jobs.iter().enumerate() {
+        anyhow::ensure!(
+            jobs[..i].iter().all(|b| b.name != a.name),
+            "serve: duplicate job name {:?}",
+            a.name
+        );
+    }
+    let cap = if sopts.max_concurrent == 0 {
+        jobs.len()
+    } else {
+        sopts.max_concurrent.min(jobs.len())
+    };
+    crate::log_info!("serve: {} job(s), {} concurrent slot(s)", jobs.len(), cap);
+
+    let writer = CheckpointWriter::spawn();
+    let mut pool = ArenaPool::new();
+    let mut ledger = BudgetLedger::new();
+    let mut outcomes: Vec<Option<JobOutcome>> = Vec::new();
+    outcomes.resize_with(jobs.len(), || None);
+    // (job index, session), in admission order
+    let mut active: Vec<(usize, TrainSession)> = Vec::new();
+    let mut next_pending = 0usize;
+    let mut stopped_early = false;
+
+    loop {
+        // admit before reading the stop flag: a flag already set when a
+        // job would start still admits it, so every admitted job gets a
+        // (possibly step-0) checkpoint — deterministic, testable
+        // semantics for "interrupt during startup"
+        while !stopped_early && active.len() < cap && next_pending < jobs.len() {
+            let spec = &jobs[next_pending];
+            let session =
+                TrainSession::with_parts(backend, &spec.opts, None, pool.acquire())
+                    .with_context(|| format!("serve: starting job {:?}", spec.name))?;
+            ledger.register(next_pending, &session, spec.eps_budget);
+            crate::log_info!(
+                "serve: job {:?} started ({} of {} steps done, config {})",
+                spec.name,
+                session.step_index(),
+                session.total_steps(),
+                session.config_name()
+            );
+            active.push((next_pending, session));
+            next_pending += 1;
+        }
+        if !stopped_early
+            && sopts.stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst))
+        {
+            stopped_early = true;
+            crate::log_info!(
+                "serve: stop requested — checkpointing {} live job(s)",
+                active.len()
+            );
+        }
+        if active.is_empty() {
+            break;
+        }
+
+        // one round-robin pass; retiring in-place keeps declaration
+        // order for the jobs that remain
+        let mut i = 0;
+        while i < active.len() {
+            let (job, session) = &mut active[i];
+            let job = *job;
+            let finished = session.finished();
+            let refused = !finished && !stopped_early && !ledger.admit(job);
+            if finished || refused || stopped_early {
+                let (_, session) = active.remove(i);
+                if refused {
+                    let spent = session
+                        .epsilon()
+                        .map(|(e, _)| e)
+                        .unwrap_or(f64::NAN);
+                    crate::log_info!(
+                        "serve: ledger refused job {:?} at step {} — the next \
+                         step would exceed eps budget {} (spent {:.4})",
+                        jobs[job].name,
+                        session.step_index(),
+                        jobs[job].eps_budget.unwrap_or(f64::NAN),
+                        spent
+                    );
+                } else if !finished {
+                    crate::log_info!(
+                        "serve: job {:?} interrupted at step {} of {}",
+                        jobs[job].name,
+                        session.step_index(),
+                        session.total_steps()
+                    );
+                } else {
+                    crate::log_info!(
+                        "serve: job {:?} finished ({} steps)",
+                        jobs[job].name,
+                        session.step_index()
+                    );
+                }
+                if let Some(dir) = session.checkpoint_dir() {
+                    writer.enqueue(
+                        dir,
+                        session.checkpoint_meta(),
+                        session.params_snapshot(),
+                    )?;
+                    crate::log_info!(
+                        "serve: job {:?} checkpoint queued for {}",
+                        jobs[job].name,
+                        dir.display()
+                    );
+                }
+                let (report, arena) = session.finish();
+                pool.release(arena);
+                outcomes[job] = Some(JobOutcome {
+                    name: jobs[job].name.clone(),
+                    budget_stopped: refused,
+                    report,
+                });
+                continue;
+            }
+            session
+                .step()
+                .with_context(|| {
+                    format!(
+                        "serve: job {:?} failed at step {}",
+                        jobs[job].name,
+                        session.step_index()
+                    )
+                })?;
+            i += 1;
+        }
+    }
+
+    if stopped_early && next_pending < jobs.len() {
+        crate::log_info!(
+            "serve: {} pending job(s) never started",
+            jobs.len() - next_pending
+        );
+    }
+    // surface any background write failure before reporting success
+    writer.finish()?;
+    Ok(ServeReport {
+        outcomes: outcomes.into_iter().flatten().collect(),
+        stopped_early,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_jobs_reads_fields_and_defaults() {
+        let (jobs, maxc) = parse_jobs(
+            r#"{"max_concurrent": 2, "jobs": [
+                {"name": "a", "config": "mlp2_mnist_b32", "method": "reweight",
+                 "steps": 7, "n": 128, "lr": 0.05, "sigma": 1.25, "seed": 9,
+                 "optimizer": "sgd", "target_eps": 3.5, "poisson": true,
+                 "checkpoint": "ckpt/a", "stream_chunk": 64},
+                {"name": "b", "method": "nonprivate"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(maxc, 2);
+        assert_eq!(jobs.len(), 2);
+        let a = &jobs[0];
+        assert_eq!(a.name, "a");
+        assert_eq!(a.opts.steps, 7);
+        assert_eq!(a.opts.dataset_n, 128);
+        assert_eq!(a.opts.seed, 9);
+        assert_eq!(a.opts.optimizer, "sgd");
+        assert!(a.opts.poisson);
+        assert_eq!(a.opts.stream_chunk, Some(64));
+        assert_eq!(a.eps_budget, Some(3.5));
+        // budget is ledger enforcement, NOT sigma calibration
+        assert!(a.opts.target_eps.is_none());
+        assert_eq!(
+            a.opts.checkpoint_dir.as_deref(),
+            Some(std::path::Path::new("ckpt/a"))
+        );
+        // defaults: silent per-step logging, non-private job b has no budget
+        assert_eq!(a.opts.log_every, 0);
+        assert!(jobs[1].eps_budget.is_none());
+    }
+
+    #[test]
+    fn parse_jobs_rejects_bad_files() {
+        let dup = parse_jobs(
+            r#"{"jobs": [{"name": "x"}, {"name": "x"}]}"#,
+        );
+        assert!(dup.unwrap_err().to_string().contains("duplicate"));
+
+        let unknown = parse_jobs(r#"{"jobs": [{"name": "x", "sigm": 1.0}]}"#);
+        assert!(unknown.unwrap_err().to_string().contains("unknown key"));
+
+        let top = parse_jobs(r#"{"jobs": [{"name": "x"}], "maxconc": 1}"#);
+        assert!(top.unwrap_err().to_string().contains("top-level"));
+
+        let both = parse_jobs(
+            r#"{"jobs": [{"name": "x", "clip": 1.0, "clip_policy": "global:0.5"}]}"#,
+        );
+        assert!(both.unwrap_err().to_string().contains("not both"));
+
+        let budget_nonpriv = parse_jobs(
+            r#"{"jobs": [{"name": "x", "method": "nonprivate", "target_eps": 2.0}]}"#,
+        );
+        assert!(budget_nonpriv
+            .unwrap_err()
+            .to_string()
+            .contains("no noise"));
+
+        let empty = parse_jobs(r#"{"jobs": []}"#);
+        assert!(empty.unwrap_err().to_string().contains("empty"));
+    }
+}

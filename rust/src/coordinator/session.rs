@@ -1,0 +1,701 @@
+//! `TrainSession`: one training job as an explicit state machine —
+//! `new` (init) → `step()` until `finished()` → `maybe_checkpoint` →
+//! `finish()`. It owns everything one job needs — params, the
+//! `StepOut` arena, optimizer, `ClipPolicy`, RDP accountant, sampler,
+//! data source, metrics — so a driver is a thin loop: `train()` runs
+//! one session to completion (bitwise-identical to the pre-session
+//! monolith), the serve scheduler interleaves `step()` calls from many
+//! sessions over the shared rayon pool.
+//!
+//! The PR-5 resume continuity guards (seed / sampling mode / method /
+//! optimizer / lr / clip policy / sigma / rate) live in `new` — they
+//! are session invariants: no session can exist whose step stream
+//! would diverge from the run it claims to continue.
+//!
+//! `step()` is the warm path and performs **zero heap allocation**
+//! (enforced by `tests/no_alloc.rs`): the batch buffer, the Poisson
+//! scratch, the staging buffers, the arena, and the metrics vectors
+//! are all pre-sized in `new`. Logging and evaluation — which format
+//! and allocate — stay in the drivers.
+
+use super::checkpoint::{self, CheckpointMeta};
+use super::methods::GradComputer;
+use super::metrics::{Metrics, Phase, PhaseTimer};
+use super::trainer::{evaluate, TrainOptions, TrainReport};
+use crate::data::{self, DataSource, Dataset, PoissonSampler, ShuffleBatcher, StreamingIdxSource};
+use crate::optim::{self, Optimizer};
+use crate::privacy::{calibrate_sigma, noise_stddev_for_mean, RdpAccountant};
+use crate::runtime::{
+    init_params_glorot, Backend, BatchStage, ClipPolicy, ConfigSpec, ParamStore,
+    StepFn, StepOut,
+};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Batch-index sampler — which rows form the next step's minibatch.
+pub(crate) enum Sampler {
+    Shuffle(ShuffleBatcher),
+    Poisson(PoissonSampler),
+}
+
+impl Sampler {
+    fn next_batch_into(&mut self, out: &mut Vec<usize>) {
+        match self {
+            Sampler::Shuffle(b) => b.next_batch_into(out),
+            Sampler::Poisson(p) => p.next_batch_into(out),
+        }
+    }
+}
+
+/// One training job's complete state. See the module docs for the
+/// lifecycle; construction performs every validation the old
+/// monolithic `train()` did, in the same order.
+pub struct TrainSession {
+    opts: TrainOptions,
+    cfg: ConfigSpec,
+    policy: ClipPolicy,
+    sensitivity: f64,
+    q: f64,
+    sigma: f64,
+    noise_std: f64,
+    computer: GradComputer,
+    fwd_exe: Option<Arc<dyn StepFn>>,
+    eval_ds: Option<Dataset>,
+    params: ParamStore,
+    opt: Box<dyn Optimizer>,
+    accountant: RdpAccountant,
+    sampler: Sampler,
+    source: Box<dyn DataSource>,
+    stage: BatchStage,
+    out: StepOut,
+    metrics: Metrics,
+    /// persistent batch buffer: capacity covers the worst-case draw
+    /// (dataset_n for Poisson, tau for shuffle), so `step()` never
+    /// reallocates it
+    batch: Vec<usize>,
+    /// next step index to run; starts at the resume point
+    step: u64,
+}
+
+impl TrainSession {
+    pub fn new(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainSession> {
+        Self::with_parts(backend, opts, None, None)
+    }
+
+    /// `new` with injectable parts: an explicit data source (tests,
+    /// streaming-vs-memory equivalence) and/or a recycled `StepOut`
+    /// arena (the serve scheduler's arena pool — the first compute
+    /// re-layouts it, so a pooled arena behaves like a fresh one).
+    pub fn with_parts(
+        backend: &dyn Backend,
+        opts: &TrainOptions,
+        source: Option<Box<dyn DataSource>>,
+        arena: Option<StepOut>,
+    ) -> Result<TrainSession> {
+        let cfg = backend.resolve(&opts.config)?;
+        let tau = cfg.batch;
+        anyhow::ensure!(
+            opts.dataset_n >= tau,
+            "dataset_n {} < batch {}",
+            opts.dataset_n,
+            tau
+        );
+        let q = tau as f64 / opts.dataset_n as f64;
+
+        // --- effective clip policy -----------------------------------
+        // Every parametric layer is one (W, b) pair in manifest order,
+        // so policy group boundaries index cfg.params in steps of two.
+        let n_param_layers = cfg.params.len() / 2;
+        let policy = opts
+            .policy
+            .clone()
+            .unwrap_or_else(|| ClipPolicy::hard_global(opts.clip as f32));
+        if opts.method.is_private() {
+            policy.check(n_param_layers).with_context(|| {
+                format!("--clip-policy {policy} on config {}", cfg.name)
+            })?;
+        }
+        // The mechanism's L2 sensitivity — what the Gaussian noise must
+        // be calibrated to. The pre-policy flag path keeps the exact
+        // f64 clip (bitwise noise-stream continuity); an explicit
+        // policy computes C·sqrt(G) (= C for global granularities).
+        let sensitivity = match &opts.policy {
+            None => opts.clip,
+            Some(p) => p.sensitivity(n_param_layers),
+        };
+
+        // --- resume: restore params / step counter / accountant ------
+        let mut start_step = 0u64;
+        let mut resume_init: Option<Vec<f32>> = None;
+        // (sampling rate, sigma) the checkpointed steps were run at —
+        // what the accountant must re-charge, regardless of the
+        // current flags
+        let mut resume_charge: Option<(f64, f64)> = None;
+        if let Some(dir) = &opts.resume {
+            let (meta, flat) = checkpoint::load(dir, &cfg)
+                .with_context(|| format!("resuming from {}", dir.display()))?;
+            anyhow::ensure!(
+                meta.step < opts.steps,
+                "checkpoint at {} already covers {} steps and --steps {} is a \
+                 total, not an increment — raise --steps to continue training",
+                dir.display(),
+                meta.step,
+                opts.steps
+            );
+            // Continuity: the replayed sampler and the step-keyed noise
+            // stream both derive from the seed, so a silently different
+            // seed would diverge from the run being continued.
+            anyhow::ensure!(
+                opts.seed == meta.seed,
+                "resume: checkpoint at {} was trained with --seed {} but this \
+                 run uses --seed {} — the replayed batch and noise streams \
+                 would diverge from the run being continued",
+                dir.display(),
+                meta.seed,
+                opts.seed
+            );
+            // Sampling-mode continuity: the replayed sampler AND the
+            // RDP re-charge both assume the recorded regime — resuming
+            // a Poisson run with shuffle-partition (or vice versa)
+            // would silently change both the batch stream and the
+            // subsampling assumption the accountant's rate q rests on.
+            // A pre-PR5 checkpoint recorded no mode (None): skip the
+            // check rather than misread the absence as
+            // shuffle-partition.
+            if let Some(was_poisson) = meta.poisson {
+                anyhow::ensure!(
+                    opts.poisson == was_poisson,
+                    "resume: checkpoint was trained with {} sampling but this \
+                     run uses {} — the replayed batch stream and the \
+                     accountant's subsampling assumption would both change \
+                     mid-run; {}",
+                    if was_poisson { "--poisson" } else { "shuffle-partition" },
+                    if opts.poisson { "--poisson" } else { "shuffle-partition" },
+                    if was_poisson { "pass --poisson" } else { "drop --poisson" }
+                );
+            }
+            // Method continuity: all private methods agree to ~1e-5
+            // but not bitwise, so switching mid-run is not a
+            // continuation of the same trajectory (and private/
+            // non-private switches would corrupt the epsilon report
+            // outright).
+            anyhow::ensure!(
+                meta.method == opts.method.name(),
+                "resume: checkpoint was trained with --method {} but this run \
+                 uses --method {} — switch methods only in a fresh run; pass \
+                 --method {}",
+                meta.method,
+                opts.method.name(),
+                meta.method
+            );
+            // Optimizer continuity: the name is validated (a pre-PR5
+            // checkpoint records none — skip); optimizer *state* is
+            // not checkpointed, so a stateful optimizer restarts its
+            // moments — warn loudly rather than silently diverging.
+            // With sgd (stateless) a resumed run is bitwise the
+            // continuous run.
+            if !meta.optimizer.is_empty() {
+                anyhow::ensure!(
+                    opts.optimizer == meta.optimizer,
+                    "resume: checkpoint was trained with --optimizer {} but \
+                     this run uses --optimizer {} — switching optimizers \
+                     mid-run is not a continuation; pass --optimizer {}",
+                    meta.optimizer,
+                    opts.optimizer,
+                    meta.optimizer
+                );
+            }
+            // Learning-rate continuity (every method): the tail would
+            // silently train at a different rate than the recorded
+            // steps. A pre-PR5 checkpoint records no lr (0.0): skip.
+            if meta.lr > 0.0 {
+                anyhow::ensure!(
+                    (opts.lr - meta.lr).abs() < 1e-12,
+                    "resume: checkpoint records lr={} but this run passes \
+                     lr={} — the continuation would train at a different \
+                     rate; pass --lr {}",
+                    meta.lr,
+                    opts.lr,
+                    meta.lr
+                );
+            }
+            if opts.optimizer != "sgd" {
+                crate::log_info!(
+                    "resume: WARNING — optimizer state is not checkpointed; \
+                     {} restarts its moment estimates from zero at step {}, \
+                     so the continuation is not bitwise identical to an \
+                     uninterrupted run (use --optimizer sgd for exact \
+                     continuation)",
+                    opts.optimizer,
+                    meta.step
+                );
+            }
+            if opts.method.is_private() {
+                // The checkpoint records ONE (sampling_rate, sigma,
+                // clip) for its whole history, so the accountant
+                // cannot represent a heterogeneous chain: a later
+                // resume of the checkpoint this run writes would
+                // re-charge every step at whatever values are current
+                // here. Refuse the combinations that would corrupt (or
+                // double-count) the recorded privacy spend — or, for
+                // clip, silently break the continuation (noise_std and
+                // the clipping threshold both derive from it).
+                match &meta.clip_policy {
+                    // policy-recording checkpoint: the canonical name
+                    // is the policy's stable identity — compare it
+                    // wholesale
+                    Some(rec) => {
+                        anyhow::ensure!(
+                            *rec == policy.to_string(),
+                            "resume: checkpoint records clip policy {} but \
+                             this run clips under {} — the threshold \
+                             structure and the noise scale would change \
+                             mid-run; pass --clip-policy {}",
+                            rec,
+                            policy,
+                            rec
+                        );
+                    }
+                    // pre-policy checkpoint + pre-policy flags: the
+                    // recorded bare clip IS the classical global hard
+                    // policy — the original continuity check, verbatim
+                    None if opts.policy.is_none() => {
+                        anyhow::ensure!(
+                            (opts.clip - meta.clip).abs() < 1e-12,
+                            "resume: checkpoint records clip={} but this run \
+                             passes clip={} — the clipping threshold and the \
+                             noise scale would both change mid-run; pass \
+                             --clip {}",
+                            meta.clip,
+                            opts.clip,
+                            meta.clip
+                        );
+                    }
+                    // pre-policy checkpoint + explicit --clip-policy:
+                    // only the classical policy at the recorded
+                    // threshold continues the same process (1e-6: the
+                    // policy threshold is f32)
+                    None => {
+                        anyhow::ensure!(
+                            policy.is_global_hard()
+                                && (policy.clip() as f64 - meta.clip).abs()
+                                    < 1e-6,
+                            "resume: checkpoint predates clip policies — its \
+                             steps ran the classical global hard clip at {} — \
+                             but this run passes --clip-policy {}; pass \
+                             --clip-policy global:{} (or drop the flag and \
+                             pass --clip {})",
+                            meta.clip,
+                            policy,
+                            meta.clip,
+                            meta.clip
+                        );
+                    }
+                }
+                anyhow::ensure!(
+                    opts.target_eps.is_none(),
+                    "resume: --target-eps would re-calibrate sigma as if all \
+                     {} steps were fresh budget, double-counting the {} \
+                     checkpointed steps' spend; pass --sigma explicitly (the \
+                     checkpoint records sigma={})",
+                    opts.steps,
+                    meta.step,
+                    meta.sigma
+                );
+                anyhow::ensure!(
+                    (opts.sigma - meta.sigma).abs() < 1e-12,
+                    "resume: checkpoint records sigma={} but this run passes \
+                     sigma={} — the checkpoint written at the end could only \
+                     record one value for the whole history, mis-charging a \
+                     later resume; pass --sigma {}",
+                    meta.sigma,
+                    opts.sigma,
+                    meta.sigma
+                );
+            }
+            // The sampling rate fixes both the replayed batch stream
+            // (the samplers are seeded over dataset_n) and, for
+            // private methods, the accountant's subsampling rate — so
+            // it must match for *every* method, not only private ones.
+            // Guard on a recorded rate > 0 (a damaged/ancient meta
+            // contributes nothing rather than a division by zero in
+            // the hint).
+            if meta.sampling_rate > 0.0 {
+                anyhow::ensure!(
+                    (q - meta.sampling_rate).abs() < 1e-12,
+                    "resume: checkpoint records sampling rate q={} but --n {} \
+                     gives q={} — the replayed batch stream (and any privacy \
+                     accounting) must cover the whole history at one rate; \
+                     pass --n {}",
+                    meta.sampling_rate,
+                    opts.dataset_n,
+                    q,
+                    (tau as f64 / meta.sampling_rate).round()
+                );
+            }
+            crate::log_info!(
+                "resume: {} at step {} (q={:.4}, sigma={:.3})",
+                dir.display(),
+                meta.step,
+                meta.sampling_rate,
+                meta.sigma
+            );
+            start_step = meta.step;
+            resume_charge = Some((meta.sampling_rate, meta.sigma));
+            resume_init = Some(flat);
+        }
+
+        // --- eval set size -------------------------------------------
+        let eval_n = match opts.eval_n {
+            Some(n) => {
+                anyhow::ensure!(
+                    opts.eval_every > 0,
+                    "--eval-n has no effect without --eval-every; set an \
+                     evaluation interval or drop --eval-n"
+                );
+                anyhow::ensure!(
+                    n >= tau && n % tau == 0,
+                    "--eval-n {n} must be a positive multiple of config {}'s \
+                     batch {tau} — evaluation runs in full batches and would \
+                     silently drop the remainder examples",
+                    cfg.name
+                );
+                n
+            }
+            None => tau * 4,
+        };
+
+        // --- noise calibration (Alg 1, line 1) -----------------------
+        let sigma = match opts.target_eps {
+            Some(eps) if opts.method.is_private() => {
+                let s = calibrate_sigma(q, opts.steps, eps, opts.delta)
+                    .context("target epsilon infeasible at sigma<=200")?;
+                crate::log_info!(
+                    "calibrated sigma={:.3} for eps<={} delta={} over {} steps (q={:.4})",
+                    s, eps, opts.delta, opts.steps, q
+                );
+                s
+            }
+            _ => opts.sigma,
+        };
+
+        // --- data ----------------------------------------------------
+        let source: Box<dyn DataSource> = match source {
+            Some(s) => s,
+            None => match opts.stream_chunk {
+                Some(chunk) => {
+                    Box::new(StreamingIdxSource::open_for_dataset(&cfg.dataset, chunk)?)
+                }
+                None => {
+                    Box::new(data::load_dataset(&cfg.dataset, opts.dataset_n, opts.seed)?)
+                }
+            },
+        };
+        anyhow::ensure!(
+            source.len() >= opts.dataset_n,
+            "data source {:?} holds {} examples but the run samples over \
+             n={} — the sampler would draw rows past the end",
+            source.name(),
+            source.len(),
+            opts.dataset_n
+        );
+        anyhow::ensure!(
+            source.example_len() * tau == cfg.input_elems()
+                && source.is_f32() == (cfg.input_dtype == "f32"),
+            "data source {:?} example shape ({} {} elements) does not match \
+             config {}",
+            source.name(),
+            source.example_len(),
+            if source.is_f32() { "f32" } else { "i32" },
+            cfg.name
+        );
+        let eval_ds = if opts.eval_every > 0 {
+            Some(data::load_dataset(&cfg.dataset, eval_n, opts.seed + 1)?)
+        } else {
+            None
+        };
+
+        // --- executables / params / optimizer ------------------------
+        let computer = GradComputer::new(backend, &opts.config, opts.method)?;
+        let fwd_exe = if opts.eval_every > 0 {
+            Some(backend.load(&cfg, "fwd")?)
+        } else {
+            None
+        };
+        let init = match resume_init {
+            Some(flat) => flat,
+            None => init_params_glorot(&cfg, opts.seed),
+        };
+        let params = ParamStore::new(&cfg, Some(&init))?;
+        let opt = optim::by_name(&opts.optimizer, opts.lr)?;
+        let mut accountant = RdpAccountant::new();
+        if opts.method.is_private() && start_step > 0 {
+            // re-charge the checkpointed steps at their *recorded* rate
+            // and sigma: budget already spent cannot change just
+            // because the resumed run passes different flags
+            let (q0, s0) = resume_charge.expect("resume meta");
+            accountant.steps(q0, s0, start_step);
+        }
+        let mut sampler = if opts.poisson {
+            Sampler::Poisson(PoissonSampler::new(opts.dataset_n, tau, opts.seed))
+        } else {
+            Sampler::Shuffle(ShuffleBatcher::new(opts.dataset_n, tau, opts.seed))
+        };
+        // the batch buffer is reused every step; a Poisson raw draw
+        // can reach dataset_n rows, so reserve for the worst case —
+        // a later large draw must not reallocate mid-run
+        let mut batch =
+            Vec::with_capacity(if opts.poisson { opts.dataset_n } else { tau });
+        // replay the sampler to the resume point, so a resumed run
+        // draws the same batch sequence the continuous run would have
+        for _ in 0..start_step {
+            sampler.next_batch_into(&mut batch);
+        }
+
+        let stage = BatchStage::for_config(&cfg);
+        // one output arena for the whole run: the step resets it each
+        // call, so the warm loop performs zero per-step heap allocation
+        let out = match arena {
+            Some(a) => a,
+            None => computer.new_out(),
+        };
+        let mut metrics = Metrics::new();
+        metrics.reserve_steps((opts.steps - start_step) as usize);
+        let noise_std = noise_stddev_for_mean(sigma, sensitivity, tau);
+
+        crate::log_info!(
+            "train {} method={} steps={} tau={} q={:.4} sigma={:.3} policy={} sens={} opt={}",
+            cfg.name, opts.method.name(), opts.steps, tau, q, sigma, policy, sensitivity, opts.optimizer
+        );
+
+        Ok(TrainSession {
+            opts: opts.clone(),
+            cfg,
+            policy,
+            sensitivity,
+            q,
+            sigma,
+            noise_std,
+            computer,
+            fwd_exe,
+            eval_ds,
+            params,
+            opt,
+            accountant,
+            sampler,
+            source,
+            stage,
+            out,
+            metrics,
+            batch,
+            step: start_step,
+        })
+    }
+
+    /// Run one training step (Alg 1 lines 2-16 for one iteration):
+    /// sample → gather → compute clipped gradients → noise + account →
+    /// optimizer update. Returns the step's loss. Allocation-free once
+    /// warm; panics in debug builds if called after `finished()`.
+    pub fn step(&mut self) -> Result<f32> {
+        debug_assert!(!self.finished(), "step() on a finished session");
+        let t_step = Instant::now();
+
+        let t = PhaseTimer::start();
+        self.sampler.next_batch_into(&mut self.batch);
+        self.source.fill_batch(&self.batch, &mut self.stage)?;
+        t.stop(&mut self.metrics, Phase::Gather);
+
+        let t = PhaseTimer::start();
+        self.computer
+            .compute(&mut self.params, &self.stage, &self.policy, &mut self.out)?;
+        t.stop(&mut self.metrics, Phase::Execute);
+        if let Some((gn, ng)) = self.out.group_norms() {
+            self.metrics.record_group_norms(gn, ng);
+        }
+
+        if self.opts.method.is_private() {
+            let t = PhaseTimer::start();
+            // §Perf L3 iteration 3: parallel chunked polar-method noise
+            // — one flat pass over the arena's gradient buffer, keyed
+            // by (seed, step) so the stream is schedule-independent
+            crate::rng::add_noise_parallel(
+                self.out.grads.flat_mut(),
+                self.noise_std,
+                self.opts.seed,
+                self.step,
+            );
+            // poisoning guard (debug/test profile only): the noised
+            // gradient is the last value before the optimizer — a
+            // NaN/Inf here must fail at the source, not as a drifted
+            // loss many steps later
+            crate::runtime::store::debug_assert_finite(
+                self.out.grads.flat(),
+                "session noise path (post add_noise_parallel)",
+            );
+            self.accountant.step(self.q, self.sigma);
+            t.stop(&mut self.metrics, Phase::Noise);
+        }
+
+        let t = PhaseTimer::start();
+        self.opt.step(&mut self.params.host, &self.out.grads);
+        self.params.mark_dirty();
+        t.stop(&mut self.metrics, Phase::Update);
+
+        self.metrics
+            .record_step(t_step.elapsed().as_secs_f64(), self.out.loss);
+        self.step += 1;
+        Ok(self.out.loss)
+    }
+
+    /// Steps completed so far (== the next step's index).
+    pub fn step_index(&self) -> u64 {
+        self.step
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.opts.steps
+    }
+
+    pub fn finished(&self) -> bool {
+        self.step >= self.opts.steps
+    }
+
+    pub fn is_private(&self) -> bool {
+        self.opts.method.is_private()
+    }
+
+    pub fn sampling_rate(&self) -> f64 {
+        self.q
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    pub fn delta(&self) -> f64 {
+        self.opts.delta
+    }
+
+    pub fn config_name(&self) -> &str {
+        &self.cfg.name
+    }
+
+    pub fn loss_ema(&self) -> f64 {
+        self.metrics.loss_ema.get().unwrap_or(0.0)
+    }
+
+    /// Current privacy spend `(epsilon, best RDP order)`; `None` for
+    /// non-private methods.
+    pub fn epsilon(&self) -> Option<(f64, u32)> {
+        if self.opts.method.is_private() {
+            Some(self.accountant.epsilon(self.opts.delta))
+        } else {
+            None
+        }
+    }
+
+    /// Clone of the accountant — the serve ledger's lookahead probe
+    /// starts from exactly the session's charged state (including any
+    /// resume re-charge).
+    pub fn accountant_clone(&self) -> RdpAccountant {
+        self.accountant.clone()
+    }
+
+    /// Whether the driver should evaluate now: only true immediately
+    /// after a step that lands on the eval interval.
+    pub fn eval_due(&self) -> bool {
+        self.opts.eval_every > 0
+            && self.fwd_exe.is_some()
+            && self.eval_ds.is_some()
+            && self.step > 0
+            && self.step % self.opts.eval_every == 0
+    }
+
+    /// Run evaluation over the held-out set; records the point in the
+    /// session metrics and returns `(mean loss, accuracy)`. Allocates
+    /// (fresh staging buffers) — drivers call it off the hot path.
+    pub fn run_eval(&mut self) -> Result<(f32, f32)> {
+        let fwd = self.fwd_exe.as_ref().expect("eval executable");
+        let eds = self.eval_ds.as_ref().expect("eval dataset");
+        let (l, a) = evaluate(fwd.as_ref(), &mut self.params, eds, &self.cfg)?;
+        self.metrics.record_eval(self.step, l, a);
+        Ok((l, a))
+    }
+
+    pub fn checkpoint_dir(&self) -> Option<&Path> {
+        self.opts.checkpoint_dir.as_deref()
+    }
+
+    /// The checkpoint metadata for the session's *current* state —
+    /// `step` is the true completed count, so a mid-run (graceful-
+    /// stop) checkpoint is a valid resume point under the same guards.
+    pub fn checkpoint_meta(&self) -> CheckpointMeta {
+        CheckpointMeta {
+            config: self.cfg.name.clone(),
+            method: self.opts.method.name().into(),
+            optimizer: self.opts.optimizer.clone(),
+            step: self.step,
+            sampling_rate: self.q,
+            sigma: self.sigma,
+            clip: match &self.opts.policy {
+                Some(p) => p.clip() as f64,
+                None => self.opts.clip,
+            },
+            lr: self.opts.lr,
+            seed: self.opts.seed,
+            poisson: Some(self.opts.poisson),
+            clip_policy: Some(self.policy.to_string()),
+        }
+    }
+
+    /// Snapshot of the host parameters — what the background
+    /// checkpoint writer ships across its queue.
+    pub fn params_snapshot(&self) -> Vec<Vec<f32>> {
+        self.params.host.clone()
+    }
+
+    /// Synchronously checkpoint to `opts.checkpoint_dir`, if set.
+    /// Returns whether a checkpoint was written.
+    pub fn maybe_checkpoint(&self) -> Result<bool> {
+        let Some(dir) = &self.opts.checkpoint_dir else {
+            return Ok(false);
+        };
+        checkpoint::save(dir, &self.checkpoint_meta(), &self.params)?;
+        Ok(true)
+    }
+
+    /// Consume the session into its report, releasing the arena for
+    /// reuse (the serve scheduler returns it to the pool).
+    pub fn finish(self) -> (TrainReport, StepOut) {
+        let epsilon = if self.opts.method.is_private() {
+            Some(self.accountant.epsilon(self.opts.delta))
+        } else {
+            None
+        };
+        let mean_step_ms = self
+            .metrics
+            .step_summary()
+            .map(|s| s.mean * 1e3)
+            .unwrap_or(0.0);
+        let report = TrainReport {
+            config: self.cfg.name,
+            method: self.opts.method,
+            steps: self.step,
+            final_loss_ema: self.metrics.loss_ema.get().unwrap_or(f64::NAN),
+            losses: self.metrics.losses.clone(),
+            eval_points: self.metrics.eval_points.clone(),
+            epsilon,
+            sigma: self.sigma,
+            policy: self.policy.to_string(),
+            sensitivity: self.sensitivity,
+            sampling_rate: self.q,
+            wall_seconds: self.metrics.wall_seconds(),
+            mean_step_ms,
+            metrics_json: self.metrics.to_json(),
+            peak_rss_bytes: crate::util::peak_rss_bytes(),
+        };
+        (report, self.out)
+    }
+}

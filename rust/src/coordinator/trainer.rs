@@ -1,21 +1,21 @@
 //! The DP training loop — paper Algorithm 1 end to end.
 //!
-//! Per step: sample a minibatch (shuffle-partition or Poisson), stage
-//! it, run the selected gradient-clipping method's executable(s), add
-//! calibrated Gaussian noise (the mechanism of Lemma 2), update with
-//! DP-Adam/SGD, and charge the RDP accountant. Python never runs here.
+//! Since the session-core refactor, all per-step mechanics live in
+//! [`TrainSession`](super::session::TrainSession): `train()` is a thin
+//! driver — construct a session, `step()` it to completion (honoring a
+//! graceful-stop flag), log/evaluate at the configured cadence, write
+//! the final checkpoint, return the report. A single run is
+//! bitwise-identical to the pre-refactor monolith; the equivalence
+//! suite in `tests/session.rs` pins that.
 
-use super::methods::{ClipMethod, GradComputer};
-use super::metrics::{Metrics, Phase, PhaseTimer};
-use crate::data::{self, Dataset, Features, PoissonSampler, ShuffleBatcher};
-use crate::optim;
-use crate::privacy::{calibrate_sigma, noise_stddev_for_mean, RdpAccountant};
-use crate::runtime::{
-    init_params_glorot, Backend, BatchStage, ClipPolicy, ParamStore, StepFn,
-};
-use anyhow::{Context, Result};
+use super::methods::ClipMethod;
+use super::session::TrainSession;
+use crate::data::{self, Dataset, Features};
+use crate::runtime::{Backend, BatchStage, ClipPolicy, ParamStore, StepFn};
+use anyhow::Result;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct TrainOptions {
@@ -67,6 +67,17 @@ pub struct TrainOptions {
     /// Poisson subsampling (the regime the RDP analysis assumes)
     /// instead of shuffle-partition
     pub poisson: bool,
+    /// Graceful-stop flag (see `util::signal::install_sigint`), polled
+    /// at step boundaries: when it flips, the loop breaks, writes the
+    /// final checkpoint (a valid `--resume` point — the accountant's
+    /// inputs travel with it), and returns a truthful report. `None`
+    /// never stops early.
+    pub stop: Option<Arc<AtomicBool>>,
+    /// Stream the dataset from its IDX files in chunks of this many
+    /// rows (`data::StreamingIdxSource`) instead of loading it fully
+    /// into memory. Batches are bitwise-identical to the in-memory
+    /// path; only residency changes. `None` = in-memory.
+    pub stream_chunk: Option<usize>,
 }
 
 impl Default for TrainOptions {
@@ -90,6 +101,8 @@ impl Default for TrainOptions {
             checkpoint_dir: None,
             resume: None,
             poisson: false,
+            stop: None,
+            stream_chunk: None,
         }
     }
 }
@@ -116,481 +129,54 @@ pub struct TrainReport {
     pub peak_rss_bytes: Option<u64>,
 }
 
-enum Sampler {
-    Shuffle(ShuffleBatcher),
-    Poisson(PoissonSampler),
-}
-
-impl Sampler {
-    fn next_batch(&mut self) -> Vec<usize> {
-        match self {
-            Sampler::Shuffle(b) => b.next_batch(),
-            Sampler::Poisson(p) => p.next_batch(),
-        }
-    }
-}
-
 pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> {
-    let cfg = backend.resolve(&opts.config)?;
-    let tau = cfg.batch;
-    anyhow::ensure!(
-        opts.dataset_n >= tau,
-        "dataset_n {} < batch {}",
-        opts.dataset_n,
-        tau
-    );
-    let q = tau as f64 / opts.dataset_n as f64;
-
-    // --- effective clip policy ---------------------------------------
-    // Every parametric layer is one (W, b) pair in manifest order, so
-    // policy group boundaries index cfg.params in steps of two.
-    let n_param_layers = cfg.params.len() / 2;
-    let policy = opts
-        .policy
-        .clone()
-        .unwrap_or_else(|| ClipPolicy::hard_global(opts.clip as f32));
-    if opts.method.is_private() {
-        policy.check(n_param_layers).with_context(|| {
-            format!("--clip-policy {policy} on config {}", cfg.name)
-        })?;
-    }
-    // The mechanism's L2 sensitivity — what the Gaussian noise must be
-    // calibrated to. The pre-policy flag path keeps the exact f64 clip
-    // (bitwise noise-stream continuity); an explicit policy computes
-    // C·sqrt(G) (= C for global granularities).
-    let sensitivity = match &opts.policy {
-        None => opts.clip,
-        Some(p) => p.sensitivity(n_param_layers),
-    };
-
-    // --- resume: restore params / step counter / accountant inputs ---
-    let mut start_step = 0u64;
-    let mut resume_init: Option<Vec<f32>> = None;
-    // (sampling rate, sigma) the checkpointed steps were run at — what
-    // the accountant must re-charge, regardless of the current flags
-    let mut resume_charge: Option<(f64, f64)> = None;
-    if let Some(dir) = &opts.resume {
-        let (meta, flat) = super::checkpoint::load(dir, &cfg)
-            .with_context(|| format!("resuming from {}", dir.display()))?;
-        anyhow::ensure!(
-            meta.step < opts.steps,
-            "checkpoint at {} already covers {} steps and --steps {} is a \
-             total, not an increment — raise --steps to continue training",
-            dir.display(),
-            meta.step,
-            opts.steps
-        );
-        // Continuity: the replayed sampler and the step-keyed noise
-        // stream both derive from the seed, so a silently different
-        // seed would diverge from the run being continued.
-        anyhow::ensure!(
-            opts.seed == meta.seed,
-            "resume: checkpoint at {} was trained with --seed {} but this \
-             run uses --seed {} — the replayed batch and noise streams \
-             would diverge from the run being continued",
-            dir.display(),
-            meta.seed,
-            opts.seed
-        );
-        // Sampling-mode continuity: the replayed sampler AND the
-        // RDP re-charge both assume the recorded regime — resuming a
-        // Poisson run with shuffle-partition (or vice versa) would
-        // silently change both the batch stream and the subsampling
-        // assumption the accountant's rate q rests on. A pre-PR5
-        // checkpoint recorded no mode (None): skip the check rather
-        // than misread the absence as shuffle-partition.
-        if let Some(was_poisson) = meta.poisson {
-            anyhow::ensure!(
-                opts.poisson == was_poisson,
-                "resume: checkpoint was trained with {} sampling but this \
-                 run uses {} — the replayed batch stream and the \
-                 accountant's subsampling assumption would both change \
-                 mid-run; {}",
-                if was_poisson { "--poisson" } else { "shuffle-partition" },
-                if opts.poisson { "--poisson" } else { "shuffle-partition" },
-                if was_poisson { "pass --poisson" } else { "drop --poisson" }
-            );
-        }
-        // Method continuity: all private methods agree to ~1e-5 but
-        // not bitwise, so switching mid-run is not a continuation of
-        // the same trajectory (and private/non-private switches would
-        // corrupt the epsilon report outright).
-        anyhow::ensure!(
-            meta.method == opts.method.name(),
-            "resume: checkpoint was trained with --method {} but this run \
-             uses --method {} — switch methods only in a fresh run; pass \
-             --method {}",
-            meta.method,
-            opts.method.name(),
-            meta.method
-        );
-        // Optimizer continuity: the name is validated (a pre-PR5
-        // checkpoint records none — skip); optimizer *state* is not
-        // checkpointed, so a stateful optimizer restarts its moments —
-        // warn loudly rather than silently diverging. With sgd
-        // (stateless) a resumed run is bitwise the continuous run.
-        if !meta.optimizer.is_empty() {
-            anyhow::ensure!(
-                opts.optimizer == meta.optimizer,
-                "resume: checkpoint was trained with --optimizer {} but \
-                 this run uses --optimizer {} — switching optimizers \
-                 mid-run is not a continuation; pass --optimizer {}",
-                meta.optimizer,
-                opts.optimizer,
-                meta.optimizer
-            );
-        }
-        // Learning-rate continuity (every method): the tail would
-        // silently train at a different rate than the recorded steps.
-        // A pre-PR5 checkpoint records no lr (0.0): skip.
-        if meta.lr > 0.0 {
-            anyhow::ensure!(
-                (opts.lr - meta.lr).abs() < 1e-12,
-                "resume: checkpoint records lr={} but this run passes \
-                 lr={} — the continuation would train at a different \
-                 rate; pass --lr {}",
-                meta.lr,
-                opts.lr,
-                meta.lr
-            );
-        }
-        if opts.optimizer != "sgd" {
-            crate::log_info!(
-                "resume: WARNING — optimizer state is not checkpointed; \
-                 {} restarts its moment estimates from zero at step {}, \
-                 so the continuation is not bitwise identical to an \
-                 uninterrupted run (use --optimizer sgd for exact \
-                 continuation)",
-                opts.optimizer,
-                meta.step
-            );
-        }
-        if opts.method.is_private() {
-            // The checkpoint records ONE (sampling_rate, sigma, clip)
-            // for its whole history, so the accountant cannot represent
-            // a heterogeneous chain: a later resume of the checkpoint
-            // this run writes would re-charge every step at whatever
-            // values are current here. Refuse the combinations that
-            // would corrupt (or double-count) the recorded privacy
-            // spend — or, for clip, silently break the continuation
-            // (noise_std and the clipping threshold both derive from
-            // it).
-            match &meta.clip_policy {
-                // policy-recording checkpoint: the canonical name is
-                // the policy's stable identity — compare it wholesale
-                Some(rec) => {
-                    anyhow::ensure!(
-                        *rec == policy.to_string(),
-                        "resume: checkpoint records clip policy {} but \
-                         this run clips under {} — the threshold \
-                         structure and the noise scale would change \
-                         mid-run; pass --clip-policy {}",
-                        rec,
-                        policy,
-                        rec
-                    );
-                }
-                // pre-policy checkpoint + pre-policy flags: the
-                // recorded bare clip IS the classical global hard
-                // policy — the original continuity check, verbatim
-                None if opts.policy.is_none() => {
-                    anyhow::ensure!(
-                        (opts.clip - meta.clip).abs() < 1e-12,
-                        "resume: checkpoint records clip={} but this run \
-                         passes clip={} — the clipping threshold and the \
-                         noise scale would both change mid-run; pass \
-                         --clip {}",
-                        meta.clip,
-                        opts.clip,
-                        meta.clip
-                    );
-                }
-                // pre-policy checkpoint + explicit --clip-policy: only
-                // the classical policy at the recorded threshold
-                // continues the same process (1e-6: the policy
-                // threshold is f32)
-                None => {
-                    anyhow::ensure!(
-                        policy.is_global_hard()
-                            && (policy.clip() as f64 - meta.clip).abs()
-                                < 1e-6,
-                        "resume: checkpoint predates clip policies — its \
-                         steps ran the classical global hard clip at {} — \
-                         but this run passes --clip-policy {}; pass \
-                         --clip-policy global:{} (or drop the flag and \
-                         pass --clip {})",
-                        meta.clip,
-                        policy,
-                        meta.clip,
-                        meta.clip
-                    );
-                }
-            }
-            anyhow::ensure!(
-                opts.target_eps.is_none(),
-                "resume: --target-eps would re-calibrate sigma as if all \
-                 {} steps were fresh budget, double-counting the {} \
-                 checkpointed steps' spend; pass --sigma explicitly (the \
-                 checkpoint records sigma={})",
-                opts.steps,
-                meta.step,
-                meta.sigma
-            );
-            anyhow::ensure!(
-                (opts.sigma - meta.sigma).abs() < 1e-12,
-                "resume: checkpoint records sigma={} but this run passes \
-                 sigma={} — the checkpoint written at the end could only \
-                 record one value for the whole history, mis-charging a \
-                 later resume; pass --sigma {}",
-                meta.sigma,
-                opts.sigma,
-                meta.sigma
-            );
-        }
-        // The sampling rate fixes both the replayed batch stream (the
-        // samplers are seeded over dataset_n) and, for private
-        // methods, the accountant's subsampling rate — so it must
-        // match for *every* method, not only private ones. Guard on a
-        // recorded rate > 0 (a damaged/ancient meta contributes
-        // nothing rather than a division by zero in the hint).
-        if meta.sampling_rate > 0.0 {
-            anyhow::ensure!(
-                (q - meta.sampling_rate).abs() < 1e-12,
-                "resume: checkpoint records sampling rate q={} but --n {} \
-                 gives q={} — the replayed batch stream (and any privacy \
-                 accounting) must cover the whole history at one rate; \
-                 pass --n {}",
-                meta.sampling_rate,
-                opts.dataset_n,
-                q,
-                (tau as f64 / meta.sampling_rate).round()
-            );
-        }
-        crate::log_info!(
-            "resume: {} at step {} (q={:.4}, sigma={:.3})",
-            dir.display(),
-            meta.step,
-            meta.sampling_rate,
-            meta.sigma
-        );
-        start_step = meta.step;
-        resume_charge = Some((meta.sampling_rate, meta.sigma));
-        resume_init = Some(flat);
-    }
-
-    // --- eval set size (was: a silent hardcoded `tau * 4`) ----------
-    let eval_n = match opts.eval_n {
-        Some(n) => {
-            anyhow::ensure!(
-                opts.eval_every > 0,
-                "--eval-n has no effect without --eval-every; set an \
-                 evaluation interval or drop --eval-n"
-            );
-            anyhow::ensure!(
-                n >= tau && n % tau == 0,
-                "--eval-n {n} must be a positive multiple of config {}'s \
-                 batch {tau} — evaluation runs in full batches and would \
-                 silently drop the remainder examples",
-                cfg.name
-            );
-            n
-        }
-        None => tau * 4,
-    };
-
-    // --- noise calibration (Alg 1, line 1) --------------------------
-    let sigma = match opts.target_eps {
-        Some(eps) if opts.method.is_private() => {
-            let s = calibrate_sigma(q, opts.steps, eps, opts.delta)
-                .context("target epsilon infeasible at sigma<=200")?;
-            crate::log_info!(
-                "calibrated sigma={:.3} for eps<={} delta={} over {} steps (q={:.4})",
-                s, eps, opts.delta, opts.steps, q
-            );
-            s
-        }
-        _ => opts.sigma,
-    };
-
-    // --- data --------------------------------------------------------
-    let ds = data::load_dataset(&cfg.dataset, opts.dataset_n, opts.seed)?;
-    let eval_ds = if opts.eval_every > 0 {
-        Some(data::load_dataset(&cfg.dataset, eval_n, opts.seed + 1)?)
-    } else {
-        None
-    };
-
-    // --- executables / params / optimizer ----------------------------
-    let mut computer = GradComputer::new(backend, &opts.config, opts.method)?;
-    let fwd_exe = if opts.eval_every > 0 {
-        Some(backend.load(&cfg, "fwd")?)
-    } else {
-        None
-    };
-    let init = match resume_init {
-        Some(flat) => flat,
-        None => init_params_glorot(&cfg, opts.seed),
-    };
-    let mut params = ParamStore::new(&cfg, Some(&init))?;
-    let mut opt = optim::by_name(&opts.optimizer, opts.lr)?;
-    let mut accountant = RdpAccountant::new();
-    if opts.method.is_private() && start_step > 0 {
-        // re-charge the checkpointed steps at their *recorded* rate and
-        // sigma: budget already spent cannot change just because the
-        // resumed run passes different flags
-        let (q0, s0) = resume_charge.expect("resume meta");
-        accountant.steps(q0, s0, start_step);
-    }
-    let mut sampler = if opts.poisson {
-        Sampler::Poisson(PoissonSampler::new(opts.dataset_n, tau, opts.seed))
-    } else {
-        Sampler::Shuffle(ShuffleBatcher::new(opts.dataset_n, tau, opts.seed))
-    };
-    // replay the sampler to the resume point, so a resumed run draws
-    // the same batch sequence the continuous run would have drawn
-    for _ in 0..start_step {
-        sampler.next_batch();
-    }
-
-    let mut stage = BatchStage::for_config(&cfg);
-    // one output arena for the whole run: the step resets it each
-    // call, so the warm loop performs zero per-step heap allocation
-    let mut out = computer.new_out();
-    let mut metrics = Metrics::new();
-    let noise_std = noise_stddev_for_mean(sigma, sensitivity, tau);
-
-    crate::log_info!(
-        "train {} method={} steps={} tau={} q={:.4} sigma={:.3} policy={} sens={} opt={}",
-        cfg.name, opts.method.name(), opts.steps, tau, q, sigma, policy, sensitivity, opts.optimizer
-    );
+    let mut session = TrainSession::new(backend, opts)?;
 
     // --- the loop (Alg 1, lines 2-16) --------------------------------
-    for step in start_step..opts.steps {
-        let t_step = Instant::now();
-
-        let t = PhaseTimer::start();
-        let batch = sampler.next_batch();
-        stage_batch(&ds, &batch, &mut stage);
-        t.stop(&mut metrics, Phase::Gather);
-
-        let t = PhaseTimer::start();
-        computer.compute(&mut params, &stage, &policy, &mut out)?;
-        t.stop(&mut metrics, Phase::Execute);
-        if let Some((gn, ng)) = out.group_norms() {
-            metrics.record_group_norms(gn, ng);
+    while !session.finished() {
+        // stop-flag check FIRST: a flag raised mid-step takes effect at
+        // the next boundary, and a flag preset before the run performs
+        // zero steps (checkpoint at the current — possibly resumed —
+        // step index).
+        if opts.stop.as_ref().is_some_and(|s| s.load(Ordering::SeqCst)) {
+            crate::log_info!(
+                "train: stop requested — writing final checkpoint at step {}",
+                session.step_index()
+            );
+            break;
         }
 
-        if opts.method.is_private() {
-            let t = PhaseTimer::start();
-            // §Perf L3 iteration 3: parallel chunked polar-method noise
-            // (was: sequential Box-Muller at 68% of step time) — one
-            // flat pass over the arena's gradient buffer.
-            crate::rng::add_noise_parallel(
-                out.grads.flat_mut(),
-                noise_std,
-                opts.seed,
-                step,
-            );
-            // poisoning guard (debug/test profile only): the noised
-            // gradient is the last value before the optimizer — a
-            // NaN/Inf here must fail at the source, not as a drifted
-            // loss many steps later
-            crate::runtime::store::debug_assert_finite(
-                out.grads.flat(),
-                "trainer noise path (post add_noise_parallel)",
-            );
-            accountant.step(q, sigma);
-            t.stop(&mut metrics, Phase::Noise);
-        }
+        let loss = session.step()?;
+        let done = session.step_index();
 
-        let t = PhaseTimer::start();
-        opt.step(&mut params.host, &out.grads);
-        params.mark_dirty();
-        t.stop(&mut metrics, Phase::Update);
-
-        metrics.record_step(t_step.elapsed().as_secs_f64(), out.loss);
-
-        if opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
-            let eps_str = if opts.method.is_private() {
-                let (e, a) = accountant.epsilon(opts.delta);
-                format!(" eps={:.3}(a={})", e, a)
-            } else {
-                String::new()
+        if opts.log_every > 0 && done % opts.log_every == 0 {
+            let eps_str = match session.epsilon() {
+                Some((e, a)) => format!(" eps={:.3}(a={})", e, a),
+                None => String::new(),
             };
             crate::log_info!(
                 "step {:>5} loss={:.4} ema={:.4}{}",
-                step + 1,
-                out.loss,
-                metrics.loss_ema.get().unwrap_or(0.0),
+                done,
+                loss,
+                session.loss_ema(),
                 eps_str
             );
         }
 
-        if let (Some(fwd), Some(eds)) = (&fwd_exe, &eval_ds) {
-            if (step + 1) % opts.eval_every == 0 {
-                let (l, a) = evaluate(fwd.as_ref(), &mut params, eds, &cfg)?;
-                metrics.record_eval(step + 1, l, a);
-                crate::log_info!(
-                    "eval  step {:>5} loss={:.4} acc={:.3}",
-                    step + 1,
-                    l,
-                    a
-                );
-            }
+        if session.eval_due() {
+            let (l, a) = session.run_eval()?;
+            crate::log_info!("eval  step {:>5} loss={:.4} acc={:.3}", done, l, a);
         }
     }
 
     // --- checkpoint ----------------------------------------------------
-    if let Some(dir) = &opts.checkpoint_dir {
-        super::checkpoint::save(
-            dir,
-            &super::checkpoint::CheckpointMeta {
-                config: cfg.name.clone(),
-                method: opts.method.name().into(),
-                optimizer: opts.optimizer.clone(),
-                step: opts.steps,
-                sampling_rate: q,
-                sigma,
-                clip: match &opts.policy {
-                    Some(p) => p.clip() as f64,
-                    None => opts.clip,
-                },
-                lr: opts.lr,
-                seed: opts.seed,
-                poisson: Some(opts.poisson),
-                clip_policy: Some(policy.to_string()),
-            },
-            &params,
-        )?;
-        crate::log_info!("checkpoint written to {}", dir.display());
+    if session.maybe_checkpoint()? {
+        if let Some(dir) = &opts.checkpoint_dir {
+            crate::log_info!("checkpoint written to {}", dir.display());
+        }
     }
 
-    let epsilon = if opts.method.is_private() {
-        Some(accountant.epsilon(opts.delta))
-    } else {
-        None
-    };
-    let mean_step_ms = metrics
-        .step_summary()
-        .map(|s| s.mean * 1e3)
-        .unwrap_or(0.0);
-    Ok(TrainReport {
-        config: cfg.name,
-        method: opts.method,
-        steps: opts.steps,
-        final_loss_ema: metrics.loss_ema.get().unwrap_or(f64::NAN),
-        losses: metrics.losses.clone(),
-        eval_points: metrics.eval_points.clone(),
-        epsilon,
-        sigma,
-        policy: policy.to_string(),
-        sensitivity,
-        sampling_rate: q,
-        wall_seconds: metrics.wall_seconds(),
-        mean_step_ms,
-        metrics_json: metrics.to_json(),
-        peak_rss_bytes: crate::util::peak_rss_bytes(),
-    })
+    Ok(session.finish().0)
 }
 
 /// Stage a batch of examples into the upload buffers.

@@ -53,13 +53,22 @@ impl ShuffleBatcher {
 
     /// Next batch of exactly tau indices; reshuffles between epochs.
     pub fn next_batch(&mut self) -> Batch {
+        let mut b = Vec::with_capacity(self.tau);
+        self.next_batch_into(&mut b);
+        b
+    }
+
+    /// `next_batch` into a caller-owned buffer — the warm-loop form:
+    /// with `out` at capacity >= tau this performs zero heap
+    /// allocation. Draw-order-identical to `next_batch`.
+    pub fn next_batch_into(&mut self, out: &mut Vec<usize>) {
         if self.cursor + self.tau > self.n {
             self.epoch += 1;
             self.reshuffle();
         }
-        let b = self.order[self.cursor..self.cursor + self.tau].to_vec();
+        out.clear();
+        out.extend_from_slice(&self.order[self.cursor..self.cursor + self.tau]);
         self.cursor += self.tau;
-        b
     }
 }
 
@@ -70,6 +79,11 @@ pub struct PoissonSampler {
     q: f64,
     tau: usize,
     rng: ChaCha20,
+    /// scratch for the short-draw padding path (`next_batch_into`):
+    /// membership mask + complement buffer, allocated once so the warm
+    /// sampling loop is heap-allocation-free
+    in_draw: Vec<bool>,
+    rest: Vec<usize>,
 }
 
 impl PoissonSampler {
@@ -80,6 +94,8 @@ impl PoissonSampler {
             q: tau as f64 / n as f64,
             tau,
             rng: ChaCha20::seeded(seed, streams::SAMPLER),
+            in_draw: vec![false; n],
+            rest: Vec::with_capacity(n),
         }
     }
 
@@ -99,27 +115,47 @@ impl PoissonSampler {
     /// fixed batch ABI"). Oversized draws are truncated uniformly,
     /// which cannot introduce duplicates.
     pub fn next_batch(&mut self) -> Batch {
-        let mut picked: Vec<usize> =
-            (0..self.n).filter(|_| self.rng.next_f64() < self.q).collect();
-        if picked.len() < self.tau {
-            let mut in_draw = vec![false; self.n];
-            for &i in &picked {
-                in_draw[i] = true;
-            }
-            let mut rest: Vec<usize> =
-                (0..self.n).filter(|&i| !in_draw[i]).collect();
-            // tau <= n, so the complement always has enough indices
-            let need = self.tau - picked.len();
-            for j in 0..need {
-                let k = j + self.rng.next_bounded((rest.len() - j) as u64) as usize;
-                rest.swap(j, k);
-                picked.push(rest[j]);
-            }
-        } else if picked.len() > self.tau {
-            shuffle(&mut self.rng, &mut picked);
-            picked.truncate(self.tau);
-        }
+        let mut picked = Vec::new();
+        self.next_batch_into(&mut picked);
         picked
+    }
+
+    /// `next_batch` into a caller-owned buffer — the warm-loop form.
+    /// Raw draw sizes vary binomially, so a zero-allocation caller
+    /// reserves `out` to capacity `n` (the maximum possible draw), not
+    /// tau. Draws exactly the same RNG sequence as the padding and
+    /// truncation paths always have, so the batch stream is unchanged.
+    pub fn next_batch_into(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        for i in 0..self.n {
+            if self.rng.next_f64() < self.q {
+                out.push(i);
+            }
+        }
+        if out.len() < self.tau {
+            for b in self.in_draw.iter_mut() {
+                *b = false;
+            }
+            for &i in out.iter() {
+                self.in_draw[i] = true;
+            }
+            self.rest.clear();
+            for i in 0..self.n {
+                if !self.in_draw[i] {
+                    self.rest.push(i);
+                }
+            }
+            // tau <= n, so the complement always has enough indices
+            let need = self.tau - out.len();
+            for j in 0..need {
+                let k = j + self.rng.next_bounded((self.rest.len() - j) as u64) as usize;
+                self.rest.swap(j, k);
+                out.push(self.rest[j]);
+            }
+        } else if out.len() > self.tau {
+            shuffle(&mut self.rng, out);
+            out.truncate(self.tau);
+        }
     }
 
     /// Raw Poisson draw (variable size) — used by tests to check the
@@ -271,6 +307,24 @@ mod tests {
         }
         let mean = counts.iter().sum::<usize>() as f64 / 1000.0 / draws as f64;
         assert!((mean - 0.1).abs() < 0.01, "inclusion rate {}", mean);
+    }
+
+    /// The buffer-reuse API must replay the exact draw stream of the
+    /// allocating API — the whole bitwise-resume story rides on the
+    /// batch sequence being a pure function of (seed, call count).
+    #[test]
+    fn next_batch_into_matches_next_batch_stream() {
+        let mut a = ShuffleBatcher::new(30, 5, 9);
+        let mut b = ShuffleBatcher::new(30, 5, 9);
+        let mut pa = PoissonSampler::new(20, 18, 7);
+        let mut pb = PoissonSampler::new(20, 18, 7);
+        let mut buf = Vec::new();
+        for _ in 0..40 {
+            a.next_batch_into(&mut buf);
+            assert_eq!(buf, b.next_batch());
+            pa.next_batch_into(&mut buf);
+            assert_eq!(buf, pb.next_batch());
+        }
     }
 
     #[test]

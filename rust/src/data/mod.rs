@@ -3,9 +3,13 @@
 
 pub mod batcher;
 pub mod idx;
+pub mod source;
+pub mod stream;
 pub mod synth;
 
 pub use batcher::{Batch, PoissonSampler, ShuffleBatcher};
+pub use source::DataSource;
+pub use stream::StreamingIdxSource;
 pub use synth::{by_name, Dataset, Features};
 
 use anyhow::Result;

@@ -1,0 +1,111 @@
+//! The `DataSource` seam: samplers decide *which* rows make a batch
+//! (`batcher.rs` draws indices), sources decide *how* those rows are
+//! materialized into the staging buffers. The in-memory [`Dataset`] is
+//! the default impl; [`stream::StreamingIdxSource`](super::stream)
+//! materializes rows from an IDX file through a bounded chunk cache,
+//! so Poisson sampling works over datasets that do not fit in memory.
+//!
+//! `fill_batch` takes `&mut self` deliberately: a streaming source
+//! mutates its chunk cache while an in-memory one does not, and the
+//! trait must cover both. It is a warm-loop call — implementations
+//! must not allocate once warm.
+
+use super::synth::{Dataset, Features};
+use crate::runtime::BatchStage;
+use anyhow::Result;
+
+/// A dataset the training loop can draw batches from by row index.
+pub trait DataSource: Send {
+    /// Number of examples addressable by `fill_batch`.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat element count of one example (product of the example
+    /// shape) — what one staged row occupies in the feature buffer.
+    fn example_len(&self) -> usize;
+
+    /// Whether examples stage into `feat_f32` (vs `feat_i32`).
+    fn is_f32(&self) -> bool;
+
+    /// Dataset name, for error messages and logs.
+    fn name(&self) -> &str;
+
+    /// Materialize `indices[slot]` into row `slot` of the stage's
+    /// feature/label buffers. The stage must already be sized for
+    /// exactly `indices.len()` examples of `example_len()` elements.
+    fn fill_batch(
+        &mut self,
+        indices: &[usize],
+        stage: &mut BatchStage,
+    ) -> Result<()>;
+}
+
+impl DataSource for Dataset {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn example_len(&self) -> usize {
+        Dataset::example_len(self)
+    }
+
+    fn is_f32(&self) -> bool {
+        matches!(self.features, Features::F32(_))
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fill_batch(
+        &mut self,
+        indices: &[usize],
+        stage: &mut BatchStage,
+    ) -> Result<()> {
+        match self.features {
+            Features::F32(_) => super::gather_batch_f32(
+                self,
+                indices,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            ),
+            Features::I32(_) => super::gather_batch_i32(
+                self,
+                indices,
+                &mut stage.feat_i32,
+                &mut stage.labels,
+            ),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn dataset_fill_batch_matches_gather() {
+        let mut ds = synth::synth_images("t", 10, &[1, 2, 2], 2, 1);
+        let batch = vec![3usize, 7, 1];
+        let mut stage = BatchStage {
+            feat_f32: vec![0.0; 3 * 4],
+            feat_i32: Vec::new(),
+            labels: vec![0; 3],
+            input_dims: vec![3, 1, 2, 2],
+            is_f32: true,
+        };
+        ds.fill_batch(&batch, &mut stage).unwrap();
+        let mut row = vec![0f32; 4];
+        ds.copy_f32(7, &mut row);
+        assert_eq!(&stage.feat_f32[4..8], &row[..]);
+        assert_eq!(stage.labels[1], ds.labels[7]);
+        assert_eq!(DataSource::len(&ds), 10);
+        assert_eq!(DataSource::example_len(&ds), 4);
+        assert!(ds.is_f32());
+    }
+}

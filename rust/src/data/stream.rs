@@ -1,0 +1,337 @@
+//! Chunked IDX-backed [`DataSource`]: train from a dataset that does
+//! not fit in memory. Only the labels (1 byte/example on disk, i32 in
+//! memory) and one aligned chunk of `chunk_rows` images are resident
+//! at a time — peak feature residency is bounded by the chunk size,
+//! not the dataset size.
+//!
+//! Batch indices arrive in sampler order (Poisson draws are ascending,
+//! shuffle draws are not); `fill_batch` sorts a persistent
+//! `(row, slot)` scratch so each aligned chunk is read from disk at
+//! most once per batch, then scatters rows to their original slots —
+//! the staged batch is byte-identical to the in-memory gather.
+
+use super::source::DataSource;
+use crate::runtime::BatchStage;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+pub struct StreamingIdxSource {
+    name: String,
+    file: File,
+    /// byte offset of row 0 in the image file (magic + dims)
+    header_bytes: u64,
+    n: usize,
+    shape: Vec<usize>,
+    /// bytes (= u8 elements) of one image row on disk
+    example_bytes: usize,
+    /// labels stay fully resident: 4 bytes/example vs
+    /// `example_bytes` (~784 for MNIST) per image row
+    labels: Vec<i32>,
+    chunk_rows: usize,
+    cache_start: usize,
+    /// rows currently valid in `cache`; 0 = nothing cached yet
+    cache_len: usize,
+    cache: Vec<u8>,
+    /// per-batch (row, slot) scratch, sorted by row so each chunk
+    /// loads at most once per batch
+    order: Vec<(usize, usize)>,
+}
+
+impl StreamingIdxSource {
+    /// Open an images/labels IDX pair. Validates the same invariants
+    /// as `idx::load_idx_dataset` (3-dim u8 images, matching label
+    /// count, labels < `n_classes`) without materializing the images.
+    pub fn open(
+        name: &str,
+        images: &Path,
+        labels: &Path,
+        n_classes: usize,
+        chunk_rows: usize,
+    ) -> Result<StreamingIdxSource> {
+        let lab = super::idx::read_idx(labels)
+            .with_context(|| format!("reading labels {}", labels.display()))?;
+        if lab.dims.len() != 1 {
+            bail!("labels must be 1-dimensional, got {:?}", lab.dims);
+        }
+        for (i, &b) in lab.data.iter().enumerate() {
+            if b as usize >= n_classes {
+                bail!("label {} at index {} out of range 0..{}", b, i, n_classes);
+            }
+        }
+
+        let mut file = File::open(images)
+            .with_context(|| format!("opening images {}", images.display()))?;
+        let mut head = [0u8; 4];
+        file.read_exact(&mut head)
+            .with_context(|| format!("reading IDX magic of {}", images.display()))?;
+        if head[0] != 0 || head[1] != 0 {
+            bail!("{}: bad IDX magic {:?}", images.display(), head);
+        }
+        if head[2] != 0x08 {
+            bail!("{}: only u8 IDX supported, dtype 0x{:02x}", images.display(), head[2]);
+        }
+        if head[3] != 3 {
+            bail!(
+                "{}: streaming images must be 3-dimensional (n, h, w), got {} dims",
+                images.display(),
+                head[3]
+            );
+        }
+        let mut dims = [0usize; 3];
+        for d in dims.iter_mut() {
+            let mut b = [0u8; 4];
+            file.read_exact(&mut b)
+                .with_context(|| format!("reading IDX dims of {}", images.display()))?;
+            *d = u32::from_be_bytes(b) as usize;
+        }
+        let (n, h, w) = (dims[0], dims[1], dims[2]);
+        let header_bytes = 4 + 4 * 3u64;
+        let example_bytes = h * w;
+        if n != lab.data.len() {
+            bail!("{} images vs {} labels", n, lab.data.len());
+        }
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("stat {}", images.display()))?
+            .len();
+        let expect = header_bytes + (n * example_bytes) as u64;
+        if file_len != expect {
+            bail!(
+                "{}: file is {} bytes, dims {:?} need {}",
+                images.display(),
+                file_len,
+                dims,
+                expect
+            );
+        }
+        if n == 0 || example_bytes == 0 {
+            bail!("{}: empty image dims {:?}", images.display(), dims);
+        }
+
+        let chunk_rows = chunk_rows.clamp(1, n);
+        Ok(StreamingIdxSource {
+            name: name.to_string(),
+            file,
+            header_bytes,
+            n,
+            shape: vec![1, h, w],
+            example_bytes,
+            labels: lab.data.iter().map(|&b| b as i32).collect(),
+            chunk_rows,
+            cache_start: 0,
+            cache_len: 0,
+            cache: Vec::with_capacity(chunk_rows * example_bytes),
+            order: Vec::new(),
+        })
+    }
+
+    /// Resolve the IDX pair for a config's dataset name under
+    /// `FASTCLIP_DATA_DIR` (same mapping as `data::load_dataset`).
+    pub fn open_for_dataset(name: &str, chunk_rows: usize) -> Result<StreamingIdxSource> {
+        let dir = std::env::var("FASTCLIP_DATA_DIR").map(std::path::PathBuf::from).map_err(|_| {
+            anyhow::anyhow!(
+                "--stream-chunk needs FASTCLIP_DATA_DIR pointing at the IDX \
+                 files for dataset {name:?} (streaming reads from disk; \
+                 synthetic datasets are already in memory)"
+            )
+        })?;
+        let (imgs, lbls) = match name {
+            "mnist" => ("train-images-idx3-ubyte", "train-labels-idx1-ubyte"),
+            "fmnist" => (
+                "fmnist-train-images-idx3-ubyte",
+                "fmnist-train-labels-idx1-ubyte",
+            ),
+            other => bail!(
+                "no IDX file mapping for dataset {other:?} — streaming \
+                 supports mnist and fmnist"
+            ),
+        };
+        crate::log_info!("streaming {name} from {} (chunk {chunk_rows} rows)", dir.display());
+        Self::open(name, &dir.join(imgs), &dir.join(lbls), 10, chunk_rows)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Bytes this source keeps resident: the chunk cache, the label
+    /// table, and the per-batch scratch. The residency test bounds
+    /// this by chunk size, not dataset size.
+    pub fn resident_bytes(&self) -> usize {
+        self.cache.capacity()
+            + self.labels.capacity() * std::mem::size_of::<i32>()
+            + self.order.capacity() * std::mem::size_of::<(usize, usize)>()
+    }
+
+    /// Ensure `row` is inside the cache, loading its aligned chunk if
+    /// not. Aligned chunks (not sliding windows) make the set of disk
+    /// reads a pure function of the batch's row set.
+    fn ensure_row(&mut self, row: usize) -> Result<()> {
+        if self.cache_len > 0
+            && row >= self.cache_start
+            && row < self.cache_start + self.cache_len
+        {
+            return Ok(());
+        }
+        let start = (row / self.chunk_rows) * self.chunk_rows;
+        let rows = self.chunk_rows.min(self.n - start);
+        let bytes = rows * self.example_bytes;
+        // capacity was reserved for a full chunk at open: resize never
+        // reallocates, so the warm fill path stays allocation-free
+        self.cache.resize(bytes, 0);
+        self.file.seek(SeekFrom::Start(
+            self.header_bytes + (start * self.example_bytes) as u64,
+        ))?;
+        self.file
+            .read_exact(&mut self.cache[..bytes])
+            .with_context(|| {
+                format!("reading rows {}..{} of {}", start, start + rows, self.name)
+            })?;
+        self.cache_start = start;
+        self.cache_len = rows;
+        Ok(())
+    }
+}
+
+impl DataSource for StreamingIdxSource {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn example_len(&self) -> usize {
+        self.example_bytes
+    }
+
+    fn is_f32(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fill_batch(
+        &mut self,
+        indices: &[usize],
+        stage: &mut BatchStage,
+    ) -> Result<()> {
+        let d = self.example_bytes;
+        anyhow::ensure!(stage.is_f32, "streaming IDX source stages f32 images");
+        anyhow::ensure!(
+            stage.feat_f32.len() == indices.len() * d
+                && stage.labels.len() == indices.len(),
+            "stage sized for {} examples of {}, got batch of {}",
+            stage.labels.len(),
+            stage.feat_f32.len() / d.max(1),
+            indices.len()
+        );
+        self.order.clear();
+        for (slot, &row) in indices.iter().enumerate() {
+            anyhow::ensure!(row < self.n, "row {} out of range 0..{}", row, self.n);
+            self.order.push((row, slot));
+        }
+        // in-place sort: ascending rows visit each aligned chunk once
+        self.order.sort_unstable();
+        for k in 0..self.order.len() {
+            let (row, slot) = self.order[k];
+            self.ensure_row(row)?;
+            let off = (row - self.cache_start) * d;
+            let src = &self.cache[off..off + d];
+            let dst = &mut stage.feat_f32[slot * d..(slot + 1) * d];
+            // same u8 -> f32 map as idx::load_idx_dataset, so staged
+            // rows are bitwise equal to the in-memory gather
+            for (o, &b) in dst.iter_mut().zip(src) {
+                *o = b as f32 / 255.0;
+            }
+            stage.labels[slot] = self.labels[row];
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::idx::{write_idx, IdxArray};
+    use std::path::PathBuf;
+
+    fn write_pair(dir: &Path, n: usize) -> (PathBuf, PathBuf) {
+        std::fs::create_dir_all(dir).unwrap();
+        let imgs = IdxArray {
+            dims: vec![n, 4, 3],
+            data: (0..n * 12).map(|i| (i * 31 % 251) as u8).collect(),
+        };
+        let lbls = IdxArray {
+            dims: vec![n],
+            data: (0..n).map(|i| (i % 10) as u8).collect(),
+        };
+        let pi = dir.join("imgs.idx");
+        let pl = dir.join("lbls.idx");
+        write_idx(&pi, &imgs).unwrap();
+        write_idx(&pl, &lbls).unwrap();
+        (pi, pl)
+    }
+
+    fn stage_for(n: usize, d: usize) -> BatchStage {
+        BatchStage {
+            feat_f32: vec![0.0; n * d],
+            feat_i32: Vec::new(),
+            labels: vec![0; n],
+            input_dims: vec![n as i64, 1, 4, 3],
+            is_f32: true,
+        }
+    }
+
+    #[test]
+    fn streams_rows_identical_to_in_memory_load() {
+        let dir = std::env::temp_dir().join("fastclip_stream_unit");
+        let (pi, pl) = write_pair(&dir, 50);
+        let mut mem = crate::data::idx::load_idx_dataset("t", &pi, &pl, 10).unwrap();
+        let mut st = StreamingIdxSource::open("t", &pi, &pl, 10, 7).unwrap();
+        assert_eq!(DataSource::len(&st), 50);
+        assert_eq!(st.shape(), &[1, 4, 3]);
+        // scattered, unsorted, chunk-straddling batch
+        let batch = vec![49usize, 0, 13, 7, 48, 6];
+        let mut sa = stage_for(6, 12);
+        let mut sb = stage_for(6, 12);
+        DataSource::fill_batch(&mut mem, &batch, &mut sa).unwrap();
+        st.fill_batch(&batch, &mut sb).unwrap();
+        assert_eq!(sa.feat_f32, sb.feat_f32);
+        assert_eq!(sa.labels, sb.labels);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn residency_bounded_by_chunk_not_dataset() {
+        let dir = std::env::temp_dir().join("fastclip_stream_resident");
+        let n = 400;
+        let (pi, pl) = write_pair(&dir, n);
+        let mut st = StreamingIdxSource::open("t", &pi, &pl, 10, 16).unwrap();
+        let mut stage = stage_for(8, 12);
+        for s in 0..30 {
+            let batch: Vec<usize> = (0..8).map(|i| (s * 53 + i * 41) % n).collect();
+            st.fill_batch(&batch, &mut stage).unwrap();
+        }
+        let full_f32 = n * 12 * 4; // what the in-memory Dataset holds
+        assert!(
+            st.resident_bytes() < full_f32 / 4,
+            "resident {} vs in-memory {}",
+            st.resident_bytes(),
+            full_f32
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_image_file_refused() {
+        let dir = std::env::temp_dir().join("fastclip_stream_trunc");
+        let (pi, pl) = write_pair(&dir, 20);
+        let full = std::fs::read(&pi).unwrap();
+        std::fs::write(&pi, &full[..full.len() / 2]).unwrap();
+        let err = StreamingIdxSource::open("t", &pi, &pl, 10, 8).unwrap_err();
+        assert!(err.to_string().contains("bytes"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

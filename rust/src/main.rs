@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train         run DP training on one config (paper Alg 1)
+//!   serve         interleave many training jobs from a jobs file
 //!   bench-step    time one (config, method) step
 //!   bench-matrix  time a config x method matrix, write BENCH_<backend>.json
 //!   accountant    RDP accounting / sigma calibration queries
@@ -36,6 +37,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "bench-step" => cmd_bench_step(&args),
         "bench-matrix" => cmd_bench_matrix(&args),
         "bench-history" => cmd_bench_history(&args),
@@ -95,6 +97,22 @@ kernel/stride/batch); the pjrt backend is manifest-bound.
               match the checkpoint; --target-eps is rejected).
               --eval-n sizes the eval set (default 4 batches; must be
               a multiple of the config batch — eval runs full batches)
+              --stream-chunk N streams the dataset from its IDX files
+              in N-row chunks instead of loading it fully into memory
+              (bitwise-identical batches; bounded residency)
+              Ctrl-C checkpoints at the next step boundary and exits
+              cleanly; a second Ctrl-C force-exits
+  serve       --jobs FILE [--max-concurrent N] [--json]
+              interleaves TrainSession steps from many concurrent jobs
+              (round-robin; each job bitwise-identical to a solo run).
+              FILE is {{"max_concurrent": N, "jobs": [{{...}}, ...]}} —
+              per-job keys mirror the train flags (config, method,
+              steps, n, lr, clip|clip_policy, sigma, delta, optimizer,
+              seed, eval_every, eval_n, log_every, poisson, checkpoint,
+              stream_chunk) plus "target_eps": a hard epsilon budget —
+              the scheduler refuses any step that would exceed it and
+              retires the job with a final checkpoint. See
+              examples/serve_jobs.json
   bench-step  (--config NAME | --model SPEC [--dataset D] [--batch N])
               --method M [--iters N] [--clip-policy P]
   bench-matrix [--configs NAME,NAME,...] [--methods M,M,...] [--smoke]
@@ -214,6 +232,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_dir: args.str_opt("checkpoint").map(Into::into),
         resume: args.str_opt("resume").map(Into::into),
         poisson: args.bool("poisson"),
+        // Ctrl-C breaks the loop at the next step boundary and writes
+        // the final checkpoint; a second Ctrl-C force-exits
+        stop: Some(fastclip::util::signal::install_sigint()),
+        stream_chunk: match args.str_opt("stream-chunk") {
+            Some(v) => Some(v.parse().with_context(|| {
+                format!("--stream-chunk expects an integer, got {v:?}")
+            })?),
+            None => None,
+        },
     };
     let backend = backend(args)?;
     let report = train(backend.as_ref(), &opts)?;
@@ -261,6 +288,69 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn opts_delta(args: &Args) -> Result<f64> {
     args.f64_or("delta", 1e-5)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fastclip::coordinator::{parse_jobs, serve, ServeOptions};
+    let path = args.require("jobs")?;
+    let text = util::read_file(std::path::Path::new(path))?;
+    let (jobs, file_maxc) = parse_jobs(&text)
+        .with_context(|| format!("parsing jobs file {path:?}"))?;
+    let max_concurrent = match args.str_opt("max-concurrent") {
+        Some(v) => v.parse().with_context(|| {
+            format!("--max-concurrent expects an integer, got {v:?}")
+        })?,
+        None => file_maxc,
+    };
+    let backend = backend(args)?;
+    let sopts = ServeOptions {
+        max_concurrent,
+        // first Ctrl-C checkpoints every live job and skips pending
+        // ones; a second Ctrl-C force-exits
+        stop: Some(fastclip::util::signal::install_sigint()),
+    };
+    let report = serve(backend.as_ref(), &jobs, &sopts)?;
+    if args.bool("json") {
+        let mut arr = Vec::new();
+        for o in &report.outcomes {
+            let mut j = Json::obj();
+            j.set("name", o.name.as_str().into());
+            j.set("steps", (o.report.steps as usize).into());
+            j.set("budget_stopped", o.budget_stopped.into());
+            j.set("loss_ema", o.report.final_loss_ema.into());
+            if let Some((e, a)) = o.report.epsilon {
+                j.set("epsilon", e.into());
+                j.set("rdp_order", (a as usize).into());
+            }
+            arr.push(j);
+        }
+        let mut top = Json::obj();
+        top.set("stopped_early", report.stopped_early.into());
+        top.set("jobs", Json::Arr(arr));
+        println!("{}", top.to_string_pretty());
+    } else {
+        println!("| job | steps | loss(ema) | epsilon | budget stop |");
+        println!("|---|---:|---:|---:|---|");
+        for o in &report.outcomes {
+            let eps = o
+                .report
+                .epsilon
+                .map(|(e, _)| format!("{e:.3}"))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "| {} | {} | {:.4} | {} | {} |",
+                o.name,
+                o.report.steps,
+                o.report.final_loss_ema,
+                eps,
+                if o.budget_stopped { "yes" } else { "no" }
+            );
+        }
+        if report.stopped_early {
+            println!("stopped early (interrupt): pending jobs were skipped");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_bench_step(args: &Args) -> Result<()> {

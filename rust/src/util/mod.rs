@@ -4,6 +4,7 @@
 pub mod alloc;
 pub mod json;
 pub mod logging;
+pub mod signal;
 pub mod stats;
 
 use anyhow::{Context, Result};

@@ -1,0 +1,79 @@
+//! Graceful-shutdown flag: `install_sigint` returns a shared
+//! `AtomicBool` that flips on the first SIGINT. The training loop and
+//! the serve scheduler poll it at step boundaries, write a final
+//! checkpoint (which carries the accountant's inputs — step count,
+//! rate, sigma — so no privacy spend is lost), and exit cleanly. A
+//! second SIGINT force-exits: an operator mashing Ctrl-C mid-
+//! checkpoint still gets their terminal back.
+//!
+//! Zero-dependency: the handler is registered through libc's
+//! `signal(2)`, already linked by std. Everything the handler touches
+//! is a static atomic — async-signal-safe by construction.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, OnceLock};
+
+static FLAG: OnceLock<Arc<AtomicBool>> = OnceLock::new();
+static HITS: AtomicU32 = AtomicU32::new(0);
+
+extern "C" fn on_sigint(_signum: i32) {
+    let hits = HITS.fetch_add(1, Ordering::SeqCst);
+    if hits == 0 {
+        if let Some(flag) = FLAG.get() {
+            flag.store(true, Ordering::SeqCst);
+        }
+    } else {
+        extern "C" {
+            fn _exit(code: i32) -> !;
+        }
+        // SAFETY: _exit is async-signal-safe (POSIX) and terminates
+        // the process without running any user code — exactly the
+        // force-exit semantics the second Ctrl-C asks for. 130 =
+        // 128 + SIGINT, the conventional interrupted-exit status.
+        unsafe { _exit(130) }
+    }
+}
+
+/// Install the SIGINT handler (idempotent) and return the stop flag.
+/// On non-unix targets the handler is not installed; the flag is
+/// still returned so callers need no cfg of their own.
+pub fn install_sigint() -> Arc<AtomicBool> {
+    let flag = FLAG.get_or_init(|| Arc::new(AtomicBool::new(false)));
+    #[cfg(unix)]
+    {
+        const SIGINT: i32 = 2;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        // SAFETY: registering an async-signal-safe handler (it only
+        // touches static atomics and _exit) for SIGINT; signal(2) is
+        // the portable-enough registration path on the unix targets
+        // we build for, and re-registering the same handler is a
+        // no-op, so repeated calls are fine.
+        unsafe {
+            let _ = signal(SIGINT, on_sigint);
+        }
+    }
+    Arc::clone(flag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_hit_sets_flag_second_would_force_exit() {
+        // drive the handler directly (raising a real SIGINT would kill
+        // the whole test harness); HITS is process-global, so this
+        // test owns both transitions in one body
+        let flag = install_sigint();
+        assert!(!flag.load(Ordering::SeqCst));
+        on_sigint(2);
+        assert!(flag.load(Ordering::SeqCst));
+        assert_eq!(HITS.load(Ordering::SeqCst), 1);
+        // the second hit calls _exit — assert only the counter's
+        // state machine is armed, don't pull the trigger
+        let same = install_sigint();
+        assert!(Arc::ptr_eq(&flag, &same));
+    }
+}

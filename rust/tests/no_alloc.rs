@@ -104,4 +104,46 @@ fn warm_step_path_performs_zero_heap_allocations() {
             }
         }
     }
+
+    // --- TrainSession::step(): the whole warm training step ----------
+    // (sample → gather → compute clipped grads → noise → account →
+    // optimizer update) must also be allocation-free: the batch buffer,
+    // the Poisson scratch, the staging buffers, the arena, and the
+    // metrics vectors are all pre-sized at session construction. Both
+    // sampling regimes are probed — Poisson exercises the pad/truncate
+    // scratch, shuffle the epoch re-shuffle.
+    use fastclip::coordinator::{ClipMethod, TrainOptions, TrainSession};
+    for poisson in [false, true] {
+        let opts = TrainOptions {
+            config: "mlp2_mnist_b32".into(),
+            method: ClipMethod::Reweight,
+            steps: 64,
+            dataset_n: 64,
+            optimizer: "adam".into(),
+            log_every: 0,
+            poisson,
+            seed: 5,
+            ..TrainOptions::default()
+        };
+        let mut session = TrainSession::new(&backend, &opts).unwrap();
+        let mut delta = u64::MAX;
+        rayon::scope(|_| {
+            // warm up: adam's first step sizes its moment buffers; the
+            // first computes size scratch and arena
+            for _ in 0..3 {
+                session.step().unwrap();
+            }
+            let before = allocation_count();
+            for _ in 0..5 {
+                session.step().unwrap();
+            }
+            delta = allocation_count() - before;
+        });
+        assert_eq!(
+            delta, 0,
+            "TrainSession::step (poisson={poisson}): {delta} heap \
+             allocations across 5 warm steps — the session \
+             zero-allocation contract is broken"
+        );
+    }
 }

@@ -1,0 +1,265 @@
+//! Serve-scheduler suite: interleaved multi-job training must be
+//! bitwise-identical per job to solo runs, the privacy-budget ledger
+//! must stop jobs strictly within their epsilon budgets, the whole
+//! scheduler must be deterministic, and a preset stop flag must retire
+//! admitted jobs with truthful step-0 checkpoints.
+
+use fastclip::coordinator::{
+    checkpoint, serve, train, ClipMethod, JobSpec, ServeOptions, TrainOptions,
+};
+use fastclip::runtime::{Backend, NativeBackend};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, OnceLock};
+
+fn native() -> &'static NativeBackend {
+    static B: OnceLock<NativeBackend> = OnceLock::new();
+    B.get_or_init(NativeBackend::new)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastclip_serve_{name}"));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn base_opts(config: &str, steps: u64, seed: u64, ckpt: &Path) -> TrainOptions {
+    TrainOptions {
+        config: config.into(),
+        method: ClipMethod::Reweight,
+        steps,
+        dataset_n: 96,
+        optimizer: "sgd".into(),
+        lr: 0.05,
+        log_every: 0,
+        seed,
+        checkpoint_dir: Some(ckpt.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+fn params_bytes(dir: &Path) -> Vec<u8> {
+    std::fs::read(dir.join("params.bin")).unwrap()
+}
+
+/// The serve acceptance gate: three jobs (two concurrent slots, so the
+/// third recycles a retired job's arena — across *different* configs)
+/// produce, per job, exactly the params / losses / epsilon of solo
+/// `train()` runs with the same options.
+#[test]
+fn interleaved_serve_matches_solo_runs_bitwise() {
+    let dirs_serve: Vec<PathBuf> =
+        ["a", "b", "c"].iter().map(|n| tmp(&format!("mix_{n}"))).collect();
+    let dirs_solo: Vec<PathBuf> =
+        ["a", "b", "c"].iter().map(|n| tmp(&format!("solo_{n}"))).collect();
+
+    let mut opt_a = base_opts("mlp2_mnist_b32", 6, 3, &dirs_serve[0]);
+    opt_a.poisson = true;
+    let mut opt_b = base_opts("mlp2_mnist_b32", 9, 7, &dirs_serve[1]);
+    opt_b.policy =
+        Some(fastclip::runtime::ClipPolicy::parse("per_layer:0.5").unwrap());
+    opt_b.dataset_n = 128;
+    // different model family: the pooled arena C inherits from a
+    // retired job must re-layout, not reuse stale shapes
+    let opt_c = base_opts("mlp4_mnist_b32", 4, 9, &dirs_serve[2]);
+
+    let jobs: Vec<JobSpec> = [("a", &opt_a), ("b", &opt_b), ("c", &opt_c)]
+        .iter()
+        .map(|(n, o)| JobSpec {
+            name: n.to_string(),
+            opts: (*o).clone(),
+            eps_budget: None,
+        })
+        .collect();
+    let report = serve(
+        native(),
+        &jobs,
+        &ServeOptions {
+            max_concurrent: 2,
+            stop: None,
+        },
+    )
+    .unwrap();
+    assert!(!report.stopped_early);
+    assert_eq!(report.outcomes.len(), 3);
+
+    for (i, opts) in [&opt_a, &opt_b, &opt_c].iter().enumerate() {
+        let mut solo = (*opts).clone();
+        solo.checkpoint_dir = Some(dirs_solo[i].clone());
+        let solo_rep = train(native(), &solo).unwrap();
+        let o = &report.outcomes[i];
+        assert!(!o.budget_stopped);
+        assert_eq!(o.report.steps, solo_rep.steps, "job {}", o.name);
+        let lb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            lb(&o.report.losses),
+            lb(&solo_rep.losses),
+            "job {}: interleaving changed the loss stream",
+            o.name
+        );
+        assert_eq!(
+            params_bytes(&dirs_serve[i]),
+            params_bytes(&dirs_solo[i]),
+            "job {}: interleaving changed the final parameters",
+            o.name
+        );
+        let (es, os_) = o.report.epsilon.unwrap();
+        let (el, ol) = solo_rep.epsilon.unwrap();
+        assert_eq!(es.to_bits(), el.to_bits(), "job {}", o.name);
+        assert_eq!(os_, ol);
+    }
+    for d in dirs_serve.iter().chain(&dirs_solo) {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// The global budget ledger: two identical jobs with different epsilon
+/// budgets both get refused before their step cap, the tighter budget
+/// first, and each job's *spent* epsilon stays within its budget —
+/// the refused step is never charged.
+#[test]
+fn ledger_stops_smaller_budget_job_first() {
+    let d_tight = tmp("budget_tight");
+    let d_loose = tmp("budget_loose");
+    let mk = |seed: u64, ckpt: &Path| {
+        let mut o = base_opts("mlp2_mnist_b32", 400, seed, ckpt);
+        o.dataset_n = 128; // q = 0.25: spend grows fast enough to test
+        o.sigma = 1.0;
+        o
+    };
+    let jobs = vec![
+        JobSpec {
+            name: "tight".into(),
+            opts: mk(1, &d_tight),
+            eps_budget: Some(2.0),
+        },
+        JobSpec {
+            name: "loose".into(),
+            opts: mk(1, &d_loose),
+            eps_budget: Some(4.0),
+        },
+    ];
+    let report = serve(
+        native(),
+        &jobs,
+        &ServeOptions {
+            max_concurrent: 0,
+            stop: None,
+        },
+    )
+    .unwrap();
+    assert!(!report.stopped_early);
+    let tight = &report.outcomes[0];
+    let loose = &report.outcomes[1];
+    assert!(tight.budget_stopped, "tight job ran all {} steps", tight.report.steps);
+    assert!(loose.budget_stopped, "loose job ran all {} steps", loose.report.steps);
+    assert!(
+        tight.report.steps < loose.report.steps,
+        "tighter budget must stop first: {} vs {}",
+        tight.report.steps,
+        loose.report.steps
+    );
+    assert!(loose.report.steps < 400);
+    let (e_t, _) = tight.report.epsilon.unwrap();
+    let (e_l, _) = loose.report.epsilon.unwrap();
+    assert!(e_t <= 2.0 + 1e-9, "tight job overspent: eps={e_t}");
+    assert!(e_l <= 4.0 + 1e-9, "loose job overspent: eps={e_l}");
+    // the refusal checkpoint records the truthful stop step — a valid
+    // resume point strictly within budget
+    let cfg = native().manifest().config("mlp2_mnist_b32").unwrap();
+    let (meta, _) = checkpoint::load(&d_tight, cfg).unwrap();
+    assert_eq!(meta.step, tight.report.steps);
+    for d in [&d_tight, &d_loose] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+/// Scheduler determinism: the same jobs file semantics twice in a row
+/// (fresh checkpoint dirs) produce identical losses and identical
+/// checkpoint bytes — regardless of rayon pool width (CI pins
+/// RAYON_NUM_THREADS=2; local runs use the default).
+#[test]
+fn serve_is_deterministic_across_runs() {
+    let run = |tag: &str| {
+        let da = tmp(&format!("det_{tag}_a"));
+        let db = tmp(&format!("det_{tag}_b"));
+        let mut oa = base_opts("mlp2_mnist_b32", 5, 21, &da);
+        oa.poisson = true;
+        let ob = base_opts("mlp2_mnist_b32", 7, 22, &db);
+        let jobs = vec![
+            JobSpec {
+                name: "a".into(),
+                opts: oa,
+                eps_budget: None,
+            },
+            JobSpec {
+                name: "b".into(),
+                opts: ob,
+                eps_budget: None,
+            },
+        ];
+        let rep = serve(
+            native(),
+            &jobs,
+            &ServeOptions {
+                max_concurrent: 2,
+                stop: None,
+            },
+        )
+        .unwrap();
+        let losses: Vec<Vec<u32>> = rep
+            .outcomes
+            .iter()
+            .map(|o| o.report.losses.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        let params = (params_bytes(&da), params_bytes(&db));
+        for d in [&da, &db] {
+            std::fs::remove_dir_all(d).ok();
+        }
+        (losses, params)
+    };
+    let first = run("one");
+    let second = run("two");
+    assert_eq!(first, second, "serve is not deterministic across runs");
+}
+
+/// A stop flag set before `serve()` begins: the first `max_concurrent`
+/// jobs are still admitted (and get truthful step-0 checkpoints), the
+/// rest never start, and the report says so.
+#[test]
+fn preset_stop_flag_retires_admitted_jobs_at_step_zero() {
+    let dirs: Vec<PathBuf> =
+        ["a", "b", "c"].iter().map(|n| tmp(&format!("pre_{n}"))).collect();
+    let jobs: Vec<JobSpec> = dirs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| JobSpec {
+            name: format!("job{i}"),
+            opts: base_opts("mlp2_mnist_b32", 10, i as u64, d),
+            eps_budget: None,
+        })
+        .collect();
+    let report = serve(
+        native(),
+        &jobs,
+        &ServeOptions {
+            max_concurrent: 2,
+            stop: Some(Arc::new(AtomicBool::new(true))),
+        },
+    )
+    .unwrap();
+    assert!(report.stopped_early);
+    // two admitted (admission precedes the stop check), one skipped
+    assert_eq!(report.outcomes.len(), 2);
+    let cfg = native().manifest().config("mlp2_mnist_b32").unwrap();
+    for (i, o) in report.outcomes.iter().enumerate() {
+        assert_eq!(o.report.steps, 0);
+        assert!(!o.budget_stopped);
+        let (meta, _) = checkpoint::load(&dirs[i], cfg).unwrap();
+        assert_eq!(meta.step, 0);
+    }
+    assert!(!dirs[2].exists(), "unstarted job must not write a checkpoint");
+    for d in &dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+}

@@ -35,7 +35,8 @@ pub fn approved(f: &SourceFile) -> bool {
     }
     let name = f.file_name();
     (f.has_component("runtime") && (name == "store.rs" || name == "engine.rs"))
-        || (f.has_component("coordinator") && (name == "methods.rs" || name == "trainer.rs"))
+        || (f.has_component("coordinator")
+            && (name == "methods.rs" || name == "trainer.rs" || name == "session.rs"))
 }
 
 impl Rule for GradVecSeam {
@@ -73,8 +74,9 @@ impl Rule for GradVecSeam {
                     format!(
                         "`.{tok}(…)` outside the approved GradVec pipeline modules \
                          (runtime/store.rs, runtime/engine.rs, runtime/native/*, \
-                         coordinator/methods.rs, coordinator/trainer.rs) — \
-                         gradients must flow through the ClipPolicy seam"
+                         coordinator/methods.rs, coordinator/trainer.rs, \
+                         coordinator/session.rs) — gradients must flow through \
+                         the ClipPolicy seam"
                     ),
                 );
             }

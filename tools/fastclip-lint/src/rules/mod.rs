@@ -12,6 +12,7 @@ mod f32_accum;
 mod gradvec_seam;
 mod hash_container;
 mod rayon_disjoint;
+mod session_seam;
 mod unsafe_comment;
 mod wallclock_entropy;
 
@@ -31,13 +32,14 @@ pub trait Rule: Sync {
 
 /// All registered rules, in reporting order.
 pub fn all() -> &'static [&'static dyn Rule] {
-    static RULES: [&'static dyn Rule; 6] = [
+    static RULES: [&'static dyn Rule; 7] = [
         &hash_container::HashContainer,
         &wallclock_entropy::WallclockEntropy,
         &rayon_disjoint::RayonDisjointMut,
         &f32_accum::F32Accum,
         &unsafe_comment::UndocumentedUnsafe,
         &gradvec_seam::GradVecSeam,
+        &session_seam::SessionSeam,
     ];
     &RULES
 }

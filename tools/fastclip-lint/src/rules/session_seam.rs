@@ -1,0 +1,127 @@
+//! `session-seam`: after the session-core refactor, model parameters
+//! may change only through `Optimizer::step` driven by
+//! `TrainSession::step` — the one place downstream of the clip/noise
+//! pipeline. The lexical enforcement: the two operations a bypass
+//! would need — `.mark_dirty()` (publishing mutated params to the
+//! backends) and a `&mut …params.host` borrow (the raw weight
+//! buffers) — may appear only in the approved set: the store itself,
+//! the session, and the optimizers (which receive the buffers *from*
+//! the session).
+//!
+//! Lexical limits, deliberate: the `&mut` check is per-line (a borrow
+//! split across lines from its `params.host` use is not matched), and
+//! read-only `params.host` uses (checkpointing, backends uploading
+//! weights) pass anywhere.
+
+use super::{push, Rule};
+use crate::source::SourceFile;
+use crate::Finding;
+
+pub struct SessionSeam;
+
+pub const ID: &str = "session-seam";
+
+/// The approved writer set. Kept in one place so DESIGN.md and the
+/// finding message can cite it verbatim.
+fn approved(f: &SourceFile) -> bool {
+    let name = f.file_name();
+    (f.has_component("runtime") && name == "store.rs")
+        || (f.has_component("coordinator") && name == "session.rs")
+        || f.has_component("optim")
+}
+
+impl Rule for SessionSeam {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "parameter mutation (.mark_dirty() / &mut …params.host) confined to runtime/store.rs, coordinator/session.rs, and optim/ — updates flow through Optimizer::step after the noise pipeline"
+    }
+
+    fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        if approved(f) {
+            return;
+        }
+        let bytes = f.code.as_bytes();
+        // 1. `.mark_dirty(…)` — method-call syntax only (a free fn of
+        // the same name is not the ParamStore publication point)
+        for off in f.find_word("mark_dirty") {
+            if off == 0 || bytes[off - 1] != b'.' {
+                continue;
+            }
+            if !f.code[off + "mark_dirty".len()..]
+                .trim_start()
+                .starts_with('(')
+            {
+                continue;
+            }
+            let line = f.line_of(off);
+            if f.in_test(line) {
+                continue;
+            }
+            push(
+                out,
+                f,
+                line,
+                ID,
+                "`.mark_dirty(…)` outside the approved parameter-update \
+                 modules (runtime/store.rs, coordinator/session.rs, optim/) \
+                 — params may only change through Optimizer::step inside \
+                 TrainSession::step"
+                    .to_string(),
+            );
+        }
+        // 2. `&mut …params.host` on one line — a mutable borrow of the
+        // raw weight buffers outside the seam
+        for off in f.find_word("params.host") {
+            let line = f.line_of(off);
+            if f.in_test(line) {
+                continue;
+            }
+            let start = f.code[..off].rfind('\n').map(|p| p + 1).unwrap_or(0);
+            if !f.code[start..off].contains("&mut") {
+                continue;
+            }
+            push(
+                out,
+                f,
+                line,
+                ID,
+                "`&mut …params.host` outside the approved parameter-update \
+                 modules (runtime/store.rs, coordinator/session.rs, optim/) \
+                 — mutable weight access bypasses the clip/noise pipeline"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint_source;
+
+    #[test]
+    fn flags_mutation_outside_the_seam() {
+        let src = "fn tweak(params: &mut ParamStore) {\n    \
+                   scale(&mut params.host[0]);\n    \
+                   params.mark_dirty();\n}\n";
+        let f = lint_source("rust/src/coordinator/serve.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == super::ID));
+    }
+
+    #[test]
+    fn approved_modules_and_reads_pass() {
+        let mutating = "fn upd(params: &mut ParamStore) {\n    \
+                        opt.step(&mut params.host, &grads);\n    \
+                        params.mark_dirty();\n}\n";
+        assert!(lint_source("rust/src/coordinator/session.rs", mutating).is_empty());
+        assert!(lint_source("rust/src/runtime/store.rs", mutating).is_empty());
+        assert!(lint_source("rust/src/optim/adam.rs", mutating).is_empty());
+        // read-only access is fine anywhere
+        let reading = "fn count(params: &ParamStore) -> usize {\n    \
+                       params.host.iter().map(|t| t.len()).sum()\n}\n";
+        assert!(lint_source("rust/src/coordinator/serve.rs", reading).is_empty());
+    }
+}

@@ -3,6 +3,11 @@
 //! clocks, ambient RNGs, and environment variables are hidden inputs
 //! that break replay (and make DP accounting unauditable), so they
 //! may not appear there without an explicit allow.
+//!
+//! `coordinator/serve.rs` is held to the same bar: the multi-job
+//! scheduler promises per-job bitwise equality with solo runs, which
+//! dies the moment admission or interleaving order reads a clock or
+//! the environment.
 
 use super::{push, Rule};
 use crate::source::SourceFile;
@@ -28,13 +33,20 @@ impl Rule for WallclockEntropy {
     }
 
     fn describe(&self) -> &'static str {
-        "no std::time / thread_rng / env reads in runtime/ — hidden inputs break replayable, seeded execution"
+        "no std::time / thread_rng / env reads in runtime/ or coordinator/serve.rs — hidden inputs break replayable, seeded execution"
     }
 
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
-        if !f.has_component("runtime") {
+        let serve_scheduler =
+            f.has_component("coordinator") && f.file_name() == "serve.rs";
+        if !(f.has_component("runtime") || serve_scheduler) {
             return;
         }
+        let scope = if serve_scheduler {
+            "coordinator/serve.rs"
+        } else {
+            "runtime/"
+        };
         for tok in TOKENS {
             for off in f.find_word(tok) {
                 let line = f.line_of(off);
@@ -47,7 +59,7 @@ impl Rule for WallclockEntropy {
                     line,
                     ID,
                     format!(
-                        "`{tok}` in runtime/: wall clocks, ambient RNGs, and env \
+                        "`{tok}` in {scope}: wall clocks, ambient RNGs, and env \
                          reads are hidden inputs — thread seeds/config through \
                          StepSpec instead"
                     ),
@@ -68,6 +80,16 @@ mod tests {
             "use std::time::Instant;\nfn t() { let _ = Instant::now(); }\n",
         );
         assert_eq!(f.len(), 2, "{f:?}"); // one per line, deduped within a line
+        assert!(f.iter().all(|x| x.rule == super::ID));
+    }
+
+    #[test]
+    fn flags_instant_in_the_serve_scheduler() {
+        let f = lint_source(
+            "rust/src/coordinator/serve.rs",
+            "use std::time::Instant;\nfn t() { let _ = Instant::now(); }\n",
+        );
+        assert_eq!(f.len(), 2, "{f:?}");
         assert!(f.iter().all(|x| x.rule == super::ID));
     }
 

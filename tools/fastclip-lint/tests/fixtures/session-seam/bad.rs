@@ -1,0 +1,8 @@
+//@ path: rust/src/coordinator/serve.rs
+// A scheduler "fast path" that pokes weights directly: both the raw
+// `&mut …params.host` borrow and the `.mark_dirty()` publication are
+// outside the approved set, so each line must be flagged.
+fn nudge(params: &mut ParamStore, lr: f32) {
+    scale_tensor(&mut params.host[0], lr);
+    params.mark_dirty();
+}

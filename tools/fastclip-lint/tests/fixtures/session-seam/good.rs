@@ -1,0 +1,6 @@
+//@ path: rust/src/coordinator/serve.rs
+// Read-only access to the weight buffers is fine anywhere — only
+// mutation is confined to the session/optimizer seam.
+fn param_count(params: &ParamStore) -> usize {
+    params.host.iter().map(|t| t.len()).sum()
+}
