@@ -2,19 +2,26 @@
 //! encoder block (the paper's headline "this now works at practical
 //! speed" architecture) on the synthetic IMDB-like sentiment corpus.
 //!
-//!   cargo run --release --example dp_transformer_imdb
+//!   cargo run --release --example dp_transformer_imdb [-- --backend auto]
 //!
-//! Compares all three private strategies on the same schedule so the
-//! speed gap — the entire point of the paper — is visible in one run,
-//! then finishes the ReweightGP run to a target privacy budget using
-//! sigma calibration.
+//! Backend resolution mirrors the CLI's `--backend auto`: the PJRT
+//! engine when it is compiled in and artifacts are present, the
+//! hermetic native backend otherwise — so this runs end-to-end on a
+//! bare checkout with no artifacts. It compares all three private
+//! strategies on the same schedule so the speed gap — the entire point
+//! of the paper — is visible in one run, then finishes the ReweightGP
+//! run to a target privacy budget using sigma calibration.
 
 use fastclip::coordinator::{train, ClipMethod, TrainOptions};
-use fastclip::runtime::{artifacts_dir, Engine};
+use fastclip::runtime::{backend_by_name, Backend};
 
 fn main() -> anyhow::Result<()> {
     fastclip::util::logging::level_from_env();
-    let engine = Engine::from_dir(&artifacts_dir())?;
+    let backend_arg = std::env::args()
+        .skip_while(|a| a != "--backend")
+        .nth(1);
+    let backend = backend_by_name(backend_arg.as_deref())?;
+    println!("backend: {}", backend.name());
 
     let base = TrainOptions {
         config: "transformer_imdb_b32".into(),
@@ -36,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         ClipMethod::MultiLoss,
         ClipMethod::NxBp,
     ] {
-        let r = train(&engine, &TrainOptions { method, ..base.clone() })?;
+        let r = train(backend.as_ref(), &TrainOptions { method, ..base.clone() })?;
         println!(
             "  {:<12} mean step {:>9.2} ms   loss(ema) {:.4}",
             method.name(),
@@ -66,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         log_every: 50,
         ..base
     };
-    let r = train(&engine, &budget)?;
+    let r = train(backend.as_ref(), &budget)?;
     let (eps, order) = r.epsilon.unwrap();
     println!(
         "trained {} steps at calibrated sigma={:.3}; spent ({:.3}, 1e-5)-DP (order {})",

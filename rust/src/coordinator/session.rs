@@ -401,9 +401,13 @@ impl TrainSession {
             source.len(),
             opts.dataset_n
         );
+        // dtype compatibility: an f32 stage accepts f32 sources
+        // directly and i32 token sources through the widening gather
+        // (`fill_batch` stages ids as f32 — the transformer path); an
+        // i32 stage accepts only i32 sources.
         anyhow::ensure!(
             source.example_len() * tau == cfg.input_elems()
-                && source.is_f32() == (cfg.input_dtype == "f32"),
+                && (cfg.input_dtype == "f32" || !source.is_f32()),
             "data source {:?} example shape ({} {} elements) does not match \
              config {}",
             source.name(),

@@ -179,12 +179,22 @@ pub fn train(backend: &dyn Backend, opts: &TrainOptions) -> Result<TrainReport> 
     Ok(session.finish().0)
 }
 
-/// Stage a batch of examples into the upload buffers.
+/// Stage a batch of examples into the upload buffers. The stage's
+/// dtype (from the config) decides the destination: an i32 token
+/// dataset feeding an f32-staged config (the native transformer
+/// family) widens token ids to f32 in place — ids are exactly
+/// representable, and the gather is allocation-free either way.
 pub fn stage_batch(ds: &Dataset, batch: &[usize], stage: &mut BatchStage) {
     match ds.features {
         Features::F32(_) => {
             data::gather_batch_f32(ds, batch, &mut stage.feat_f32, &mut stage.labels)
         }
+        Features::I32(_) if stage.is_f32 => data::gather_batch_i32_as_f32(
+            ds,
+            batch,
+            &mut stage.feat_f32,
+            &mut stage.labels,
+        ),
         Features::I32(_) => {
             data::gather_batch_i32(ds, batch, &mut stage.feat_i32, &mut stage.labels)
         }

@@ -86,6 +86,34 @@ pub fn gather_batch_i32(
     }
 }
 
+/// Gather i32 token-id examples widened to f32 — the staging seam the
+/// native transformer family consumes (token ids are exactly
+/// representable in f32 up to 2^24, far above any vocab here).
+/// Allocation-free: writes straight into the caller's stage buffers.
+pub fn gather_batch_i32_as_f32(
+    ds: &Dataset,
+    batch: &[usize],
+    feat_out: &mut [f32],
+    label_out: &mut [i32],
+) {
+    let d = ds.example_len();
+    assert_eq!(feat_out.len(), batch.len() * d);
+    assert_eq!(label_out.len(), batch.len());
+    let toks = match &ds.features {
+        Features::I32(v) => v,
+        Features::F32(_) => panic!("f32 dataset staged through the i32 seam"),
+    };
+    for (row, &i) in batch.iter().enumerate() {
+        for (o, &t) in feat_out[row * d..(row + 1) * d]
+            .iter_mut()
+            .zip(&toks[i * d..(i + 1) * d])
+        {
+            *o = t as f32;
+        }
+        label_out[row] = ds.labels[i];
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +129,22 @@ mod tests {
         ds.copy_f32(7, &mut row);
         assert_eq!(&feats[4..8], &row[..]);
         assert_eq!(labels[1], ds.labels[7]);
+    }
+
+    #[test]
+    fn widening_gather_matches_token_ids() {
+        let ds = synth::synth_tokens("imdb", 10, 8, 200, 2, 3);
+        let batch = vec![4, 0, 9];
+        let mut feats = vec![0f32; 3 * 8];
+        let mut labels = vec![0i32; 3];
+        gather_batch_i32_as_f32(&ds, &batch, &mut feats, &mut labels);
+        let mut row = vec![0i32; 8];
+        ds.copy_i32(0, &mut row);
+        for (f, &t) in feats[8..16].iter().zip(&row) {
+            assert_eq!(*f, t as f32);
+            assert_eq!(*f as i32, t); // exactly representable
+        }
+        assert_eq!(labels[1], ds.labels[0]);
     }
 
     #[test]

@@ -72,6 +72,15 @@ impl DataSource for Dataset {
                 &mut stage.feat_f32,
                 &mut stage.labels,
             ),
+            // i32 token ids feeding an f32-staged config (the native
+            // transformer family): widen in place — exact for any
+            // vocab-sized id, and still allocation-free
+            Features::I32(_) if stage.is_f32 => super::gather_batch_i32_as_f32(
+                self,
+                indices,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            ),
             Features::I32(_) => super::gather_batch_i32(
                 self,
                 indices,

@@ -1,0 +1,1725 @@
+//! Single-block transformer encoder for the native backend — the
+//! `"transformer"` entry of the `taps::FamilyRegistry`, closing the
+//! paper's generality claim for attention + residual blocks.
+//!
+//! Architecture (token ids in, class logits out):
+//!
+//!   x0 = embed(tokens) + b_e                    (T x d per example)
+//!   q/k/v = x0·W_{q,k,v} + b                    (per-head split of d)
+//!   att_h = softmax(q_h·k_hᵀ / sqrt(d_h))       (T x T per head)
+//!   ctx   = concat_h(att_h·v_h)
+//!   x1    = x0 + ctx·W_o + b_o                  (residual 1)
+//!   f1    = relu(x1·W_1 + b_1)
+//!   x2    = x1 + f1·W_2 + b_2                   (residual 2)
+//!   pool  = mean_T(x2)
+//!   logits = pool·W_h + b_h, softmax-CE loss
+//!
+//! Simplifications vs a production block (documented, deliberate): no
+//! LayerNorm and no positional embedding — neither carries per-example
+//! clipped parameters that would change the tap structure, while the
+//! residual paths (which *do* change where the taps sit) are retained.
+//!
+//! The tap structure: every parametric layer is a linear map applied
+//! independently to the T sequence positions of each example, i.e. the
+//! exact weight-sharing pattern of the conv family with positions in
+//! place of patches. Parametric layer l of example i has tap matrix
+//! A_{l,i} (T x d_in) and delta matrix Δ_{l,i} (T x d_out), and
+//!
+//!   g_{l,i} = A_{l,i}ᵀ · Δ_{l,i}
+//!
+//! so the three norm routes carry over from `conv.rs` unchanged:
+//! direct per-example product (`sq_norms`), position-Gram Hadamard
+//! reduction (`gram_sq_norms`, paper Sec 5.2 — the off-diagonal
+//! cross-position terms are load-bearing because positions share the
+//! weights), and the Cauchy–Schwarz row-norm-product bound
+//! (`tap_bound_sq_norms`, diagnostics only). The embedding is the same
+//! thing with a one-hot tap matrix: its gradient scatters delta rows
+//! into token rows, so ‖g‖² reduces to a token-equality masked Gram
+//! (`Σ_{t1,t2: tok_t1 = tok_t2} ⟨δ_t1, δ_t2⟩`).
+//!
+//! Parametric layers, in slab/arena order (one (W, b) pair each):
+//!
+//!   0 embed   tap: one-hot tokens    delta: dx0
+//!   1 q-proj  tap: x0                delta: dq
+//!   2 k-proj  tap: x0                delta: dk
+//!   3 v-proj  tap: x0                delta: dv
+//!   4 o-proj  tap: ctx               delta: dx1   (residual: dx1 also
+//!                                                  feeds dx0)
+//!   5 ff1     tap: x1                delta: dz1
+//!   6 ff2     tap: f1                delta: dx2
+//!   7 head    tap: pool (1 row/ex)   delta: dz
+//!
+//! Every delta buffer belongs to exactly one layer, so
+//! `scale_delta_rows` (the `reweight_direct` assembly) can scale them
+//! independently per ClipPolicy group. The whole backward chain is
+//! linear in the softmax-CE output delta, so the nu-reweighted second
+//! backward of `reweight`/`reweight_gram` is exact here too.
+//!
+//! Determinism follows the gemm module's contract: parallelism only
+//! over disjoint per-example output chunks (`par_chunks_mut` zips),
+//! f64 scalar reductions in fixed ascending order, f32 accumulation
+//! only as axpy into slices.
+
+use super::gemm;
+use super::taps::{
+    downcast_scratch, downcast_scratch_ref, ModelFamily, NuBlock, ScratchAny,
+};
+use crate::runtime::manifest::ConfigSpec;
+use crate::runtime::spec::ModelSpec;
+use crate::runtime::store::GradVec;
+use anyhow::{bail, ensure, Result};
+use rayon::prelude::*;
+
+/// Transformer-block dimensions parsed and validated from a manifest
+/// config. `heads` comes from the config's spec provenance (the
+/// `transformer(...)` DSL arm) — it is not recoverable from the param
+/// shapes alone.
+#[derive(Debug, Clone)]
+pub struct AttnSpec {
+    pub batch: usize,
+    /// sequence length T (= flat input elements per example)
+    pub seq: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    /// feed-forward hidden width
+    pub ff: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+}
+
+/// Number of parametric layers (embed, q, k, v, o, ff1, ff2, head).
+const N_LAYERS: usize = 8;
+
+impl AttnSpec {
+    pub fn from_config(cfg: &ConfigSpec) -> Result<AttnSpec> {
+        ensure!(
+            cfg.model == "transformer",
+            "native attention supports the `transformer` config family; \
+             config {} has model {:?}",
+            cfg.name,
+            cfg.model
+        );
+        ensure!(
+            cfg.input_dtype == "f32",
+            "native transformer expects f32-staged token ids, config {} \
+             has {:?}",
+            cfg.name,
+            cfg.input_dtype
+        );
+        ensure!(
+            cfg.input_shape.len() == 2 && cfg.input_shape[0] == cfg.batch,
+            "config {}: transformer input shape {:?} must be [batch, seq] \
+             leading with batch {}",
+            cfg.name,
+            cfg.input_shape,
+            cfg.batch
+        );
+        let seq = cfg.input_shape[1];
+        let (heads, d_model, ff) = match &cfg.spec {
+            Some(ModelSpec::Transformer { heads, d_model, seq: sseq, ff }) => {
+                ensure!(
+                    *sseq == seq,
+                    "config {}: spec seq {} != input shape seq {seq}",
+                    cfg.name,
+                    sseq
+                );
+                (*heads, *d_model, *ff)
+            }
+            _ => bail!(
+                "config {}: transformer family needs `transformer(...)` \
+                 spec provenance for the head count",
+                cfg.name
+            ),
+        };
+        ensure!(
+            heads >= 1 && d_model % heads == 0,
+            "config {}: d_model {d_model} must be divisible by heads {heads}",
+            cfg.name
+        );
+        ensure!(
+            cfg.params.len() == 2 * N_LAYERS,
+            "config {}: transformer params must be {} (weight, bias) \
+             pairs, got {} tensors",
+            cfg.name,
+            N_LAYERS,
+            cfg.params.len()
+        );
+        // embed pair pins the vocab; every later pair is chain-checked
+        let ew = &cfg.params[0];
+        let eb = &cfg.params[1];
+        ensure!(
+            ew.shape.len() == 2 && ew.shape[1] == d_model && eb.shape == [d_model],
+            "config {}: embed expects [vocab, {d_model}] + [{d_model}], \
+             got {:?} / {:?}",
+            cfg.name,
+            ew.shape,
+            eb.shape
+        );
+        let vocab = ew.shape[0];
+        let proj_dims: [(usize, usize, &str); 6] = [
+            (d_model, d_model, "attn.q"),
+            (d_model, d_model, "attn.k"),
+            (d_model, d_model, "attn.v"),
+            (d_model, d_model, "attn.o"),
+            (d_model, ff, "ff1"),
+            (ff, d_model, "ff2"),
+        ];
+        for (j, &(din, dout, name)) in proj_dims.iter().enumerate() {
+            let w = &cfg.params[2 + 2 * j];
+            let b = &cfg.params[3 + 2 * j];
+            ensure!(
+                w.shape == [din, dout] && b.shape == [dout],
+                "config {}: {name} expects [{din}, {dout}] + [{dout}], \
+                 got {:?} / {:?}",
+                cfg.name,
+                w.shape,
+                b.shape
+            );
+        }
+        let hw = &cfg.params[14];
+        let hb = &cfg.params[15];
+        ensure!(
+            hw.shape == [d_model, cfg.n_classes] && hb.shape == [cfg.n_classes],
+            "config {}: head expects [{d_model}, {}] + [{}], got {:?} / {:?}",
+            cfg.name,
+            cfg.n_classes,
+            cfg.n_classes,
+            hw.shape,
+            hb.shape
+        );
+        Ok(AttnSpec {
+            batch: cfg.batch,
+            seq,
+            d_model,
+            heads,
+            ff,
+            vocab,
+            n_classes: cfg.n_classes,
+        })
+    }
+
+    /// Per-head width d_h.
+    pub fn dh(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Per-parameter element counts in manifest order — the gradient
+    /// arena layout.
+    pub fn grad_lens(&self) -> Vec<usize> {
+        let (d, f, nc) = (self.d_model, self.ff, self.n_classes);
+        vec![
+            self.vocab * d,
+            d, // embed
+            d * d,
+            d, // q
+            d * d,
+            d, // k
+            d * d,
+            d, // v
+            d * d,
+            d, // o
+            d * f,
+            f, // ff1
+            f * d,
+            d, // ff2
+            d * nc,
+            nc, // head
+        ]
+    }
+
+    /// Check a param store's tensor count and per-tensor lengths.
+    pub fn check_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+        let lens = self.grad_lens();
+        ensure!(
+            host.len() == lens.len(),
+            "{config}: param store has {} tensors, transformer spec needs {}",
+            host.len(),
+            lens.len()
+        );
+        for (t, (&want, tensor)) in lens.iter().zip(host.iter()).enumerate() {
+            ensure!(
+                tensor.len() == want,
+                "{config}: tensor {t} has {} elements, spec needs {want}",
+                tensor.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Largest per-example (d_in x d_out) weight block — the grow-only
+    /// workspace bound shared by the norm and gradient partials.
+    fn wmax(&self) -> usize {
+        self.d_model * self.d_model.max(self.ff)
+    }
+
+    fn bmax(&self) -> usize {
+        self.d_model.max(self.ff)
+    }
+}
+
+/// Whole-batch forward/backward scratch. Fixed-size buffers allocate at
+/// construction; the per-example norm/gradient workspaces
+/// (`ex_*`) grow on first use and are reused after — the warm step
+/// allocates nothing (`tests/no_alloc.rs`).
+pub struct AttnScratch {
+    b: usize,
+    // forward activations (taps)
+    /// embedded input x0, b x T x d — tap for q/k/v
+    x0: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// softmax attention rows, b x H x T x T
+    att: Vec<f32>,
+    /// concat-head context, b x T x d — tap for o
+    ctx: Vec<f32>,
+    /// residual 1, b x T x d — tap for ff1
+    x1: Vec<f32>,
+    /// ff pre-activation, b x T x F
+    z1: Vec<f32>,
+    /// relu(z1), b x T x F — tap for ff2
+    f1: Vec<f32>,
+    /// residual 2, b x T x d
+    x2: Vec<f32>,
+    /// mean-pooled features, b x d — tap for the head
+    pool: Vec<f32>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    // backward deltas (one buffer per parametric layer; see module docs)
+    dz: Vec<f32>,
+    dpool: Vec<f32>,
+    dx2: Vec<f32>,
+    dz1: Vec<f32>,
+    dx1: Vec<f32>,
+    dctx: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    dx0: Vec<f32>,
+    // per-example attention-backward workspaces, b x T x T
+    ex_da: Vec<f32>,
+    ex_ds: Vec<f32>,
+    // lazily grown per-example norm/grad partials
+    ex_w: Vec<f32>,
+    ex_work: Vec<f64>,
+    ex_b: Vec<f32>,
+    ex_ga: Vec<f32>,
+    ex_gd: Vec<f32>,
+}
+
+impl AttnScratch {
+    pub fn for_spec(spec: &AttnSpec, b: usize) -> AttnScratch {
+        let (t, d, f) = (spec.seq, spec.d_model, spec.ff);
+        let (h, nc) = (spec.heads, spec.n_classes);
+        AttnScratch {
+            b,
+            x0: vec![0.0; b * t * d],
+            q: vec![0.0; b * t * d],
+            k: vec![0.0; b * t * d],
+            v: vec![0.0; b * t * d],
+            att: vec![0.0; b * h * t * t],
+            ctx: vec![0.0; b * t * d],
+            x1: vec![0.0; b * t * d],
+            z1: vec![0.0; b * t * f],
+            f1: vec![0.0; b * t * f],
+            x2: vec![0.0; b * t * d],
+            pool: vec![0.0; b * d],
+            logits: vec![0.0; b * nc],
+            probs: vec![0.0; b * nc],
+            dz: vec![0.0; b * nc],
+            dpool: vec![0.0; b * d],
+            dx2: vec![0.0; b * t * d],
+            dz1: vec![0.0; b * t * f],
+            dx1: vec![0.0; b * t * d],
+            dctx: vec![0.0; b * t * d],
+            dq: vec![0.0; b * t * d],
+            dk: vec![0.0; b * t * d],
+            dv: vec![0.0; b * t * d],
+            dx0: vec![0.0; b * t * d],
+            ex_da: vec![0.0; b * t * t],
+            ex_ds: vec![0.0; b * t * t],
+            ex_w: Vec::new(),
+            ex_work: Vec::new(),
+            ex_b: Vec::new(),
+            ex_ga: Vec::new(),
+            ex_gd: Vec::new(),
+        }
+    }
+}
+
+/// Bias rows + one GEMM: out[r] = bias + input[r]·W, for `rows`
+/// independent rows (sequence positions or pooled examples).
+fn linear_rows(
+    rows: usize,
+    din: usize,
+    dout: usize,
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        out[r * dout..(r + 1) * dout].copy_from_slice(bias);
+    }
+    gemm::sgemm(rows, din, dout, input, w, out);
+}
+
+fn example_rows(v: &[f32], i: usize, per_example: usize) -> &[f32] {
+    &v[i * per_example..(i + 1) * per_example]
+}
+
+/// The dense-tap term (||a_i||² + 1)·||δ_i||², f64-accumulated — exact
+/// for the pooled head layer; the single definition all three norm
+/// routes share so they cannot silently desynchronize.
+fn fc_tap_sq(input: &[f32], deltas: &[f32], i: usize, din: usize, dout: usize) -> f64 {
+    let a = example_rows(input, i, din);
+    let d = example_rows(deltas, i, dout);
+    let a2: f64 = a.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let d2: f64 = d.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    (a2 + 1.0) * d2
+}
+
+/// The six position-shared projection layers as (parametric layer,
+/// tap, delta, d_in, d_out) rows, given already-downgraded shared
+/// views of the scratch buffers. Embed (layer 0) and head (layer 7)
+/// have different tap structure and are handled by each caller.
+#[allow(clippy::too_many_arguments)]
+fn proj_table<'a>(
+    spec: &AttnSpec,
+    x0: &'a [f32],
+    ctx: &'a [f32],
+    x1: &'a [f32],
+    f1: &'a [f32],
+    dq: &'a [f32],
+    dk: &'a [f32],
+    dv: &'a [f32],
+    dx1: &'a [f32],
+    dz1: &'a [f32],
+    dx2: &'a [f32],
+) -> [(usize, &'a [f32], &'a [f32], usize, usize); 6] {
+    let (d, f) = (spec.d_model, spec.ff);
+    [
+        (1, x0, dq, d, d),
+        (2, x0, dk, d, d),
+        (3, x0, dv, d, d),
+        (4, ctx, dx1, d, d),
+        (5, x1, dz1, d, f),
+        (6, f1, dx2, f, d),
+    ]
+}
+
+/// Batched forward over the staged token batch (`x` holds token ids
+/// widened to f32, b x T). Fills every tap buffer; returns (f64 loss
+/// sum, correct-prediction count). Labels must be pre-validated;
+/// token ids are asserted against the vocab here.
+pub fn forward_batch(
+    spec: &AttnSpec,
+    params: &[Vec<f32>],
+    x: &[f32],
+    labels: &[i32],
+    s: &mut AttnScratch,
+) -> (f64, usize) {
+    let b = s.b;
+    let (t, d, f) = (spec.seq, spec.d_model, spec.ff);
+    let (h, dh) = (spec.heads, spec.dh());
+    debug_assert_eq!(x.len(), b * t);
+
+    // 1. embedding lookup + bias, parallel over examples
+    {
+        let ew = &params[0];
+        let eb = &params[1];
+        let vocab = spec.vocab;
+        s.x0.par_chunks_mut(t * d).enumerate().for_each(|(i, xrow)| {
+            for tt in 0..t {
+                let tok = x[i * t + tt];
+                assert!(
+                    tok >= 0.0 && (tok as usize) < vocab,
+                    "token id {tok} out of range for vocab {vocab}"
+                );
+                let tok = tok as usize;
+                let dst = &mut xrow[tt * d..(tt + 1) * d];
+                dst.copy_from_slice(&ew[tok * d..(tok + 1) * d]);
+                for (o, &bv) in dst.iter_mut().zip(eb.iter()) {
+                    *o += bv;
+                }
+            }
+        });
+    }
+
+    // 2. q/k/v projections: one batched GEMM each over all b*T rows
+    linear_rows(b * t, d, d, &s.x0, &params[2], &params[3], &mut s.q);
+    linear_rows(b * t, d, d, &s.x0, &params[4], &params[5], &mut s.k);
+    linear_rows(b * t, d, d, &s.x0, &params[6], &params[7], &mut s.v);
+
+    // 3. per-head softmax attention, parallel over examples. 1/sqrt(dh)
+    // folds into the q factor of each score product (the backward
+    // mirrors this by folding it into dS).
+    {
+        let invs = 1.0f32 / (dh as f32).sqrt();
+        let (q, k, v) = (&s.q, &s.k, &s.v);
+        s.att
+            .par_chunks_mut(h * t * t)
+            .zip(s.ctx.par_chunks_mut(t * d))
+            .enumerate()
+            .for_each(|(i, (abuf, cbuf))| {
+                let qi = example_rows(q, i, t * d);
+                let ki = example_rows(k, i, t * d);
+                let vi = example_rows(v, i, t * d);
+                cbuf.iter_mut().for_each(|z| *z = 0.0);
+                for hh in 0..h {
+                    let off = hh * dh;
+                    let ah = &mut abuf[hh * t * t..(hh + 1) * t * t];
+                    // scores: S[tt,u] = Σ_j (q[tt,j]·invs)·k[u,j]
+                    ah.iter_mut().for_each(|z| *z = 0.0);
+                    for tt in 0..t {
+                        let qrow = &qi[tt * d + off..tt * d + off + dh];
+                        let srow = &mut ah[tt * t..(tt + 1) * t];
+                        for (j, &qv0) in qrow.iter().enumerate() {
+                            let qv = qv0 * invs;
+                            if qv != 0.0 {
+                                for (u, sv) in srow.iter_mut().enumerate() {
+                                    *sv += qv * ki[u * d + off + j];
+                                }
+                            }
+                        }
+                    }
+                    // row-wise numerically stable softmax (f64 exp sum,
+                    // same op order as taps::softmax_xent_rows)
+                    for tt in 0..t {
+                        let srow = &mut ah[tt * t..(tt + 1) * t];
+                        let mut m = f32::NEG_INFINITY;
+                        for &sv in srow.iter() {
+                            if sv > m {
+                                m = sv;
+                            }
+                        }
+                        let mut sum = 0.0f64;
+                        for sv in srow.iter_mut() {
+                            let e = ((*sv - m) as f64).exp();
+                            *sv = e as f32;
+                            sum += e;
+                        }
+                        let inv = (1.0 / sum) as f32;
+                        for sv in srow.iter_mut() {
+                            *sv *= inv;
+                        }
+                    }
+                    // ctx head block: C[tt] += Σ_u att[tt,u]·v[u]
+                    for tt in 0..t {
+                        let arow = &ah[tt * t..(tt + 1) * t];
+                        let crow = &mut cbuf[tt * d + off..tt * d + off + dh];
+                        for (u, &av) in arow.iter().enumerate() {
+                            if av != 0.0 {
+                                let vrow = &vi[u * d + off..u * d + off + dh];
+                                for (cv, &vv) in crow.iter_mut().zip(vrow) {
+                                    *cv += av * vv;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+    }
+
+    // 4. output projection + residual 1
+    linear_rows(b * t, d, d, &s.ctx, &params[8], &params[9], &mut s.x1);
+    for (o, &r) in s.x1.iter_mut().zip(s.x0.iter()) {
+        *o += r;
+    }
+
+    // 5. feed-forward + residual 2
+    linear_rows(b * t, d, f, &s.x1, &params[10], &params[11], &mut s.z1);
+    for (a, &z) in s.f1.iter_mut().zip(s.z1.iter()) {
+        *a = z.max(0.0);
+    }
+    linear_rows(b * t, f, d, &s.f1, &params[12], &params[13], &mut s.x2);
+    for (o, &r) in s.x2.iter_mut().zip(s.x1.iter()) {
+        *o += r;
+    }
+
+    // 6. mean-pool over positions (exact f32 1/T for the grid's
+    // power-of-two sequence lengths)
+    {
+        let invt = 1.0f32 / t as f32;
+        for i in 0..b {
+            let xrow = example_rows(&s.x2, i, t * d);
+            let prow = &mut s.pool[i * d..(i + 1) * d];
+            prow.iter_mut().for_each(|z| *z = 0.0);
+            for tt in 0..t {
+                for (pv, &xv) in
+                    prow.iter_mut().zip(&xrow[tt * d..(tt + 1) * d])
+                {
+                    *pv += xv;
+                }
+            }
+            for pv in prow.iter_mut() {
+                *pv *= invt;
+            }
+        }
+    }
+
+    // 7. classification head + shared softmax-CE
+    linear_rows(b, d, spec.n_classes, &s.pool, &params[14], &params[15], &mut s.logits);
+    super::taps::softmax_xent_rows(
+        b,
+        spec.n_classes,
+        &s.logits,
+        &mut s.probs,
+        labels,
+    )
+}
+
+/// Batched backward (after `forward_batch`): fills every per-layer
+/// delta buffer. `nu`, when given, scales example i's output delta by
+/// nu_i — the reweighted second pass; the whole chain below is linear
+/// in dz, so this reweights every layer's delta exactly.
+pub fn backward_batch(
+    spec: &AttnSpec,
+    params: &[Vec<f32>],
+    labels: &[i32],
+    nu: Option<&[f32]>,
+    s: &mut AttnScratch,
+) {
+    let b = s.b;
+    let (t, d, f) = (spec.seq, spec.d_model, spec.ff);
+    let (h, dh) = (spec.heads, spec.dh());
+    let nc = spec.n_classes;
+
+    // head delta: dCE_i/dz = softmax(z_i) - onehot(y_i), nu_i-scaled
+    {
+        let dz = &mut s.dz;
+        dz.copy_from_slice(&s.probs);
+        for r in 0..b {
+            dz[r * nc + labels[r] as usize] -= 1.0;
+        }
+        if let Some(nu) = nu {
+            for (r, &w) in nu.iter().enumerate() {
+                for v in dz[r * nc..(r + 1) * nc].iter_mut() {
+                    *v *= w;
+                }
+            }
+        }
+    }
+
+    // through the head: dpool = dz · W_hᵀ
+    s.dpool.iter_mut().for_each(|z| *z = 0.0);
+    gemm::sgemm_nt(b, nc, d, &s.dz, &params[14], &mut s.dpool);
+
+    // through the mean-pool: every position gets dpool/T
+    {
+        let invt = 1.0f32 / t as f32;
+        for i in 0..b {
+            let prow = &s.dpool[i * d..(i + 1) * d];
+            let xrow = &mut s.dx2[i * t * d..(i + 1) * t * d];
+            for tt in 0..t {
+                for (o, &pv) in
+                    xrow[tt * d..(tt + 1) * d].iter_mut().zip(prow)
+                {
+                    *o = pv * invt;
+                }
+            }
+        }
+    }
+
+    // ff branch: dz1 = (dx2 · W_2ᵀ) ∘ relu'(z1)
+    s.dz1.iter_mut().for_each(|z| *z = 0.0);
+    gemm::sgemm_nt(b * t, d, f, &s.dx2, &params[12], &mut s.dz1);
+    for (dv, &zv) in s.dz1.iter_mut().zip(s.z1.iter()) {
+        if zv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+
+    // residual 2 joins: dx1 = dx2 + dz1 · W_1ᵀ
+    s.dx1.copy_from_slice(&s.dx2);
+    gemm::sgemm_nt(b * t, f, d, &s.dz1, &params[10], &mut s.dx1);
+
+    // through the o-projection: dctx = dx1 · W_oᵀ
+    s.dctx.iter_mut().for_each(|z| *z = 0.0);
+    gemm::sgemm_nt(b * t, d, d, &s.dx1, &params[8], &mut s.dctx);
+
+    // attention backward, parallel over examples
+    {
+        let invs = 1.0f32 / (dh as f32).sqrt();
+        let AttnScratch {
+            q, k, v, att, dctx, dq, dk, dv, ex_da, ex_ds, ..
+        } = s;
+        // downgrade the read-only fields to shared refs: the parallel
+        // closure must be Sync, and a captured `&mut` is not
+        let (q, k, v, att, dctx) = (&*q, &*k, &*v, &*att, &*dctx);
+        dq.par_chunks_mut(t * d)
+            .zip(dk.par_chunks_mut(t * d))
+            .zip(dv.par_chunks_mut(t * d))
+            .zip(ex_da.par_chunks_mut(t * t))
+            .zip(ex_ds.par_chunks_mut(t * t))
+            .enumerate()
+            .for_each(|(i, ((((dqi, dki), dvi), dabuf), dsbuf))| {
+                let qi = example_rows(q, i, t * d);
+                let ki = example_rows(k, i, t * d);
+                let vi = example_rows(v, i, t * d);
+                let dhi = example_rows(dctx, i, t * d);
+                dqi.iter_mut().for_each(|z| *z = 0.0);
+                dki.iter_mut().for_each(|z| *z = 0.0);
+                dvi.iter_mut().for_each(|z| *z = 0.0);
+                for hh in 0..h {
+                    let off = hh * dh;
+                    let ah =
+                        &att[(i * h + hh) * t * t..(i * h + hh + 1) * t * t];
+                    // dV[u] += Σ_tt att[tt,u]·dctx[tt]
+                    for tt in 0..t {
+                        let arow = &ah[tt * t..(tt + 1) * t];
+                        let drow = &dhi[tt * d + off..tt * d + off + dh];
+                        for (u, &av) in arow.iter().enumerate() {
+                            if av != 0.0 {
+                                let dvrow =
+                                    &mut dvi[u * d + off..u * d + off + dh];
+                                for (o, &g) in dvrow.iter_mut().zip(drow) {
+                                    *o += av * g;
+                                }
+                            }
+                        }
+                    }
+                    // dA[tt,u] = Σ_j dctx[tt,j]·v[u,j]
+                    dabuf.iter_mut().for_each(|z| *z = 0.0);
+                    for tt in 0..t {
+                        let drow = &dhi[tt * d + off..tt * d + off + dh];
+                        let darow = &mut dabuf[tt * t..(tt + 1) * t];
+                        for (j, &c) in drow.iter().enumerate() {
+                            if c != 0.0 {
+                                for (u, da) in darow.iter_mut().enumerate() {
+                                    *da += c * vi[u * d + off + j];
+                                }
+                            }
+                        }
+                    }
+                    // softmax Jacobian per row:
+                    // dS = A ∘ (dA - Σ_u A[u]·dA[u]); the row dot is
+                    // f64-accumulated in ascending order
+                    for tt in 0..t {
+                        let arow = &ah[tt * t..(tt + 1) * t];
+                        let darow = &dabuf[tt * t..(tt + 1) * t];
+                        let dsrow = &mut dsbuf[tt * t..(tt + 1) * t];
+                        let mut rd = 0.0f64;
+                        for (&av, &dav) in arow.iter().zip(darow.iter()) {
+                            rd += (av as f64) * (dav as f64);
+                        }
+                        let rd = rd as f32;
+                        for ((o, &av), &dav) in
+                            dsrow.iter_mut().zip(arow).zip(darow)
+                        {
+                            *o = av * (dav - rd);
+                        }
+                    }
+                    // dQ[tt] += Σ_u (dS[tt,u]·invs)·k[u];
+                    // dK[u]  += Σ_tt (dS[tt,u]·invs)·q[tt]
+                    for tt in 0..t {
+                        let dsrow = &dsbuf[tt * t..(tt + 1) * t];
+                        let qrow = &qi[tt * d + off..tt * d + off + dh];
+                        let dqrow = &mut dqi[tt * d + off..tt * d + off + dh];
+                        for (u, &g0) in dsrow.iter().enumerate() {
+                            let g = g0 * invs;
+                            if g != 0.0 {
+                                let krow =
+                                    &ki[u * d + off..u * d + off + dh];
+                                for (o, &kv) in dqrow.iter_mut().zip(krow) {
+                                    *o += g * kv;
+                                }
+                                let dkrow =
+                                    &mut dki[u * d + off..u * d + off + dh];
+                                for (o, &qv) in dkrow.iter_mut().zip(qrow) {
+                                    *o += g * qv;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+    }
+
+    // residual 1 joins the three projection paths:
+    // dx0 = dx1 + dq·W_qᵀ + dk·W_kᵀ + dv·W_vᵀ
+    s.dx0.copy_from_slice(&s.dx1);
+    gemm::sgemm_nt(b * t, d, d, &s.dq, &params[2], &mut s.dx0);
+    gemm::sgemm_nt(b * t, d, d, &s.dk, &params[4], &mut s.dx0);
+    gemm::sgemm_nt(b * t, d, d, &s.dv, &params[6], &mut s.dx0);
+}
+
+/// Slab slot base of parametric layer `pl` under
+/// `norm_slots() = [0,0,1,1,...,6,6,7]`: two slots (weight, bias) per
+/// position-shared layer, one for the pooled head.
+fn slot_base(pl: usize) -> usize {
+    2 * pl
+}
+
+/// Number of slab slots per example.
+const N_SLOTS: usize = 15;
+
+/// Exact per-example squared gradient norms — the direct route: per
+/// position-shared layer, materialize the small d_in x d_out product
+/// A_iᵀ·Δ_i per example (f64-reduced, the same kernel the gradient
+/// assembly and multiloss materialization use) and take its Frobenius
+/// norm, plus the bias column-sum term; the embedding reduces over
+/// token-equality pairs; the head uses the dense tap trick. Parallel
+/// over examples into disjoint slab rows and workspace chunks.
+pub fn sq_norms(spec: &AttnSpec, x: &[f32], s: &mut AttnScratch, out: &mut [f64]) {
+    let b = s.b;
+    let t = spec.seq;
+    let d = spec.d_model;
+    debug_assert_eq!(out.len(), b * N_SLOTS);
+    let (max_w, max_b) = (spec.wmax(), spec.bmax());
+    let AttnScratch {
+        x0, ctx, x1, f1, pool, dq, dk, dv, dx0, dx1, dx2, dz1, dz,
+        ex_w, ex_work, ex_b, ..
+    } = s;
+    if ex_w.len() < b * max_w {
+        ex_w.resize(b * max_w, 0.0);
+        ex_work.resize(b * max_w, 0.0);
+    }
+    if ex_b.len() < b * max_b {
+        ex_b.resize(b * max_b, 0.0);
+    }
+    // downgrade the read-only fields to shared refs for the Sync closure
+    let (x0, ctx, x1, f1, pool) = (&*x0, &*ctx, &*x1, &*f1, &*pool);
+    let (dq, dk, dv, dx0, dx1, dx2, dz1, dz) =
+        (&*dq, &*dk, &*dv, &*dx0, &*dx1, &*dx2, &*dz1, &*dz);
+    let projs = proj_table(spec, x0, ctx, x1, f1, dq, dk, dv, dx1, dz1, dx2);
+    out.par_chunks_mut(N_SLOTS)
+        .zip(ex_w.par_chunks_mut(max_w))
+        .zip(ex_work.par_chunks_mut(max_w))
+        .zip(ex_b.par_chunks_mut(max_b))
+        .enumerate()
+        .for_each(|(i, (((row, wbuf), workbuf), bbuf))| {
+            // embed weight: ‖G‖² = Σ_{t1,t2: tok_t1 = tok_t2} ⟨δ_t1, δ_t2⟩
+            let toks = &x[i * t..(i + 1) * t];
+            let dxi = example_rows(dx0, i, t * d);
+            let mut w_term = 0.0f64;
+            for t1 in 0..t {
+                for t2 in 0..t {
+                    if toks[t1] == toks[t2] {
+                        let r1 = &dxi[t1 * d..(t1 + 1) * d];
+                        let r2 = &dxi[t2 * d..(t2 + 1) * d];
+                        for (&a, &c) in r1.iter().zip(r2.iter()) {
+                            w_term += (a as f64) * (c as f64);
+                        }
+                    }
+                }
+            }
+            row[slot_base(0)] = w_term;
+            // embed bias: column sums of dx0_i
+            let bias = &mut bbuf[..d];
+            bias.iter_mut().for_each(|z| *z = 0.0);
+            gemm::col_sums(t, d, dxi, None, bias);
+            row[slot_base(0) + 1] = bias
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>();
+            // position-shared projections
+            for &(pl, tap, delta, din, dout) in projs.iter() {
+                let tapi = example_rows(tap, i, t * din);
+                let di = example_rows(delta, i, t * dout);
+                let mbuf = &mut wbuf[..din * dout];
+                mbuf.iter_mut().for_each(|z| *z = 0.0);
+                gemm::sgemm_tn_f64acc(
+                    din,
+                    t,
+                    dout,
+                    tapi,
+                    None,
+                    di,
+                    mbuf,
+                    &mut workbuf[..din * dout],
+                );
+                row[slot_base(pl)] = mbuf
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum::<f64>();
+                let bias = &mut bbuf[..dout];
+                bias.iter_mut().for_each(|z| *z = 0.0);
+                gemm::col_sums(t, dout, di, None, bias);
+                row[slot_base(pl) + 1] = bias
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum::<f64>();
+            }
+            // pooled head: dense tap trick (exact)
+            row[slot_base(7)] = fc_tap_sq(pool, dz, i, d, spec.n_classes);
+        });
+}
+
+/// Exact per-example squared gradient norms — the position-Gram route
+/// (paper Sec 5.2): per projection layer, form the T x T position
+/// Grams A_i·A_iᵀ and Δ_i·Δ_iᵀ and sum their Hadamard product; the
+/// all-ones bias tap contributes Σ_pq (Δ_i·Δ_iᵀ)_pq; the embedding's
+/// one-hot tap Gram *is* the token-equality mask, so its weight term
+/// is the masked sum over the delta Gram. The off-diagonal terms are
+/// exactly what position weight-sharing adds over the MLP diagonal.
+pub fn gram_sq_norms(
+    spec: &AttnSpec,
+    x: &[f32],
+    s: &mut AttnScratch,
+    out: &mut [f64],
+) {
+    let b = s.b;
+    let t = spec.seq;
+    let d = spec.d_model;
+    debug_assert_eq!(out.len(), b * N_SLOTS);
+    let AttnScratch {
+        x0, ctx, x1, f1, pool, dq, dk, dv, dx0, dx1, dx2, dz1, dz,
+        ex_ga, ex_gd, ..
+    } = s;
+    if ex_ga.len() < b * t * t {
+        ex_ga.resize(b * t * t, 0.0);
+        ex_gd.resize(b * t * t, 0.0);
+    }
+    let (x0, ctx, x1, f1, pool) = (&*x0, &*ctx, &*x1, &*f1, &*pool);
+    let (dq, dk, dv, dx0, dx1, dx2, dz1, dz) =
+        (&*dq, &*dk, &*dv, &*dx0, &*dx1, &*dx2, &*dz1, &*dz);
+    let projs = proj_table(spec, x0, ctx, x1, f1, dq, dk, dv, dx1, dz1, dx2);
+    out.par_chunks_mut(N_SLOTS)
+        .zip(ex_ga.par_chunks_mut(t * t))
+        .zip(ex_gd.par_chunks_mut(t * t))
+        .enumerate()
+        .for_each(|(i, ((row, gabuf), gdbuf))| {
+            // embed: delta position-Gram masked by token equality
+            // (the one-hot tap Gram), bias as the all-ones tap sum
+            let toks = &x[i * t..(i + 1) * t];
+            let dxi = example_rows(dx0, i, t * d);
+            let gd = &mut gdbuf[..t * t];
+            gd.iter_mut().for_each(|z| *z = 0.0);
+            gemm::sgemm_nt(t, d, t, dxi, dxi, gd);
+            let mut w_term = 0.0f64;
+            let mut b_term = 0.0f64;
+            for t1 in 0..t {
+                for t2 in 0..t {
+                    let gv = gd[t1 * t + t2] as f64;
+                    if toks[t1] == toks[t2] {
+                        w_term += gv;
+                    }
+                    b_term += gv;
+                }
+            }
+            // joint addend in the first slot, +0.0 pad in the second
+            // (the slab contract)
+            row[slot_base(0)] = w_term + b_term;
+            row[slot_base(0) + 1] = 0.0;
+            // position-shared projections
+            for &(pl, tap, delta, din, dout) in projs.iter() {
+                let tapi = example_rows(tap, i, t * din);
+                let di = example_rows(delta, i, t * dout);
+                let ga = &mut gabuf[..t * t];
+                ga.iter_mut().for_each(|z| *z = 0.0);
+                let gd = &mut gdbuf[..t * t];
+                gd.iter_mut().for_each(|z| *z = 0.0);
+                gemm::sgemm_nt(t, din, t, tapi, tapi, ga);
+                gemm::sgemm_nt(t, dout, t, di, di, gd);
+                let mut w_term = 0.0f64;
+                let mut b_term = 0.0f64;
+                for (&gav, &gdv) in ga.iter().zip(gd.iter()) {
+                    w_term += (gav as f64) * (gdv as f64);
+                    b_term += gdv as f64;
+                }
+                row[slot_base(pl)] = w_term + b_term;
+                row[slot_base(pl) + 1] = 0.0;
+            }
+            row[slot_base(7)] = fc_tap_sq(pool, dz, i, d, spec.n_classes);
+        });
+}
+
+/// The row-norm-product upper bound: per projection layer,
+/// (‖A_i‖²_F + T)·‖Δ_i‖²_F (the +T augments the bias's all-ones tap
+/// column); the embedding's one-hot tap has ‖A‖²_F = T. Exact on the
+/// pooled head, a strict overestimate wherever an example's position
+/// taps are not mutually orthogonal — see the module docs. Never used
+/// to clip.
+pub fn tap_bound_sq_norms(
+    spec: &AttnSpec,
+    _x: &[f32],
+    s: &AttnScratch,
+    out: &mut [f64],
+) {
+    let b = s.b;
+    let t = spec.seq;
+    let d = spec.d_model;
+    debug_assert_eq!(out.len(), b * N_SLOTS);
+    let projs = proj_table(
+        spec, &s.x0, &s.ctx, &s.x1, &s.f1, &s.dq, &s.dk, &s.dv, &s.dx1,
+        &s.dz1, &s.dx2,
+    );
+    for i in 0..b {
+        let row = &mut out[i * N_SLOTS..(i + 1) * N_SLOTS];
+        // embed: one-hot tap rows have unit norm, so ‖A‖²_F = T; +T
+        // for the bias's all-ones column
+        let dxi = example_rows(&s.dx0, i, t * d);
+        let d2: f64 = dxi.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        row[slot_base(0)] = (t as f64 + t as f64) * d2;
+        row[slot_base(0) + 1] = 0.0;
+        for &(pl, tap, delta, din, dout) in projs.iter() {
+            let tapi = example_rows(tap, i, t * din);
+            let di = example_rows(delta, i, t * dout);
+            let a2: f64 = tapi.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let d2: f64 = di.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            row[slot_base(pl)] = (a2 + t as f64) * d2;
+            row[slot_base(pl) + 1] = 0.0;
+        }
+        row[slot_base(7)] = fc_tap_sq(&s.pool, &s.dz, i, d, spec.n_classes);
+    }
+}
+
+/// Scale every layer's delta rows by that layer's group clip factor in
+/// place — the `reweight_direct` assembly. Each parametric layer owns
+/// its delta buffer (see the module docs' table), so group-wise
+/// policies scale them independently.
+pub fn scale_delta_rows(spec: &AttnSpec, nu: &NuBlock<'_>, s: &mut AttnScratch) {
+    let (t, d, f) = (spec.seq, spec.d_model, spec.ff);
+    let nc = spec.n_classes;
+    let targets: [(usize, &mut Vec<f32>, usize); 8] = [
+        (0, &mut s.dx0, t * d),
+        (1, &mut s.dq, t * d),
+        (2, &mut s.dk, t * d),
+        (3, &mut s.dv, t * d),
+        (4, &mut s.dx1, t * d),
+        (5, &mut s.dz1, t * f),
+        (6, &mut s.dx2, t * d),
+        (7, &mut s.dz, nc),
+    ];
+    for (pl, buf, per_example) in targets {
+        for (i, &wv) in nu.layer(pl).iter().enumerate() {
+            for v in buf[i * per_example..(i + 1) * per_example].iter_mut() {
+                *v *= wv;
+            }
+        }
+    }
+}
+
+/// Accumulate the batch-summed gradients from the current deltas into
+/// the arena. With `scale` (the `reweight_pallas` path) the clip
+/// factor fuses into the reductions, applied uniformly over the T
+/// position rows each example owns.
+///
+/// Projection layers keep the **per-example association**: example i's
+/// contribution is the f64-reduced A_iᵀ·Δ_i (`sgemm_tn_f64acc`), so
+/// the assembly matches the multiloss materialization and the nxBP
+/// coordinator loop and the cross-method float divergence stays
+/// batch-sized. A d_in x d_out output fills only one GEMM tile, so the
+/// per-example partials are computed on all cores (disjoint
+/// `ex_w`/`ex_b` chunks) and merged in ascending example order. The
+/// embedding scatters delta rows into token rows serially (ascending
+/// examples, ascending positions); the pooled head is a plain dense
+/// reduction over the batch.
+pub fn grads_from_deltas(
+    spec: &AttnSpec,
+    x: &[f32],
+    s: &mut AttnScratch,
+    scale: Option<&NuBlock<'_>>,
+    grads: &mut GradVec,
+) {
+    let b = s.b;
+    let (t, d) = (spec.seq, spec.d_model);
+    let nc = spec.n_classes;
+    let (max_w, max_b) = (spec.wmax(), spec.bmax());
+    let AttnScratch {
+        x0, ctx, x1, f1, pool, dq, dk, dv, dx0, dx1, dx2, dz1, dz,
+        ex_w, ex_work, ex_b, ..
+    } = s;
+    if ex_w.len() < b * max_w {
+        ex_w.resize(b * max_w, 0.0);
+        ex_work.resize(b * max_w, 0.0);
+    }
+    if ex_b.len() < b * max_b {
+        ex_b.resize(b * max_b, 0.0);
+    }
+    let (x0, ctx, x1, f1, pool) = (&*x0, &*ctx, &*x1, &*f1, &*pool);
+    let (dq, dk, dv, dx0, dx1, dx2, dz1, dz) =
+        (&*dq, &*dk, &*dv, &*dx0, &*dx1, &*dx2, &*dz1, &*dz);
+
+    // embed: scatter delta rows into token rows, ascending examples
+    // then positions (serial — deterministic and tiny: b·T axpys)
+    {
+        let scale_l = scale.map(|nb| nb.layer(0));
+        let gw = grads.param_mut(0);
+        for i in 0..b {
+            let dxi = example_rows(dx0, i, t * d);
+            // 1.0 * v is bitwise v, so the unscaled path shares this loop
+            let nu_i = scale_l.map_or(1.0, |nu| nu[i]);
+            for tt in 0..t {
+                let tok = x[i * t + tt] as usize;
+                let grow = &mut gw[tok * d..(tok + 1) * d];
+                let drow = &dxi[tt * d..(tt + 1) * d];
+                for (g, &dv0) in grow.iter_mut().zip(drow) {
+                    *g += nu_i * dv0;
+                }
+            }
+        }
+        let gb = grads.param_mut(1);
+        for i in 0..b {
+            let dxi = example_rows(dx0, i, t * d);
+            match scale_l {
+                Some(nu) => gemm::col_sums_uniform(t, d, dxi, nu[i], gb),
+                None => gemm::col_sums(t, d, dxi, None, gb),
+            }
+        }
+    }
+
+    // position-shared projections: per-example f64 partials on all
+    // cores, then ascending-example merge
+    let projs = proj_table(spec, x0, ctx, x1, f1, dq, dk, dv, dx1, dz1, dx2);
+    for &(pl, tap, delta, din, dout) in projs.iter() {
+        let scale_l = scale.map(|nb| nb.layer(pl));
+        let wlen = din * dout;
+        ex_w.par_chunks_mut(max_w)
+            .zip(ex_work.par_chunks_mut(max_w))
+            .zip(ex_b.par_chunks_mut(max_b))
+            .enumerate()
+            .for_each(|(i, ((wbuf, workbuf), bbuf))| {
+                let tapi = example_rows(tap, i, t * din);
+                let di = example_rows(delta, i, t * dout);
+                let wpart = &mut wbuf[..wlen];
+                wpart.iter_mut().for_each(|z| *z = 0.0);
+                let bpart = &mut bbuf[..dout];
+                bpart.iter_mut().for_each(|z| *z = 0.0);
+                let work = &mut workbuf[..wlen];
+                match scale_l {
+                    Some(nu) => {
+                        gemm::sgemm_tn_f64acc_uniform(
+                            din, t, dout, tapi, nu[i], di, wpart, work,
+                        );
+                        gemm::col_sums_uniform(t, dout, di, nu[i], bpart);
+                    }
+                    None => {
+                        gemm::sgemm_tn_f64acc(
+                            din, t, dout, tapi, None, di, wpart, work,
+                        );
+                        gemm::col_sums(t, dout, di, None, bpart);
+                    }
+                }
+            });
+        let gw = grads.param_mut(2 * pl);
+        for i in 0..b {
+            let wpart = &ex_w[i * max_w..i * max_w + wlen];
+            for (g, &v0) in gw.iter_mut().zip(wpart) {
+                *g += v0;
+            }
+        }
+        let gb = grads.param_mut(2 * pl + 1);
+        for i in 0..b {
+            let bpart = &ex_b[i * max_b..i * max_b + dout];
+            for (g, &v0) in gb.iter_mut().zip(bpart) {
+                *g += v0;
+            }
+        }
+    }
+
+    // pooled head: one dense reduction over the batch (MLP idiom)
+    {
+        let scale_l = scale.map(|nb| nb.layer(7));
+        match scale_l {
+            Some(nu) => gemm::sgemm_tn_scaled(
+                d,
+                b,
+                nc,
+                pool,
+                nu,
+                dz,
+                grads.param_mut(14),
+            ),
+            None => gemm::sgemm_tn(d, b, nc, pool, dz, grads.param_mut(14)),
+        }
+        gemm::col_sums(b, nc, dz, scale_l, grads.param_mut(15));
+    }
+}
+
+/// Materialize example i's full gradient into the arena (overwriting),
+/// returning its squared norm from the materialized values — the
+/// multiLoss structure. The projection blocks run the same per-example
+/// A_iᵀ·Δ_i f64 reduction as `sq_norms`, so the reported norms agree
+/// bitwise with the direct route on those layers. `work` is the
+/// caller's grow-only f64 workspace (multiloss chunks own one each,
+/// so this is safe to run concurrently over distinct examples).
+pub fn materialize_grad_row(
+    spec: &AttnSpec,
+    x: &[f32],
+    s: &AttnScratch,
+    i: usize,
+    out: &mut GradVec,
+    work: &mut Vec<f64>,
+) -> f64 {
+    let (t, d) = (spec.seq, spec.d_model);
+    let nc = spec.n_classes;
+    let max_w = spec.wmax();
+    if work.len() < max_w {
+        work.resize(max_w, 0.0);
+    }
+    let mut sq = 0.0f64;
+
+    // embed: zero the full block, scatter this example's delta rows
+    {
+        let dxi = example_rows(&s.dx0, i, t * d);
+        let gw = out.param_mut(0);
+        gw.iter_mut().for_each(|z| *z = 0.0);
+        for tt in 0..t {
+            let tok = x[i * t + tt] as usize;
+            let grow = &mut gw[tok * d..(tok + 1) * d];
+            let drow = &dxi[tt * d..(tt + 1) * d];
+            for (g, &dv0) in grow.iter_mut().zip(drow) {
+                *g += dv0;
+            }
+        }
+        sq += gw.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        let gb = out.param_mut(1);
+        gb.iter_mut().for_each(|z| *z = 0.0);
+        gemm::col_sums(t, d, dxi, None, gb);
+        sq += gb.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+    }
+
+    // position-shared projections
+    let projs = proj_table(
+        spec, &s.x0, &s.ctx, &s.x1, &s.f1, &s.dq, &s.dk, &s.dv, &s.dx1,
+        &s.dz1, &s.dx2,
+    );
+    for &(pl, tap, delta, din, dout) in projs.iter() {
+        let tapi = example_rows(tap, i, t * din);
+        let di = example_rows(delta, i, t * dout);
+        let gw = out.param_mut(2 * pl);
+        gw.iter_mut().for_each(|z| *z = 0.0);
+        gemm::sgemm_tn_f64acc(
+            din,
+            t,
+            dout,
+            tapi,
+            None,
+            di,
+            gw,
+            &mut work[..din * dout],
+        );
+        sq += gw.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        let gb = out.param_mut(2 * pl + 1);
+        gb.iter_mut().for_each(|z| *z = 0.0);
+        gemm::col_sums(t, dout, di, None, gb);
+        sq += gb.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+    }
+
+    // pooled head (dense, MLP idiom)
+    {
+        let a = example_rows(&s.pool, i, d);
+        let dzi = example_rows(&s.dz, i, nc);
+        let gw = out.param_mut(14);
+        for (kk, &xk) in a.iter().enumerate() {
+            let row = &mut gw[kk * nc..(kk + 1) * nc];
+            for (g, &dv0) in row.iter_mut().zip(dzi.iter()) {
+                *g = xk * dv0;
+                sq += (*g as f64) * (*g as f64);
+            }
+        }
+        let gb = out.param_mut(15);
+        for (g, &dv0) in gb.iter_mut().zip(dzi.iter()) {
+            *g = dv0;
+            sq += (*g as f64) * (*g as f64);
+        }
+    }
+    sq
+}
+
+// ---------------------------------------------------------------------
+// ModelFamily registration (taps::FamilyRegistry "transformer")
+// ---------------------------------------------------------------------
+
+impl ModelFamily for AttnSpec {
+    fn family(&self) -> &'static str {
+        "transformer"
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn d_in(&self) -> usize {
+        self.seq
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn grad_layout(&self) -> Vec<usize> {
+        self.grad_lens()
+    }
+
+    /// Two slots per position-shared layer (weight term, then bias
+    /// term), one for the pooled head.
+    fn norm_slots(&self) -> Vec<usize> {
+        vec![0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7]
+    }
+
+    fn validate_params(&self, config: &str, host: &[Vec<f32>]) -> Result<()> {
+        self.check_params(config, host)
+    }
+
+    fn new_scratch(&self) -> Box<ScratchAny> {
+        Box::new(AttnScratch::for_spec(self, self.batch))
+    }
+
+    fn forward_batch(
+        &self,
+        params: &[Vec<f32>],
+        x: &[f32],
+        labels: &[i32],
+        s: &mut ScratchAny,
+    ) -> (f64, usize) {
+        let scr = downcast_scratch::<AttnScratch>(s, "transformer");
+        forward_batch(self, params, x, labels, scr)
+    }
+
+    fn backward_batch(
+        &self,
+        params: &[Vec<f32>],
+        labels: &[i32],
+        nu: Option<&[f32]>,
+        s: &mut ScratchAny,
+    ) {
+        let scr = downcast_scratch::<AttnScratch>(s, "transformer");
+        backward_batch(self, params, labels, nu, scr)
+    }
+
+    fn sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<AttnScratch>(s, "transformer");
+        sq_norms(self, x, scr, out)
+    }
+
+    fn gram_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<AttnScratch>(s, "transformer");
+        gram_sq_norms(self, x, scr, out)
+    }
+
+    fn tap_bound_sq_norms(&self, x: &[f32], s: &mut ScratchAny, out: &mut [f64]) {
+        let scr = downcast_scratch::<AttnScratch>(s, "transformer");
+        tap_bound_sq_norms(self, x, scr, out)
+    }
+
+    fn scale_delta_rows(&self, nu: &NuBlock<'_>, s: &mut ScratchAny) {
+        let scr = downcast_scratch::<AttnScratch>(s, "transformer");
+        scale_delta_rows(self, nu, scr)
+    }
+
+    fn grads_from_deltas(
+        &self,
+        x: &[f32],
+        s: &mut ScratchAny,
+        scale: Option<&NuBlock<'_>>,
+        grads: &mut GradVec,
+    ) {
+        let scr = downcast_scratch::<AttnScratch>(s, "transformer");
+        grads_from_deltas(self, x, scr, scale, grads)
+    }
+
+    fn materialize_grad_row(
+        &self,
+        x: &[f32],
+        s: &ScratchAny,
+        i: usize,
+        out: &mut GradVec,
+        work: &mut Vec<f64>,
+    ) -> f64 {
+        let scr = downcast_scratch_ref::<AttnScratch>(s, "transformer");
+        materialize_grad_row(self, x, scr, i, out, work)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+    use crate::runtime::store::clip_factor;
+    use crate::rng::ChaCha20;
+
+    fn tiny_cfg() -> ConfigSpec {
+        ConfigSpec {
+            name: "tiny_tf_b2".into(),
+            model: "transformer".into(),
+            dataset: "imdb".into(),
+            batch: 2,
+            n_classes: 3,
+            tags: vec![],
+            input_shape: vec![2, 4],
+            input_dtype: "f32".into(),
+            act_elems_per_example: 0,
+            conv: None,
+            spec: Some(ModelSpec::Transformer {
+                heads: 2,
+                d_model: 4,
+                seq: 4,
+                ff: 6,
+            }),
+            params: vec![
+                ParamSpec { name: "embed.w".into(), shape: vec![11, 4] },
+                ParamSpec { name: "embed.b".into(), shape: vec![4] },
+                ParamSpec { name: "attn.q.w".into(), shape: vec![4, 4] },
+                ParamSpec { name: "attn.q.b".into(), shape: vec![4] },
+                ParamSpec { name: "attn.k.w".into(), shape: vec![4, 4] },
+                ParamSpec { name: "attn.k.b".into(), shape: vec![4] },
+                ParamSpec { name: "attn.v.w".into(), shape: vec![4, 4] },
+                ParamSpec { name: "attn.v.b".into(), shape: vec![4] },
+                ParamSpec { name: "attn.o.w".into(), shape: vec![4, 4] },
+                ParamSpec { name: "attn.o.b".into(), shape: vec![4] },
+                ParamSpec { name: "ff1.w".into(), shape: vec![4, 6] },
+                ParamSpec { name: "ff1.b".into(), shape: vec![6] },
+                ParamSpec { name: "ff2.w".into(), shape: vec![6, 4] },
+                ParamSpec { name: "ff2.b".into(), shape: vec![4] },
+                ParamSpec { name: "head.w".into(), shape: vec![4, 3] },
+                ParamSpec { name: "head.b".into(), shape: vec![3] },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn rand_params(spec: &AttnSpec, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = ChaCha20::seeded(seed, 42);
+        spec.grad_lens()
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.next_f32() - 0.5).collect())
+            .collect()
+    }
+
+    /// Token batch with duplicated ids inside each example, so the
+    /// embedding's token-equality (one-hot Gram) path is exercised.
+    fn tiny_tokens() -> Vec<f32> {
+        vec![3.0, 5.0, 3.0, 9.0, 1.0, 1.0, 7.0, 2.0]
+    }
+
+    fn run_fwd_bwd(
+        spec: &AttnSpec,
+        params: &[Vec<f32>],
+        x: &[f32],
+        labels: &[i32],
+    ) -> (f64, AttnScratch) {
+        let mut s = AttnScratch::for_spec(spec, spec.batch);
+        let (loss, _) = forward_batch(spec, params, x, labels, &mut s);
+        backward_batch(spec, params, labels, None, &mut s);
+        (loss, s)
+    }
+
+    #[test]
+    fn spec_parses_and_validates() {
+        let cfg = tiny_cfg();
+        let spec = AttnSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.seq, 4);
+        assert_eq!(spec.d_model, 4);
+        assert_eq!(spec.heads, 2);
+        assert_eq!(spec.dh(), 2);
+        assert_eq!(spec.ff, 6);
+        assert_eq!(spec.vocab, 11);
+        assert_eq!(spec.n_classes, 3);
+        assert_eq!(spec.grad_lens().len(), 16);
+        assert_eq!(spec.grad_lens()[0], 11 * 4);
+        assert_eq!(
+            ModelFamily::norm_slots(&spec),
+            vec![0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7]
+        );
+
+        let mut wrong_model = cfg.clone();
+        wrong_model.model = "mlp".into();
+        assert!(AttnSpec::from_config(&wrong_model).is_err());
+
+        let mut bad_heads = cfg.clone();
+        bad_heads.spec = Some(ModelSpec::Transformer {
+            heads: 3,
+            d_model: 4,
+            seq: 4,
+            ff: 6,
+        });
+        assert!(AttnSpec::from_config(&bad_heads).is_err());
+
+        let mut bad_chain = cfg.clone();
+        bad_chain.params[2].shape = vec![5, 4]; // q in-dim != d_model
+        assert!(AttnSpec::from_config(&bad_chain).is_err());
+
+        let mut no_spec = cfg.clone();
+        no_spec.spec = None;
+        let err = AttnSpec::from_config(&no_spec).unwrap_err();
+        assert!(format!("{err:#}").contains("spec provenance"));
+    }
+
+    /// Assembled batch gradients match central finite differences of
+    /// the batch loss sum, for every tensor including the embedding —
+    /// the ground-truth check the whole family rests on.
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let cfg = tiny_cfg();
+        let spec = AttnSpec::from_config(&cfg).unwrap();
+        let params = rand_params(&spec, 9);
+        let x = tiny_tokens();
+        let labels = vec![2i32, 0];
+
+        let (_, mut s) = run_fwd_bwd(&spec, &params, &x, &labels);
+        let mut grads = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &x, &mut s, None, &mut grads);
+
+        let eps = 1e-3f32;
+        let mut fs = AttnScratch::for_spec(&spec, spec.batch);
+        for t in 0..params.len() {
+            for idx in [0usize, params[t].len() / 2, params[t].len() - 1] {
+                let mut p_hi = params.clone();
+                p_hi[t][idx] += eps;
+                let (l_hi, _) =
+                    forward_batch(&spec, &p_hi, &x, &labels, &mut fs);
+                let mut p_lo = params.clone();
+                p_lo[t][idx] -= eps;
+                let (l_lo, _) =
+                    forward_batch(&spec, &p_lo, &x, &labels, &mut fs);
+                let fd = ((l_hi - l_lo) / (2.0 * eps as f64)) as f32;
+                let an = grads.param(t)[idx];
+                assert!(
+                    (fd - an).abs() < 3e-3 * (1.0 + an.abs()),
+                    "param {t}[{idx}]: finite-diff {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    /// The three norm routes agree where they must (direct = gram =
+    /// materialized, within float tolerance) and the Cauchy–Schwarz
+    /// bound dominates the exact norm with genuine slack on the
+    /// position-shared layers.
+    #[test]
+    fn norm_routes_agree_and_tap_bounds_them() {
+        let cfg = tiny_cfg();
+        let spec = AttnSpec::from_config(&cfg).unwrap();
+        let params = rand_params(&spec, 21);
+        let x = tiny_tokens();
+        let labels = vec![1i32, 2];
+        let b = spec.batch;
+
+        let (_, mut s) = run_fwd_bwd(&spec, &params, &x, &labels);
+        let mut direct = vec![0.0f64; b * N_SLOTS];
+        sq_norms(&spec, &x, &mut s, &mut direct);
+        let mut gram = vec![0.0f64; b * N_SLOTS];
+        gram_sq_norms(&spec, &x, &mut s, &mut gram);
+        let mut bound = vec![0.0f64; b * N_SLOTS];
+        tap_bound_sq_norms(&spec, &x, &s, &mut bound);
+
+        let layer_sum = |slab: &[f64], i: usize, pl: usize| -> f64 {
+            if pl < 7 {
+                slab[i * N_SLOTS + 2 * pl] + slab[i * N_SLOTS + 2 * pl + 1]
+            } else {
+                slab[i * N_SLOTS + 14]
+            }
+        };
+        let mut work = Vec::new();
+        let mut mat = GradVec::with_layout(&spec.grad_lens());
+        for i in 0..b {
+            let sq_mat = materialize_grad_row(&spec, &x, &s, i, &mut mat, &mut work);
+            let mut d_tot = 0.0f64;
+            let mut g_tot = 0.0f64;
+            let mut t_tot = 0.0f64;
+            let mut exact_proj = 0.0f64;
+            let mut bound_proj = 0.0f64;
+            for pl in 0..N_LAYERS {
+                let dv = layer_sum(&direct, i, pl);
+                let gv = layer_sum(&gram, i, pl);
+                let tv = layer_sum(&bound, i, pl);
+                assert!(
+                    (dv - gv).abs() / dv.max(1e-12) < 1e-5,
+                    "example {i} layer {pl}: direct {dv} vs gram {gv}"
+                );
+                assert!(
+                    tv >= gv * (1.0 - 1e-9),
+                    "example {i} layer {pl}: bound {tv} < exact {gv}"
+                );
+                if (1..=6).contains(&pl) {
+                    exact_proj += gv;
+                    bound_proj += tv;
+                }
+                d_tot += dv;
+                g_tot += gv;
+                t_tot += tv;
+            }
+            assert!(
+                (d_tot - sq_mat).abs() / sq_mat.max(1e-12) < 1e-5,
+                "example {i}: direct total {d_tot} vs materialized {sq_mat}"
+            );
+            assert!(
+                (g_tot - sq_mat).abs() / sq_mat.max(1e-12) < 1e-5,
+                "example {i}: gram total {g_tot} vs materialized {sq_mat}"
+            );
+            // the bound has real slack on the shared-weight layers
+            assert!(
+                bound_proj > 1.001 * exact_proj,
+                "example {i}: projection bound {bound_proj} not above \
+                 exact {exact_proj}"
+            );
+            assert!(t_tot >= g_tot, "example {i}: total bound below exact");
+        }
+    }
+
+    /// The three weighted-assembly routes agree under a global nu:
+    /// reweighted second backward, in-place delta scaling, and the
+    /// fused scaled reduction.
+    #[test]
+    fn weighted_assembly_routes_agree() {
+        let cfg = tiny_cfg();
+        let spec = AttnSpec::from_config(&cfg).unwrap();
+        let params = rand_params(&spec, 4);
+        let x = tiny_tokens();
+        let labels = vec![0i32, 1];
+        let b = spec.batch;
+        let nu: Vec<f32> = (0..b).map(|i| 0.3 + 0.2 * i as f32).collect();
+        let groups = vec![0usize; N_LAYERS];
+        let block = NuBlock { nu: &nu, groups: &groups, b };
+
+        // route A: reweighted second backward
+        let (_, mut s) = run_fwd_bwd(&spec, &params, &x, &labels);
+        backward_batch(&spec, &params, &labels, Some(&nu), &mut s);
+        let mut ga = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &x, &mut s, None, &mut ga);
+
+        // route B: scale the tapped deltas in place
+        let (_, mut s) = run_fwd_bwd(&spec, &params, &x, &labels);
+        scale_delta_rows(&spec, &block, &mut s);
+        let mut gb = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &x, &mut s, None, &mut gb);
+
+        // route C: fuse the factors into the reductions
+        let (_, mut s) = run_fwd_bwd(&spec, &params, &x, &labels);
+        let mut gc = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &x, &mut s, Some(&block), &mut gc);
+
+        for ((&av, &bv), &cv) in
+            ga.flat().iter().zip(gb.flat()).zip(gc.flat())
+        {
+            assert!((av - bv).abs() < 1e-5, "reweighted {av} vs scaled {bv}");
+            assert!((bv - cv).abs() < 1e-5, "scaled {bv} vs fused {cv}");
+        }
+    }
+
+    /// Group-blocked nu: the fused assembly matches scaling each
+    /// example's materialized gradient per group — the ClipPolicy
+    /// ground truth.
+    #[test]
+    fn group_blocks_match_per_group_materialized_scaling() {
+        let cfg = tiny_cfg();
+        let spec = AttnSpec::from_config(&cfg).unwrap();
+        let params = rand_params(&spec, 13);
+        let x = tiny_tokens();
+        let labels = vec![2i32, 1];
+        let b = spec.batch;
+        // two groups: attention side (embed..o) vs ff+head
+        let groups: Vec<usize> =
+            (0..N_LAYERS).map(|l| usize::from(l >= 5)).collect();
+        let nu: Vec<f32> =
+            (0..2 * b).map(|i| 0.15 + 0.12 * i as f32).collect();
+        let block = NuBlock { nu: &nu, groups: &groups, b };
+
+        let (_, mut s) = run_fwd_bwd(&spec, &params, &x, &labels);
+        let mut fused = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &x, &mut s, Some(&block), &mut fused);
+
+        let mut want = GradVec::with_layout(&spec.grad_lens());
+        let mut mat = GradVec::with_layout(&spec.grad_lens());
+        let mut work = Vec::new();
+        for i in 0..b {
+            materialize_grad_row(&spec, &x, &s, i, &mut mat, &mut work);
+            // group 0 = params 0..10 (layers 0..=4), group 1 = 10..16
+            want.add_scaled_params(&mat, 0, 10, nu[i]);
+            want.add_scaled_params(&mat, 10, 16, nu[b + i]);
+        }
+        for (t, (&fv, &wv)) in
+            fused.flat().iter().zip(want.flat()).enumerate()
+        {
+            assert!(
+                (fv - wv).abs() < 1e-5,
+                "flat[{t}]: fused {fv} vs materialized {wv}"
+            );
+        }
+    }
+
+    /// Clipped-sum equivalence: reweighting by clip factors equals the
+    /// sum of per-example materialized clipped gradients, and the
+    /// factors genuinely clip.
+    #[test]
+    fn materialized_clipped_sum_matches_reweighted_assembly() {
+        let cfg = tiny_cfg();
+        let spec = AttnSpec::from_config(&cfg).unwrap();
+        let params = rand_params(&spec, 7);
+        let x = tiny_tokens();
+        let labels = vec![1i32, 0];
+        let b = spec.batch;
+
+        let (_, mut s) = run_fwd_bwd(&spec, &params, &x, &labels);
+        let mut slab = vec![0.0f64; b * N_SLOTS];
+        sq_norms(&spec, &x, &mut s, &mut slab);
+        let norms: Vec<f64> = (0..b)
+            .map(|i| {
+                slab[i * N_SLOTS..(i + 1) * N_SLOTS]
+                    .iter()
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        // pick the clip below the largest norm so it provably binds
+        let clip = (0.8 * norms.iter().cloned().fold(0.0, f64::max)) as f32;
+        let nu: Vec<f32> =
+            norms.iter().map(|&n| clip_factor(n as f32, clip)).collect();
+        assert!(
+            nu.iter().any(|&v| v < 1.0),
+            "clip 0.5 should bind for at least one example: {nu:?}"
+        );
+        let groups = vec![0usize; N_LAYERS];
+        let block = NuBlock { nu: &nu, groups: &groups, b };
+        let mut fused = GradVec::with_layout(&spec.grad_lens());
+        grads_from_deltas(&spec, &x, &mut s, Some(&block), &mut fused);
+
+        let mut want = GradVec::with_layout(&spec.grad_lens());
+        let mut mat = GradVec::with_layout(&spec.grad_lens());
+        let mut work = Vec::new();
+        for i in 0..b {
+            let sq = materialize_grad_row(&spec, &x, &s, i, &mut mat, &mut work);
+            let f = clip_factor((sq as f32).sqrt(), clip);
+            assert!((f - nu[i]).abs() < 1e-6, "factor {f} vs nu {}", nu[i]);
+            want.add_scaled(&mat, f);
+        }
+        for (&fv, &wv) in fused.flat().iter().zip(want.flat()) {
+            assert!((fv - wv).abs() < 1e-5, "fused {fv} vs clipped sum {wv}");
+        }
+    }
+
+    /// Scratch reuse across batches changes no bits: soiling the
+    /// scratch with an unrelated batch and re-running the original
+    /// reproduces loss, slab, and gradients exactly.
+    #[test]
+    fn scratch_reuse_is_bitwise_clean() {
+        let cfg = tiny_cfg();
+        let spec = AttnSpec::from_config(&cfg).unwrap();
+        let params = rand_params(&spec, 31);
+        let x = tiny_tokens();
+        let labels = vec![0i32, 2];
+        let b = spec.batch;
+
+        let run = |s: &mut AttnScratch| -> (f64, Vec<f64>, Vec<f32>) {
+            let (loss, _) = forward_batch(&spec, &params, &x, &labels, s);
+            backward_batch(&spec, &params, &labels, None, s);
+            let mut slab = vec![0.0f64; b * N_SLOTS];
+            sq_norms(&spec, &x, s, &mut slab);
+            let mut g = GradVec::with_layout(&spec.grad_lens());
+            grads_from_deltas(&spec, &x, s, None, &mut g);
+            (loss, slab, g.flat().to_vec())
+        };
+
+        let mut s = AttnScratch::for_spec(&spec, b);
+        let (loss_a, slab_a, grads_a) = run(&mut s);
+        // soil with a different batch
+        let x2 = vec![10.0f32, 0.0, 4.0, 4.0, 6.0, 8.0, 8.0, 0.0];
+        let labels2 = vec![1i32, 1];
+        let (_, _) = forward_batch(&spec, &params, &x2, &labels2, &mut s);
+        backward_batch(&spec, &params, &labels2, None, &mut s);
+        let mut slab2 = vec![0.0f64; b * N_SLOTS];
+        gram_sq_norms(&spec, &x2, &mut s, &mut slab2);
+        // re-run the original: every bit must match the cold run
+        let (loss_b, slab_b, grads_b) = run(&mut s);
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits(), "loss drifted");
+        for (j, (a, c)) in slab_a.iter().zip(slab_b.iter()).enumerate() {
+            assert_eq!(a.to_bits(), c.to_bits(), "slab slot {j} drifted");
+        }
+        for (j, (a, c)) in grads_a.iter().zip(grads_b.iter()).enumerate() {
+            assert_eq!(a.to_bits(), c.to_bits(), "grad flat[{j}] drifted");
+        }
+    }
+}

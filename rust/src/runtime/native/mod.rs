@@ -32,14 +32,16 @@
 //!   - `naive1`:          the batch-1 body of the nxBP loop.
 //!
 //! Model families resolve through a name-keyed `FamilyRegistry`
-//! (`NativeBackend::register_family` to add one): `mlp` (dense) and
-//! `cnn` (convs lowered to im2col patch matrices, fc head) register by
-//! default. The *config* space is open too: `resolve` synthesizes any
-//! `model@dataset:bN` spec key through `spec::ConfigBuilder` (e.g.
-//! `mlp(depth=4,width=512)@cifar10:b256`), while the builtin grid —
-//! mlp{2,4,6,8} and cnn{2,4} over mnist/fmnist/cifar10 at batch
-//! {1,16,32,64,128} — survives as a preset naming layer over the same
-//! builder.
+//! (`NativeBackend::register_family` to add one): `mlp` (dense),
+//! `cnn` (convs lowered to im2col patch matrices, fc head), and
+//! `transformer` (single-block attention encoder over token
+//! sequences) register by default. The *config* space is open too:
+//! `resolve` synthesizes any `model@dataset:bN` spec key through
+//! `spec::ConfigBuilder` (e.g. `mlp(depth=4,width=512)@cifar10:b256`
+//! or `transformer(heads=4,d_model=64)@imdb:b32`), while the builtin
+//! grid — mlp{2,4,6,8} and cnn{2,4} over mnist/fmnist/cifar10, plus
+//! `transformer_imdb`, at batch {1,16,32,64,128} — survives as a
+//! preset naming layer over the same builder.
 //!
 //! Determinism: the GEMM/im2col kernels parallelize only over
 //! disjoint output blocks with fixed reduction orders (see `gemm`),
@@ -58,6 +60,7 @@
 //! (pinned by `cached_scratch_matches_fresh_step` and the
 //! warm-vs-cold integration tests).
 
+pub mod attention;
 pub mod conv;
 pub mod gemm;
 pub mod mlp;
@@ -713,12 +716,25 @@ fn preset(model: ModelSpec, dataset: &str, batch: usize) -> ConfigSpec {
 
 /// The built-in preset grid the native backend always carries:
 /// mlp{2,4,6,8} (width `DEFAULT_MLP_WIDTH`) and cnn{2,4} (stride-2 3x3, channels
-/// from `DEFAULT_CNN_CHANNELS`) over mnist/fmnist/cifar10 at batch
-/// {1,16,32,64,128}. Anything beyond the grid resolves through the
-/// spec grammar (`NativeBackend::resolve`) instead of being added
-/// here.
+/// from `DEFAULT_CNN_CHANNELS`) over mnist/fmnist/cifar10, plus the
+/// transformer encoder (`transformer_imdb`, grid-default
+/// heads=2/d_model=32/seq=64/ff=64) over the imdb token dataset, all
+/// at batch {1,16,32,64,128}. Anything beyond the grid resolves
+/// through the spec grammar (`NativeBackend::resolve`) instead of
+/// being added here.
 fn builtin_manifest() -> Manifest {
     let mut configs = BTreeMap::new();
+    for batch in [1usize, 16, 32, 64, 128] {
+        let cfg = ConfigBuilder::new(
+            ModelSpec::Transformer { heads: 2, d_model: 32, seq: 64, ff: 64 },
+            "imdb",
+            batch,
+        )
+        .named(&format!("transformer_imdb_b{batch}"))
+        .build()
+        .expect("builtin preset must synthesize");
+        configs.insert(cfg.name.clone(), cfg);
+    }
     for dataset in ["mnist", "fmnist", "cifar10"] {
         for batch in [1usize, 16, 32, 64, 128] {
             for depth in [2usize, 4, 6, 8] {
@@ -754,6 +770,33 @@ mod tests {
     use crate::runtime::manifest::ConvMeta;
     use crate::runtime::store::init_params_glorot;
 
+    /// Stage the first `cfg.batch` examples of the config's own
+    /// dataset: f32 image datasets gather directly, i32 token datasets
+    /// widen through the trainer's staging seam
+    /// (`gather_batch_i32_as_f32`).
+    fn stage_first_batch(cfg: &ConfigSpec, n: usize, seed: u64) -> BatchStage {
+        let ds = crate::data::load_dataset(&cfg.dataset, n, seed).unwrap();
+        let mut stage = BatchStage::for_config(cfg);
+        let batch: Vec<usize> = (0..cfg.batch).collect();
+        match &ds.features {
+            crate::data::Features::F32(_) => crate::data::gather_batch_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            ),
+            crate::data::Features::I32(_) => {
+                crate::data::gather_batch_i32_as_f32(
+                    &ds,
+                    &batch,
+                    &mut stage.feat_f32,
+                    &mut stage.labels,
+                )
+            }
+        }
+        stage
+    }
+
     #[test]
     fn builtin_manifest_is_consistent() {
         let b = NativeBackend::new();
@@ -761,8 +804,13 @@ mod tests {
         let cfg = m.config("mlp2_mnist_b32").unwrap();
         assert_eq!(cfg.batch, 32);
         assert_eq!(cfg.params[0].shape, vec![784, DEFAULT_MLP_WIDTH]);
-        // the full batched method matrix is native, on both families
-        for name in ["mlp2_mnist_b32", "cnn2_mnist_b32", "cnn4_cifar10_b64"] {
+        // the full batched method matrix is native, on all families
+        for name in [
+            "mlp2_mnist_b32",
+            "cnn2_mnist_b32",
+            "cnn4_cifar10_b64",
+            "transformer_imdb_b32",
+        ] {
             let cfg = m.config(name).unwrap();
             for method in [
                 "nonprivate",
@@ -803,6 +851,16 @@ mod tests {
         );
         let cnn4 = m.config("cnn4_cifar10_b16").unwrap();
         assert_eq!(cnn4.params[8].shape, vec![2 * 2 * 32, 10]);
+        // transformer chain: embed 5000->32, q/k/v/o 32x32, ff 32<->64,
+        // head 32->2, token input [batch, seq]
+        let tf = m.config("transformer_imdb_b32").unwrap();
+        assert_eq!(tf.batch, 32);
+        assert_eq!(tf.input_shape, vec![32, 64]);
+        assert_eq!(tf.params.len(), 16);
+        assert_eq!(tf.params[0].shape, vec![5000, 32]);
+        assert_eq!(tf.params[10].shape, vec![32, 64]);
+        assert_eq!(tf.params[14].shape, vec![32, 2]);
+        assert_eq!(tf.conv, None);
     }
 
     /// Every builtin preset carries spec provenance, and its batch-1
@@ -812,7 +870,8 @@ mod tests {
     #[test]
     fn presets_carry_provenance_matching_their_b1_sibling() {
         let b = NativeBackend::new();
-        for name in ["mlp4_cifar10_b64", "cnn2_mnist_b32"] {
+        for name in ["mlp4_cifar10_b64", "cnn2_mnist_b32", "transformer_imdb_b32"]
+        {
             let cfg = b.manifest().config(name).unwrap();
             assert!(cfg.spec.is_some(), "{name} has no spec provenance");
             let structural = b.naive_sibling(cfg).unwrap();
@@ -878,21 +937,15 @@ mod tests {
     #[test]
     fn fwd_counts_and_losses_are_sane() {
         let b = NativeBackend::new();
-        for name in ["mlp2_mnist_b32", "cnn2_mnist_b32"] {
+        for name in
+            ["mlp2_mnist_b32", "cnn2_mnist_b32", "transformer_imdb_b32"]
+        {
             let cfg = b.manifest().config(name).unwrap().clone();
             let step = b.load(&cfg, "fwd").unwrap();
             let params =
                 ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 0)))
                     .unwrap();
-            let ds = crate::data::load_dataset("mnist", 64, 0).unwrap();
-            let mut stage = BatchStage::for_config(&cfg);
-            let batch: Vec<usize> = (0..32).collect();
-            crate::data::gather_batch_f32(
-                &ds,
-                &batch,
-                &mut stage.feat_f32,
-                &mut stage.labels,
-            );
+            let stage = stage_first_batch(&cfg, 64, 0);
             let out = step.run(&params, &stage, None).unwrap();
             assert!(out.loss.is_finite() && out.loss > 0.0, "{name}");
             // the correct-prediction *count* is an integer in 0..=32
@@ -943,17 +996,11 @@ mod tests {
     #[test]
     fn results_are_deterministic_across_runs() {
         let b = NativeBackend::new();
-        for name in ["mlp2_mnist_b32", "cnn2_mnist_b32"] {
+        for name in
+            ["mlp2_mnist_b32", "cnn2_mnist_b32", "transformer_imdb_b32"]
+        {
             let cfg = b.manifest().config(name).unwrap().clone();
-            let ds = crate::data::load_dataset("mnist", 64, 3).unwrap();
-            let mut stage = BatchStage::for_config(&cfg);
-            let batch: Vec<usize> = (0..32).collect();
-            crate::data::gather_batch_f32(
-                &ds,
-                &batch,
-                &mut stage.feat_f32,
-                &mut stage.labels,
-            );
+            let stage = stage_first_batch(&cfg, 64, 3);
             let params =
                 ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 1)))
                     .unwrap();
@@ -993,17 +1040,11 @@ mod tests {
     #[test]
     fn cached_scratch_matches_fresh_step() {
         let b = NativeBackend::new();
-        for name in ["mlp2_mnist_b16", "cnn2_mnist_b16"] {
+        for name in
+            ["mlp2_mnist_b16", "cnn2_mnist_b16", "transformer_imdb_b16"]
+        {
             let cfg = b.manifest().config(name).unwrap().clone();
-            let ds = crate::data::load_dataset("mnist", 64, 9).unwrap();
-            let mut stage = BatchStage::for_config(&cfg);
-            let batch: Vec<usize> = (0..cfg.batch).collect();
-            crate::data::gather_batch_f32(
-                &ds,
-                &batch,
-                &mut stage.feat_f32,
-                &mut stage.labels,
-            );
+            let stage = stage_first_batch(&cfg, 64, 9);
             let params =
                 ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 4)))
                     .unwrap();
@@ -1040,17 +1081,11 @@ mod tests {
     #[test]
     fn batched_methods_agree_under_grouped_and_auto_policies() {
         let b = NativeBackend::new();
-        for name in ["mlp2_mnist_b16", "cnn2_mnist_b16"] {
+        for name in
+            ["mlp2_mnist_b16", "cnn2_mnist_b16", "transformer_imdb_b16"]
+        {
             let cfg = b.manifest().config(name).unwrap().clone();
-            let ds = crate::data::load_dataset("mnist", 64, 11).unwrap();
-            let mut stage = BatchStage::for_config(&cfg);
-            let batch: Vec<usize> = (0..cfg.batch).collect();
-            crate::data::gather_batch_f32(
-                &ds,
-                &batch,
-                &mut stage.feat_f32,
-                &mut stage.labels,
-            );
+            let stage = stage_first_batch(&cfg, 64, 11);
             let params =
                 ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 7)))
                     .unwrap();
@@ -1132,17 +1167,11 @@ mod tests {
             "cnn2_mnist_b16",
             "cnn2_mnist_b1",
             "cnn4_cifar10_b16",
+            "transformer_imdb_b16",
+            "transformer_imdb_b1",
         ] {
             let cfg = b.manifest().config(name).unwrap().clone();
-            let ds = crate::data::load_dataset(&cfg.dataset, 64, 5).unwrap();
-            let mut stage = BatchStage::for_config(&cfg);
-            let batch: Vec<usize> = (0..cfg.batch).collect();
-            crate::data::gather_batch_f32(
-                &ds,
-                &batch,
-                &mut stage.feat_f32,
-                &mut stage.labels,
-            );
+            let stage = stage_first_batch(&cfg, 64, 5);
             let params =
                 ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 2)))
                     .unwrap();

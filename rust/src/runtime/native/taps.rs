@@ -11,12 +11,17 @@
 //! per-head taps, RNN timestep taps) is one new file implementing the
 //! trait plus one `register` call — zero dispatch edits anywhere.
 //!
-//! Two families register by default (`FamilyRegistry::builtin`):
+//! Three families register by default (`FamilyRegistry::builtin`):
 //!   - `"mlp"` (`native/mlp.rs`, `MlpSpec`): dense layers; taps are
 //!     the B x d layer inputs, one row per example.
 //!   - `"cnn"` (`native/conv.rs`, `ConvSpec`): conv layers lowered to
 //!     im2col patch matrices over the same `gemm` kernels; taps are
 //!     (B·P) x K patch matrices, P rows per example.
+//!   - `"transformer"` (`native/attention.rs`, `AttnSpec`): a
+//!     single-block encoder; taps are (B·T) x d position matrices, T
+//!     rows per example — the conv position-Gram structure with
+//!     sequence positions in place of patches, plus a one-hot-tap
+//!     embedding.
 //!
 //! # ModelFamily obligations
 //!
@@ -277,7 +282,8 @@ impl FamilyRegistry {
         FamilyRegistry { builders: BTreeMap::new() }
     }
 
-    /// The built-in families: `mlp` (dense) and `cnn` (im2col conv).
+    /// The built-in families: `mlp` (dense), `cnn` (im2col conv) and
+    /// `transformer` (single-block attention encoder).
     pub fn builtin() -> FamilyRegistry {
         let mut r = FamilyRegistry::empty();
         r.register("mlp", |cfg| {
@@ -285,6 +291,9 @@ impl FamilyRegistry {
         });
         r.register("cnn", |cfg| {
             Ok(Box::new(super::conv::ConvSpec::from_config(cfg)?))
+        });
+        r.register("transformer", |cfg| {
+            Ok(Box::new(super::attention::AttnSpec::from_config(cfg)?))
         });
         r
     }
@@ -411,7 +420,7 @@ mod tests {
         // a custom builder registered under a new name resolves; the
         // builtin families stay untouched
         let mut r = FamilyRegistry::builtin();
-        assert_eq!(r.names(), vec!["cnn", "mlp"]);
+        assert_eq!(r.names(), vec!["cnn", "mlp", "transformer"]);
         // route "rnn" to the mlp builder as a stand-in: registration
         // alone (no dispatch edits) makes the family resolvable
         fn rnn_as_mlp(
@@ -452,7 +461,10 @@ mod tests {
         assert_eq!(fwd.names(), vec!["alpha", "beta", "mu", "zeta"]);
         assert_eq!(fwd.names(), rev.names(), "registration order must not leak");
         // builtin() is likewise sorted, not registration-ordered
-        assert_eq!(FamilyRegistry::builtin().names(), vec!["cnn", "mlp"]);
+        assert_eq!(
+            FamilyRegistry::builtin().names(),
+            vec!["cnn", "mlp", "transformer"]
+        );
     }
 
     #[test]

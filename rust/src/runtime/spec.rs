@@ -12,14 +12,17 @@
 //! ```text
 //!   model spec   mlp(depth=4,width=512)
 //!                cnn(depth=2,k=3,s=1,pad=1,ch=8-16)
+//!                transformer(heads=2,d_model=32,seq=64,ff=64)
 //!   spec key     <model-spec>@<dataset>:b<batch>
 //!                e.g. mlp(depth=4,width=512)@cifar10:b256
+//!                     transformer(heads=4,d_model=64)@imdb:b32
 //! ```
 //!
 //! Grammar notes:
 //!   - keys may be abbreviated (`d`/`depth`, `w`/`width`, `k`/`kernel`,
-//!     `s`/`stride`, `p`/`pad`, `ch`/`channels`), appear in any order,
-//!     and fall back to the builtin grid's defaults when omitted;
+//!     `s`/`stride`, `p`/`pad`, `ch`/`channels`, `h`/`heads`,
+//!     `dm`/`d_model`), appear in any order, and fall back to the
+//!     builtin grid's defaults when omitted;
 //!   - `ch` is a dash-separated out-channel progression whose length is
 //!     the conv depth (`depth` may be given redundantly, but must then
 //!     agree);
@@ -60,6 +63,13 @@ pub enum ModelSpec {
     /// (window == stride) after every conv layer; 0 means none (1 is
     /// normalized to 0 at parse time — a 1x1 mean is the identity).
     Cnn { k: usize, s: usize, pad: usize, pool: usize, ch: Vec<usize> },
+    /// Single-block transformer encoder over a token-sequence dataset:
+    /// token embedding into `d_model`, `heads`-head self-attention
+    /// (q/k/v/o projections), a residual `ff`-wide MLP, mean-pool, and
+    /// a classifier head. `seq` must match the dataset's sequence
+    /// length (it is part of the spec so the canonical printed form
+    /// fully determines the activation geometry).
+    Transformer { heads: usize, d_model: usize, seq: usize, ff: usize },
 }
 
 /// The default channel progression truncated/extended to `depth`.
@@ -88,8 +98,9 @@ impl ModelSpec {
         // family first: an unknown family must say so, not blame the
         // first key canon_key fails to recognize for it
         ensure!(
-            family == "mlp" || family == "cnn",
-            "model spec {src:?}: unknown model family {family:?} (mlp|cnn)"
+            family == "mlp" || family == "cnn" || family == "transformer",
+            "model spec {src:?}: unknown model family {family:?} \
+             (mlp|cnn|transformer)"
         );
         let body = &s[open + 1..s.len() - 1];
         let mut fields: BTreeMap<&'static str, &str> = BTreeMap::new();
@@ -162,6 +173,24 @@ impl ModelSpec {
                 );
                 Ok(ModelSpec::Cnn { k, s: s_, pad, pool, ch })
             }
+            "transformer" => {
+                let heads = field_usize(&fields, "heads", src)?.unwrap_or(2);
+                let d_model =
+                    field_usize(&fields, "d_model", src)?.unwrap_or(32);
+                let seq = field_usize(&fields, "seq", src)?.unwrap_or(64);
+                let ff = field_usize(&fields, "ff", src)?.unwrap_or(64);
+                ensure!(
+                    heads >= 1 && d_model >= 1 && seq >= 1 && ff >= 1,
+                    "model spec {src:?}: heads, d_model, seq and ff must \
+                     all be >= 1"
+                );
+                ensure!(
+                    d_model % heads == 0,
+                    "model spec {src:?}: d_model={d_model} must be \
+                     divisible by heads={heads}"
+                );
+                Ok(ModelSpec::Transformer { heads, d_model, seq, ff })
+            }
             _ => unreachable!("family validated above"),
         }
     }
@@ -172,15 +201,18 @@ impl ModelSpec {
         match self {
             ModelSpec::Mlp { .. } => "mlp",
             ModelSpec::Cnn { .. } => "cnn",
+            ModelSpec::Transformer { .. } => "transformer",
         }
     }
 
     /// Number of parameterized layers before the classifier head
-    /// counts itself: fc layers for mlp, conv layers for cnn.
+    /// counts itself: fc layers for mlp, conv layers for cnn,
+    /// encoder blocks for transformer (one, today).
     pub fn depth(&self) -> usize {
         match self {
             ModelSpec::Mlp { depth, .. } => *depth,
             ModelSpec::Cnn { ch, .. } => ch.len(),
+            ModelSpec::Transformer { .. } => 1,
         }
     }
 }
@@ -209,6 +241,13 @@ impl fmt::Display for ModelSpec {
                     chs.join("-")
                 )
             }
+            ModelSpec::Transformer { heads, d_model, seq, ff } => {
+                write!(
+                    f,
+                    "transformer(heads={heads},d_model={d_model},\
+                     seq={seq},ff={ff})"
+                )
+            }
         }
     }
 }
@@ -224,6 +263,10 @@ fn canon_key(family: &str, k: &str) -> Result<&'static str> {
         ("cnn", "pad") | ("cnn", "p") => "pad",
         ("cnn", "pool") => "pool",
         ("cnn", "ch") | ("cnn", "channels") => "ch",
+        ("transformer", "heads") | ("transformer", "h") => "heads",
+        ("transformer", "d_model") | ("transformer", "dm") => "d_model",
+        ("transformer", "seq") => "seq",
+        ("transformer", "ff") => "ff",
         _ => bail!("unknown key {k:?} for a {family} spec"),
     })
 }
@@ -313,6 +356,17 @@ pub fn dataset_shape(name: &str) -> Result<(Vec<usize>, usize)> {
             "unknown dataset {other:?} \
              (mnist|fmnist|cifar10|lsun16|lsun32|lsun48|lsun64)"
         ),
+    })
+}
+
+/// Token-sequence i32 datasets the builder can synthesize
+/// `transformer(...)` configs for: (seq, vocab, n_classes). Kept in
+/// sync with `data::synth::by_name` (pinned by
+/// `dataset_table_matches_the_synth_generators`).
+pub fn token_dataset_shape(name: &str) -> Result<(usize, usize, usize)> {
+    Ok(match name {
+        "imdb" => (64, 5000, 2),
+        other => bail!("unknown token dataset {other:?} (imdb)"),
     })
 }
 
@@ -411,16 +465,23 @@ impl ConfigBuilder {
     pub fn build(&self) -> Result<ConfigSpec> {
         let key = self.key();
         ensure!(self.batch >= 1, "config spec {key}: batch must be >= 1");
-        let (img_shape, n_classes) = dataset_shape(&self.dataset)
-            .with_context(|| format!("building config for spec {key}"))?;
         let name = self.name.clone().unwrap_or_else(|| key.to_string());
         // Mirror the parse-time invariants: `ModelSpec`'s fields and
         // `ConfigBuilder::new` are pub, so a programmatically built
         // spec can bypass `ModelSpec::parse` — without these, s=0
         // would reach `conv_out`'s division and depth=0 would
         // underflow the act_elems arithmetic instead of erroring.
-        let (params, act_elems, conv) = match &self.model {
+        // Each arm resolves its own dataset table (image families read
+        // `dataset_shape`, the transformer reads `token_dataset_shape`)
+        // and yields (params, act_elems, conv, per-example feature
+        // shape, n_classes).
+        let (params, act_elems, conv, feat_shape, n_classes) = match &self.model
+        {
             ModelSpec::Mlp { depth, width } => {
+                let (img_shape, n_classes) = dataset_shape(&self.dataset)
+                    .with_context(|| {
+                        format!("building config for spec {key}")
+                    })?;
                 ensure!(
                     *depth >= 1 && *width >= 1,
                     "config spec {key}: depth and width must be >= 1"
@@ -440,9 +501,19 @@ impl ConfigBuilder {
                     });
                     prev = out;
                 }
-                (params, (depth - 1) * width + n_classes, None)
+                (
+                    params,
+                    (depth - 1) * width + n_classes,
+                    None,
+                    img_shape,
+                    n_classes,
+                )
             }
             ModelSpec::Cnn { k, s, pad, pool, ch } => {
+                let (img_shape, n_classes) = dataset_shape(&self.dataset)
+                    .with_context(|| {
+                        format!("building config for spec {key}")
+                    })?;
                 ensure!(
                     *k >= 1 && *s >= 1,
                     "config spec {key}: kernel and stride must be >= 1"
@@ -526,7 +597,75 @@ impl ConfigBuilder {
                     shape: vec![n_classes],
                 });
                 act_elems += n_classes;
-                (params, act_elems, Some(meta))
+                (params, act_elems, Some(meta), img_shape, n_classes)
+            }
+            ModelSpec::Transformer { heads, d_model, seq, ff } => {
+                let (dseq, vocab, n_classes) =
+                    token_dataset_shape(&self.dataset).with_context(|| {
+                        format!("building config for spec {key}")
+                    })?;
+                ensure!(
+                    *heads >= 1 && *d_model >= 1 && *ff >= 1,
+                    "config spec {key}: heads, d_model and ff must be >= 1"
+                );
+                ensure!(
+                    *d_model % *heads == 0,
+                    "config spec {key}: d_model={d_model} must be \
+                     divisible by heads={heads}"
+                );
+                ensure!(
+                    *seq == dseq,
+                    "config spec {key}: spec seq={seq} but dataset {} \
+                     stages sequences of length {dseq}",
+                    self.dataset
+                );
+                let d = *d_model;
+                let mut params = Vec::with_capacity(16);
+                params.push(ParamSpec {
+                    name: "embed.w".into(),
+                    shape: vec![vocab, d],
+                });
+                params.push(ParamSpec {
+                    name: "embed.b".into(),
+                    shape: vec![d],
+                });
+                for proj in ["q", "k", "v", "o"] {
+                    params.push(ParamSpec {
+                        name: format!("attn.{proj}.w"),
+                        shape: vec![d, d],
+                    });
+                    params.push(ParamSpec {
+                        name: format!("attn.{proj}.b"),
+                        shape: vec![d],
+                    });
+                }
+                params.push(ParamSpec {
+                    name: "ff1.w".into(),
+                    shape: vec![d, *ff],
+                });
+                params.push(ParamSpec { name: "ff1.b".into(), shape: vec![*ff] });
+                params.push(ParamSpec {
+                    name: "ff2.w".into(),
+                    shape: vec![*ff, d],
+                });
+                params.push(ParamSpec { name: "ff2.b".into(), shape: vec![d] });
+                params.push(ParamSpec {
+                    name: "head.w".into(),
+                    shape: vec![d, n_classes],
+                });
+                params.push(ParamSpec {
+                    name: "head.b".into(),
+                    shape: vec![n_classes],
+                });
+                // T x d maps: x0, q, k, v, ctx, x1, dx-side reuse of the
+                // same chain; T x ff: z1, f1; per-head T x T attention;
+                // pooled vector + logits
+                let act = 8 * dseq * d
+                    + 2 * dseq * *ff
+                    + heads * dseq * dseq
+                    + d
+                    + n_classes;
+                (params, act, None, vec![dseq], n_classes)
             }
         };
         let mut tags: Vec<String> = Vec::new();
@@ -534,7 +673,7 @@ impl ConfigBuilder {
             tags.push("naive".into());
         }
         let mut input_shape = vec![self.batch];
-        input_shape.extend_from_slice(&img_shape);
+        input_shape.extend_from_slice(&feat_shape);
         Ok(ConfigSpec {
             name: name.clone(),
             model: self.model.family().to_string(),
@@ -586,6 +725,8 @@ mod tests {
             "cnn(depth=2,k=3,s=1,pad=1,ch=8-16)",
             "cnn(depth=3,k=5,s=2,pad=2,ch=4-4-12)",
             "cnn(depth=2,k=3,s=1,pad=1,pool=2,ch=8-16)",
+            "transformer(heads=2,d_model=32,seq=64,ff=64)",
+            "transformer(heads=4,d_model=16,seq=32,ff=48)",
         ] {
             let spec = ModelSpec::parse(src).unwrap();
             assert_eq!(spec.to_string(), src);
@@ -625,6 +766,18 @@ mod tests {
         // redundant-but-consistent depth+ch is fine
         let e = ModelSpec::parse("cnn(depth=2,ch=8-16)").unwrap();
         assert_eq!(e.depth(), 2);
+        // transformer aliases + grid defaults (heads=2, d_model=32,
+        // seq=64, ff=64)
+        let t = ModelSpec::parse("transformer(dm=16, h=4)").unwrap();
+        assert_eq!(
+            t,
+            ModelSpec::Transformer { heads: 4, d_model: 16, seq: 64, ff: 64 }
+        );
+        let t = ModelSpec::parse("transformer()").unwrap();
+        assert_eq!(
+            t,
+            ModelSpec::Transformer { heads: 2, d_model: 32, seq: 64, ff: 64 }
+        );
     }
 
     #[test]
@@ -641,6 +794,9 @@ mod tests {
             "cnn(depth=3,ch=8-16)",      // depth/ch disagree
             "cnn(ch=8-0)",               // zero channels
             "cnn(s=0)",                  // zero stride
+            "transformer(heads=3,d_model=32)", // heads do not divide d_model
+            "transformer(heads=0)",      // zero heads
+            "transformer(k=3)",          // cnn key on transformer
         ] {
             assert!(ModelSpec::parse(bad).is_err(), "{bad:?} parsed");
         }
@@ -660,19 +816,29 @@ mod tests {
     fn prop_spec_roundtrip() {
         use crate::testkit::prop;
         prop::check(200, |g| {
-            let spec = if g.bool() {
-                ModelSpec::Mlp {
+            let spec = match g.usize_incl(0..=2) {
+                0 => ModelSpec::Mlp {
                     depth: g.usize_incl(1..=12),
                     width: g.usize_incl(1..=2048),
+                },
+                1 => {
+                    let depth = g.usize_incl(1..=5);
+                    ModelSpec::Cnn {
+                        k: g.usize_incl(1..=7),
+                        s: g.usize_incl(1..=3),
+                        pad: g.usize_incl(0..=3),
+                        pool: if g.bool() { 0 } else { g.usize_incl(2..=4) },
+                        ch: (0..depth).map(|_| g.usize_incl(1..=64)).collect(),
+                    }
                 }
-            } else {
-                let depth = g.usize_incl(1..=5);
-                ModelSpec::Cnn {
-                    k: g.usize_incl(1..=7),
-                    s: g.usize_incl(1..=3),
-                    pad: g.usize_incl(0..=3),
-                    pool: if g.bool() { 0 } else { g.usize_incl(2..=4) },
-                    ch: (0..depth).map(|_| g.usize_incl(1..=64)).collect(),
+                _ => {
+                    let heads = g.usize_incl(1..=4);
+                    ModelSpec::Transformer {
+                        heads,
+                        d_model: heads * g.usize_incl(1..=16),
+                        seq: g.usize_incl(1..=128),
+                        ff: g.usize_incl(1..=128),
+                    }
                 }
             };
             let printed = spec.to_string();
@@ -795,6 +961,70 @@ mod tests {
         assert!(format!("{err:#}").contains("pool window"), "{err:#}");
     }
 
+    /// The transformer arm resolves the token dataset table and
+    /// synthesizes the full 16-tensor (embed, q/k/v/o, ff1/ff2, head)
+    /// param chain with input shape [batch, seq].
+    #[test]
+    fn builder_synthesizes_transformer() {
+        let key = "transformer(heads=2,d_model=32,seq=64,ff=64)@imdb:b16";
+        let cfg = ConfigBuilder::from_key(SpecKey::parse(key).unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(cfg.name, key);
+        assert_eq!(cfg.model, "transformer");
+        assert_eq!(cfg.batch, 16);
+        assert_eq!(cfg.n_classes, 2);
+        assert_eq!(cfg.input_shape, vec![16, 64]);
+        // token ids are staged widened to f32 (the native staging seam)
+        assert_eq!(cfg.input_dtype, "f32");
+        assert_eq!(cfg.conv, None);
+        assert_eq!(cfg.params.len(), 16);
+        assert_eq!(cfg.params[0].shape, vec![5000, 32]); // embed.w
+        assert_eq!(cfg.params[0].name, "embed.w");
+        assert_eq!(cfg.params[2].shape, vec![32, 32]); // attn.q.w
+        assert_eq!(cfg.params[8].name, "attn.o.w");
+        assert_eq!(cfg.params[10].shape, vec![32, 64]); // ff1.w
+        assert_eq!(cfg.params[12].shape, vec![64, 32]); // ff2.w
+        assert_eq!(cfg.params[14].shape, vec![32, 2]); // head.w
+        assert_eq!(cfg.params[15].shape, vec![2]);
+        assert_eq!(
+            cfg.act_elems_per_example,
+            8 * 64 * 32 + 2 * 64 * 64 + 2 * 64 * 64 + 32 + 2
+        );
+        assert_eq!(
+            cfg.spec,
+            Some(ModelSpec::Transformer {
+                heads: 2,
+                d_model: 32,
+                seq: 64,
+                ff: 64
+            })
+        );
+        for m in ["reweight", "reweight_gram", "multiloss", "fwd"] {
+            assert!(cfg.artifacts.contains_key(m), "{m}");
+        }
+        // structural batch-1 sibling carries naive1 for the nxBP oracle
+        let sib = cfg.with_batch(1).unwrap();
+        assert_eq!(sib.input_shape, vec![1, 64]);
+        assert!(sib.artifacts.contains_key("naive1"));
+        // transformer on an image dataset is a token-table error
+        let err = ConfigBuilder::from_key(
+            SpecKey::parse("transformer(heads=2,d_model=16)@mnist:b4")
+                .unwrap(),
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("token dataset"), "{err:#}");
+        // spec/dataset sequence length mismatch is rejected
+        let err = ConfigBuilder::from_key(
+            SpecKey::parse("transformer(heads=2,d_model=16,seq=32)@imdb:b4")
+                .unwrap(),
+        )
+        .build()
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("seq"), "{err:#}");
+    }
+
     /// The batch-1 sibling is derived structurally: same shapes, batch
     /// 1, and the `naive1` artifact the nxBP loop needs.
     #[test]
@@ -886,9 +1116,25 @@ mod tests {
             assert_eq!(ds.shape, shape, "{name}");
             assert_eq!(ds.n_classes, n_classes, "{name}");
         }
-        // the two non-synthesizable cases stay errors
+        // imdb is not an *image* dataset (and unknown names stay errors)
         assert!(dataset_shape("imdb").is_err());
         assert!(dataset_shape("nope").is_err());
+        // ...but it is the token table's one entry, pinned to the synth
+        // generator the same way: seq/class drift in either table would
+        // desync the builder's param shapes from the staged data
+        let (seq, vocab, n_classes) = token_dataset_shape("imdb").unwrap();
+        let ds = crate::data::synth::by_name("imdb", 16, 0).unwrap();
+        assert_eq!(ds.shape, vec![seq], "imdb seq");
+        assert_eq!(ds.n_classes, n_classes, "imdb classes");
+        // the generator's token ids stay inside the embed table the
+        // builder sizes from `vocab`
+        match &ds.features {
+            crate::data::Features::I32(v) => {
+                assert!(v.iter().all(|&t| t >= 0 && (t as usize) < vocab));
+            }
+            _ => panic!("imdb must stage i32 token ids"),
+        }
+        assert!(token_dataset_shape("mnist").is_err());
     }
 
     /// Synthesized configs pass the same structural validation the
@@ -904,6 +1150,8 @@ mod tests {
             "cnn(depth=2,k=3,s=1,pad=1,ch=8-16)@mnist:b48",
             "cnn(depth=3,k=5,s=2,pad=2,ch=4-8-8)@lsun32:b16",
             "cnn(depth=2,k=3,s=1,pad=1,pool=2,ch=4-8)@mnist:b8",
+            "transformer(heads=2,d_model=32,seq=64,ff=64)@imdb:b16",
+            "transformer(heads=4,d_model=16,seq=64,ff=24)@imdb:b4",
         ] {
             let cfg = ConfigBuilder::from_key(SpecKey::parse(key).unwrap())
                 .build()

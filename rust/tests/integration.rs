@@ -3,8 +3,9 @@
 //! end-to-end training behaviour, and checkpointing.
 //!
 //! Everything in this file runs hermetically on the pure-Rust
-//! `NativeBackend` — no Python, no artifacts, no xla — covering both
-//! native model families (dense MLPs and the im2col conv family).
+//! `NativeBackend` — no Python, no artifacts, no xla — covering all
+//! three native model families (dense MLPs, the im2col conv family,
+//! and the transformer encoder with its attention taps).
 //! Tests that need the compiled model zoo (the RNN/transformer
 //! configs, plus CNN cross-checks against compiled HLO) run only when
 //! the crate is built with `--features pjrt` *and* $FASTCLIP_ARTIFACTS
@@ -161,9 +162,11 @@ fn all_private_methods_agree_deep_mlp() {
 /// assembly, the fused-GEMM pallas variant, the materialized
 /// multiloss, and the naive nxbp loop — produces the same clipped
 /// gradient and the same per-example norms on the same staged batch,
-/// within 1e-5. Covers both model families: dense MLPs and the conv
-/// family (im2col taps), where the norms flow through the exact
-/// per-example position reduction rather than the row-norm product.
+/// within 1e-5. Covers all three model families: dense MLPs, the conv
+/// family (im2col taps) where the norms flow through the exact
+/// per-example position reduction rather than the row-norm product,
+/// and the transformer encoder whose embedding/attention/FFN taps all
+/// share weights across sequence positions.
 #[test]
 fn native_method_matrix_agrees() {
     let clip = 0.5;
@@ -174,9 +177,13 @@ fn native_method_matrix_agrees() {
         ClipMethod::MultiLoss,
         ClipMethod::NxBp,
     ];
-    for config in
-        ["mlp2_mnist_b32", "mlp4_mnist_b16", "cnn2_mnist_b16", "cnn4_mnist_b16"]
-    {
+    for config in [
+        "mlp2_mnist_b32",
+        "mlp4_mnist_b16",
+        "cnn2_mnist_b16",
+        "cnn4_mnist_b16",
+        "transformer_imdb_b32",
+    ] {
         let rw = run_method(native(), config, ClipMethod::Reweight, clip);
         let rw_norms = rw.norms().unwrap();
         for m in others {
@@ -256,7 +263,7 @@ fn off_grid_method_matrix_agrees() {
 
 /// The tentpole acceptance matrix: under grouped and automatic clip
 /// policies, every batched method agrees with the materialized nxBP
-/// per-group reference at 1e-5 — on both native families. The nxBP
+/// per-group reference at 1e-5 — on all three native families. The nxBP
 /// loop clips each param-group view of the materialized per-example
 /// gradient independently, so it is the oracle for *any* policy the
 /// seam can express; the batched methods must reproduce it through
@@ -272,7 +279,7 @@ fn grouped_and_automatic_policies_match_nxbp_oracle() {
     ];
     for policy in ["per_layer:0.3", "auto:0.5,g=0.05", "groups(1):0.4"] {
         let pol = ClipPolicy::parse(policy).unwrap();
-        for config in ["mlp4_mnist_b16", "cnn2_mnist_b16"] {
+        for config in ["mlp4_mnist_b16", "cnn2_mnist_b16", "transformer_imdb_b16"] {
             let nx = run_policy_seeded(
                 native(),
                 config,
@@ -323,14 +330,14 @@ fn grouped_and_automatic_policies_match_nxbp_oracle() {
 }
 
 /// Warm-vs-cold bitwise equivalence through the arena API, for all
-/// seven clip methods on both families: a computer whose step state
+/// seven clip methods on all three families: a computer whose step state
 /// and output arena are already warm (and dirty from a previous step)
 /// must produce results bitwise identical to a freshly constructed
 /// computer writing into a fresh arena. This is the reuse contract of
 /// `StepFn::run_into` (DESIGN.md §"Step execution contract").
 #[test]
 fn warm_arena_matches_cold_for_all_seven_methods() {
-    for config in ["mlp2_mnist_b16", "cnn2_mnist_b16"] {
+    for config in ["mlp2_mnist_b16", "cnn2_mnist_b16", "transformer_imdb_b16"] {
         let cfg = native().manifest().config(config).unwrap().clone();
         let ds = data::load_dataset(&cfg.dataset, 256, 11).unwrap();
         let mut stage = BatchStage::for_config(&cfg);

@@ -3,7 +3,7 @@
 //! one cold execution has sized every buffer — the caller's `StepOut`
 //! arena, the step's scratch, the lazily grown per-example working
 //! buffers, the rayon pool — a warm step performs **zero** heap
-//! allocations, for every batched method on both model families and
+//! allocations, for every batched method on all three model families and
 //! for every clip-policy shape (global hard, per-layer, automatic):
 //! the policy seam's group bookkeeping (layer→group map, per-group
 //! norm slots) must be sized on the cold pass like everything else.
@@ -35,14 +35,28 @@ fn warm_step_path_performs_zero_heap_allocations() {
         return;
     }
     let backend = NativeBackend::new();
-    // one MLP and one CNN config (the satellite contract), at batch
+    // one config per native family (the satellite contract), at batch
     // sizes big enough that every parallel stage actually fans out
-    for config in ["mlp2_mnist_b32", "cnn2_mnist_b16"] {
+    for config in ["mlp2_mnist_b32", "cnn2_mnist_b16", "transformer_imdb_b16"] {
         let cfg = backend.manifest().config(config).unwrap().clone();
         let ds = data::load_dataset(&cfg.dataset, 64, 7).unwrap();
         let mut stage = BatchStage::for_config(&cfg);
         let batch: Vec<usize> = (0..cfg.batch).collect();
-        data::gather_batch_f32(&ds, &batch, &mut stage.feat_f32, &mut stage.labels);
+        match ds.features {
+            data::Features::F32(_) => data::gather_batch_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            ),
+            // imdb token ids widen into the transformer's f32 stage
+            data::Features::I32(_) => data::gather_batch_i32_as_f32(
+                &ds,
+                &batch,
+                &mut stage.feat_f32,
+                &mut stage.labels,
+            ),
+        }
         let params =
             ParamStore::new(&cfg, Some(&init_params_glorot(&cfg, 3))).unwrap();
         // one arena reused across every method of the config — exactly
