@@ -130,6 +130,8 @@ impl StreamingIdxSource {
     /// Resolve the IDX pair for a config's dataset name under
     /// `FASTCLIP_DATA_DIR` (same mapping as `data::load_dataset`).
     pub fn open_for_dataset(name: &str, chunk_rows: usize) -> Result<StreamingIdxSource> {
+        // lint: allow(no-wallclock-entropy) -- startup path resolution only; batch
+        // content and order depend on (path, seed, epoch), not on when this runs
         let dir = std::env::var("FASTCLIP_DATA_DIR").map(std::path::PathBuf::from).map_err(|_| {
             anyhow::anyhow!(
                 "--stream-chunk needs FASTCLIP_DATA_DIR pointing at the IDX \

@@ -1,0 +1,554 @@
+//! A conservative intra-crate call graph with per-node DP *effect
+//! summaries*, built from the item index over every linted file.
+//!
+//! Nodes are non-test functions plus the dispatch arms of the native
+//! step-method `match` (so the dp-flow rule can reason about one
+//! batched clipping method at a time). Edges are name-resolved: a
+//! call `foo(…)` links to every non-test `fn foo` in the linted tree,
+//! optionally narrowed by the calling file's `use` map, and `.step(…)`
+//! / `.steps(…)` calls are narrowed by their receiver (an `opt`
+//! receiver is the optimizer, an `accountant`/`probe`/`acc` receiver
+//! is the RDP accountant).
+//!
+//! Effects are seeded at known sink calls and propagated to fixpoint:
+//!
+//! | effect              | seeded by                                        |
+//! |---------------------|--------------------------------------------------|
+//! | writes-GradVec      | `flat_mut` `param_mut` `norms_fill` `set_norms` `set_group_norms` `add_scaled` `add_scaled_params` `grads_from_deltas` `materialize_grad_row` |
+//! | applies-nu          | `scale_delta_rows`, `add_scaled`, `add_scaled_params`, `backward_batch`/`grads_from_deltas` with a `Some(…)` nu/scale argument |
+//! | adds-noise          | `add_noise_parallel`                             |
+//! | charges-accountant  | `.step(`/`.steps(` on an accountant-ish receiver |
+//! | steps-optimizer     | `.step(` on an `opt`/`optimizer` receiver        |
+//!
+//! The asymmetry is deliberate: *positive* edges (nu, noise, charge)
+//! are seeded only at precise, distinctively-named sinks, so deleting
+//! the real call makes the effect disappear (the rule stays
+//! non-vacuous); the *reach* of gradient data is over-approximated
+//! (any same-named callee contributes), so a true violation cannot
+//! hide behind imprecise resolution. Computing clip factors
+//! (`nu_for`) is intentionally not an applies-nu seed — only the
+//! scaling of gradient data counts, which is what makes "computed nu
+//! but never applied it" detectable.
+
+use crate::items::{self, FileItems};
+use crate::source::SourceFile;
+use crate::tokens::{matching_delim, tok_at_or_after, Tok, TokKind};
+use std::collections::BTreeMap;
+
+/// Effect bitset.
+pub type Effects = u8;
+pub const WRITES_GRAD: Effects = 1 << 0;
+pub const APPLIES_NU: Effects = 1 << 1;
+pub const ADDS_NOISE: Effects = 1 << 2;
+pub const CHARGES_ACCT: Effects = 1 << 3;
+pub const STEPS_OPT: Effects = 1 << 4;
+
+/// Human-readable effect names, bit order.
+pub const EFFECT_NAMES: [&str; 5] =
+    ["writes-GradVec", "applies-nu", "adds-noise", "charges-accountant", "steps-optimizer"];
+
+/// Candidate narrowing for a resolved call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Restrict {
+    /// All same-named fns (then `use`-map narrowed when possible).
+    None,
+    /// Only fns defined under an `optim` path component.
+    Optim,
+    /// Only fns defined under a `privacy` path component.
+    Privacy,
+}
+
+/// One call site inside a node's exclusive region.
+#[derive(Debug)]
+pub struct CallSite {
+    pub callee: String,
+    /// 1-based line of the callee token.
+    pub line: usize,
+    /// Effects this call seeds directly.
+    pub seed: Effects,
+    restrict: Restrict,
+    /// Resolved candidate node indices (filled during build).
+    cands: Vec<usize>,
+}
+
+/// One call-graph node: a fn, or a dispatch arm of one.
+#[derive(Debug)]
+pub struct Node {
+    pub file: usize,
+    /// Defining fn's name (arms share their fn's name).
+    pub fn_name: String,
+    /// `fn_name` or `fn_name#arm@line` for display in findings.
+    pub display: String,
+    /// 1-based line of the fn sig or arm pattern.
+    pub line: usize,
+    /// Dispatch kinds named by this arm's pattern (empty for fns).
+    pub kinds: Vec<String>,
+    pub is_arm: bool,
+    /// Arm with no nested dispatch arms.
+    pub is_leaf_arm: bool,
+    pub parent: Option<usize>,
+    pub children: Vec<usize>,
+    /// Effects seeded directly in this node's exclusive region.
+    pub own: Effects,
+    /// Fixpoint effects: own ∪ children ∪ resolved callees.
+    pub reach: Effects,
+    /// Fixpoint effects excluding children (this node's code path
+    /// only) — what an execution that *reaches but does not enter*
+    /// the child arms performs.
+    pub excl_reach: Effects,
+    pub calls: Vec<CallSite>,
+    /// Lines of direct optimizer-step calls in the exclusive region.
+    pub opt_step_lines: Vec<usize>,
+    /// Lines of direct noise-addition calls in the exclusive region.
+    pub noise_lines: Vec<usize>,
+}
+
+/// The call graph over one linted tree.
+pub struct Tree<'a> {
+    pub files: &'a [SourceFile],
+    pub items: Vec<FileItems>,
+    pub nodes: Vec<Node>,
+}
+
+/// Keywords and ubiquitous names never treated as resolvable calls.
+const NOT_A_CALL: [&str; 40] = [
+    "if", "while", "for", "match", "return", "loop", "as", "in", "move", "ref", "mut", "let",
+    "else", "fn", "impl", "pub", "use", "mod", "where", "unsafe", "dyn", "break", "continue",
+    "struct", "enum", "trait", "type", "const", "static", "crate", "super", "self", "Self",
+    "Some", "Ok", "Err", "None", "assert", "vec", "panic",
+];
+
+/// Ubiquitous method names whose name-based resolution would conflate
+/// unrelated impls; they are seeded (if a sink) but never resolved.
+const NO_RESOLVE: [&str; 36] = [
+    "new", "default", "clone", "len", "is_empty", "iter", "iter_mut", "into_iter", "push", "pop",
+    "get", "get_mut", "insert", "remove", "contains", "resize", "clear", "fill", "extend",
+    "to_string", "to_vec", "into", "from", "unwrap", "unwrap_or", "expect", "map", "and_then",
+    "ok_or", "collect", "zip", "enumerate", "min", "max", "sqrt", "abs",
+];
+
+impl<'a> Tree<'a> {
+    /// Index every file and build the effect-annotated call graph.
+    pub fn build(files: &'a [SourceFile]) -> Tree<'a> {
+        let items: Vec<FileItems> = files.iter().map(items::index).collect();
+        let mut nodes: Vec<Node> = Vec::new();
+
+        for (fi, (f, idx)) in files.iter().zip(items.iter()).enumerate() {
+            for func in &idx.fns {
+                let Some(body) = func.body else { continue };
+                if func.is_test {
+                    continue;
+                }
+                let node_idx = nodes.len();
+                nodes.push(Node {
+                    file: fi,
+                    fn_name: func.name.clone(),
+                    display: func.name.clone(),
+                    line: func.line,
+                    kinds: Vec::new(),
+                    is_arm: false,
+                    is_leaf_arm: false,
+                    parent: None,
+                    children: Vec::new(),
+                    own: 0,
+                    reach: 0,
+                    excl_reach: 0,
+                    calls: Vec::new(),
+                    opt_step_lines: Vec::new(),
+                    noise_lines: Vec::new(),
+                });
+                let mut arm_scans: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+                let child_extents =
+                    add_arm_nodes(&mut nodes, node_idx, fi, &func.name, &func.arms, &mut arm_scans);
+                for (arm_idx, regions) in arm_scans {
+                    scan_region(&mut nodes, arm_idx, f, &idx.toks, &regions);
+                }
+                let excl = subtract_spans(body, &child_extents);
+                scan_region(&mut nodes, node_idx, f, &idx.toks, &excl);
+            }
+        }
+
+        let mut tree = Tree { files, items, nodes };
+        tree.resolve_calls();
+        tree.fixpoint();
+        tree
+    }
+
+    /// Fill each call site's candidate list.
+    fn resolve_calls(&mut self) {
+        // name -> fn-node indices (arms are never call targets)
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.is_arm {
+                by_name.entry(&n.fn_name).or_default().push(i);
+            }
+        }
+        let mut resolved: Vec<(usize, usize, Vec<usize>)> = Vec::new();
+        for (ni, node) in self.nodes.iter().enumerate() {
+            for (ci, call) in node.calls.iter().enumerate() {
+                if NO_RESOLVE.contains(&call.callee.as_str()) {
+                    continue;
+                }
+                let Some(all) = by_name.get(call.callee.as_str()) else { continue };
+                let cands: Vec<usize> = match call.restrict {
+                    Restrict::Optim => all
+                        .iter()
+                        .copied()
+                        .filter(|&t| self.files[self.nodes[t].file].has_component("optim"))
+                        .collect(),
+                    Restrict::Privacy => all
+                        .iter()
+                        .copied()
+                        .filter(|&t| self.files[self.nodes[t].file].has_component("privacy"))
+                        .collect(),
+                    Restrict::None => {
+                        let narrowed = self.narrow_by_uses(node.file, &call.callee, all);
+                        if narrowed.is_empty() { all.clone() } else { narrowed }
+                    }
+                };
+                resolved.push((ni, ci, cands));
+            }
+        }
+        for (ni, ci, cands) in resolved {
+            self.nodes[ni].calls[ci].cands = cands;
+        }
+    }
+
+    /// Narrow candidates by the calling file's `use` map: keep fns
+    /// whose file path matches one of the imported module paths.
+    /// Returns empty when the name was not imported (caller falls
+    /// back to all candidates).
+    fn narrow_by_uses(&self, file: usize, name: &str, all: &[usize]) -> Vec<usize> {
+        let Some(paths) = self.items[file].uses.get(name) else {
+            return Vec::new();
+        };
+        all.iter()
+            .copied()
+            .filter(|&t| {
+                let fp = &self.files[self.nodes[t].file];
+                paths.iter().any(|p| {
+                    p.iter().all(|seg| {
+                        fp.has_component(seg) || fp.file_name() == format!("{seg}.rs")
+                    })
+                })
+            })
+            .collect()
+    }
+
+    /// Propagate effects until stable.
+    fn fixpoint(&mut self) {
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for i in 0..self.nodes.len() {
+                let mut excl = self.nodes[i].own;
+                for call in &self.nodes[i].calls {
+                    for &t in &call.cands {
+                        excl |= self.nodes[t].reach;
+                    }
+                }
+                let mut reach = excl;
+                for &c in &self.nodes[i].children.clone() {
+                    reach |= self.nodes[c].reach;
+                }
+                if reach != self.nodes[i].reach || excl != self.nodes[i].excl_reach {
+                    self.nodes[i].reach = reach;
+                    self.nodes[i].excl_reach = excl;
+                    changed = true;
+                }
+            }
+        }
+    }
+
+    /// Effects performed on the path that reaches `idx`: the union of
+    /// `excl_reach` over the node and its ancestors. For a leaf
+    /// dispatch arm this is "everything the method's execution does",
+    /// excluding sibling arms.
+    pub fn path_effects(&self, idx: usize) -> Effects {
+        let mut e = 0;
+        let mut at = Some(idx);
+        while let Some(i) = at {
+            e |= self.nodes[i].excl_reach;
+            at = self.nodes[i].parent;
+        }
+        e
+    }
+
+    /// The file a node lives in.
+    pub fn file_of(&self, n: &Node) -> &SourceFile {
+        &self.files[n.file]
+    }
+}
+
+/// Recursively add arm nodes under `parent`. Returns the byte extents
+/// the arms own (for exclusion from the parent's own region) and
+/// appends each arm's (node index, exclusive regions) to `scans` for
+/// the caller to run once the whole subtree exists.
+fn add_arm_nodes(
+    nodes: &mut Vec<Node>,
+    parent: usize,
+    file: usize,
+    fn_name: &str,
+    arms: &[items::Arm],
+    scans: &mut Vec<(usize, Vec<(usize, usize)>)>,
+) -> Vec<(usize, usize)> {
+    let mut extents = Vec::new();
+    for arm in arms {
+        // the arm's extent is its body; the pattern itself carries no
+        // calls, and guard expressions are rare enough to ignore
+        extents.push(arm.body);
+        let idx = nodes.len();
+        nodes.push(Node {
+            file,
+            fn_name: fn_name.to_string(),
+            display: format!("{fn_name}#arm@{}", arm.line),
+            line: arm.line,
+            kinds: arm.kinds.clone(),
+            is_arm: true,
+            is_leaf_arm: arm.children.is_empty(),
+            parent: Some(parent),
+            children: Vec::new(),
+            own: 0,
+            reach: 0,
+            excl_reach: 0,
+            calls: Vec::new(),
+            opt_step_lines: Vec::new(),
+            noise_lines: Vec::new(),
+        });
+        nodes[parent].children.push(idx);
+        let child_extents = add_arm_nodes(nodes, idx, file, fn_name, &arm.children, scans);
+        scans.push((idx, subtract_spans(arm.body, &child_extents)));
+    }
+    extents
+}
+
+/// Subtract `holes` from `span`, yielding the remaining sub-spans.
+fn subtract_spans(span: (usize, usize), holes: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    let mut holes: Vec<(usize, usize)> = holes.to_vec();
+    holes.sort_unstable();
+    let mut out = Vec::new();
+    let mut at = span.0;
+    for (lo, hi) in holes {
+        let lo = lo.max(span.0);
+        let hi = hi.min(span.1);
+        if lo > at {
+            out.push((at, lo));
+        }
+        at = at.max(hi);
+    }
+    if at < span.1 {
+        out.push((at, span.1));
+    }
+    out
+}
+
+/// Scan `regions` (byte spans of one node's exclusive code) for call
+/// sites, seed effects, and record direct opt-step / noise lines.
+fn scan_region(
+    nodes: &mut [Node],
+    node_idx: usize,
+    f: &SourceFile,
+    toks: &[Tok],
+    regions: &[(usize, usize)],
+) {
+    let code = &f.code;
+    for &(lo, hi) in regions {
+        let t_lo = tok_at_or_after(toks, lo);
+        let t_hi = tok_at_or_after(toks, hi);
+        for k in t_lo..t_hi {
+            if toks[k].kind != TokKind::Ident {
+                continue;
+            }
+            if !toks.get(k + 1).is_some_and(|t| t.is_punct(b'(')) {
+                continue;
+            }
+            let name = toks[k].text(code);
+            if NOT_A_CALL.contains(&name) {
+                continue;
+            }
+            // `fn name(` is a definition, not a call
+            if k >= 1 && toks[k - 1].is_ident(code, "fn") {
+                continue;
+            }
+            // receiver: `recv.name(` or `Recv::name(`
+            let recv: Option<&str> = if k >= 2 && toks[k - 1].is_punct(b'.') {
+                (toks[k - 2].kind == TokKind::Ident).then(|| toks[k - 2].text(code))
+            } else if k >= 3 && toks[k - 1].is_punct(b':') && toks[k - 2].is_punct(b':') {
+                (toks[k - 3].kind == TokKind::Ident).then(|| toks[k - 3].text(code))
+            } else {
+                None
+            };
+            let has_some_arg = matching_delim(toks, k + 1).is_some_and(|close| {
+                toks[k + 2..close].iter().any(|t| t.is_ident(code, "Some"))
+            });
+            let (seed, restrict) = seed_for(name, recv, has_some_arg);
+            let line = f.line_of(toks[k].start);
+            if seed & STEPS_OPT != 0 {
+                nodes[node_idx].opt_step_lines.push(line);
+            }
+            if seed & ADDS_NOISE != 0 {
+                nodes[node_idx].noise_lines.push(line);
+            }
+            nodes[node_idx].own |= seed;
+            nodes[node_idx].calls.push(CallSite {
+                callee: name.to_string(),
+                line,
+                seed,
+                restrict,
+                cands: Vec::new(),
+            });
+        }
+    }
+}
+
+/// Receivers that denote the optimizer / the RDP accountant.
+const OPT_RECV: [&str; 3] = ["opt", "optimizer", "Optimizer"];
+const ACCT_RECV: [&str; 5] = ["accountant", "acc", "probe", "Accountant", "RdpAccountant"];
+
+/// Effect seeds and candidate narrowing for one call.
+fn seed_for(name: &str, recv: Option<&str>, has_some_arg: bool) -> (Effects, Restrict) {
+    match name {
+        "add_noise_parallel" => (ADDS_NOISE, Restrict::None),
+        "scale_delta_rows" => (APPLIES_NU, Restrict::None),
+        "add_scaled" | "add_scaled_params" => (APPLIES_NU | WRITES_GRAD, Restrict::None),
+        "backward_batch" if has_some_arg => (APPLIES_NU, Restrict::None),
+        "grads_from_deltas" if has_some_arg => (APPLIES_NU | WRITES_GRAD, Restrict::None),
+        "grads_from_deltas" | "materialize_grad_row" => (WRITES_GRAD, Restrict::None),
+        "flat_mut" | "param_mut" | "norms_fill" | "set_norms" | "set_group_norms" => {
+            (WRITES_GRAD, Restrict::None)
+        }
+        "step" if recv.is_some_and(|r| OPT_RECV.contains(&r)) => (STEPS_OPT, Restrict::Optim),
+        "step" | "steps" if recv.is_some_and(|r| ACCT_RECV.contains(&r)) => {
+            (CHARGES_ACCT, Restrict::Privacy)
+        }
+        _ => (0, Restrict::None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(sources: &[(&str, &str)]) -> Vec<SourceFile> {
+        sources.iter().map(|(p, s)| SourceFile::parse(p, s)).collect()
+    }
+
+    fn node<'t, 'a>(t: &'t Tree<'a>, name: &str) -> &'t Node {
+        t.nodes.iter().find(|n| n.display == name).expect(name)
+    }
+
+    #[test]
+    fn effects_propagate_through_two_call_hops() {
+        let files = parse_all(&[
+            (
+                "rust/src/coordinator/session.rs",
+                "fn step() { produce(); pipeline(); opt.step(h, g); }\n",
+            ),
+            ("rust/src/runtime/a.rs", "pub fn pipeline() { apply(); }\n"),
+            (
+                "rust/src/runtime/b.rs",
+                "pub fn apply() { g.scale_delta_rows(nu); }\npub fn produce() { out.param_mut(0); }\n",
+            ),
+        ]);
+        let t = Tree::build(&files);
+        let s = node(&t, "step");
+        assert!(s.reach & APPLIES_NU != 0, "nu through two hops");
+        assert!(s.reach & WRITES_GRAD != 0);
+        assert!(s.own & STEPS_OPT != 0);
+        assert_eq!(s.opt_step_lines.len(), 1);
+        assert!(s.reach & ADDS_NOISE == 0);
+    }
+
+    #[test]
+    fn receiver_narrowing_separates_opt_and_accountant() {
+        let files = parse_all(&[(
+            "rust/src/coordinator/session.rs",
+            "fn go() { accountant.step(q, s); opt.step(h, g); session.step(); }\n",
+        )]);
+        let t = Tree::build(&files);
+        let g = node(&t, "go");
+        assert!(g.own & CHARGES_ACCT != 0);
+        assert!(g.own & STEPS_OPT != 0);
+        // the bare `session.step()` call neither charges nor steps
+        assert_eq!(g.opt_step_lines.len(), 1);
+    }
+
+    #[test]
+    fn arm_nodes_get_exclusive_effects_and_path() {
+        let src = "\
+fn run_into(&self) {
+    stage();
+    match self.kind {
+        Kind::NonPrivate => { out.grads_from_deltas(x, t, None, g); }
+        Kind::ReweightDirect => {
+            model.scale_delta_rows(&block, t);
+            out.grads_from_deltas(x, t, None, g);
+        }
+        Kind::ReweightPallas => {
+            out.grads_from_deltas(x, t, Some(&block), g);
+        }
+        _ => {}
+    }
+}
+";
+        let files = vec![SourceFile::parse("rust/src/runtime/native/mod.rs", src)];
+        let t = Tree::build(&files);
+        let direct = t
+            .nodes
+            .iter()
+            .position(|n| n.is_arm && n.kinds == ["ReweightDirect"])
+            .unwrap();
+        let pallas = t
+            .nodes
+            .iter()
+            .position(|n| n.is_arm && n.kinds == ["ReweightPallas"])
+            .unwrap();
+        let nonpriv = t
+            .nodes
+            .iter()
+            .position(|n| n.is_arm && n.kinds == ["NonPrivate"])
+            .unwrap();
+        assert!(t.path_effects(direct) & APPLIES_NU != 0);
+        assert!(t.path_effects(pallas) & APPLIES_NU != 0, "Some(&block) seeds nu");
+        assert!(t.path_effects(nonpriv) & APPLIES_NU == 0);
+        assert!(t.path_effects(nonpriv) & WRITES_GRAD != 0);
+        // the fn node's reach unions the arms
+        let f = node(&t, "run_into");
+        assert!(f.reach & APPLIES_NU != 0);
+        assert!(f.excl_reach & APPLIES_NU == 0, "prefix alone applies no nu");
+    }
+
+    #[test]
+    fn use_map_narrows_candidates() {
+        let files = parse_all(&[
+            (
+                "rust/src/coordinator/session.rs",
+                "use crate::privacy::calibrate_sigma;\nfn go() { calibrate_sigma(q); }\n",
+            ),
+            ("rust/src/privacy/calibrate.rs", "pub fn calibrate_sigma(q: f64) { acc.steps(q, s, n); }\n"),
+            ("rust/src/bench/fake.rs", "pub fn calibrate_sigma(q: f64) { g.flat_mut(); }\n"),
+        ]);
+        let t = Tree::build(&files);
+        let g = node(&t, "go");
+        assert!(g.reach & CHARGES_ACCT != 0, "resolved into privacy");
+        assert!(g.reach & WRITES_GRAD == 0, "bench impostor excluded by use map");
+    }
+
+    #[test]
+    fn test_fns_are_not_nodes_or_targets() {
+        let src = "\
+fn real() { helper(); }
+fn helper() {}
+#[cfg(test)]
+mod tests {
+    fn helper() { g.flat_mut(); }
+    #[test]
+    fn t() { real(); }
+}
+";
+        let files = vec![SourceFile::parse("rust/src/runtime/x.rs", src)];
+        let t = Tree::build(&files);
+        assert_eq!(t.nodes.len(), 2);
+        assert!(node(&t, "real").reach & WRITES_GRAD == 0);
+    }
+}

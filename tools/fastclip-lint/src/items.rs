@@ -1,0 +1,732 @@
+//! The item index: a structural pass over one file's token stream
+//! that records fn / impl / trait / mod spans, resolves `use`
+//! declarations to crate module paths, and extracts the *dispatch
+//! arms* of `match` expressions over the native step-method enum
+//! (`Kind::Reweight`, `Kind::MultiLoss`, …). The call graph
+//! (`callgraph.rs`) builds its nodes from this index.
+//!
+//! Everything here is token arithmetic over the blanked code view —
+//! no AST, no dependencies. The parse is deliberately forgiving:
+//! anything it cannot shape (exotic generics, macros) is skipped, and
+//! the rules that consume the index are written so that a skipped
+//! item weakens precision, never soundness of the build itself.
+
+use crate::source::SourceFile;
+use crate::tokens::{lex, matching_delim, Tok, TokKind};
+use std::collections::BTreeMap;
+
+/// Variant names of the native step-method dispatch enum
+/// (`runtime/native/mod.rs::Kind`). A match arm whose pattern names
+/// one of these through a `::` path is a *dispatch arm* — the unit at
+/// which the dp-flow rule checks that each batched clipping method
+/// applies nu on its own leaf path.
+pub const DISPATCH_KINDS: [&str; 8] = [
+    "Fwd",
+    "NonPrivate",
+    "Naive1",
+    "Reweight",
+    "ReweightGram",
+    "ReweightDirect",
+    "ReweightPallas",
+    "MultiLoss",
+];
+
+/// Dispatch kinds that are exempt from the nu obligation: the forward
+/// probe, the non-private route, and the naive per-example loop
+/// (which clips at the coordinator seam, not in the arm).
+pub const EXEMPT_KINDS: [&str; 3] = ["Fwd", "NonPrivate", "Naive1"];
+
+/// One `fn` item.
+#[derive(Debug)]
+pub struct FnItem {
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Byte offset of the `fn` keyword.
+    pub sig_start: usize,
+    /// Byte span of the `{ … }` body, braces included. `None` for
+    /// bodiless declarations (trait method requirements).
+    pub body: Option<(usize, usize)>,
+    /// Declared inside a test region (cfg(test) mod or tests/ dir).
+    pub is_test: bool,
+    /// Dispatch arms of method-kind `match`es in the body, nested.
+    pub arms: Vec<Arm>,
+}
+
+/// One dispatch arm of a method-kind `match`.
+#[derive(Debug)]
+pub struct Arm {
+    /// 1-based line the pattern starts on.
+    pub line: usize,
+    /// Code-view text of the pattern.
+    pub pattern: String,
+    /// `DISPATCH_KINDS` members named in the pattern via a `::` path.
+    pub kinds: Vec<String>,
+    /// Byte span of the arm body (block braces included).
+    pub body: (usize, usize),
+    /// Nested dispatch arms inside this arm's body.
+    pub children: Vec<Arm>,
+}
+
+/// One `impl` block.
+#[derive(Debug)]
+pub struct ImplItem {
+    /// `Some("Trait")` for `impl Trait for Type`, `None` for
+    /// inherent impls.
+    pub trait_name: Option<String>,
+    pub type_name: String,
+    pub line: usize,
+    /// Byte span of the `{ … }` body.
+    pub body: (usize, usize),
+}
+
+/// One `trait` declaration.
+#[derive(Debug)]
+pub struct TraitItem {
+    pub name: String,
+    pub line: usize,
+    pub body: (usize, usize),
+    /// Methods declared with `;` (no default body) — the surface a
+    /// conforming impl must provide.
+    pub required_fns: Vec<String>,
+}
+
+/// One `mod` item (inline or out-of-line).
+#[derive(Debug)]
+pub struct ModItem {
+    pub name: String,
+    pub line: usize,
+}
+
+/// The index for one file.
+#[derive(Debug)]
+pub struct FileItems {
+    /// Token stream over the code view (shared with the call graph).
+    pub toks: Vec<Tok>,
+    pub fns: Vec<FnItem>,
+    pub impls: Vec<ImplItem>,
+    pub traits: Vec<TraitItem>,
+    pub mods: Vec<ModItem>,
+    /// `use` resolution: visible leaf name → crate module paths it
+    /// was imported from (`use crate::privacy::calibrate_sigma` maps
+    /// `calibrate_sigma` → `["privacy"]`). A name imported twice
+    /// keeps every path.
+    pub uses: BTreeMap<String, Vec<Vec<String>>>,
+}
+
+/// Build the index for one parsed file.
+pub fn index(f: &SourceFile) -> FileItems {
+    let code = &f.code;
+    let toks = lex(code);
+    let mut fns = Vec::new();
+    let mut impls = Vec::new();
+    let mut traits = Vec::new();
+    let mut mods = Vec::new();
+    let mut uses: BTreeMap<String, Vec<Vec<String>>> = BTreeMap::new();
+
+    let mut k = 0usize;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.kind != TokKind::Ident {
+            k += 1;
+            continue;
+        }
+        match t.text(code) {
+            "fn" => {
+                if let Some((item, next)) = parse_fn(f, code, &toks, k) {
+                    fns.push(item);
+                    k = next;
+                    continue;
+                }
+            }
+            "impl" => {
+                if let Some((item, next)) = parse_impl(f, code, &toks, k) {
+                    impls.push(item);
+                    // do not skip the body: nested fns are indexed too
+                    k = next;
+                    continue;
+                }
+            }
+            "trait" => {
+                if let Some((item, next)) = parse_trait(f, code, &toks, k) {
+                    traits.push(item);
+                    k = next;
+                    continue;
+                }
+            }
+            "mod" => {
+                if let Some(name) = toks.get(k + 1).filter(|n| n.kind == TokKind::Ident) {
+                    mods.push(ModItem {
+                        name: name.text(code).to_string(),
+                        line: f.line_of(t.start),
+                    });
+                }
+            }
+            "use" => {
+                if let Some(next) = parse_use(code, &toks, k, &mut uses) {
+                    k = next;
+                    continue;
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+
+    // trait required surface: bodiless fns declared inside the body
+    for tr in &mut traits {
+        tr.required_fns = fns
+            .iter()
+            .filter(|fi| fi.body.is_none() && fi.sig_start > tr.body.0 && fi.sig_start < tr.body.1)
+            .map(|fi| fi.name.clone())
+            .collect();
+    }
+
+    // dispatch arms per fn
+    for fi in &mut fns {
+        if let Some(body) = fi.body {
+            fi.arms = dispatch_arms(f, code, &toks, body);
+        }
+    }
+
+    FileItems { toks, fns, impls, traits, mods, uses }
+}
+
+impl FileItems {
+    /// Fns whose sig starts inside `span` (used for impl membership).
+    pub fn fns_in(&self, span: (usize, usize)) -> impl Iterator<Item = &FnItem> {
+        self.fns.iter().filter(move |f| f.sig_start > span.0 && f.sig_start < span.1)
+    }
+}
+
+/// Parse the `fn` at token `k`. Returns the item and the token index
+/// to resume scanning from (just after the signature — the body is
+/// scanned again by the main loop so nested items are found, which is
+/// harmless because `fn` cannot nest a second `fn` signature between
+/// its own `fn` keyword and its opening brace).
+fn parse_fn(f: &SourceFile, code: &str, toks: &[Tok], k: usize) -> Option<(FnItem, usize)> {
+    let name_tok = toks.get(k + 1)?;
+    if name_tok.kind != TokKind::Ident {
+        return None; // `fn(` pointer type
+    }
+    let name = name_tok.text(code).to_string();
+    // scan forward for the body `{` or the decl-terminating `;`,
+    // skipping (…)/[…] nesting (parameter lists, defaults)
+    let mut depth = 0usize;
+    let mut j = k + 2;
+    let mut body = None;
+    while j < toks.len() {
+        match toks[j].kind {
+            TokKind::Punct(b'(') | TokKind::Punct(b'[') => depth += 1,
+            TokKind::Punct(b')') | TokKind::Punct(b']') => depth = depth.saturating_sub(1),
+            TokKind::Punct(b'{') if depth == 0 => {
+                let close = matching_delim(toks, j)?;
+                body = Some((toks[j].start, toks[close].end));
+                j += 1; // resume inside the body
+                break;
+            }
+            TokKind::Punct(b';') if depth == 0 => {
+                j += 1;
+                break;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    let line = f.line_of(toks[k].start);
+    Some((
+        FnItem {
+            name,
+            line,
+            sig_start: toks[k].start,
+            body,
+            is_test: f.in_test(line),
+            arms: Vec::new(),
+        },
+        j,
+    ))
+}
+
+/// Parse the `impl` at token `k`; resume just inside its body.
+fn parse_impl(f: &SourceFile, code: &str, toks: &[Tok], k: usize) -> Option<(ImplItem, usize)> {
+    // find the body `{` at top level; `where` clauses appear before it
+    let mut j = k + 1;
+    let mut open = None;
+    let mut depth = 0usize;
+    while j < toks.len() {
+        match toks[j].kind {
+            TokKind::Punct(b'(') | TokKind::Punct(b'[') => depth += 1,
+            TokKind::Punct(b')') | TokKind::Punct(b']') => depth = depth.saturating_sub(1),
+            TokKind::Punct(b'{') if depth == 0 => {
+                open = Some(j);
+                break;
+            }
+            TokKind::Punct(b';') if depth == 0 => return None,
+            _ => {}
+        }
+        j += 1;
+    }
+    let open = open?;
+    let close = matching_delim(toks, open)?;
+    // idents at angle-depth 0 between `impl` and `{` (or `where`),
+    // split at a top-level `for`
+    let mut angle = 0isize;
+    let mut before_for: Vec<&str> = Vec::new();
+    let mut after_for: Vec<&str> = Vec::new();
+    let mut seen_for = false;
+    for t in &toks[k + 1..open] {
+        match t.kind {
+            TokKind::Punct(b'<') => angle += 1,
+            TokKind::Punct(b'>') => angle -= 1,
+            TokKind::Ident if angle == 0 => {
+                let w = t.text(code);
+                if w == "where" {
+                    break;
+                }
+                if w == "for" {
+                    seen_for = true;
+                } else if seen_for {
+                    after_for.push(w);
+                } else {
+                    before_for.push(w);
+                }
+            }
+            _ => {}
+        }
+    }
+    let (trait_name, type_words) = if seen_for {
+        (before_for.last().map(|s| s.to_string()), after_for)
+    } else {
+        (None, before_for)
+    };
+    let type_name = type_words.last()?.to_string();
+    Some((
+        ImplItem {
+            trait_name,
+            type_name,
+            line: f.line_of(toks[k].start),
+            body: (toks[open].start, toks[close].end),
+        },
+        open + 1,
+    ))
+}
+
+/// Parse the `trait` at token `k`; resume just inside its body.
+fn parse_trait(f: &SourceFile, code: &str, toks: &[Tok], k: usize) -> Option<(TraitItem, usize)> {
+    let name_tok = toks.get(k + 1)?;
+    if name_tok.kind != TokKind::Ident {
+        return None;
+    }
+    let mut j = k + 2;
+    while j < toks.len() && !toks[j].is_punct(b'{') {
+        if toks[j].is_punct(b';') {
+            return None; // `trait X;` cannot occur, but stay safe
+        }
+        j += 1;
+    }
+    if j >= toks.len() {
+        return None;
+    }
+    let close = matching_delim(toks, j)?;
+    Some((
+        TraitItem {
+            name: name_tok.text(code).to_string(),
+            line: f.line_of(toks[k].start),
+            body: (toks[j].start, toks[close].end),
+            required_fns: Vec::new(),
+        },
+        j + 1,
+    ))
+}
+
+/// Parse a `use …;` declaration into the alias map. Handles paths,
+/// nested `{ … }` groups, `as` renames, and `self` in groups; glob
+/// imports are ignored. Returns the token index after the `;`.
+fn parse_use(
+    code: &str,
+    toks: &[Tok],
+    k: usize,
+    uses: &mut BTreeMap<String, Vec<Vec<String>>>,
+) -> Option<usize> {
+    // find the terminating `;`
+    let mut end = k + 1;
+    let mut depth = 0usize;
+    while end < toks.len() {
+        match toks[end].kind {
+            TokKind::Punct(b'{') => depth += 1,
+            TokKind::Punct(b'}') => depth = depth.saturating_sub(1),
+            TokKind::Punct(b';') if depth == 0 => break,
+            _ => {}
+        }
+        end += 1;
+    }
+    if end >= toks.len() {
+        return None;
+    }
+    let mut prefix: Vec<String> = Vec::new();
+    walk_use(code, &toks[k + 1..end], &mut prefix, uses);
+    Some(end + 1)
+}
+
+/// Recursive walk of one use-tree level. `toks` is the slice for this
+/// level; `prefix` the path segments accumulated so far.
+fn walk_use(
+    code: &str,
+    toks: &[Tok],
+    prefix: &mut Vec<String>,
+    uses: &mut BTreeMap<String, Vec<Vec<String>>>,
+) {
+    // split this level at top-level commas (only inside groups)
+    let mut start = 0usize;
+    let mut depth = 0usize;
+    let mut parts: Vec<(usize, usize)> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        match t.kind {
+            TokKind::Punct(b'{') => depth += 1,
+            TokKind::Punct(b'}') => depth = depth.saturating_sub(1),
+            TokKind::Punct(b',') if depth == 0 => {
+                parts.push((start, i));
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push((start, toks.len()));
+
+    for (lo, hi) in parts {
+        let part = &toks[lo..hi];
+        if part.is_empty() {
+            continue;
+        }
+        // leading path segments up to a group `{`, a glob `*`, or end
+        let mut segs: Vec<String> = Vec::new();
+        let mut i = 0usize;
+        let mut alias: Option<String> = None;
+        let mut group_at: Option<usize> = None;
+        while i < part.len() {
+            match part[i].kind {
+                TokKind::Ident => {
+                    let w = part[i].text(code);
+                    if w == "as" {
+                        if let Some(a) = part.get(i + 1) {
+                            alias = Some(a.text(code).to_string());
+                        }
+                        break;
+                    }
+                    segs.push(w.to_string());
+                    i += 1;
+                }
+                TokKind::Punct(b':') => i += 1,
+                TokKind::Punct(b'{') => {
+                    group_at = Some(i);
+                    break;
+                }
+                TokKind::Punct(b'*') => {
+                    segs.clear();
+                    break;
+                }
+                _ => break,
+            }
+        }
+        if let Some(g) = group_at {
+            let depth_before = prefix.len();
+            prefix.extend(segs.iter().cloned());
+            // strip the outer braces of the group
+            let inner_hi = part.len() - usize::from(part.last().is_some_and(|t| t.is_punct(b'}')));
+            walk_use(code, &part[g + 1..inner_hi], prefix, uses);
+            prefix.truncate(depth_before);
+            continue;
+        }
+        if segs.is_empty() {
+            continue; // glob or unparsable
+        }
+        let leaf = segs.last().cloned().filter(|s| s != "self");
+        let visible = alias.or(leaf.clone()).or_else(|| prefix.last().cloned());
+        let Some(visible) = visible else { continue };
+        // full module path: prefix + segs, minus crate-ish roots and
+        // the leaf itself (the leaf is the item, not a module)
+        let mut path: Vec<String> = prefix
+            .iter()
+            .chain(segs.iter())
+            .filter(|s| !matches!(s.as_str(), "crate" | "self" | "super" | "std" | "core" | "alloc"))
+            .cloned()
+            .collect();
+        if leaf.is_some() && !path.is_empty() {
+            path.pop();
+        }
+        uses.entry(visible).or_default().push(path);
+    }
+}
+
+/// Extract nested dispatch arms of every method-kind `match` inside
+/// `body` (byte span). Only matches with at least one arm naming a
+/// `DISPATCH_KINDS` member are kept.
+fn dispatch_arms(f: &SourceFile, code: &str, toks: &[Tok], body: (usize, usize)) -> Vec<Arm> {
+    let lo = crate::tokens::tok_at_or_after(toks, body.0);
+    let hi = crate::tokens::tok_at_or_after(toks, body.1);
+    collect_matches(f, code, toks, lo, hi)
+}
+
+/// Scan tokens `[lo, hi)` for `match` expressions and return the
+/// dispatch arms found at this level (arms recurse for nesting).
+fn collect_matches(f: &SourceFile, code: &str, toks: &[Tok], lo: usize, hi: usize) -> Vec<Arm> {
+    let mut out = Vec::new();
+    let mut k = lo;
+    while k < hi {
+        if !toks[k].is_ident(code, "match") {
+            k += 1;
+            continue;
+        }
+        // scrutinee runs to the first `{` at delimiter depth 0
+        let mut depth = 0usize;
+        let mut open = None;
+        let mut j = k + 1;
+        while j < hi {
+            match toks[j].kind {
+                TokKind::Punct(b'(') | TokKind::Punct(b'[') => depth += 1,
+                TokKind::Punct(b')') | TokKind::Punct(b']') => depth = depth.saturating_sub(1),
+                TokKind::Punct(b'{') if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            k += 1;
+            continue;
+        };
+        let Some(close) = matching_delim(toks, open) else {
+            k += 1;
+            continue;
+        };
+        let arms = parse_arms(f, code, toks, open + 1, close);
+        if arms.iter().any(|a| !a.kinds.is_empty()) {
+            out.extend(arms);
+            k = close + 1; // arms own everything inside — do not rescan
+        } else {
+            k = open + 1; // not a dispatch match: rescan inside for one
+        }
+    }
+    out
+}
+
+/// Parse the arms of one match body (`toks[lo..hi]`).
+fn parse_arms(f: &SourceFile, code: &str, toks: &[Tok], lo: usize, hi: usize) -> Vec<Arm> {
+    let mut arms = Vec::new();
+    let mut k = lo;
+    while k < hi {
+        // pattern: up to `=>` at delimiter depth 0
+        let pat_start = k;
+        let mut depth = 0usize;
+        let mut arrow = None;
+        while k < hi {
+            match toks[k].kind {
+                TokKind::Punct(b'(') | TokKind::Punct(b'[') | TokKind::Punct(b'{') => depth += 1,
+                TokKind::Punct(b')') | TokKind::Punct(b']') | TokKind::Punct(b'}') => {
+                    depth = depth.saturating_sub(1)
+                }
+                TokKind::Punct(b'=')
+                    if depth == 0 && toks.get(k + 1).is_some_and(|t| t.is_punct(b'>')) =>
+                {
+                    arrow = Some(k);
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(arrow) = arrow else { break };
+        if arrow == pat_start {
+            break; // malformed
+        }
+        let pat_span = (toks[pat_start].start, toks[arrow - 1].end);
+        let mut kinds: Vec<String> = Vec::new();
+        for (i, t) in toks[pat_start..arrow].iter().enumerate() {
+            let global = pat_start + i;
+            if t.kind == TokKind::Ident
+                && global >= 2
+                && toks[global - 1].is_punct(b':')
+                && toks[global - 2].is_punct(b':')
+            {
+                let w = t.text(code);
+                if DISPATCH_KINDS.contains(&w) && !kinds.iter().any(|k| k == w) {
+                    kinds.push(w.to_string());
+                }
+            }
+        }
+        // body: a block, or an expression up to a top-level `,`
+        k = arrow + 2;
+        if k >= hi {
+            break;
+        }
+        let (body_span, next) = if toks[k].is_punct(b'{') {
+            match matching_delim(toks, k) {
+                Some(c) => ((toks[k].start, toks[c].end), c + 1),
+                None => break,
+            }
+        } else {
+            let start = toks[k].start;
+            let mut depth = 0usize;
+            let mut j = k;
+            while j < hi {
+                match toks[j].kind {
+                    TokKind::Punct(b'(') | TokKind::Punct(b'[') | TokKind::Punct(b'{') => {
+                        depth += 1
+                    }
+                    TokKind::Punct(b')') | TokKind::Punct(b']') | TokKind::Punct(b'}') => {
+                        depth = depth.saturating_sub(1)
+                    }
+                    TokKind::Punct(b',') if depth == 0 => break,
+                    _ => {}
+                }
+                j += 1;
+            }
+            ((start, toks[j.saturating_sub(1).max(k)].end), j)
+        };
+        let children = {
+            let c_lo = crate::tokens::tok_at_or_after(toks, body_span.0);
+            let c_hi = crate::tokens::tok_at_or_after(toks, body_span.1);
+            collect_matches(f, code, toks, c_lo, c_hi)
+        };
+        arms.push(Arm {
+            line: f.line_of(pat_span.0),
+            pattern: code[pat_span.0..pat_span.1].to_string(),
+            kinds,
+            body: body_span,
+            children,
+        });
+        // skip a trailing comma after a block body
+        let mut next = next;
+        if next < hi && toks[next].is_punct(b',') {
+            next += 1;
+        }
+        k = next;
+    }
+    arms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(path: &str, src: &str) -> (SourceFile, FileItems) {
+        let f = SourceFile::parse(path, src);
+        let idx = index(&f);
+        (f, idx)
+    }
+
+    #[test]
+    fn fns_impls_traits_mods_are_indexed() {
+        let src = "\
+mod util;
+pub trait Fam {
+    fn norms(&self);
+    fn route(&self) -> usize { 0 }
+}
+pub struct A;
+impl Fam for A {
+    fn norms(&self) {}
+}
+impl A {
+    fn extra(&self) {}
+}
+fn free() {}
+";
+        let (_f, idx) = parse("rust/src/x.rs", src);
+        let names: Vec<&str> = idx.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, ["norms", "route", "norms", "extra", "free"]);
+        assert_eq!(idx.traits.len(), 1);
+        assert_eq!(idx.traits[0].required_fns, ["norms"]);
+        assert_eq!(idx.impls.len(), 2);
+        assert_eq!(idx.impls[0].trait_name.as_deref(), Some("Fam"));
+        assert_eq!(idx.impls[0].type_name, "A");
+        assert_eq!(idx.impls[1].trait_name, None);
+        assert_eq!(idx.mods.len(), 1);
+        // impl membership
+        let in_first: Vec<&str> =
+            idx.fns_in(idx.impls[0].body).map(|f| f.name.as_str()).collect();
+        assert_eq!(in_first, ["norms"]);
+    }
+
+    #[test]
+    fn generic_impl_for_resolves_trait_and_type() {
+        let src = "impl<T: Clone> Route<T> for Spec<T> where T: Send { fn go(&self) {} }";
+        let (_f, idx) = parse("x.rs", src);
+        assert_eq!(idx.impls[0].trait_name.as_deref(), Some("Route"));
+        assert_eq!(idx.impls[0].type_name, "Spec");
+    }
+
+    #[test]
+    fn use_groups_and_aliases_resolve() {
+        let src = "\
+use crate::privacy::{calibrate_sigma, rdp::RdpAccountant as Acc};
+use super::store::GradVec;
+use std::collections::BTreeMap;
+";
+        let (_f, idx) = parse("x.rs", src);
+        assert_eq!(idx.uses["calibrate_sigma"], vec![vec!["privacy".to_string()]]);
+        assert_eq!(
+            idx.uses["Acc"],
+            vec![vec!["privacy".to_string(), "rdp".to_string()]]
+        );
+        assert_eq!(idx.uses["GradVec"], vec![vec!["store".to_string()]]);
+        assert_eq!(idx.uses["BTreeMap"], vec![vec!["collections".to_string()]]);
+    }
+
+    #[test]
+    fn dispatch_arms_nest_and_classify() {
+        let src = "\
+fn run(&self) {
+    match self.kind {
+        Kind::Fwd => fwd(),
+        Kind::Reweight | Kind::ReweightGram => {
+            prefix();
+            match self.kind {
+                Kind::Reweight => leaf_a(),
+                _ => leaf_b(),
+            }
+        }
+        Kind::MultiLoss => multi(),
+        _ => other(),
+    }
+}
+";
+        let (_f, idx) = parse("rust/src/runtime/native/mod.rs", src);
+        let arms = &idx.fns[0].arms;
+        assert_eq!(arms.len(), 4);
+        assert_eq!(arms[0].kinds, ["Fwd"]);
+        assert_eq!(arms[1].kinds, ["Reweight", "ReweightGram"]);
+        assert_eq!(arms[1].children.len(), 2);
+        assert_eq!(arms[1].children[0].kinds, ["Reweight"]);
+        assert!(arms[1].children[1].kinds.is_empty());
+        assert_eq!(arms[2].kinds, ["MultiLoss"]);
+        assert!(arms[3].kinds.is_empty());
+    }
+
+    #[test]
+    fn non_dispatch_matches_are_ignored_but_scanned_inside() {
+        let src = "\
+fn pick(x: Option<u8>) -> u8 {
+    match x {
+        Some(v) => match self.kind { Kind::Fwd => v, _ => 0 },
+        None => 0,
+    }
+}
+";
+        let (_f, idx) = parse("x.rs", src);
+        let arms = &idx.fns[0].arms;
+        // the outer Option match is not a dispatch match; the inner
+        // Kind match is found by rescanning inside it
+        assert_eq!(arms.len(), 2);
+        assert_eq!(arms[0].kinds, ["Fwd"]);
+    }
+
+    #[test]
+    fn bodiless_trait_fns_have_no_body() {
+        let src = "trait T { fn a(&self); }";
+        let (_f, idx) = parse("x.rs", src);
+        assert!(idx.fns[0].body.is_none());
+    }
+}

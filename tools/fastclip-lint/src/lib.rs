@@ -16,10 +16,15 @@
 //! nothing is itself a finding (rule `lint-allow`), so the allow-list
 //! can only shrink to what is genuinely explained and genuinely used.
 
+pub mod callgraph;
+pub mod items;
 pub mod rules;
+pub mod sarif;
 pub mod source;
+pub mod tokens;
 
 use source::SourceFile;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// One lint hit. `line` is 1-based.
@@ -53,19 +58,63 @@ struct Allow {
 
 /// Lint one file's text under a given (possibly virtual) path. The
 /// path drives the rules' directory scoping, so fixtures can exercise
-/// path-scoped rules from anywhere on disk.
+/// path-scoped rules from anywhere on disk. Tree rules see a
+/// single-file tree — multi-file facts need [`lint_sources`].
 pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
-    let f = SourceFile::parse(path, text);
-    let mut raw: Vec<Finding> = Vec::new();
-    for rule in rules::all() {
-        rule.check(&f, &mut raw);
+    lint_sources(&[(path.to_string(), text.to_string())])
+}
+
+/// Lint a set of files as one tree: per-file rules run on each file,
+/// tree rules (dp-flow, family-contract, sensitivity-consistency) run
+/// once over the call graph of all of them, and allow annotations are
+/// applied per file to both kinds. Findings come back grouped in
+/// input-file order, sorted by line within a file.
+pub fn lint_sources(inputs: &[(String, String)]) -> Vec<Finding> {
+    let files: Vec<SourceFile> =
+        inputs.iter().map(|(p, t)| SourceFile::parse(p, t)).collect();
+
+    // per-file rules
+    let mut per_file: Vec<Vec<Finding>> = files
+        .iter()
+        .map(|f| {
+            let mut v = Vec::new();
+            for rule in rules::all() {
+                rule.check(f, &mut v);
+            }
+            v
+        })
+        .collect();
+
+    // tree rules over the whole set, findings routed to their file
+    let tree = callgraph::Tree::build(&files);
+    let mut tree_findings: Vec<Finding> = Vec::new();
+    for rule in rules::tree_rules() {
+        rule.check(&tree, &mut tree_findings);
     }
+    for tf in tree_findings {
+        match files.iter().position(|f| f.path == tf.path) {
+            Some(i) => per_file[i].push(tf),
+            None => per_file.last_mut().expect("nonempty input").push(tf),
+        }
+    }
+
+    let mut out = Vec::new();
+    for (f, raw) in files.iter().zip(per_file) {
+        out.extend(filter_file(f, raw));
+    }
+    out
+}
+
+/// Apply per-file post-processing to one file's raw findings: dedup
+/// by (rule, line), honor `lint: allow` annotations, and emit the
+/// allow-hygiene findings.
+fn filter_file(f: &SourceFile, mut raw: Vec<Finding>) -> Vec<Finding> {
     // one finding per (rule, line): several tokens of the same rule on
     // one line are one problem, and one allow covers them
     raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     raw.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
 
-    let mut allows = parse_allows(&f);
+    let mut allows = parse_allows(f);
     let mut out: Vec<Finding> = Vec::new();
     'finding: for fi in raw {
         for al in allows.iter_mut() {
@@ -89,6 +138,7 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
     let known: Vec<&'static str> = rules::all()
         .iter()
         .map(|r| r.id())
+        .chain(rules::tree_rules().iter().map(|r| r.id()))
         .chain(std::iter::once(LINT_ALLOW))
         .collect();
     for al in &allows {
@@ -188,6 +238,71 @@ pub fn lint_file(path: &Path) -> std::io::Result<Vec<Finding>> {
     Ok(lint_source(&path.to_string_lossy(), &text))
 }
 
+/// Baseline ratchet: per-(rule, path) finding counts. The baseline
+/// file records today's debt; a run may match it but never exceed it,
+/// and regenerating with `--write-baseline` after paying debt down
+/// shrinks the allowance permanently.
+pub type Baseline = BTreeMap<(String, String), usize>;
+
+/// Count findings per (rule, path).
+pub fn baseline_counts(findings: &[Finding]) -> Baseline {
+    let mut b = Baseline::new();
+    for f in findings {
+        *b.entry((f.rule.to_string(), f.path.clone())).or_insert(0) += 1;
+    }
+    b
+}
+
+/// Render a baseline as its file format: `count<TAB>rule<TAB>path`
+/// lines, sorted (BTreeMap order), `#` comments allowed on read.
+pub fn render_baseline(b: &Baseline) -> String {
+    let mut s = String::from("# fastclip-lint baseline: count\trule\tpath (ratchet — may shrink, never grow)\n");
+    for ((rule, path), count) in b {
+        s.push_str(&format!("{count}\t{rule}\t{path}\n"));
+    }
+    s
+}
+
+/// Parse a baseline file. Unparsable lines are ignored (a hand-edited
+/// baseline can only lose allowance, never gain it silently).
+pub fn parse_baseline(text: &str) -> Baseline {
+    let mut b = Baseline::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, '\t');
+        let (Some(count), Some(rule), Some(path)) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            continue;
+        };
+        let Ok(count) = count.parse::<usize>() else { continue };
+        b.insert((rule.to_string(), path.to_string()), count);
+    }
+    b
+}
+
+/// Suppress up to the baselined count of findings per (rule, path) —
+/// the first N by the engine's order — and return the excess. New
+/// findings in un-baselined buckets always surface.
+pub fn apply_baseline(findings: Vec<Finding>, baseline: &Baseline) -> Vec<Finding> {
+    let mut budget: Baseline = baseline.clone();
+    findings
+        .into_iter()
+        .filter(|f| {
+            match budget.get_mut(&(f.rule.to_string(), f.path.clone())) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    false
+                }
+                _ => true,
+            }
+        })
+        .collect()
+}
+
 /// Recursively collect `.rs` files under each path (files pass
 /// through), sorted so output order is stable across platforms.
 pub fn collect_rs_files(paths: &[PathBuf]) -> std::io::Result<Vec<PathBuf>> {
@@ -219,14 +334,18 @@ pub fn collect_rs_files(paths: &[PathBuf]) -> std::io::Result<Vec<PathBuf>> {
     Ok(out)
 }
 
-/// Lint every `.rs` file under `paths`; returns (findings, files seen).
+/// Lint every `.rs` file under `paths` as one tree (so cross-file
+/// rules see everything at once); returns (findings, files seen).
 pub fn run_paths(paths: &[PathBuf]) -> std::io::Result<(Vec<Finding>, usize)> {
     let files = collect_rs_files(paths)?;
-    let mut findings = Vec::new();
+    let mut inputs: Vec<(String, String)> = Vec::with_capacity(files.len());
     for file in &files {
-        findings.extend(lint_file(file)?);
+        inputs.push((
+            file.to_string_lossy().replace('\\', "/"),
+            std::fs::read_to_string(file)?,
+        ));
     }
-    Ok((findings, files.len()))
+    Ok((lint_sources(&inputs), files.len()))
 }
 
 #[cfg(test)]
@@ -269,6 +388,30 @@ use std::collections::HashMap;
         let f = lint_source("rust/src/runtime/x.rs", src);
         assert_eq!(f.len(), 1, "{f:?}");
         assert!(f[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_ratchet() {
+        let mk = |line| Finding {
+            path: "rust/src/runtime/x.rs".to_string(),
+            line,
+            rule: "no-hash-container",
+            message: "m".to_string(),
+        };
+        let old = vec![mk(1), mk(5)];
+        let base = baseline_counts(&old);
+        let reparsed = parse_baseline(&render_baseline(&base));
+        assert_eq!(base, reparsed);
+        // same debt: fully suppressed
+        assert!(apply_baseline(old.clone(), &base).is_empty());
+        // one new finding in the bucket: exactly the excess surfaces
+        let grown = vec![mk(1), mk(5), mk(9)];
+        let left = apply_baseline(grown, &base);
+        assert_eq!(left.len(), 1);
+        assert_eq!(left[0].line, 9);
+        // a different rule is not covered
+        let other = vec![Finding { rule: "dp-flow", ..mk(2) }];
+        assert_eq!(apply_baseline(other, &base).len(), 1);
     }
 
     #[test]

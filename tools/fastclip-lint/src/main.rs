@@ -1,10 +1,64 @@
 //! CLI driver: `fastclip-lint <path>...` lints every `.rs` file under
-//! the given paths and exits nonzero on findings. `--list-rules`
-//! prints the registry. CI runs `cargo run -p fastclip-lint -- rust/src`
-//! as a required job.
+//! the given paths (as one tree, so cross-file rules see everything)
+//! and exits nonzero on findings.
+//!
+//! ```text
+//! fastclip-lint [--format text|json|sarif] [--baseline FILE] <path>...
+//! fastclip-lint --write-baseline FILE <path>...
+//! fastclip-lint --list-rules [--format json]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error. CI runs the
+//! text format as the gating job and the sarif format for code
+//! scanning annotations (see .github/workflows/ci.yml).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+
+use fastclip_lint::{sarif, Finding};
+
+struct Cli {
+    format: String,
+    baseline: Option<PathBuf>,
+    write_baseline: Option<PathBuf>,
+    list_rules: bool,
+    paths: Vec<PathBuf>,
+}
+
+fn parse_cli(args: &[String]) -> Result<Cli, String> {
+    let mut cli = Cli {
+        format: "text".to_string(),
+        baseline: None,
+        write_baseline: None,
+        list_rules: false,
+        paths: Vec::new(),
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--format" => {
+                let v = it.next().ok_or("--format needs a value")?;
+                if !matches!(v.as_str(), "text" | "json" | "sarif") {
+                    return Err(format!("unknown format {v:?} (text | json | sarif)"));
+                }
+                cli.format = v.clone();
+            }
+            "--baseline" => {
+                cli.baseline = Some(PathBuf::from(it.next().ok_or("--baseline needs a file")?));
+            }
+            "--write-baseline" => {
+                cli.write_baseline =
+                    Some(PathBuf::from(it.next().ok_or("--write-baseline needs a file")?));
+            }
+            "--list-rules" => cli.list_rules = true,
+            other if other.starts_with('-') => {
+                return Err(format!("unknown flag {other:?}"));
+            }
+            path => cli.paths.push(PathBuf::from(path)),
+        }
+    }
+    Ok(cli)
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -12,49 +66,117 @@ fn main() -> ExitCode {
         usage();
         return ExitCode::SUCCESS;
     }
-    if args.iter().any(|a| a == "--list-rules") {
-        for rule in fastclip_lint::rules::all() {
-            println!("{:<22} {}", rule.id(), rule.describe());
+    let cli = match parse_cli(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fastclip-lint: {e}");
+            usage();
+            return ExitCode::from(2);
         }
-        println!(
-            "{:<22} {}",
-            fastclip_lint::LINT_ALLOW,
-            "allow-list hygiene: every `lint: allow` must name a real rule, carry a reason, and suppress something"
-        );
+    };
+
+    if cli.list_rules {
+        list_rules(&cli.format);
         return ExitCode::SUCCESS;
     }
-    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
-    if paths.is_empty() {
+    if cli.paths.is_empty() {
         usage();
         return ExitCode::from(2);
     }
-    match fastclip_lint::run_paths(&paths) {
-        Ok((findings, n_files)) => {
-            for f in &findings {
+
+    let (findings, n_files) = match fastclip_lint::run_paths(&cli.paths) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fastclip-lint: error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(path) = &cli.write_baseline {
+        let b = fastclip_lint::baseline_counts(&findings);
+        if let Err(e) = std::fs::write(path, fastclip_lint::render_baseline(&b)) {
+            eprintln!("fastclip-lint: cannot write baseline {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "fastclip-lint: baseline of {} finding(s) written to {}",
+            findings.len(),
+            path.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let findings = match &cli.baseline {
+        None => findings,
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(text) => {
+                fastclip_lint::apply_baseline(findings, &fastclip_lint::parse_baseline(&text))
+            }
+            Err(e) => {
+                eprintln!("fastclip-lint: cannot read baseline {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        },
+    };
+
+    emit(&cli.format, &findings, n_files);
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn emit(format: &str, findings: &[Finding], n_files: usize) {
+    match format {
+        "json" => println!("{}", sarif::to_json(findings)),
+        "sarif" => println!("{}", sarif::to_sarif(findings)),
+        _ => {
+            for f in findings {
                 println!("{f}");
             }
-            let n_rules = fastclip_lint::rules::all().len() + 1; // + lint-allow
+            let n_rules = sarif::rule_meta().len();
             if findings.is_empty() {
                 println!("fastclip-lint: {n_files} files clean ({n_rules} rules active)");
-                ExitCode::SUCCESS
             } else {
                 println!(
                     "fastclip-lint: {} finding(s) in {n_files} files ({n_rules} rules active)",
                     findings.len()
                 );
-                ExitCode::FAILURE
             }
         }
-        Err(e) => {
-            eprintln!("fastclip-lint: error: {e}");
-            ExitCode::from(2)
+    }
+}
+
+fn list_rules(format: &str) {
+    let meta = sarif::rule_meta();
+    if format == "json" {
+        let mut s = String::from("[");
+        for (i, (id, desc, scope)) in meta.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n  {{\"id\": \"{}\", \"description\": \"{}\", \"scope\": \"{}\"}}",
+                sarif::esc(id),
+                sarif::esc(desc),
+                sarif::esc(scope)
+            ));
         }
+        s.push_str("\n]");
+        println!("{s}");
+        return;
+    }
+    for (id, desc, scope) in &meta {
+        println!("{id:<26} {desc}");
+        println!("{:<26}   where: {scope}", "");
     }
 }
 
 fn usage() {
     eprintln!(
-        "usage: fastclip-lint <path>...   lint every .rs file under the paths\n\
-         \x20      fastclip-lint --list-rules"
+        "usage: fastclip-lint [--format text|json|sarif] [--baseline FILE] <path>...\n\
+         \x20      fastclip-lint --write-baseline FILE <path>...\n\
+         \x20      fastclip-lint --list-rules [--format json]"
     );
 }

@@ -1,0 +1,120 @@
+//! `dp-flow`: the paper's flow discipline, checked interprocedurally.
+//!
+//! Three obligations over the call-graph effect summaries
+//! (`callgraph.rs`):
+//!
+//! (a) a function that *directly* steps the optimizer and reaches
+//!     gradient production must also reach a nu-application and a
+//!     noise-addition — no path from per-example gradients to
+//!     `Optimizer::step` may skip the clip/noise pipeline;
+//! (b) a function that directly adds noise must reach an accountant
+//!     charge (the serve scheduler's one-step-ahead ledger probe
+//!     counts — its `probe.step(…)` is an accountant charge);
+//! (c) in `runtime/native/`, every *private* leaf dispatch arm
+//!     (`Kind::Reweight*`, `Kind::MultiLoss`) whose path writes
+//!     gradients must have a nu-application on that same path — so
+//!     one batched method cannot silently drop clipping while its
+//!     siblings keep the agreement tests green.
+//!
+//! Soundness direction: effects are over-approximated (name-based
+//! resolution unions every same-named callee), so (a)–(c) can miss a
+//! violation only if an *unrelated* same-named function provides the
+//! missing edge; they cannot fire spuriously on code that really
+//! performs the edge. The nu/noise/charge seeds are deliberately
+//! narrow (see `callgraph.rs`) so deleting the real call is detected.
+
+use super::TreeRule;
+use crate::callgraph::{Tree, ADDS_NOISE, APPLIES_NU, CHARGES_ACCT, WRITES_GRAD};
+use crate::items::EXEMPT_KINDS;
+use crate::Finding;
+
+pub struct DpFlow;
+
+pub const ID: &str = "dp-flow";
+
+impl TreeRule for DpFlow {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "no path from gradient production to Optimizer::step without nu-application and noise-addition; no noise without an accountant charge; every private batched-method arm applies nu"
+    }
+
+    fn scope(&self) -> &'static str {
+        "call graph over the whole linted tree (optimizer steps, noise sites, runtime/native dispatch arms)"
+    }
+
+    fn check(&self, tree: &Tree<'_>, out: &mut Vec<Finding>) {
+        for (idx, node) in tree.nodes.iter().enumerate() {
+            let f = tree.file_of(node);
+
+            // (a) optimizer step fed by gradients needs nu + noise
+            if let Some(&line) = node.opt_step_lines.first() {
+                if node.reach & WRITES_GRAD != 0 {
+                    let mut missing = Vec::new();
+                    if node.reach & APPLIES_NU == 0 {
+                        missing.push("a nu-application (clip)");
+                    }
+                    if node.reach & ADDS_NOISE == 0 {
+                        missing.push("a noise-addition");
+                    }
+                    if !missing.is_empty() {
+                        out.push(Finding {
+                            path: f.path.clone(),
+                            line,
+                            rule: ID,
+                            message: format!(
+                                "`{}` steps the optimizer on produced gradients without {} \
+                                 edge reachable on the path — the DP-SGD pipeline is \
+                                 clip → noise → account → step",
+                                node.display,
+                                missing.join(" or ")
+                            ),
+                        });
+                    }
+                }
+            }
+
+            // (b) noise must be accounted
+            if let Some(&line) = node.noise_lines.first() {
+                if node.reach & CHARGES_ACCT == 0 {
+                    out.push(Finding {
+                        path: f.path.clone(),
+                        line,
+                        rule: ID,
+                        message: format!(
+                            "`{}` adds noise but no accountant charge is reachable — \
+                             every noised step must be charged to the RDP ledger \
+                             (`accountant.step(q, sigma)` or the serve probe)",
+                            node.display
+                        ),
+                    });
+                }
+            }
+
+            // (c) private native dispatch arms apply nu themselves
+            if node.is_leaf_arm
+                && f.has_component("native")
+                && !node.kinds.is_empty()
+                && node.kinds.iter().all(|k| !EXEMPT_KINDS.contains(&k.as_str()))
+            {
+                let path_eff = tree.path_effects(idx);
+                if path_eff & WRITES_GRAD != 0 && path_eff & APPLIES_NU == 0 {
+                    out.push(Finding {
+                        path: f.path.clone(),
+                        line: node.line,
+                        rule: ID,
+                        message: format!(
+                            "private batched method `{}` ({}) writes gradients with no \
+                             nu-application on its dispatch path — the per-example clip \
+                             factor must scale this method's gradient route",
+                            node.display,
+                            node.kinds.join("|")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

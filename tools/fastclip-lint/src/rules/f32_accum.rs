@@ -24,6 +24,10 @@ impl Rule for F32Accum {
         "float accumulation in runtime/native/ must use the ascending-order / f64-accumulator helpers (no bare .sum::<f32>() or f32 += loops)"
     }
 
+    fn scope(&self) -> &'static str {
+        "runtime/native/ (gemm.rs approved)"
+    }
+
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
         if !f.has_component("native") || f.file_name() == APPROVED_FILE {
             return;

@@ -1,0 +1,272 @@
+//! `family-contract`: a model family registered with the runtime must
+//! be fully wired, so a fourth family (the ROADMAP's RNN) cannot land
+//! half-done and silently skip the cross-method guarantees.
+//!
+//! For every non-test `register("name", …)` / `register_family("name",
+//! …)` call site in `runtime/` whose first argument is a string
+//! literal, the rule demands:
+//!
+//! 1. the registering closure constructs a type with a *complete*
+//!    `impl ModelFamily` — every method the trait declares without a
+//!    default body is present in the impl;
+//! 2. if the linted tree carries an agreement-matrix test (a fn whose
+//!    name contains `agree`), some such fn mentions the family;
+//! 3. if the linted tree carries `no_alloc.rs`, it names a config of
+//!    the family (the steady-state allocation-free guarantee);
+//! 4. if the linted tree carries a policy-oracle test (a fn whose
+//!    name contains `oracle`), some such fn mentions the family.
+//!
+//! Witnesses 2–4 are conditional on the witness file/fn being in the
+//! linted tree, so linting `rust/src` alone stays clean while the CI
+//! invocation over `rust/src rust/tests` enforces the full contract.
+//! A family is "mentioned" when an identifier or string literal
+//! starts with its name followed by a digit, `_`, `(`, or the end of
+//! the literal — matching config keys like `cnn2_mnist_b16` and spec
+//! strings like `mlp(depth=3,…)`.
+
+use super::TreeRule;
+use crate::callgraph::Tree;
+use crate::source::SourceFile;
+use crate::tokens::{matching_delim, TokKind};
+use crate::Finding;
+
+pub struct FamilyContract;
+
+pub const ID: &str = "family-contract";
+
+impl TreeRule for FamilyContract {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "every registered model family implements the full ModelFamily norm-route surface and appears in the agreement matrix, no_alloc.rs, and the policy-oracle test"
+    }
+
+    fn scope(&self) -> &'static str {
+        "register sites under runtime/; witnesses anywhere in the linted tree (conditional on presence)"
+    }
+
+    fn check(&self, tree: &Tree<'_>, out: &mut Vec<Finding>) {
+        // the trait's required surface (first ModelFamily decl wins)
+        let required: Option<&Vec<String>> = tree
+            .items
+            .iter()
+            .flat_map(|idx| idx.traits.iter())
+            .find(|t| t.name == "ModelFamily")
+            .map(|t| &t.required_fns);
+
+        // every complete-enough impl target type in the tree
+        let impl_types: Vec<(usize, &str, (usize, usize))> = tree
+            .items
+            .iter()
+            .enumerate()
+            .flat_map(|(fi, idx)| {
+                idx.impls
+                    .iter()
+                    .filter(|im| im.trait_name.as_deref() == Some("ModelFamily"))
+                    .map(move |im| (fi, im.type_name.as_str(), im.body))
+            })
+            .collect();
+
+        // witness inventory
+        let no_alloc_file: Option<usize> =
+            tree.files.iter().position(|f| f.file_name() == "no_alloc.rs");
+        let agree_fns = fns_named_like(tree, "agree");
+        let oracle_fns = fns_named_like(tree, "oracle");
+
+        for (fi, f) in tree.files.iter().enumerate() {
+            if !f.has_component("runtime") {
+                continue;
+            }
+            for (line, call_span, family) in register_sites(tree, fi, f) {
+                let mut missing: Vec<String> = Vec::new();
+
+                // 1. a complete ModelFamily impl constructed here
+                let site_idents: Vec<&str> = tree.items[fi]
+                    .toks
+                    .iter()
+                    .filter(|t| {
+                        t.kind == TokKind::Ident
+                            && t.start >= call_span.0
+                            && t.end <= call_span.1
+                    })
+                    .map(|t| t.text(&f.code))
+                    .collect();
+                let linked = impl_types.iter().find(|(_, ty, _)| site_idents.contains(ty));
+                match linked {
+                    None => missing.push(
+                        "a type implementing ModelFamily constructed at the register site"
+                            .to_string(),
+                    ),
+                    Some((ifi, ty, body)) => {
+                        if let Some(req) = required {
+                            let have: Vec<&str> = tree.items[*ifi]
+                                .fns_in(*body)
+                                .map(|fun| fun.name.as_str())
+                                .collect();
+                            let absent: Vec<&str> = req
+                                .iter()
+                                .map(|r| r.as_str())
+                                .filter(|r| !have.contains(r))
+                                .collect();
+                            if !absent.is_empty() {
+                                missing.push(format!(
+                                    "ModelFamily methods on `{ty}`: {}",
+                                    absent.join(", ")
+                                ));
+                            }
+                        }
+                    }
+                }
+
+                // 2. agreement matrix coverage
+                if !agree_fns.is_empty()
+                    && !agree_fns
+                        .iter()
+                        .any(|&(wfi, span)| mentions_family(&tree.files[wfi], span, &family))
+                {
+                    missing.push("a row in the method-agreement matrix tests".to_string());
+                }
+
+                // 3. no_alloc.rs coverage
+                if let Some(na) = no_alloc_file {
+                    let naf = &tree.files[na];
+                    if !mentions_family(naf, (0, naf.raw.len()), &family) {
+                        missing.push("a config row in no_alloc.rs".to_string());
+                    }
+                }
+
+                // 4. policy-oracle coverage
+                if !oracle_fns.is_empty()
+                    && !oracle_fns
+                        .iter()
+                        .any(|&(wfi, span)| mentions_family(&tree.files[wfi], span, &family))
+                {
+                    missing.push("the nxBP policy-oracle test".to_string());
+                }
+
+                if !missing.is_empty() {
+                    out.push(Finding {
+                        path: f.path.clone(),
+                        line,
+                        rule: ID,
+                        message: format!(
+                            "family {family:?} is registered but not fully wired — missing: {}",
+                            missing.join("; ")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Non-test `register`/`register_family` call sites in file `fi` with
+/// a leading string-literal argument: (line, full call span, family).
+fn register_sites(tree: &Tree<'_>, fi: usize, f: &SourceFile) -> Vec<(usize, (usize, usize), String)> {
+    let toks = &tree.items[fi].toks;
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let name = t.text(&f.code);
+        if name != "register" && name != "register_family" {
+            continue;
+        }
+        if !toks.get(k + 1).is_some_and(|n| n.is_punct(b'(')) {
+            continue;
+        }
+        if k >= 1 && toks[k - 1].is_ident(&f.code, "fn") {
+            continue; // the definition
+        }
+        let line = f.line_of(t.start);
+        if f.in_test(line) {
+            continue;
+        }
+        let Some(close) = matching_delim(toks, k + 1) else { continue };
+        // first-argument span by token offsets: from after `(` to the
+        // first top-level comma (or the `)`). The literal's bytes are
+        // blanked in the code view, so a text-trimmed span would
+        // collapse to nothing — offsets still bracket the literal.
+        let a_lo = toks[k + 1].end;
+        let mut a_hi = toks[close].start;
+        let mut depth = 0usize;
+        for t in &toks[k + 2..close] {
+            match t.kind {
+                TokKind::Punct(b'(') | TokKind::Punct(b'[') | TokKind::Punct(b'{') => depth += 1,
+                TokKind::Punct(b')') | TokKind::Punct(b']') | TokKind::Punct(b'}') => {
+                    depth = depth.saturating_sub(1)
+                }
+                TokKind::Punct(b',') if depth == 0 => {
+                    a_hi = t.start;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let Some(lit) = f.strings.iter().find(|s| s.off >= a_lo && s.off < a_hi) else {
+            continue; // family name not a literal: out of this rule's reach
+        };
+        out.push((line, (t.start, toks[close].end), lit.text.clone()));
+    }
+    out
+}
+
+/// Witness fns: fns in `tests/`-directory files whose name contains
+/// `frag`, as (file index, body span). Restricted to the integration
+/// test tree on purpose — unit-test helpers inside `src` with
+/// agree/oracle-ish names are not the cross-family matrix.
+fn fns_named_like(tree: &Tree<'_>, frag: &str) -> Vec<(usize, (usize, usize))> {
+    let mut out = Vec::new();
+    for (fi, idx) in tree.items.iter().enumerate() {
+        if !tree.files[fi].has_component("tests") {
+            continue;
+        }
+        for fun in &idx.fns {
+            if let Some(body) = fun.body {
+                if fun.name.contains(frag) {
+                    out.push((fi, body));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Does `f` mention family `name` inside `span` — as a code
+/// identifier or a string literal starting with the name followed by
+/// a digit, `_`, `(`, or the end?
+fn mentions_family(f: &SourceFile, span: (usize, usize), name: &str) -> bool {
+    let follows_ok = |rest: &str| {
+        rest.is_empty()
+            || rest.starts_with(|c: char| c.is_ascii_digit() || c == '_' || c == '(')
+    };
+    for s in &f.strings {
+        if s.off >= span.0 && s.off < span.1 {
+            if let Some(rest) = s.text.strip_prefix(name) {
+                if follows_ok(rest) {
+                    return true;
+                }
+            }
+        }
+    }
+    // code identifiers starting with the family name
+    let lo = span.0.min(f.code.len());
+    let hi = span.1.min(f.code.len());
+    let hay = &f.code[lo..hi];
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(name) {
+        let at = from + p;
+        let before_ok = at == 0
+            || !(bytes[at - 1] == b'_' || bytes[at - 1].is_ascii_alphanumeric());
+        let rest = &hay[at + name.len()..];
+        if before_ok && follows_ok(rest) {
+            return true;
+        }
+        from = at + name.len();
+    }
+    false
+}

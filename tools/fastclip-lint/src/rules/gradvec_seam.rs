@@ -48,6 +48,10 @@ impl Rule for GradVecSeam {
         "GradVec mutators (flat_mut/param_mut/add_scaled*/norms_fill/set_*norms) callable only from the approved clip/noise pipeline modules"
     }
 
+    fn scope(&self) -> &'static str {
+        "every linted file outside runtime/native/, runtime/{store,engine}.rs, coordinator/{methods,trainer,session}.rs"
+    }
+
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
         if approved(f) {
             return;

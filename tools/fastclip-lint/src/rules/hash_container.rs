@@ -23,9 +23,18 @@ impl Rule for HashContainer {
         "no HashMap/HashSet in runtime/, coordinator/, privacy/ (nondeterministic iteration order) — use BTreeMap/BTreeSet"
     }
 
+    fn scope(&self) -> &'static str {
+        "runtime/, coordinator/, privacy/, data/stream.rs, data/source.rs"
+    }
+
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
+        // the streaming data path (PR 8) feeds the deterministic
+        // runtime and is held to the same bar as the pinned dirs
+        let data_stream = f.has_component("data")
+            && matches!(f.file_name(), "stream.rs" | "source.rs");
         let scope = match SCOPES.iter().find(|d| f.has_component(d)) {
             Some(s) => *s,
+            None if data_stream => "data",
             None => return,
         };
         for tok in TOKENS {
@@ -62,6 +71,18 @@ mod tests {
         );
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, super::ID);
+    }
+
+    #[test]
+    fn flags_hashmap_in_the_streaming_data_path() {
+        for file in ["stream.rs", "source.rs"] {
+            let f = lint_source(
+                &format!("rust/src/data/{file}"),
+                "use std::collections::HashMap;\n",
+            );
+            assert_eq!(f.len(), 1, "{file}");
+            assert_eq!(f[0].rule, super::ID);
+        }
     }
 
     #[test]

@@ -1,36 +1,61 @@
-//! The rule registry. Every rule is a lexical/structural check over a
-//! [`SourceFile`](crate::source::SourceFile); path scoping (which
-//! directories a rule patrols) lives inside each rule so fixtures can
-//! exercise it with virtual paths.
+//! The rule registry. Rules come in two shapes:
 //!
-//! Adding a rule: write a unit struct implementing [`Rule`] in a new
-//! submodule, register it in [`all`], and add `bad.rs` / `good.rs`
-//! fixtures under `tests/fixtures/<rule-id>/`. The meta-test in
-//! `tests/ui.rs` will then hold the real tree to it.
+//! * [`Rule`] — a lexical/structural check over one
+//!   [`SourceFile`](crate::source::SourceFile); path scoping (which
+//!   directories a rule patrols) lives inside each rule so fixtures
+//!   can exercise it with virtual paths.
+//! * [`TreeRule`] — an interprocedural check over the call graph
+//!   ([`Tree`](crate::callgraph::Tree)) built from *every* linted
+//!   file at once (dp-flow, the family contract, sensitivity
+//!   tracing). Tree rules see cross-file facts a per-file rule
+//!   cannot.
+//!
+//! Adding a rule: write a unit struct implementing [`Rule`] (or
+//! [`TreeRule`]) in a new submodule, register it in [`all`] (or
+//! [`tree_rules`]), and add `bad.rs` / `good.rs` fixtures — or
+//! `bad/` / `good/` directories of `//@ path:`-tagged files for
+//! multi-file rules — under `tests/fixtures/<rule-id>/`. The
+//! meta-test in `tests/ui.rs` will then hold the real tree to it.
 
+mod dp_flow;
 mod f32_accum;
+mod family_contract;
 mod gradvec_seam;
 mod hash_container;
 mod rayon_disjoint;
+mod sensitivity_consistency;
 mod session_seam;
 mod unsafe_comment;
 mod wallclock_entropy;
 
+use crate::callgraph::Tree;
 use crate::source::SourceFile;
 use crate::Finding;
 
-/// A single named check.
+/// A single named per-file check.
 pub trait Rule: Sync {
     /// Stable id used in findings and `lint: allow(...)` annotations.
     fn id(&self) -> &'static str;
     /// One-line description for `--list-rules` and docs.
     fn describe(&self) -> &'static str;
+    /// Where the rule looks, for `--list-rules` and docs.
+    fn scope(&self) -> &'static str;
     /// Append findings for `f`. Suppression is the engine's job —
     /// rules report everything they see.
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>);
 }
 
-/// All registered rules, in reporting order.
+/// A single named whole-tree check over the call graph.
+pub trait TreeRule: Sync {
+    fn id(&self) -> &'static str;
+    fn describe(&self) -> &'static str;
+    fn scope(&self) -> &'static str;
+    /// Append findings for the linted tree. Suppression is still the
+    /// engine's job, applied per finding against its file.
+    fn check(&self, tree: &Tree<'_>, out: &mut Vec<Finding>);
+}
+
+/// All registered per-file rules, in reporting order.
 pub fn all() -> &'static [&'static dyn Rule] {
     static RULES: [&'static dyn Rule; 7] = [
         &hash_container::HashContainer,
@@ -40,6 +65,16 @@ pub fn all() -> &'static [&'static dyn Rule] {
         &unsafe_comment::UndocumentedUnsafe,
         &gradvec_seam::GradVecSeam,
         &session_seam::SessionSeam,
+    ];
+    &RULES
+}
+
+/// All registered tree rules, in reporting order.
+pub fn tree_rules() -> &'static [&'static dyn TreeRule] {
+    static RULES: [&'static dyn TreeRule; 3] = [
+        &dp_flow::DpFlow,
+        &family_contract::FamilyContract,
+        &sensitivity_consistency::SensitivityConsistency,
     ];
     &RULES
 }

@@ -27,6 +27,10 @@ impl Rule for RayonDisjointMut {
         "rayon mutation only via disjoint views (par_chunks_mut/par_iter_mut) outside the approved gemm/conv helpers"
     }
 
+    fn scope(&self) -> &'static str {
+        "runtime/, rng/, coordinator/, privacy/ (gemm.rs and conv.rs approved)"
+    }
+
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
         if !SCOPES.iter().any(|d| f.has_component(d)) {
             return;

@@ -1,0 +1,232 @@
+//! `sensitivity-consistency`: the clip bound used to calibrate noise
+//! must be *the* policy sensitivity, never a recomputed expression.
+//!
+//! The mechanism's privacy proof is about sigma·C where C =
+//! `ClipPolicy::sensitivity(...)` (or the legacy whole-model
+//! `opts.clip`). If a call site hands `noise_stddev_for_mean` a clip
+//! argument it derived itself (`opts.clip * 1.5`, `norms.max()`, a
+//! literal), the accountant and the noise silently disagree and every
+//! epsilon reported afterwards is wrong.
+//!
+//! The check is syntactic tracing within the defining file: the clip
+//! argument must be a plain identifier path that is (or a `let`
+//! binding whose right-hand side is) `ClipPolicy::sensitivity(…)` or
+//! the `opts.clip` field, with no arithmetic applied. The sigma
+//! handed to `add_noise_parallel` must likewise trace to a
+//! `noise_stddev_for_mean(…)` result. Conservative by design:
+//! an exotic-but-correct derivation needs a reasoned
+//! `// lint: allow(sensitivity-consistency)`.
+
+use super::TreeRule;
+use crate::callgraph::Tree;
+use crate::source::SourceFile;
+use crate::tokens::{matching_delim, split_args, Tok, TokKind};
+use crate::Finding;
+
+pub struct SensitivityConsistency;
+
+pub const ID: &str = "sensitivity-consistency";
+
+impl TreeRule for SensitivityConsistency {
+    fn id(&self) -> &'static str {
+        ID
+    }
+
+    fn describe(&self) -> &'static str {
+        "the clip argument of noise calibration must trace to ClipPolicy::sensitivity or opts.clip, never a recomputed expression; add_noise_parallel's sigma must trace to noise_stddev_for_mean"
+    }
+
+    fn scope(&self) -> &'static str {
+        "noise_stddev_for_mean / add_noise_parallel call sites, tree-wide"
+    }
+
+    fn check(&self, tree: &Tree<'_>, out: &mut Vec<Finding>) {
+        for (fi, f) in tree.files.iter().enumerate() {
+            let toks = &tree.items[fi].toks;
+            for (k, t) in toks.iter().enumerate() {
+                if t.kind != TokKind::Ident {
+                    continue;
+                }
+                let name = t.text(&f.code);
+                let (arg_idx, validate): (usize, fn(&SourceFile, &[Tok], &str) -> Result<(), String>) =
+                    match name {
+                        "noise_stddev_for_mean" => (1, validate_clip_arg),
+                        "add_noise_parallel" => (1, validate_sigma_arg),
+                        _ => continue,
+                    };
+                if !toks.get(k + 1).is_some_and(|n| n.is_punct(b'(')) {
+                    continue;
+                }
+                if k >= 1 && toks[k - 1].is_ident(&f.code, "fn") {
+                    continue; // the definition
+                }
+                let line = f.line_of(t.start);
+                if f.in_test(line) {
+                    continue;
+                }
+                let Some(close) = matching_delim(toks, k + 1) else { continue };
+                let args = split_args(&f.code, toks, k + 1, close);
+                let Some(&(a_lo, a_hi)) = args.get(arg_idx) else { continue };
+                let arg_text = &f.code[a_lo..a_hi];
+                if let Err(why) = validate(f, toks, arg_text) {
+                    out.push(Finding {
+                        path: f.path.clone(),
+                        line,
+                        rule: ID,
+                        message: format!("`{name}` argument `{}`: {why}", arg_text.trim()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// The clip bound: `.sensitivity(…)`, `…clip` (legacy), or an ident
+/// that `let`-binds to one of those — nothing recomputed.
+fn validate_clip_arg(f: &SourceFile, toks: &[Tok], arg: &str) -> Result<(), String> {
+    let arg = arg.trim().trim_end_matches("as f64").trim();
+    if arg.contains(".sensitivity(") {
+        return if has_arithmetic(arg) {
+            Err("arithmetic around ClipPolicy::sensitivity — pass the sensitivity itself".into())
+        } else {
+            Ok(())
+        };
+    }
+    if let Some(last) = ident_path_last(arg) {
+        if last == "clip" {
+            return Ok(()); // legacy opts.clip path
+        }
+        let Some(rhs) = binding_rhs(f, toks, last) else {
+            return Err(format!(
+                "cannot trace `{last}` to ClipPolicy::sensitivity or opts.clip in this file"
+            ));
+        };
+        if has_arithmetic(&rhs) {
+            return Err(format!(
+                "`{last}` binds to a computed expression — the clip bound must be \
+                 ClipPolicy::sensitivity(…) or opts.clip verbatim"
+            ));
+        }
+        if rhs.contains(".sensitivity(") || rhs.contains("clip") {
+            return Ok(());
+        }
+        return Err(format!(
+            "`{last}` does not derive from ClipPolicy::sensitivity or opts.clip"
+        ));
+    }
+    Err("the clip bound must be ClipPolicy::sensitivity(…) or opts.clip, not an expression".into())
+}
+
+/// The noise stddev handed to the sampler must come from
+/// `noise_stddev_for_mean` (which folds sensitivity and tau in).
+fn validate_sigma_arg(f: &SourceFile, toks: &[Tok], arg: &str) -> Result<(), String> {
+    let arg = arg.trim();
+    if arg.contains("noise_stddev_for_mean") {
+        return Ok(());
+    }
+    if let Some(last) = ident_path_last(arg) {
+        if let Some(rhs) = binding_rhs(f, toks, last) {
+            if rhs.contains("noise_stddev_for_mean") {
+                return Ok(());
+            }
+            return Err(format!(
+                "`{last}` binds to something other than noise_stddev_for_mean(…)"
+            ));
+        }
+        // no binding in this file: accept conventionally-named
+        // carriers (fields set from a traced binding elsewhere)
+        if last.contains("noise_std") {
+            return Ok(());
+        }
+        return Err(format!("cannot trace `{last}` to noise_stddev_for_mean in this file"));
+    }
+    Err("the noise stddev must trace to noise_stddev_for_mean(…), not an inline expression".into())
+}
+
+/// If `text` is a pure identifier path (`a.b.c`, `self.x`, `A::b`),
+/// return the last segment.
+fn ident_path_last(text: &str) -> Option<&str> {
+    let ok = text
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == ':' || c == ' ');
+    if !ok || text.is_empty() {
+        return None;
+    }
+    text.rsplit(|c| c == '.' || c == ':')
+        .next()
+        .map(str::trim)
+        .filter(|s| !s.is_empty() && s.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_'))
+}
+
+/// Find `let [mut] name = …;` in the file (non-test) and return the
+/// right-hand side's code-view text.
+fn binding_rhs(f: &SourceFile, toks: &[Tok], name: &str) -> Option<String> {
+    let code = &f.code;
+    for (k, t) in toks.iter().enumerate() {
+        if !t.is_ident(code, "let") {
+            continue;
+        }
+        let mut j = k + 1;
+        if toks.get(j).is_some_and(|t| t.is_ident(code, "mut")) {
+            j += 1;
+        }
+        if !toks.get(j).is_some_and(|t| t.is_ident(code, name)) {
+            continue;
+        }
+        if f.in_test(f.line_of(t.start)) {
+            continue;
+        }
+        // optional type ascription, then `=` (not `==`)
+        let mut e = j + 1;
+        let mut angle = 0isize;
+        while e < toks.len() {
+            match toks[e].kind {
+                TokKind::Punct(b'<') => angle += 1,
+                TokKind::Punct(b'>') => angle -= 1,
+                TokKind::Punct(b'=') if angle <= 0 => break,
+                TokKind::Punct(b';') => break,
+                _ => {}
+            }
+            e += 1;
+        }
+        if !toks.get(e).is_some_and(|t| t.is_punct(b'='))
+            || toks.get(e + 1).is_some_and(|t| t.is_punct(b'='))
+        {
+            continue;
+        }
+        // RHS runs to the `;` at delimiter depth 0
+        let mut depth = 0usize;
+        let mut s = e + 1;
+        let rhs_start = toks.get(s)?.start;
+        while s < toks.len() {
+            match toks[s].kind {
+                TokKind::Punct(b'(') | TokKind::Punct(b'[') | TokKind::Punct(b'{') => depth += 1,
+                TokKind::Punct(b')') | TokKind::Punct(b']') | TokKind::Punct(b'}') => {
+                    depth = depth.saturating_sub(1)
+                }
+                TokKind::Punct(b';') if depth == 0 => {
+                    return Some(code[rhs_start..toks[s].start].to_string());
+                }
+                _ => {}
+            }
+            s += 1;
+        }
+        return None;
+    }
+    None
+}
+
+/// Does the expression text contain arithmetic? `->`, `=>`, `&`, and
+/// generic `<`/`>` are not arithmetic; `*`, `/`, `%`, `+`, and a
+/// binary `-` are.
+fn has_arithmetic(text: &str) -> bool {
+    let b = text.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        match c {
+            b'*' | b'/' | b'%' | b'+' => return true,
+            b'-' if b.get(i + 1) != Some(&b'>') => return true,
+            _ => {}
+        }
+    }
+    false
+}

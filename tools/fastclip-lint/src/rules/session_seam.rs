@@ -39,6 +39,10 @@ impl Rule for SessionSeam {
         "parameter mutation (.mark_dirty() / &mut …params.host) confined to runtime/store.rs, coordinator/session.rs, and optim/ — updates flow through Optimizer::step after the noise pipeline"
     }
 
+    fn scope(&self) -> &'static str {
+        "every linted file outside runtime/store.rs, coordinator/session.rs, optim/"
+    }
+
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
         if approved(f) {
             return;

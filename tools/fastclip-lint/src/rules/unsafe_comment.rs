@@ -22,6 +22,10 @@ impl Rule for UndocumentedUnsafe {
         "every unsafe block/fn/impl needs a contiguous // SAFETY: comment immediately above"
     }
 
+    fn scope(&self) -> &'static str {
+        "every linted file, test code included"
+    }
+
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
         let n_lines = f.line_starts.len();
         // lines carrying a comment that contains "SAFETY:"

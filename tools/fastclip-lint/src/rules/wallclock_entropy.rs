@@ -36,14 +36,24 @@ impl Rule for WallclockEntropy {
         "no std::time / thread_rng / env reads in runtime/ or coordinator/serve.rs — hidden inputs break replayable, seeded execution"
     }
 
+    fn scope(&self) -> &'static str {
+        "runtime/, coordinator/serve.rs, data/stream.rs, data/source.rs"
+    }
+
     fn check(&self, f: &SourceFile, out: &mut Vec<Finding>) {
         let serve_scheduler =
             f.has_component("coordinator") && f.file_name() == "serve.rs";
-        if !(f.has_component("runtime") || serve_scheduler) {
+        // the streaming data path (PR 8) must replay batches bit-for-
+        // bit from (path, seed, epoch) — same hidden-input ban
+        let data_stream = f.has_component("data")
+            && matches!(f.file_name(), "stream.rs" | "source.rs");
+        if !(f.has_component("runtime") || serve_scheduler || data_stream) {
             return;
         }
         let scope = if serve_scheduler {
             "coordinator/serve.rs"
+        } else if data_stream {
+            "the streaming data path"
         } else {
             "runtime/"
         };
@@ -91,6 +101,18 @@ mod tests {
         );
         assert_eq!(f.len(), 2, "{f:?}");
         assert!(f.iter().all(|x| x.rule == super::ID));
+    }
+
+    #[test]
+    fn flags_env_reads_in_the_streaming_data_path() {
+        for file in ["stream.rs", "source.rs"] {
+            let f = lint_source(
+                &format!("rust/src/data/{file}"),
+                "fn open() { let _ = std::env::var(\"FASTCLIP_DATA_DIR\"); }\n",
+            );
+            assert!(!f.is_empty(), "{file}");
+            assert!(f.iter().all(|x| x.rule == super::ID));
+        }
     }
 
     #[test]

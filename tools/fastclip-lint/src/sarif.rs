@@ -1,0 +1,147 @@
+//! Machine-readable output: plain JSON findings and SARIF 2.1.0.
+//!
+//! Hand-rolled (the tool is dependency-free by charter). The SARIF
+//! subset emitted is the minimum GitHub code scanning consumes: one
+//! run, one driver with rule metadata, one result per finding with a
+//! physical location. Output is deterministic: findings arrive
+//! already sorted by the engine, rules are listed in registry order.
+
+use crate::rules;
+use crate::Finding;
+
+/// Escape a string for inclusion inside a JSON string literal.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Findings as a JSON array of `{rule, path, line, message}` objects.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            esc(f.rule),
+            esc(&f.path),
+            f.line,
+            esc(&f.message)
+        ));
+    }
+    out.push_str(if findings.is_empty() { "]" } else { "\n]" });
+    out
+}
+
+/// (id, description, scope) for every registered rule, including the
+/// engine's own allow-hygiene rule.
+pub fn rule_meta() -> Vec<(&'static str, String, String)> {
+    let mut out: Vec<(&'static str, String, String)> = Vec::new();
+    for r in rules::all() {
+        out.push((r.id(), r.describe().to_string(), r.scope().to_string()));
+    }
+    for r in rules::tree_rules() {
+        out.push((r.id(), r.describe().to_string(), r.scope().to_string()));
+    }
+    out.push((
+        crate::LINT_ALLOW,
+        "lint: allow(...) annotations must name a known rule, carry a `-- reason`, and \
+         suppress at least one finding"
+            .to_string(),
+        "every linted file (the engine's own allow-hygiene check)".to_string(),
+    ));
+    out
+}
+
+/// Findings as a SARIF 2.1.0 log (one run, rule metadata included).
+pub fn to_sarif(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"$schema\": \"https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json\",\n");
+    s.push_str("  \"version\": \"2.1.0\",\n");
+    s.push_str("  \"runs\": [\n    {\n");
+    s.push_str("      \"tool\": {\n        \"driver\": {\n");
+    s.push_str("          \"name\": \"fastclip-lint\",\n");
+    s.push_str("          \"informationUri\": \"DESIGN.md\",\n");
+    s.push_str("          \"rules\": [\n");
+    let meta = rule_meta();
+    for (i, (id, desc, scope)) in meta.iter().enumerate() {
+        s.push_str(&format!(
+            "            {{\"id\": \"{}\", \"shortDescription\": {{\"text\": \"{}\"}}, \
+             \"help\": {{\"text\": \"scope: {}\"}}}}{}\n",
+            esc(id),
+            esc(desc),
+            esc(scope),
+            if i + 1 < meta.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("          ]\n        }\n      },\n");
+    s.push_str("      \"results\": [\n");
+    for (i, f) in findings.iter().enumerate() {
+        s.push_str(&format!(
+            "        {{\"ruleId\": \"{}\", \"level\": \"error\", \
+             \"message\": {{\"text\": \"{}\"}}, \"locations\": [{{\
+             \"physicalLocation\": {{\"artifactLocation\": {{\"uri\": \"{}\"}}, \
+             \"region\": {{\"startLine\": {}}}}}}}]}}{}\n",
+            esc(f.rule),
+            esc(&f.message),
+            esc(&f.path),
+            f.line,
+            if i + 1 < findings.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("      ]\n    }\n  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Finding> {
+        vec![Finding {
+            path: "rust/src/runtime/x.rs".to_string(),
+            line: 3,
+            rule: "no-hash-container",
+            message: "a \"quoted\" message\nwith a newline".to_string(),
+        }]
+    }
+
+    #[test]
+    fn json_escapes_and_shapes() {
+        let j = to_json(&sample());
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\\n"));
+        assert!(j.contains("\"line\": 3"));
+        assert_eq!(to_json(&[]), "[]");
+    }
+
+    #[test]
+    fn sarif_lists_every_rule_and_result() {
+        let s = to_sarif(&sample());
+        assert!(s.contains("\"version\": \"2.1.0\""));
+        for (id, _, _) in rule_meta() {
+            assert!(s.contains(&format!("\"id\": \"{id}\"")), "{id}");
+        }
+        assert!(s.contains("\"startLine\": 3"));
+        assert!(s.contains("\"ruleId\": \"no-hash-container\""));
+    }
+
+    #[test]
+    fn esc_control_chars() {
+        assert_eq!(esc("a\u{1}b"), "a\\u0001b");
+        assert_eq!(esc("t\\p"), "t\\\\p");
+    }
+}

@@ -18,6 +18,19 @@ pub struct Comment {
     pub text: String,
 }
 
+/// One string literal's contents, attributed to where it starts. The
+/// code view blanks literals, so rules that need their text (e.g. the
+/// family names at `register(...)` sites) read them from here.
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    /// 1-based line the literal starts on.
+    pub line: usize,
+    /// Byte offset of the opening delimiter in the raw text.
+    pub off: usize,
+    /// Literal contents, delimiters excluded, escapes left as written.
+    pub text: String,
+}
+
 /// A parsed source file plus the derived views the rules need.
 #[derive(Debug)]
 pub struct SourceFile {
@@ -40,11 +53,13 @@ pub struct SourceFile {
     pub depth_at_line: Vec<usize>,
     /// All comments in order.
     pub comments: Vec<Comment>,
+    /// All string literals in order (contents only — blanked in `code`).
+    pub strings: Vec<StrLit>,
 }
 
 impl SourceFile {
     pub fn parse(path: &str, raw: &str) -> SourceFile {
-        let (code, comments) = blank_non_code(raw);
+        let (code, comments, strings) = blank_non_code(raw);
         let line_starts = line_starts(raw);
         let n_lines = line_starts.len();
 
@@ -80,10 +95,18 @@ impl SourceFile {
             }
         }
 
-        let test_mask = test_region_mask(&code, &line_starts);
+        let norm_path = path.replace('\\', "/");
+        // Files under a `tests` directory (integration tests, witness
+        // files) are test code wall to wall — mask every line so the
+        // per-line rules skip them, same as a `#[cfg(test)] mod` body.
+        let test_mask = if norm_path.split('/').any(|c| c == "tests") {
+            vec![true; n_lines]
+        } else {
+            test_region_mask(&code, &line_starts)
+        };
 
         SourceFile {
-            path: path.replace('\\', "/"),
+            path: norm_path,
             raw: raw.to_string(),
             code,
             line_starts,
@@ -92,6 +115,7 @@ impl SourceFile {
             code_on_line,
             depth_at_line,
             comments,
+            strings,
         }
     }
 
@@ -172,12 +196,14 @@ fn line_starts(raw: &str) -> Vec<usize> {
 }
 
 /// Blank comments and literal contents out of `raw`, preserving byte
-/// length and newlines; collect comments with their starting line.
-fn blank_non_code(raw: &str) -> (String, Vec<Comment>) {
+/// length and newlines; collect comments and string literals with
+/// their starting line.
+fn blank_non_code(raw: &str) -> (String, Vec<Comment>, Vec<StrLit>) {
     let b = raw.as_bytes();
     let n = b.len();
     let mut out: Vec<u8> = raw.bytes().collect();
     let mut comments = Vec::new();
+    let mut strings = Vec::new();
     let mut line = 1usize;
     let mut i = 0usize;
 
@@ -250,10 +276,15 @@ fn blank_non_code(raw: &str) -> (String, Vec<Comment>) {
                 s
             };
             let rest = &raw[body_start..];
-            let end = match rest.find(&closer) {
-                Some(p) => body_start + p + closer.len(),
-                None => n,
+            let (body_end, end) = match rest.find(&closer) {
+                Some(p) => (body_start + p, body_start + p + closer.len()),
+                None => (n, n),
             };
+            strings.push(StrLit {
+                line,
+                off: start,
+                text: raw[body_start..body_end].to_string(),
+            });
             line += raw[start..end].matches('\n').count();
             blank(&mut out, start, end);
             i = end;
@@ -262,7 +293,10 @@ fn blank_non_code(raw: &str) -> (String, Vec<Comment>) {
         // plain / byte string
         if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
             let start = i;
+            let start_line = line;
             i += if c == b'b' { 2 } else { 1 };
+            let body_start = i;
+            let mut closed = false;
             while i < n {
                 if b[i] == b'\\' {
                     // an escape can hide a newline (string line
@@ -276,6 +310,7 @@ fn blank_non_code(raw: &str) -> (String, Vec<Comment>) {
                 }
                 if b[i] == b'"' {
                     i += 1;
+                    closed = true;
                     break;
                 }
                 if b[i] == b'\n' {
@@ -283,6 +318,12 @@ fn blank_non_code(raw: &str) -> (String, Vec<Comment>) {
                 }
                 i += 1;
             }
+            let body_end = if closed { i - 1 } else { i };
+            strings.push(StrLit {
+                line: start_line,
+                off: start,
+                text: raw[body_start..body_end].to_string(),
+            });
             blank(&mut out, start, i);
             continue;
         }
@@ -299,7 +340,8 @@ fn blank_non_code(raw: &str) -> (String, Vec<Comment>) {
         }
         i += 1;
     }
-    (String::from_utf8(out).expect("blanking preserves utf8 boundaries"), comments)
+    let code = String::from_utf8(out).expect("blanking preserves utf8 boundaries");
+    (code, comments, strings)
 }
 
 /// If a raw (byte) string literal starts at `i`, return
@@ -473,6 +515,26 @@ mod tests {
         assert!(!f.in_test(1));
         assert!(f.in_test(4));
         assert!(!f.in_test(6));
+    }
+
+    #[test]
+    fn string_literals_are_collected_with_lines_and_offsets() {
+        let src = "let a = \"mlp\";\nlet r = r#\"cnn2\"#;\nlet b = b\"raw\";\n";
+        let f = SourceFile::parse("x.rs", src);
+        let texts: Vec<&str> = f.strings.iter().map(|s| s.text.as_str()).collect();
+        assert_eq!(texts, ["mlp", "cnn2", "raw"]);
+        assert_eq!(f.strings[0].line, 1);
+        assert_eq!(f.strings[1].line, 2);
+        assert_eq!(&src[f.strings[0].off..][..5], "\"mlp\"");
+    }
+
+    #[test]
+    fn tests_dir_paths_are_fully_masked() {
+        let src = "fn helper() {}\n#[test]\nfn t() { helper(); }\n";
+        let f = SourceFile::parse("rust/tests/no_alloc.rs", src);
+        assert!(f.in_test(1) && f.in_test(3));
+        let g = SourceFile::parse("rust/src/lib.rs", src);
+        assert!(!g.in_test(1));
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! A dependency-free token stream over the blanked code view.
+//!
+//! The code view (see `source.rs`) already has comments and literal
+//! contents spaced out, so lexing it is trivial: maximal identifier
+//! runs become `Ident` tokens, every other non-whitespace byte is a
+//! one-byte `Punct`. Offsets index the code view directly, which is
+//! byte-for-byte aligned with the raw file — a token's `start` is
+//! valid in both.
+//!
+//! On top of the stream live the span-arithmetic helpers the item
+//! index and call graph are built from: matching-delimiter search and
+//! top-level argument splitting. These are pure index computations on
+//! immutable buffers, which makes them cheap to run under miri (the
+//! CI lane does).
+
+/// Token classes. The lexer never fails: anything that is not an
+/// identifier (or whitespace) is a punct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// `[A-Za-z_][A-Za-z0-9_]*` — keywords included.
+    Ident,
+    /// A single non-identifier, non-whitespace byte (`{`, `:`, …).
+    Punct(u8),
+}
+
+/// One token: kind plus its byte span in the code view.
+#[derive(Debug, Clone, Copy)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Byte offset of the first byte.
+    pub start: usize,
+    /// Byte offset one past the last byte.
+    pub end: usize,
+}
+
+impl Tok {
+    /// The token's text within `code`.
+    pub fn text<'a>(&self, code: &'a str) -> &'a str {
+        &code[self.start..self.end]
+    }
+
+    /// Is this an ident with exactly this text?
+    pub fn is_ident(&self, code: &str, word: &str) -> bool {
+        self.kind == TokKind::Ident && self.text(code) == word
+    }
+
+    /// Is this a punct with exactly this byte?
+    pub fn is_punct(&self, ch: u8) -> bool {
+        self.kind == TokKind::Punct(ch)
+    }
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphabetic()
+}
+
+/// Lex the code view into a token stream. Numeric literals come out
+/// as `Ident` runs too (they start with a digit, so `is_ident` with a
+/// word never matches them accidentally, and the rules only compare
+/// against known names).
+pub fn lex(code: &str) -> Vec<Tok> {
+    let b = code.as_bytes();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        if is_ident_start(c) || c.is_ascii_digit() {
+            let start = i;
+            while i < n && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            out.push(Tok { kind: TokKind::Ident, start, end: i });
+            continue;
+        }
+        out.push(Tok { kind: TokKind::Punct(c), start: i, end: i + 1 });
+        i += 1;
+    }
+    out
+}
+
+/// Index of the token matching the opening delimiter at `toks[open]`
+/// (`(`, `[`, or `{`). `None` if unbalanced before the stream ends.
+pub fn matching_delim(toks: &[Tok], open: usize) -> Option<usize> {
+    let close = match toks.get(open)?.kind {
+        TokKind::Punct(b'(') => b')',
+        TokKind::Punct(b'[') => b']',
+        TokKind::Punct(b'{') => b'}',
+        _ => return None,
+    };
+    let opener = match toks[open].kind {
+        TokKind::Punct(c) => c,
+        TokKind::Ident => return None,
+    };
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.kind {
+            TokKind::Punct(c) if c == opener => depth += 1,
+            TokKind::Punct(c) if c == close => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Given token indices `(open, close)` of a call's parens, split the
+/// argument list at top-level commas. Returns byte spans (in the code
+/// view) of each argument, trimmed of surrounding whitespace. Nesting
+/// of all three bracket kinds is respected; `<` generics are not
+/// tracked (comma-splitting inside a generic argument would need a
+/// full parser — the rules that consume this only look at leading
+/// path idents, which survive).
+pub fn split_args(code: &str, toks: &[Tok], open: usize, close: usize) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    if close <= open + 1 {
+        return spans; // `()`
+    }
+    let mut depth = 0usize;
+    let mut arg_start = toks[open].end;
+    for t in &toks[open + 1..close] {
+        match t.kind {
+            TokKind::Punct(b'(') | TokKind::Punct(b'[') | TokKind::Punct(b'{') => depth += 1,
+            TokKind::Punct(b')') | TokKind::Punct(b']') | TokKind::Punct(b'}') => {
+                depth = depth.saturating_sub(1)
+            }
+            TokKind::Punct(b',') if depth == 0 => {
+                spans.push(trim_span(code, arg_start, t.start));
+                arg_start = t.end;
+            }
+            _ => {}
+        }
+    }
+    spans.push(trim_span(code, arg_start, toks[close].start));
+    // a lone trailing comma yields an empty final span — drop it
+    if let Some(&(lo, hi)) = spans.last() {
+        if lo >= hi {
+            spans.pop();
+        }
+    }
+    spans
+}
+
+/// Shrink `[lo, hi)` past surrounding ASCII whitespace.
+pub fn trim_span(code: &str, mut lo: usize, mut hi: usize) -> (usize, usize) {
+    let b = code.as_bytes();
+    while lo < hi && b[lo].is_ascii_whitespace() {
+        lo += 1;
+    }
+    while hi > lo && b[hi - 1].is_ascii_whitespace() {
+        hi -= 1;
+    }
+    (lo, hi)
+}
+
+/// First token index at or after byte offset `off`.
+pub fn tok_at_or_after(toks: &[Tok], off: usize) -> usize {
+    toks.partition_point(|t| t.start < off)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts<'a>(code: &'a str, toks: &[Tok]) -> Vec<&'a str> {
+        toks.iter().map(|t| t.text(code)).collect()
+    }
+
+    #[test]
+    fn lex_spans_are_exact() {
+        let code = "fn add(a: usize) -> usize { a + 1 }";
+        let toks = lex(code);
+        assert_eq!(
+            texts(code, &toks),
+            ["fn", "add", "(", "a", ":", "usize", ")", "-", ">", "usize", "{", "a", "+", "1", "}"]
+        );
+        for t in &toks {
+            assert!(t.start < t.end && t.end <= code.len());
+            assert!(!t.text(code).contains(' '));
+        }
+    }
+
+    #[test]
+    fn lex_underscores_and_digits() {
+        let code = "let _x2 = v0[1];";
+        let toks = lex(code);
+        assert!(toks[1].is_ident(code, "_x2"));
+        assert!(toks[3].is_ident(code, "v0"));
+    }
+
+    #[test]
+    fn matching_delim_nested() {
+        let code = "f(a, g(b, c), [d])";
+        let toks = lex(code);
+        // toks: f ( a , g ( b , c ) , [ d ] )
+        assert_eq!(matching_delim(&toks, 1), Some(14));
+        assert_eq!(matching_delim(&toks, 5), Some(9));
+        assert_eq!(matching_delim(&toks, 11), Some(13));
+        assert_eq!(matching_delim(&toks, 0), None);
+    }
+
+    #[test]
+    fn matching_delim_unbalanced_is_none() {
+        let code = "f(a";
+        let toks = lex(code);
+        assert_eq!(matching_delim(&toks, 1), None);
+    }
+
+    #[test]
+    fn split_args_top_level_only() {
+        let code = "call(a, g(b, c), [d, e], { f })";
+        let toks = lex(code);
+        let close = matching_delim(&toks, 1).unwrap();
+        let args: Vec<&str> = split_args(code, &toks, 1, close)
+            .into_iter()
+            .map(|(lo, hi)| &code[lo..hi])
+            .collect();
+        assert_eq!(args, ["a", "g(b, c)", "[d, e]", "{ f }"]);
+    }
+
+    #[test]
+    fn split_args_empty_and_trailing_comma() {
+        let code = "f() g(x,)";
+        let toks = lex(code);
+        let c1 = matching_delim(&toks, 1).unwrap();
+        assert!(split_args(code, &toks, 1, c1).is_empty());
+        let o2 = 4;
+        let c2 = matching_delim(&toks, o2).unwrap();
+        let args = split_args(code, &toks, o2, c2);
+        assert_eq!(args.len(), 1);
+        assert_eq!(&code[args[0].0..args[0].1], "x");
+    }
+
+    #[test]
+    fn tok_at_or_after_boundaries() {
+        let code = "ab  cd";
+        let toks = lex(code);
+        assert_eq!(tok_at_or_after(&toks, 0), 0);
+        assert_eq!(tok_at_or_after(&toks, 1), 1);
+        assert_eq!(tok_at_or_after(&toks, 4), 1);
+        assert_eq!(tok_at_or_after(&toks, 6), 2);
+    }
+}

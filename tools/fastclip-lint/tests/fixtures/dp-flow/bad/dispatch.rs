@@ -1,0 +1,17 @@
+//@ path: rust/src/runtime/native/mod.rs
+//! dp-flow bad: the ReweightDirect leaf arm writes gradients but never
+//! applies nu — the clip factors were computed (`nu_for`) and dropped,
+//! which is exactly the bug class the rule exists for.
+
+pub fn run_into(&self, p: &ClipPolicy, st: &mut Scratch, out: &mut StepOut) {
+    match self.kind {
+        Kind::NonPrivate => {
+            model.grads_from_deltas(x, st, None, &mut out.grads);
+        }
+        Kind::ReweightDirect => {
+            let block = p.nu_for(&norms, st);
+            model.grads_from_deltas(x, st, None, &mut out.grads);
+        }
+        _ => {}
+    }
+}

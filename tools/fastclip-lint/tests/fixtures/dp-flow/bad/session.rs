@@ -1,0 +1,19 @@
+//@ path: rust/src/coordinator/session.rs
+//! dp-flow bad: the optimizer consumes produced gradients with no
+//! noise-addition reachable on the path, and a second routine adds
+//! noise that is never charged to the accountant.
+
+pub fn step(opt: &mut Opt, out: &mut StepOut) {
+    compute(out);
+    opt.step(&mut params.host, &out.grads);
+}
+
+fn compute(out: &mut StepOut) {
+    fill(out.grads.flat_mut());
+    out.grads.add_scaled(&mat, nu);
+}
+
+pub fn noise_unaccounted(g: &mut [f32], opts: &Opts) {
+    let noise_std = noise_stddev_for_mean(opts.sigma, opts.clip, opts.tau);
+    add_noise_parallel(g, noise_std, opts.seed, 0);
+}

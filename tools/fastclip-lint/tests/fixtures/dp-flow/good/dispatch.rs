@@ -1,0 +1,19 @@
+//@ path: rust/src/runtime/native/mod.rs
+//! dp-flow good: every private leaf arm applies nu on its own path —
+//! direct row scaling, or the fused Some(nu) reduction.
+
+pub fn run_into(&self, p: &ClipPolicy, st: &mut Scratch, out: &mut StepOut) {
+    match self.kind {
+        Kind::NonPrivate => {
+            model.grads_from_deltas(x, st, None, &mut out.grads);
+        }
+        Kind::ReweightDirect => {
+            model.scale_delta_rows(&block, st);
+            model.grads_from_deltas(x, st, None, &mut out.grads);
+        }
+        Kind::ReweightPallas => {
+            model.grads_from_deltas(x, st, Some(&block), &mut out.grads);
+        }
+        _ => {}
+    }
+}

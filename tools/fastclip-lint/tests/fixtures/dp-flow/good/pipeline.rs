@@ -1,0 +1,12 @@
+//@ path: rust/src/runtime/native/pipeline.rs
+//! The clip edge, two calls below the session: step -> clip_pipeline
+//! -> apply_clip -> GradVec::add_scaled. The call graph must carry
+//! the applies-nu effect back up through both hops.
+
+pub fn clip_pipeline(acc: &mut GradVec, mat: &Mat, nu: f32) {
+    apply_clip(acc, mat, nu);
+}
+
+fn apply_clip(acc: &mut GradVec, mat: &Mat, nu: f32) {
+    acc.add_scaled(mat, nu);
+}

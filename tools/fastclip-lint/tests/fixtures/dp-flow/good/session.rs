@@ -1,0 +1,19 @@
+//@ path: rust/src/coordinator/session.rs
+//! dp-flow good: the full pipeline. Gradients are produced, the clip
+//! edge sits two calls deep (clip_pipeline -> apply_clip, next file),
+//! noise is added, the accountant is charged, then the optimizer
+//! steps.
+
+pub fn step(&mut self) {
+    compute(&mut self.out);
+    clip_pipeline(&mut self.out.grads, &self.mat, self.nu);
+    let noise_std =
+        noise_stddev_for_mean(self.sigma, self.policy.sensitivity(self.n_layers), self.tau);
+    add_noise_parallel(self.out.grads.flat_mut(), noise_std, self.seed, self.step);
+    self.accountant.step(self.q, self.sigma);
+    self.opt.step(&mut self.params.host, &self.out.grads);
+}
+
+fn compute(out: &mut StepOut) {
+    fill(out.grads.flat_mut());
+}

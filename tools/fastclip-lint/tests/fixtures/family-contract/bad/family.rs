@@ -1,0 +1,22 @@
+//@ path: rust/src/runtime/native/rnn.rs
+//! family-contract bad: the ROADMAP's fourth family, implemented and
+//! registered — but nobody added its row to no_alloc.rs, so the
+//! steady-state allocation-free guarantee silently excludes it.
+
+pub trait ModelFamily {
+    fn family(&self) -> &'static str;
+    fn grad_layout(&self) -> Vec<usize>;
+    fn backward_batch(&self, nu: Option<&[f32]>);
+}
+
+pub struct RnnSpec;
+
+impl ModelFamily for RnnSpec {
+    fn family(&self) -> &'static str {
+        "rnn"
+    }
+    fn grad_layout(&self) -> Vec<usize> {
+        Vec::new()
+    }
+    fn backward_batch(&self, _nu: Option<&[f32]>) {}
+}

@@ -1,0 +1,15 @@
+//@ path: rust/tests/integration.rs
+//! The agreement matrix and the policy oracle both cover the rnn
+//! family — only the no_alloc witness is missing.
+
+#[test]
+fn native_method_matrix_agrees() {
+    for config in ["mlp2_mnist_b32", "rnn_seq_b16"] {
+        run_matrix(config);
+    }
+}
+
+#[test]
+fn grouped_policies_match_nxbp_oracle() {
+    run_oracle("rnn_seq_b16");
+}

@@ -1,0 +1,22 @@
+//@ path: rust/src/runtime/native/rnn.rs
+//! family-contract good: the rnn family, fully wired — complete
+//! ModelFamily impl, registered, and witnessed by all three
+//! cross-family test surfaces.
+
+pub trait ModelFamily {
+    fn family(&self) -> &'static str;
+    fn grad_layout(&self) -> Vec<usize>;
+    fn backward_batch(&self, nu: Option<&[f32]>);
+}
+
+pub struct RnnSpec;
+
+impl ModelFamily for RnnSpec {
+    fn family(&self) -> &'static str {
+        "rnn"
+    }
+    fn grad_layout(&self) -> Vec<usize> {
+        Vec::new()
+    }
+    fn backward_batch(&self, _nu: Option<&[f32]>) {}
+}

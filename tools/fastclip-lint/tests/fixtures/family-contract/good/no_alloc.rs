@@ -1,0 +1,8 @@
+//@ path: rust/tests/no_alloc.rs
+
+#[test]
+fn warm_steps_do_not_allocate() {
+    for config in ["mlp2_mnist_b16", "cnn2_mnist_b16", "rnn_seq_b16"] {
+        assert_no_alloc(config);
+    }
+}

@@ -1,0 +1,7 @@
+//@ path: rust/src/runtime/native/taps.rs
+
+pub fn builtin() -> FamilyRegistry {
+    let mut r = FamilyRegistry::empty();
+    r.register("rnn", |cfg| Ok(Box::new(RnnSpec)));
+    r
+}

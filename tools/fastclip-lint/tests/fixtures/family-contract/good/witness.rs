@@ -1,0 +1,13 @@
+//@ path: rust/tests/integration.rs
+
+#[test]
+fn native_method_matrix_agrees() {
+    for config in ["mlp2_mnist_b32", "rnn_seq_b16"] {
+        run_matrix(config);
+    }
+}
+
+#[test]
+fn grouped_policies_match_nxbp_oracle() {
+    run_oracle("rnn_seq_b16");
+}

@@ -1,0 +1,15 @@
+//@ path: rust/src/coordinator/session.rs
+//! sensitivity-consistency bad: the clip bound handed to the noise
+//! calibration is recomputed with local arithmetic instead of coming
+//! from ClipPolicy::sensitivity / opts.clip, and the stddev handed to
+//! the noise sampler is a raw sigma, not a calibrated value.
+
+pub fn build(opts: &Opts) -> f64 {
+    let scaled = opts.clip * 1.5;
+    noise_stddev_for_mean(opts.sigma, scaled, opts.tau)
+}
+
+pub fn noise(g: &mut [f32], opts: &Opts, accountant: &mut Rdp) {
+    add_noise_parallel(g, opts.sigma, 7, 0);
+    accountant.step(opts.q, opts.sigma);
+}

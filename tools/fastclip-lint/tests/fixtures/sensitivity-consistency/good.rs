@@ -1,0 +1,17 @@
+//@ path: rust/src/coordinator/session.rs
+//! sensitivity-consistency good: the calibration clip argument traces
+//! to ClipPolicy::sensitivity (or the raw opts.clip), and the sampler
+//! receives a value that carries the calibrated name.
+
+pub fn build(opts: &Opts, n_param_layers: usize) -> f64 {
+    let sensitivity = match &opts.policy {
+        None => opts.clip,
+        Some(p) => p.sensitivity(n_param_layers),
+    };
+    noise_stddev_for_mean(opts.sigma, sensitivity, opts.tau)
+}
+
+pub fn noise(g: &mut [f32], noise_std: f64, accountant: &mut Rdp) {
+    add_noise_parallel(g, noise_std, 7, 0);
+    accountant.step(0.01, 1.1);
+}
